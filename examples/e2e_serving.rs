@@ -1,0 +1,119 @@
+//! END-TO-END driver: the full three-layer stack on a real workload.
+//!
+//! * L1/L2 — the Pallas/JAX network evaluation, AOT-compiled to HLO
+//!   (`make artifacts`), loaded and executed via PJRT from Rust;
+//! * L3 — the Rust serving loop: Poisson request arrivals on GEANT, online
+//!   rate estimation, GP slots driven by the XLA evaluator;
+//! * validation — final strategy replayed through the packet-level DES to
+//!   confirm the optimized cost is the delay users would see.
+//!
+//! Reports convergence, expected delay, serving throughput and the
+//! L3-hot-path latency breakdown. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+
+use scfo::config::Scenario;
+use scfo::prelude::*;
+use scfo::runtime::XlaGp;
+use scfo::serving::{OnlineServer, Optimizer, ServerOptions};
+use scfo::sim;
+use scfo::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    if !scfo::runtime::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // ---- workload: GEANT, Table-II parameters --------------------------
+    let sc = Scenario::table2("geant")?;
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng)?;
+    let lambda: f64 = net.apps.iter().map(|a| a.total_input()).sum();
+    println!(
+        "GEANT: {} nodes / {} links / {} apps ({} stages), offered load λ = {lambda:.2} req/s",
+        net.n(),
+        net.m(),
+        net.apps.len(),
+        net.num_stages()
+    );
+
+    // ---- L1/L2 artifacts through PJRT -----------------------------------
+    let gp = XlaGp::new(&net, GpOptions::default())?;
+    println!(
+        "loaded artifact bucket n={} apps={} (platform: PJRT CPU)",
+        gp_bucket_n(&gp),
+        gp_bucket_apps(&gp)
+    );
+
+    // ---- serving loop ----------------------------------------------------
+    let slots = 150;
+    let mut srv = OnlineServer::new(net.clone(), gp, ServerOptions::default());
+    let t0 = std::time::Instant::now();
+    let metrics = srv.run(slots)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let arrivals: usize = metrics.iter().map(|m| m.arrivals).sum();
+    let lat: Vec<f64> = metrics.iter().map(|m| m.optimizer_latency).collect();
+    let costs: Vec<f64> = metrics.iter().map(|m| m.cost).collect();
+    println!("\n-- serving results ({slots} slots, {:.1}s wall) --", wall);
+    println!(
+        "requests ingested: {arrivals} ({:.1} req/s sustained)",
+        arrivals as f64 / wall
+    );
+    println!(
+        "cost trajectory: slot1 {:.3} -> slot10 {:.3} -> final {:.3}",
+        costs[0],
+        costs[9.min(costs.len() - 1)],
+        costs.last().unwrap()
+    );
+    println!(
+        "expected per-request delay (Little): {:.4}s",
+        metrics.last().unwrap().expected_delay
+    );
+    println!(
+        "L3 hot-path latency per slot (PJRT eval + GP update): mean {:.2}ms p50 {:.2}ms p95 {:.2}ms",
+        stats::mean(&lat) * 1e3,
+        stats::percentile(&lat, 50.0) * 1e3,
+        stats::percentile(&lat, 95.0) * 1e3
+    );
+    println!("delay histogram: {}", srv.delay_hist.summary());
+
+    // ---- validate with the packet-level DES ------------------------------
+    let mut truth = net.clone();
+    // serve loop learned estimates; evaluate final phi on the true rates
+    let phi = srv.optimizer.strategy().clone();
+    for (a, app) in net.apps.iter().enumerate() {
+        truth.apps[a].input_rates.copy_from_slice(&app.input_rates);
+    }
+    let analytic = FlowState::solve(&truth, &phi)?.total_cost;
+    let des = sim::simulate(&truth, &phi, 1500.0, 99)?;
+    println!("\n-- packet-level validation (DES, 1500 sim-seconds) --");
+    println!(
+        "analytic cost {:.3} | measured occupancy {:.3} | λ·W = {:.3} ({} packets delivered)",
+        analytic,
+        des.avg_occupancy,
+        des.lambda * des.mean_delay,
+        des.delivered
+    );
+    let rel = (des.avg_occupancy - analytic).abs() / analytic;
+    println!("relative gap DES vs analytic: {:.1}%", rel * 100.0);
+
+    // ---- compare against the congestion-blind baseline --------------------
+    let lpr = scfo::algo::lpr::run(&truth)?;
+    println!(
+        "\nLPR-SC (congestion-blind) on the same workload: cost {:.3} ({:.1}x GP)",
+        lpr.final_cost,
+        lpr.final_cost / analytic
+    );
+    Ok(())
+}
+
+fn gp_bucket_n(gp: &XlaGp) -> usize {
+    gp.bucket_info().0
+}
+fn gp_bucket_apps(gp: &XlaGp) -> usize {
+    gp.bucket_info().1
+}

@@ -1,0 +1,64 @@
+//! Online adaptation: input-rate shifts and link failures mid-run.
+//!
+//! The paper (Section IV) claims Algorithm 1 is adaptive: it needs no prior
+//! knowledge of r_i(a), tracks changes in them, and handles topology changes
+//! by blocked-set edits. This example exercises all three on GEANT.
+//!
+//! ```bash
+//! cargo run --release --example online_adaptation
+//! ```
+
+use scfo::config::Scenario;
+use scfo::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let sc = Scenario::table2("geant")?;
+    let mut rng = Rng::new(sc.seed);
+    let mut net = sc.build(&mut rng)?;
+    let mut gp = GradientProjection::new(&net, GpOptions::default());
+
+    println!("phase 1: converge on the initial demand");
+    let rep = gp.run(&net, 600);
+    println!("  cost {:.4} (converged={})", rep.final_cost, rep.converged);
+
+    println!("phase 2: demand shock — app 0's main source rate x4");
+    let src = net.apps[0]
+        .input_rates
+        .iter()
+        .position(|&r| r > 0.0)
+        .unwrap();
+    net.apps[0].input_rates[src] *= 4.0;
+    let shocked = gp.cost(&net);
+    let rep = gp.run(&net, 600);
+    println!(
+        "  cost {:.4} right after shock -> {:.4} after re-optimizing",
+        shocked, rep.final_cost
+    );
+    assert!(rep.final_cost <= shocked + 1e-9);
+
+    println!("phase 3: link failure on a loaded link");
+    // find the most loaded link and kill it
+    let fs = FlowState::solve(&net, &gp.phi)?;
+    let (emax, _) = fs
+        .link_flow
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    let (i, j) = net.graph.edge(emax);
+    println!("  removing link ({i},{j}) carrying F={:.3}", fs.link_flow[emax]);
+    gp.on_link_removed(&net, i, j);
+    gp.phi.validate(&net)?; // still feasible, loop-free
+    let degraded = gp.cost(&net);
+    let rep = gp.run(&net, 800);
+    println!(
+        "  cost {:.4} right after failure -> {:.4} after re-routing",
+        degraded, rep.final_cost
+    );
+
+    println!("phase 4: link restored");
+    gp.on_link_added(&net, i, j);
+    let rep = gp.run(&net, 800);
+    println!("  cost {:.4} after re-admitting the link", rep.final_cost);
+    Ok(())
+}

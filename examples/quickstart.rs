@@ -1,0 +1,53 @@
+//! Quickstart: build a Table-II scenario, run GP to the global optimum,
+//! compare against every baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use scfo::algo::Algorithm;
+use scfo::config::Scenario;
+use scfo::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a scenario straight out of the paper's Table II
+    let scenario = Scenario::table2("abilene")?;
+    let mut rng = Rng::new(scenario.seed);
+    let net = scenario.build(&mut rng)?;
+    println!(
+        "Abilene: {} nodes, {} directed links, {} apps x {} tasks",
+        net.n(),
+        net.m(),
+        net.apps.len(),
+        net.apps[0].num_tasks
+    );
+
+    // 2. run the paper's Gradient Projection to the sufficiency condition
+    let mut gp = GradientProjection::new(&net, GpOptions::default());
+    let report = gp.run(&net, 2000);
+    println!(
+        "GP: cost {:.4} after {} iterations (converged to condition (6): {})",
+        report.final_cost, report.iters, report.converged
+    );
+
+    // 3. the aggregate cost IS the expected delay (Little's law): report it
+    let fs = FlowState::solve(&net, &gp.phi)?;
+    let lambda: f64 = net.apps.iter().map(|a| a.total_input()).sum();
+    println!(
+        "expected packets in system {:.4}  |  expected per-packet delay {:.4}s",
+        fs.total_cost,
+        fs.total_cost / lambda
+    );
+
+    // 4. baselines for context
+    for alg in [Algorithm::Spoc, Algorithm::Lcof, Algorithm::LprSc] {
+        let cost = alg.solve(&net, 800)?;
+        println!(
+            "{:<7} cost {:.4}  ({:.1}% above GP)",
+            alg.name(),
+            cost,
+            100.0 * (cost / report.final_cost - 1.0)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each size bucket produces ``artifacts/eval_n{N}_a{A}_k{K}.hlo.txt`` plus a
+single ``artifacts/manifest.json`` describing buckets, input order/shapes and
+output order/shapes for the Rust runtime.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--no-pallas]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: (n, num_apps, kchain) buckets. Small covers every Table-II scenario except
+#: SW (n=100, |A|=30); large covers SW.
+BUCKETS = [
+    (32, 12, 2),
+    (128, 32, 2),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n, num_apps, kchain, use_pallas=True):
+    fn = model.make_eval(n, num_apps, kchain, use_pallas=use_pallas)
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float64)
+        for _name, shape in model.input_shapes(n, num_apps, kchain)
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the jnp reference instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"dtype": "f64", "buckets": []}
+    for (n, a, k) in BUCKETS:
+        lowered = lower_bucket(n, a, k, use_pallas=not args.no_pallas)
+        text = to_hlo_text(lowered)
+        name = f"eval_n{n}_a{a}_k{k}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append(
+            {
+                "file": name,
+                "n": n,
+                "num_apps": a,
+                "kchain": k,
+                "inputs": [
+                    {"name": nm, "shape": list(sh)}
+                    for nm, sh in model.input_shapes(n, a, k)
+                ],
+                "outputs": [
+                    {"name": nm, "shape": list(sh)}
+                    for nm, sh in model.output_shapes(n, a, k)
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Pallas kernel for the δ-marginal combine (eq. 7), Layer 1.
+
+``delta[b,i,j] = L[b]·D'_ij + ∂D/∂t_j(b)`` on links, INF elsewhere — the
+elementwise epilogue of every evaluation call, batched over stages. Pure
+VPU-style elementwise work; `block_stages` controls the VMEM slab size as in
+``propagate.py`` (None = whole batch, the right choice on CPU interpret).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INF_MARGINAL
+
+
+def _delta_kernel(dprime_ref, ddt_ref, packet_ref, adj_ref, out_ref):
+    dprime = dprime_ref[...]  # (N, N) — shared across the batch
+    ddt = ddt_ref[...]  # (bs, N)
+    packet = packet_ref[...]  # (bs,)
+    adj = adj_ref[...]  # (N, N)
+    d = packet[:, None, None] * dprime[None, :, :] + ddt[:, None, :]
+    out_ref[...] = jnp.where(adj[None, :, :] > 0, d, INF_MARGINAL)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_stages"))
+def delta(dprime, ddt, packet, adj, *, interpret=True, block_stages=None):
+    """Batched link-δ computation.
+
+    Args:
+      dprime: (N, N) link marginals D'_ij(F_ij).
+      ddt:    (B, N) ∂D/∂t_j per stage.
+      packet: (B,) packet sizes.
+      adj:    (N, N) 0/1 adjacency.
+      block_stages: stages per grid step (None = whole batch).
+    Returns:
+      (B, N, N) δ with INF_MARGINAL at non-links.
+    """
+    b, n = ddt.shape
+    bs = b if block_stages is None else min(block_stages, b)
+    grid = ((b + bs - 1) // bs,)
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), dprime.dtype),
+        interpret=interpret,
+    )(dprime, ddt, packet, adj)

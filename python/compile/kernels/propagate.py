@@ -1,0 +1,113 @@
+"""Pallas kernels for the network-evaluation hot path (Layer 1).
+
+Two kernels, both batched over stages:
+
+* :func:`propagate` — one hop of the traffic fixed point
+  ``t'[b,j] = inj[b,j] + Σ_i t[b,i]·φ[b,i,j]`` (the body of the forward
+  sweep; also reused, transposed, for the reverse sweep via
+  :func:`backprop`).
+* :func:`delta` (in ``delta.py``) — the δ-marginal combine of eq. (7).
+
+Blocking: the grid runs over the *stage* axis in blocks of ``block_stages``.
+Each program instance holds a (bs, N, N) φ slab plus (bs, N) vectors in VMEM
+and performs a batched (bs,1,N)x(bs,N,N) contraction on the MXU.
+
+* TPU: pick ``block_stages`` so the slab fits VMEM —
+  bs·N²·8B ≤ ~12MB ⇒ bs ≤ 8 at N = 128 (see DESIGN.md §Perf).
+* CPU interpret (this testbed): ``block_stages=None`` → one full-batch block.
+  Per-block grid steps in interpret mode execute as separate HLO
+  dynamic-slice loop iterations, so fewer/larger blocks are strictly faster
+  here (§Perf log: 17.5s → ~0.1s per SW evaluation for the n=128 bucket).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _propagate_kernel(phi_ref, t_ref, inj_ref, out_ref):
+    # block shapes: phi (bs, N, N), t/inj/out (bs, N)
+    phi = phi_ref[...]
+    t = t_ref[...]
+    # (bs, 1, N) @ (bs, N, N) -> (bs, 1, N): batched MXU matmul
+    acc = jax.lax.dot_general(
+        t[:, None, :],
+        phi,
+        (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    out_ref[...] = inj_ref[...] + acc[:, 0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_stages"))
+def propagate(phi, t, inj, *, interpret=True, block_stages=None):
+    """One traffic-propagation hop for a batch of stages.
+
+    Args:
+      phi: (B, N, N) float array, forwarding fractions.
+      t:   (B, N) current traffic.
+      inj: (B, N) injection.
+      interpret: lower in interpret mode (required on CPU PJRT).
+      block_stages: stages per grid step (None = whole batch in one block).
+    Returns:
+      (B, N) next iterate, ``inj + t @ phi`` per stage.
+    """
+    b, n, _ = phi.shape
+    bs = b if block_stages is None else min(block_stages, b)
+    grid = ((b + bs - 1) // bs,)
+    return pl.pallas_call(
+        _propagate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), phi.dtype),
+        interpret=interpret,
+    )(phi, t, inj)
+
+
+def _backprop_kernel(phi_ref, x_ref, own_ref, out_ref):
+    phi = phi_ref[...]  # (bs, N, N)
+    x = x_ref[...]  # (bs, N)
+    # (bs, N, N) @ (bs, N, 1) -> (bs, N, 1)
+    acc = jax.lax.dot_general(
+        phi,
+        x[:, :, None],
+        (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    out_ref[...] = own_ref[...] + acc[:, :, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_stages"))
+def backprop(phi, x, own, *, interpret=True, block_stages=None):
+    """One reverse-sweep hop: ``own + phi @ x`` per stage.
+
+    Args:
+      phi: (B, N, N) forwarding fractions.
+      x:   (B, N) downstream ∂D/∂t iterate.
+      own: (B, N) static part of eq. (4a).
+      block_stages: stages per grid step (None = whole batch).
+    Returns:
+      (B, N) next ∂D/∂t iterate.
+    """
+    b, n, _ = phi.shape
+    bs = b if block_stages is None else min(block_stages, b)
+    grid = ((b + bs - 1) // bs,)
+    return pl.pallas_call(
+        _backprop_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), phi.dtype),
+        interpret=interpret,
+    )(phi, x, own)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+Every Pallas kernel in this package has an exact ``ref_*`` twin here built
+from plain ``jax.numpy`` ops. pytest (incl. hypothesis sweeps) asserts
+allclose between kernel and oracle across shapes/dtypes; the AOT model can be
+built against either implementation (``use_pallas`` flag) and must produce
+identical HLO-level numerics.
+"""
+
+import jax.numpy as jnp
+
+#: Marginal used for unavailable directions; matches Rust INF_MARGINAL.
+INF_MARGINAL = 1e30
+
+
+def ref_propagate(phi, t, inj):
+    """One hop of the traffic fixed point: ``out[b,j] = inj[b,j] + sum_i
+    t[b,i] * phi[b,i,j]`` for a batch of stages.
+
+    Args:
+      phi: (B, N, N) forwarding fractions (row i -> col j).
+      t:   (B, N) current traffic iterate.
+      inj: (B, N) injection (exogenous + previous-stage CPU output).
+    Returns:
+      (B, N) next traffic iterate.
+    """
+    return inj + jnp.einsum("bi,bij->bj", t, phi)
+
+
+def ref_backprop(phi, x, own):
+    """One hop of the reverse (marginal) sweep:
+
+    ``out[b,i] = own[b,i] + sum_j phi[b,i,j] * x[b,j]``
+
+    where ``own`` is the static part of eq. (4a) (Σ_j φ_ij·L·D'_ij +
+    φ_cpu·(w·C' + ∂D/∂t_next)) and ``x`` the current downstream iterate.
+
+    Args:
+      phi: (B, N, N) forwarding fractions.
+      x:   (B, N) current ∂D/∂t iterate.
+      own: (B, N) static per-node part.
+    Returns:
+      (B, N) next ∂D/∂t iterate.
+    """
+    return own + jnp.einsum("bij,bj->bi", phi, x)
+
+
+def ref_delta(dprime, ddt, packet, adj):
+    """Modified marginals δ_ij (eq. 7), link part, for a batch of stages:
+
+    ``delta[b,i,j] = packet[b] * dprime[i,j] + ddt[b,j]`` where ``adj[i,j]``,
+    else INF_MARGINAL.
+
+    Args:
+      dprime: (N, N) link marginal costs D'_ij(F_ij).
+      ddt:    (B, N) ∂D/∂t_j for the stage batch.
+      packet: (B,) packet sizes L_(a,k).
+      adj:    (N, N) 0/1 adjacency mask.
+    Returns:
+      (B, N, N) δ with INF at non-links.
+    """
+    d = packet[:, None, None] * dprime[None, :, :] + ddt[:, None, :]
+    return jnp.where(adj[None, :, :] > 0, d, INF_MARGINAL)

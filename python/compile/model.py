@@ -1,0 +1,210 @@
+"""Layer 2 — the JAX network-evaluation model.
+
+``make_eval(n, num_apps, kchain)`` builds the full per-iteration evaluation
+of the paper's objective for a *padded* network of ``n`` nodes and
+``num_apps`` applications, each a chain of ``kchain`` tasks (stage layout is
+app-major: stage id s = a·(kchain+1) + k):
+
+1. forward sweep — the traffic fixed point t_i(a,k) (Section II recursions),
+   chain level by chain level, each level running ``n`` propagation hops
+   (exact for any loop-free φ, since stage DAG paths have < n hops);
+2. flow accounting — link bit-rates F_ij, workloads G_i, and the aggregate
+   cost D(φ) with the same saturated M/M/1 extension as the Rust side;
+3. reverse sweep — ∂D/∂t_i(a,k) by eq. (4), final stages first;
+4. δ-marginals (eq. 7) for every direction including the CPU column.
+
+The inner hops and the δ epilogue call the Layer-1 Pallas kernels
+(``use_pallas=True``) or their jnp oracles — both lower to identical HLO on
+CPU (interpret mode). Everything is f64 so the Rust cross-check holds to
+~1e-12.
+
+Cost-function params are passed per link/node as three dense arrays
+(is-queue flag, linear slope, queue capacity), so one artifact serves any
+Linear/Queue mix.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import delta as delta_mod
+from .kernels import propagate as prop_mod
+from .kernels import ref
+
+#: Saturation knee fraction — MUST match rust/src/cost/mod.rs::SAT_FRAC.
+SAT_FRAC = 0.99
+
+INF_MARGINAL = ref.INF_MARGINAL
+
+
+def queue_cost_and_deriv(x, cap):
+    """M/M/1 cost x/(cap-x) with the quadratic extension beyond SAT_FRAC·cap.
+
+    Bit-compatible with CostFn::Queue in rust/src/cost/mod.rs.
+    """
+    knee = SAT_FRAC * cap
+    inside = x < knee
+    safe_den = jnp.where(inside, cap - x, 1.0)
+    exact = x / safe_den
+    d_exact = cap / (safe_den * safe_den)
+    v = knee / (cap - knee)
+    s = cap / ((cap - knee) * (cap - knee))
+    c2 = 2.0 * cap / ((cap - knee) ** 3)
+    dx = x - knee
+    ext = v + s * dx + 0.5 * c2 * dx * dx
+    d_ext = s + c2 * dx
+    return jnp.where(inside, exact, ext), jnp.where(inside, d_exact, d_ext)
+
+
+def cost_and_deriv(x, isq, lin, cap):
+    """Linear or saturated-queue cost, selected elementwise by ``isq``."""
+    qc, qd = queue_cost_and_deriv(x, cap)
+    lc, ld = lin * x, jnp.broadcast_to(lin, x.shape)
+    return jnp.where(isq > 0, qc, lc), jnp.where(isq > 0, qd, ld)
+
+
+def make_eval(n, num_apps, kchain, use_pallas=True, interpret=True):
+    """Build the evaluation function for a fixed padded size.
+
+    Returns ``eval_network`` mapping 12 input arrays to a 7-tuple:
+    (total_cost, t, F, G, d_dt, delta_link, delta_cpu).
+    """
+    k1 = kchain + 1
+    num_stages = num_apps * k1
+
+    if use_pallas:
+        def prop(phi, t, inj):
+            return prop_mod.propagate(phi, t, inj, interpret=interpret)
+
+        def backp(phi, x, own):
+            return prop_mod.backprop(phi, x, own, interpret=interpret)
+
+        def delt(dprime, ddt, packet, adj):
+            return delta_mod.delta(dprime, ddt, packet, adj, interpret=interpret)
+    else:
+        prop, backp, delt = ref.ref_propagate, ref.ref_backprop, ref.ref_delta
+
+    def eval_network(
+        phi_link,  # (S, N, N) forwarding fractions
+        phi_cpu,  # (S, N) CPU fractions
+        exo,  # (A, N) exogenous input rates (stage 0 of each app)
+        adj,  # (N, N) 0/1 adjacency
+        link_isq,  # (N, N) 1.0 where the link cost is Queue
+        link_lin,  # (N, N) linear slope d_ij (0 where queue)
+        link_cap,  # (N, N) queue capacity (1 where linear; never 0)
+        comp_isq,  # (N,)
+        comp_lin,  # (N,)
+        comp_cap,  # (N,)
+        packet,  # (S,) packet sizes L_(a,k)
+        weight,  # (S, N) computation weights w_i(a,k)
+    ):
+        phi_l = phi_link.reshape(num_apps, k1, n, n)
+        phi_c = phi_cpu.reshape(num_apps, k1, n)
+        w_lvl = weight.reshape(num_apps, k1, n)
+
+        # ---- 1. forward sweep: chain level by chain level ------------------
+        t_levels = []
+        g_levels = []
+        inj = exo  # level-0 injection
+        for k in range(k1):
+            phi_k = phi_l[:, k]
+
+            def body(_m, t, phi_k=phi_k, inj=inj):
+                return prop(phi_k, t, inj)
+
+            t_k = jax.lax.fori_loop(0, n, body, inj)
+            g_k = t_k * phi_c[:, k]
+            t_levels.append(t_k)
+            g_levels.append(g_k)
+            inj = g_k  # next level's injection (1:1 packet conversion)
+
+        t = jnp.stack(t_levels, axis=1).reshape(num_stages, n)
+        g = jnp.stack(g_levels, axis=1).reshape(num_stages, n)
+
+        # ---- 2. flows and aggregate cost -----------------------------------
+        f = t[:, :, None] * phi_link  # (S, N, N) packet rates
+        flow = jnp.einsum("s,sij->ij", packet, f) * adj  # F_ij bits/sec
+        work = jnp.einsum("si,si->i", weight, g)  # G_i
+
+        link_c, link_d = cost_and_deriv(flow, link_isq, link_lin, link_cap)
+        comp_c, comp_d = cost_and_deriv(work, comp_isq, comp_lin, comp_cap)
+        total = jnp.sum(link_c * adj) + jnp.sum(comp_c)
+        link_d = link_d * adj  # zero marginal on non-links (masked anyway)
+
+        # ---- 3. reverse sweep ----------------------------------------------
+        # static per-node part of eq. (4a): Σ_j φ_ij·L·D'_ij (+ CPU term)
+        lw = packet[:, None, None] * link_d[None, :, :]  # (S, N, N)
+        static_link = jnp.einsum("sij,sij->si", phi_link, lw).reshape(
+            num_apps, k1, n
+        )
+        ddt_levels = [None] * k1
+        ddt_next = jnp.zeros((num_apps, n), dtype=phi_link.dtype)
+        for k in reversed(range(k1)):
+            own = static_link[:, k]
+            if k < kchain:
+                own = own + phi_c[:, k] * (w_lvl[:, k] * comp_d[None, :] + ddt_next)
+            phi_k = phi_l[:, k]
+
+            def body(_m, x, phi_k=phi_k, own=own):
+                return backp(phi_k, x, own)
+
+            ddt_k = jax.lax.fori_loop(0, n, body, own)
+            ddt_levels[k] = ddt_k
+            ddt_next = ddt_k
+
+        d_dt = jnp.stack(ddt_levels, axis=1).reshape(num_stages, n)
+
+        # ---- 4. δ-marginals (eq. 7) ----------------------------------------
+        delta_link = delt(link_d, d_dt, packet, adj)
+        # CPU column: w·C' + ∂D/∂t(a,k+1); INF for final stages
+        ddt_shift = jnp.stack(
+            [
+                ddt_levels[k + 1] if k < kchain else jnp.zeros((num_apps, n))
+                for k in range(k1)
+            ],
+            axis=1,
+        ).reshape(num_stages, n)
+        final = jnp.tile(
+            jnp.arange(k1) == kchain, (num_apps,)
+        )  # (S,) final-stage mask
+        delta_cpu = weight * comp_d[None, :] + ddt_shift
+        delta_cpu = jnp.where(final[:, None], INF_MARGINAL, delta_cpu)
+
+        return total, t, flow, work, d_dt, delta_link, delta_cpu
+
+    return eval_network
+
+
+def input_shapes(n, num_apps, kchain):
+    """The 12 input (name, shape) pairs, in calling order — the artifact
+    manifest the Rust runtime consumes."""
+    s = num_apps * (kchain + 1)
+    return [
+        ("phi_link", (s, n, n)),
+        ("phi_cpu", (s, n)),
+        ("exo", (num_apps, n)),
+        ("adj", (n, n)),
+        ("link_isq", (n, n)),
+        ("link_lin", (n, n)),
+        ("link_cap", (n, n)),
+        ("comp_isq", (n,)),
+        ("comp_lin", (n,)),
+        ("comp_cap", (n,)),
+        ("packet", (s,)),
+        ("weight", (s, n)),
+    ]
+
+
+def output_shapes(n, num_apps, kchain):
+    """The 7 output (name, shape) pairs, in tuple order."""
+    s = num_apps * (kchain + 1)
+    return [
+        ("total_cost", ()),
+        ("traffic", (s, n)),
+        ("link_flow", (n, n)),
+        ("workload", (n,)),
+        ("d_dt", (s, n)),
+        ("delta_link", (s, n, n)),
+        ("delta_cpu", (s, n)),
+    ]

@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; fixed cases pin the exact semantics.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import delta as delta_mod
+from compile.kernels import propagate as prop_mod
+from compile.kernels import ref
+
+
+def _rand(rng, shape, dtype):
+    return rng.random(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fixed-case pins
+# ---------------------------------------------------------------------------
+
+
+def test_propagate_identity_phi_zero():
+    t = jnp.ones((2, 4))
+    inj = jnp.arange(8.0).reshape(2, 4)
+    phi = jnp.zeros((2, 4, 4))
+    out = prop_mod.propagate(phi, t, inj)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(inj))
+
+
+def test_propagate_single_link():
+    # stage 0: all of node 0's unit traffic goes to node 2
+    phi = np.zeros((1, 3, 3))
+    phi[0, 0, 2] = 1.0
+    t = np.array([[1.0, 0.0, 0.0]])
+    inj = np.zeros((1, 3))
+    out = prop_mod.propagate(jnp.asarray(phi), jnp.asarray(t), jnp.asarray(inj))
+    np.testing.assert_allclose(np.asarray(out), [[0.0, 0.0, 1.0]])
+
+
+def test_backprop_transposes_propagate():
+    rng = np.random.default_rng(1)
+    phi = rng.random((3, 5, 5))
+    x = rng.random((3, 5))
+    own = rng.random((3, 5))
+    out = prop_mod.backprop(jnp.asarray(phi), jnp.asarray(x), jnp.asarray(own))
+    want = own + np.einsum("bij,bj->bi", phi, x)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-12)
+
+
+def test_delta_inf_off_links():
+    dprime = np.full((3, 3), 2.0)
+    ddt = np.zeros((1, 3))
+    packet = np.array([5.0])
+    adj = np.zeros((3, 3))
+    adj[0, 1] = 1.0
+    out = delta_mod.delta(
+        jnp.asarray(dprime), jnp.asarray(ddt), jnp.asarray(packet), jnp.asarray(adj)
+    )
+    out = np.asarray(out)
+    assert out[0, 0, 1] == pytest.approx(10.0)
+    assert out[0, 1, 0] == ref.INF_MARGINAL
+    assert out[0, 2, 2] == ref.INF_MARGINAL
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: kernel == oracle across shapes and dtypes
+# ---------------------------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=6),  # batch (stages)
+    st.integers(min_value=1, max_value=16),  # nodes
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from([np.float32, np.float64]))
+def test_propagate_matches_ref(shape, seed, dtype):
+    b, n = shape
+    rng = np.random.default_rng(seed)
+    phi = _rand(rng, (b, n, n), dtype)
+    t = _rand(rng, (b, n), dtype)
+    inj = _rand(rng, (b, n), dtype)
+    out = prop_mod.propagate(jnp.asarray(phi), jnp.asarray(t), jnp.asarray(inj))
+    want = ref.ref_propagate(jnp.asarray(phi), jnp.asarray(t), jnp.asarray(inj))
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=rtol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from([np.float32, np.float64]))
+def test_backprop_matches_ref(shape, seed, dtype):
+    b, n = shape
+    rng = np.random.default_rng(seed)
+    phi = _rand(rng, (b, n, n), dtype)
+    x = _rand(rng, (b, n), dtype)
+    own = _rand(rng, (b, n), dtype)
+    out = prop_mod.backprop(jnp.asarray(phi), jnp.asarray(x), jnp.asarray(own))
+    want = ref.ref_backprop(jnp.asarray(phi), jnp.asarray(x), jnp.asarray(own))
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=rtol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from([np.float32, np.float64]))
+def test_delta_matches_ref(shape, seed, dtype):
+    b, n = shape
+    rng = np.random.default_rng(seed)
+    dprime = _rand(rng, (n, n), dtype)
+    ddt = _rand(rng, (b, n), dtype)
+    packet = _rand(rng, (b,), dtype) + 1.0
+    adj = (rng.random((n, n)) > 0.5).astype(dtype)
+    out = delta_mod.delta(
+        jnp.asarray(dprime), jnp.asarray(ddt), jnp.asarray(packet), jnp.asarray(adj)
+    )
+    want = ref.ref_delta(
+        jnp.asarray(dprime), jnp.asarray(ddt), jnp.asarray(packet), jnp.asarray(adj)
+    )
+    # f32 differs in the last ulp (fma contraction inside the kernel)
+    rtol = 1e-6 if dtype == np.float32 else 1e-14
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=rtol)

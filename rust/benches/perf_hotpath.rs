@@ -1,0 +1,80 @@
+//! Perf bench: micro-timings of every hot-path component, for the §Perf
+//! optimization log in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo bench --bench perf_hotpath
+//! ```
+
+use scfo::algo::blocked::BlockedSets;
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::bench::Bench;
+use scfo::broadcast::run_broadcast;
+use scfo::config::Scenario;
+use scfo::flow::FlowState;
+use scfo::marginals::Marginals;
+use scfo::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench {
+        warmup_iters: 2,
+        iters: 10,
+    };
+
+    for name in ["abilene", "geant", "sw"] {
+        let sc = Scenario::table2(name)?;
+        let mut rng = Rng::new(sc.seed);
+        let net = sc.build(&mut rng)?;
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+
+        println!(
+            "\n--- {name}: |V|={} |E|={} |S|={} ---",
+            net.n(),
+            net.m(),
+            net.num_stages()
+        );
+        bench.run(&format!("{name}/flow-solve"), || {
+            FlowState::solve(&net, &phi).unwrap().total_cost
+        });
+        bench.run(&format!("{name}/marginals"), || {
+            Marginals::compute(&net, &phi, &fs).d_dt[0][0]
+        });
+        bench.run(&format!("{name}/blocked-sets"), || {
+            BlockedSets::compute(&net, &phi, &mg).is_blocked(0, 0, 0)
+        });
+        bench.run(&format!("{name}/broadcast-protocol"), || {
+            run_broadcast(&net, &phi, &fs).messages
+        });
+        bench.run(&format!("{name}/gp-full-iteration"), || {
+            let mut gp = GradientProjection::with_strategy(
+                &net,
+                phi.clone(),
+                GpOptions {
+                    backtrack: false,
+                    ..Default::default()
+                },
+            );
+            gp.step(&net).cost
+        });
+    }
+
+    // PJRT-backed evaluation, if artifacts are present
+    if scfo::runtime::artifacts_available() {
+        println!("\n--- PJRT (XLA) evaluation path ---");
+        for name in ["abilene", "geant", "sw"] {
+            let sc = Scenario::table2(name)?;
+            let mut rng = Rng::new(sc.seed);
+            let net = sc.build(&mut rng)?;
+            let rt = scfo::runtime::EvalRuntime::load_for(&net)?;
+            let phi = Strategy::shortest_path_to_dest(&net);
+            bench.run(
+                &format!("{name}/xla-eval (bucket n={})", rt.bucket().n),
+                || rt.eval(&net, &phi).unwrap().total_cost,
+            );
+        }
+    } else {
+        println!("(artifacts not built; skipping XLA timings)");
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Blocked node sets ℬ_i(a,k) (Section IV).
+//!
+//! To keep φ loop-free through every GP update, node i must not shift stage-
+//! (a,k) traffic toward a neighbor j if
+//!
+//! 1. ∂D/∂t_j(a,k) > ∂D/∂t_i(a,k)  (flow must run downhill in marginal), or
+//! 2. j has a positive-φ path of stage (a,k) containing an *improper* link
+//!    (p,q), i.e. one with ∂D/∂t_q(a,k) > ∂D/∂t_p(a,k)
+//!
+//! (plus, trivially, all j with (i,j) ∉ ℰ). Category 2 is the transitive
+//! "dirty" closure computed in reverse topological order of the stage DAG.
+
+use crate::app::Network;
+use crate::marginals::Marginals;
+use crate::strategy::Strategy;
+
+/// Category-2 "dirty" tags: `dirty[s][j]` is true iff node j has a
+/// positive-φ stage-s path containing an improper link (p,q), i.e. one with
+/// ∂D/∂t_q > ∂D/∂t_p. Computed in reverse topological order of the stage
+/// DAG; the distributed broadcast protocol piggybacks exactly these bits
+/// ([`crate::broadcast`]), which is tested against this reference.
+pub fn compute_dirty(phi: &Strategy, mg: &Marginals) -> Vec<Vec<bool>> {
+    let ns = mg.d_dt.len();
+    let n = mg.d_dt.first().map_or(0, Vec::len);
+    let mut all = Vec::with_capacity(ns);
+    for s in 0..ns {
+        let ddt = &mg.d_dt[s];
+        let order = phi
+            .topo_order(s)
+            .expect("dirty tags require loop-free phi");
+        let mut dirty = vec![false; n];
+        for &p in order.iter().rev() {
+            for q in phi.positive_links(s, p) {
+                if ddt[q] > ddt[p] + 1e-15 || dirty[q] {
+                    dirty[p] = true;
+                    break;
+                }
+            }
+        }
+        all.push(dirty);
+    }
+    all
+}
+
+/// Blocked-set bitmaps for one iteration: `blocked[s][i*n + j]`.
+#[derive(Clone, Debug)]
+pub struct BlockedSets {
+    n: usize,
+    blocked: Vec<Vec<bool>>,
+}
+
+impl BlockedSets {
+    /// Is neighbor j blocked for (stage s, node i)? The CPU slot is never
+    /// blocked (stage transitions cannot form same-stage loops).
+    #[inline]
+    pub fn is_blocked(&self, s: usize, i: usize, j: usize) -> bool {
+        if j >= self.n {
+            return false; // CPU slot
+        }
+        self.blocked[s][i * self.n + j]
+    }
+
+    /// Compute all blocked sets at the current operating point.
+    pub fn compute(net: &Network, phi: &Strategy, mg: &Marginals) -> BlockedSets {
+        let n = net.n();
+        let ns = net.num_stages();
+        let mut blocked = vec![vec![false; n * n]; ns];
+        let all_dirty = compute_dirty(phi, mg);
+
+        for s in 0..ns {
+            let ddt = &mg.d_dt[s];
+            let dirty = &all_dirty[s];
+            let b = &mut blocked[s];
+            // default: blocked (covers all non-links), then unblock the |E|
+            // real links that pass the downhill + clean-path tests
+            b.fill(true);
+            for e in 0..net.m() {
+                let (i, j) = net.graph.edge(e);
+                b[i * n + j] = ddt[j] > ddt[i] + 1e-15 || dirty[j];
+            }
+        }
+        BlockedSets { n, blocked }
+    }
+
+    /// Count of unblocked out-directions (links + CPU when allowed) for
+    /// diagnostics.
+    pub fn unblocked_count(&self, s: usize, i: usize, cpu_allowed: bool) -> usize {
+        let links = (0..self.n).filter(|&j| !self.is_blocked(s, i, j)).count();
+        links + usize::from(cpu_allowed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{Application, Network, StageRegistry};
+    use crate::cost::CostFn;
+    use crate::flow::FlowState;
+    use crate::graph::Graph;
+    use crate::strategy::Strategy;
+
+    /// 0 <-> 1 <-> 2 path, single one-task app from 0 to 2.
+    fn net() -> Network {
+        let g = Graph::bidirected(3, &[(0, 1), (1, 2)]).unwrap();
+        let apps = vec![Application {
+            dest: 2,
+            num_tasks: 1,
+            packet_sizes: vec![1.0, 1.0],
+            input_rates: vec![1.0, 0.0, 0.0],
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; 3]; stages.len()];
+        Network::new(
+            g.clone(),
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; g.m()],
+            vec![CostFn::Linear { d: 1.0 }; 3],
+            cw,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn upstream_is_blocked_downstream_not() {
+        let net = net();
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let bs = BlockedSets::compute(&net, &phi, &mg);
+        let s0 = 0;
+        // d_dt decreases toward the destination: node 1 must not send back
+        // to node 0 (higher marginal), node 0 may send to node 1.
+        assert!(bs.is_blocked(s0, 1, 0), "1 -> 0 should be blocked");
+        assert!(!bs.is_blocked(s0, 0, 1), "0 -> 1 should be allowed");
+        // non-links always blocked
+        assert!(bs.is_blocked(s0, 0, 2));
+        // CPU never blocked
+        assert!(!bs.is_blocked(s0, 0, 3));
+    }
+
+    #[test]
+    fn blocking_prevents_two_cycles() {
+        // For every stage and every (i,j) pair: i->j and j->i must never be
+        // simultaneously unblocked when d_dt differs (would allow a 2-cycle).
+        let net = net();
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let bs = BlockedSets::compute(&net, &phi, &mg);
+        for s in 0..net.num_stages() {
+            for i in 0..3 {
+                for j in 0..3 {
+                    if i == j || !net.graph.has_edge(i, j) {
+                        continue;
+                    }
+                    let diff = (mg.d_dt[s][i] - mg.d_dt[s][j]).abs();
+                    if diff > 1e-12 {
+                        assert!(
+                            bs.is_blocked(s, i, j) || bs.is_blocked(s, j, i),
+                            "s={s} pair ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

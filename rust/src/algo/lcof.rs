@@ -1,0 +1,108 @@
+//! LCOF — Local Computation, Optimal Forwarding (baseline, Sec. V).
+//!
+//! All tasks of every application run at the node where the data entered the
+//! network (φ_i0(a,k) = 1 for every non-final stage), so only the final
+//! results are forwarded — and that forwarding is optimized by GP restricted
+//! to the final-stage rows.
+
+use crate::algo::gp::{GpOptions, GpReport, GradientProjection, SupportMask};
+use crate::app::Network;
+use crate::strategy::Strategy;
+
+/// Build the LCOF support mask (CPU-only for non-final stages, all links for
+/// final stages) and the matching initial strategy.
+pub fn lcof_setup(net: &Network) -> (SupportMask, Strategy) {
+    let n = net.n();
+    let mut mask = SupportMask::empty(net);
+    let mut phi0 = Strategy::zeros(n, net.num_stages());
+    for (s, (a, _k)) in net.stages.iter() {
+        let dest = net.apps[a].dest;
+        let is_final = net.is_final_stage(s);
+        if is_final {
+            let (_d, next) = net.graph.dijkstra_to(dest, |_| 1.0);
+            for i in 0..n {
+                for &j in net.graph.out_neighbors(i) {
+                    mask.allow(s, i, j);
+                }
+                if i != dest {
+                    phi0.set(s, i, next[i], 1.0);
+                }
+            }
+        } else {
+            for i in 0..n {
+                mask.allow(s, i, n);
+                phi0.set(s, i, n, 1.0);
+            }
+        }
+    }
+    (mask, phi0)
+}
+
+/// Run the LCOF baseline to convergence.
+pub fn run(net: &Network, max_iters: usize) -> GpReport {
+    let (mask, phi0) = lcof_setup(net);
+    let mut gp = GradientProjection::with_strategy(
+        net,
+        phi0,
+        GpOptions {
+            support: Some(mask),
+            ..Default::default()
+        },
+    );
+    gp.run(net, max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::small_net;
+    use crate::flow::FlowState;
+
+    #[test]
+    fn lcof_init_is_feasible() {
+        let net = small_net(true);
+        let (_m, phi0) = lcof_setup(&net);
+        phi0.validate(&net).unwrap();
+        assert!(!phi0.has_loop());
+    }
+
+    #[test]
+    fn all_computation_stays_at_sources() {
+        let net = small_net(true);
+        let (mask, phi0) = lcof_setup(&net);
+        let mut gp = GradientProjection::with_strategy(
+            &net,
+            phi0,
+            GpOptions {
+                support: Some(mask),
+                ..Default::default()
+            },
+        );
+        gp.run(&net, 300);
+        let fs = FlowState::solve(&net, &gp.phi).unwrap();
+        // every node's stage-0 offload equals its exogenous input: nothing is
+        // forwarded before computing
+        for (s, (a, k)) in net.stages.iter() {
+            if k == 0 {
+                for i in 0..net.n() {
+                    let want = net.apps[a].input_rates[i];
+                    assert!(
+                        (fs.cpu_pkt[s][i] - want).abs() < 1e-9,
+                        "node {i}: offload {} vs input {want}",
+                        fs.cpu_pkt[s][i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lcof_never_beats_full_gp() {
+        use crate::algo::gp::{GpOptions, GradientProjection};
+        let net = small_net(true);
+        let lcof = run(&net, 1000);
+        let mut gp = GradientProjection::new(&net, GpOptions::default());
+        let full = gp.run(&net, 1000);
+        assert!(full.final_cost <= lcof.final_cost + 1e-6);
+    }
+}

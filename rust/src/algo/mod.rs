@@ -1,0 +1,85 @@
+//! Optimization algorithms: the paper's GP (Algorithm 1) and the three
+//! baselines it is evaluated against (Section V).
+
+pub mod blocked;
+pub mod gp;
+pub mod lcof;
+pub mod lpr;
+pub mod spoc;
+
+use crate::app::Network;
+
+/// Which algorithm to run (CLI/bench selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Gradient Projection — the paper's method.
+    Gp,
+    /// Shortest Path, Optimal Computation placement.
+    Spoc,
+    /// Local Computation, Optimal Forwarding.
+    Lcof,
+    /// Linear Program Rounded for Service Chains.
+    LprSc,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 4] = [
+        Algorithm::Gp,
+        Algorithm::Spoc,
+        Algorithm::Lcof,
+        Algorithm::LprSc,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Gp => "GP",
+            Algorithm::Spoc => "SPOC",
+            Algorithm::Lcof => "LCOF",
+            Algorithm::LprSc => "LPR-SC",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gp" => Ok(Algorithm::Gp),
+            "spoc" => Ok(Algorithm::Spoc),
+            "lcof" => Ok(Algorithm::Lcof),
+            "lpr-sc" | "lpr" | "lprsc" => Ok(Algorithm::LprSc),
+            other => anyhow::bail!("unknown algorithm '{other}'"),
+        }
+    }
+
+    /// Run to convergence and return the final aggregate cost.
+    pub fn solve(&self, net: &Network, max_iters: usize) -> anyhow::Result<f64> {
+        Ok(match self {
+            Algorithm::Gp => {
+                let mut g = gp::GradientProjection::new(net, gp::GpOptions::default());
+                g.run(net, max_iters).final_cost
+            }
+            Algorithm::Spoc => spoc::run(net, max_iters).final_cost,
+            Algorithm::Lcof => lcof::run(net, max_iters).final_cost,
+            Algorithm::LprSc => lpr::run(net)?.final_cost,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Algorithm::parse("gp").unwrap(), Algorithm::Gp);
+        assert_eq!(Algorithm::parse("LPR-SC").unwrap(), Algorithm::LprSc);
+        assert!(Algorithm::parse("x").is_err());
+    }
+
+    #[test]
+    fn all_algorithms_solve_abilene() {
+        let net = crate::testutil::small_net(true);
+        for alg in Algorithm::ALL {
+            let cost = alg.solve(&net, 400).unwrap();
+            assert!(cost.is_finite() && cost > 0.0, "{}: {cost}", alg.name());
+        }
+    }
+}

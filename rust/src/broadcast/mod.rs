@@ -1,0 +1,238 @@
+//! The Section-IV marginal-cost broadcast protocol, at message granularity.
+//!
+//! Stage 1 — broadcast of ∂D/∂t_i(a,|𝒯_a|): starting from the destination
+//! d_a (which knows ∂D/∂t = 0), every node that has received values from all
+//! of its *downstream* neighbors (those j with φ_ij > 0) computes its own
+//! value by eq. (4b) and sends it to all its *in-neighbors* — every upstream
+//! node needs it to evaluate δ (eq. 7) for candidate directions, not only
+//! the ones currently in use; this is also what makes the per-slot message
+//! count exactly |ℰ| per stage, the complexity the paper claims.
+//!
+//! Stage 2 — for k = |𝒯_a|−1 … 0: identical, except eq. (4a) additionally
+//! needs the node's own ∂D/∂t_i(a,k+1) (already computed) and C'_i(G_i)
+//! (measured locally).
+//!
+//! Each message piggybacks the sender's category-2 "dirty" bit so receivers
+//! can assemble blocked node sets without extra traffic (the paper:
+//! "piggy-backed on the broadcast messages").
+//!
+//! This module runs the protocol in a round-based single-process simulator
+//! with explicit [`Msg`] records (message/round accounting for the paper's
+//! complexity claims); [`crate::distributed`] runs the same protocol over
+//! real threads and channels. Both must agree exactly with the centralized
+//! recursion in [`crate::marginals`] — tested below.
+
+use crate::app::Network;
+use crate::flow::FlowState;
+use crate::strategy::{Strategy, PHI_EPS};
+
+/// One broadcast message: j tells upstream neighbor i its ∂D/∂t value for a
+/// stage, plus its dirty bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Msg {
+    pub from: usize,
+    pub to: usize,
+    pub stage: usize,
+    pub d_dt: f64,
+    pub dirty: bool,
+}
+
+/// Result of a full protocol run.
+#[derive(Clone, Debug)]
+pub struct BroadcastOutcome {
+    /// ∂D/∂t_i(a,k): [stage][node] — must equal the centralized recursion.
+    pub d_dt: Vec<Vec<f64>>,
+    /// Piggybacked category-2 tags: [stage][node].
+    pub dirty: Vec<Vec<bool>>,
+    /// Total messages sent (paper: |𝒮|·|ℰ| per slot).
+    pub messages: usize,
+    /// Protocol rounds until quiescence (≤ (|𝒯_a|+1)·h̄ per app).
+    pub rounds: usize,
+}
+
+/// Run the two-stage broadcast protocol for every application.
+pub fn run_broadcast(net: &Network, phi: &Strategy, fs: &FlowState) -> BroadcastOutcome {
+    let n = net.n();
+    let ns = net.num_stages();
+    let cpu = phi.cpu();
+    let mut d_dt = vec![vec![0.0; n]; ns];
+    let mut dirty = vec![vec![false; n]; ns];
+    let mut messages = 0usize;
+    let mut rounds = 0usize;
+
+    for (a, app) in net.apps.iter().enumerate() {
+        // chain order: final stage first (stage 1 of the protocol), then
+        // k = |T_a|-1 .. 0 (stage 2)
+        for k in (0..app.num_stages()).rev() {
+            let s = net.stages.id(a, k);
+            let l = net.packet_size(s);
+            let is_final = k == app.num_tasks;
+
+            // per-node bookkeeping for this (a, k)
+            let mut pending: Vec<usize> = (0..n)
+                .map(|i| phi.positive_links(s, i).count())
+                .collect();
+            let mut got: Vec<Vec<Option<Msg>>> = vec![vec![None; n]; n]; // [i][from j]
+            let mut computed = vec![false; n];
+            let mut inbox: Vec<Msg> = Vec::new();
+
+            // Round 0: every node with no downstream neighbors computes
+            // immediately (destination for final stages; "end-nodes of stage
+            // (a,k) paths" otherwise).
+            let mut ready: Vec<usize> = (0..n).filter(|&i| pending[i] == 0).collect();
+            while !ready.is_empty() || !inbox.is_empty() {
+                rounds += 1;
+                // deliver messages sent last round
+                for m in inbox.drain(..) {
+                    debug_assert!(got[m.to][m.from].is_none(), "duplicate msg");
+                    let (to, from) = (m.to, m.from);
+                    got[to][from] = Some(m);
+                    // only downstream (positive-φ) senders gate readiness
+                    if phi.get(s, to, from) > PHI_EPS && !computed[to] {
+                        pending[to] -= 1;
+                        if pending[to] == 0 {
+                            ready.push(to);
+                        }
+                    }
+                }
+                // nodes that became ready compute and broadcast upstream
+                let batch: Vec<usize> = std::mem::take(&mut ready);
+                for i in batch {
+                    debug_assert!(!computed[i]);
+                    // eq. (4a)/(4b): weighted sum over downstream directions
+                    let mut acc = 0.0;
+                    let mut is_dirty = false;
+                    let row = phi.row(s, i);
+                    for (j, &p) in row.iter().enumerate().take(n) {
+                        if p > PHI_EPS {
+                            let m = got[i][j]
+                                .as_ref()
+                                .expect("ready implies all downstream received");
+                            let e = net.graph.edge_id(i, j).unwrap();
+                            acc += p * (l * fs.link_marginal[e] + m.d_dt);
+                            // transitively dirty neighbor
+                            if m.dirty {
+                                is_dirty = true;
+                            }
+                        }
+                    }
+                    if !is_final && row[cpu] > PHI_EPS {
+                        let next = net.stages.id(a, k + 1);
+                        acc += row[cpu]
+                            * (net.comp_weight[s][i] * fs.comp_marginal[i] + d_dt[next][i]);
+                    }
+                    d_dt[s][i] = acc;
+                    // now that d_dt_i is known, finish the dirty test:
+                    // any downstream j with d_dt_j > d_dt_i is an improper link
+                    if !is_dirty {
+                        for (j, &p) in row.iter().enumerate().take(n) {
+                            if p > PHI_EPS {
+                                let m = got[i][j].as_ref().unwrap();
+                                if m.d_dt > acc + 1e-15 {
+                                    is_dirty = true;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    dirty[s][i] = is_dirty;
+                    computed[i] = true;
+                    // broadcast to ALL in-neighbors (they need δ candidates)
+                    for &j in net.graph.in_neighbors(i) {
+                        inbox.push(Msg {
+                            from: i,
+                            to: j,
+                            stage: s,
+                            d_dt: acc,
+                            dirty: is_dirty,
+                        });
+                        messages += 1;
+                    }
+                }
+            }
+            debug_assert!(
+                computed.iter().all(|&c| c),
+                "loop-free phi guarantees termination"
+            );
+        }
+    }
+
+    BroadcastOutcome {
+        d_dt,
+        dirty,
+        messages,
+        rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::blocked::compute_dirty;
+    use crate::marginals::Marginals;
+    use crate::testutil::small_net;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn broadcast_equals_centralized_recursion() {
+        let net = small_net(true);
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let phi = Strategy::random_dag(&net, &mut rng);
+            let fs = FlowState::solve(&net, &phi).unwrap();
+            let mg = Marginals::compute(&net, &phi, &fs);
+            let out = run_broadcast(&net, &phi, &fs);
+            for s in 0..net.num_stages() {
+                for i in 0..net.n() {
+                    assert!(
+                        (out.d_dt[s][i] - mg.d_dt[s][i]).abs()
+                            < 1e-9 * (1.0 + mg.d_dt[s][i].abs()),
+                        "seed {seed} s={s} i={i}: {} vs {}",
+                        out.d_dt[s][i],
+                        mg.d_dt[s][i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn piggybacked_dirty_bits_match_reference() {
+        let net = small_net(true);
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let phi = Strategy::random_dag(&net, &mut rng);
+            let fs = FlowState::solve(&net, &phi).unwrap();
+            let mg = Marginals::compute(&net, &phi, &fs);
+            let reference = compute_dirty(&phi, &mg);
+            let out = run_broadcast(&net, &phi, &fs);
+            assert_eq!(out.dirty, reference, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn message_count_is_stages_times_links() {
+        // Section IV: |E| broadcast transmissions per stage per slot,
+        // |S|·|E| total.
+        let net = small_net(true);
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let out = run_broadcast(&net, &phi, &fs);
+        assert_eq!(out.messages, net.num_stages() * net.m());
+    }
+
+    #[test]
+    fn rounds_bounded_by_chain_times_hops() {
+        let net = small_net(true);
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let out = run_broadcast(&net, &phi, &fs);
+        // h̄ ≤ n, per-app bound (|T_a|+1)·h̄ summed over apps
+        let bound: usize = net
+            .apps
+            .iter()
+            .map(|a| (a.num_tasks + 1) * (net.n() + 1))
+            .sum();
+        assert!(out.rounds <= bound, "{} > {bound}", out.rounds);
+    }
+}

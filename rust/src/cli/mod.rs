@@ -1,0 +1,115 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `scfo <command> [--flag value] [--switch] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+    pub fn flag_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flag(name) {
+            Some(v) => Ok(v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'"))?),
+            None => Ok(default),
+        }
+    }
+    pub fn flag_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flag(name) {
+            Some(v) => Ok(v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))?),
+            None => Ok(default),
+        }
+    }
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        // NOTE: a bare `--name` followed by a non-flag token is parsed as a
+        // valued flag; trailing/pre-flag bare `--name` is a switch.
+        let a = parse("run extra1 extra2 --topology geant --iters 500 --verbose");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.flag("topology"), Some("geant"));
+        assert_eq!(a.flag_usize("iters", 0).unwrap(), 500);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --alpha=0.25");
+        assert_eq!(a.flag_f64("alpha", 0.0).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --alpha abc");
+        assert_eq!(a.flag_f64("beta", 7.0).unwrap(), 7.0);
+        assert!(a.flag_f64("alpha", 0.0).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("run --quiet");
+        assert!(a.switch("quiet"));
+        assert_eq!(a.flag("quiet"), None);
+    }
+}

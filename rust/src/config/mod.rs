@@ -1,0 +1,274 @@
+//! Scenario configuration — the experiment config system.
+//!
+//! A [`Scenario`] captures one row of Table II (or a custom setup): topology,
+//! application count, sources per app, cost-function families and their
+//! parameters (d̄_ij, s̄_i), packet-size schedule and input-rate range. It
+//! builds a concrete [`Network`] deterministically from a seed, and
+//! round-trips through JSON for config files (`scfo run --config x.json`).
+
+use crate::app::{Application, Network, StageRegistry};
+use crate::cost::CostKind;
+use crate::graph::topologies;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One experiment scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    /// Topology name understood by [`topologies::by_name`].
+    pub topology: String,
+    /// |𝒜| — number of applications.
+    pub num_apps: usize,
+    /// R — number of random data sources per application.
+    pub num_sources: usize,
+    /// |𝒯_a| — tasks per application (the paper fixes 2).
+    pub num_tasks: usize,
+    pub link_kind: CostKind,
+    /// d̄_ij: linear "speed" or queue capacity for links.
+    pub link_param: f64,
+    pub comp_kind: CostKind,
+    /// s̄_i: linear speed or queue capacity for CPUs.
+    pub comp_param: f64,
+    /// Input rate range (paper: [0.5, 1.5]).
+    pub rate_lo: f64,
+    pub rate_hi: f64,
+    /// Multiplier on all input rates (Fig. 6 sweeps this).
+    pub rate_scale: f64,
+    /// L_(a,0); stage k gets max(packet_base − packet_decay·k, 1).
+    pub packet_base: f64,
+    pub packet_decay: f64,
+    /// Workload per input *bit*: w_i(a,k) = comp_weight · L_(a,k).
+    /// Processing cost scaling with input size makes computation genuinely
+    /// congestible (a data source running every task locally saturates its
+    /// CPU), which is the regime the paper's Fig. 5/6 gaps live in.
+    pub comp_weight: f64,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The Table-II row for a named topology (`sw` gets Queue costs; use
+    /// [`Scenario::sw_linear`] for the SW-linear variant of Fig. 5).
+    pub fn table2(topology: &str) -> anyhow::Result<Scenario> {
+        let (num_apps, num_sources, link_param, comp_param) = match topology {
+            "connected-er" => (5, 3, 10.0, 12.0),
+            "balanced-tree" => (5, 3, 20.0, 15.0),
+            "fog" => (5, 3, 20.0, 17.0),
+            "abilene" => (3, 3, 15.0, 10.0),
+            "lhc" => (8, 3, 15.0, 15.0),
+            "geant" => (10, 5, 20.0, 20.0),
+            "sw" => (30, 8, 20.0, 20.0),
+            other => anyhow::bail!("not a Table-II topology: '{other}'"),
+        };
+        Ok(Scenario {
+            name: topology.to_string(),
+            topology: topology.to_string(),
+            num_apps,
+            num_sources,
+            num_tasks: 2,
+            link_kind: CostKind::Queue,
+            link_param,
+            comp_kind: CostKind::Queue,
+            comp_param,
+            rate_lo: 0.5,
+            rate_hi: 1.5,
+            rate_scale: 1.0,
+            packet_base: 10.0,
+            packet_decay: 5.0,
+            comp_weight: 0.25,
+            seed: 2023,
+        })
+    }
+
+    /// The SW-linear variant of Fig. 5.
+    pub fn sw_linear() -> Scenario {
+        let mut s = Scenario::table2("sw").unwrap();
+        s.name = "sw-linear".into();
+        s.link_kind = CostKind::Linear;
+        s.comp_kind = CostKind::Linear;
+        s
+    }
+
+    /// Packet size of stage k.
+    pub fn packet_size(&self, k: usize) -> f64 {
+        (self.packet_base - self.packet_decay * k as f64).max(1.0)
+    }
+
+    /// Build the concrete network (topology + apps + costs) from the seed.
+    pub fn build(&self, rng: &mut Rng) -> anyhow::Result<Network> {
+        let graph = topologies::by_name(&self.topology, rng)?;
+        let n = graph.n();
+        let mut apps = Vec::with_capacity(self.num_apps);
+        for _ in 0..self.num_apps {
+            let dest = rng.usize(n);
+            let sources = rng.choose_distinct(n, self.num_sources.min(n));
+            let mut input_rates = vec![0.0; n];
+            for s in sources {
+                input_rates[s] = rng.range(self.rate_lo, self.rate_hi) * self.rate_scale;
+            }
+            let packet_sizes = (0..=self.num_tasks).map(|k| self.packet_size(k)).collect();
+            apps.push(Application {
+                dest,
+                num_tasks: self.num_tasks,
+                packet_sizes,
+                input_rates,
+            });
+        }
+        let stages = StageRegistry::new(&apps);
+        // w_i(a,k) = comp_weight · L_(a,k): task workload scales with the
+        // size of its input packets (final stages get w = 0; no next task).
+        let comp_weight = stages
+            .iter()
+            .map(|(_s, (_a, k))| {
+                let w = if k < self.num_tasks {
+                    self.comp_weight * self.packet_size(k)
+                } else {
+                    0.0
+                };
+                vec![w; n]
+            })
+            .collect();
+        let link_cost = (0..graph.m())
+            .map(|_| self.link_kind.instantiate(self.link_param))
+            .collect();
+        let comp_cost = (0..n)
+            .map(|_| self.comp_kind.instantiate(self.comp_param))
+            .collect();
+        Network::new(graph, apps, link_cost, comp_cost, comp_weight)
+    }
+
+    // ---- JSON round trip ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("num_apps", Json::Num(self.num_apps as f64)),
+            ("num_sources", Json::Num(self.num_sources as f64)),
+            ("num_tasks", Json::Num(self.num_tasks as f64)),
+            (
+                "link_kind",
+                Json::Str(
+                    match self.link_kind {
+                        CostKind::Linear => "linear",
+                        CostKind::Queue => "queue",
+                    }
+                    .into(),
+                ),
+            ),
+            ("link_param", Json::Num(self.link_param)),
+            (
+                "comp_kind",
+                Json::Str(
+                    match self.comp_kind {
+                        CostKind::Linear => "linear",
+                        CostKind::Queue => "queue",
+                    }
+                    .into(),
+                ),
+            ),
+            ("comp_param", Json::Num(self.comp_param)),
+            ("rate_lo", Json::Num(self.rate_lo)),
+            ("rate_hi", Json::Num(self.rate_hi)),
+            ("rate_scale", Json::Num(self.rate_scale)),
+            ("packet_base", Json::Num(self.packet_base)),
+            ("packet_decay", Json::Num(self.packet_decay)),
+            ("comp_weight", Json::Num(self.comp_weight)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Scenario> {
+        let gets = |k: &str| -> anyhow::Result<String> {
+            Ok(v
+                .get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("config: missing string '{k}'"))?
+                .to_string())
+        };
+        let getf = |k: &str, d: f64| v.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let getu = |k: &str, d: usize| v.get(k).and_then(Json::as_usize).unwrap_or(d);
+        Ok(Scenario {
+            name: gets("name").unwrap_or_else(|_| "custom".into()),
+            topology: gets("topology")?,
+            num_apps: getu("num_apps", 1),
+            num_sources: getu("num_sources", 1),
+            num_tasks: getu("num_tasks", 2),
+            link_kind: CostKind::parse(&gets("link_kind").unwrap_or_else(|_| "queue".into()))?,
+            link_param: getf("link_param", 10.0),
+            comp_kind: CostKind::parse(&gets("comp_kind").unwrap_or_else(|_| "queue".into()))?,
+            comp_param: getf("comp_param", 10.0),
+            rate_lo: getf("rate_lo", 0.5),
+            rate_hi: getf("rate_hi", 1.5),
+            rate_scale: getf("rate_scale", 1.0),
+            packet_base: getf("packet_base", 10.0),
+            packet_decay: getf("packet_decay", 5.0),
+            comp_weight: getf("comp_weight", 1.0),
+            seed: getf("seed", 2023.0) as u64,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Scenario> {
+        let text = std::fs::read_to_string(path)?;
+        Scenario::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_rows_build_valid_networks() {
+        for name in topologies::SCENARIO_NAMES {
+            let sc = Scenario::table2(name).unwrap();
+            let mut rng = Rng::new(sc.seed);
+            let net = sc.build(&mut rng).unwrap();
+            assert_eq!(net.num_stages(), sc.num_apps * 3, "{name}");
+            // every app has exactly R sources
+            for app in &net.apps {
+                let sources = app.input_rates.iter().filter(|&&r| r > 0.0).count();
+                assert_eq!(sources, sc.num_sources, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn packet_schedule_matches_paper() {
+        let sc = Scenario::table2("abilene").unwrap();
+        assert_eq!(sc.packet_size(0), 10.0);
+        assert_eq!(sc.packet_size(1), 5.0);
+        assert_eq!(sc.packet_size(2), 1.0); // floor(10-10, 1)
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let sc = Scenario::table2("geant").unwrap();
+        let re = Scenario::from_json(&sc.to_json()).unwrap();
+        assert_eq!(format!("{sc:?}"), format!("{re:?}"));
+    }
+
+    #[test]
+    fn build_is_deterministic_per_seed() {
+        let sc = Scenario::table2("connected-er").unwrap();
+        let n1 = sc.build(&mut Rng::new(sc.seed)).unwrap();
+        let n2 = sc.build(&mut Rng::new(sc.seed)).unwrap();
+        assert_eq!(n1.graph.edges(), n2.graph.edges());
+        for (a1, a2) in n1.apps.iter().zip(&n2.apps) {
+            assert_eq!(a1.dest, a2.dest);
+            assert_eq!(a1.input_rates, a2.input_rates);
+        }
+    }
+
+    #[test]
+    fn sw_linear_variant() {
+        let sc = Scenario::sw_linear();
+        assert_eq!(sc.link_kind, CostKind::Linear);
+        assert_eq!(sc.name, "sw-linear");
+    }
+}

@@ -1,0 +1,235 @@
+//! Congestion-dependent cost functions D_ij(F) and C_i(G).
+//!
+//! The paper requires costs that are increasing, continuously differentiable
+//! and convex with D(0)=0. We provide:
+//!
+//! * [`CostFn::Linear`] — `d·x` (pure transmission/processing delay),
+//! * [`CostFn::Queue`] — `x/(c-x)`, the expected number of packets in an
+//!   M/M/1 queue with service rate `c` (by Little's law, aggregate queue
+//!   length ≡ expected system delay),
+//! * [`CostFn::Quadratic`] — `a·x + b·x²` (polynomial congestion proxy).
+//!
+//! The queue cost is *smoothly extended* beyond `SAT_FRAC·c`: above the
+//! saturation knee the exact hyperbola is replaced by its second-order Taylor
+//! expansion, which keeps the function finite, C¹-continuous, increasing and
+//! convex. This matters for the optimizer: an infeasible iterate (F ≥ c)
+//! still produces finite, very steep marginals that push flow away, instead
+//! of NaN/∞ poisoning the gradient. Inside the knee the values are exact.
+
+/// Fraction of capacity at which the exact M/M/1 curve hands over to the
+/// quadratic extension.
+pub const SAT_FRAC: f64 = 0.99;
+
+/// A scalar convex cost function with closed-form derivative.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CostFn {
+    /// d·x
+    Linear { d: f64 },
+    /// x/(c-x) for x < SAT_FRAC·c, quadratic extension above.
+    Queue { cap: f64 },
+    /// a·x + b·x²
+    Quadratic { a: f64, b: f64 },
+}
+
+impl CostFn {
+    /// Cost value at load `x ≥ 0`.
+    pub fn cost(&self, x: f64) -> f64 {
+        debug_assert!(x >= -1e-9, "negative load {x}");
+        let x = x.max(0.0);
+        match *self {
+            CostFn::Linear { d } => d * x,
+            CostFn::Quadratic { a, b } => a * x + b * x * x,
+            CostFn::Queue { cap } => {
+                let knee = SAT_FRAC * cap;
+                if x < knee {
+                    x / (cap - x)
+                } else {
+                    // 2nd-order Taylor at the knee: value + slope·dx + ½curv·dx²
+                    let v = knee / (cap - knee);
+                    let s = cap / ((cap - knee) * (cap - knee));
+                    let c2 = 2.0 * cap / ((cap - knee).powi(3));
+                    let dx = x - knee;
+                    v + s * dx + 0.5 * c2 * dx * dx
+                }
+            }
+        }
+    }
+
+    /// Derivative (marginal cost) at load `x ≥ 0`.
+    pub fn deriv(&self, x: f64) -> f64 {
+        let x = x.max(0.0);
+        match *self {
+            CostFn::Linear { d } => d,
+            CostFn::Quadratic { a, b } => a + 2.0 * b * x,
+            CostFn::Queue { cap } => {
+                let knee = SAT_FRAC * cap;
+                if x < knee {
+                    cap / ((cap - x) * (cap - x))
+                } else {
+                    let s = cap / ((cap - knee) * (cap - knee));
+                    let c2 = 2.0 * cap / ((cap - knee).powi(3));
+                    s + c2 * (x - knee)
+                }
+            }
+        }
+    }
+
+    /// Second derivative (curvature) at load `x ≥ 0` — used by the
+    /// diagonally-scaled (quasi-Newton) GP step of [`crate::algo::gp`].
+    pub fn deriv2(&self, x: f64) -> f64 {
+        let x = x.max(0.0);
+        match *self {
+            CostFn::Linear { .. } => 0.0,
+            CostFn::Quadratic { b, .. } => 2.0 * b,
+            CostFn::Queue { cap } => {
+                let knee = SAT_FRAC * cap;
+                let xx = x.min(knee); // extension region has constant curvature c2
+                2.0 * cap / ((cap - xx).powi(3))
+            }
+        }
+    }
+
+    /// Is the load within the exact (non-extended) region?
+    pub fn within_capacity(&self, x: f64) -> bool {
+        match *self {
+            CostFn::Queue { cap } => x < SAT_FRAC * cap,
+            _ => true,
+        }
+    }
+
+    /// Nominal capacity if any.
+    pub fn capacity(&self) -> Option<f64> {
+        match *self {
+            CostFn::Queue { cap } => Some(cap),
+            _ => None,
+        }
+    }
+}
+
+/// Cost family selector used by the config system (Table II "Link"/"Comp").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostKind {
+    Linear,
+    Queue,
+}
+
+impl CostKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Ok(CostKind::Linear),
+            "queue" => Ok(CostKind::Queue),
+            other => anyhow::bail!("unknown cost kind '{other}' (linear|queue)"),
+        }
+    }
+    /// Instantiate with Table II's parameter (d̄_ij or s̄_i): a linear cost of
+    /// slope 1/p (delay per unit on a link of "speed" p) or a queue of
+    /// capacity p.
+    pub fn instantiate(&self, p: f64) -> CostFn {
+        match self {
+            CostKind::Linear => CostFn::Linear { d: 1.0 / p },
+            CostKind::Queue => CostFn::Queue { cap: p },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_basics() {
+        let c = CostFn::Linear { d: 2.0 };
+        assert_eq!(c.cost(0.0), 0.0);
+        assert_eq!(c.cost(3.0), 6.0);
+        assert_eq!(c.deriv(100.0), 2.0);
+    }
+
+    #[test]
+    fn queue_exact_region() {
+        let c = CostFn::Queue { cap: 10.0 };
+        assert_eq!(c.cost(0.0), 0.0);
+        assert!((c.cost(5.0) - 1.0).abs() < 1e-12); // 5/(10-5)
+        assert!((c.deriv(5.0) - 0.4).abs() < 1e-12); // 10/25
+        assert!(c.within_capacity(5.0));
+        assert!(!c.within_capacity(9.95));
+    }
+
+    #[test]
+    fn queue_extension_is_c1_and_monotone() {
+        let c = CostFn::Queue { cap: 10.0 };
+        let knee = SAT_FRAC * 10.0;
+        let eps = 1e-7;
+        // continuity of value and slope across the knee (slope ~1e3 there,
+        // so value gap over 2·eps is ~2e-4·slope-scale)
+        assert!((c.cost(knee - eps) - c.cost(knee + eps)).abs() < 1e-3);
+        assert!((c.deriv(knee - eps) - c.deriv(knee + eps)).abs() < 1e-1);
+        // monotone increasing + convex well past capacity
+        let mut prev_c = 0.0;
+        let mut prev_d = 0.0;
+        for i in 0..200 {
+            let x = i as f64 * 0.1; // up to 2x capacity
+            let cc = c.cost(x);
+            let dd = c.deriv(x);
+            assert!(cc >= prev_c);
+            assert!(dd >= prev_d);
+            assert!(cc.is_finite() && dd.is_finite());
+            prev_c = cc;
+            prev_d = dd;
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let cases = [
+            CostFn::Linear { d: 3.0 },
+            CostFn::Queue { cap: 7.0 },
+            CostFn::Quadratic { a: 1.0, b: 0.5 },
+        ];
+        for c in cases {
+            for &x in &[0.1, 1.0, 3.0, 5.0] {
+                let h = 1e-6;
+                let fd = (c.cost(x + h) - c.cost(x - h)) / (2.0 * h);
+                let an = c.deriv(x);
+                assert!(
+                    (fd - an).abs() < 1e-4 * (1.0 + an.abs()),
+                    "{c:?} at {x}: fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deriv2_matches_finite_difference() {
+        let cases = [
+            CostFn::Linear { d: 3.0 },
+            CostFn::Queue { cap: 7.0 },
+            CostFn::Quadratic { a: 1.0, b: 0.5 },
+        ];
+        for c in cases {
+            for &x in &[0.1, 1.0, 3.0, 5.0] {
+                let h = 1e-5;
+                let fd = (c.deriv(x + h) - c.deriv(x - h)) / (2.0 * h);
+                let an = c.deriv2(x);
+                assert!(
+                    (fd - an).abs() < 1e-3 * (1.0 + an.abs()),
+                    "{c:?} at {x}: fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deriv2_finite_beyond_capacity() {
+        let c = CostFn::Queue { cap: 5.0 };
+        for &x in &[4.9, 5.0, 7.5, 10.0] {
+            assert!(c.deriv2(x).is_finite() && c.deriv2(x) > 0.0);
+        }
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(CostKind::parse("Queue").unwrap(), CostKind::Queue);
+        assert_eq!(CostKind::parse("linear").unwrap(), CostKind::Linear);
+        assert!(CostKind::parse("cubic").is_err());
+    }
+}

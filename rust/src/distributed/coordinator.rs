@@ -1,0 +1,505 @@
+//! Slot-synchronous coordinator (leader) for the distributed runtime.
+//!
+//! The coordinator plays two roles:
+//! * **environment** — it solves the true flow state each slot and hands
+//!   every node exactly the measurements it would obtain locally (out-link
+//!   marginals, own CPU marginal, own per-stage traffic);
+//! * **leader** — it paces slots, collects the per-node row updates, applies
+//!   the loop-safety net + renormalization, and exposes online knobs
+//!   (input-rate changes, link up/down) between slots.
+//!
+//! If the broadcast does not complete within `slot_timeout` (possible under
+//! peer-message loss), the slot is aborted and the strategy simply does not
+//! change that slot — the paper's "update may fail if broadcast completion
+//! time exceeds T" behaviour.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::app::Network;
+use crate::distributed::node::{NodeActor, NodeConfig, StageMeta};
+use crate::distributed::transport::{Fabric, LossyConfig, NetMsg, Reply, SlotData};
+use crate::flow::FlowState;
+use crate::strategy::Strategy;
+
+/// Outcome of one slot.
+#[derive(Clone, Debug)]
+pub struct SlotOutcome {
+    pub seq: u64,
+    /// Aggregate cost at the *start* of the slot (the state nodes measured).
+    pub cost: f64,
+    /// Whether the update was applied (false = aborted/skipped slot).
+    pub applied: bool,
+    /// Stages reverted by the loop-safety net.
+    pub reverted_stages: usize,
+}
+
+/// Configuration for a cluster run.
+#[derive(Clone, Debug)]
+pub struct ClusterOptions {
+    pub alpha: f64,
+    /// Wall-clock budget per slot before aborting (the paper's T).
+    pub slot_timeout: Duration,
+    /// Optional peer-message loss injection.
+    pub lossy: Option<LossyConfig>,
+    /// Leader-paced trust region: if an applied slot increases the aggregate
+    /// cost, the leader rejects it (nodes revert) and halves the effective
+    /// stepsize; repeated successes grow it back toward `alpha`. This is the
+    /// distributed analogue of the centralized optimizer's backtracking and
+    /// is what "sufficiently small stepsize" (Theorem 2) needs in heavily
+    /// saturated regimes. Disable for bit-parity with the non-backtracking
+    /// centralized optimizer.
+    pub adaptive: bool,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            alpha: 0.1,
+            slot_timeout: Duration::from_secs(5),
+            lossy: None,
+            adaptive: true,
+        }
+    }
+}
+
+/// A running cluster of node actors plus the leader-side state.
+pub struct Cluster {
+    net: Network,
+    /// Leader's mirror of the global strategy (assembled from node replies).
+    pub phi: Strategy,
+    fabric: Arc<Fabric>,
+    reply_rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    opts: ClusterOptions,
+    seq: u64,
+    /// current trust-region stepsize
+    cur_alpha: f64,
+    /// consecutive accepted slots (drives stepsize regrowth)
+    streak: u32,
+    /// consecutive rejected slots (escape hatch: the zero-traffic row snap
+    /// is stepsize-independent, so a transiently cost-increasing update must
+    /// eventually be accepted — exactly like the centralized optimizer's
+    /// bounded backtracking)
+    rejects: u32,
+}
+
+impl Cluster {
+    /// Spawn one actor thread per node, seeded with `phi0`.
+    pub fn spawn(net: Network, phi0: Strategy, opts: ClusterOptions) -> Cluster {
+        let n = net.n();
+        let ns = net.num_stages();
+        let (fabric, mut receivers) = Fabric::new(n, opts.lossy.clone());
+        let (reply_tx, reply_rx): (Sender<Reply>, Receiver<Reply>) = channel();
+
+        // static stage metadata (per node: own comp weight differs)
+        let mut handles = Vec::with_capacity(n);
+        for id in (0..n).rev() {
+            let rx = receivers.pop().expect("one receiver per node");
+            let mut stage_meta = Vec::with_capacity(ns);
+            for (s, (a, k)) in net.stages.iter() {
+                let app = &net.apps[a];
+                stage_meta.push(StageMeta {
+                    app: a,
+                    k,
+                    is_final: k == app.num_tasks,
+                    dest: app.dest,
+                    packet_size: app.packet_sizes[k],
+                    comp_weight: net.comp_weight[s][id],
+                    next: (k < app.num_tasks).then(|| net.stages.id(a, k + 1)),
+                    prev: (k > 0).then(|| net.stages.id(a, k - 1)),
+                });
+            }
+            let mut support = vec![vec![false; n + 1]; ns];
+            for (s, row) in support.iter_mut().enumerate() {
+                for &j in net.graph.out_neighbors(id) {
+                    row[j] = true;
+                }
+                if !net.is_final_stage(s) {
+                    row[n] = true;
+                }
+            }
+            let phi_rows: Vec<Vec<f64>> =
+                (0..ns).map(|s| phi0.row(s, id).to_vec()).collect();
+            let cfg = NodeConfig {
+                id,
+                n,
+                alpha: opts.alpha,
+                out_neighbors: net.graph.out_neighbors(id).to_vec(),
+                in_neighbors: net.graph.in_neighbors(id).to_vec(),
+                stage_meta,
+                support,
+                phi_rows,
+            };
+            let actor = NodeActor::new(cfg, Arc::clone(&fabric), rx, reply_tx.clone());
+            handles.push(std::thread::spawn(move || actor.run()));
+        }
+
+        let cur_alpha = opts.alpha;
+        Cluster {
+            net,
+            phi: phi0,
+            fabric,
+            reply_rx,
+            handles,
+            opts,
+            seq: 0,
+            cur_alpha,
+            streak: 0,
+            rejects: 0,
+        }
+    }
+
+    /// Reference to the environment network (rates, topology).
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Online adaptation: change an application's exogenous input rate. The
+    /// next slot's measurements reflect it automatically.
+    pub fn set_input_rate(&mut self, app: usize, node: usize, rate: f64) {
+        self.net.apps[app].input_rates[node] = rate;
+    }
+
+    /// Peer-message drop count (fault-injection observability).
+    pub fn dropped_messages(&self) -> usize {
+        self.fabric.dropped_count()
+    }
+
+    /// Run one slot. Returns the outcome; `phi` reflects the applied update.
+    pub fn run_slot(&mut self) -> SlotOutcome {
+        self.seq += 1;
+        let seq = self.seq;
+        let fs = FlowState::solve(&self.net, &self.phi).expect("loop-free invariant");
+        let cost = fs.total_cost;
+        let n = self.net.n();
+        let ns = self.net.num_stages();
+
+        // 1. distribute local measurements
+        for id in 0..n {
+            let mut link_marginal = vec![0.0; n];
+            for &j in self.net.graph.out_neighbors(id) {
+                let e = self.net.graph.edge_id(id, j).unwrap();
+                link_marginal[j] = fs.link_marginal[e];
+            }
+            let traffic = (0..ns).map(|s| fs.traffic[s][id]).collect();
+            self.fabric.send_control(
+                id,
+                NetMsg::SlotStart(SlotData {
+                    seq,
+                    link_marginal,
+                    comp_marginal: fs.comp_marginal[id],
+                    traffic,
+                    alpha: self.cur_alpha,
+                }),
+            );
+        }
+
+        // 2. collect replies (rows or skipped) until all nodes answered
+        let mut rows: Vec<Option<Vec<Vec<f64>>>> = vec![None; n];
+        let mut answered = 0usize;
+        let mut any_skipped = false;
+        let mut aborted = false;
+        let deadline = std::time::Instant::now() + self.opts.slot_timeout;
+        while answered < n {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            match self.reply_rx.recv_timeout(left.max(Duration::from_millis(1))) {
+                Ok(Reply::Rows { seq: s, node, rows: r }) if s == seq => {
+                    if rows[node].is_none() {
+                        rows[node] = Some(r);
+                        answered += 1;
+                    }
+                }
+                Ok(Reply::Skipped { seq: s, node }) if s == seq => {
+                    if rows[node].is_none() {
+                        rows[node] = Some(Vec::new()); // marker: skipped
+                        answered += 1;
+                        any_skipped = true;
+                    }
+                }
+                Ok(_) => {} // stale reply from an older slot
+                Err(RecvTimeoutError::Timeout) => {
+                    if !aborted {
+                        aborted = true;
+                        for id in 0..n {
+                            self.fabric.send_control(id, NetMsg::AbortSlot { seq });
+                        }
+                        // extend deadline a little so aborts can be acked
+                    }
+                    if std::time::Instant::now() > deadline + self.opts.slot_timeout {
+                        panic!("cluster wedged: {answered}/{n} replies for slot {seq}");
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("all node actors died");
+                }
+            }
+        }
+
+        if aborted || any_skipped {
+            // keep the old strategy; nodes that DID update must be resynced.
+            // Simplest consistent policy: re-seed every node's rows from the
+            // leader mirror next slot via a fresh SlotStart is not enough
+            // (rows live on nodes) — instead we accept the partial updates
+            // only if *all* nodes updated; otherwise roll forward nodes'
+            // rows into the mirror where available and renormalize.
+            let mut applied_any = false;
+            for (id, r) in rows.iter().enumerate() {
+                if let Some(r) = r {
+                    if !r.is_empty() {
+                        for s in 0..ns {
+                            self.phi.row_mut(s, id).copy_from_slice(&r[s]);
+                        }
+                        applied_any = true;
+                    }
+                }
+            }
+            let reverted = self.apply_safety_net();
+            self.phi.renormalize(&self.net);
+            return SlotOutcome {
+                seq,
+                cost,
+                applied: applied_any,
+                reverted_stages: reverted,
+            };
+        }
+
+        // 3. assemble the new strategy
+        let prev_phi = if self.opts.adaptive {
+            Some(self.phi.clone())
+        } else {
+            None
+        };
+        for (id, r) in rows.into_iter().enumerate() {
+            let r = r.expect("all answered");
+            for s in 0..ns {
+                self.phi.row_mut(s, id).copy_from_slice(&r[s]);
+            }
+        }
+        let reverted = self.apply_safety_net();
+        self.phi.renormalize(&self.net);
+
+        // 4. trust region: reject cost-increasing slots, shrink the step
+        if let Some(prev_phi) = prev_phi {
+            let new_cost = FlowState::solve(&self.net, &self.phi)
+                .map(|f| f.total_cost)
+                .unwrap_or(f64::INFINITY);
+            if new_cost > cost + 1e-12 && self.rejects < 6 && new_cost.is_finite() {
+                // reject: nodes revert, mirror restored, alpha halves
+                self.phi = prev_phi;
+                for id in 0..n {
+                    self.fabric.send_control(id, NetMsg::Revert { seq });
+                }
+                // drain the n acks (reliable channel, so a plain count works)
+                let mut acks = 0;
+                while acks < n {
+                    match self.reply_rx.recv_timeout(self.opts.slot_timeout) {
+                        Ok(Reply::Skipped { seq: s, .. }) if s == seq => acks += 1,
+                        Ok(_) => {}
+                        Err(_) => panic!("revert acks lost"),
+                    }
+                }
+                self.cur_alpha = (self.cur_alpha * 0.5).max(1e-6);
+                self.streak = 0;
+                self.rejects += 1;
+                return SlotOutcome {
+                    seq,
+                    cost,
+                    applied: false,
+                    reverted_stages: reverted,
+                };
+            }
+            self.rejects = 0;
+            self.streak += 1;
+            if self.streak >= 5 && self.cur_alpha < self.opts.alpha {
+                self.cur_alpha = (self.cur_alpha * 2.0).min(self.opts.alpha);
+                self.streak = 0;
+            }
+        }
+        SlotOutcome {
+            seq,
+            cost,
+            applied: true,
+            reverted_stages: reverted,
+        }
+    }
+
+    /// Loop-safety net: revert any stage whose assembled update closed a
+    /// routing loop (cannot happen per the blocking argument; guaranteed
+    /// here). Returns the number of reverted stages. NOTE: on revert the
+    /// node-side rows diverge from the mirror for that stage; the next
+    /// slot's updates are row-local, so the mirror remains authoritative —
+    /// we push the reverted rows back to the affected nodes' state by
+    /// re-seeding at the next topology change only. In practice reverts do
+    /// not occur (asserted in tests).
+    fn apply_safety_net(&mut self) -> usize {
+        // We need the previous mirror to revert; keep it cheap by detecting
+        // loops and rebuilding those stages from a shortest-path fallback.
+        let mut reverted = 0;
+        for s in 0..self.net.num_stages() {
+            if self.phi.topo_order(s).is_none() {
+                reverted += 1;
+                let dest = self.net.dest_of_stage(s);
+                let (_d, next) = self.net.graph.dijkstra_to(dest, |_| 1.0);
+                let is_final = self.net.is_final_stage(s);
+                for i in 0..self.net.n() {
+                    let row = self.phi.row_mut(s, i);
+                    row.iter_mut().for_each(|v| *v = 0.0);
+                    if i == dest {
+                        if !is_final {
+                            let n = self.net.n();
+                            row[n] = 1.0;
+                        }
+                    } else {
+                        row[next[i]] = 1.0;
+                    }
+                }
+            }
+        }
+        reverted
+    }
+
+    /// Run `slots` slots; returns the cost at the start of each slot.
+    pub fn run(&mut self, slots: usize) -> Vec<SlotOutcome> {
+        (0..slots).map(|_| self.run_slot()).collect()
+    }
+
+    /// Current aggregate cost of the mirror strategy.
+    pub fn cost(&self) -> f64 {
+        FlowState::solve(&self.net, &self.phi).unwrap().total_cost
+    }
+
+    /// Graceful shutdown.
+    pub fn shutdown(self) {
+        for id in 0..self.net.n() {
+            self.fabric.send_control(id, NetMsg::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::gp::{GpOptions, GradientProjection};
+    use crate::testutil::small_net;
+
+    #[test]
+    fn distributed_matches_centralized_gp() {
+        let net = small_net(true);
+        let phi0 = Strategy::shortest_path_to_dest(&net);
+        let alpha = 0.1;
+
+        // centralized reference without backtracking
+        let mut gp = GradientProjection::with_strategy(
+            &net,
+            phi0.clone(),
+            GpOptions {
+                alpha,
+                backtrack: false,
+                ..Default::default()
+            },
+        );
+
+        let mut cluster = Cluster::spawn(
+            net.clone(),
+            phi0,
+            ClusterOptions {
+                alpha,
+                adaptive: false, // exact parity with non-backtracking GP
+                ..Default::default()
+            },
+        );
+
+        for slot in 0..25 {
+            let out = cluster.run_slot();
+            assert!(out.applied);
+            assert_eq!(out.reverted_stages, 0);
+            gp.step(&net);
+            let diff = cluster.phi.max_diff(&gp.phi);
+            assert!(
+                diff < 1e-9,
+                "slot {slot}: distributed and centralized diverged by {diff}"
+            );
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn distributed_cost_descends() {
+        let net = small_net(true);
+        let phi0 = Strategy::shortest_path_to_dest(&net);
+        let mut cluster = Cluster::spawn(net, phi0, ClusterOptions::default());
+        let outcomes = cluster.run(40);
+        let first = outcomes.first().unwrap().cost;
+        let last = cluster.cost();
+        assert!(
+            last < first * 0.9,
+            "no meaningful descent: {first} -> {last}"
+        );
+        // monotone within tolerance
+        for w in outcomes.windows(2) {
+            assert!(w[1].cost <= w[0].cost + 1e-6);
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn online_rate_change_is_tracked() {
+        let net = small_net(true);
+        let phi0 = Strategy::shortest_path_to_dest(&net);
+        let mut cluster = Cluster::spawn(net, phi0, ClusterOptions::default());
+        cluster.run(30);
+        let settled = cluster.cost();
+        // triple the input rate at node 0 mid-run
+        cluster.set_input_rate(0, 0, 3.0);
+        let bumped = cluster.cost();
+        assert!(bumped > settled);
+        cluster.run(400);
+        let readapted = cluster.cost();
+        // must re-converge to the optimum of the NEW rates: compare against
+        // a fresh centralized solve on the bumped network
+        let mut net2 = cluster.network().clone();
+        net2.apps[0].input_rates[0] = 3.0;
+        let mut gp = GradientProjection::new(&net2, GpOptions::default());
+        let opt = gp.run(&net2, 3000).final_cost;
+        assert!(
+            readapted <= opt * 1.02 + 1e-9,
+            "distributed readapted {readapted} vs fresh optimum {opt}"
+        );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn lossy_peers_cause_skipped_slots_not_corruption() {
+        let net = small_net(true);
+        let phi0 = Strategy::shortest_path_to_dest(&net);
+        let mut cluster = Cluster::spawn(
+            net.clone(),
+            phi0,
+            ClusterOptions {
+                alpha: 0.1,
+                slot_timeout: Duration::from_millis(300),
+                lossy: Some(LossyConfig {
+                    drop_prob: 0.02,
+                    seed: 4,
+                }),
+                adaptive: true,
+            },
+        );
+        let mut costs = Vec::new();
+        for _ in 0..15 {
+            let out = cluster.run_slot();
+            costs.push(out.cost);
+            // the mirror must stay feasible and loop-free at all times
+            cluster.phi.validate(&net).unwrap();
+            assert!(!cluster.phi.has_loop());
+        }
+        assert!(cluster.dropped_messages() > 0, "loss injection inactive");
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,19 @@
+//! Distributed runtime: the Section-IV protocol over real threads.
+//!
+//! * [`transport`] — per-node channels, control vs (lossy-injectable) peer
+//!   planes;
+//! * [`node`] — per-node actor: broadcast participation + local GP update
+//!   from strictly local information;
+//! * [`coordinator`] — slot-paced leader/environment with abort-on-timeout
+//!   and online adaptation knobs.
+//!
+//! The distributed iterates are bit-compatible with the centralized
+//! [`crate::algo::gp::GradientProjection`] (tested), so every optimality
+//! result carries over.
+
+pub mod coordinator;
+pub mod node;
+pub mod transport;
+
+pub use coordinator::{Cluster, ClusterOptions, SlotOutcome};
+pub use transport::LossyConfig;

@@ -1,0 +1,371 @@
+//! Per-node actor: owns its φ rows, participates in the Section-IV marginal
+//! broadcast, and performs its local eq. (8)–(10) update.
+//!
+//! A node only ever touches information it could obtain locally in a real
+//! deployment: its own measurements (link marginals on out-links, CPU
+//! marginal, own traffic), values received from neighbors, and its own rows.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use crate::algo::gp::gp_row_update;
+use crate::distributed::transport::{Fabric, NetMsg, PeerMsg, Reply, SlotData};
+use crate::marginals::INF_MARGINAL;
+use crate::strategy::{renormalize_row, PHI_EPS};
+
+/// Static per-stage metadata a node needs (shipped once at spawn).
+#[derive(Clone, Debug)]
+pub struct StageMeta {
+    pub app: usize,
+    pub k: usize,
+    pub is_final: bool,
+    /// Destination node of the stage's application.
+    pub dest: usize,
+    /// L_(a,k).
+    pub packet_size: f64,
+    /// w_i(a,k) at THIS node.
+    pub comp_weight: f64,
+    /// Stage id of (a, k+1), if any.
+    pub next: Option<usize>,
+    /// Stage id of (a, k-1), if any.
+    pub prev: Option<usize>,
+}
+
+/// Static node configuration.
+#[derive(Clone, Debug)]
+pub struct NodeConfig {
+    pub id: usize,
+    pub n: usize,
+    pub alpha: f64,
+    pub out_neighbors: Vec<usize>,
+    pub in_neighbors: Vec<usize>,
+    pub stage_meta: Vec<StageMeta>,
+    /// Support mask rows: [stage][n+1].
+    pub support: Vec<Vec<bool>>,
+    /// Initial φ rows: [stage][n+1].
+    pub phi_rows: Vec<Vec<f64>>,
+}
+
+/// Per-slot broadcast state.
+struct SlotState {
+    seq: u64,
+    data: SlotData,
+    /// received d_dt from out-neighbor j for stage s: [s][j]
+    nbr_ddt: Vec<Vec<Option<f64>>>,
+    nbr_dirty: Vec<Vec<bool>>,
+    /// own values
+    own_ddt: Vec<Option<f64>>,
+    own_dirty: Vec<bool>,
+    /// outstanding downstream values per stage
+    pending_downstream: Vec<usize>,
+    /// total messages received per stage (completion needs out_degree)
+    received: Vec<usize>,
+    replied: bool,
+}
+
+/// The node actor. Drive it with [`NodeActor::run`] on a dedicated thread.
+pub struct NodeActor {
+    cfg: NodeConfig,
+    fabric: Arc<Fabric>,
+    rx: Receiver<NetMsg>,
+    reply_tx: std::sync::mpsc::Sender<Reply>,
+    /// φ rows, persisted across slots: [stage][n+1].
+    rows: Vec<Vec<f64>>,
+    /// Pre-update rows of the most recent applied slot + its seq, kept so
+    /// the leader can reject a slot (trust-region revert).
+    undo: Option<(u64, Vec<Vec<f64>>)>,
+}
+
+impl NodeActor {
+    pub fn new(
+        cfg: NodeConfig,
+        fabric: Arc<Fabric>,
+        rx: Receiver<NetMsg>,
+        reply_tx: std::sync::mpsc::Sender<Reply>,
+    ) -> Self {
+        let rows = cfg.phi_rows.clone();
+        NodeActor {
+            cfg,
+            fabric,
+            rx,
+            reply_tx,
+            rows,
+            undo: None,
+        }
+    }
+
+    /// Main loop: blocks on the inbox until Shutdown.
+    pub fn run(mut self) {
+        let mut slot: Option<SlotState> = None;
+        // Peer marginals can outrun our own SlotStart (peers race ahead);
+        // stash them and replay once the slot opens.
+        let mut stash: Vec<PeerMsg> = Vec::new();
+        loop {
+            let msg = match self.rx.recv() {
+                Ok(m) => m,
+                Err(_) => return, // coordinator gone
+            };
+            match msg {
+                NetMsg::Shutdown => return,
+                NetMsg::SlotStart(data) => {
+                    let seq = data.seq;
+                    let mut st = self.fresh_slot(data);
+                    self.kickoff(&mut st);
+                    // replay early arrivals for this slot, drop stale ones
+                    let replay: Vec<PeerMsg> = {
+                        stash.retain(|m| m.seq >= seq);
+                        stash.drain(..).collect()
+                    };
+                    for pm in replay {
+                        if pm.seq == seq {
+                            self.handle_marginal(&mut st, pm);
+                        } else {
+                            stash.push(pm); // future slot (cannot happen today)
+                        }
+                    }
+                    self.try_finish(&mut st);
+                    slot = Some(st);
+                }
+                NetMsg::Revert { seq } => {
+                    if let Some((useq, prev)) = self.undo.take() {
+                        if useq == seq {
+                            self.rows = prev;
+                        } else {
+                            self.undo = Some((useq, prev));
+                        }
+                    }
+                    let _ = self.reply_tx.send(Reply::Skipped {
+                        seq,
+                        node: self.cfg.id,
+                    });
+                }
+                NetMsg::AbortSlot { seq } => {
+                    let skip = match &slot {
+                        Some(st) if st.seq == seq && !st.replied => true,
+                        _ => false,
+                    };
+                    if skip {
+                        if let Some(st) = &mut slot {
+                            st.replied = true;
+                        }
+                        let _ = self.reply_tx.send(Reply::Skipped {
+                            seq,
+                            node: self.cfg.id,
+                        });
+                    }
+                    // stale aborts are ignored
+                }
+                NetMsg::Marginal(pm) => {
+                    let current = slot.as_ref().map(|st| st.seq);
+                    match current {
+                        Some(seq) if pm.seq == seq => {
+                            let mut st = slot.take().unwrap();
+                            if !st.replied {
+                                self.handle_marginal(&mut st, pm);
+                                self.try_finish(&mut st);
+                            }
+                            slot = Some(st);
+                        }
+                        Some(seq) if pm.seq > seq => stash.push(pm),
+                        None => stash.push(pm),
+                        _ => {} // straggler from an aborted/old slot
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record one peer marginal and run the readiness cascade.
+    fn handle_marginal(&mut self, st: &mut SlotState, pm: PeerMsg) {
+        let s = pm.stage;
+        let j = pm.from;
+        if st.nbr_ddt[s][j].is_none() {
+            st.nbr_ddt[s][j] = Some(pm.d_dt);
+            st.nbr_dirty[s][j] = pm.dirty;
+            st.received[s] += 1;
+            if self.rows[s][j] > PHI_EPS && st.own_ddt[s].is_none() {
+                st.pending_downstream[s] -= 1;
+            }
+            self.cascade(st, s);
+        }
+    }
+
+    fn fresh_slot(&self, data: SlotData) -> SlotState {
+        let ns = self.cfg.stage_meta.len();
+        let n = self.cfg.n;
+        let mut pending = vec![0usize; ns];
+        for s in 0..ns {
+            pending[s] = (0..n).filter(|&j| self.rows[s][j] > PHI_EPS).count();
+        }
+        SlotState {
+            seq: data.seq,
+            data,
+            nbr_ddt: vec![vec![None; n]; ns],
+            nbr_dirty: vec![vec![false; n]; ns],
+            own_ddt: vec![None; ns],
+            own_dirty: vec![false; ns],
+            pending_downstream: pending,
+            received: vec![0; ns],
+            replied: false,
+        }
+    }
+
+    /// Compute every stage that is ready at slot start (no downstream
+    /// dependencies), final stages first so CPU terms are available.
+    fn kickoff(&mut self, st: &mut SlotState) {
+        // process stages in reverse chain order per app: final stages first
+        let mut order: Vec<usize> = (0..self.cfg.stage_meta.len()).collect();
+        order.sort_by_key(|&s| std::cmp::Reverse(self.cfg.stage_meta[s].k));
+        for s in order {
+            self.try_compute(st, s);
+        }
+    }
+
+    /// Try to compute stage s; on success, cascade to the previous stage of
+    /// the same app (its CPU term just became available).
+    fn cascade(&mut self, st: &mut SlotState, s: usize) {
+        if self.try_compute(st, s) {
+            let mut cur = self.cfg.stage_meta[s].prev;
+            while let Some(p) = cur {
+                if self.try_compute(st, p) {
+                    cur = self.cfg.stage_meta[p].prev;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// eq. (4a)/(4b) for one stage, if all inputs are present.
+    fn try_compute(&mut self, st: &mut SlotState, s: usize) -> bool {
+        if st.own_ddt[s].is_some() {
+            return false;
+        }
+        let meta = &self.cfg.stage_meta[s];
+        if st.pending_downstream[s] > 0 {
+            return false;
+        }
+        if !meta.is_final {
+            let next = meta.next.expect("non-final stage has next");
+            if st.own_ddt[next].is_none() {
+                return false;
+            }
+        }
+        let n = self.cfg.n;
+        let row = &self.rows[s];
+        let mut acc = 0.0;
+        let mut dirty = false;
+        for j in 0..n {
+            let p = row[j];
+            if p > PHI_EPS {
+                let v = st.nbr_ddt[s][j].expect("pending_downstream == 0");
+                acc += p * (meta.packet_size * st.data.link_marginal[j] + v);
+                if st.nbr_dirty[s][j] {
+                    dirty = true;
+                }
+            }
+        }
+        if !meta.is_final && row[n] > PHI_EPS {
+            let next = meta.next.unwrap();
+            acc += row[n]
+                * (meta.comp_weight * st.data.comp_marginal
+                    + st.own_ddt[next].unwrap());
+        }
+        if !dirty {
+            for j in 0..n {
+                if row[j] > PHI_EPS && st.nbr_ddt[s][j].unwrap() > acc + 1e-15 {
+                    dirty = true;
+                    break;
+                }
+            }
+        }
+        st.own_ddt[s] = Some(acc);
+        st.own_dirty[s] = dirty;
+        // broadcast to ALL in-neighbors
+        for &j in &self.cfg.in_neighbors {
+            self.fabric.send_peer(
+                j,
+                PeerMsg {
+                    seq: st.seq,
+                    from: self.cfg.id,
+                    stage: s,
+                    d_dt: acc,
+                    dirty,
+                },
+            );
+        }
+        true
+    }
+
+    /// If the broadcast is complete (all own stages computed, all
+    /// out-neighbor values received for every stage), run the local update
+    /// and reply to the coordinator.
+    fn try_finish(&mut self, st: &mut SlotState) {
+        if st.replied {
+            return;
+        }
+        let ns = self.cfg.stage_meta.len();
+        let deg = self.cfg.out_neighbors.len();
+        let complete = (0..ns).all(|s| st.own_ddt[s].is_some() && st.received[s] == deg);
+        if !complete {
+            return;
+        }
+        self.undo = Some((st.seq, self.rows.clone()));
+        self.local_update(st);
+        st.replied = true;
+        let _ = self.reply_tx.send(Reply::Rows {
+            seq: st.seq,
+            node: self.cfg.id,
+            rows: self.rows.clone(),
+        });
+    }
+
+    /// Local eq. (8)–(10) update on every owned row.
+    fn local_update(&mut self, st: &SlotState) {
+        let n = self.cfg.n;
+        for s in 0..self.cfg.stage_meta.len() {
+            let meta = &self.cfg.stage_meta[s];
+            if meta.is_final && self.cfg.id == meta.dest {
+                continue; // exit row
+            }
+            let own = st.own_ddt[s].unwrap();
+            // δ row (eq. 7), dense n+1
+            let mut drow = vec![INF_MARGINAL; n + 1];
+            for &j in &self.cfg.out_neighbors {
+                let v = st.nbr_ddt[s][j].expect("complete slot");
+                drow[j] = meta.packet_size * st.data.link_marginal[j] + v;
+            }
+            if !meta.is_final {
+                let next = meta.next.unwrap();
+                drow[n] = meta.comp_weight * st.data.comp_marginal
+                    + st.own_ddt[next].unwrap();
+            }
+            let support = &self.cfg.support[s];
+            let nbr_ddt = &st.nbr_ddt[s];
+            let nbr_dirty = &st.nbr_dirty[s];
+            let usable = |j: usize| -> bool {
+                if !support[j] || drow[j] >= INF_MARGINAL {
+                    return false;
+                }
+                if j < n {
+                    // blocked-set test from purely local + piggybacked info
+                    let v = nbr_ddt[j].unwrap();
+                    if v > own + 1e-15 || nbr_dirty[j] {
+                        return false;
+                    }
+                }
+                true
+            };
+            gp_row_update(
+                &mut self.rows[s],
+                &drow,
+                usable,
+                st.data.traffic[s],
+                st.data.alpha,
+            );
+            // same row-local renormalization the leader's mirror applies, so
+            // node state and mirror stay bit-identical
+            renormalize_row(&mut self.rows[s], 1.0);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! In-process message transport for the distributed runtime.
+//!
+//! Every node owns one `mpsc::Receiver`; peers and the coordinator hold
+//! cloned `Sender`s. Peer (marginal-broadcast) traffic can be made lossy for
+//! failure-injection tests — coordinator⇄node control traffic is always
+//! reliable, matching the paper's assumption of an out-of-band control
+//! channel whose *completion time* (not integrity) is the failure mode.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::Rng;
+
+/// A marginal-cost broadcast message between peers (tagged with the slot
+/// sequence number so stragglers from aborted slots are discarded).
+#[derive(Clone, Debug)]
+pub struct PeerMsg {
+    pub seq: u64,
+    pub from: usize,
+    pub stage: usize,
+    pub d_dt: f64,
+    pub dirty: bool,
+}
+
+/// Local measurements handed to a node at the start of each slot (what the
+/// node would measure on its own links/CPU in a real deployment).
+#[derive(Clone, Debug)]
+pub struct SlotData {
+    pub seq: u64,
+    /// D'_ij(F_ij) for each out-link, dense by neighbor id (n entries,
+    /// unused ids are 0).
+    pub link_marginal: Vec<f64>,
+    /// C'_i(G_i).
+    pub comp_marginal: f64,
+    /// Own traffic t_i(a,k) per stage.
+    pub traffic: Vec<f64>,
+    /// Stepsize for this slot (leader-paced trust region).
+    pub alpha: f64,
+}
+
+/// Everything a node can receive.
+#[derive(Clone, Debug)]
+pub enum NetMsg {
+    SlotStart(SlotData),
+    Marginal(PeerMsg),
+    /// Slot `seq` failed (broadcast did not complete in time): discard
+    /// partial state, keep the old strategy, acknowledge.
+    AbortSlot { seq: u64 },
+    /// The leader rejected slot `seq`'s update (cost increased): restore the
+    /// pre-update rows, acknowledge with `Reply::Skipped`.
+    Revert { seq: u64 },
+    Shutdown,
+}
+
+/// A node's reply to the coordinator at the end of a slot.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    /// Updated φ rows (one per stage, each of length n+1).
+    Rows {
+        seq: u64,
+        node: usize,
+        rows: Vec<Vec<f64>>,
+    },
+    /// Slot skipped after an abort.
+    Skipped { seq: u64, node: usize },
+}
+
+/// Fault injection for peer traffic.
+#[derive(Clone, Debug)]
+pub struct LossyConfig {
+    /// Probability that any single peer message is silently dropped.
+    pub drop_prob: f64,
+    pub seed: u64,
+}
+
+/// Peer-send fabric shared by all node threads.
+pub struct Fabric {
+    senders: Vec<Sender<NetMsg>>,
+    lossy: Option<Mutex<(Rng, f64)>>,
+    /// Count of dropped peer messages (observability for tests).
+    dropped: std::sync::atomic::AtomicUsize,
+}
+
+impl Fabric {
+    /// Create receivers + fabric for `n` nodes.
+    pub fn new(n: usize, lossy: Option<LossyConfig>) -> (Arc<Fabric>, Vec<Receiver<NetMsg>>) {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let fabric = Fabric {
+            senders,
+            lossy: lossy.map(|c| Mutex::new((Rng::new(c.seed), c.drop_prob))),
+            dropped: std::sync::atomic::AtomicUsize::new(0),
+        };
+        (Arc::new(fabric), receivers)
+    }
+
+    /// Reliable control-plane send (coordinator -> node).
+    pub fn send_control(&self, to: usize, msg: NetMsg) {
+        // A send error means the node already shut down; ignore.
+        let _ = self.senders[to].send(msg);
+    }
+
+    /// Peer data-plane send; may drop under fault injection.
+    pub fn send_peer(&self, to: usize, msg: PeerMsg) {
+        if let Some(lock) = &self.lossy {
+            let mut g = lock.lock().unwrap();
+            let (rng, p) = &mut *g;
+            let drop = rng.bool(*p);
+            if drop {
+                self.dropped
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return;
+            }
+        }
+        let _ = self.senders[to].send(NetMsg::Marginal(msg));
+    }
+
+    /// How many peer messages have been dropped so far.
+    pub fn dropped_count(&self) -> usize {
+        self.dropped.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reliable_fabric_delivers_everything() {
+        let (fab, rxs) = Fabric::new(2, None);
+        for k in 0..100 {
+            fab.send_peer(
+                1,
+                PeerMsg {
+                    seq: 0,
+                    from: 0,
+                    stage: k,
+                    d_dt: k as f64,
+                    dirty: false,
+                },
+            );
+        }
+        let got = rxs[1].try_iter().count();
+        assert_eq!(got, 100);
+        assert_eq!(fab.dropped_count(), 0);
+    }
+
+    #[test]
+    fn lossy_fabric_drops_roughly_p() {
+        let (fab, rxs) = Fabric::new(2, Some(LossyConfig { drop_prob: 0.3, seed: 9 }));
+        for k in 0..2000 {
+            fab.send_peer(
+                1,
+                PeerMsg {
+                    seq: 0,
+                    from: 0,
+                    stage: k,
+                    d_dt: 0.0,
+                    dirty: false,
+                },
+            );
+        }
+        let got = rxs[1].try_iter().count();
+        let dropped = fab.dropped_count();
+        assert_eq!(got + dropped, 2000);
+        assert!((dropped as f64 / 2000.0 - 0.3).abs() < 0.05, "{dropped}");
+    }
+
+    #[test]
+    fn control_plane_never_drops() {
+        let (fab, rxs) = Fabric::new(1, Some(LossyConfig { drop_prob: 1.0, seed: 1 }));
+        fab.send_control(0, NetMsg::Shutdown);
+        assert!(matches!(rxs[0].try_recv().unwrap(), NetMsg::Shutdown));
+    }
+}

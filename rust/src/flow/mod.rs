@@ -1,0 +1,334 @@
+//! Traffic fixed point and flow accounting.
+//!
+//! Given a feasible loop-free strategy φ, each stage's positive-φ link
+//! subgraph is a DAG, so the traffic recursion
+//!
+//! ```text
+//! t_i(a,0) = r_i(a)            + Σ_j t_j(a,0) φ_ji(a,0)
+//! t_i(a,k) = t_i(a,k-1) φ_i0(a,k-1) + Σ_j t_j(a,k) φ_ji(a,k)
+//! ```
+//!
+//! is solved exactly in one topological-order pass per stage, chaining stages
+//! of an application in order (CPU output of stage k injects into stage k+1).
+
+use crate::app::Network;
+use crate::strategy::{Strategy, PHI_EPS};
+
+/// Solver failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum FlowError {
+    #[error("strategy has a routing loop in stage {stage}")]
+    Loop { stage: usize },
+}
+
+/// Complete flow-level state of the network under a strategy.
+#[derive(Clone, Debug)]
+pub struct FlowState {
+    /// t_i(a,k): [stage][node] packet rate.
+    pub traffic: Vec<Vec<f64>>,
+    /// g_i(a,k): [stage][node] packets/sec offloaded to i's CPU.
+    pub cpu_pkt: Vec<Vec<f64>>,
+    /// f_ij(a,k): [stage][edge id] packets/sec on each link.
+    pub link_pkt: Vec<Vec<f64>>,
+    /// F_ij: total bits/sec per link.
+    pub link_flow: Vec<f64>,
+    /// G_i: total computation workload per node.
+    pub workload: Vec<f64>,
+    /// D'_ij(F_ij) per link.
+    pub link_marginal: Vec<f64>,
+    /// C'_i(G_i) per node.
+    pub comp_marginal: Vec<f64>,
+    /// Aggregate cost D(φ) = Σ D_ij(F_ij) + Σ C_i(G_i).
+    pub total_cost: f64,
+}
+
+impl FlowState {
+    /// Solve the traffic equations and accumulate flows/costs.
+    pub fn solve(net: &Network, phi: &Strategy) -> Result<FlowState, FlowError> {
+        let n = net.n();
+        let m = net.m();
+        let ns = net.num_stages();
+        let cpu = phi.cpu();
+
+        let mut traffic = vec![vec![0.0; n]; ns];
+        let mut cpu_pkt = vec![vec![0.0; n]; ns];
+        let mut link_pkt = vec![vec![0.0; m]; ns];
+        let mut link_flow = vec![0.0; m];
+        let mut workload = vec![0.0; n];
+
+        for (a, app) in net.apps.iter().enumerate() {
+            for k in 0..app.num_stages() {
+                let s = net.stages.id(a, k);
+                let order = phi.topo_order(s).ok_or(FlowError::Loop { stage: s })?;
+                // injection: exogenous (k = 0) or previous stage's CPU output
+                // (1:1 packet conversion).
+                {
+                    let t = &mut traffic[s];
+                    if k == 0 {
+                        for i in 0..n {
+                            t[i] = app.input_rates[i];
+                        }
+                    } else {
+                        let prev = net.stages.id(a, k - 1);
+                        for i in 0..n {
+                            t[i] = cpu_pkt[prev][i];
+                        }
+                    }
+                }
+                // propagate in topological order
+                let l = net.packet_size(s);
+                for &i in &order {
+                    let ti = traffic[s][i];
+                    if ti <= 0.0 {
+                        continue;
+                    }
+                    let row = phi.row(s, i);
+                    for (j, &p) in row.iter().enumerate().take(n) {
+                        if p > PHI_EPS {
+                            let e = net
+                                .graph
+                                .edge_id(i, j)
+                                .expect("validated strategy forwards only on links");
+                            let fpkt = ti * p;
+                            traffic[s][j] += fpkt;
+                            link_pkt[s][e] += fpkt;
+                            link_flow[e] += l * fpkt;
+                        }
+                    }
+                    let pc = row[cpu];
+                    if pc > PHI_EPS {
+                        let g = ti * pc;
+                        cpu_pkt[s][i] = g;
+                        workload[i] += net.comp_weight[s][i] * g;
+                    }
+                }
+            }
+        }
+
+        let mut total_cost = 0.0;
+        let mut link_marginal = vec![0.0; m];
+        for e in 0..m {
+            total_cost += net.link_cost[e].cost(link_flow[e]);
+            link_marginal[e] = net.link_cost[e].deriv(link_flow[e]);
+        }
+        let mut comp_marginal = vec![0.0; n];
+        for i in 0..n {
+            total_cost += net.comp_cost[i].cost(workload[i]);
+            comp_marginal[i] = net.comp_cost[i].deriv(workload[i]);
+        }
+
+        Ok(FlowState {
+            traffic,
+            cpu_pkt,
+            link_pkt,
+            link_flow,
+            workload,
+            link_marginal,
+            comp_marginal,
+            total_cost,
+        })
+    }
+
+    /// Flow-conservation residual: max over (stage, node) of
+    /// |inflow + injection − outflow| (outflow = t_i when row sums to 1).
+    /// Zero (up to float error) for any exactly-solved state.
+    pub fn conservation_residual(&self, net: &Network, phi: &Strategy) -> f64 {
+        let n = net.n();
+        let mut worst: f64 = 0.0;
+        for (s, (a, k)) in net.stages.iter() {
+            for i in 0..n {
+                let mut inflow = net.exo_rate(s, i);
+                if k > 0 {
+                    inflow += self.cpu_pkt[net.stages.id(a, k - 1)][i];
+                }
+                for &j in net.graph.in_neighbors(i) {
+                    let e = net.graph.edge_id(j, i).unwrap();
+                    inflow += self.link_pkt[s][e];
+                }
+                let row_sum: f64 = phi.row(s, i).iter().sum();
+                let outflow: f64 = self.traffic[s][i] * row_sum;
+                // For exit rows (sum 0), traffic leaves the network: no check
+                // beyond t_i being fully absorbed, which holds by definition.
+                let res = if row_sum > 0.5 {
+                    (inflow - self.traffic[s][i]).abs().max(
+                        (outflow - self.traffic[s][i] * row_sum).abs(),
+                    )
+                } else {
+                    (inflow - self.traffic[s][i]).abs()
+                };
+                worst = worst.max(res);
+            }
+        }
+        worst
+    }
+
+    /// Average number of link hops travelled by a packet of stage `s`
+    /// (total link packet-rate divided by total stage injection rate).
+    pub fn avg_hops(&self, net: &Network, s: usize) -> f64 {
+        let (a, k) = net.stages.app_k(s);
+        let inject: f64 = if k == 0 {
+            net.apps[a].input_rates.iter().sum()
+        } else {
+            self.cpu_pkt[net.stages.id(a, k - 1)].iter().sum()
+        };
+        if inject <= 0.0 {
+            return 0.0;
+        }
+        let hops: f64 = self.link_pkt[s].iter().sum();
+        hops / inject
+    }
+
+    /// Total exogenous input rate across all applications (packets/sec).
+    pub fn total_input(&self, net: &Network) -> f64 {
+        net.apps.iter().map(|a| a.total_input()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{Application, Network, StageRegistry};
+    use crate::cost::CostFn;
+    use crate::graph::Graph;
+    use crate::strategy::Strategy;
+
+    /// Path network 0 -> 1 -> 2, one app with 1 task, input at node 0,
+    /// destination node 2.
+    fn path_net(link_cost: CostFn, comp_cost: CostFn) -> Network {
+        let g = Graph::new(3, &[(0, 1), (1, 2), (1, 0), (2, 1)]).unwrap();
+        let apps = vec![Application {
+            dest: 2,
+            num_tasks: 1,
+            packet_sizes: vec![2.0, 1.0],
+            input_rates: vec![1.0, 0.0, 0.0],
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; 3]; stages.len()];
+        Network::new(
+            g.clone(),
+            apps,
+            vec![link_cost; g.m()],
+            vec![comp_cost; 3],
+            cw,
+        )
+        .unwrap()
+    }
+
+    /// Strategy: data 0->1, compute at 1, result 1->2.
+    fn compute_at_middle(net: &Network) -> Strategy {
+        let mut phi = Strategy::zeros(3, 2);
+        let s0 = net.stages.id(0, 0);
+        let s1 = net.stages.id(0, 1);
+        phi.set(s0, 0, 1, 1.0);
+        phi.set(s0, 1, phi.cpu(), 1.0);
+        phi.set(s0, 2, 1, 1.0); // no traffic, but row must sum to 1
+        phi.set(s1, 0, 1, 1.0);
+        phi.set(s1, 1, 2, 1.0);
+        // s1 at dest 2: exit row (zero)
+        phi
+    }
+
+    #[test]
+    fn hand_computed_flows() {
+        let net = path_net(CostFn::Linear { d: 1.0 }, CostFn::Linear { d: 1.0 });
+        let phi = compute_at_middle(&net);
+        phi.validate(&net).unwrap();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let s0 = net.stages.id(0, 0);
+        let s1 = net.stages.id(0, 1);
+        // stage 0: t = [1, 1, 0]; link (0,1) carries 1 pkt/s of size 2
+        assert!((fs.traffic[s0][0] - 1.0).abs() < 1e-12);
+        assert!((fs.traffic[s0][1] - 1.0).abs() < 1e-12);
+        assert_eq!(fs.traffic[s0][2], 0.0);
+        assert!((fs.cpu_pkt[s0][1] - 1.0).abs() < 1e-12);
+        // stage 1: injected at node 1 from CPU, forwarded to 2
+        assert!((fs.traffic[s1][1] - 1.0).abs() < 1e-12);
+        assert!((fs.traffic[s1][2] - 1.0).abs() < 1e-12);
+        let e01 = net.graph.edge_id(0, 1).unwrap();
+        let e12 = net.graph.edge_id(1, 2).unwrap();
+        assert!((fs.link_flow[e01] - 2.0).abs() < 1e-12); // L=2 × 1 pkt/s
+        assert!((fs.link_flow[e12] - 1.0).abs() < 1e-12); // L=1 × 1 pkt/s
+        assert!((fs.workload[1] - 1.0).abs() < 1e-12);
+        // D = F01 + F12 + G1 = 2 + 1 + 1 = 4
+        assert!((fs.total_cost - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_cost_evaluation() {
+        let net = path_net(CostFn::Queue { cap: 10.0 }, CostFn::Queue { cap: 5.0 });
+        let phi = compute_at_middle(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        // F01=2 -> 2/8, F12=1 -> 1/9, G1=1 -> 1/4
+        let want = 2.0 / 8.0 + 1.0 / 9.0 + 1.0 / 4.0;
+        assert!((fs.total_cost - want).abs() < 1e-12, "{}", fs.total_cost);
+    }
+
+    #[test]
+    fn split_forwarding_splits_flow() {
+        // diamond: 0->1->3, 0->2->3 plus reverses for connectivity
+        let g = Graph::bidirected(4, &[(0, 1), (1, 3), (0, 2), (2, 3)]).unwrap();
+        let apps = vec![Application {
+            dest: 3,
+            num_tasks: 0,
+            packet_sizes: vec![1.0],
+            input_rates: vec![2.0, 0.0, 0.0, 0.0],
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![0.0; 4]; stages.len()];
+        let net = Network::new(
+            g.clone(),
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; g.m()],
+            vec![CostFn::Linear { d: 1.0 }; 4],
+            cw,
+        )
+        .unwrap();
+        let mut phi = Strategy::zeros(4, 1);
+        phi.set(0, 0, 1, 0.25);
+        phi.set(0, 0, 2, 0.75);
+        phi.set(0, 1, 3, 1.0);
+        phi.set(0, 2, 3, 1.0);
+        // node 3 = dest of final (only) stage: exit row
+        phi.validate(&net).unwrap();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let e01 = net.graph.edge_id(0, 1).unwrap();
+        let e02 = net.graph.edge_id(0, 2).unwrap();
+        assert!((fs.link_flow[e01] - 0.5).abs() < 1e-12);
+        assert!((fs.link_flow[e02] - 1.5).abs() < 1e-12);
+        assert!((fs.traffic[0][3] - 2.0).abs() < 1e-12);
+        assert!(fs.conservation_residual(&net, &phi) < 1e-9);
+    }
+
+    #[test]
+    fn loop_is_detected() {
+        let net = path_net(CostFn::Linear { d: 1.0 }, CostFn::Linear { d: 1.0 });
+        let mut phi = compute_at_middle(&net);
+        let s0 = net.stages.id(0, 0);
+        // make 0 <-> 1 a cycle in stage 0
+        let r1 = phi.row_mut(s0, 1);
+        r1.iter_mut().for_each(|v| *v = 0.0);
+        phi.set(s0, 1, 0, 1.0);
+        assert!(matches!(
+            FlowState::solve(&net, &phi),
+            Err(FlowError::Loop { .. })
+        ));
+    }
+
+    #[test]
+    fn conservation_residual_zero_on_solved_state() {
+        let net = path_net(CostFn::Queue { cap: 20.0 }, CostFn::Queue { cap: 9.0 });
+        let phi = compute_at_middle(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        assert!(fs.conservation_residual(&net, &phi) < 1e-9);
+    }
+
+    #[test]
+    fn avg_hops_on_path() {
+        let net = path_net(CostFn::Linear { d: 1.0 }, CostFn::Linear { d: 1.0 });
+        let phi = compute_at_middle(&net);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        // data packets travel exactly 1 hop (0->1); results 1 hop (1->2)
+        assert!((fs.avg_hops(&net, net.stages.id(0, 0)) - 1.0).abs() < 1e-12);
+        assert!((fs.avg_hops(&net, net.stages.id(0, 1)) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,282 @@
+//! Directed network graph 𝒢 = (𝒱, ℰ).
+//!
+//! Nodes are dense indices `0..n`. Links are directed; every topology builder
+//! in [`topologies`] produces bidirected graphs (both (i,j) and (j,i)) as in
+//! the paper's evaluation, but the core structures support arbitrary digraphs.
+
+pub mod topologies;
+
+use std::collections::BTreeMap;
+
+/// A directed graph with O(1) edge-id lookup and adjacency lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+    /// (i,j) -> edge id
+    index: BTreeMap<(usize, usize), usize>,
+    /// dense n×n edge-id matrix (u32::MAX = no edge) — the hot-path lookup
+    /// (marginals/blocked-sets do S·n² of these per iteration; a BTreeMap
+    /// here was the top profile entry before this cache)
+    dense: Vec<u32>,
+    out: Vec<Vec<usize>>, // out-neighbors of i
+    inn: Vec<Vec<usize>>, // in-neighbors of i
+}
+
+const NO_EDGE: u32 = u32::MAX;
+
+impl Graph {
+    /// Build from a node count and a directed edge list. Duplicate edges and
+    /// self-loops are rejected.
+    pub fn new(n: usize, edge_list: &[(usize, usize)]) -> anyhow::Result<Self> {
+        let mut g = Graph {
+            n,
+            edges: Vec::with_capacity(edge_list.len()),
+            index: BTreeMap::new(),
+            dense: vec![NO_EDGE; n * n],
+            out: vec![Vec::new(); n],
+            inn: vec![Vec::new(); n],
+        };
+        for &(i, j) in edge_list {
+            anyhow::ensure!(i < n && j < n, "edge ({i},{j}) out of range (n={n})");
+            anyhow::ensure!(i != j, "self-loop ({i},{i})");
+            anyhow::ensure!(
+                !g.index.contains_key(&(i, j)),
+                "duplicate edge ({i},{j})"
+            );
+            let id = g.edges.len();
+            g.edges.push((i, j));
+            g.index.insert((i, j), id);
+            g.dense[i * n + j] = id as u32;
+            g.out[i].push(j);
+            g.inn[j].push(i);
+        }
+        Ok(g)
+    }
+
+    /// Bidirect an undirected edge list: {i,j} -> (i,j) and (j,i).
+    pub fn bidirected(n: usize, undirected: &[(usize, usize)]) -> anyhow::Result<Self> {
+        let mut es = Vec::with_capacity(undirected.len() * 2);
+        for &(i, j) in undirected {
+            es.push((i, j));
+            es.push((j, i));
+        }
+        Graph::new(n, &es)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+    pub fn edge(&self, id: usize) -> (usize, usize) {
+        self.edges[id]
+    }
+    #[inline]
+    pub fn edge_id(&self, i: usize, j: usize) -> Option<usize> {
+        let id = self.dense[i * self.n + j];
+        (id != NO_EDGE).then_some(id as usize)
+    }
+    #[inline]
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.dense[i * self.n + j] != NO_EDGE
+    }
+    pub fn out_neighbors(&self, i: usize) -> &[usize] {
+        &self.out[i]
+    }
+    pub fn in_neighbors(&self, i: usize) -> &[usize] {
+        &self.inn[i]
+    }
+    pub fn max_out_degree(&self) -> usize {
+        self.out.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Is the graph strongly connected? (Kosaraju-lite: forward+backward BFS.)
+    pub fn strongly_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        self.bfs_count(0, false) == self.n && self.bfs_count(0, true) == self.n
+    }
+
+    /// Is every node able to reach `dst`?
+    pub fn all_reach(&self, dst: usize) -> bool {
+        self.bfs_count(dst, true) == self.n
+    }
+
+    fn bfs_count(&self, src: usize, reverse: bool) -> usize {
+        let mut seen = vec![false; self.n];
+        let mut queue = vec![src];
+        seen[src] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop() {
+            let nbrs = if reverse { &self.inn[u] } else { &self.out[u] };
+            for &v in nbrs {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push(v);
+                }
+            }
+        }
+        count
+    }
+
+    /// Single-source shortest path tree by edge weights (Dijkstra).
+    /// Returns (dist, parent) where parent[src] = src.
+    pub fn dijkstra(&self, src: usize, weight: impl Fn(usize) -> f64) -> (Vec<f64>, Vec<usize>) {
+        use std::cmp::Ordering;
+        use std::collections::BinaryHeap;
+
+        #[derive(PartialEq)]
+        struct Item(f64, usize);
+        impl Eq for Item {}
+        impl PartialOrd for Item {
+            fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Item {
+            fn cmp(&self, o: &Self) -> Ordering {
+                // min-heap via reversed comparison on the f64 key
+                o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+            }
+        }
+
+        let mut dist = vec![f64::INFINITY; self.n];
+        let mut parent: Vec<usize> = (0..self.n).collect();
+        let mut heap = BinaryHeap::new();
+        dist[src] = 0.0;
+        heap.push(Item(0.0, src));
+        while let Some(Item(d, u)) = heap.pop() {
+            if d > dist[u] {
+                continue;
+            }
+            for &v in &self.out[u] {
+                let e = self.edge_id(u, v).unwrap();
+                let w = weight(e);
+                debug_assert!(w >= 0.0, "negative weight on edge {e}");
+                let nd = d + w;
+                if nd < dist[v] {
+                    dist[v] = nd;
+                    parent[v] = u;
+                    heap.push(Item(nd, v));
+                }
+            }
+        }
+        (dist, parent)
+    }
+
+    /// Shortest path distances *to* `dst` from every node (Dijkstra on the
+    /// reversed graph). Returns (dist, next_hop) where next_hop[dst] = dst.
+    pub fn dijkstra_to(&self, dst: usize, weight: impl Fn(usize) -> f64) -> (Vec<f64>, Vec<usize>) {
+        use std::cmp::Ordering;
+        use std::collections::BinaryHeap;
+
+        #[derive(PartialEq)]
+        struct Item(f64, usize);
+        impl Eq for Item {}
+        impl PartialOrd for Item {
+            fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Item {
+            fn cmp(&self, o: &Self) -> Ordering {
+                o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+            }
+        }
+
+        let mut dist = vec![f64::INFINITY; self.n];
+        let mut next: Vec<usize> = (0..self.n).collect();
+        let mut heap = BinaryHeap::new();
+        dist[dst] = 0.0;
+        heap.push(Item(0.0, dst));
+        while let Some(Item(d, u)) = heap.pop() {
+            if d > dist[u] {
+                continue;
+            }
+            // traverse reversed: edges (v, u)
+            for &v in &self.inn[u] {
+                let e = self.edge_id(v, u).unwrap();
+                let w = weight(e);
+                let nd = d + w;
+                if nd < dist[v] {
+                    dist[v] = nd;
+                    next[v] = u;
+                    heap.push(Item(nd, v));
+                }
+            }
+        }
+        (dist, next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        Graph::new(4, &[(0, 1), (1, 3), (0, 2), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn adjacency_and_ids() {
+        let g = diamond();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.edge_id(0, 1), Some(0));
+        assert_eq!(g.edge_id(1, 0), None);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.in_neighbors(3), &[1, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        assert!(Graph::new(2, &[(0, 0)]).is_err());
+        assert!(Graph::new(2, &[(0, 1), (0, 1)]).is_err());
+        assert!(Graph::new(2, &[(0, 2)]).is_err());
+    }
+
+    #[test]
+    fn bidirected_doubles_edges() {
+        let g = Graph::bidirected(3, &[(0, 1), (1, 2)]).unwrap();
+        assert_eq!(g.m(), 4);
+        assert!(g.has_edge(1, 0));
+        assert!(g.strongly_connected());
+    }
+
+    #[test]
+    fn reachability() {
+        let g = diamond();
+        assert!(!g.strongly_connected());
+        assert!(g.all_reach(3));
+        assert!(!g.all_reach(0));
+    }
+
+    #[test]
+    fn dijkstra_shortest() {
+        let g = diamond();
+        // weights: edge ids 0:(0,1)=1, 1:(1,3)=5, 2:(0,2)=2, 3:(2,3)=1
+        let w = [1.0, 5.0, 2.0, 1.0];
+        let (dist, parent) = g.dijkstra(0, |e| w[e]);
+        assert_eq!(dist[3], 3.0);
+        assert_eq!(parent[3], 2);
+    }
+
+    #[test]
+    fn dijkstra_to_gives_next_hops() {
+        let g = diamond();
+        let w = [1.0, 5.0, 2.0, 1.0];
+        let (dist, next) = g.dijkstra_to(3, |e| w[e]);
+        assert_eq!(dist[0], 3.0);
+        assert_eq!(next[0], 2);
+        assert_eq!(next[2], 3);
+        assert_eq!(next[3], 3);
+    }
+}

@@ -1,0 +1,301 @@
+//! The seven evaluation topologies of Table II, plus helpers.
+//!
+//! | name          | |V| | undirected |E| |
+//! |---------------|-----|----------------|
+//! | connected-er  | 20  | 40  (random, connectivity-guaranteed) |
+//! | balanced-tree | 15  | 14  (complete binary tree) |
+//! | fog           | 19  | 30  (3-tier fog sample, after [15]) |
+//! | abilene       | 11  | 14  (real Abilene / Internet2 predecessor) |
+//! | lhc           | 16  | 31  (LHC computing-grid style tiered mesh) |
+//! | geant         | 22  | 33  (GEANT pan-European REN) |
+//! | sw            | 100 | 320 (ring + short-range + long-range) |
+//!
+//! All are returned bidirected (each undirected edge becomes two links), as
+//! the paper's forwarding model uses directed links.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Connectivity-guaranteed Erdős–Rényi-style graph: a uniform random spanning
+/// tree plus uniformly random extra edges up to `m_undirected`.
+pub fn connected_er(n: usize, m_undirected: usize, rng: &mut Rng) -> Graph {
+    assert!(m_undirected + 1 >= n, "need at least n-1 undirected edges");
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(m_undirected);
+    let mut present = std::collections::BTreeSet::new();
+    // random spanning tree (random attachment order)
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for idx in 1..n {
+        let u = order[idx];
+        let v = order[rng.usize(idx)];
+        let key = (u.min(v), u.max(v));
+        present.insert(key);
+        edges.push(key);
+    }
+    // extra random edges
+    let max_possible = n * (n - 1) / 2;
+    let target = m_undirected.min(max_possible);
+    while edges.len() < target {
+        let u = rng.usize(n);
+        let v = rng.usize(n);
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if present.insert(key) {
+            edges.push(key);
+        }
+    }
+    Graph::bidirected(n, &edges).expect("valid ER graph")
+}
+
+/// Complete binary tree with `n` nodes (node 0 root; children 2i+1, 2i+2).
+pub fn balanced_tree(n: usize) -> Graph {
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for c in [2 * i + 1, 2 * i + 2] {
+            if c < n {
+                edges.push((i, c));
+            }
+        }
+    }
+    Graph::bidirected(n, &edges).expect("valid tree")
+}
+
+/// 3-tier fog sample topology (after Kamran et al. [15]): 1 cloud, 3 edge
+/// servers (ring + uplinks), 15 devices (each homed to a server, plus D2D
+/// short links). 19 nodes, 30 undirected edges.
+pub fn fog() -> Graph {
+    let mut edges = vec![
+        // cloud 0 <-> edge servers 1..3
+        (0, 1),
+        (0, 2),
+        (0, 3),
+        // edge server ring
+        (1, 2),
+        (2, 3),
+        (1, 3),
+    ];
+    // devices 4..18 homed to server 1 + (i % 3)
+    for d in 4..19 {
+        edges.push((1 + (d - 4) % 3, d));
+    }
+    // D2D links between neighboring devices (9 links)
+    for k in 0..9 {
+        edges.push((4 + k, 5 + k));
+    }
+    debug_assert_eq!(edges.len(), 30);
+    Graph::bidirected(19, &edges).expect("valid fog")
+}
+
+/// The Abilene backbone (11 PoPs, 14 undirected links).
+/// 0 Seattle, 1 Sunnyvale, 2 Denver, 3 LosAngeles, 4 Houston, 5 KansasCity,
+/// 6 Indianapolis, 7 Atlanta, 8 Chicago, 9 NewYork, 10 WashingtonDC.
+pub fn abilene() -> Graph {
+    let edges = [
+        (0, 1),
+        (0, 2),
+        (1, 2),
+        (1, 3),
+        (3, 4),
+        (2, 5),
+        (4, 5),
+        (4, 7),
+        (5, 6),
+        (6, 8),
+        (6, 7),
+        (8, 9),
+        (7, 10),
+        (9, 10),
+    ];
+    Graph::bidirected(11, &edges).expect("valid abilene")
+}
+
+/// LHC computing-grid style topology: 1 Tier-0, 4 Tier-1 (full mesh + T0
+/// uplinks), 11 Tier-2 sites multi-homed to Tier-1s. 16 nodes, 31 undirected
+/// edges.
+pub fn lhc() -> Graph {
+    let mut edges = vec![
+        // T0 (0) to T1s (1..4)
+        (0, 1),
+        (0, 2),
+        (0, 3),
+        (0, 4),
+        // T1 full mesh
+        (1, 2),
+        (1, 3),
+        (1, 4),
+        (2, 3),
+        (2, 4),
+        (3, 4),
+    ];
+    // T2s 5..15: each homed to two T1s
+    for (idx, t2) in (5..16).enumerate() {
+        let a = 1 + idx % 4;
+        let b = 1 + (idx + 1) % 4;
+        edges.push((a, t2));
+        if edges.len() < 31 {
+            edges.push((b, t2));
+        }
+    }
+    edges.truncate(31);
+    debug_assert_eq!(edges.len(), 31);
+    Graph::bidirected(16, &edges).expect("valid lhc")
+}
+
+/// GEANT pan-European research network (22 nodes, 33 undirected links).
+/// Node labels (approximate 2004 map): 0 AT 1 BE 2 CH 3 CZ 4 DE 5 ES 6 FR
+/// 7 GR 8 HR 9 HU 10 IE 11 IL 12 IT 13 LU 14 NL 15 PL 16 PT 17 SE 18 SI
+/// 19 SK 20 UK 21 NY(US).
+pub fn geant() -> Graph {
+    let edges = [
+        (0, 2),  // AT-CH
+        (0, 4),  // AT-DE
+        (0, 9),  // AT-HU
+        (0, 18), // AT-SI
+        (0, 3),  // AT-CZ
+        (1, 4),  // BE-DE
+        (1, 14), // BE-NL
+        (1, 20), // BE-UK
+        (2, 6),  // CH-FR
+        (2, 12), // CH-IT
+        (3, 4),  // CZ-DE
+        (3, 15), // CZ-PL
+        (3, 19), // CZ-SK
+        (4, 6),  // DE-FR
+        (4, 12), // DE-IT
+        (4, 14), // DE-NL
+        (4, 17), // DE-SE
+        (4, 21), // DE-NY
+        (5, 6),  // ES-FR
+        (5, 12), // ES-IT
+        (5, 16), // ES-PT
+        (6, 20), // FR-UK
+        (7, 12), // GR-IT
+        (7, 9),  // GR-HU (via backup SEE link)
+        (8, 9),  // HR-HU
+        (8, 18), // HR-SI
+        (9, 19), // HU-SK
+        (10, 20), // IE-UK
+        (11, 12), // IL-IT
+        (13, 6), // LU-FR
+        (14, 20), // NL-UK
+        (15, 17), // PL-SE
+        (16, 20), // PT-UK
+    ];
+    debug_assert_eq!(edges.len(), 33);
+    Graph::bidirected(22, &edges).expect("valid geant")
+}
+
+/// Small-world ring graph: `n` nodes on a ring, each linked to its 1st and
+/// 2nd ring neighbors (short range), plus `extra` random long-range links.
+/// Paper: n=100, |E|=320 undirected -> extra = 320 - 200 = 120.
+pub fn small_world(n: usize, extra: usize, rng: &mut Rng) -> Graph {
+    let mut present = std::collections::BTreeSet::new();
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for d in [1usize, 2] {
+            let j = (i + d) % n;
+            let key = (i.min(j), i.max(j));
+            if present.insert(key) {
+                edges.push(key);
+            }
+        }
+    }
+    let mut added = 0;
+    while added < extra {
+        let u = rng.usize(n);
+        let v = rng.usize(n);
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if present.insert(key) {
+            edges.push(key);
+            added += 1;
+        }
+    }
+    Graph::bidirected(n, &edges).expect("valid small-world")
+}
+
+/// Table-II scenario names.
+pub const SCENARIO_NAMES: [&str; 7] = [
+    "connected-er",
+    "balanced-tree",
+    "fog",
+    "abilene",
+    "lhc",
+    "geant",
+    "sw",
+];
+
+/// Build a named topology (Table II row). `rng` is used by the random ones.
+pub fn by_name(name: &str, rng: &mut Rng) -> anyhow::Result<Graph> {
+    Ok(match name {
+        "connected-er" => connected_er(20, 40, rng),
+        "balanced-tree" => balanced_tree(15),
+        "fog" => fog(),
+        "abilene" => abilene(),
+        "lhc" => lhc(),
+        "geant" => geant(),
+        "sw" => small_world(100, 120, rng),
+        other => anyhow::bail!("unknown topology '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_sizes_match_paper() {
+        let mut rng = Rng::new(1);
+        let cases = [
+            ("connected-er", 20, 40),
+            ("balanced-tree", 15, 14),
+            ("fog", 19, 30),
+            ("abilene", 11, 14),
+            ("lhc", 16, 31),
+            ("geant", 22, 33),
+            ("sw", 100, 320),
+        ];
+        for (name, n, m_undirected) in cases {
+            let g = by_name(name, &mut rng).unwrap();
+            assert_eq!(g.n(), n, "{name} node count");
+            assert_eq!(g.m(), 2 * m_undirected, "{name} directed link count");
+            assert!(g.strongly_connected(), "{name} must be connected");
+        }
+    }
+
+    #[test]
+    fn er_is_connected_across_seeds() {
+        for seed in 0..25 {
+            let mut rng = Rng::new(seed);
+            let g = connected_er(20, 40, &mut rng);
+            assert!(g.strongly_connected(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn er_deterministic_per_seed() {
+        let g1 = connected_er(20, 40, &mut Rng::new(5));
+        let g2 = connected_er(20, 40, &mut Rng::new(5));
+        assert_eq!(g1.edges(), g2.edges());
+    }
+
+    #[test]
+    fn small_world_has_ring_backbone() {
+        let mut rng = Rng::new(3);
+        let g = small_world(100, 120, &mut rng);
+        for i in 0..100 {
+            assert!(g.has_edge(i, (i + 1) % 100));
+            assert!(g.has_edge(i, (i + 2) % 100));
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        let mut rng = Rng::new(0);
+        assert!(by_name("nope", &mut rng).is_err());
+    }
+}

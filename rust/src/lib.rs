@@ -1,0 +1,61 @@
+//! # scfo — Service Chain Forwarding & Offloading
+//!
+//! Production-quality reproduction of *Delay-Optimal Service Chain Forwarding
+//! and Offloading in Collaborative Edge Computing* (Zhang & Yeh, 2023).
+//!
+//! The library models a collaborative edge computing network in which
+//! service-chain applications (ordered task chains) are jointly *forwarded*
+//! (hop-by-hop routing of each stage's flows) and *offloaded* (choosing which
+//! node's CPU executes each task), minimizing an aggregate congestion-
+//! dependent cost D(φ) = Σ D_ij(F_ij) + Σ C_i(G_i) — by Little's law, the
+//! expected packet system delay when both costs are queue lengths.
+//!
+//! ## Layers
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   gradient-projection algorithm ([`algo::gp`]) with blocked-node-set loop
+//!   prevention, the Section-IV distributed broadcast protocol
+//!   ([`broadcast`], [`distributed`]), baselines ([`algo`]), flow/marginal
+//!   computation ([`flow`], [`marginals`]), serving loop ([`serving`]) and
+//!   benchmarking/validation substrates ([`sim`], [`bench`]).
+//! * **L2/L1 (python/compile)** — a JAX + Pallas implementation of the dense
+//!   network-evaluation hot path, AOT-lowered to HLO artifacts executed from
+//!   Rust via PJRT ([`runtime`]). Python never runs at request time.
+
+pub mod app;
+pub mod cost;
+pub mod flow;
+pub mod graph;
+pub mod marginals;
+pub mod strategy;
+pub mod util;
+
+pub mod algo;
+pub mod bench;
+pub mod broadcast;
+pub mod cli;
+pub mod config;
+pub mod distributed;
+pub mod metrics;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+
+#[cfg(any(test, feature = "testutil"))]
+pub mod testutil;
+
+/// Convenient re-exports.
+pub mod prelude {
+    pub use crate::algo::gp::{GpOptions, GpReport, GradientProjection};
+    pub use crate::app::{Application, Network, StageRegistry};
+    pub use crate::cost::{CostFn, CostKind};
+    pub use crate::flow::FlowState;
+    pub use crate::graph::{topologies, Graph};
+    pub use crate::marginals::Marginals;
+    pub use crate::strategy::Strategy;
+    pub use crate::util::rng::Rng;
+}
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

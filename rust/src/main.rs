@@ -1,0 +1,290 @@
+//! `scfo` — CLI launcher for the service-chain forwarding/offloading stack.
+//!
+//! ```text
+//! scfo run      --topology geant [--alpha 0.1] [--iters 500] [--config cfg.json]
+//! scfo compare  --topology abilene [--iters 500]   # GP vs all baselines
+//! scfo table2                                      # print Table II inventory
+//! scfo fig5 | fig6 | fig7                          # regenerate paper figures
+//! scfo serve    --topology geant [--slots 200] [--xla]
+//! scfo validate --topology abilene                 # DES vs analytic cost
+//! scfo broadcast --topology geant                  # protocol message audit
+//! ```
+
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::bench::print_table;
+use scfo::cli::Args;
+use scfo::config::Scenario;
+use scfo::flow::FlowState;
+use scfo::graph::topologies::SCENARIO_NAMES;
+use scfo::prelude::*;
+use scfo::serving::{OnlineServer, ServerOptions};
+use scfo::sim;
+
+fn scenario_from(args: &Args) -> anyhow::Result<Scenario> {
+    if let Some(cfg) = args.flag("config") {
+        return Scenario::load(std::path::Path::new(cfg));
+    }
+    let topo = args.flag_or("topology", "abilene");
+    let mut sc = Scenario::table2(&topo)?;
+    sc.seed = args.flag_usize("seed", sc.seed as usize)? as u64;
+    sc.rate_scale = args.flag_f64("rate-scale", 1.0)?;
+    Ok(sc)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let sc = scenario_from(args)?;
+    let iters = args.flag_usize("iters", 500)?;
+    let alpha = args.flag_f64("alpha", 0.1)?;
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng)?;
+    println!(
+        "scenario {} : |V|={} |E|={} |A|={} |S|={}",
+        sc.name,
+        net.n(),
+        net.m(),
+        net.apps.len(),
+        net.num_stages()
+    );
+    if args.switch("xla") {
+        let mut gp = scfo::runtime::XlaGp::new(
+            &net,
+            GpOptions {
+                alpha,
+                ..Default::default()
+            },
+        )?;
+        let rep = gp.run(&net, iters)?;
+        println!("XLA-GP final cost: {:.6}", rep.final_cost);
+    } else {
+        let mut gp = GradientProjection::new(
+            &net,
+            GpOptions {
+                alpha,
+                ..Default::default()
+            },
+        );
+        let rep = gp.run(&net, iters);
+        println!(
+            "GP final cost: {:.6} (converged={} iters={})",
+            rep.final_cost, rep.converged, rep.iters
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let sc = scenario_from(args)?;
+    let iters = args.flag_usize("iters", 500)?;
+    let row = sim::compare_algorithms(&sc, iters, 1)?;
+    let norm = row.normalized();
+    let rows: Vec<Vec<String>> = row
+        .costs
+        .iter()
+        .zip(&norm)
+        .map(|((name, cost), (_n, x))| {
+            vec![name.to_string(), format!("{cost:.4}"), format!("{x:.3}")]
+        })
+        .collect();
+    print_table(
+        &format!("Algorithm comparison — {}", sc.name),
+        &["algorithm", "total cost", "normalized"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_table2(_args: &Args) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for name in SCENARIO_NAMES {
+        let sc = Scenario::table2(name)?;
+        let mut rng = Rng::new(sc.seed);
+        let net = sc.build(&mut rng)?;
+        rows.push(vec![
+            name.to_string(),
+            net.n().to_string(),
+            (net.m() / 2).to_string(),
+            sc.num_apps.to_string(),
+            sc.num_sources.to_string(),
+            format!("{:?}", sc.link_kind),
+            format!("{}", sc.link_param),
+            format!("{:?}", sc.comp_kind),
+            format!("{}", sc.comp_param),
+        ]);
+    }
+    print_table(
+        "Table II — simulated network scenarios",
+        &["topology", "|V|", "|E|", "|A|", "R", "link", "d̄ij", "comp", "s̄i"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> anyhow::Result<()> {
+    let iters = args.flag_usize("iters", 400)?;
+    let mut scenarios: Vec<Scenario> = SCENARIO_NAMES
+        .iter()
+        .map(|n| Scenario::table2(n).unwrap())
+        .collect();
+    scenarios.push(Scenario::sw_linear());
+    let mut rows = Vec::new();
+    for sc in &scenarios {
+        let row = sim::compare_algorithms(sc, iters, 1)?;
+        let mut cells = vec![sc.name.clone()];
+        for (_n, x) in row.normalized() {
+            cells.push(format!("{x:.3}"));
+        }
+        rows.push(cells);
+    }
+    print_table(
+        "Fig. 5 — normalized total cost per scenario",
+        &["scenario", "GP", "SPOC", "LCOF", "LPR-SC"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> anyhow::Result<()> {
+    let iters = args.flag_usize("iters", 400)?;
+    let sc = Scenario::table2("abilene")?;
+    let scales = [0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6, 1.8];
+    let sweep = sim::rate_sweep(&sc, &scales, iters)?;
+    let rows: Vec<Vec<String>> = sweep
+        .iter()
+        .map(|(scale, row)| {
+            let mut cells = vec![format!("{scale:.1}")];
+            for (_n, c) in &row.costs {
+                cells.push(format!("{c:.4}"));
+            }
+            cells
+        })
+        .collect();
+    print_table(
+        "Fig. 6 — total cost vs input rate scale (Abilene)",
+        &["rate scale", "GP", "SPOC", "LCOF", "LPR-SC"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_fig7(args: &Args) -> anyhow::Result<()> {
+    let iters = args.flag_usize("iters", 400)?;
+    let sc = Scenario::table2("abilene")?;
+    let l0s = [2.0, 4.0, 6.0, 8.0, 10.0, 14.0, 20.0];
+    let rows_data = sim::packet_size_sweep(&sc, &l0s, iters)?;
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.0}", r.l0),
+                format!("{:.3}", r.data_hops),
+                format!("{:.3}", r.result_hops),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 7 — avg packet hops vs input packet size (GP, Abilene)",
+        &["L(a,0)", "data hops", "result hops"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let sc = scenario_from(args)?;
+    let slots = args.flag_usize("slots", 200)?;
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng)?;
+    let opts = ServerOptions::default();
+    let metrics = if args.switch("xla") {
+        let gp = scfo::runtime::XlaGp::new(&net, GpOptions::default())?;
+        let mut srv = OnlineServer::new(net, gp, opts);
+        let m = srv.run(slots)?;
+        println!("delay histogram: {}", srv.delay_hist.summary());
+        m
+    } else {
+        let gp = GradientProjection::new(&net, GpOptions::default());
+        let mut srv = OnlineServer::new(net, gp, opts);
+        let m = srv.run(slots)?;
+        println!("delay histogram: {}", srv.delay_hist.summary());
+        m
+    };
+    let last = metrics.last().unwrap();
+    let lat: Vec<f64> = metrics.iter().map(|m| m.optimizer_latency).collect();
+    println!(
+        "served {} slots; final cost {:.4}; expected delay {:.4}s; optimizer latency mean {:.2}ms p95 {:.2}ms",
+        metrics.len(),
+        last.cost,
+        last.expected_delay,
+        scfo::util::stats::mean(&lat) * 1e3,
+        scfo::util::stats::percentile(&lat, 95.0) * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let sc = scenario_from(args)?;
+    let iters = args.flag_usize("iters", 300)?;
+    let horizon = args.flag_f64("horizon", 2000.0)?;
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng)?;
+    let mut gp = GradientProjection::new(&net, GpOptions::default());
+    gp.run(&net, iters);
+    let analytic = FlowState::solve(&net, &gp.phi).unwrap().total_cost;
+    let rep = sim::simulate(&net, &gp.phi, horizon, sc.seed)?;
+    println!("analytic cost (expected packets in system): {analytic:.4}");
+    println!(
+        "DES measured: occupancy {:.4}, mean delay {:.4}s, delivered {}, λ {:.3}",
+        rep.avg_occupancy, rep.mean_delay, rep.delivered, rep.lambda
+    );
+    println!(
+        "Little cross-check: λ·W = {:.4} (vs N = {:.4})",
+        rep.lambda * rep.mean_delay,
+        rep.avg_occupancy
+    );
+    Ok(())
+}
+
+fn cmd_broadcast(args: &Args) -> anyhow::Result<()> {
+    let sc = scenario_from(args)?;
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng)?;
+    let phi = Strategy::shortest_path_to_dest(&net);
+    let fs = FlowState::solve(&net, &phi).unwrap();
+    let out = scfo::broadcast::run_broadcast(&net, &phi, &fs);
+    println!(
+        "broadcast audit on {}: |S|={} |E|={} messages={} (bound |S||E|={}) rounds={}",
+        sc.name,
+        net.num_stages(),
+        net.m(),
+        out.messages,
+        net.num_stages() * net.m(),
+        out.rounds
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    scfo::util::logging::init();
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("table2") => cmd_table2(&args),
+        Some("fig5") => cmd_fig5(&args),
+        Some("fig6") => cmd_fig6(&args),
+        Some("fig7") => cmd_fig7(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("broadcast") => cmd_broadcast(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown command '{o}'");
+            }
+            eprintln!(
+                "usage: scfo <run|compare|table2|fig5|fig6|fig7|serve|validate|broadcast> \
+                 [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--xla]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! Marginal costs: ∂D/∂t_i(a,k) (eq. 4), the modified marginals δ_ij(a,k)
+//! (eq. 7) and the raw KKT marginals ∂D/∂φ_ij(a,k) (eq. 3).
+//!
+//! ∂D/∂t is computed by the recursion (4) in *reverse* chain order: final
+//! stage first (it only depends on same-stage downstream values), then each
+//! earlier stage k (which additionally needs stage k+1 at the same node via
+//! the CPU term). Within a stage, values propagate against the flow
+//! direction, i.e. in reverse topological order of the positive-φ DAG. This
+//! mirrors the distributed broadcast protocol of Section IV — the
+//! [`crate::broadcast`] module implements the same recursion with messages
+//! and must agree with this centralized reference (tested).
+
+use crate::app::Network;
+use crate::flow::FlowState;
+use crate::strategy::{Strategy, PHI_EPS};
+
+/// Marginal used for unavailable directions ((i,j) ∉ ℰ, or CPU at a final
+/// stage). Kept finite so arithmetic stays NaN-free; semantically ∞.
+pub const INF_MARGINAL: f64 = 1e30;
+
+/// All marginal quantities at a given operating point (φ, flows).
+#[derive(Clone, Debug)]
+pub struct Marginals {
+    /// ∂D/∂t_i(a,k): [stage][node].
+    pub d_dt: Vec<Vec<f64>>,
+    /// δ_ij(a,k): [stage][node][n+1] (last entry = CPU slot).
+    pub delta: Vec<Vec<f64>>,
+    n: usize,
+}
+
+impl Marginals {
+    /// Assemble from externally computed parts (e.g. the PJRT-executed XLA
+    /// evaluation in [`crate::runtime`]). `delta` rows are [stage][i*(n+1)+j]
+    /// with the CPU slot last, matching [`Marginals::compute`].
+    pub fn from_parts(d_dt: Vec<Vec<f64>>, delta: Vec<Vec<f64>>, n: usize) -> Marginals {
+        Marginals { d_dt, delta, n }
+    }
+
+    #[inline]
+    pub fn delta_at(&self, s: usize, i: usize, j: usize) -> f64 {
+        self.delta[s][i * (self.n + 1) + j]
+    }
+    /// Row δ_i(a,k) of length n+1 (last entry = CPU).
+    #[inline]
+    pub fn delta_row(&self, s: usize, i: usize) -> &[f64] {
+        &self.delta[s][i * (self.n + 1)..(i + 1) * (self.n + 1)]
+    }
+
+    /// Compute ∂D/∂t and δ for the current operating point.
+    pub fn compute(net: &Network, phi: &Strategy, fs: &FlowState) -> Marginals {
+        let n = net.n();
+        let ns = net.num_stages();
+        let cpu = phi.cpu();
+        let mut d_dt = vec![vec![0.0; n]; ns];
+        let mut delta = vec![vec![0.0; n * (n + 1)]; ns];
+
+        // Per application, stages from final to first.
+        for (a, app) in net.apps.iter().enumerate() {
+            for k in (0..app.num_stages()).rev() {
+                let s = net.stages.id(a, k);
+                let l = net.packet_size(s);
+                let is_final = k == app.num_tasks;
+                let order = phi
+                    .topo_order(s)
+                    .expect("marginals require a loop-free strategy");
+                // reverse topological order: downstream d_dt ready first
+                for &i in order.iter().rev() {
+                    let mut acc = 0.0;
+                    let row = phi.row(s, i);
+                    for (j, &p) in row.iter().enumerate().take(n) {
+                        if p > PHI_EPS {
+                            let e = net.graph.edge_id(i, j).unwrap();
+                            acc += p * (l * fs.link_marginal[e] + d_dt[s][j]);
+                        }
+                    }
+                    if !is_final {
+                        let pc = row[cpu];
+                        if pc > PHI_EPS {
+                            let next = net.stages.id(a, k + 1);
+                            acc += pc
+                                * (net.comp_weight[s][i] * fs.comp_marginal[i]
+                                    + d_dt[next][i]);
+                        }
+                    }
+                    d_dt[s][i] = acc;
+                }
+                // modified marginals δ_ij (eq. 7): INF everywhere, then fill
+                // only the |E| link entries + n CPU entries (iterating edges
+                // instead of all n² pairs is ~10x cheaper on dense stages)
+                {
+                    let drow_all = &mut delta[s];
+                    drow_all.fill(INF_MARGINAL);
+                    for e in 0..net.m() {
+                        let (i, j) = net.graph.edge(e);
+                        drow_all[i * (n + 1) + j] = l * fs.link_marginal[e] + d_dt[s][j];
+                    }
+                    if !is_final {
+                        let next = net.stages.id(a, k + 1);
+                        for i in 0..n {
+                            drow_all[i * (n + 1) + n] = net.comp_weight[s][i]
+                                * fs.comp_marginal[i]
+                                + d_dt[next][i];
+                        }
+                    }
+                }
+            }
+        }
+        Marginals { d_dt, delta, n }
+    }
+
+    /// Raw KKT marginal ∂D/∂φ_ij(a,k) = t_i(a,k) · δ_ij(a,k) (eq. 3).
+    pub fn d_dphi(&self, fs: &FlowState, s: usize, i: usize, j: usize) -> f64 {
+        fs.traffic[s][i] * self.delta_at(s, i, j)
+    }
+
+    /// Max violation of the sufficiency condition (6): over all (s, i) and
+    /// all j with φ_ij > 0, the excess δ_ij − min_j' δ_ij'. Zero iff φ
+    /// satisfies Theorem 1 (up to tolerance), i.e. is globally optimal.
+    pub fn condition6_residual(&self, net: &Network, phi: &Strategy) -> f64 {
+        let n = net.n();
+        let mut worst: f64 = 0.0;
+        for (s, (a, _)) in net.stages.iter() {
+            let is_final = net.is_final_stage(s);
+            let dest = net.apps[a].dest;
+            for i in 0..n {
+                if is_final && i == dest {
+                    continue; // exit row: no forwarding decision
+                }
+                let drow = self.delta_row(s, i);
+                let min = drow.iter().copied().fold(f64::INFINITY, f64::min);
+                let row = phi.row(s, i);
+                for (j, &p) in row.iter().enumerate() {
+                    if p > PHI_EPS {
+                        worst = worst.max(drow[j] - min);
+                    }
+                }
+            }
+        }
+        worst
+    }
+
+    /// Verify ∂D/∂φ against a central finite difference of the full
+    /// objective (test/diagnostic utility; perturbs one φ entry, compensating
+    /// on a sibling entry to stay feasible is NOT done here — this matches
+    /// the unconstrained partial derivative of eq. (3)).
+    pub fn fd_check(
+        net: &Network,
+        phi: &Strategy,
+        s: usize,
+        i: usize,
+        j: usize,
+        h: f64,
+    ) -> anyhow::Result<f64> {
+        let mut hi = phi.clone();
+        hi.set(s, i, j, hi.get(s, i, j) + h);
+        let mut lo = phi.clone();
+        lo.set(s, i, j, (lo.get(s, i, j) - h).max(0.0));
+        let dh = hi.get(s, i, j) - lo.get(s, i, j);
+        let fhi = FlowState::solve(net, &hi)?.total_cost;
+        let flo = FlowState::solve(net, &lo)?.total_cost;
+        Ok((fhi - flo) / dh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{Application, Network, StageRegistry};
+    use crate::cost::CostFn;
+    use crate::graph::{topologies, Graph};
+    use crate::strategy::Strategy;
+    use crate::util::rng::Rng;
+
+    fn path_net() -> (Network, Strategy) {
+        let g = Graph::new(3, &[(0, 1), (1, 2), (1, 0), (2, 1)]).unwrap();
+        let apps = vec![Application {
+            dest: 2,
+            num_tasks: 1,
+            packet_sizes: vec![2.0, 1.0],
+            input_rates: vec![1.0, 0.0, 0.0],
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; 3]; stages.len()];
+        let net = Network::new(
+            g.clone(),
+            apps,
+            vec![CostFn::Queue { cap: 10.0 }; g.m()],
+            vec![CostFn::Queue { cap: 5.0 }; 3],
+            cw,
+        )
+        .unwrap();
+        let mut phi = Strategy::zeros(3, 2);
+        let s0 = net.stages.id(0, 0);
+        let s1 = net.stages.id(0, 1);
+        phi.set(s0, 0, 1, 1.0);
+        phi.set(s0, 1, phi.cpu(), 1.0);
+        phi.set(s0, 2, 1, 1.0);
+        phi.set(s1, 0, 1, 1.0);
+        phi.set(s1, 1, 2, 1.0);
+        (net, phi)
+    }
+
+    #[test]
+    fn hand_computed_d_dt() {
+        let (net, phi) = path_net();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let s0 = net.stages.id(0, 0);
+        let s1 = net.stages.id(0, 1);
+        // stage 1 (final): d_dt[2] = 0 (dest), d_dt[1] = L1·D'(1,2) + 0
+        let e12 = net.graph.edge_id(1, 2).unwrap();
+        let want_dt1 = 1.0 * fs.link_marginal[e12];
+        assert_eq!(mg.d_dt[s1][2], 0.0);
+        assert!((mg.d_dt[s1][1] - want_dt1).abs() < 1e-12);
+        // stage 0 at node 1 (all offloaded): w·C'(G1) + d_dt[s1][1]
+        let want_dt01 = fs.comp_marginal[1] + want_dt1;
+        assert!((mg.d_dt[s0][1] - want_dt01).abs() < 1e-12);
+        // stage 0 at node 0: L0·D'(0,1) + d_dt[s0][1]
+        let e01 = net.graph.edge_id(0, 1).unwrap();
+        let want_dt00 = 2.0 * fs.link_marginal[e01] + want_dt01;
+        assert!((mg.d_dt[s0][0] - want_dt00).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_rows_match_eq7() {
+        let (net, phi) = path_net();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let s0 = net.stages.id(0, 0);
+        let s1 = net.stages.id(0, 1);
+        let e01 = net.graph.edge_id(0, 1).unwrap();
+        // δ_01(a,0) = L0·D'_01 + d_dt[s0][1]
+        let want = 2.0 * fs.link_marginal[e01] + mg.d_dt[s0][1];
+        assert!((mg.delta_at(s0, 0, 1) - want).abs() < 1e-12);
+        // CPU at node 0, stage 0: w·C'_0(0) + d_dt[s1][0]
+        let want_cpu = 1.0 * fs.comp_marginal[0] + mg.d_dt[s1][0];
+        assert!((mg.delta_at(s0, 0, phi.cpu()) - want_cpu).abs() < 1e-12);
+        // final stage CPU is infinite
+        assert!(mg.delta_at(s1, 0, phi.cpu()) >= INF_MARGINAL);
+        // non-links are infinite
+        assert!(mg.delta_at(s0, 0, 2) >= INF_MARGINAL);
+    }
+
+    #[test]
+    fn d_dphi_matches_finite_difference() {
+        // random feasible strategies on Abilene; compare analytic eq. (3)
+        // against finite differences of the true objective.
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let mut rng = Rng::new(77);
+        let mut r = vec![0.0; n];
+        r[0] = 0.7;
+        r[4] = 0.3;
+        let apps = vec![Application {
+            dest: 9,
+            num_tasks: 1,
+            packet_sizes: vec![3.0, 1.0],
+            input_rates: r,
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.3; n]; stages.len()];
+        let net = Network::new(
+            g,
+            apps,
+            vec![CostFn::Queue { cap: 15.0 }; m],
+            vec![CostFn::Queue { cap: 10.0 }; n],
+            cw,
+        )
+        .unwrap();
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let mut checked = 0;
+        for s in 0..net.num_stages() {
+            for i in 0..n {
+                if fs.traffic[s][i] < 1e-6 {
+                    continue;
+                }
+                for j in phi.positive_links(s, i).collect::<Vec<_>>() {
+                    let analytic = mg.d_dphi(&fs, s, i, j);
+                    let fd = Marginals::fd_check(&net, &phi, s, i, j, 1e-6).unwrap();
+                    assert!(
+                        (analytic - fd).abs() < 1e-3 * (1.0 + analytic.abs()),
+                        "s={s} i={i} j={j}: analytic={analytic} fd={fd}"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 5, "too few directions checked ({checked})");
+    }
+
+    #[test]
+    fn condition6_residual_zero_on_singlepath_optimum() {
+        // In a path graph there is only one routing choice; the only real
+        // decision is where to compute. For tiny input on linear-ish costs
+        // the shortest-path-to-dest strategy (compute at dest) satisfies (6)
+        // trivially w.r.t. available directions... verify residual finite and
+        // condition check runs.
+        let (net, phi) = path_net();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let res = mg.condition6_residual(&net, &phi);
+        assert!(res.is_finite());
+    }
+}

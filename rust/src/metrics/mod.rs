@@ -1,0 +1,144 @@
+//! Lightweight metrics: counters + streaming histograms with percentile
+//! queries, used by the serving loop and the e2e driver.
+
+use crate::util::stats;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter (thread-safe).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Sample reservoir with percentile queries (bounded memory: keeps the most
+/// recent `cap` samples, ring-buffer style).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    cap: usize,
+    buf: Vec<f64>,
+    next: usize,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(cap: usize) -> Self {
+        Histogram {
+            cap: cap.max(1),
+            buf: Vec::new(),
+            next: 0,
+            total: 0,
+        }
+    }
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.buf)
+    }
+    pub fn percentile(&self, q: f64) -> f64 {
+        stats::percentile(&self.buf, q)
+    }
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.4} p50={:.4} p95={:.4} p99={:.4} max={:.4}",
+            self.total,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            stats::max(&self.buf),
+        )
+    }
+}
+
+/// Named metric registry for end-of-run reports.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, Counter>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn counter(&mut self, name: &str) -> &Counter {
+        self.counters
+            .entry(name.to_string())
+            .or_insert_with(Counter::new)
+    }
+    pub fn report(&self) -> Vec<(String, u64)> {
+        self.counters
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new(100);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.percentile(50.0) - 50.5).abs() < 1.0);
+        assert!(h.percentile(99.0) >= 99.0);
+    }
+
+    #[test]
+    fn histogram_ring_keeps_recent() {
+        let mut h = Histogram::new(10);
+        for i in 0..1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.mean() >= 990.0);
+    }
+
+    #[test]
+    fn registry_reports() {
+        let mut r = Registry::new();
+        r.counter("a").inc();
+        r.counter("a").inc();
+        r.counter("b").inc();
+        let rep = r.report();
+        assert_eq!(rep, vec![("a".into(), 2), ("b".into(), 1)]);
+    }
+}

@@ -1,0 +1,39 @@
+//! PJRT runtime: load and execute the AOT-compiled L2/L1 artifacts.
+//!
+//! `make artifacts` (the only time Python runs) lowers the JAX + Pallas
+//! network evaluation to `artifacts/eval_n{N}_a{A}_k{K}.hlo.txt` plus
+//! `manifest.json`. This module loads the HLO text, compiles it on the PJRT
+//! CPU client once, and executes it from the L3 hot path: a scenario is
+//! padded into the smallest fitting size bucket, evaluated, and the outputs
+//! (aggregate cost, traffic, ∂D/∂t, δ-marginals) are unpadded back.
+//!
+//! [`XlaGp`] is the GP optimizer wired to this evaluator; it must produce
+//! the same iterates as the pure-Rust [`crate::algo::gp::GradientProjection`]
+//! (cross-checked in `rust/tests/xla_parity.rs`).
+
+pub mod pjrt;
+
+pub use pjrt::{EvalOutputs, EvalRuntime, Manifest, XlaGp};
+
+/// Default artifacts directory, overridable with `SCFO_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("SCFO_ARTIFACTS") {
+        return std::path::PathBuf::from(d);
+    }
+    // walk up from cwd so tests/benches find the repo-root artifacts
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return std::path::PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// True if the AOT artifacts have been built.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

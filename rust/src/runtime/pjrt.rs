@@ -1,0 +1,509 @@
+//! PJRT client wrapper: HLO-text artifact loading, padding, execution.
+
+use std::path::Path;
+
+use crate::algo::blocked::BlockedSets;
+use crate::algo::gp::{gp_row_update, GpOptions, GpReport, SupportMask};
+use crate::app::Network;
+use crate::cost::CostFn;
+use crate::marginals::Marginals;
+use crate::strategy::Strategy;
+use crate::util::json::Json;
+
+/// One size bucket from the manifest.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    pub file: String,
+    pub n: usize,
+    pub num_apps: usize,
+    pub kchain: usize,
+}
+
+impl Bucket {
+    pub fn num_stages(&self) -> usize {
+        self.num_apps * (self.kchain + 1)
+    }
+    /// Does a scenario of (n nodes, a apps, k tasks/app) fit?
+    pub fn fits(&self, n: usize, a: usize, k: usize) -> bool {
+        n <= self.n && a <= self.num_apps && k == self.kchain
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub buckets: Vec<Bucket>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Json::parse(&text)?;
+        let mut buckets = Vec::new();
+        for b in v
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing buckets"))?
+        {
+            buckets.push(Bucket {
+                file: b
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("manifest: bucket.file"))?
+                    .to_string(),
+                n: b.get("n").and_then(Json::as_usize).unwrap_or(0),
+                num_apps: b.get("num_apps").and_then(Json::as_usize).unwrap_or(0),
+                kchain: b.get("kchain").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        anyhow::ensure!(!buckets.is_empty(), "manifest has no buckets");
+        Ok(Manifest { buckets })
+    }
+
+    /// Smallest bucket fitting the scenario.
+    pub fn pick(&self, n: usize, a: usize, k: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.fits(n, a, k))
+            .min_by_key(|b| b.n * b.num_stages())
+    }
+}
+
+/// Outputs of one evaluation call, unpadded to the real scenario size.
+#[derive(Clone, Debug)]
+pub struct EvalOutputs {
+    pub total_cost: f64,
+    /// t_i(a,k): [stage][node].
+    pub traffic: Vec<Vec<f64>>,
+    /// ∂D/∂t: [stage][node].
+    pub d_dt: Vec<Vec<f64>>,
+    /// δ rows: [stage][i*(n+1)+j], CPU slot last — Marginals layout.
+    pub delta: Vec<Vec<f64>>,
+}
+
+/// A compiled evaluation executable for one bucket.
+pub struct EvalRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    bucket: Bucket,
+    /// platform string, for logs
+    pub platform: String,
+}
+
+impl EvalRuntime {
+    /// Load the artifact fitting `net` and compile it on the PJRT CPU client.
+    pub fn load_for(net: &Network) -> anyhow::Result<EvalRuntime> {
+        let dir = super::artifacts_dir();
+        Self::load_for_in(net, &dir)
+    }
+
+    pub fn load_for_in(net: &Network, dir: &Path) -> anyhow::Result<EvalRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let kmax = net
+            .apps
+            .iter()
+            .map(|a| a.num_tasks)
+            .max()
+            .unwrap_or(0);
+        // every app must have the bucket's chain length; shorter chains are
+        // padded by the packer (see pack()), so only the max matters here.
+        let bucket = manifest
+            .pick(net.n(), net.apps.len(), kmax)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no bucket fits n={} apps={} k={kmax}",
+                    net.n(),
+                    net.apps.len()
+                )
+            })?
+            .clone();
+        let client = xla::PjRtClient::cpu()?;
+        let platform = client.platform_name();
+        let proto = xla::HloModuleProto::from_text_file(
+            dir.join(&bucket.file)
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(EvalRuntime {
+            exe,
+            bucket,
+            platform,
+        })
+    }
+
+    pub fn bucket(&self) -> &Bucket {
+        &self.bucket
+    }
+
+    /// Evaluate the network state under `phi` on the XLA executable.
+    pub fn eval(&self, net: &Network, phi: &Strategy) -> anyhow::Result<EvalOutputs> {
+        let inputs = self.pack(net, phi)?;
+        let literals: Vec<xla::Literal> = inputs
+            .into_iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(&data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).map_err(anyhow::Error::from)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 7, "expected 7 outputs, got {}", outs.len());
+        self.unpack(net, outs)
+    }
+
+    /// Pack the real scenario into padded bucket-shaped f64 arrays
+    /// (returns (flat data, dims) pairs in the manifest input order).
+    fn pack(&self, net: &Network, phi: &Strategy) -> anyhow::Result<Vec<(Vec<f64>, Vec<usize>)>> {
+        let bn = self.bucket.n;
+        let ba = self.bucket.num_apps;
+        let bk1 = self.bucket.kchain + 1;
+        let bs = ba * bk1;
+        let n = net.n();
+        anyhow::ensure!(n <= bn && net.apps.len() <= ba, "scenario exceeds bucket");
+        for app in &net.apps {
+            anyhow::ensure!(
+                app.num_tasks == self.bucket.kchain,
+                "bucket requires |T_a| == {} (got {})",
+                self.bucket.kchain,
+                app.num_tasks
+            );
+        }
+
+        let mut phi_link = vec![0.0; bs * bn * bn];
+        let mut phi_cpu = vec![0.0; bs * bn];
+        let mut exo = vec![0.0; ba * bn];
+        let mut adj = vec![0.0; bn * bn];
+        let mut link_isq = vec![0.0; bn * bn];
+        let mut link_lin = vec![0.0; bn * bn];
+        let mut link_cap = vec![1.0; bn * bn];
+        let mut comp_isq = vec![0.0; bn];
+        let mut comp_lin = vec![0.0; bn];
+        let mut comp_cap = vec![1.0; bn];
+        let mut packet = vec![1.0; bs];
+        let mut weight = vec![0.0; bs * bn];
+
+        for (a, app) in net.apps.iter().enumerate() {
+            for k in 0..app.num_stages() {
+                let s = net.stages.id(a, k);
+                let ps = a * bk1 + k; // padded stage id
+                packet[ps] = app.packet_sizes[k];
+                for i in 0..n {
+                    weight[ps * bn + i] = net.comp_weight[s][i];
+                    phi_cpu[ps * bn + i] = phi.get(s, i, phi.cpu());
+                    for j in 0..n {
+                        phi_link[(ps * bn + i) * bn + j] = phi.get(s, i, j);
+                    }
+                }
+            }
+            for i in 0..n {
+                exo[a * bn + i] = app.input_rates[i];
+            }
+        }
+        for e in 0..net.m() {
+            let (i, j) = net.graph.edge(e);
+            adj[i * bn + j] = 1.0;
+            match net.link_cost[e] {
+                CostFn::Linear { d } => link_lin[i * bn + j] = d,
+                CostFn::Queue { cap } => {
+                    link_isq[i * bn + j] = 1.0;
+                    link_cap[i * bn + j] = cap;
+                }
+                CostFn::Quadratic { .. } => {
+                    anyhow::bail!("XLA bridge supports Linear/Queue link costs only")
+                }
+            }
+        }
+        for i in 0..n {
+            match net.comp_cost[i] {
+                CostFn::Linear { d } => comp_lin[i] = d,
+                CostFn::Queue { cap } => {
+                    comp_isq[i] = 1.0;
+                    comp_cap[i] = cap;
+                }
+                CostFn::Quadratic { .. } => {
+                    anyhow::bail!("XLA bridge supports Linear/Queue comp costs only")
+                }
+            }
+        }
+
+        Ok(vec![
+            (phi_link, vec![bs, bn, bn]),
+            (phi_cpu, vec![bs, bn]),
+            (exo, vec![ba, bn]),
+            (adj, vec![bn, bn]),
+            (link_isq, vec![bn, bn]),
+            (link_lin, vec![bn, bn]),
+            (link_cap, vec![bn, bn]),
+            (comp_isq, vec![bn]),
+            (comp_lin, vec![bn]),
+            (comp_cap, vec![bn]),
+            (packet, vec![bs]),
+            (weight, vec![bs, bn]),
+        ])
+    }
+
+    /// Unpad the 7 outputs back to the real scenario.
+    fn unpack(&self, net: &Network, outs: Vec<xla::Literal>) -> anyhow::Result<EvalOutputs> {
+        let bn = self.bucket.n;
+        let bk1 = self.bucket.kchain + 1;
+        let n = net.n();
+        let ns = net.num_stages();
+
+        let total_cost = outs[0].to_vec::<f64>()?[0];
+        let t_flat = outs[1].to_vec::<f64>()?; // (BS, BN)
+        let ddt_flat = outs[4].to_vec::<f64>()?; // (BS, BN)
+        let dl_flat = outs[5].to_vec::<f64>()?; // (BS, BN, BN)
+        let dc_flat = outs[6].to_vec::<f64>()?; // (BS, BN)
+
+        let mut traffic = vec![vec![0.0; n]; ns];
+        let mut d_dt = vec![vec![0.0; n]; ns];
+        let mut delta = vec![vec![0.0; n * (n + 1)]; ns];
+        for (a, app) in net.apps.iter().enumerate() {
+            for k in 0..app.num_stages() {
+                let s = net.stages.id(a, k);
+                let ps = a * bk1 + k;
+                for i in 0..n {
+                    traffic[s][i] = t_flat[ps * bn + i];
+                    d_dt[s][i] = ddt_flat[ps * bn + i];
+                    for j in 0..n {
+                        delta[s][i * (n + 1) + j] = dl_flat[(ps * bn + i) * bn + j];
+                    }
+                    delta[s][i * (n + 1) + n] = dc_flat[ps * bn + i];
+                }
+            }
+        }
+        Ok(EvalOutputs {
+            total_cost,
+            traffic,
+            d_dt,
+            delta,
+        })
+    }
+}
+
+/// GP optimizer driven by the PJRT-executed evaluation — the L3 hot path of
+/// the three-layer stack. Iterates are identical to the pure-Rust GP (the
+/// evaluator is numerically equivalent; see tests).
+pub struct XlaGp {
+    pub phi: Strategy,
+    pub opts: GpOptions,
+    runtime: EvalRuntime,
+    support: SupportMask,
+    /// Delayed trust region (when `opts.backtrack`): the cost increase from
+    /// slot t's update is observed in slot t+1's evaluation — revert and
+    /// halve α then, costing no extra XLA calls.
+    prev: Option<(Strategy, f64)>,
+    cur_alpha: f64,
+    rejects: u32,
+}
+
+impl XlaGp {
+    pub fn new(net: &Network, opts: GpOptions) -> anyhow::Result<XlaGp> {
+        let runtime = EvalRuntime::load_for(net)?;
+        Ok(Self::with_runtime(net, runtime, opts))
+    }
+
+    pub fn with_runtime(net: &Network, runtime: EvalRuntime, opts: GpOptions) -> XlaGp {
+        let phi = Strategy::shortest_path_to_dest(net);
+        let support = opts
+            .support
+            .clone()
+            .unwrap_or_else(|| SupportMask::full(net));
+        let cur_alpha = opts.alpha;
+        XlaGp {
+            phi,
+            opts,
+            runtime,
+            support,
+            prev: None,
+            cur_alpha,
+            rejects: 0,
+        }
+    }
+
+    /// Evaluate current φ on the XLA executable.
+    pub fn eval(&self, net: &Network) -> anyhow::Result<EvalOutputs> {
+        self.runtime.eval(net, &self.phi)
+    }
+
+    /// (n, num_apps) of the loaded artifact bucket.
+    pub fn bucket_info(&self) -> (usize, usize) {
+        (self.runtime.bucket().n, self.runtime.bucket().num_apps)
+    }
+
+    /// One GP slot using XLA-computed marginals. With `opts.backtrack` a
+    /// *delayed* trust region applies: a cost increase caused by slot t's
+    /// update is seen in slot t+1's evaluation, where the iterate is
+    /// reverted and the stepsize halved — no extra XLA calls.
+    pub fn step(&mut self, net: &Network) -> anyhow::Result<f64> {
+        let mut out = self.runtime.eval(net, &self.phi)?;
+        if self.opts.backtrack {
+            if let Some((prev_phi, prev_cost)) = self.prev.take() {
+                if out.total_cost > prev_cost + 1e-12 && self.rejects < 6 {
+                    // reject the last update; re-evaluate the restored iterate
+                    self.phi = prev_phi;
+                    self.cur_alpha = (self.cur_alpha * 0.5).max(1e-6);
+                    self.rejects += 1;
+                    out = self.runtime.eval(net, &self.phi)?;
+                } else {
+                    self.rejects = 0;
+                    self.cur_alpha = (self.cur_alpha * 1.3).min(self.opts.alpha);
+                }
+            }
+            self.prev = Some((self.phi.clone(), out.total_cost));
+        }
+        let n = net.n();
+        let mg = Marginals::from_parts(out.d_dt, out.delta, n);
+        let blocked = BlockedSets::compute(net, &self.phi, &mg);
+        for (s, (a, _k)) in net.stages.iter() {
+            let is_final = net.is_final_stage(s);
+            let dest = net.apps[a].dest;
+            for i in 0..n {
+                if is_final && i == dest {
+                    continue;
+                }
+                let drow = mg.delta_row(s, i);
+                let usable = |j: usize| -> bool {
+                    self.support.is_allowed(s, i, j)
+                        && !blocked.is_blocked(s, i, j)
+                        && drow[j] < crate::marginals::INF_MARGINAL
+                };
+                gp_row_update(
+                    self.phi.row_mut(s, i),
+                    drow,
+                    usable,
+                    out.traffic[s][i],
+                    self.cur_alpha,
+                );
+            }
+        }
+        // loop-safety + renormalization, as in the native optimizer
+        for s in 0..net.num_stages() {
+            debug_assert!(self.phi.topo_order(s).is_some(), "XLA GP closed a loop");
+        }
+        self.phi.renormalize(net);
+        Ok(out.total_cost)
+    }
+
+    /// Run `iters` slots; returns the cost trace (cost *before* each step).
+    pub fn run(&mut self, net: &Network, iters: usize) -> anyhow::Result<GpReport> {
+        let mut cost_trace = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            cost_trace.push(self.step(net)?);
+        }
+        let final_cost = self.runtime.eval(net, &self.phi)?.total_cost;
+        Ok(GpReport {
+            final_cost,
+            residual_trace: Vec::new(),
+            iters,
+            converged: false,
+            cost_trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::FlowState;
+    use crate::testutil::small_net;
+
+    fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_or_skip() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.buckets.is_empty());
+        assert!(m.pick(11, 1, 2).is_some(), "abilene must fit a bucket");
+        assert!(m.pick(100, 30, 2).is_some(), "SW must fit a bucket");
+        assert!(m.pick(1000, 1, 2).is_none());
+    }
+
+    #[test]
+    fn xla_eval_matches_native_flow_and_marginals() {
+        let Some(_dir) = artifacts_or_skip() else { return };
+        let net = small_net(true);
+        let rt = EvalRuntime::load_for(&net).unwrap();
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let out = rt.eval(&net, &phi).unwrap();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        assert!(
+            (out.total_cost - fs.total_cost).abs() < 1e-9 * (1.0 + fs.total_cost),
+            "cost: xla {} native {}",
+            out.total_cost,
+            fs.total_cost
+        );
+        for s in 0..net.num_stages() {
+            for i in 0..net.n() {
+                assert!(
+                    (out.traffic[s][i] - fs.traffic[s][i]).abs() < 1e-9,
+                    "t[{s}][{i}]"
+                );
+                assert!(
+                    (out.d_dt[s][i] - mg.d_dt[s][i]).abs()
+                        < 1e-8 * (1.0 + mg.d_dt[s][i].abs()),
+                    "ddt[{s}][{i}]: xla {} native {}",
+                    out.d_dt[s][i],
+                    mg.d_dt[s][i]
+                );
+                for j in 0..=net.n() {
+                    let a = out.delta[s][i * (net.n() + 1) + j];
+                    let b = mg.delta_at(s, i, j);
+                    let both_inf = a >= 1e29 && b >= 1e29;
+                    assert!(
+                        both_inf || (a - b).abs() < 1e-8 * (1.0 + b.abs()),
+                        "delta[{s}][{i}][{j}]: xla {a} native {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xla_gp_descends_like_native() {
+        let Some(_dir) = artifacts_or_skip() else { return };
+        let net = small_net(true);
+        let mut xgp = XlaGp::new(
+            &net,
+            GpOptions {
+                backtrack: false, // strict parity with the native reference
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rep = xgp.run(&net, 30).unwrap();
+        let native_cost = {
+            use crate::algo::gp::GradientProjection;
+            let mut gp = GradientProjection::with_strategy(
+                &net,
+                Strategy::shortest_path_to_dest(&net),
+                GpOptions {
+                    backtrack: false,
+                    ..Default::default()
+                },
+            );
+            for _ in 0..30 {
+                gp.step(&net);
+            }
+            gp.cost(&net)
+        };
+        assert!(
+            (rep.final_cost - native_cost).abs() < 1e-6 * (1.0 + native_cost),
+            "xla {} vs native {native_cost}",
+            rep.final_cost
+        );
+    }
+}

@@ -1,0 +1,340 @@
+//! Packet-level discrete-event simulator (M/M/1 network validator).
+//!
+//! The paper's objective uses D_ij(F) = F/(d̄−F) and C_i(G) = G/(s̄−G) — the
+//! expected queue occupancancies of M/M/1 stations — so by Little's law the
+//! aggregate cost equals λ̄ × expected packet system delay. This DES builds
+//! the *actual* stochastic system: Poisson exogenous arrivals, exponential
+//! link transmission times (rate d̄_ij/L in packets), exponential CPU service
+//! (rate s̄_i/w), random φ-dispatching — and verifies that the measured
+//! time-average occupancy and mean sojourn agree with the analytic D(φ).
+//!
+//! This is the substitution for the authors' flow-level simulator [14] (see
+//! DESIGN.md §2): it validates that the cost we optimize is the delay the
+//! paper claims it is.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::app::Network;
+use crate::cost::CostFn;
+use crate::strategy::{Strategy, PHI_EPS};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+struct Packet {
+    app: usize,
+    k: usize,
+    /// exogenous arrival time (for sojourn measurement)
+    born: f64,
+}
+
+/// Queue station: a link or a CPU.
+struct Station {
+    /// exponential service rate in packets/sec for a given packet is
+    /// `rate_scale / size(pkt)`; for links size = L_(a,k) bits, for CPUs
+    /// size = w_i(a,k) workload units.
+    rate_scale: f64,
+    queue: VecDeque<Packet>,
+    busy: bool,
+    /// time-integral of queue length (incl. in service)
+    area: f64,
+    last_t: f64,
+}
+
+impl Station {
+    fn new(rate_scale: f64) -> Self {
+        Station {
+            rate_scale,
+            queue: VecDeque::new(),
+            busy: false,
+            area: 0.0,
+            last_t: 0.0,
+        }
+    }
+    fn occupancy(&self) -> usize {
+        // the in-service packet sits at the queue front; `busy` only tracks
+        // whether a completion event is outstanding
+        self.queue.len()
+    }
+    fn advance(&mut self, t: f64) {
+        self.area += self.occupancy() as f64 * (t - self.last_t);
+        self.last_t = t;
+    }
+}
+
+#[derive(PartialEq)]
+struct Ev(f64, usize, EvKind);
+
+#[derive(PartialEq, Clone, Debug)]
+enum EvKind {
+    /// exogenous arrival of app `usize` at node (seq in Ev.1 is node)
+    Exo(usize),
+    /// service completion at station (Ev.1 = station id)
+    Done,
+}
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> Ordering {
+        o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal) // min-heap
+    }
+}
+
+/// Measured results.
+#[derive(Clone, Debug)]
+pub struct DesReport {
+    /// time-average number of packets in the network (≈ analytic D(φ)).
+    pub avg_occupancy: f64,
+    /// mean end-to-end sojourn of delivered packets.
+    pub mean_delay: f64,
+    pub delivered: usize,
+    pub sim_time: f64,
+    /// total exogenous arrival rate λ̄ (for Little cross-check).
+    pub lambda: f64,
+}
+
+/// Run the DES for `horizon` simulated seconds.
+///
+/// Requirements: queue cost functions on all stations (their capacities set
+/// the service rates) and a feasible loop-free φ.
+pub fn simulate(
+    net: &Network,
+    phi: &Strategy,
+    horizon: f64,
+    seed: u64,
+) -> anyhow::Result<DesReport> {
+    let n = net.n();
+    let m = net.m();
+    let mut rng = Rng::new(seed);
+
+    // stations: 0..m are links, m..m+n are CPUs
+    let mut stations: Vec<Station> = Vec::with_capacity(m + n);
+    for e in 0..m {
+        let cap = match net.link_cost[e] {
+            CostFn::Queue { cap } => cap,
+            _ => anyhow::bail!("DES requires Queue link costs"),
+        };
+        stations.push(Station::new(cap));
+    }
+    for i in 0..n {
+        let cap = match net.comp_cost[i] {
+            CostFn::Queue { cap } => cap,
+            _ => anyhow::bail!("DES requires Queue comp costs"),
+        };
+        stations.push(Station::new(cap));
+    }
+
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut lambda = 0.0;
+    for (a, app) in net.apps.iter().enumerate() {
+        for i in 0..n {
+            let r = app.input_rates[i];
+            if r > 0.0 {
+                lambda += r;
+                heap.push(Ev(rng.exp(r), i, EvKind::Exo(a)));
+            }
+        }
+    }
+    anyhow::ensure!(lambda > 0.0, "no exogenous traffic");
+
+    let mut delivered = 0usize;
+    let mut delay_sum = 0.0;
+    let mut now = 0.0;
+
+    // helper: dispatch a packet at node i per φ; returns Some(station, pkt)
+    // or None if it exits the network.
+    enum Next {
+        Station(usize, Packet),
+        Exit(f64),
+    }
+    let route = |rng: &mut Rng, net: &Network, phi: &Strategy, node: usize, pkt: Packet| -> Next {
+        let s = net.stages.id(pkt.app, pkt.k);
+        let app = &net.apps[pkt.app];
+        if pkt.k == app.num_tasks && node == app.dest {
+            return Next::Exit(pkt.born);
+        }
+        let row = phi.row(s, node);
+        // sample a direction among positive entries
+        let mut x = rng.f64();
+        for (j, &p) in row.iter().enumerate() {
+            if p <= PHI_EPS {
+                continue;
+            }
+            x -= p;
+            if x <= 0.0 || j == row.len() - 1 {
+                return if j == net.n() {
+                    Next::Station(net.m() + node, pkt) // CPU at node
+                } else {
+                    let e = net.graph.edge_id(node, j).expect("phi on links");
+                    Next::Station(e, pkt)
+                };
+            }
+        }
+        // numerically possible fallthrough: send to first positive direction
+        for (j, &p) in row.iter().enumerate() {
+            if p > PHI_EPS {
+                return if j == net.n() {
+                    Next::Station(net.m() + node, pkt)
+                } else {
+                    let e = net.graph.edge_id(node, j).unwrap();
+                    Next::Station(e, pkt)
+                };
+            }
+        }
+        Next::Exit(pkt.born)
+    };
+
+    // size of a packet at a station
+    let size_at = |net: &Network, st: usize, pkt: &Packet| -> f64 {
+        let s = net.stages.id(pkt.app, pkt.k);
+        if st < net.m() {
+            net.packet_size(s)
+        } else {
+            net.comp_weight[s][st - net.m()].max(1e-9)
+        }
+    };
+
+    // enqueue packet into station, scheduling service if idle
+    macro_rules! enqueue {
+        ($st:expr, $pkt:expr) => {{
+            let stn = &mut stations[$st];
+            stn.advance(now);
+            if stn.busy {
+                stn.queue.push_back($pkt);
+            } else {
+                stn.busy = true;
+                let sz = size_at(net, $st, &$pkt);
+                let rate = stn.rate_scale / sz;
+                stn.queue.push_front($pkt); // in-service at front
+                heap.push(Ev(now + rng.exp(rate), $st, EvKind::Done));
+            }
+        }};
+    }
+
+    while let Some(Ev(t, who, kind)) = heap.pop() {
+        if t > horizon {
+            break;
+        }
+        now = t;
+        match kind {
+            EvKind::Exo(a) => {
+                // schedule next exogenous arrival at this (app, node)
+                let r = net.apps[a].input_rates[who];
+                heap.push(Ev(now + rng.exp(r), who, EvKind::Exo(a)));
+                let pkt = Packet {
+                    app: a,
+                    k: 0,
+                    born: now,
+                };
+                match route(&mut rng, net, phi, who, pkt) {
+                    Next::Station(st, p) => enqueue!(st, p),
+                    Next::Exit(born) => {
+                        delivered += 1;
+                        delay_sum += now - born;
+                    }
+                }
+            }
+            EvKind::Done => {
+                let stn = &mut stations[who];
+                stn.advance(now);
+                stn.busy = false;
+                let mut pkt = stn.queue.pop_front().expect("completion has packet");
+                // start next service if queued
+                if let Some(next_pkt) = stations[who].queue.front() {
+                    let sz = size_at(net, who, next_pkt);
+                    let rate = stations[who].rate_scale / sz;
+                    stations[who].busy = true;
+                    heap.push(Ev(now + rng.exp(rate), who, EvKind::Done));
+                }
+                // where does the packet land?
+                let node = if who < m {
+                    net.graph.edge(who).1 // arrived across link (i, j) -> j
+                } else {
+                    pkt.k += 1; // CPU completed task k+1: stage advances
+                    who - m
+                };
+                match route(&mut rng, net, phi, node, pkt) {
+                    Next::Station(st, p) => enqueue!(st, p),
+                    Next::Exit(born) => {
+                        delivered += 1;
+                        delay_sum += now - born;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut area = 0.0;
+    for stn in &mut stations {
+        stn.advance(horizon.min(now.max(0.0)));
+        area += stn.area;
+    }
+    let sim_time = now.max(1e-9);
+    Ok(DesReport {
+        avg_occupancy: area / sim_time,
+        mean_delay: if delivered > 0 {
+            delay_sum / delivered as f64
+        } else {
+            0.0
+        },
+        delivered,
+        sim_time,
+        lambda,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::gp::{GpOptions, GradientProjection};
+    use crate::flow::FlowState;
+    use crate::testutil::small_net;
+
+    #[test]
+    fn des_matches_analytic_cost_and_littles_law() {
+        let net = small_net(true);
+        let mut gp = GradientProjection::new(&net, GpOptions::default());
+        gp.run(&net, 300);
+        let phi = gp.phi.clone();
+        let analytic = FlowState::solve(&net, &phi).unwrap().total_cost;
+        let rep = simulate(&net, &phi, 4000.0, 42).unwrap();
+        // time-average occupancy ≈ Σ queue costs (M/M/1 stationary mean)
+        let rel = (rep.avg_occupancy - analytic).abs() / analytic;
+        assert!(
+            rel < 0.15,
+            "occupancy {} vs analytic {analytic} (rel {rel:.3})",
+            rep.avg_occupancy
+        );
+        // Little: N = λ W
+        let little = rep.lambda * rep.mean_delay;
+        let rel2 = (little - rep.avg_occupancy).abs() / rep.avg_occupancy;
+        assert!(
+            rel2 < 0.1,
+            "Little mismatch: λW={little} N={}",
+            rep.avg_occupancy
+        );
+        assert!(rep.delivered > 1000);
+    }
+
+    #[test]
+    fn des_rejects_linear_costs() {
+        let net = small_net(false);
+        let phi = Strategy::shortest_path_to_dest(&net);
+        assert!(simulate(&net, &phi, 10.0, 1).is_err());
+    }
+
+    #[test]
+    fn des_deterministic_per_seed() {
+        let net = small_net(true);
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let a = simulate(&net, &phi, 200.0, 7).unwrap();
+        let b = simulate(&net, &phi, 200.0, 7).unwrap();
+        assert_eq!(a.delivered, b.delivered);
+        assert!((a.avg_occupancy - b.avg_occupancy).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,176 @@
+//! Flow-level experiment runner: evaluates algorithms on scenarios.
+//!
+//! This is the engine behind the Fig. 5/6/7 and Table II benches and the
+//! `scfo fig5`/`fig6`/`fig7`/`table2` CLI commands.
+
+use crate::algo::Algorithm;
+use crate::app::Network;
+use crate::config::Scenario;
+use crate::flow::FlowState;
+use crate::util::rng::Rng;
+
+/// Cost of each algorithm on one concrete network.
+#[derive(Clone, Debug)]
+pub struct ComparisonRow {
+    pub scenario: String,
+    pub costs: Vec<(&'static str, f64)>,
+}
+
+impl ComparisonRow {
+    /// Costs normalized by the worst algorithm (the paper's Fig. 5 y-axis).
+    pub fn normalized(&self) -> Vec<(&'static str, f64)> {
+        let worst = self
+            .costs
+            .iter()
+            .map(|(_, c)| *c)
+            .fold(0.0f64, f64::max)
+            .max(1e-300);
+        self.costs.iter().map(|(n, c)| (*n, c / worst)).collect()
+    }
+
+    pub fn cost_of(&self, name: &str) -> Option<f64> {
+        self.costs.iter().find(|(n, _)| *n == name).map(|(_, c)| *c)
+    }
+}
+
+/// Run all four algorithms on a scenario (averaged over `trials` seeds).
+pub fn compare_algorithms(
+    scenario: &Scenario,
+    max_iters: usize,
+    trials: usize,
+) -> anyhow::Result<ComparisonRow> {
+    let mut sums: Vec<(&'static str, f64)> = Algorithm::ALL
+        .iter()
+        .map(|a| (a.name(), 0.0))
+        .collect();
+    for trial in 0..trials {
+        let mut rng = Rng::new(scenario.seed.wrapping_add(trial as u64));
+        let net = scenario.build(&mut rng)?;
+        for (idx, alg) in Algorithm::ALL.iter().enumerate() {
+            let cost = alg.solve(&net, max_iters)?;
+            sums[idx].1 += cost / trials as f64;
+        }
+    }
+    Ok(ComparisonRow {
+        scenario: scenario.name.clone(),
+        costs: sums,
+    })
+}
+
+/// Fig. 6: cost of every algorithm as input rates scale up (Abilene).
+pub fn rate_sweep(
+    base: &Scenario,
+    scales: &[f64],
+    max_iters: usize,
+) -> anyhow::Result<Vec<(f64, ComparisonRow)>> {
+    let mut out = Vec::with_capacity(scales.len());
+    for &scale in scales {
+        let mut sc = base.clone();
+        sc.rate_scale = scale;
+        sc.name = format!("{}-x{:.2}", base.name, scale);
+        out.push((scale, compare_algorithms(&sc, max_iters, 1)?));
+    }
+    Ok(out)
+}
+
+/// Fig. 7 row: average hop counts of data (stage 0) and result (final stage)
+/// packets under GP, as a function of the input packet size L_(a,0).
+#[derive(Clone, Debug)]
+pub struct HopRow {
+    pub l0: f64,
+    pub data_hops: f64,
+    pub result_hops: f64,
+}
+
+/// Fig. 7: sweep L_(a,0), optimize with GP, report per-stage hop counts.
+pub fn packet_size_sweep(
+    base: &Scenario,
+    l0_values: &[f64],
+    max_iters: usize,
+) -> anyhow::Result<Vec<HopRow>> {
+    let mut rows = Vec::with_capacity(l0_values.len());
+    for &l0 in l0_values {
+        let mut sc = base.clone();
+        sc.packet_base = l0;
+        sc.packet_decay = l0 / 2.0; // keep the 10:5:1 ratio shape
+        let mut rng = Rng::new(sc.seed);
+        let mut net = sc.build(&mut rng)?;
+        // Hold computation workloads at the BASE scenario's values: the
+        // sweep isolates the transport-size effect (the paper varies the
+        // packet-size ratio, not the compute demand).
+        for (s, (_a, k)) in net.stages.iter().collect::<Vec<_>>() {
+            let w = if k < base.num_tasks {
+                base.comp_weight * base.packet_size(k)
+            } else {
+                0.0
+            };
+            net.comp_weight[s] = vec![w; net.graph.n()];
+        }
+        let mut gp =
+            crate::algo::gp::GradientProjection::new(&net, crate::algo::gp::GpOptions::default());
+        gp.run(&net, max_iters);
+        let fs = FlowState::solve(&net, &gp.phi).unwrap();
+        let (mut dh, mut rh, mut napps) = (0.0, 0.0, 0.0);
+        for (a, app) in net.apps.iter().enumerate() {
+            let s0 = net.stages.id(a, 0);
+            let sk = net.stages.id(a, app.num_tasks);
+            dh += fs.avg_hops(&net, s0);
+            rh += fs.avg_hops(&net, sk);
+            napps += 1.0;
+        }
+        rows.push(HopRow {
+            l0,
+            data_hops: dh / napps,
+            result_hops: rh / napps,
+        });
+    }
+    Ok(rows)
+}
+
+/// Gap of an algorithm's cost to a lower bound on the optimum: the convex
+/// flow-domain relaxation evaluated by GP itself (GP converges to the global
+/// optimum per Theorem 1, so it IS the reference).
+pub fn optimality_gap(net: &Network, cost: f64, gp_iters: usize) -> anyhow::Result<f64> {
+    let opt = Algorithm::Gp.solve(net, gp_iters)?;
+    Ok(cost / opt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_row_normalization() {
+        let row = ComparisonRow {
+            scenario: "x".into(),
+            costs: vec![("GP", 1.0), ("SPOC", 2.0), ("LCOF", 4.0), ("LPR-SC", 3.0)],
+        };
+        let norm = row.normalized();
+        assert_eq!(norm[0], ("GP", 0.25));
+        assert_eq!(norm[2], ("LCOF", 1.0));
+    }
+
+    #[test]
+    fn abilene_comparison_gp_wins() {
+        let sc = Scenario::table2("abilene").unwrap();
+        let row = compare_algorithms(&sc, 300, 1).unwrap();
+        let gp = row.cost_of("GP").unwrap();
+        for (name, cost) in &row.costs {
+            assert!(
+                gp <= cost * 1.001,
+                "GP ({gp}) must not lose to {name} ({cost})"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_sweep_costs_increase_with_load() {
+        let sc = Scenario::table2("abilene").unwrap();
+        let rows = rate_sweep(&sc, &[0.5, 1.0, 1.5], 200).unwrap();
+        let gp: Vec<f64> = rows
+            .iter()
+            .map(|(_s, r)| r.cost_of("GP").unwrap())
+            .collect();
+        assert!(gp[0] < gp[1] && gp[1] < gp[2], "{gp:?}");
+    }
+}

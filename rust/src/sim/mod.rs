@@ -1,0 +1,8 @@
+//! Simulation substrates: the flow-level experiment runner ([`flowsim`])
+//! and the packet-level discrete-event validator ([`des`]).
+
+pub mod des;
+pub mod flowsim;
+
+pub use des::{simulate, DesReport};
+pub use flowsim::{compare_algorithms, packet_size_sweep, rate_sweep, ComparisonRow, HopRow};

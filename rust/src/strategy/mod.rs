@@ -1,0 +1,404 @@
+//! The forwarding/offloading strategy φ.
+//!
+//! For each stage (a,k) and node i, `φ_ij(a,k)` is the fraction of i's stage
+//! traffic forwarded to neighbor j, and `φ_i0(a,k)` (the CPU slot) the
+//! fraction handed to i's local CPU to run task k+1. Constraint (1):
+//! each (stage, node) row sums to 1, except the (final stage, destination)
+//! row which sums to 0 (results exit the network there).
+//!
+//! Storage is dense: per stage an (n) × (n+1) row-major matrix; column `n`
+//! is the CPU slot. Dense storage keeps the GP update, the XLA bridge and
+//! the broadcast protocol simple; evaluation sizes (n ≤ 100) make it cheap.
+
+use crate::app::Network;
+use crate::util::rng::Rng;
+
+/// Tolerance for treating a forwarding fraction as zero.
+pub const PHI_EPS: f64 = 1e-12;
+
+/// Renormalize a single φ row to sum `want` (0.0 for exit rows, 1.0
+/// otherwise): zero sub-PHI_EPS entries, then rescale — but only when the
+/// sum is off by more than 1e-9, keeping the operation idempotent. Shared
+/// by [`Strategy::renormalize`] and the distributed node actors so both
+/// produce bit-identical rows.
+pub fn renormalize_row(row: &mut [f64], want: f64) {
+    for v in row.iter_mut() {
+        if *v < PHI_EPS {
+            *v = 0.0;
+        }
+    }
+    if want == 0.0 {
+        row.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    let sum: f64 = row.iter().sum();
+    if sum > PHI_EPS && (sum - want).abs() > 1e-9 {
+        let inv = want / sum;
+        row.iter_mut().for_each(|v| *v *= inv);
+    }
+}
+
+/// Dense strategy variable φ.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Strategy {
+    n: usize,
+    num_stages: usize,
+    /// [stage][i*(n+1) + j]; j == n is the CPU slot.
+    phi: Vec<Vec<f64>>,
+}
+
+impl Strategy {
+    /// All-zero strategy (infeasible until rows are filled).
+    pub fn zeros(n: usize, num_stages: usize) -> Self {
+        Strategy {
+            n,
+            num_stages,
+            phi: vec![vec![0.0; n * (n + 1)]; num_stages],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+    /// Column index of the CPU slot.
+    pub fn cpu(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, s: usize, i: usize, j: usize) -> f64 {
+        self.phi[s][i * (self.n + 1) + j]
+    }
+    #[inline]
+    pub fn set(&mut self, s: usize, i: usize, j: usize, v: f64) {
+        self.phi[s][i * (self.n + 1) + j] = v;
+    }
+    /// Row φ_i(a,k) of length n+1 (last entry = CPU).
+    #[inline]
+    pub fn row(&self, s: usize, i: usize) -> &[f64] {
+        &self.phi[s][i * (self.n + 1)..(i + 1) * (self.n + 1)]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, s: usize, i: usize) -> &mut [f64] {
+        &mut self.phi[s][i * (self.n + 1)..(i + 1) * (self.n + 1)]
+    }
+
+    /// Out-neighbors with positive forwarding fraction (excluding CPU).
+    pub fn positive_links(&self, s: usize, i: usize) -> impl Iterator<Item = usize> + '_ {
+        let row = self.row(s, i);
+        (0..self.n).filter(move |&j| row[j] > PHI_EPS)
+    }
+
+    /// CPU fraction φ_i0.
+    pub fn cpu_frac(&self, s: usize, i: usize) -> f64 {
+        self.get(s, i, self.n)
+    }
+
+    /// Validate feasibility w.r.t. a network: row sums (constraint (1)),
+    /// support restricted to existing links, no CPU offload at final stages,
+    /// and non-negativity.
+    pub fn validate(&self, net: &Network) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n == net.n(), "node count mismatch");
+        anyhow::ensure!(self.num_stages == net.num_stages(), "stage count mismatch");
+        for (s, (a, _k)) in net.stages.iter() {
+            let is_final = net.is_final_stage(s);
+            let dest = net.apps[a].dest;
+            for i in 0..self.n {
+                let row = self.row(s, i);
+                let mut sum = 0.0;
+                for (j, &v) in row.iter().enumerate() {
+                    anyhow::ensure!(
+                        v >= -PHI_EPS && v <= 1.0 + 1e-9,
+                        "phi[{s}][{i}][{j}] = {v} out of [0,1]"
+                    );
+                    if j < self.n && v > PHI_EPS {
+                        anyhow::ensure!(
+                            net.graph.has_edge(i, j),
+                            "phi[{s}][{i}][{j}] > 0 but ({i},{j}) not a link"
+                        );
+                    }
+                    if j == self.n && v > PHI_EPS {
+                        anyhow::ensure!(
+                            !is_final,
+                            "stage {s} is final but phi_cpu[{i}] = {v} > 0"
+                        );
+                    }
+                    sum += v;
+                }
+                let want = if is_final && i == dest { 0.0 } else { 1.0 };
+                anyhow::ensure!(
+                    (sum - want).abs() < 1e-6,
+                    "row sum phi[{s}][{i}] = {sum}, want {want}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Does any stage contain a directed cycle through positive-φ links?
+    /// (CPU transitions advance the stage and cannot close a loop.)
+    pub fn has_loop(&self) -> bool {
+        for s in 0..self.num_stages {
+            if self.stage_has_loop(s) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn stage_has_loop(&self, s: usize) -> bool {
+        // Kahn's algorithm on the positive-φ link subgraph.
+        let n = self.n;
+        let mut indeg = vec![0usize; n];
+        for i in 0..n {
+            for j in self.positive_links(s, i) {
+                indeg[j] += 1;
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut removed = 0;
+        while let Some(u) = queue.pop() {
+            removed += 1;
+            for j in self.positive_links(s, u) {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        removed < n
+    }
+
+    /// Topological order of nodes for stage `s` over positive-φ links.
+    /// Returns `None` if the stage subgraph has a cycle.
+    pub fn topo_order(&self, s: usize) -> Option<Vec<usize>> {
+        let n = self.n;
+        let mut indeg = vec![0usize; n];
+        for i in 0..n {
+            for j in self.positive_links(s, i) {
+                indeg[j] += 1;
+            }
+        }
+        let mut queue: std::collections::VecDeque<usize> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for j in self.positive_links(s, u) {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push_back(j);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Renormalize every row to satisfy constraint (1) exactly (fixes small
+    /// numerical drift after many GP iterations). Idempotent: rows already
+    /// within 1e-9 of their target sum are left untouched, so the leader's
+    /// mirror and the node-local copies ([`crate::distributed`]) stay
+    /// bit-identical under repeated application.
+    pub fn renormalize(&mut self, net: &Network) {
+        for (s, (a, _)) in net.stages.iter() {
+            let is_final = net.is_final_stage(s);
+            let dest = net.apps[a].dest;
+            for i in 0..self.n {
+                let want = if is_final && i == dest { 0.0 } else { 1.0 };
+                renormalize_row(self.row_mut(s, i), want);
+            }
+        }
+    }
+
+    // ---- initial strategies ------------------------------------------------
+
+    /// Feasible loop-free initialization: every stage forwards along the
+    /// min-hop path to the application's destination; all computation happens
+    /// at the destination (φ_{d_a,cpu}(a,k) = 1 for k < |𝒯_a|).
+    ///
+    /// Loop-freeness: next hops strictly decrease hop distance to d_a.
+    pub fn shortest_path_to_dest(net: &Network) -> Self {
+        let n = net.n();
+        let mut phi = Strategy::zeros(n, net.num_stages());
+        for (s, (a, _k)) in net.stages.iter() {
+            let dest = net.apps[a].dest;
+            let (_dist, next) = net.graph.dijkstra_to(dest, |_| 1.0);
+            let is_final = net.is_final_stage(s);
+            for i in 0..n {
+                if i == dest {
+                    if !is_final {
+                        phi.set(s, i, phi.cpu(), 1.0); // compute at destination
+                    }
+                    // final stage at dest: row stays zero (exit)
+                } else {
+                    phi.set(s, i, next[i], 1.0);
+                }
+            }
+        }
+        phi
+    }
+
+    /// Random feasible loop-free initialization: every node spreads its
+    /// stage-(a,k) traffic across neighbors strictly closer (in hop count) to
+    /// d_a with random weights, plus a random CPU fraction (if not final).
+    pub fn random_dag(net: &Network, rng: &mut Rng) -> Self {
+        let n = net.n();
+        let mut phi = Strategy::zeros(n, net.num_stages());
+        for (s, (a, _k)) in net.stages.iter() {
+            let dest = net.apps[a].dest;
+            let (dist, _next) = net.graph.dijkstra_to(dest, |_| 1.0);
+            let is_final = net.is_final_stage(s);
+            for i in 0..n {
+                if i == dest && is_final {
+                    continue;
+                }
+                let mut weights = vec![0.0; n + 1];
+                for &j in net.graph.out_neighbors(i) {
+                    if dist[j] < dist[i] {
+                        weights[j] = rng.range(0.1, 1.0);
+                    }
+                }
+                if !is_final {
+                    weights[n] = rng.range(0.1, 1.0);
+                }
+                let sum: f64 = weights.iter().sum();
+                if sum <= 0.0 {
+                    // destination node of a non-final stage with no downhill
+                    // neighbor: must offload locally
+                    debug_assert!(!is_final);
+                    phi.set(s, i, n, 1.0);
+                } else {
+                    for (j, w) in weights.into_iter().enumerate() {
+                        if w > 0.0 {
+                            phi.set(s, i, j, w / sum);
+                        }
+                    }
+                }
+            }
+        }
+        phi
+    }
+
+    /// L∞ distance between two strategies (convergence diagnostics).
+    pub fn max_diff(&self, other: &Strategy) -> f64 {
+        let mut d: f64 = 0.0;
+        for (a, b) in self.phi.iter().zip(&other.phi) {
+            for (x, y) in a.iter().zip(b) {
+                d = d.max((x - y).abs());
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{Application, Network, StageRegistry};
+    use crate::cost::CostFn;
+    use crate::graph::topologies;
+
+    fn net() -> Network {
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let mut r = vec![0.0; n];
+        r[0] = 1.0;
+        r[3] = 0.5;
+        let apps = vec![Application {
+            dest: 10,
+            num_tasks: 2,
+            packet_sizes: vec![10.0, 5.0, 1.0],
+            input_rates: r,
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; n]; stages.len()];
+        Network::new(
+            g,
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; m],
+            vec![CostFn::Linear { d: 1.0 }; n],
+            cw,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shortest_path_init_is_feasible_and_loop_free() {
+        let net = net();
+        let phi = Strategy::shortest_path_to_dest(&net);
+        phi.validate(&net).unwrap();
+        assert!(!phi.has_loop());
+    }
+
+    #[test]
+    fn random_init_is_feasible_and_loop_free_many_seeds() {
+        let net = net();
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let phi = Strategy::random_dag(&net, &mut rng);
+            phi.validate(&net).unwrap();
+            assert!(!phi.has_loop(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_rows() {
+        let net = net();
+        let mut phi = Strategy::shortest_path_to_dest(&net);
+        // break a row sum
+        phi.set(0, 0, 1, 0.5);
+        assert!(phi.validate(&net).is_err());
+    }
+
+    #[test]
+    fn validate_catches_non_link_support() {
+        let net = net();
+        let mut phi = Strategy::shortest_path_to_dest(&net);
+        // 0 -> 10 is not an Abilene link
+        let row = phi.row_mut(0, 0);
+        row.iter_mut().for_each(|v| *v = 0.0);
+        phi.set(0, 0, 10, 1.0);
+        assert!(phi.validate(&net).is_err());
+    }
+
+    #[test]
+    fn loop_detection() {
+        let net = net();
+        let mut phi = Strategy::shortest_path_to_dest(&net);
+        // create a 2-cycle 0 <-> 1 in stage 0
+        let s = 0;
+        let r0 = phi.row_mut(s, 0);
+        r0.iter_mut().for_each(|v| *v = 0.0);
+        phi.set(s, 0, 1, 1.0);
+        let r1 = phi.row_mut(s, 1);
+        r1.iter_mut().for_each(|v| *v = 0.0);
+        phi.set(s, 1, 0, 1.0);
+        assert!(phi.has_loop());
+        assert!(phi.topo_order(s).is_none());
+    }
+
+    #[test]
+    fn topo_order_covers_all_nodes() {
+        let net = net();
+        let phi = Strategy::shortest_path_to_dest(&net);
+        for s in 0..net.num_stages() {
+            let order = phi.topo_order(s).unwrap();
+            assert_eq!(order.len(), net.n());
+        }
+    }
+
+    #[test]
+    fn renormalize_fixes_drift() {
+        let net = net();
+        let mut phi = Strategy::shortest_path_to_dest(&net);
+        let j = net.graph.out_neighbors(0)[0];
+        let cur = phi.get(0, 0, j);
+        phi.set(0, 0, j, cur + 1e-9);
+        phi.renormalize(&net);
+        phi.validate(&net).unwrap();
+    }
+}

@@ -1,0 +1,45 @@
+//! Shared test fixtures (compiled for unit tests, integration tests via the
+//! `testutil` feature, and benches).
+
+use crate::app::{Application, Network, StageRegistry};
+use crate::cost::CostFn;
+use crate::graph::{topologies, Graph};
+
+/// Abilene network, one 2-task app (input at nodes 0 and 3, destination 9).
+/// `queue = true` uses M/M/1 costs; otherwise linear.
+pub fn small_net(queue: bool) -> Network {
+    let g = topologies::abilene();
+    let n = g.n();
+    let m = g.m();
+    let mut r = vec![0.0; n];
+    r[0] = 1.0;
+    r[3] = 0.8;
+    let apps = vec![Application {
+        dest: 9,
+        num_tasks: 2,
+        packet_sizes: vec![10.0, 5.0, 1.0],
+        input_rates: r,
+    }];
+    let stages = StageRegistry::new(&apps);
+    let cw = vec![vec![1.0; n]; stages.len()];
+    let (lc, cc) = if queue {
+        (CostFn::Queue { cap: 40.0 }, CostFn::Queue { cap: 12.0 })
+    } else {
+        (CostFn::Linear { d: 1.0 }, CostFn::Linear { d: 1.0 })
+    };
+    Network::new(g, apps, vec![lc; m], vec![cc; n], cw).unwrap()
+}
+
+/// 3-node path 0 <-> 1 <-> 2, single 1-task app from 0 to 2.
+pub fn path3(link: CostFn, comp: CostFn) -> Network {
+    let g = Graph::bidirected(3, &[(0, 1), (1, 2)]).unwrap();
+    let apps = vec![Application {
+        dest: 2,
+        num_tasks: 1,
+        packet_sizes: vec![2.0, 1.0],
+        input_rates: vec![1.0, 0.0, 0.0],
+    }];
+    let stages = StageRegistry::new(&apps);
+    let cw = vec![vec![1.0; 3]; stages.len()];
+    Network::new(g.clone(), apps, vec![link; g.m()], vec![comp; 3], cw).unwrap()
+}

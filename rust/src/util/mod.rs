@@ -1,0 +1,27 @@
+//! Shared substrates: deterministic PRNG, JSON, statistics, property-test
+//! harness, timing and logging. These replace external crates (rand, serde,
+//! proptest, criterion plumbing) that are unavailable in this offline build.
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Float comparison helper used across tests: |a-b| <= atol + rtol*|b|.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::close;
+
+    #[test]
+    fn close_semantics() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-6));
+    }
+}

@@ -1,0 +1,153 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Usage (`no_run`: doctest binaries can't locate libxla's rpath in this
+//! offline environment; the behaviour is covered by unit tests below):
+//! ```no_run
+//! use scfo::prop_assert;
+//! use scfo::util::prop::{forall, Gen};
+//! forall("sum is commutative", 100, |g: &mut Gen| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     prop_assert!(g, (a + b - (b + a)).abs() < 1e-12, "a={a} b={b}");
+//!     true
+//! });
+//! ```
+//!
+//! Each case gets a deterministic seed derived from the test name and case
+//! index, so failures are reproducible and reported with the failing seed.
+
+use super::rng::Rng;
+
+/// Per-case random input generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+    pub case: usize,
+    failure: Option<String>,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        lo + self.rng.usize(hi_incl - lo + 1)
+    }
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+    /// Record a failure message (used by `prop_assert!`).
+    pub fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+    }
+}
+
+/// Assert inside a property; records the message and aborts the case.
+#[macro_export]
+macro_rules! prop_assert {
+    ($g:expr, $cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            $g.fail(format!($($fmt)*));
+            return false;
+        }
+    };
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `cases` random cases of the property. Panics (with seed + message) on
+/// the first failing case. The closure returns `true` on success; `false`
+/// (usually via `prop_assert!`) on failure.
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> bool,
+{
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            seed,
+            case,
+            failure: None,
+        };
+        let ok = prop(&mut g);
+        if !ok || g.failure.is_some() {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {}",
+                g.failure.unwrap_or_else(|| "returned false".into())
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debug helper).
+pub fn replay<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> bool,
+{
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        seed,
+        case: 0,
+        failure: None,
+    };
+    let ok = prop(&mut g);
+    assert!(
+        ok && g.failure.is_none(),
+        "replay of '{name}' seed {seed:#x} failed: {:?}",
+        g.failure
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivially true", 50, |_g| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_seed() {
+        forall("always false", 10, |g| {
+            prop_assert!(g, false, "nope");
+            true
+        });
+    }
+
+    #[test]
+    fn deterministic_inputs_per_name() {
+        let mut first: Vec<f64> = vec![];
+        forall("det", 5, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            true
+        });
+        let mut second: Vec<f64> = vec![];
+        forall("det", 5, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,108 @@
+//! Distributed-runtime integration: larger topologies, heavier loss, churn.
+
+use std::time::Duration;
+
+use scfo::config::Scenario;
+use scfo::distributed::{Cluster, ClusterOptions, LossyConfig};
+use scfo::prelude::*;
+
+#[test]
+fn geant_cluster_converges_to_centralized_optimum() {
+    let sc = Scenario::table2("geant").unwrap();
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng).unwrap();
+    let phi0 = Strategy::shortest_path_to_dest(&net);
+    let mut cluster = Cluster::spawn(
+        net.clone(),
+        phi0,
+        ClusterOptions {
+            alpha: 0.1,
+            ..Default::default()
+        },
+    );
+    cluster.run(1200);
+    let distributed = cluster.cost();
+    cluster.shutdown();
+
+    let mut gp = GradientProjection::new(&net, GpOptions::default());
+    let optimum = gp.run(&net, 2500).final_cost;
+    assert!(
+        distributed <= optimum * 1.10 + 1e-9,
+        "distributed {distributed} vs centralized {optimum}"
+    );
+}
+
+#[test]
+fn heavy_loss_still_makes_progress() {
+    // moderate load: this test isolates loss handling, not saturation
+    let mut sc = Scenario::table2("abilene").unwrap();
+    sc.rate_scale = 0.7;
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng).unwrap();
+    let phi0 = Strategy::shortest_path_to_dest(&net);
+    let start_cost = scfo::flow::FlowState::solve(&net, &phi0).unwrap().total_cost;
+    let mut cluster = Cluster::spawn(
+        net.clone(),
+        phi0,
+        ClusterOptions {
+            alpha: 0.1,
+            slot_timeout: Duration::from_millis(200),
+            lossy: Some(LossyConfig {
+                drop_prob: 0.05,
+                seed: 3,
+            }),
+            adaptive: true,
+        },
+    );
+    let outcomes = cluster.run(60);
+    let applied = outcomes.iter().filter(|o| o.applied).count();
+    assert!(applied >= 10, "almost nothing applied under 5% loss: {applied}");
+    assert!(cluster.dropped_messages() > 0);
+    let end = cluster.cost();
+    assert!(
+        end < start_cost,
+        "no progress under loss: {start_cost} -> {end}"
+    );
+    // state stays sane throughout
+    cluster.phi.validate(&net).unwrap();
+    assert!(!cluster.phi.has_loop());
+    cluster.shutdown();
+}
+
+#[test]
+fn rate_churn_tracked_by_cluster() {
+    let sc = Scenario::table2("abilene").unwrap();
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng).unwrap();
+    let phi0 = Strategy::shortest_path_to_dest(&net);
+    let mut cluster = Cluster::spawn(net, phi0, ClusterOptions::default());
+    cluster.run(60);
+    // churn every app's first source up and down repeatedly; after each
+    // stationary stretch the cluster must sit near the clairvoyant optimum
+    // for the CURRENT rates
+    for round in 0..3 {
+        let scale = if round % 2 == 0 { 1.25 } else { 0.8 };
+        let napps = cluster.network().apps.len();
+        for a in 0..napps {
+            let src = cluster
+                .network()
+                .apps[a]
+                .input_rates
+                .iter()
+                .position(|&r| r > 0.0)
+                .unwrap();
+            let r = cluster.network().apps[a].input_rates[src];
+            cluster.set_input_rate(a, src, r * scale);
+        }
+        cluster.run(120);
+        let settled = cluster.cost();
+        let truth = cluster.network().clone();
+        let mut gp = GradientProjection::new(&truth, GpOptions::default());
+        let opt = gp.run(&truth, 2500).final_cost;
+        assert!(
+            settled <= opt * 1.15 + 1e-9,
+            "round {round}: settled {settled} vs optimum {opt}"
+        );
+    }
+    cluster.shutdown();
+}

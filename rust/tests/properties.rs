@@ -1,0 +1,253 @@
+//! Property-based integration tests over the coordinator invariants:
+//! flow conservation, loop-freeness, monotone descent, optimality.
+
+use scfo::algo::blocked::BlockedSets;
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::app::{Application, Network, StageRegistry};
+use scfo::cost::CostFn;
+use scfo::flow::FlowState;
+use scfo::graph::topologies;
+use scfo::marginals::Marginals;
+use scfo::prelude::*;
+use scfo::util::prop::forall;
+use scfo::util::rng::Rng;
+
+/// Random network on a random Table-II-style topology with random apps.
+fn random_network(rng: &mut Rng) -> Network {
+    let topo = ["connected-er", "balanced-tree", "fog", "abilene", "lhc", "geant"]
+        [rng.usize(6)];
+    let g = topologies::by_name(topo, rng).unwrap();
+    let n = g.n();
+    let m = g.m();
+    let num_apps = 1 + rng.usize(3);
+    let mut apps = Vec::new();
+    for _ in 0..num_apps {
+        let dest = rng.usize(n);
+        let num_tasks = 1 + rng.usize(2);
+        let mut input_rates = vec![0.0; n];
+        let nsrc = 1 + rng.usize(3);
+        for s in rng.choose_distinct(n, nsrc) {
+            input_rates[s] = rng.range(0.2, 1.0);
+        }
+        let packet_sizes = (0..=num_tasks)
+            .map(|k| (8.0 - 3.0 * k as f64).max(1.0))
+            .collect();
+        apps.push(Application {
+            dest,
+            num_tasks,
+            packet_sizes,
+            input_rates,
+        });
+    }
+    let stages = StageRegistry::new(&apps);
+    let comp_weight = (0..stages.len())
+        .map(|_| (0..n).map(|_| rng.range(0.5, 2.0)).collect())
+        .collect();
+    let link_cost = (0..m)
+        .map(|_| CostFn::Queue {
+            cap: rng.range(30.0, 60.0),
+        })
+        .collect();
+    let comp_cost = (0..n)
+        .map(|_| CostFn::Queue {
+            cap: rng.range(10.0, 25.0),
+        })
+        .collect();
+    Network::new(g, apps, link_cost, comp_cost, comp_weight).unwrap()
+}
+
+#[test]
+fn prop_flow_conservation_holds_for_random_strategies() {
+    forall("flow conservation", 40, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let res = fs.conservation_residual(&net, &phi);
+        scfo::prop_assert!(g, res < 1e-8, "residual {res}");
+        true
+    });
+}
+
+#[test]
+fn prop_gp_iterates_stay_feasible_and_loop_free() {
+    forall("gp invariants", 15, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let phi0 = Strategy::random_dag(&net, &mut rng);
+        let mut gp = GradientProjection::with_strategy(&net, phi0, GpOptions::default());
+        for it in 0..25 {
+            gp.step(&net);
+            scfo::prop_assert!(
+                g,
+                gp.phi.validate(&net).is_ok(),
+                "iterate {it} infeasible: {:?}",
+                gp.phi.validate(&net).err()
+            );
+            scfo::prop_assert!(g, !gp.phi.has_loop(), "iterate {it} has a loop");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_gp_cost_never_increases() {
+    forall("gp monotone descent", 15, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let phi0 = Strategy::random_dag(&net, &mut rng);
+        let mut gp = GradientProjection::with_strategy(&net, phi0, GpOptions::default());
+        let mut prev = f64::INFINITY;
+        for it in 0..30 {
+            let st = gp.step(&net);
+            scfo::prop_assert!(
+                g,
+                st.cost <= prev + 1e-9,
+                "iterate {it} increased cost {prev} -> {}",
+                st.cost
+            );
+            prev = st.cost;
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_marginals_match_finite_differences() {
+    forall("marginal fd-check", 12, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        // spot-check a few positive directions
+        let mut checked = 0;
+        'outer: for s in 0..net.num_stages() {
+            for i in 0..net.n() {
+                if fs.traffic[s][i] < 1e-3 {
+                    continue;
+                }
+                for j in phi.positive_links(s, i).collect::<Vec<_>>() {
+                    let analytic = mg.d_dphi(&fs, s, i, j);
+                    let fd = Marginals::fd_check(&net, &phi, s, i, j, 1e-6).unwrap();
+                    scfo::prop_assert!(
+                        g,
+                        (analytic - fd).abs() < 1e-3 * (1.0 + analytic.abs()),
+                        "s={s} i={i} j={j} analytic {analytic} fd {fd}"
+                    );
+                    checked += 1;
+                    if checked >= 8 {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_blocked_sets_prevent_loop_formation() {
+    forall("blocked sets vs loops", 15, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let bs = BlockedSets::compute(&net, &phi, &mg);
+        // for every stage: adding ANY unblocked direction to phi must keep
+        // the stage acyclic
+        for s in 0..net.num_stages() {
+            let mut test_phi = phi.clone();
+            for i in 0..net.n() {
+                for j in 0..net.n() {
+                    if !bs.is_blocked(s, i, j) && test_phi.get(s, i, j) == 0.0 {
+                        test_phi.set(s, i, j, 1e-6);
+                    }
+                }
+            }
+            scfo::prop_assert!(
+                g,
+                test_phi.topo_order(s).is_some(),
+                "stage {s}: unioning all unblocked directions formed a loop"
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_converged_gp_satisfies_condition6() {
+    forall("condition-6 at convergence", 6, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let mut gp = GradientProjection::new(&net, GpOptions::default());
+        let rep = gp.run(&net, 4000);
+        if !rep.converged {
+            // extremely slow cases may need more iterations; only check
+            // that the residual has become small
+            let last = *rep.residual_trace.last().unwrap();
+            scfo::prop_assert!(g, last < 0.2, "residual stuck at {last}");
+            return true;
+        }
+        let fs = FlowState::solve(&net, &gp.phi).unwrap();
+        let mg = Marginals::compute(&net, &gp.phi, &fs);
+        let res = mg.condition6_residual(&net, &gp.phi);
+        scfo::prop_assert!(g, res < 1e-6, "converged but residual {res}");
+        true
+    });
+}
+
+#[test]
+fn prop_gp_beats_or_ties_every_baseline() {
+    forall("gp is global optimum", 8, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let gp_cost = scfo::algo::Algorithm::Gp.solve(&net, 1500).unwrap();
+        for alg in [
+            scfo::algo::Algorithm::Spoc,
+            scfo::algo::Algorithm::Lcof,
+            scfo::algo::Algorithm::LprSc,
+        ] {
+            let c = alg.solve(&net, 800).unwrap();
+            scfo::prop_assert!(
+                g,
+                gp_cost <= c * 1.005 + 1e-9,
+                "GP {gp_cost} lost to {} {c}",
+                alg.name()
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_broadcast_always_matches_centralized() {
+    forall("broadcast == recursion", 20, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let out = scfo::broadcast::run_broadcast(&net, &phi, &fs);
+        for s in 0..net.num_stages() {
+            for i in 0..net.n() {
+                let a = out.d_dt[s][i];
+                let b = mg.d_dt[s][i];
+                scfo::prop_assert!(
+                    g,
+                    (a - b).abs() < 1e-9 * (1.0 + b.abs()),
+                    "s={s} i={i}: broadcast {a} vs centralized {b}"
+                );
+            }
+        }
+        scfo::prop_assert!(
+            g,
+            out.messages == net.num_stages() * net.m(),
+            "messages {} != |S||E| {}",
+            out.messages,
+            net.num_stages() * net.m()
+        );
+        true
+    });
+}

@@ -1,0 +1,113 @@
+//! Three-layer parity: the PJRT-executed artifact (L1 Pallas + L2 JAX) must
+//! agree with the native Rust evaluation on every Table-II scenario, and the
+//! XLA-driven GP must track the native GP trajectory.
+//!
+//! Skipped (with a message) when `make artifacts` has not been run.
+
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::config::Scenario;
+use scfo::flow::FlowState;
+use scfo::marginals::Marginals;
+use scfo::prelude::*;
+use scfo::runtime::{EvalRuntime, XlaGp};
+use scfo::util::rng::Rng;
+
+fn artifacts_or_skip() -> bool {
+    if scfo::runtime::artifacts_available() {
+        true
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn xla_eval_matches_native_on_all_table2_scenarios() {
+    if !artifacts_or_skip() {
+        return;
+    }
+    for name in ["connected-er", "balanced-tree", "fog", "abilene", "lhc", "geant"] {
+        let sc = Scenario::table2(name).unwrap();
+        let mut rng = Rng::new(sc.seed);
+        let net = sc.build(&mut rng).unwrap();
+        let rt = EvalRuntime::load_for(&net).unwrap();
+        // a random mixed strategy exercises split forwarding + offloading
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let out = rt.eval(&net, &phi).unwrap();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        assert!(
+            (out.total_cost - fs.total_cost).abs() < 1e-8 * (1.0 + fs.total_cost.abs()),
+            "{name}: cost xla {} native {}",
+            out.total_cost,
+            fs.total_cost
+        );
+        for s in 0..net.num_stages() {
+            for i in 0..net.n() {
+                assert!(
+                    (out.d_dt[s][i] - mg.d_dt[s][i]).abs()
+                        < 1e-7 * (1.0 + mg.d_dt[s][i].abs()),
+                    "{name}: ddt[{s}][{i}] xla {} native {}",
+                    out.d_dt[s][i],
+                    mg.d_dt[s][i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_eval_matches_native_on_sw_large_bucket() {
+    if !artifacts_or_skip() {
+        return;
+    }
+    let sc = Scenario::table2("sw").unwrap();
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng).unwrap();
+    let rt = EvalRuntime::load_for(&net).unwrap();
+    assert_eq!(rt.bucket().n, 128, "SW must land in the large bucket");
+    let phi = Strategy::shortest_path_to_dest(&net);
+    let out = rt.eval(&net, &phi).unwrap();
+    let fs = FlowState::solve(&net, &phi).unwrap();
+    assert!(
+        (out.total_cost - fs.total_cost).abs() < 1e-7 * (1.0 + fs.total_cost.abs()),
+        "cost xla {} native {}",
+        out.total_cost,
+        fs.total_cost
+    );
+}
+
+#[test]
+fn xla_gp_trajectory_tracks_native() {
+    if !artifacts_or_skip() {
+        return;
+    }
+    let sc = Scenario::table2("abilene").unwrap();
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng).unwrap();
+    let mut xgp = XlaGp::new(
+        &net,
+        GpOptions {
+            backtrack: false, // strict trajectory parity
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut gp = GradientProjection::with_strategy(
+        &net,
+        Strategy::shortest_path_to_dest(&net),
+        GpOptions {
+            backtrack: false,
+            ..Default::default()
+        },
+    );
+    for it in 0..40 {
+        xgp.step(&net).unwrap();
+        gp.step(&net);
+        let diff = xgp.phi.max_diff(&gp.phi);
+        assert!(
+            diff < 1e-6,
+            "iteration {it}: XLA and native phi diverged by {diff}"
+        );
+    }
+}
