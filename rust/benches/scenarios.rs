@@ -1,0 +1,40 @@
+//! Scenario-engine bench: run the full default matrix in parallel and print
+//! the GP-vs-baselines summary table (the numbers future perf/scale PRs
+//! report against).
+//!
+//! ```bash
+//! cargo bench --bench scenarios
+//! ```
+
+use scfo::bench::{print_table, scenario_summary_rows, SCENARIO_SUMMARY_HEADER};
+use scfo::scenarios::{run_batch, RunnerOptions, ScenarioSpec};
+use scfo::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let specs = ScenarioSpec::matrix();
+    let jobs = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    eprintln!("running {} scenarios on {jobs} workers", specs.len());
+    let watch = Stopwatch::start();
+    let reports = run_batch(
+        &specs,
+        &RunnerOptions {
+            jobs,
+            out_dir: Some(std::path::PathBuf::from("reports/scenarios")),
+            quiet: false,
+        },
+    )?;
+    print_table(
+        "Scenario engine — GP vs baselines (ratios to GP)",
+        &SCENARIO_SUMMARY_HEADER,
+        &scenario_summary_rows(&reports),
+    );
+    let wins = reports.iter().filter(|r| r.gp_within_baselines).count();
+    println!(
+        "GP within every baseline: {wins}/{} scenarios; wall {:.1}s; reports in reports/scenarios",
+        reports.len(),
+        watch.elapsed_secs()
+    );
+    Ok(())
+}

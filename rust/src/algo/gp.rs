@@ -19,6 +19,28 @@
 //! out-directions a node may ever use (SPOC: shortest-path next hop + CPU;
 //! LCOF: CPU only for non-final stages), turning GP into the restricted
 //! optimizers the paper compares against.
+//!
+//! # Examples
+//!
+//! Optimize a Table-II instance and observe monotone descent to a feasible,
+//! loop-free strategy:
+//!
+//! ```
+//! use scfo::algo::gp::{GpOptions, GradientProjection};
+//! use scfo::config::Scenario;
+//! use scfo::util::rng::Rng;
+//!
+//! let scenario = Scenario::table2("abilene").unwrap();
+//! let mut rng = Rng::new(scenario.seed);
+//! let net = scenario.build(&mut rng).unwrap();
+//!
+//! let mut gp = GradientProjection::new(&net, GpOptions::default());
+//! let first = gp.step(&net).cost;
+//! let report = gp.run(&net, 40);
+//! assert!(report.final_cost <= first + 1e-9, "GP never increases cost");
+//! gp.phi.validate(&net).unwrap();
+//! assert!(!gp.phi.has_loop());
+//! ```
 
 use crate::algo::blocked::BlockedSets;
 use crate::app::Network;

@@ -102,6 +102,40 @@ impl Bench {
     }
 }
 
+/// Format scenario-engine batch results ([`crate::scenarios::run_batch`])
+/// as table rows for [`print_table`]: one row per scenario with GP's
+/// absolute cost and each baseline's cost ratio to GP. Shared by
+/// `scfo scenarios run` and the `scenarios` bench target.
+pub fn scenario_summary_rows(reports: &[crate::scenarios::ScenarioReport]) -> Vec<Vec<String>> {
+    reports
+        .iter()
+        .map(|rep| {
+            let gp = rep.gp_cost();
+            let mut cells = vec![
+                rep.name.clone(),
+                format!("{}/{}", rep.n, rep.m / 2),
+                rep.congestion.clone(),
+                format!("{gp:.4}"),
+            ];
+            for (name, cost) in rep.costs.iter().skip(1) {
+                let ratio = cost / gp.max(1e-300);
+                cells.push(if ratio > 50.0 {
+                    format!("sat({name})")
+                } else {
+                    format!("{ratio:.2}x")
+                });
+            }
+            cells.push(if rep.gp_within_baselines { "yes" } else { "NO" }.to_string());
+            cells
+        })
+        .collect()
+}
+
+/// Header matching [`scenario_summary_rows`].
+pub const SCENARIO_SUMMARY_HEADER: [&str; 8] = [
+    "scenario", "|V|/|E|", "congestion", "GP cost", "SPOC", "LCOF", "LPR-SC", "GP best",
+];
+
 /// Print a markdown-style results table (used by the fig/table benches so
 /// EXPERIMENTS.md rows can be pasted verbatim).
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {

@@ -71,6 +71,12 @@ impl Args {
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
+
+    /// First positional argument after the command — the subcommand of
+    /// two-level commands like `scfo scenarios run`.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +117,15 @@ mod tests {
         let a = parse("run --quiet");
         assert!(a.switch("quiet"));
         assert_eq!(a.flag("quiet"), None);
+    }
+
+    #[test]
+    fn subcommand_is_first_positional() {
+        let a = parse("scenarios run --all --jobs 4");
+        assert_eq!(a.command.as_deref(), Some("scenarios"));
+        assert_eq!(a.subcommand(), Some("run"));
+        assert!(a.switch("all"));
+        assert_eq!(a.flag_usize("jobs", 1).unwrap(), 4);
+        assert_eq!(parse("table2").subcommand(), None);
     }
 }

@@ -97,6 +97,15 @@ impl Scenario {
     /// Build the concrete network (topology + apps + costs) from the seed.
     pub fn build(&self, rng: &mut Rng) -> anyhow::Result<Network> {
         let graph = topologies::by_name(&self.topology, rng)?;
+        self.build_on(graph, rng)
+    }
+
+    /// Build the network on an already-constructed topology. The scenario
+    /// engine uses this to share cached graphs across related runs: `rng`
+    /// then only drives application placement, so a cached graph plus a
+    /// fresh rng reproduces exactly the same network as an uncached build
+    /// with a separate topology rng.
+    pub fn build_on(&self, graph: crate::graph::Graph, rng: &mut Rng) -> anyhow::Result<Network> {
         let n = graph.n();
         let mut apps = Vec::with_capacity(self.num_apps);
         for _ in 0..self.num_apps {
@@ -213,9 +222,27 @@ impl Scenario {
         Ok(())
     }
 
+    /// Load a scenario config from a `.json` or `.toml` file (detected by
+    /// extension; anything except `.toml` is parsed as JSON).
     pub fn load(path: &std::path::Path) -> anyhow::Result<Scenario> {
         let text = std::fs::read_to_string(path)?;
-        Scenario::from_json(&Json::parse(&text)?)
+        let v = parse_config_text(&text, path)?;
+        Scenario::from_json(&v)
+    }
+}
+
+/// Parse config text as TOML (for `.toml` paths) or JSON (everything else)
+/// into the shared [`Json`] value model.
+pub fn parse_config_text(text: &str, path: &std::path::Path) -> anyhow::Result<Json> {
+    let is_toml = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .map(|e| e.eq_ignore_ascii_case("toml"))
+        .unwrap_or(false);
+    if is_toml {
+        crate::util::toml::parse(text)
+    } else {
+        Ok(Json::parse(text)?)
     }
 }
 
@@ -270,5 +297,51 @@ mod tests {
         let sc = Scenario::sw_linear();
         assert_eq!(sc.link_kind, CostKind::Linear);
         assert_eq!(sc.name, "sw-linear");
+    }
+
+    #[test]
+    fn toml_config_parses_like_json() {
+        let toml_text = r#"
+            name = "custom"
+            topology = "grid-3x3"
+            num_apps = 2
+            link_kind = "queue"
+            link_param = 12.0
+        "#;
+        let v = parse_config_text(toml_text, std::path::Path::new("x.toml")).unwrap();
+        let sc = Scenario::from_json(&v).unwrap();
+        assert_eq!(sc.topology, "grid-3x3");
+        assert_eq!(sc.num_apps, 2);
+        assert_eq!(sc.link_param, 12.0);
+        // unknown extension falls back to JSON
+        let v2 = parse_config_text(
+            r#"{"topology": "abilene"}"#,
+            std::path::Path::new("x.json"),
+        )
+        .unwrap();
+        assert_eq!(
+            Scenario::from_json(&v2).unwrap().topology,
+            "abilene"
+        );
+    }
+
+    #[test]
+    fn build_on_matches_build_with_split_rngs() {
+        // a cached-graph build (build_on) must reproduce the uncached build
+        // exactly when the same app rng is used
+        let sc = Scenario::table2("connected-er").unwrap();
+        let mut topo_rng = Rng::new(sc.seed);
+        let graph = topologies::by_name(&sc.topology, &mut topo_rng).unwrap();
+        let mut full_rng = Rng::new(sc.seed);
+        let reference = sc.build(&mut full_rng).unwrap();
+        // replay: same graph, rng positioned after topology draws
+        let mut topo_rng2 = Rng::new(sc.seed);
+        let graph2 = topologies::by_name(&sc.topology, &mut topo_rng2).unwrap();
+        assert_eq!(graph.edges(), graph2.edges());
+        let cached = sc.build_on(graph2, &mut topo_rng2).unwrap();
+        for (a, b) in reference.apps.iter().zip(&cached.apps) {
+            assert_eq!(a.dest, b.dest);
+            assert_eq!(a.input_rates, b.input_rates);
+        }
     }
 }

@@ -15,11 +15,23 @@ use crate::app::Network;
 use crate::strategy::{Strategy, PHI_EPS};
 
 /// Solver failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FlowError {
-    #[error("strategy has a routing loop in stage {stage}")]
+    /// The strategy's positive-φ subgraph for `stage` contains a cycle.
     Loop { stage: usize },
 }
+
+impl std::fmt::Display for FlowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FlowError::Loop { stage } => {
+                write!(f, "strategy has a routing loop in stage {stage}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FlowError {}
 
 /// Complete flow-level state of the network under a strategy.
 #[derive(Clone, Debug)]

@@ -202,6 +202,8 @@ pub fn small_world(n: usize, extra: usize, rng: &mut Rng) -> Graph {
             }
         }
     }
+    // clamp to the pairs that remain, or the rejection loop below never ends
+    let extra = extra.min(n * (n - 1) / 2 - edges.len());
     let mut added = 0;
     while added < extra {
         let u = rng.usize(n);
@@ -218,6 +220,53 @@ pub fn small_world(n: usize, extra: usize, rng: &mut Rng) -> Graph {
     Graph::bidirected(n, &edges).expect("valid small-world")
 }
 
+/// Rectangular grid (mesh) topology: `rows × cols` nodes, node `(r, c)` is
+/// index `r * cols + c`, linked to its right and down neighbors.
+pub fn grid(rows: usize, cols: usize) -> Graph {
+    assert!(rows >= 1 && cols >= 1, "grid needs positive dimensions");
+    let mut edges = Vec::with_capacity(2 * rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            if c + 1 < cols {
+                edges.push((i, i + 1));
+            }
+            if r + 1 < rows {
+                edges.push((i, i + cols));
+            }
+        }
+    }
+    Graph::bidirected(rows * cols, &edges).expect("valid grid")
+}
+
+/// k-ary fat-tree switching fabric (hosts omitted): `(k/2)²` core switches
+/// plus `k` pods of `k/2` aggregation and `k/2` edge switches. `k` must be
+/// even and ≥ 2. Node layout: cores first, then per pod aggregation then
+/// edge switches. Total nodes: `(k/2)² + k²`; undirected edges:
+/// `(k/2)²·k` core–agg plus `k·(k/2)²` agg–edge.
+pub fn fat_tree(k: usize) -> Graph {
+    assert!(k >= 2 && k % 2 == 0, "fat-tree requires even k >= 2");
+    let half = k / 2;
+    let cores = half * half;
+    let n = cores + k * k; // + k pods × (half agg + half edge)
+    let agg = |pod: usize, a: usize| cores + pod * k + a;
+    let edge = |pod: usize, e: usize| cores + pod * k + half + e;
+    let mut edges = Vec::new();
+    for pod in 0..k {
+        for a in 0..half {
+            // aggregation switch a of this pod uplinks to core group a
+            for c in 0..half {
+                edges.push((a * half + c, agg(pod, a)));
+            }
+            // full bipartite agg ↔ edge inside the pod
+            for e in 0..half {
+                edges.push((agg(pod, a), edge(pod, e)));
+            }
+        }
+    }
+    Graph::bidirected(n, &edges).expect("valid fat-tree")
+}
+
 /// Table-II scenario names.
 pub const SCENARIO_NAMES: [&str; 7] = [
     "connected-er",
@@ -229,7 +278,44 @@ pub const SCENARIO_NAMES: [&str; 7] = [
     "sw",
 ];
 
-/// Build a named topology (Table II row). `rng` is used by the random ones.
+/// Parse `"<prefix>"` / `"<prefix>-a"` / `"<prefix>-axb"` / `"<prefix>-a-b"`
+/// names. Returns `None` when `name` is not of this family; `Some(None)` for
+/// the bare prefix (caller applies defaults); `Some(Some((a, b)))` for
+/// explicit parameters.
+#[allow(clippy::option_option)]
+fn parse_params(name: &str, prefix: &str) -> Option<Option<(usize, Option<usize>)>> {
+    let rest = name.strip_prefix(prefix)?;
+    if rest.is_empty() {
+        return Some(None); // bare name, caller applies defaults
+    }
+    let rest = rest.strip_prefix('-')?;
+    let mut it = rest.split(|ch| ch == 'x' || ch == '-');
+    let a: usize = it.next()?.parse().ok()?;
+    match it.next() {
+        None => Some(Some((a, None))),
+        Some(b) => {
+            let b: usize = b.parse().ok()?;
+            if it.next().is_some() {
+                None
+            } else {
+                Some(Some((a, Some(b))))
+            }
+        }
+    }
+}
+
+/// Build a named topology. Accepts the seven Table-II names plus the
+/// generator-backed families used by the scenario engine
+/// ([`crate::scenarios`]):
+///
+/// * `er-<n>-<m>` — connectivity-guaranteed Erdős–Rényi with `n` nodes and
+///   `m` undirected edges (`er` alone = `er-20-40`),
+/// * `grid-<r>x<c>` — rectangular mesh (`grid` alone = `grid-4x5`),
+/// * `fat-tree-<k>` — k-ary fat-tree fabric (`fat-tree` alone = k = 4),
+/// * `sw-<n>-<extra>` — small-world ring with `extra` long links.
+///
+/// `rng` is consumed only by the random families, so preset topologies are
+/// identical regardless of seed.
 pub fn by_name(name: &str, rng: &mut Rng) -> anyhow::Result<Graph> {
     Ok(match name {
         "connected-er" => connected_er(20, 40, rng),
@@ -239,7 +325,46 @@ pub fn by_name(name: &str, rng: &mut Rng) -> anyhow::Result<Graph> {
         "lhc" => lhc(),
         "geant" => geant(),
         "sw" => small_world(100, 120, rng),
-        other => anyhow::bail!("unknown topology '{other}'"),
+        other => {
+            if let Some(params) = parse_params(other, "er") {
+                let (n, m) = match params {
+                    None => (20, 40),
+                    Some((a, b)) => (a, b.unwrap_or(2 * a)),
+                };
+                anyhow::ensure!(n >= 2 && m + 1 >= n, "er-{n}-{m} is underconnected");
+                anyhow::ensure!(
+                    m <= n * (n - 1) / 2,
+                    "er-{n}-{m} asks for more than n(n-1)/2 undirected edges"
+                );
+                connected_er(n, m, rng)
+            } else if let Some(params) = parse_params(other, "grid") {
+                let (r, c) = match params {
+                    None => (4, 5),
+                    Some((a, b)) => (a, b.unwrap_or(a)),
+                };
+                anyhow::ensure!(r >= 1 && c >= 1 && r * c >= 2, "grid-{r}x{c} too small");
+                grid(r, c)
+            } else if let Some(params) = parse_params(other, "fat-tree") {
+                let k = match params {
+                    None => 4,
+                    Some((a, b)) => {
+                        anyhow::ensure!(b.is_none(), "fat-tree takes one parameter");
+                        a
+                    }
+                };
+                anyhow::ensure!(k >= 2 && k % 2 == 0, "fat-tree-{k}: k must be even");
+                fat_tree(k)
+            } else if let Some(params) = parse_params(other, "sw") {
+                let (n, extra) = match params {
+                    None => (100, 120),
+                    Some((a, b)) => (a, b.unwrap_or(a / 5)),
+                };
+                anyhow::ensure!(n >= 5, "sw-{n} too small");
+                small_world(n, extra, rng)
+            } else {
+                anyhow::bail!("unknown topology '{other}'")
+            }
+        }
     })
 }
 
@@ -297,5 +422,65 @@ mod tests {
     fn unknown_name_errors() {
         let mut rng = Rng::new(0);
         assert!(by_name("nope", &mut rng).is_err());
+        assert!(by_name("grid-0x0", &mut rng).is_err());
+        assert!(by_name("fat-tree-3", &mut rng).is_err());
+        assert!(by_name("er-20-10", &mut rng).is_err());
+    }
+
+    #[test]
+    fn grid_shape_and_connectivity() {
+        let g = grid(4, 5);
+        assert_eq!(g.n(), 20);
+        // undirected edges: 4*4 horizontal + 3*5 vertical = 31
+        assert_eq!(g.m(), 2 * 31);
+        assert!(g.strongly_connected());
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(0, 5));
+        assert!(!g.has_edge(4, 5)); // row wrap is not a link
+    }
+
+    #[test]
+    fn fat_tree_shape_and_connectivity() {
+        let g = fat_tree(4);
+        // (k/2)^2 = 4 cores + 4 pods * 4 switches = 20 nodes
+        assert_eq!(g.n(), 20);
+        // core-agg: 4 pods * 2 agg * 2 cores = 16; agg-edge: 4 * 2 * 2 = 16
+        assert_eq!(g.m(), 2 * 32);
+        assert!(g.strongly_connected());
+    }
+
+    #[test]
+    fn parameterized_names_build() {
+        let mut rng = Rng::new(9);
+        assert_eq!(by_name("grid", &mut rng).unwrap().n(), 20);
+        assert_eq!(by_name("grid-3x3", &mut rng).unwrap().n(), 9);
+        assert_eq!(by_name("fat-tree", &mut rng).unwrap().n(), 20);
+        assert_eq!(by_name("fat-tree-6", &mut rng).unwrap().n(), 9 + 36);
+        let er = by_name("er-15-30", &mut rng).unwrap();
+        assert_eq!(er.n(), 15);
+        assert_eq!(er.m(), 2 * 30);
+        assert!(er.strongly_connected());
+        let sw = by_name("sw-40-10", &mut rng).unwrap();
+        assert_eq!(sw.n(), 40);
+        assert_eq!(sw.m(), 2 * (80 + 10));
+    }
+
+    #[test]
+    fn small_world_extra_is_clamped_to_available_pairs() {
+        // n=6 ring already covers 12 of the C(6,2)=15 pairs; asking for 100
+        // extras must terminate with the 3 that remain, not loop forever
+        let mut rng = Rng::new(2);
+        let g = by_name("sw-6-100", &mut rng).unwrap();
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.m(), 2 * 15);
+        // and over-dense er requests are rejected rather than silently clamped
+        assert!(by_name("er-5-40", &mut rng).is_err());
+    }
+
+    #[test]
+    fn presets_ignore_rng_state() {
+        let g1 = by_name("grid-4x4", &mut Rng::new(1)).unwrap();
+        let g2 = by_name("grid-4x4", &mut Rng::new(999)).unwrap();
+        assert_eq!(g1.edges(), g2.edges());
     }
 }

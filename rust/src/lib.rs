@@ -37,6 +37,7 @@ pub mod config;
 pub mod distributed;
 pub mod metrics;
 pub mod runtime;
+pub mod scenarios;
 pub mod serving;
 pub mod sim;
 
@@ -44,6 +45,25 @@ pub mod sim;
 pub mod testutil;
 
 /// Convenient re-exports.
+///
+/// # Examples
+///
+/// Build a Table-II network, run the paper's gradient projection, and read
+/// the optimized delay cost:
+///
+/// ```
+/// use scfo::prelude::*;
+///
+/// let scenario = scfo::config::Scenario::table2("abilene").unwrap();
+/// let mut rng = Rng::new(scenario.seed);
+/// let net = scenario.build(&mut rng).unwrap();
+///
+/// let mut gp = GradientProjection::new(&net, GpOptions::default());
+/// let report = gp.run(&net, 50);
+/// let fs = FlowState::solve(&net, &gp.phi).unwrap();
+/// assert!(report.final_cost.is_finite());
+/// assert!((fs.total_cost - report.final_cost).abs() < 1e-9 * (1.0 + report.final_cost));
+/// ```
 pub mod prelude {
     pub use crate::algo::gp::{GpOptions, GpReport, GradientProjection};
     pub use crate::app::{Application, Network, StageRegistry};
@@ -51,6 +71,7 @@ pub mod prelude {
     pub use crate::flow::FlowState;
     pub use crate::graph::{topologies, Graph};
     pub use crate::marginals::Marginals;
+    pub use crate::scenarios::{Congestion, DynamicEvent, ScenarioSpec};
     pub use crate::strategy::Strategy;
     pub use crate::util::rng::Rng;
 }

@@ -5,6 +5,9 @@
 //! scfo compare  --topology abilene [--iters 500]   # GP vs all baselines
 //! scfo table2                                      # print Table II inventory
 //! scfo fig5 | fig6 | fig7                          # regenerate paper figures
+//! scfo scenarios list                              # the scenario-engine matrix
+//! scfo scenarios run --all --jobs 8 [--out DIR]    # parallel batch + JSON reports
+//! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
 //! scfo serve    --topology geant [--slots 200] [--xla]
 //! scfo validate --topology abilene                 # DES vs analytic cost
 //! scfo broadcast --topology geant                  # protocol message audit
@@ -244,6 +247,103 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
+    use scfo::scenarios::{run_batch, RunnerOptions, ScenarioSpec};
+
+    // Guard against the flags-before-subcommand parser quirk: a run-shaped
+    // invocation with no subcommand word must not silently become `list`.
+    if args.subcommand().is_none()
+        && (args.switch("all") || args.flag("spec").is_some() || args.flag("filter").is_some())
+    {
+        anyhow::bail!(
+            "missing scenarios subcommand; use `scfo scenarios run --all` \
+             (flags must come after the subcommand)"
+        );
+    }
+    match args.subcommand() {
+        Some("list") | None => {
+            let rows: Vec<Vec<String>> = ScenarioSpec::matrix()
+                .iter()
+                .map(|s| {
+                    vec![
+                        s.name().to_string(),
+                        s.base.topology.clone(),
+                        s.congestion.name().to_string(),
+                        s.events
+                            .iter()
+                            .map(|e| e.kind())
+                            .collect::<Vec<_>>()
+                            .join(","),
+                        s.iters.to_string(),
+                    ]
+                })
+                .collect();
+            print_table(
+                "Scenario matrix (scfo scenarios run --all)",
+                &["name", "topology", "congestion", "events", "iters"],
+                &rows,
+            );
+            Ok(())
+        }
+        Some("run") => {
+            let iters = args.flag_usize("iters", 600)?;
+            let event_iters = args.flag_usize("event-iters", iters / 2)?;
+            let specs: Vec<ScenarioSpec> = if let Some(path) = args.flag("spec") {
+                let mut spec = ScenarioSpec::load(std::path::Path::new(path))?;
+                // explicit budget flags override the spec file's budgets
+                if args.flag("iters").is_some() {
+                    spec.iters = iters;
+                }
+                if args.flag("iters").is_some() || args.flag("event-iters").is_some() {
+                    for ev in &mut spec.events {
+                        use scfo::scenarios::DynamicEvent;
+                        match ev {
+                            DynamicEvent::RateScale { iters, .. }
+                            | DynamicEvent::LinkDown { iters }
+                            | DynamicEvent::LinkUp { iters } => *iters = event_iters,
+                        }
+                    }
+                }
+                vec![spec]
+            } else if args.switch("all") || args.flag("filter").is_some() {
+                let filter = args.flag_or("filter", "");
+                ScenarioSpec::matrix_sized(iters, event_iters)
+                    .into_iter()
+                    .filter(|s| s.name().contains(&filter))
+                    .collect()
+            } else {
+                anyhow::bail!(
+                    "scenarios run needs --all, --filter SUBSTR or --spec FILE"
+                );
+            };
+            anyhow::ensure!(!specs.is_empty(), "scenario filter matched nothing");
+            let opts = RunnerOptions {
+                jobs: args.flag_usize("jobs", RunnerOptions::default().jobs)?,
+                out_dir: Some(std::path::PathBuf::from(
+                    args.flag_or("out", "reports/scenarios"),
+                )),
+                quiet: args.switch("quiet"),
+            };
+            let reports = run_batch(&specs, &opts)?;
+            print_table(
+                "Scenario engine — GP vs baselines (ratios to GP)",
+                &scfo::bench::SCENARIO_SUMMARY_HEADER,
+                &scfo::bench::scenario_summary_rows(&reports),
+            );
+            let wins = reports.iter().filter(|r| r.gp_within_baselines).count();
+            println!(
+                "GP within every baseline: {wins}/{} scenarios; reports in {}",
+                reports.len(),
+                opts.out_dir.as_ref().unwrap().display()
+            );
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown scenarios subcommand '{other}' (list|run)")
+        }
+    }
+}
+
 fn cmd_broadcast(args: &Args) -> anyhow::Result<()> {
     let sc = scenario_from(args)?;
     let mut rng = Rng::new(sc.seed);
@@ -273,6 +373,7 @@ fn main() -> anyhow::Result<()> {
         Some("fig5") => cmd_fig5(&args),
         Some("fig6") => cmd_fig6(&args),
         Some("fig7") => cmd_fig7(&args),
+        Some("scenarios") => cmd_scenarios(&args),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("broadcast") => cmd_broadcast(&args),
@@ -281,8 +382,8 @@ fn main() -> anyhow::Result<()> {
                 eprintln!("unknown command '{o}'");
             }
             eprintln!(
-                "usage: scfo <run|compare|table2|fig5|fig6|fig7|serve|validate|broadcast> \
-                 [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--xla]"
+                "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|serve|validate|broadcast> \
+                 [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] [--xla]"
             );
             std::process::exit(2);
         }

@@ -12,6 +12,7 @@
 //! (cross-checked in `rust/tests/xla_parity.rs`).
 
 pub mod pjrt;
+pub mod xla_stub;
 
 pub use pjrt::{EvalOutputs, EvalRuntime, Manifest, XlaGp};
 

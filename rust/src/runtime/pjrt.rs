@@ -2,6 +2,7 @@
 
 use std::path::Path;
 
+use super::xla_stub as xla;
 use crate::algo::blocked::BlockedSets;
 use crate::algo::gp::{gp_row_update, GpOptions, GpReport, SupportMask};
 use crate::app::Network;

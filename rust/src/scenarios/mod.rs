@@ -1,0 +1,425 @@
+//! Scenario engine: declarative experiment composition + batch execution.
+//!
+//! A [`ScenarioSpec`] composes one experiment out of orthogonal dimensions:
+//!
+//! * **topology family** — any name [`crate::graph::topologies::by_name`]
+//!   understands, including the generator-backed families (`er-<n>-<m>`,
+//!   `grid-<r>x<c>`, `fat-tree-<k>`) and the real-network presets
+//!   (`abilene`, `geant`, …);
+//! * **workload** — the application/service-chain parameters of the
+//!   underlying [`Scenario`] (apps, sources, chain length, packet schedule);
+//! * **cost kind** — `queue` (M/M/1) or `linear` link/CPU costs;
+//! * **congestion level** — a [`Congestion`] multiplier on all input rates;
+//! * **dynamic-event schedule** — an ordered list of [`DynamicEvent`]s
+//!   (input-rate steps and link churn) driving the online-adaptation path of
+//!   [`crate::algo::gp::GradientProjection`] mid-run.
+//!
+//! [`ScenarioSpec::matrix`] expands the default evaluation matrix (families ×
+//! congestion levels, each with the standard event schedule); the
+//! [`runner`] executes specs across a thread pool and emits one JSON report
+//! per scenario comparing GP against the SPOC/LCOF/LPR-SC baselines. Specs
+//! round-trip through JSON and load from `.json`/`.toml` files.
+//!
+//! # Examples
+//!
+//! Expand the default matrix and inspect its shape:
+//!
+//! ```
+//! use scfo::scenarios::ScenarioSpec;
+//!
+//! let matrix = ScenarioSpec::matrix();
+//! assert!(matrix.len() >= 12, "acceptance floor: >= 12 scenarios");
+//! // three congestion levels per family, every spec carries a schedule
+//! assert!(matrix.len() % 3 == 0);
+//! assert!(matrix.iter().all(|s| !s.events.is_empty()));
+//! ```
+//!
+//! Run a single (shrunk) scenario end to end:
+//!
+//! ```
+//! use scfo::scenarios::{runner, Congestion, ScenarioSpec};
+//!
+//! let mut spec = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+//! spec.iters = 40;          // keep the doctest fast
+//! spec.events.clear();      // no churn for this smoke run
+//! let cache = runner::ScenarioCache::new();
+//! let report = runner::run_one(&spec, &cache).unwrap();
+//! assert!(report.gp_cost() > 0.0);
+//! assert_eq!(report.costs.len(), 4); // GP + three baselines
+//! ```
+
+pub mod runner;
+
+pub use runner::{run_batch, RunnerOptions, ScenarioCache, ScenarioReport};
+
+use crate::config::Scenario;
+use crate::cost::CostKind;
+use crate::util::json::Json;
+
+/// Congestion level: a multiplier applied to every exogenous input rate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Congestion {
+    /// 0.6× the nominal rates — queues stay far from their knees.
+    Light,
+    /// The workload's nominal rates.
+    Nominal,
+    /// 1.4× the nominal rates — the congested regime where the paper's
+    /// GP-vs-baseline gaps live.
+    Heavy,
+}
+
+impl Congestion {
+    /// All levels, in increasing load order.
+    pub const ALL: [Congestion; 3] = [Congestion::Light, Congestion::Nominal, Congestion::Heavy];
+
+    /// The input-rate multiplier.
+    pub fn rate_multiplier(&self) -> f64 {
+        match self {
+            Congestion::Light => 0.6,
+            Congestion::Nominal => 1.0,
+            Congestion::Heavy => 1.4,
+        }
+    }
+
+    /// Stable lowercase name (used in scenario names and JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Congestion::Light => "light",
+            Congestion::Nominal => "nominal",
+            Congestion::Heavy => "heavy",
+        }
+    }
+
+    /// Parse a level name.
+    pub fn parse(s: &str) -> anyhow::Result<Congestion> {
+        match s.to_ascii_lowercase().as_str() {
+            "light" => Ok(Congestion::Light),
+            "nominal" => Ok(Congestion::Nominal),
+            "heavy" => Ok(Congestion::Heavy),
+            other => anyhow::bail!("unknown congestion level '{other}' (light|nominal|heavy)"),
+        }
+    }
+}
+
+/// One dynamic event in a scenario's schedule. After the network mutation is
+/// applied, the online optimizer gets `iters` further slots to adapt before
+/// the next event fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DynamicEvent {
+    /// Multiply every application's input rates by `factor` (a demand step).
+    RateScale { factor: f64, iters: usize },
+    /// Remove the most-loaded removable link (deterministic choice: highest
+    /// GP link flow whose removal keeps every destination reachable). Drives
+    /// [`crate::algo::gp::GradientProjection::on_link_removed`].
+    LinkDown { iters: usize },
+    /// Restore the most recently removed link
+    /// ([`crate::algo::gp::GradientProjection::on_link_added`]).
+    LinkUp { iters: usize },
+}
+
+impl DynamicEvent {
+    /// Adaptation budget after the event.
+    pub fn iters(&self) -> usize {
+        match self {
+            DynamicEvent::RateScale { iters, .. }
+            | DynamicEvent::LinkDown { iters }
+            | DynamicEvent::LinkUp { iters } => *iters,
+        }
+    }
+
+    /// Stable kind tag (used in JSON and reports).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DynamicEvent::RateScale { .. } => "rate-scale",
+            DynamicEvent::LinkDown { .. } => "link-down",
+            DynamicEvent::LinkUp { .. } => "link-up",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            DynamicEvent::RateScale { factor, iters } => Json::obj(vec![
+                ("kind", Json::Str("rate-scale".into())),
+                ("factor", Json::Num(*factor)),
+                ("iters", Json::Num(*iters as f64)),
+            ]),
+            DynamicEvent::LinkDown { iters } => Json::obj(vec![
+                ("kind", Json::Str("link-down".into())),
+                ("iters", Json::Num(*iters as f64)),
+            ]),
+            DynamicEvent::LinkUp { iters } => Json::obj(vec![
+                ("kind", Json::Str("link-up".into())),
+                ("iters", Json::Num(*iters as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json, default_iters: usize) -> anyhow::Result<DynamicEvent> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event: missing 'kind'"))?;
+        let iters = v
+            .get("iters")
+            .and_then(Json::as_usize)
+            .unwrap_or(default_iters);
+        match kind {
+            "rate-scale" => {
+                let factor = v
+                    .get("factor")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("rate-scale event: missing 'factor'"))?;
+                anyhow::ensure!(factor > 0.0, "rate-scale factor must be positive");
+                Ok(DynamicEvent::RateScale { factor, iters })
+            }
+            "link-down" => Ok(DynamicEvent::LinkDown { iters }),
+            "link-up" => Ok(DynamicEvent::LinkUp { iters }),
+            other => anyhow::bail!("unknown event kind '{other}'"),
+        }
+    }
+}
+
+/// A fully specified experiment: base workload × congestion × schedule.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Topology + workload + cost parameters. `base.name` is the spec's
+    /// unique name within a batch.
+    pub base: Scenario,
+    pub congestion: Congestion,
+    /// Ordered dynamic-event schedule.
+    pub events: Vec<DynamicEvent>,
+    /// Optimization budget for the initial solve (and the per-algorithm
+    /// budget for the final baseline comparison).
+    pub iters: usize,
+}
+
+/// Default per-family workload parameters for generator families that have
+/// no Table-II row: (num_apps, num_sources, link_param, comp_param).
+fn family_defaults(family: &str) -> (usize, usize, f64, f64) {
+    if family.starts_with("fat-tree") {
+        (4, 3, 18.0, 12.0)
+    } else if family.starts_with("grid") {
+        (4, 3, 15.0, 12.0)
+    } else {
+        // er-*, sw-* and anything else generator-backed
+        (4, 3, 15.0, 12.0)
+    }
+}
+
+impl ScenarioSpec {
+    /// The default dynamic-event schedule: a demand step up, a link failure,
+    /// and the link's restoration — each followed by `iters` adaptation
+    /// slots.
+    pub fn default_schedule(iters: usize) -> Vec<DynamicEvent> {
+        vec![
+            DynamicEvent::RateScale {
+                factor: 1.3,
+                iters,
+            },
+            DynamicEvent::LinkDown { iters },
+            DynamicEvent::LinkUp { iters },
+        ]
+    }
+
+    /// Build the spec for one (family, congestion) cell of the matrix, with
+    /// the default workload, queue costs and event schedule.
+    pub fn named(family: &str, congestion: Congestion) -> anyhow::Result<ScenarioSpec> {
+        let mut base = match Scenario::table2(family) {
+            Ok(sc) => sc,
+            Err(_) => {
+                let (num_apps, num_sources, link_param, comp_param) = family_defaults(family);
+                Scenario {
+                    name: family.to_string(),
+                    topology: family.to_string(),
+                    num_apps,
+                    num_sources,
+                    num_tasks: 2,
+                    link_kind: CostKind::Queue,
+                    link_param,
+                    comp_kind: CostKind::Queue,
+                    comp_param,
+                    rate_lo: 0.5,
+                    rate_hi: 1.5,
+                    rate_scale: 1.0,
+                    packet_base: 10.0,
+                    packet_decay: 5.0,
+                    comp_weight: 0.25,
+                    seed: 2023,
+                }
+            }
+        };
+        base.name = format!("{family}-{}", congestion.name());
+        Ok(ScenarioSpec {
+            base,
+            congestion,
+            events: Self::default_schedule(300),
+            iters: 600,
+        })
+    }
+
+    /// The default evaluation matrix: five topology families × three
+    /// congestion levels, each with the default dynamic-event schedule —
+    /// 15 scenarios.
+    pub fn matrix() -> Vec<ScenarioSpec> {
+        Self::matrix_sized(600, 300)
+    }
+
+    /// The default matrix with explicit optimization budgets (`iters` for
+    /// the initial solve and final comparison, `event_iters` per event).
+    pub fn matrix_sized(iters: usize, event_iters: usize) -> Vec<ScenarioSpec> {
+        let families = ["er-20-40", "grid-4x5", "fat-tree-4", "abilene", "geant"];
+        let mut out = Vec::with_capacity(families.len() * Congestion::ALL.len());
+        for family in families {
+            for congestion in Congestion::ALL {
+                let mut spec =
+                    Self::named(family, congestion).expect("matrix families are valid");
+                spec.iters = iters;
+                spec.events = Self::default_schedule(event_iters);
+                out.push(spec);
+            }
+        }
+        out
+    }
+
+    /// The spec's unique name (the base scenario's name).
+    pub fn name(&self) -> &str {
+        &self.base.name
+    }
+
+    /// The base scenario with the congestion multiplier folded into
+    /// `rate_scale` — what the runner actually builds.
+    pub fn effective_base(&self) -> Scenario {
+        let mut sc = self.base.clone();
+        sc.rate_scale *= self.congestion.rate_multiplier();
+        sc
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.base.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("Scenario::to_json returns an object"),
+        };
+        obj.insert(
+            "congestion".to_string(),
+            Json::Str(self.congestion.name().to_string()),
+        );
+        obj.insert("iters".to_string(), Json::Num(self.iters as f64));
+        obj.insert(
+            "events".to_string(),
+            Json::Arr(self.events.iter().map(DynamicEvent::to_json).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ScenarioSpec> {
+        let base = Scenario::from_json(v)?;
+        let congestion = match v.get("congestion").and_then(Json::as_str) {
+            Some(s) => Congestion::parse(s)?,
+            None => Congestion::Nominal,
+        };
+        let iters = v.get("iters").and_then(Json::as_usize).unwrap_or(600);
+        let mut events = Vec::new();
+        if let Some(arr) = v.get("events").and_then(Json::as_arr) {
+            for e in arr {
+                events.push(DynamicEvent::from_json(e, iters)?);
+            }
+        }
+        Ok(ScenarioSpec {
+            base,
+            congestion,
+            events,
+            iters,
+        })
+    }
+
+    /// Load a spec from a `.json` or `.toml` file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let v = crate::config::parse_config_text(&text, path)?;
+        ScenarioSpec::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_covers_families_and_levels() {
+        let m = ScenarioSpec::matrix();
+        assert_eq!(m.len(), 15);
+        let families: std::collections::BTreeSet<&str> =
+            m.iter().map(|s| s.base.topology.as_str()).collect();
+        assert!(families.len() >= 3, "need >= 3 topology families");
+        for level in Congestion::ALL {
+            assert_eq!(
+                m.iter().filter(|s| s.congestion == level).count(),
+                families.len()
+            );
+        }
+        // every cell has the dynamic schedule and a unique name
+        let names: std::collections::BTreeSet<&str> =
+            m.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), m.len());
+        assert!(m.iter().all(|s| s.events.len() == 3));
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = ScenarioSpec::named("grid-4x5", Congestion::Heavy).unwrap();
+        let v = spec.to_json();
+        let re = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(re.name(), spec.name());
+        assert_eq!(re.congestion, spec.congestion);
+        assert_eq!(re.events, spec.events);
+        assert_eq!(re.iters, spec.iters);
+        assert_eq!(re.base.topology, spec.base.topology);
+    }
+
+    #[test]
+    fn spec_parses_from_toml_text() {
+        let toml_text = r#"
+            name = "custom-heavy"
+            topology = "er-15-30"
+            congestion = "heavy"
+            iters = 123
+            [[events]]
+            kind = "rate-scale"
+            factor = 1.5
+            [[events]]
+            kind = "link-down"
+        "#;
+        let v = crate::util::toml::parse(toml_text).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(spec.name(), "custom-heavy");
+        assert_eq!(spec.congestion, Congestion::Heavy);
+        assert_eq!(spec.iters, 123);
+        assert_eq!(spec.events.len(), 2);
+        assert_eq!(
+            spec.events[0],
+            DynamicEvent::RateScale {
+                factor: 1.5,
+                iters: 123
+            }
+        );
+        assert_eq!(spec.events[1], DynamicEvent::LinkDown { iters: 123 });
+    }
+
+    #[test]
+    fn effective_base_scales_rates() {
+        let spec = ScenarioSpec::named("abilene", Congestion::Heavy).unwrap();
+        let eff = spec.effective_base();
+        assert!((eff.rate_scale - 1.4).abs() < 1e-12);
+        // base itself untouched
+        assert!((spec.base.rate_scale - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn congestion_parse_roundtrip() {
+        for c in Congestion::ALL {
+            assert_eq!(Congestion::parse(c.name()).unwrap(), c);
+        }
+        assert!(Congestion::parse("extreme").is_err());
+    }
+}

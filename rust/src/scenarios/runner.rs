@@ -1,0 +1,570 @@
+//! Parallel scenario execution: thread-pooled batch runs, per-topology
+//! caching, dynamic-event application, and machine-readable JSON reports.
+//!
+//! Determinism contract: a scenario's result is a pure function of its
+//! [`ScenarioSpec`]. The topology cache stores, alongside each built graph,
+//! the RNG state *after* the topology draws, so a cache hit replays exactly
+//! the stream an uncached build would have used — results are identical
+//! whatever the worker count or execution order (`--jobs 1` ≡ `--jobs N`;
+//! covered by `rust/tests/scenarios.rs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::algo::gp::{GpOptions, GradientProjection};
+use crate::algo::Algorithm;
+use crate::app::Network;
+use crate::flow::FlowState;
+use crate::graph::{topologies, Graph};
+use crate::scenarios::{DynamicEvent, ScenarioSpec};
+use crate::strategy::Strategy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Batch-runner configuration.
+#[derive(Clone, Debug)]
+pub struct RunnerOptions {
+    /// Worker threads (clamped to [1, number of scenarios]).
+    pub jobs: usize,
+    /// If set, one `<name>.json` report is written per scenario.
+    pub out_dir: Option<PathBuf>,
+    /// Suppress per-scenario progress lines on stderr.
+    pub quiet: bool,
+}
+
+impl Default for RunnerOptions {
+    fn default() -> Self {
+        RunnerOptions {
+            jobs: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            out_dir: None,
+            quiet: false,
+        }
+    }
+}
+
+/// GP cost after one phase of a scenario (initial solve or a dynamic event).
+#[derive(Clone, Debug)]
+pub struct PhaseOutcome {
+    /// `"initial"`, `"rate-scale"`, `"link-down"`, `"link-up"`.
+    pub label: String,
+    /// GP aggregate cost once the phase's adaptation budget is spent.
+    pub gp_cost: f64,
+}
+
+/// The result of one executed scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub topology: String,
+    pub congestion: String,
+    pub seed: u64,
+    /// Network inventory: nodes, directed links, applications.
+    pub n: usize,
+    pub m: usize,
+    pub apps: usize,
+    /// GP cost after the initial solve and after each event.
+    pub phases: Vec<PhaseOutcome>,
+    /// Final-state cost per algorithm (GP first, then the baselines), all
+    /// evaluated on the same final network.
+    pub costs: Vec<(String, f64)>,
+    /// True iff GP's final cost is ≤ every baseline's (within tolerance).
+    pub gp_within_baselines: bool,
+    /// Wall-clock seconds this scenario took (not part of determinism).
+    pub solve_secs: f64,
+    /// Whether the topology came from the shared cache.
+    pub cache_hit: bool,
+}
+
+impl ScenarioReport {
+    /// GP's final cost.
+    pub fn gp_cost(&self) -> f64 {
+        self.costs
+            .first()
+            .map(|(_, c)| *c)
+            .unwrap_or(f64::INFINITY)
+    }
+
+    /// Serialize for the per-scenario report file.
+    pub fn to_json(&self) -> Json {
+        let costs = Json::Obj(
+            self.costs
+                .iter()
+                .map(|(name, c)| (name.clone(), Json::Num(*c)))
+                .collect(),
+        );
+        let phases = Json::Arr(
+            self.phases
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("label", Json::Str(p.label.clone())),
+                        ("gp_cost", Json::Num(p.gp_cost)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("congestion", Json::Str(self.congestion.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("apps", Json::Num(self.apps as f64)),
+            ("phases", phases),
+            ("costs", costs),
+            ("gp_within_baselines", Json::Bool(self.gp_within_baselines)),
+            ("solve_secs", Json::Num(self.solve_secs)),
+            ("cache_hit", Json::Bool(self.cache_hit)),
+        ])
+    }
+}
+
+/// Shared per-topology state reused between related runs.
+///
+/// * `graphs` — built topology + post-topology RNG state, keyed by
+///   `(topology, seed)`; congestion variants of the same family share it.
+/// * `init_strategies` — the min-hop initial strategy per network signature
+///   (graph + application destinations/chain lengths), shared across
+///   congestion levels since rates do not affect it.
+pub struct ScenarioCache {
+    graphs: Mutex<BTreeMap<String, (Arc<Graph>, Rng)>>,
+    init_strategies: Mutex<BTreeMap<String, Arc<Strategy>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl Default for ScenarioCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScenarioCache {
+    pub fn new() -> ScenarioCache {
+        ScenarioCache {
+            graphs: Mutex::new(BTreeMap::new()),
+            init_strategies: Mutex::new(BTreeMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// (hits, misses) across both caches.
+    pub fn stats(&self) -> (usize, usize) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// The topology for `spec`, plus the RNG positioned exactly after the
+    /// topology draws, plus whether this was a cache hit.
+    fn topology(&self, spec: &ScenarioSpec) -> anyhow::Result<(Arc<Graph>, Rng, bool)> {
+        let key = format!("{}#{}", spec.base.topology, spec.base.seed);
+        if let Some((g, rng)) = self.graphs.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((Arc::clone(g), rng.clone(), true));
+        }
+        // Build outside the lock; last writer wins (both built identically).
+        let mut rng = Rng::new(spec.base.seed);
+        let graph = Arc::new(topologies::by_name(&spec.base.topology, &mut rng)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.graphs
+            .lock()
+            .unwrap()
+            .insert(key, (Arc::clone(&graph), rng.clone()));
+        Ok((graph, rng, false))
+    }
+
+    /// The min-hop initial strategy for `net`, cached per network signature.
+    fn initial_strategy(&self, spec: &ScenarioSpec, net: &Network) -> Arc<Strategy> {
+        let dests: Vec<String> = net
+            .apps
+            .iter()
+            .map(|a| format!("{}:{}", a.dest, a.num_tasks))
+            .collect();
+        let key = format!(
+            "{}#{}#{}",
+            spec.base.topology,
+            spec.base.seed,
+            dests.join(",")
+        );
+        if let Some(phi) = self.init_strategies.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(phi);
+        }
+        let phi = Arc::new(Strategy::shortest_path_to_dest(net));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.init_strategies
+            .lock()
+            .unwrap()
+            .insert(key, Arc::clone(&phi));
+        phi
+    }
+}
+
+/// The most-loaded directed link whose removal keeps every application's
+/// destination reachable from every node (deterministic: flow-descending,
+/// ties by edge id). Returns `None` when no loaded link can be removed.
+fn pick_removable_link(
+    net: &Network,
+    phi: &Strategy,
+    removed: &[(usize, usize)],
+) -> Option<(usize, usize)> {
+    let fs = FlowState::solve(net, phi).ok()?;
+    let mut order: Vec<usize> = (0..net.m()).collect();
+    order.sort_by(|&a, &b| {
+        fs.link_flow[b]
+            .partial_cmp(&fs.link_flow[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    for e in order {
+        if fs.link_flow[e] <= 0.0 {
+            break; // only loaded links are interesting failures
+        }
+        let (i, j) = net.graph.edge(e);
+        if removed.contains(&(i, j)) {
+            continue;
+        }
+        if reachability_survives(net, removed, (i, j)) {
+            return Some((i, j));
+        }
+    }
+    None
+}
+
+/// Does every app destination stay reachable from every node once `extra`
+/// is removed on top of the already-removed links?
+fn reachability_survives(
+    net: &Network,
+    removed: &[(usize, usize)],
+    extra: (usize, usize),
+) -> bool {
+    let mut excluded: BTreeSet<(usize, usize)> = removed.iter().copied().collect();
+    excluded.insert(extra);
+    let edges: Vec<(usize, usize)> = net
+        .graph
+        .edges()
+        .iter()
+        .copied()
+        .filter(|e| !excluded.contains(e))
+        .collect();
+    match Graph::new(net.n(), &edges) {
+        Ok(g) => net.apps.iter().all(|a| g.all_reach(a.dest)),
+        Err(_) => false,
+    }
+}
+
+/// Rebuild `net` without the removed directed links (for the baselines,
+/// which have no online-adaptation path and re-solve from scratch).
+fn prune_links(net: &Network, removed: &[(usize, usize)]) -> anyhow::Result<Network> {
+    let excluded: BTreeSet<(usize, usize)> = removed.iter().copied().collect();
+    let mut edges = Vec::with_capacity(net.m() - excluded.len());
+    let mut link_cost = Vec::with_capacity(net.m() - excluded.len());
+    for e in 0..net.m() {
+        let ij = net.graph.edge(e);
+        if !excluded.contains(&ij) {
+            edges.push(ij);
+            link_cost.push(net.link_cost[e].clone());
+        }
+    }
+    let graph = Graph::new(net.n(), &edges)?;
+    Network::new(
+        graph,
+        net.apps.clone(),
+        link_cost,
+        net.comp_cost.clone(),
+        net.comp_weight.clone(),
+    )
+}
+
+/// Execute one scenario: initial GP solve, the dynamic-event schedule with
+/// online adaptation, then the final GP-vs-baselines comparison on the
+/// resulting network state.
+pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<ScenarioReport> {
+    let watch = Stopwatch::start();
+    let (graph, mut rng, cache_hit) = cache.topology(spec)?;
+    let mut net = spec.effective_base().build_on((*graph).clone(), &mut rng)?;
+
+    let phi0 = cache.initial_strategy(spec, &net);
+    let mut gp = GradientProjection::with_strategy(&net, (*phi0).clone(), GpOptions::default());
+    let mut phases = Vec::with_capacity(spec.events.len() + 1);
+    gp.run(&net, spec.iters);
+    phases.push(PhaseOutcome {
+        label: "initial".to_string(),
+        gp_cost: gp.cost(&net),
+    });
+
+    // Apply the dynamic-event schedule; GP adapts online (no restart).
+    let mut removed: Vec<(usize, usize)> = Vec::new();
+    for event in &spec.events {
+        match event {
+            DynamicEvent::RateScale { factor, .. } => {
+                for app in &mut net.apps {
+                    for r in &mut app.input_rates {
+                        *r *= factor;
+                    }
+                }
+            }
+            DynamicEvent::LinkDown { .. } => {
+                if let Some((i, j)) = pick_removable_link(&net, &gp.phi, &removed) {
+                    gp.on_link_removed(&net, i, j);
+                    removed.push((i, j));
+                }
+            }
+            DynamicEvent::LinkUp { .. } => {
+                if let Some((i, j)) = removed.pop() {
+                    gp.on_link_added(&net, i, j);
+                }
+            }
+        }
+        gp.run(&net, event.iters());
+        phases.push(PhaseOutcome {
+            label: event.kind().to_string(),
+            gp_cost: gp.cost(&net),
+        });
+    }
+
+    // Final comparison: the baselines re-solve the final network state from
+    // scratch. GP's cost is evaluated on its own (support-masked) network —
+    // removed links carry zero flow there, so the costs are directly
+    // comparable to the pruned-graph solves.
+    let pruned = if removed.is_empty() {
+        None
+    } else {
+        Some(prune_links(&net, &removed)?)
+    };
+    let final_net = pruned.as_ref().unwrap_or(&net);
+    let gp_cost = phases.last().expect("initial phase always present").gp_cost;
+    let mut costs: Vec<(String, f64)> = vec![(Algorithm::Gp.name().to_string(), gp_cost)];
+    for alg in [Algorithm::Spoc, Algorithm::Lcof, Algorithm::LprSc] {
+        costs.push((alg.name().to_string(), alg.solve(final_net, spec.iters)?));
+    }
+    let gp_within_baselines = costs
+        .iter()
+        .skip(1)
+        .all(|(_, c)| gp_cost <= c * (1.0 + 1e-9) + 1e-12);
+
+    Ok(ScenarioReport {
+        name: spec.name().to_string(),
+        topology: spec.base.topology.clone(),
+        congestion: spec.congestion.name().to_string(),
+        seed: spec.base.seed,
+        n: net.n(),
+        m: net.m(),
+        apps: net.apps.len(),
+        phases,
+        costs,
+        gp_within_baselines,
+        solve_secs: watch.elapsed_secs(),
+        cache_hit,
+    })
+}
+
+/// Run a batch of scenarios across a worker pool. Reports come back in spec
+/// order regardless of scheduling; if `opts.out_dir` is set, one JSON file
+/// per scenario is written there.
+pub fn run_batch(
+    specs: &[ScenarioSpec],
+    opts: &RunnerOptions,
+) -> anyhow::Result<Vec<ScenarioReport>> {
+    anyhow::ensure!(!specs.is_empty(), "no scenarios to run");
+    let cache = ScenarioCache::new();
+    let jobs = opts.jobs.clamp(1, specs.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<anyhow::Result<ScenarioReport>>>> =
+        (0..specs.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::SeqCst);
+                if idx >= specs.len() {
+                    break;
+                }
+                let spec = &specs[idx];
+                let result = run_one(spec, &cache);
+                if !opts.quiet {
+                    match &result {
+                        Ok(rep) => eprintln!(
+                            "scenario {:<24} GP {:.4} ({} phases, {:.2}s{})",
+                            rep.name,
+                            rep.gp_cost(),
+                            rep.phases.len(),
+                            rep.solve_secs,
+                            if rep.cache_hit { ", cached topo" } else { "" },
+                        ),
+                        Err(e) => eprintln!("scenario {:<24} FAILED: {e}", spec.name()),
+                    }
+                }
+                *slots[idx].lock().unwrap() = Some(result);
+            });
+        }
+    });
+
+    let mut reports = Vec::with_capacity(specs.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        let result = slot
+            .into_inner()
+            .unwrap()
+            .expect("worker pool covered every index");
+        reports.push(result.map_err(|e| anyhow::anyhow!("scenario '{}': {e}", specs[i].name()))?);
+    }
+
+    if let Some(dir) = &opts.out_dir {
+        std::fs::create_dir_all(dir)?;
+        for rep in &reports {
+            let file = dir.join(format!("{}.json", sanitize(&rep.name)));
+            std::fs::write(&file, rep.to_json().to_string_pretty())?;
+        }
+    }
+    Ok(reports)
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::Congestion;
+
+    fn quick_spec(family: &str, congestion: Congestion) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::named(family, congestion).unwrap();
+        spec.iters = 120;
+        spec.events = vec![
+            DynamicEvent::RateScale {
+                factor: 1.3,
+                iters: 80,
+            },
+            DynamicEvent::LinkDown { iters: 80 },
+            DynamicEvent::LinkUp { iters: 80 },
+        ];
+        spec
+    }
+
+    #[test]
+    fn run_one_produces_full_report() {
+        let cache = ScenarioCache::new();
+        let rep = run_one(&quick_spec("abilene", Congestion::Nominal), &cache).unwrap();
+        assert_eq!(rep.n, 11);
+        assert_eq!(rep.apps, 3);
+        assert_eq!(rep.phases.len(), 4); // initial + 3 events
+        assert_eq!(rep.costs.len(), 4); // GP + 3 baselines
+        assert!(rep.gp_cost().is_finite() && rep.gp_cost() > 0.0);
+        // the demand step must raise GP's settled cost vs the initial phase
+        assert!(rep.phases[1].gp_cost > rep.phases[0].gp_cost);
+    }
+
+    #[test]
+    fn congestion_levels_share_cached_topology() {
+        let cache = ScenarioCache::new();
+        let a = run_one(&quick_spec("er-20-40", Congestion::Light), &cache).unwrap();
+        let b = run_one(&quick_spec("er-20-40", Congestion::Heavy), &cache).unwrap();
+        assert!(!a.cache_hit);
+        assert!(b.cache_hit);
+        assert_eq!(a.m, b.m);
+        // heavier load costs more
+        assert!(b.gp_cost() > a.gp_cost());
+        let (hits, misses) = cache.stats();
+        assert!(hits >= 2, "graph + phi0 reuse expected, got {hits}/{misses}");
+    }
+
+    #[test]
+    fn cached_and_uncached_runs_agree() {
+        let spec = quick_spec("er-20-40", Congestion::Nominal);
+        let cold = run_one(&spec, &ScenarioCache::new()).unwrap();
+        let warm_cache = ScenarioCache::new();
+        let _ = run_one(&quick_spec("er-20-40", Congestion::Light), &warm_cache).unwrap();
+        let warm = run_one(&spec, &warm_cache).unwrap();
+        assert!(warm.cache_hit);
+        assert_eq!(cold.costs.len(), warm.costs.len());
+        for ((n1, c1), (n2, c2)) in cold.costs.iter().zip(&warm.costs) {
+            assert_eq!(n1, n2);
+            assert!(
+                (c1 - c2).abs() == 0.0,
+                "{n1}: cold {c1} vs warm {c2} must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn link_churn_is_applied_and_reverted() {
+        let cache = ScenarioCache::new();
+        let mut spec = quick_spec("abilene", Congestion::Nominal);
+        spec.events = vec![DynamicEvent::LinkDown { iters: 100 }];
+        let rep = run_one(&spec, &cache).unwrap();
+        // the failure phase exists and the final comparison ran on the
+        // pruned network
+        assert_eq!(rep.phases.last().unwrap().label, "link-down");
+        assert!(rep.gp_cost().is_finite());
+    }
+
+    #[test]
+    fn report_json_is_machine_readable() {
+        let cache = ScenarioCache::new();
+        let mut spec = quick_spec("abilene", Congestion::Light);
+        spec.events.clear();
+        spec.iters = 60;
+        let rep = run_one(&spec, &cache).unwrap();
+        let v = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("abilene-light"));
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(11));
+        let costs = v.get("costs").unwrap();
+        for alg in ["GP", "SPOC", "LCOF", "LPR-SC"] {
+            assert!(
+                costs.get(alg).and_then(Json::as_f64).unwrap() > 0.0,
+                "{alg} missing from report"
+            );
+        }
+        assert_eq!(
+            v.get("gp_within_baselines").unwrap().as_bool(),
+            Some(rep.gp_within_baselines)
+        );
+    }
+
+    #[test]
+    fn batch_runs_in_spec_order_and_writes_reports() {
+        let specs = vec![
+            quick_spec("abilene", Congestion::Light),
+            quick_spec("abilene", Congestion::Heavy),
+        ];
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("../target")
+            .join(format!("scfo-scenarios-test-{}", std::process::id()));
+        let reports = run_batch(
+            &specs,
+            &RunnerOptions {
+                jobs: 2,
+                out_dir: Some(dir.clone()),
+                quiet: true,
+            },
+        )
+        .unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].name, "abilene-light");
+        assert_eq!(reports[1].name, "abilene-heavy");
+        for rep in &reports {
+            let path = dir.join(format!("{}.json", rep.name));
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(Json::parse(&text).is_ok(), "unparseable report {path:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -33,6 +33,23 @@ impl ComparisonRow {
     }
 }
 
+/// Run all four algorithms on one already-built network. The scenario
+/// engine ([`crate::scenarios`]) and the fig benches share this path.
+pub fn compare_on_network(
+    name: &str,
+    net: &Network,
+    max_iters: usize,
+) -> anyhow::Result<ComparisonRow> {
+    let mut costs: Vec<(&'static str, f64)> = Vec::with_capacity(Algorithm::ALL.len());
+    for alg in Algorithm::ALL {
+        costs.push((alg.name(), alg.solve(net, max_iters)?));
+    }
+    Ok(ComparisonRow {
+        scenario: name.to_string(),
+        costs,
+    })
+}
+
 /// Run all four algorithms on a scenario (averaged over `trials` seeds).
 pub fn compare_algorithms(
     scenario: &Scenario,
@@ -46,8 +63,8 @@ pub fn compare_algorithms(
     for trial in 0..trials {
         let mut rng = Rng::new(scenario.seed.wrapping_add(trial as u64));
         let net = scenario.build(&mut rng)?;
-        for (idx, alg) in Algorithm::ALL.iter().enumerate() {
-            let cost = alg.solve(&net, max_iters)?;
+        let row = compare_on_network(&scenario.name, &net, max_iters)?;
+        for (idx, (_n, cost)) in row.costs.iter().enumerate() {
             sums[idx].1 += cost / trials as f64;
         }
     }

@@ -5,4 +5,6 @@ pub mod des;
 pub mod flowsim;
 
 pub use des::{simulate, DesReport};
-pub use flowsim::{compare_algorithms, packet_size_sweep, rate_sweep, ComparisonRow, HopRow};
+pub use flowsim::{
+    compare_algorithms, compare_on_network, packet_size_sweep, rate_sweep, ComparisonRow, HopRow,
+};

@@ -1,33 +1,39 @@
-//! Tiny `log`-facade backend writing to stderr with level filtering via
-//! `SCFO_LOG` (error|warn|info|debug|trace; default info).
+//! Tiny std-only stderr logger with level filtering via `SCFO_LOG`
+//! (error|warn|info|debug|trace; default info). The `log`/`once_cell` crates
+//! are unavailable offline, so this module provides the whole facade: call
+//! [`init`] once, then use the [`crate::log_info!`]-family macros (or
+//! [`log`] directly).
 
-use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger {
-    max: Level,
+/// Log severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.max
-    }
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!(
-                "[{:<5} {}] {}",
-                record.level(),
-                record.target(),
-                record.args()
-            );
+impl Level {
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
     }
-    fn flush(&self) {}
 }
 
-static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+/// Current max level; 0 = not yet initialized (treated as Info).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
 
-/// Install the logger (idempotent).
+/// Install the logger (idempotent): reads `SCFO_LOG` once and stores the
+/// filter level. Safe to call repeatedly (tests do).
 pub fn init() {
     let level = match std::env::var("SCFO_LOG").as_deref() {
         Ok("error") => Level::Error,
@@ -36,18 +42,75 @@ pub fn init() {
         Ok("trace") => Level::Trace,
         _ => Level::Info,
     };
-    let logger = LOGGER.get_or_init(|| StderrLogger { max: level });
-    // Ignore "already set" errors from repeated init in tests.
-    let _ = log::set_logger(logger);
-    log::set_max_level(LevelFilter::Trace);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is a record at `level` currently enabled?
+pub fn enabled(level: Level) -> bool {
+    let max = MAX_LEVEL.load(Ordering::Relaxed);
+    let max = if max == 0 { Level::Info as u8 } else { max };
+    (level as u8) <= max
+}
+
+/// Emit one record to stderr if enabled.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{:<5} {}] {}", level.name(), target, args);
+    }
+}
+
+/// Log at info level: `log_info!("solved in {} slots", n)`.
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($t)*),
+        )
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($t)*),
+        )
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($t)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+        init();
+        init();
+        crate::log_info!("logging smoke test");
+    }
+
+    #[test]
+    fn severity_ordering() {
+        init();
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info) || !enabled(Level::Info)); // never panics
+        assert!(Level::Error < Level::Trace);
     }
 }

@@ -8,6 +8,7 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod toml;
 
 /// Float comparison helper used across tests: |a-b| <= atol + rtol*|b|.
 pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {

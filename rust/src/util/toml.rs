@@ -1,0 +1,285 @@
+//! Minimal TOML subset parser (the `toml` crate is unavailable offline).
+//!
+//! Parses the subset the scenario-spec files use and converts it into the
+//! crate's [`Json`] value model so one loading path serves both formats:
+//!
+//! * `key = value` pairs with string, integer, float, boolean and flat
+//!   array values,
+//! * `[table]` / `[table.sub]` headers,
+//! * `[[array-of-tables]]` headers (used for event schedules),
+//! * `#` comments and blank lines.
+//!
+//! Not supported (rejected with an error): inline tables, string escapes,
+//! multi-line strings, dotted keys in assignments, dates. The scenario
+//! engine does not need them.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Parse a TOML document into a [`Json::Obj`].
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    // Path of the currently open table; an Index segment addresses an
+    // element of an array of tables created by a [[...]] header.
+    let mut path: Vec<PathSeg> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+            let keys = split_table_key(inner, lineno)?;
+            let arr = resolve_array(&mut root, &keys, lineno)?;
+            arr.push(Json::Obj(BTreeMap::new()));
+            let idx = arr.len() - 1;
+            path = to_segs(&keys);
+            path.push(PathSeg::Index(idx));
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            let keys = split_table_key(inner, lineno)?;
+            path = to_segs(&keys);
+            // materialize the table so empty sections exist in the output
+            let _ = resolve_table(&mut root, &path, lineno)?;
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = unquote_key(k.trim(), lineno)?;
+            let value = parse_value(v.trim(), lineno)?;
+            let table = resolve_table(&mut root, &path, lineno)?;
+            table.insert(key, value);
+        } else {
+            anyhow::bail!("toml line {}: cannot parse '{line}'", lineno + 1);
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+#[derive(Clone, Debug)]
+enum PathSeg {
+    Key(String),
+    Index(usize),
+}
+
+fn to_segs(keys: &[String]) -> Vec<PathSeg> {
+    keys.iter().map(|k| PathSeg::Key(k.clone())).collect()
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside of a quoted string starts a comment
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_table_key(inner: &str, lineno: usize) -> anyhow::Result<Vec<String>> {
+    let mut out = Vec::new();
+    for part in inner.split('.') {
+        out.push(unquote_key(part.trim(), lineno)?);
+    }
+    Ok(out)
+}
+
+fn unquote_key(k: &str, lineno: usize) -> anyhow::Result<String> {
+    anyhow::ensure!(!k.is_empty(), "toml line {}: empty key", lineno + 1);
+    if let Some(q) = k.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(q.to_string());
+    }
+    anyhow::ensure!(
+        k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+        "toml line {}: bad bare key '{k}'",
+        lineno + 1
+    );
+    Ok(k.to_string())
+}
+
+/// Walk (creating intermediate tables as needed) to the table addressed by
+/// `path`. Index segments step into an element of an array of tables.
+fn resolve_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[PathSeg],
+    lineno: usize,
+) -> anyhow::Result<&'a mut BTreeMap<String, Json>> {
+    let mut cur: &'a mut BTreeMap<String, Json> = root;
+    let mut i = 0;
+    while i < path.len() {
+        let k = match &path[i] {
+            PathSeg::Key(k) => k,
+            PathSeg::Index(_) => {
+                anyhow::bail!("toml line {}: misplaced table index", lineno + 1)
+            }
+        };
+        if let Some(PathSeg::Index(idx)) = path.get(i + 1) {
+            let entry = cur
+                .entry(k.clone())
+                .or_insert_with(|| Json::Arr(Vec::new()));
+            let arr = match entry {
+                Json::Arr(a) => a,
+                _ => anyhow::bail!(
+                    "toml line {}: key '{k}' is not an array of tables",
+                    lineno + 1
+                ),
+            };
+            anyhow::ensure!(
+                *idx < arr.len(),
+                "toml line {}: table index out of range",
+                lineno + 1
+            );
+            cur = match &mut arr[*idx] {
+                Json::Obj(o) => o,
+                _ => anyhow::bail!(
+                    "toml line {}: array '{k}' holds non-table values",
+                    lineno + 1
+                ),
+            };
+            i += 2;
+        } else {
+            let entry = cur
+                .entry(k.clone())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+            cur = match entry {
+                Json::Obj(next) => next,
+                _ => anyhow::bail!(
+                    "toml line {}: key '{k}' is not a table",
+                    lineno + 1
+                ),
+            };
+            i += 1;
+        }
+    }
+    Ok(cur)
+}
+
+/// Walk to the array of tables addressed by `keys`, creating it if absent.
+fn resolve_array<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    keys: &[String],
+    lineno: usize,
+) -> anyhow::Result<&'a mut Vec<Json>> {
+    let (last, prefix) = keys.split_last().expect("non-empty table key");
+    let parent = resolve_table(root, &to_segs(prefix), lineno)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(a) => Ok(a),
+        _ => anyhow::bail!("toml line {}: key '{last}' is not an array", lineno + 1),
+    }
+}
+
+fn parse_value(v: &str, lineno: usize) -> anyhow::Result<Json> {
+    anyhow::ensure!(!v.is_empty(), "toml line {}: empty value", lineno + 1);
+    if let Some(q) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        anyhow::ensure!(
+            !q.contains('"') && !q.contains('\\'),
+            "toml line {}: unsupported escaped string",
+            lineno + 1
+        );
+        return Ok(Json::Str(q.to_string()));
+    }
+    if v == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        let mut items = Vec::new();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    let num = v.replace('_', "");
+    num.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow::anyhow!("toml line {}: bad value '{v}'", lineno + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_keys_and_types() {
+        let doc = r##"
+            # a comment
+            name = "er-heavy"   # trailing comment
+            jobs = 4
+            rate = 1.25
+            on = true
+            tags = ["a", "b"]
+            empty = []
+        "##;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("er-heavy"));
+        assert_eq!(v.get("jobs").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("rate").unwrap().as_f64(), Some(1.25));
+        assert_eq!(v.get("on").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("tags").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("empty").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn tables_and_subtables() {
+        let doc = r#"
+            top = 1
+            [workload]
+            num_apps = 3
+            [workload.sizes]
+            base = 10.0
+        "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("top").unwrap().as_f64(), Some(1.0));
+        let w = v.get("workload").unwrap();
+        assert_eq!(w.get("num_apps").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            w.get("sizes").unwrap().get("base").unwrap().as_f64(),
+            Some(10.0)
+        );
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = r#"
+            name = "x"
+            [[events]]
+            kind = "rate-scale"
+            factor = 1.5
+            [[events]]
+            kind = "link-down"
+        "#;
+        let v = parse(doc).unwrap();
+        let evs = v.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("kind").unwrap().as_str(), Some("rate-scale"));
+        assert_eq!(evs[0].get("factor").unwrap().as_f64(), Some(1.5));
+        assert_eq!(evs[1].get("kind").unwrap().as_str(), Some("link-down"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("not a kv line").is_err());
+        assert!(parse("x =").is_err());
+        assert!(parse("[bad").is_err());
+        assert!(parse("a = {inline = 1}").is_err());
+        assert!(parse("key with space = 1").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let v = parse("s = \"a # b\"").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # b"));
+    }
+}

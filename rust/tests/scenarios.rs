@@ -1,0 +1,141 @@
+//! Scenario-engine integration tests: matrix shape, batch execution, and
+//! the determinism contract — same seed + spec gives bit-identical results
+//! across repeated runs and across serial vs parallel execution.
+
+use scfo::scenarios::{
+    run_batch, Congestion, DynamicEvent, RunnerOptions, ScenarioCache, ScenarioSpec,
+};
+
+/// A shrunk three-scenario batch (three distinct topology families) that
+/// keeps debug-mode runtime small while still exercising the full path:
+/// initial solve, demand step, link churn, baseline comparison.
+fn small_batch() -> Vec<ScenarioSpec> {
+    let cells = [
+        ("abilene", Congestion::Nominal),
+        ("grid-3x3", Congestion::Heavy),
+        ("er-12-24", Congestion::Light),
+    ];
+    cells
+        .iter()
+        .map(|(family, congestion)| {
+            let mut spec = ScenarioSpec::named(family, *congestion).unwrap();
+            spec.iters = 250;
+            spec.events = vec![
+                DynamicEvent::RateScale {
+                    factor: 1.3,
+                    iters: 120,
+                },
+                DynamicEvent::LinkDown { iters: 120 },
+                DynamicEvent::LinkUp { iters: 120 },
+            ];
+            spec
+        })
+        .collect()
+}
+
+fn quiet(jobs: usize) -> RunnerOptions {
+    RunnerOptions {
+        jobs,
+        out_dir: None,
+        quiet: true,
+    }
+}
+
+#[test]
+fn default_matrix_meets_acceptance_shape() {
+    let matrix = ScenarioSpec::matrix();
+    assert!(matrix.len() >= 12, "matrix too small: {}", matrix.len());
+    let families: std::collections::BTreeSet<&str> =
+        matrix.iter().map(|s| s.base.topology.as_str()).collect();
+    assert!(families.len() >= 3, "need >= 3 topology families");
+    let levels: std::collections::BTreeSet<&str> =
+        matrix.iter().map(|s| s.congestion.name()).collect();
+    assert_eq!(levels.len(), 3, "need all congestion levels");
+    assert!(
+        matrix.iter().all(|s| !s.events.is_empty()),
+        "every cell needs a dynamic-event schedule"
+    );
+}
+
+#[test]
+fn same_seed_and_spec_reproduce_identical_costs() {
+    let spec = &small_batch()[0];
+    let a = scfo::scenarios::runner::run_one(spec, &ScenarioCache::new()).unwrap();
+    let b = scfo::scenarios::runner::run_one(spec, &ScenarioCache::new()).unwrap();
+    assert_eq!(a.costs.len(), b.costs.len());
+    for ((n1, c1), (n2, c2)) in a.costs.iter().zip(&b.costs) {
+        assert_eq!(n1, n2);
+        assert!(
+            c1.to_bits() == c2.to_bits(),
+            "{n1}: {c1} vs {c2} must be bit-identical"
+        );
+    }
+    for (p1, p2) in a.phases.iter().zip(&b.phases) {
+        assert_eq!(p1.label, p2.label);
+        assert!(p1.gp_cost.to_bits() == p2.gp_cost.to_bits());
+    }
+}
+
+#[test]
+fn serial_and_parallel_execution_agree() {
+    let specs = small_batch();
+    let serial = run_batch(&specs, &quiet(1)).unwrap();
+    let parallel = run_batch(&specs, &quiet(4)).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.name, p.name, "report order must follow spec order");
+        for ((n1, c1), (n2, c2)) in s.costs.iter().zip(&p.costs) {
+            assert_eq!(n1, n2);
+            assert!(
+                c1.to_bits() == c2.to_bits(),
+                "{}/{n1}: serial {c1} vs parallel {c2}",
+                s.name
+            );
+        }
+        for (p1, p2) in s.phases.iter().zip(&p.phases) {
+            assert!(
+                p1.gp_cost.to_bits() == p2.gp_cost.to_bits(),
+                "{}/{}: serial {} vs parallel {}",
+                s.name,
+                p1.label,
+                p1.gp_cost,
+                p2.gp_cost
+            );
+        }
+    }
+}
+
+#[test]
+fn gp_beats_or_ties_baselines_across_small_batch() {
+    let reports = run_batch(&small_batch(), &quiet(2)).unwrap();
+    for rep in &reports {
+        let gp = rep.gp_cost();
+        for (name, cost) in rep.costs.iter().skip(1) {
+            assert!(
+                gp <= cost * (1.0 + 1e-6) + 1e-9,
+                "{}: GP {gp} lost to {name} {cost}",
+                rep.name
+            );
+        }
+        assert!(rep.gp_within_baselines, "{}: flag disagrees", rep.name);
+    }
+}
+
+#[test]
+fn dynamic_events_drive_cost_trajectory() {
+    let reports = run_batch(&small_batch(), &quiet(2)).unwrap();
+    for rep in &reports {
+        assert_eq!(rep.phases.len(), 4, "{}", rep.name);
+        assert_eq!(rep.phases[0].label, "initial");
+        // the 1.3x demand step strictly raises the settled optimum
+        assert!(
+            rep.phases[1].gp_cost > rep.phases[0].gp_cost,
+            "{}: rate step had no effect ({} -> {})",
+            rep.name,
+            rep.phases[0].gp_cost,
+            rep.phases[1].gp_cost
+        );
+        // all phases stay finite (smooth queue extension, no NaN)
+        assert!(rep.phases.iter().all(|p| p.gp_cost.is_finite()));
+    }
+}

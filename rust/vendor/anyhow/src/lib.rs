@@ -1,0 +1,151 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The real `anyhow` is unavailable in this offline build, so this vendored
+//! shim implements exactly the API subset the workspace uses: [`Error`],
+//! [`Result`], and the [`anyhow!`], [`bail!`] and [`ensure!`] macros, plus
+//! the blanket `From<E: std::error::Error>` conversion that makes `?` work.
+//!
+//! Semantics mirror the real crate where it matters:
+//! * `Error` intentionally does **not** implement `std::error::Error` (so the
+//!   blanket `From` impl does not collide with the reflexive `From<T> for T`);
+//! * `Debug` prints the display message (the real crate prints message plus
+//!   backtrace; there is no backtrace support here);
+//! * no downcasting or context chaining — nothing in the workspace needs it.
+
+use std::fmt;
+
+/// An error message wrapper, boxed so `Result<T, Error>` stays one word.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+/// `Result<T, anyhow::Error>` with the same defaulted form as the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(MessageError(message)),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+/// Ad-hoc message error backing [`Error::msg`].
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> std::error::Error for MessageError<M> {}
+
+/// Create an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needs_msg(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    fn bails() -> Result<()> {
+        bail!("nope: {}", 42);
+    }
+
+    fn io_err() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(needs_msg(true).unwrap(), 7);
+        let e = needs_msg(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        let b = bails().unwrap_err();
+        assert_eq!(format!("{b}"), "nope: 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_err().unwrap_err();
+        assert!(!format!("{e}").is_empty());
+        assert!(!format!("{e:?}").is_empty());
+    }
+
+    #[test]
+    fn anyhow_macro_single_expr() {
+        let msg = String::from("plain");
+        let e: Error = anyhow!(msg);
+        assert_eq!(format!("{e}"), "plain");
+    }
+}
