@@ -196,7 +196,7 @@ fn fig4_net(rho: f64) -> anyhow::Result<scfo::app::Network> {
 /// link, and the (zero-traffic) intermediate nodes pointing *backwards* so
 /// the cheap path looks unattractive through their marginals — a KKT point.
 fn fig4_degenerate_phi(net: &scfo::app::Network) -> Strategy {
-    let mut phi = Strategy::zeros(4, 2);
+    let mut phi = Strategy::zeros(&net.graph, 2);
     for s in 0..2 {
         phi.set(s, 0, 3, 1.0);
         phi.set(s, 1, 0, 1.0); // backward

@@ -9,10 +9,17 @@
 //!
 //! (plus, trivially, all j with (i,j) ∉ ℰ). Category 2 is the transitive
 //! "dirty" closure computed in reverse topological order of the stage DAG.
+//!
+//! Flags are stored per CSR link slot of the graph layout
+//! ([`crate::graph::CsrLayout`]) — O(m) per stage; directions without a slot
+//! are blocked by construction and CPU slots are never blocked.
+
+use std::sync::Arc;
 
 use crate::app::Network;
+use crate::graph::CsrLayout;
 use crate::marginals::Marginals;
-use crate::strategy::Strategy;
+use crate::strategy::{Strategy, TopoScratch};
 
 /// Category-2 "dirty" tags: `dirty[s][j]` is true iff node j has a
 /// positive-φ stage-s path containing an improper link (p,q), i.e. one with
@@ -22,70 +29,117 @@ use crate::strategy::Strategy;
 pub fn compute_dirty(phi: &Strategy, mg: &Marginals) -> Vec<Vec<bool>> {
     let ns = mg.d_dt.len();
     let n = mg.d_dt.first().map_or(0, Vec::len);
-    let mut all = Vec::with_capacity(ns);
-    for s in 0..ns {
+    let mut dirty = vec![vec![false; n]; ns];
+    let mut topo = TopoScratch::new(n);
+    compute_dirty_into(phi, mg, &mut dirty, &mut topo);
+    dirty
+}
+
+/// Allocation-free variant of [`compute_dirty`]: writes into pre-shaped
+/// `[stage][node]` buffers.
+pub fn compute_dirty_into(
+    phi: &Strategy,
+    mg: &Marginals,
+    dirty: &mut [Vec<bool>],
+    topo: &mut TopoScratch,
+) {
+    for (s, d) in dirty.iter_mut().enumerate() {
         let ddt = &mg.d_dt[s];
-        let order = phi
-            .topo_order(s)
-            .expect("dirty tags require loop-free phi");
-        let mut dirty = vec![false; n];
-        for &p in order.iter().rev() {
+        let acyclic = phi.topo_order_into(s, topo);
+        assert!(acyclic, "dirty tags require loop-free phi");
+        d.iter_mut().for_each(|b| *b = false);
+        for &p in topo.order.iter().rev() {
             for q in phi.positive_links(s, p) {
-                if ddt[q] > ddt[p] + 1e-15 || dirty[q] {
-                    dirty[p] = true;
+                if ddt[q] > ddt[p] + 1e-15 || d[q] {
+                    d[p] = true;
                     break;
                 }
             }
         }
-        all.push(dirty);
     }
-    all
 }
 
-/// Blocked-set bitmaps for one iteration: `blocked[s][i*n + j]`.
+/// Blocked-set bitmaps for one iteration: one flag per CSR slot
+/// (`blocked[s][slot]`; CPU slots always false).
 #[derive(Clone, Debug)]
 pub struct BlockedSets {
-    n: usize,
+    layout: Arc<CsrLayout>,
     blocked: Vec<Vec<bool>>,
 }
 
 impl BlockedSets {
-    /// Is neighbor j blocked for (stage s, node i)? The CPU slot is never
-    /// blocked (stage transitions cannot form same-stage loops).
+    /// All-clear blocked sets shaped for `net` (workspace pre-allocation).
+    pub fn new_zeroed(net: &Network) -> BlockedSets {
+        let layout = Arc::clone(net.graph.layout());
+        BlockedSets {
+            blocked: vec![vec![false; layout.num_slots()]; net.num_stages()],
+            layout,
+        }
+    }
+
+    /// Is direction j blocked for (stage s, node i)? The CPU slot (`j >= n`)
+    /// is never blocked (stage transitions cannot form same-stage loops);
+    /// non-link directions are always blocked.
     #[inline]
     pub fn is_blocked(&self, s: usize, i: usize, j: usize) -> bool {
-        if j >= self.n {
+        if j >= self.layout.n() {
             return false; // CPU slot
         }
-        self.blocked[s][i * self.n + j]
+        match self.layout.slot_of(i, j) {
+            Some(t) => self.blocked[s][t],
+            None => true, // not a link
+        }
+    }
+
+    /// Sparse row of blocked flags for (stage s, node i): link slots first
+    /// (ascending by target), CPU slot last (always false) — index-aligned
+    /// with [`Strategy::row`].
+    #[inline]
+    pub fn row(&self, s: usize, i: usize) -> &[bool] {
+        &self.blocked[s][self.layout.slot_range(i)]
     }
 
     /// Compute all blocked sets at the current operating point.
     pub fn compute(net: &Network, phi: &Strategy, mg: &Marginals) -> BlockedSets {
-        let n = net.n();
-        let ns = net.num_stages();
-        let mut blocked = vec![vec![false; n * n]; ns];
-        let all_dirty = compute_dirty(phi, mg);
+        let mut out = BlockedSets::new_zeroed(net);
+        let mut dirty = vec![vec![false; net.n()]; net.num_stages()];
+        let mut topo = TopoScratch::new(net.n());
+        BlockedSets::compute_into(net, phi, mg, &mut out, &mut dirty, &mut topo);
+        out
+    }
 
-        for s in 0..ns {
+    /// Allocation-free variant of [`BlockedSets::compute`]: writes into a
+    /// pre-shaped `out` (see [`BlockedSets::new_zeroed`]) using caller-owned
+    /// dirty-tag and topological-sort scratch.
+    pub fn compute_into(
+        net: &Network,
+        phi: &Strategy,
+        mg: &Marginals,
+        out: &mut BlockedSets,
+        dirty: &mut [Vec<bool>],
+        topo: &mut TopoScratch,
+    ) {
+        compute_dirty_into(phi, mg, dirty, topo);
+        let layout = net.graph.layout();
+        for (s, b) in out.blocked.iter_mut().enumerate() {
             let ddt = &mg.d_dt[s];
-            let dirty = &all_dirty[s];
-            let b = &mut blocked[s];
-            // default: blocked (covers all non-links), then unblock the |E|
-            // real links that pass the downhill + clean-path tests
-            b.fill(true);
-            for e in 0..net.m() {
-                let (i, j) = net.graph.edge(e);
-                b[i * n + j] = ddt[j] > ddt[i] + 1e-15 || dirty[j];
+            let d = &dirty[s];
+            for i in 0..net.n() {
+                let r = layout.slot_range(i);
+                for t in r.start..r.end - 1 {
+                    let j = layout.slot_target(t);
+                    b[t] = ddt[j] > ddt[i] + 1e-15 || d[j];
+                }
+                b[r.end - 1] = false; // CPU never blocked
             }
         }
-        BlockedSets { n, blocked }
     }
 
     /// Count of unblocked out-directions (links + CPU when allowed) for
     /// diagnostics.
     pub fn unblocked_count(&self, s: usize, i: usize, cpu_allowed: bool) -> usize {
-        let links = (0..self.n).filter(|&j| !self.is_blocked(s, i, j)).count();
+        let r = self.layout.link_slot_range(i);
+        let links = self.blocked[s][r].iter().filter(|&&b| !b).count();
         links + usize::from(cpu_allowed)
     }
 }
@@ -136,6 +190,10 @@ mod tests {
         assert!(bs.is_blocked(s0, 0, 2));
         // CPU never blocked
         assert!(!bs.is_blocked(s0, 0, 3));
+        // the sparse row is aligned with the φ row and ends with the CPU slot
+        let row = bs.row(s0, 0);
+        assert_eq!(row.len(), phi.row(s0, 0).len());
+        assert!(!row[row.len() - 1]);
     }
 
     #[test]

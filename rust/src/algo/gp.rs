@@ -15,6 +15,15 @@
 //! sufficiency condition (6) of Theorem 1, i.e. a *global* optimum of the
 //! non-convex problem (2).
 //!
+//! Everything in the hot path is laid out on the graph's CSR slot arena
+//! ([`crate::graph::CsrLayout`]): φ rows, δ rows, blocked flags and the
+//! [`SupportMask`] all have `out_degree(i)+1` entries per (stage, node),
+//! making one iteration O(|𝒮|·(m+n)). A preallocated [`Workspace`] holds
+//! every per-iteration buffer, so [`GradientProjection::step`] performs no
+//! heap allocation after construction (asserted by
+//! `rust/tests/alloc_free.rs`); see `docs/PERFORMANCE.md` for the cost
+//! model.
+//!
 //! The same struct powers the baselines: a [`SupportMask`] restricts which
 //! out-directions a node may ever use (SPOC: shortest-path next hop + CPU;
 //! LCOF: CPU only for non-final stages), turning GP into the restricted
@@ -42,17 +51,21 @@
 //! assert!(!gp.phi.has_loop());
 //! ```
 
+use std::sync::Arc;
+
 use crate::algo::blocked::BlockedSets;
 use crate::app::Network;
 use crate::flow::FlowState;
+use crate::graph::CsrLayout;
 use crate::marginals::{Marginals, INF_MARGINAL};
-use crate::strategy::{Strategy, PHI_EPS};
+use crate::strategy::{Strategy, TopoScratch, PHI_EPS};
 
 /// Restricts the set of usable out-directions per (stage, node).
+/// One flag per CSR slot, aligned with [`Strategy::row`].
 #[derive(Clone, Debug)]
 pub struct SupportMask {
-    n: usize,
-    /// [stage][i*(n+1)+j] — true if direction j is permitted.
+    layout: Arc<CsrLayout>,
+    /// [stage][slot] — true if the direction is permitted.
     allowed: Vec<Vec<bool>>,
 }
 
@@ -60,38 +73,57 @@ impl SupportMask {
     /// Everything the network topology permits: all out-links, plus the CPU
     /// for non-final stages.
     pub fn full(net: &Network) -> Self {
-        let n = net.n();
-        let mut allowed = vec![vec![false; n * (n + 1)]; net.num_stages()];
-        for s in 0..net.num_stages() {
-            let is_final = net.is_final_stage(s);
-            for i in 0..n {
-                for &j in net.graph.out_neighbors(i) {
-                    allowed[s][i * (n + 1) + j] = true;
-                }
-                if !is_final {
-                    allowed[s][i * (n + 1) + n] = true;
+        let layout = Arc::clone(net.graph.layout());
+        let mut allowed = vec![vec![true; layout.num_slots()]; net.num_stages()];
+        for (s, row) in allowed.iter_mut().enumerate() {
+            if net.is_final_stage(s) {
+                for i in 0..net.n() {
+                    row[layout.cpu_slot(i)] = false;
                 }
             }
         }
-        SupportMask { n, allowed }
+        SupportMask { layout, allowed }
     }
 
     /// Start from nothing allowed (callers then whitelist directions).
     pub fn empty(net: &Network) -> Self {
-        let n = net.n();
+        let layout = Arc::clone(net.graph.layout());
         SupportMask {
-            n,
-            allowed: vec![vec![false; n * (n + 1)]; net.num_stages()],
+            allowed: vec![vec![false; layout.num_slots()]; net.num_stages()],
+            layout,
         }
     }
 
+    /// Permit direction `j` from node `i` (`j == n` = the CPU).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `(i, j)` is neither a link nor the CPU direction — such
+    /// directions have no slot and can never carry mass.
     #[inline]
     pub fn allow(&mut self, s: usize, i: usize, j: usize) {
-        self.allowed[s][i * (self.n + 1) + j] = true;
+        let t = self
+            .layout
+            .slot_of(i, j)
+            .unwrap_or_else(|| panic!("SupportMask::allow({s},{i},{j}): not a link or the CPU"));
+        self.allowed[s][t] = true;
     }
+
+    /// Is direction `j` from node `i` permitted? Non-slot directions are
+    /// never permitted.
     #[inline]
     pub fn is_allowed(&self, s: usize, i: usize, j: usize) -> bool {
-        self.allowed[s][i * (self.n + 1) + j]
+        match self.layout.slot_of(i, j) {
+            Some(t) => self.allowed[s][t],
+            None => false,
+        }
+    }
+
+    /// Sparse row of permission flags for (stage s, node i), index-aligned
+    /// with [`Strategy::row`].
+    #[inline]
+    pub fn row(&self, s: usize, i: usize) -> &[bool] {
+        &self.allowed[s][self.layout.slot_range(i)]
     }
 }
 
@@ -112,14 +144,15 @@ pub enum StepScaling {
 /// centralized optimizer and the distributed per-node actors
 /// ([`crate::distributed`]) so both produce bit-identical iterates.
 ///
-/// * `row` — the node's φ row (length n+1, CPU slot last), updated in place.
-/// * `drow` — the modified marginals δ_i (eq. 7) for each direction.
-/// * `usable(j)` — direction permitted: in the support mask, not blocked,
-///   and δ finite.
+/// * `row` — the node's sparse φ row (`out_degree(i)+1` slots, CPU last),
+///   updated in place.
+/// * `drow` — the modified marginals δ_i (eq. 7), slot-aligned with `row`.
+/// * `usable(t)` — slot permitted: in the support mask, not blocked, and δ
+///   finite.
 /// * `t_i` — the node's current stage traffic (zero-traffic rows snap to the
 ///   argmin; see below).
 /// * `alpha` — stepsize.
-/// * `curv` — optional per-direction curvature h_ij for
+/// * `curv` — optional per-slot curvature h_ij for
 ///   [`StepScaling::Diagonal`]; `None` = paper-exact fixed step.
 /// * `zero_snap` — snap zero-traffic rows onto the argmin (required for
 ///   finite-time convergence to condition (6); disabling reproduces the
@@ -287,11 +320,117 @@ pub struct GpReport {
     pub converged: bool,
 }
 
-/// The optimizer. Owns the evolving strategy φ.
+/// Preallocated per-iteration buffers. Constructed once per optimizer (or
+/// reusable across optimizers on the same network shape); after warm-up,
+/// [`GradientProjection::step`] touches only these buffers and allocates
+/// nothing.
+///
+/// Lifecycle: [`Workspace::new`] sizes every buffer from the network
+/// (CSR arena length `m+n`, per-stage vectors, the max row width for the
+/// curvature scratch). `step` then cycles
+/// flows → marginals → blocked sets → candidate build → candidate flows,
+/// and *swaps* the accepted candidate with the live strategy instead of
+/// cloning it.
+#[derive(Clone, Debug)]
+pub struct Workspace {
+    fs: FlowState,
+    cand_fs: FlowState,
+    mg: Marginals,
+    blocked: BlockedSets,
+    dirty: Vec<Vec<bool>>,
+    topo: TopoScratch,
+    cand: Strategy,
+    curv: Vec<f64>,
+}
+
+impl Workspace {
+    /// Allocate all per-iteration buffers for networks of `net`'s shape.
+    pub fn new(net: &Network) -> Workspace {
+        Workspace {
+            fs: FlowState::new_zeroed(net),
+            cand_fs: FlowState::new_zeroed(net),
+            mg: Marginals::new_zeroed(net),
+            blocked: BlockedSets::new_zeroed(net),
+            dirty: vec![vec![false; net.n()]; net.num_stages()],
+            topo: TopoScratch::new(net.n()),
+            cand: Strategy::zeros(&net.graph, net.num_stages()),
+            curv: vec![0.0; net.graph.max_out_degree() + 1],
+        }
+    }
+}
+
+/// The optimizer. Owns the evolving strategy φ and its [`Workspace`].
 pub struct GradientProjection {
     pub phi: Strategy,
     pub opts: GpOptions,
     support: SupportMask,
+    ws: Workspace,
+}
+
+/// Build the eq. (9) update for stepsize `alpha` into `cand` (which must
+/// start as a copy of `phi`); see [`gp_row_update`]. Free function so the
+/// optimizer can borrow its workspace field-wise. (The caller derives the
+/// applied |Δφ| afterwards via [`Strategy::max_diff`], which also accounts
+/// for renormalization and the loop-safety net.)
+#[allow(clippy::too_many_arguments)]
+fn build_candidate(
+    net: &Network,
+    support: &SupportMask,
+    opts: &GpOptions,
+    fs: &FlowState,
+    mg: &Marginals,
+    blocked: &BlockedSets,
+    alpha: f64,
+    cand: &mut Strategy,
+    curv: &mut [f64],
+) {
+    let n = net.n();
+    let layout = net.graph.layout();
+
+    for (s, (a, _k)) in net.stages.iter() {
+        let is_final = net.is_final_stage(s);
+        let dest = net.apps[a].dest;
+        let l = net.packet_size(s);
+        for i in 0..n {
+            if is_final && i == dest {
+                continue; // exit row
+            }
+            let drow = mg.delta_row(s, i);
+            let arow = support.row(s, i);
+            let brow = blocked.row(s, i);
+            let ablate = opts.ablate_blocking;
+            let usable = |t: usize| -> bool {
+                if !arow[t] || drow[t] >= INF_MARGINAL {
+                    return false;
+                }
+                // with blocking ablated, keep only the structural part
+                // (slots exist; δ finite); CPU slots are never blocked
+                ablate || !brow[t]
+            };
+            let width = drow.len();
+            let curv_opt = if opts.scaling == StepScaling::Diagonal {
+                let r = layout.slot_range(i);
+                for (idx, t) in (r.start..r.end - 1).enumerate() {
+                    let e = layout.slot_edge(t);
+                    curv[idx] = l * l * net.link_cost[e].deriv2(fs.link_flow[e]);
+                }
+                let w = net.comp_weight[s][i];
+                curv[width - 1] = w * w * net.comp_cost[i].deriv2(fs.workload[i]);
+                Some(&curv[..width])
+            } else {
+                None
+            };
+            gp_row_update_ext(
+                cand.row_mut(s, i),
+                drow,
+                usable,
+                fs.traffic[s][i],
+                alpha,
+                curv_opt,
+                !opts.ablate_zero_snap,
+            );
+        }
+    }
 }
 
 impl GradientProjection {
@@ -310,45 +449,68 @@ impl GradientProjection {
             .support
             .clone()
             .unwrap_or_else(|| SupportMask::full(net));
-        GradientProjection { phi, opts, support }
+        GradientProjection {
+            phi,
+            opts,
+            support,
+            ws: Workspace::new(net),
+        }
     }
 
     /// One GP slot: returns the iteration diagnostics. The accepted iterate
-    /// is guaranteed feasible and loop-free.
+    /// is guaranteed feasible and loop-free. Allocation-free after
+    /// construction (all buffers live in the [`Workspace`]).
     pub fn step(&mut self, net: &Network) -> IterStats {
-        let fs = FlowState::solve(net, &self.phi).expect("loop-free invariant");
-        let mg = Marginals::compute(net, &self.phi, &fs);
-        let blocked = BlockedSets::compute(net, &self.phi, &mg);
-        let base_cost = fs.total_cost;
-        let residual = mg.condition6_residual(net, &self.phi);
+        FlowState::solve_into(net, &self.phi, &mut self.ws.fs, &mut self.ws.topo)
+            .expect("loop-free invariant");
+        Marginals::compute_into(net, &self.phi, &self.ws.fs, &mut self.ws.mg, &mut self.ws.topo);
+        BlockedSets::compute_into(
+            net,
+            &self.phi,
+            &self.ws.mg,
+            &mut self.ws.blocked,
+            &mut self.ws.dirty,
+            &mut self.ws.topo,
+        );
+        let base_cost = self.ws.fs.total_cost;
+        let residual = self.ws.mg.condition6_residual(net, &self.phi);
 
         let mut alpha = self.opts.alpha;
         let mut backtracks = 0;
         loop {
-            let (mut cand, max_change) = self.candidate(net, &fs, &mg, &blocked, alpha);
+            self.ws.cand.copy_from(&self.phi);
+            build_candidate(
+                net,
+                &self.support,
+                &self.opts,
+                &self.ws.fs,
+                &self.ws.mg,
+                &self.ws.blocked,
+                alpha,
+                &mut self.ws.cand,
+                &mut self.ws.curv,
+            );
             // Hard safety net: revert any stage whose update closed a loop
             // (cannot happen per the blocking argument, but guaranteed here).
             let mut reverted = 0;
             for s in 0..net.num_stages() {
-                if cand.topo_order(s).is_none() {
+                if !self.ws.cand.topo_order_into(s, &mut self.ws.topo) {
                     for i in 0..net.n() {
-                        let src = self.phi.row(s, i).to_vec();
-                        cand.row_mut(s, i).copy_from_slice(&src);
+                        self.ws.cand.row_mut(s, i).copy_from_slice(self.phi.row(s, i));
                     }
                     reverted += 1;
                 }
             }
-            cand.renormalize(net);
-            let cand_cost = FlowState::solve(net, &cand)
-                .expect("candidate loop-free after revert")
-                .total_cost;
+            self.ws.cand.renormalize(net);
+            FlowState::solve_into(net, &self.ws.cand, &mut self.ws.cand_fs, &mut self.ws.topo)
+                .expect("candidate loop-free after revert");
+            let cand_cost = self.ws.cand_fs.total_cost;
             if !self.opts.backtrack
                 || cand_cost <= base_cost + 1e-12
                 || backtracks >= self.opts.max_backtracks
             {
-                let _ = max_change;
-                let max_phi_change = self.phi.max_diff(&cand);
-                self.phi = cand;
+                let max_phi_change = self.phi.max_diff(&self.ws.cand);
+                std::mem::swap(&mut self.phi, &mut self.ws.cand);
                 return IterStats {
                     cost: cand_cost.min(base_cost),
                     residual,
@@ -360,74 +522,6 @@ impl GradientProjection {
             alpha *= 0.5;
             backtracks += 1;
         }
-    }
-
-    /// Build the eq. (9) update for stepsize `alpha` (see [`gp_row_update`]).
-    fn candidate(
-        &self,
-        net: &Network,
-        fs: &FlowState,
-        mg: &Marginals,
-        blocked: &BlockedSets,
-        alpha: f64,
-    ) -> (Strategy, f64) {
-        let n = net.n();
-        let mut cand = self.phi.clone();
-        let mut max_change: f64 = 0.0;
-
-        // curvature rows for the diagonal scaling (reused buffer)
-        let mut curv = vec![0.0; n + 1];
-        for (s, (a, k)) in net.stages.iter() {
-            let is_final = net.is_final_stage(s);
-            let dest = net.apps[a].dest;
-            let l = net.packet_size(s);
-            for i in 0..n {
-                if is_final && i == dest {
-                    continue; // exit row
-                }
-                let drow = mg.delta_row(s, i);
-                let usable = |j: usize| -> bool {
-                    if !self.support.is_allowed(s, i, j) || drow[j] >= INF_MARGINAL {
-                        return false;
-                    }
-                    if self.opts.ablate_blocking {
-                        // keep only the structural part (links exist; δ finite)
-                        return true;
-                    }
-                    !blocked.is_blocked(s, i, j)
-                };
-                let curv_opt = if self.opts.scaling == StepScaling::Diagonal {
-                    for (j, c) in curv.iter_mut().enumerate() {
-                        *c = if j < n {
-                            match net.graph.edge_id(i, j) {
-                                Some(e) => {
-                                    l * l * net.link_cost[e].deriv2(fs.link_flow[e])
-                                }
-                                None => 1.0,
-                            }
-                        } else {
-                            let w = net.comp_weight[s][i];
-                            w * w * net.comp_cost[i].deriv2(fs.workload[i])
-                        };
-                        let _ = k;
-                    }
-                    Some(curv.as_slice())
-                } else {
-                    None
-                };
-                let ch = gp_row_update_ext(
-                    cand.row_mut(s, i),
-                    drow,
-                    usable,
-                    fs.traffic[s][i],
-                    alpha,
-                    curv_opt,
-                    !self.opts.ablate_zero_snap,
-                );
-                max_change = max_change.max(ch);
-            }
-        }
-        (cand, max_change)
     }
 
     /// Run until convergence (condition-(6) residual < tol) or `max_iters`.
@@ -465,12 +559,16 @@ impl GradientProjection {
     /// the dead link to the remaining usable directions (paper: "node i only
     /// needs to add j to the blocked node set").
     pub fn on_link_removed(&mut self, net: &Network, i: usize, j: usize) {
+        let layout = net.graph.layout();
+        let Some(t) = layout.slot_of(i, j) else {
+            return; // not a link of this graph
+        };
+        let local = t - layout.slot_range(i).start;
         for s in 0..net.num_stages() {
-            let n = net.n();
-            let mass = self.phi.get(s, i, j);
-            self.support.allowed[s][i * (n + 1) + j] = false;
+            self.support.allowed[s][t] = false;
+            let mass = self.phi.row(s, i)[local];
             if mass > PHI_EPS {
-                self.phi.set(s, i, j, 0.0);
+                self.phi.row_mut(s, i)[local] = 0.0;
                 // redistribute onto remaining positive directions, or the
                 // minimum-hop next hop toward the destination if none remain
                 let row_sum: f64 = self.phi.row(s, i).iter().sum();
@@ -495,9 +593,10 @@ impl GradientProjection {
     /// Adapt to a topology change: link (i,j) added back — simply re-allow
     /// the direction; GP will start shifting mass onto it if profitable.
     pub fn on_link_added(&mut self, net: &Network, i: usize, j: usize) {
-        let n = net.n();
-        for s in 0..net.num_stages() {
-            self.support.allowed[s][i * (n + 1) + j] = true;
+        if let Some(t) = net.graph.layout().slot_of(i, j) {
+            for s in 0..net.num_stages() {
+                self.support.allowed[s][t] = true;
+            }
         }
     }
 }
@@ -629,7 +728,7 @@ mod tests {
         .unwrap();
 
         // degenerate start: everything on the direct link 0 -> 3
-        let mut phi0 = Strategy::zeros(4, 2);
+        let mut phi0 = Strategy::zeros(&net.graph, 2);
         for s in 0..2 {
             phi0.set(s, 0, 3, 1.0);
             phi0.set(s, 1, 2, 1.0);
@@ -716,7 +815,7 @@ mod tests {
             }
         }
         // start feasible w.r.t. the mask
-        let mut phi0 = Strategy::zeros(net.n(), net.num_stages());
+        let mut phi0 = Strategy::zeros(&net.graph, net.num_stages());
         for (s, (a, _)) in net.stages.iter() {
             let dest = net.apps[a].dest;
             let (_d, next) = net.graph.dijkstra_to(dest, |_| 1.0);

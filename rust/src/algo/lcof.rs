@@ -14,7 +14,7 @@ use crate::strategy::Strategy;
 pub fn lcof_setup(net: &Network) -> (SupportMask, Strategy) {
     let n = net.n();
     let mut mask = SupportMask::empty(net);
-    let mut phi0 = Strategy::zeros(n, net.num_stages());
+    let mut phi0 = Strategy::zeros(&net.graph, net.num_stages());
     for (s, (a, _k)) in net.stages.iter() {
         let dest = net.apps[a].dest;
         let is_final = net.is_final_stage(s);

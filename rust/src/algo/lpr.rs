@@ -160,7 +160,7 @@ pub fn run(net: &Network) -> anyhow::Result<LprReport> {
 
     // convert aggregated flows to node-based φ: t_i = inflow + injection,
     // φ_ij = f_ij / t_i.
-    let mut phi = Strategy::zeros(n, ns);
+    let mut phi = Strategy::zeros(&net.graph, ns);
     for (a, app) in net.apps.iter().enumerate() {
         for k in 0..app.num_stages() {
             let s = net.stages.id(a, k);

@@ -102,6 +102,164 @@ impl Bench {
     }
 }
 
+// ---- GP hot-path benchmark (`scfo bench --json` → BENCH.json) -------------
+
+/// One scenario's GP hot-path measurement: per-iteration wall times, cost
+/// trajectory and a peak-RSS proxy. Emitted into `BENCH.json` by
+/// `scfo bench --json`; schema documented in `docs/PERFORMANCE.md`.
+#[derive(Clone, Debug)]
+pub struct GpBenchResult {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub stages: usize,
+    /// CSR arena length (m + n) — the per-stage memory unit of the sparse
+    /// layout.
+    pub arena_slots: usize,
+    /// Seconds to build the network + optimizer (includes the Workspace
+    /// allocation; excluded from per-iteration times).
+    pub build_secs: f64,
+    /// Wall time of each timed
+    /// [`step`](crate::algo::gp::GradientProjection::step), warm (the
+    /// first, untimed step is excluded).
+    pub iter_secs: Vec<f64>,
+    /// Cost after each timed iteration.
+    pub cost_trajectory: Vec<f64>,
+    /// VmHWM from /proc/self/status, if available (Linux). A process-wide
+    /// high-water mark, not a per-scenario delta — compare runs, not rows.
+    pub peak_rss_bytes: Option<u64>,
+}
+
+/// Peak resident-set high-water mark of this process (Linux `VmHWM`);
+/// `None` on other platforms or if procfs is unreadable.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Build the named scenario (a Table-II name or any generator family the
+/// scenario engine accepts, e.g. `er-1000-4000`) at nominal congestion and
+/// time `iters` GP iterations after one untimed warm-up step. Families of
+/// the `large` tier get that tier's workload overrides (fewer apps, wider
+/// capacities), so the baseline measures the regime the tier actually runs.
+pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchResult> {
+    use crate::algo::gp::{GpOptions, GradientProjection};
+    use crate::scenarios::{Congestion, ScenarioSpec, LARGE_FAMILIES};
+    use crate::util::rng::Rng;
+
+    let spec = if LARGE_FAMILIES.contains(&family) {
+        ScenarioSpec::large_matrix()
+            .into_iter()
+            .find(|s| s.base.topology == family)
+            .expect("large_matrix covers every LARGE_FAMILIES entry")
+    } else {
+        ScenarioSpec::named(family, Congestion::Nominal)?
+    };
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    let t0 = Instant::now();
+    let net = sc.build(&mut rng)?;
+    let mut gp = GradientProjection::new(&net, GpOptions::default());
+    let build_secs = t0.elapsed().as_secs_f64();
+
+    // warm-up: first step pays one-off costs (page faults, branch history)
+    gp.step(&net);
+
+    let mut iter_secs = Vec::with_capacity(iters);
+    let mut cost_trajectory = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        let st = gp.step(&net);
+        iter_secs.push(t.elapsed().as_secs_f64());
+        cost_trajectory.push(st.cost);
+    }
+
+    Ok(GpBenchResult {
+        name: family.to_string(),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs,
+        cost_trajectory,
+        peak_rss_bytes: peak_rss_bytes(),
+    })
+}
+
+impl GpBenchResult {
+    /// Mean per-iteration wall time (seconds).
+    pub fn mean_iter_secs(&self) -> f64 {
+        stats::mean(&self.iter_secs)
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("stages", Json::Num(self.stages as f64)),
+            ("arena_slots", Json::Num(self.arena_slots as f64)),
+            ("build_secs", Json::Num(self.build_secs)),
+            ("iters", Json::Num(self.iter_secs.len() as f64)),
+            (
+                "iter_secs",
+                Json::obj(vec![
+                    ("mean", Json::Num(stats::mean(&self.iter_secs))),
+                    ("std", Json::Num(stats::stddev(&self.iter_secs))),
+                    (
+                        "min",
+                        Json::Num(
+                            self.iter_secs
+                                .iter()
+                                .cloned()
+                                .fold(f64::INFINITY, f64::min),
+                        ),
+                    ),
+                    (
+                        "max",
+                        Json::Num(self.iter_secs.iter().cloned().fold(0.0, f64::max)),
+                    ),
+                ]),
+            ),
+            ("iter_secs_samples", Json::arr_f64(&self.iter_secs)),
+            ("cost_trajectory", Json::arr_f64(&self.cost_trajectory)),
+            (
+                "final_cost",
+                Json::Num(self.cost_trajectory.last().copied().unwrap_or(f64::NAN)),
+            ),
+            (
+                "peak_rss_bytes",
+                match self.peak_rss_bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
+/// for how to read it).
+pub fn gp_bench_json(results: &[GpBenchResult]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("tool", Json::Str(format!("scfo {}", crate::version()))),
+        (
+            "scenarios",
+            Json::Arr(results.iter().map(GpBenchResult::to_json).collect()),
+        ),
+    ])
+}
+
 /// Format scenario-engine batch results ([`crate::scenarios::run_batch`])
 /// as table rows for [`print_table`]: one row per scenario with GP's
 /// absolute cost and each baseline's cost ratio to GP. Shared by
@@ -161,6 +319,22 @@ mod tests {
         let s = b.run("noop-ish", || (0..1000).sum::<u64>());
         assert!(s.mean_s >= 0.0 && s.min_s <= s.mean_s + 1e-12);
         assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn gp_bench_emits_valid_json() {
+        let res = bench_gp_scenario("abilene", 3).unwrap();
+        assert_eq!(res.iter_secs.len(), 3);
+        assert_eq!(res.cost_trajectory.len(), 3);
+        assert!(res.cost_trajectory.iter().all(|c| c.is_finite()));
+        assert_eq!(res.arena_slots, res.m + res.n);
+        let doc = gp_bench_json(&[res]);
+        let text = doc.to_string_pretty();
+        let re = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(1.0));
+        let scenarios = re.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(scenarios.len(), 1);
+        assert!(scenarios[0].get("iter_secs").unwrap().get("mean").is_some());
     }
 
     #[test]

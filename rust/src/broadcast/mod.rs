@@ -54,7 +54,6 @@ pub struct BroadcastOutcome {
 pub fn run_broadcast(net: &Network, phi: &Strategy, fs: &FlowState) -> BroadcastOutcome {
     let n = net.n();
     let ns = net.num_stages();
-    let cpu = phi.cpu();
     let mut d_dt = vec![vec![0.0; n]; ns];
     let mut dirty = vec![vec![false; n]; ns];
     let mut messages = 0usize;
@@ -100,15 +99,17 @@ pub fn run_broadcast(net: &Network, phi: &Strategy, fs: &FlowState) -> Broadcast
                 for i in batch {
                     debug_assert!(!computed[i]);
                     // eq. (4a)/(4b): weighted sum over downstream directions
+                    // (sparse row walk: link slots first, CPU slot last)
                     let mut acc = 0.0;
                     let mut is_dirty = false;
                     let row = phi.row(s, i);
-                    for (j, &p) in row.iter().enumerate().take(n) {
+                    let pc = row[row.len() - 1];
+                    for (idx, (j, e)) in net.graph.out_links(i).enumerate() {
+                        let p = row[idx];
                         if p > PHI_EPS {
                             let m = got[i][j]
                                 .as_ref()
                                 .expect("ready implies all downstream received");
-                            let e = net.graph.edge_id(i, j).unwrap();
                             acc += p * (l * fs.link_marginal[e] + m.d_dt);
                             // transitively dirty neighbor
                             if m.dirty {
@@ -116,17 +117,17 @@ pub fn run_broadcast(net: &Network, phi: &Strategy, fs: &FlowState) -> Broadcast
                             }
                         }
                     }
-                    if !is_final && row[cpu] > PHI_EPS {
+                    if !is_final && pc > PHI_EPS {
                         let next = net.stages.id(a, k + 1);
-                        acc += row[cpu]
+                        acc += pc
                             * (net.comp_weight[s][i] * fs.comp_marginal[i] + d_dt[next][i]);
                     }
                     d_dt[s][i] = acc;
                     // now that d_dt_i is known, finish the dirty test:
                     // any downstream j with d_dt_j > d_dt_i is an improper link
                     if !is_dirty {
-                        for (j, &p) in row.iter().enumerate().take(n) {
-                            if p > PHI_EPS {
+                        for (idx, (j, _e)) in net.graph.out_links(i).enumerate() {
+                            if row[idx] > PHI_EPS {
                                 let m = got[i][j].as_ref().unwrap();
                                 if m.d_dt > acc + 1e-15 {
                                     is_dirty = true;

@@ -112,13 +112,13 @@ impl Cluster {
                     prev: (k > 0).then(|| net.stages.id(a, k - 1)),
                 });
             }
-            let mut support = vec![vec![false; n + 1]; ns];
+            // sparse support rows: out_degree link slots (always allowed) +
+            // CPU slot (allowed for non-final stages), CSR slot order
+            let deg = net.graph.out_neighbors(id).len();
+            let mut support = vec![vec![true; deg + 1]; ns];
             for (s, row) in support.iter_mut().enumerate() {
-                for &j in net.graph.out_neighbors(id) {
-                    row[j] = true;
-                }
-                if !net.is_final_stage(s) {
-                    row[n] = true;
+                if net.is_final_stage(s) {
+                    row[deg] = false;
                 }
             }
             let phi_rows: Vec<Vec<f64>> =
@@ -344,16 +344,15 @@ impl Cluster {
                 let dest = self.net.dest_of_stage(s);
                 let (_d, next) = self.net.graph.dijkstra_to(dest, |_| 1.0);
                 let is_final = self.net.is_final_stage(s);
+                let cpu = self.phi.cpu();
                 for i in 0..self.net.n() {
-                    let row = self.phi.row_mut(s, i);
-                    row.iter_mut().for_each(|v| *v = 0.0);
+                    self.phi.row_mut(s, i).iter_mut().for_each(|v| *v = 0.0);
                     if i == dest {
                         if !is_final {
-                            let n = self.net.n();
-                            row[n] = 1.0;
+                            self.phi.set(s, i, cpu, 1.0);
                         }
                     } else {
-                        row[next[i]] = 1.0;
+                        self.phi.set(s, i, next[i], 1.0);
                     }
                 }
             }

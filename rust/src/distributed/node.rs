@@ -32,17 +32,24 @@ pub struct StageMeta {
 }
 
 /// Static node configuration.
+///
+/// Rows are *sparse*: `out_degree + 1` entries per stage, index-aligned with
+/// `out_neighbors` (ascending by node id, matching the graph's CSR slot
+/// order), CPU slot last — the same layout the centralized
+/// [`crate::strategy::Strategy`] rows use, so leader and nodes exchange rows
+/// verbatim.
 #[derive(Clone, Debug)]
 pub struct NodeConfig {
     pub id: usize,
     pub n: usize,
     pub alpha: f64,
+    /// Ascending by node id (the CSR link-slot order).
     pub out_neighbors: Vec<usize>,
     pub in_neighbors: Vec<usize>,
     pub stage_meta: Vec<StageMeta>,
-    /// Support mask rows: [stage][n+1].
+    /// Support mask rows: [stage][out_degree+1] (CPU slot last).
     pub support: Vec<Vec<bool>>,
-    /// Initial φ rows: [stage][n+1].
+    /// Initial φ rows: [stage][out_degree+1] (CPU slot last).
     pub phi_rows: Vec<Vec<f64>>,
 }
 
@@ -63,13 +70,18 @@ struct SlotState {
     replied: bool,
 }
 
+/// Sentinel in `nbr_slot` for nodes that are not out-neighbors.
+const NO_SLOT: usize = usize::MAX;
+
 /// The node actor. Drive it with [`NodeActor::run`] on a dedicated thread.
 pub struct NodeActor {
     cfg: NodeConfig,
     fabric: Arc<Fabric>,
     rx: Receiver<NetMsg>,
     reply_tx: std::sync::mpsc::Sender<Reply>,
-    /// φ rows, persisted across slots: [stage][n+1].
+    /// node id -> index into the sparse rows (NO_SLOT if not an out-neighbor)
+    nbr_slot: Vec<usize>,
+    /// φ rows, persisted across slots: [stage][out_degree+1] (CPU last).
     rows: Vec<Vec<f64>>,
     /// Pre-update rows of the most recent applied slot + its seq, kept so
     /// the leader can reject a slot (trust-region revert).
@@ -84,11 +96,16 @@ impl NodeActor {
         reply_tx: std::sync::mpsc::Sender<Reply>,
     ) -> Self {
         let rows = cfg.phi_rows.clone();
+        let mut nbr_slot = vec![NO_SLOT; cfg.n];
+        for (idx, &j) in cfg.out_neighbors.iter().enumerate() {
+            nbr_slot[j] = idx;
+        }
         NodeActor {
             cfg,
             fabric,
             rx,
             reply_tx,
+            nbr_slot,
             rows,
             undo: None,
         }
@@ -183,7 +200,8 @@ impl NodeActor {
             st.nbr_ddt[s][j] = Some(pm.d_dt);
             st.nbr_dirty[s][j] = pm.dirty;
             st.received[s] += 1;
-            if self.rows[s][j] > PHI_EPS && st.own_ddt[s].is_none() {
+            let slot = self.nbr_slot[j];
+            if slot != NO_SLOT && self.rows[s][slot] > PHI_EPS && st.own_ddt[s].is_none() {
                 st.pending_downstream[s] -= 1;
             }
             self.cascade(st, s);
@@ -193,9 +211,10 @@ impl NodeActor {
     fn fresh_slot(&self, data: SlotData) -> SlotState {
         let ns = self.cfg.stage_meta.len();
         let n = self.cfg.n;
+        let deg = self.cfg.out_neighbors.len();
         let mut pending = vec![0usize; ns];
         for s in 0..ns {
-            pending[s] = (0..n).filter(|&j| self.rows[s][j] > PHI_EPS).count();
+            pending[s] = (0..deg).filter(|&t| self.rows[s][t] > PHI_EPS).count();
         }
         SlotState {
             seq: data.seq,
@@ -251,12 +270,12 @@ impl NodeActor {
                 return false;
             }
         }
-        let n = self.cfg.n;
+        let deg = self.cfg.out_neighbors.len();
         let row = &self.rows[s];
         let mut acc = 0.0;
         let mut dirty = false;
-        for j in 0..n {
-            let p = row[j];
+        for (t, &j) in self.cfg.out_neighbors.iter().enumerate() {
+            let p = row[t];
             if p > PHI_EPS {
                 let v = st.nbr_ddt[s][j].expect("pending_downstream == 0");
                 acc += p * (meta.packet_size * st.data.link_marginal[j] + v);
@@ -265,15 +284,15 @@ impl NodeActor {
                 }
             }
         }
-        if !meta.is_final && row[n] > PHI_EPS {
+        if !meta.is_final && row[deg] > PHI_EPS {
             let next = meta.next.unwrap();
-            acc += row[n]
+            acc += row[deg]
                 * (meta.comp_weight * st.data.comp_marginal
                     + st.own_ddt[next].unwrap());
         }
         if !dirty {
-            for j in 0..n {
-                if row[j] > PHI_EPS && st.nbr_ddt[s][j].unwrap() > acc + 1e-15 {
+            for (t, &j) in self.cfg.out_neighbors.iter().enumerate() {
+                if row[t] > PHI_EPS && st.nbr_ddt[s][j].unwrap() > acc + 1e-15 {
                     dirty = true;
                     break;
                 }
@@ -322,33 +341,35 @@ impl NodeActor {
 
     /// Local eq. (8)–(10) update on every owned row.
     fn local_update(&mut self, st: &SlotState) {
-        let n = self.cfg.n;
+        let deg = self.cfg.out_neighbors.len();
         for s in 0..self.cfg.stage_meta.len() {
             let meta = &self.cfg.stage_meta[s];
             if meta.is_final && self.cfg.id == meta.dest {
                 continue; // exit row
             }
             let own = st.own_ddt[s].unwrap();
-            // δ row (eq. 7), dense n+1
-            let mut drow = vec![INF_MARGINAL; n + 1];
-            for &j in &self.cfg.out_neighbors {
+            // δ row (eq. 7), sparse: one entry per out-link slot + CPU last
+            let mut drow = vec![INF_MARGINAL; deg + 1];
+            for (t, &j) in self.cfg.out_neighbors.iter().enumerate() {
                 let v = st.nbr_ddt[s][j].expect("complete slot");
-                drow[j] = meta.packet_size * st.data.link_marginal[j] + v;
+                drow[t] = meta.packet_size * st.data.link_marginal[j] + v;
             }
             if !meta.is_final {
                 let next = meta.next.unwrap();
-                drow[n] = meta.comp_weight * st.data.comp_marginal
+                drow[deg] = meta.comp_weight * st.data.comp_marginal
                     + st.own_ddt[next].unwrap();
             }
             let support = &self.cfg.support[s];
             let nbr_ddt = &st.nbr_ddt[s];
             let nbr_dirty = &st.nbr_dirty[s];
-            let usable = |j: usize| -> bool {
-                if !support[j] || drow[j] >= INF_MARGINAL {
+            let out_nbrs = &self.cfg.out_neighbors;
+            let usable = |t: usize| -> bool {
+                if !support[t] || drow[t] >= INF_MARGINAL {
                     return false;
                 }
-                if j < n {
+                if t < deg {
                     // blocked-set test from purely local + piggybacked info
+                    let j = out_nbrs[t];
                     let v = nbr_ddt[j].unwrap();
                     if v > own + 1e-15 || nbr_dirty[j] {
                         return false;

@@ -55,7 +55,8 @@ pub enum NetMsg {
 /// A node's reply to the coordinator at the end of a slot.
 #[derive(Clone, Debug)]
 pub enum Reply {
-    /// Updated φ rows (one per stage, each of length n+1).
+    /// Updated sparse φ rows (one per stage, each of length out_degree+1,
+    /// CSR slot order: links ascending by target, CPU last).
     Rows {
         seq: u64,
         node: usize,

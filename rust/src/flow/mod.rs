@@ -10,9 +10,14 @@
 //!
 //! is solved exactly in one topological-order pass per stage, chaining stages
 //! of an application in order (CPU output of stage k injects into stage k+1).
+//!
+//! The propagation walks each node's sparse CSR row (see
+//! [`crate::strategy::Strategy::row`]), so one solve is O(|𝒮|·(m+n)).
+//! [`FlowState::solve_into`] reuses caller-owned buffers and performs no
+//! heap allocation — the GP workspace calls it every iteration.
 
 use crate::app::Network;
-use crate::strategy::{Strategy, PHI_EPS};
+use crate::strategy::{Strategy, TopoScratch, PHI_EPS};
 
 /// Solver failure modes.
 #[derive(Debug)]
@@ -55,90 +60,110 @@ pub struct FlowState {
 }
 
 impl FlowState {
-    /// Solve the traffic equations and accumulate flows/costs.
-    pub fn solve(net: &Network, phi: &Strategy) -> Result<FlowState, FlowError> {
+    /// Zeroed flow state shaped for `net` (workspace pre-allocation).
+    pub fn new_zeroed(net: &Network) -> FlowState {
         let n = net.n();
         let m = net.m();
         let ns = net.num_stages();
-        let cpu = phi.cpu();
+        FlowState {
+            traffic: vec![vec![0.0; n]; ns],
+            cpu_pkt: vec![vec![0.0; n]; ns],
+            link_pkt: vec![vec![0.0; m]; ns],
+            link_flow: vec![0.0; m],
+            workload: vec![0.0; n],
+            link_marginal: vec![0.0; m],
+            comp_marginal: vec![0.0; n],
+            total_cost: 0.0,
+        }
+    }
 
-        let mut traffic = vec![vec![0.0; n]; ns];
-        let mut cpu_pkt = vec![vec![0.0; n]; ns];
-        let mut link_pkt = vec![vec![0.0; m]; ns];
-        let mut link_flow = vec![0.0; m];
-        let mut workload = vec![0.0; n];
+    /// Solve the traffic equations and accumulate flows/costs.
+    pub fn solve(net: &Network, phi: &Strategy) -> Result<FlowState, FlowError> {
+        let mut out = FlowState::new_zeroed(net);
+        let mut topo = TopoScratch::new(net.n());
+        FlowState::solve_into(net, phi, &mut out, &mut topo)?;
+        Ok(out)
+    }
+
+    /// Allocation-free variant of [`FlowState::solve`]: writes into a
+    /// pre-shaped `out` (see [`FlowState::new_zeroed`]). On a `Loop` error
+    /// `out` is left partially written.
+    pub fn solve_into(
+        net: &Network,
+        phi: &Strategy,
+        out: &mut FlowState,
+        topo: &mut TopoScratch,
+    ) -> Result<(), FlowError> {
+        let n = net.n();
+        let m = net.m();
+
+        for row in &mut out.traffic {
+            row.fill(0.0);
+        }
+        for row in &mut out.cpu_pkt {
+            row.fill(0.0);
+        }
+        for row in &mut out.link_pkt {
+            row.fill(0.0);
+        }
+        out.link_flow.fill(0.0);
+        out.workload.fill(0.0);
 
         for (a, app) in net.apps.iter().enumerate() {
             for k in 0..app.num_stages() {
                 let s = net.stages.id(a, k);
-                let order = phi.topo_order(s).ok_or(FlowError::Loop { stage: s })?;
+                if !phi.topo_order_into(s, topo) {
+                    return Err(FlowError::Loop { stage: s });
+                }
                 // injection: exogenous (k = 0) or previous stage's CPU output
                 // (1:1 packet conversion).
-                {
-                    let t = &mut traffic[s];
-                    if k == 0 {
-                        for i in 0..n {
-                            t[i] = app.input_rates[i];
-                        }
-                    } else {
-                        let prev = net.stages.id(a, k - 1);
-                        for i in 0..n {
-                            t[i] = cpu_pkt[prev][i];
-                        }
+                if k == 0 {
+                    out.traffic[s].copy_from_slice(&app.input_rates);
+                } else {
+                    let prev = net.stages.id(a, k - 1);
+                    for i in 0..n {
+                        let v = out.cpu_pkt[prev][i];
+                        out.traffic[s][i] = v;
                     }
                 }
-                // propagate in topological order
+                // propagate in topological order over the sparse rows
                 let l = net.packet_size(s);
-                for &i in &order {
-                    let ti = traffic[s][i];
+                for &i in &topo.order {
+                    let ti = out.traffic[s][i];
                     if ti <= 0.0 {
                         continue;
                     }
                     let row = phi.row(s, i);
-                    for (j, &p) in row.iter().enumerate().take(n) {
+                    for (idx, (j, e)) in net.graph.out_links(i).enumerate() {
+                        let p = row[idx];
                         if p > PHI_EPS {
-                            let e = net
-                                .graph
-                                .edge_id(i, j)
-                                .expect("validated strategy forwards only on links");
                             let fpkt = ti * p;
-                            traffic[s][j] += fpkt;
-                            link_pkt[s][e] += fpkt;
-                            link_flow[e] += l * fpkt;
+                            out.traffic[s][j] += fpkt;
+                            out.link_pkt[s][e] += fpkt;
+                            out.link_flow[e] += l * fpkt;
                         }
                     }
-                    let pc = row[cpu];
+                    let pc = row[row.len() - 1];
                     if pc > PHI_EPS {
                         let g = ti * pc;
-                        cpu_pkt[s][i] = g;
-                        workload[i] += net.comp_weight[s][i] * g;
+                        out.cpu_pkt[s][i] = g;
+                        out.workload[i] += net.comp_weight[s][i] * g;
                     }
                 }
             }
         }
 
         let mut total_cost = 0.0;
-        let mut link_marginal = vec![0.0; m];
         for e in 0..m {
-            total_cost += net.link_cost[e].cost(link_flow[e]);
-            link_marginal[e] = net.link_cost[e].deriv(link_flow[e]);
+            total_cost += net.link_cost[e].cost(out.link_flow[e]);
+            out.link_marginal[e] = net.link_cost[e].deriv(out.link_flow[e]);
         }
-        let mut comp_marginal = vec![0.0; n];
         for i in 0..n {
-            total_cost += net.comp_cost[i].cost(workload[i]);
-            comp_marginal[i] = net.comp_cost[i].deriv(workload[i]);
+            total_cost += net.comp_cost[i].cost(out.workload[i]);
+            out.comp_marginal[i] = net.comp_cost[i].deriv(out.workload[i]);
         }
-
-        Ok(FlowState {
-            traffic,
-            cpu_pkt,
-            link_pkt,
-            link_flow,
-            workload,
-            link_marginal,
-            comp_marginal,
-            total_cost,
-        })
+        out.total_cost = total_cost;
+        Ok(())
     }
 
     /// Flow-conservation residual: max over (stage, node) of
@@ -228,7 +253,7 @@ mod tests {
 
     /// Strategy: data 0->1, compute at 1, result 1->2.
     fn compute_at_middle(net: &Network) -> Strategy {
-        let mut phi = Strategy::zeros(3, 2);
+        let mut phi = Strategy::zeros(&net.graph, 2);
         let s0 = net.stages.id(0, 0);
         let s1 = net.stages.id(0, 1);
         phi.set(s0, 0, 1, 1.0);
@@ -276,6 +301,23 @@ mod tests {
     }
 
     #[test]
+    fn solve_into_reuses_buffers_and_matches_solve() {
+        let net = path_net(CostFn::Queue { cap: 10.0 }, CostFn::Queue { cap: 5.0 });
+        let phi = compute_at_middle(&net);
+        let reference = FlowState::solve(&net, &phi).unwrap();
+        let mut out = FlowState::new_zeroed(&net);
+        let mut topo = TopoScratch::new(net.n());
+        // poison the buffers, then resolve twice: results must be identical
+        out.link_flow.fill(123.0);
+        for _ in 0..2 {
+            FlowState::solve_into(&net, &phi, &mut out, &mut topo).unwrap();
+            assert_eq!(out.total_cost.to_bits(), reference.total_cost.to_bits());
+            assert_eq!(out.link_flow, reference.link_flow);
+            assert_eq!(out.traffic, reference.traffic);
+        }
+    }
+
+    #[test]
     fn split_forwarding_splits_flow() {
         // diamond: 0->1->3, 0->2->3 plus reverses for connectivity
         let g = Graph::bidirected(4, &[(0, 1), (1, 3), (0, 2), (2, 3)]).unwrap();
@@ -295,7 +337,7 @@ mod tests {
             cw,
         )
         .unwrap();
-        let mut phi = Strategy::zeros(4, 1);
+        let mut phi = Strategy::zeros(&net.graph, 1);
         phi.set(0, 0, 1, 0.25);
         phi.set(0, 0, 2, 0.75);
         phi.set(0, 1, 3, 1.0);

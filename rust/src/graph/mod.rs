@@ -1,57 +1,169 @@
-//! Directed network graph 𝒢 = (𝒱, ℰ).
+//! Directed network graph 𝒢 = (𝒱, ℰ) with a CSR (compressed sparse row)
+//! slot layout shared by every per-(stage, node) structure in the optimizer.
 //!
 //! Nodes are dense indices `0..n`. Links are directed; every topology builder
 //! in [`topologies`] produces bidirected graphs (both (i,j) and (j,i)) as in
 //! the paper's evaluation, but the core structures support arbitrary digraphs.
+//!
+//! ## The CSR slot layout
+//!
+//! Each node `i` owns `out_degree(i) + 1` consecutive *slots* in a single
+//! flat arena of `Σ_i (deg(i)+1) = m + n` entries:
+//!
+//! ```text
+//! arena:    [ node 0 slots | node 1 slots | ... | node n-1 slots ]
+//! node i:   [ link slot, link slot, ..., link slot, CPU slot ]
+//!             targets sorted ascending by node id       ^ always last
+//! slot_ptr: slot_ptr[i]..slot_ptr[i+1] delimits node i's slots
+//! ```
+//!
+//! [`Strategy`](crate::strategy::Strategy) (φ),
+//! [`Marginals`](crate::marginals::Marginals) (δ), blocked flags and
+//! support masks all store one `f64`/`bool` per slot, so a GP iteration touches
+//! O(|𝒮|·(m+n)) memory instead of the former dense O(|𝒮|·n²) — see
+//! `docs/PERFORMANCE.md`. The shared [`CsrLayout`] is reference-counted;
+//! cloning a graph or strategy does not copy the offset tables.
 
 pub mod topologies;
 
-use std::collections::BTreeMap;
+use std::sync::Arc;
 
-/// A directed graph with O(1) edge-id lookup and adjacency lists.
-#[derive(Clone, Debug)]
-pub struct Graph {
+/// Shared CSR offset tables: per-node slot ranges, per-slot targets and edge
+/// ids. Immutable once built; shared via `Arc` by [`Graph`], strategies,
+/// marginals, blocked sets and support masks.
+#[derive(Debug, PartialEq, Eq)]
+pub struct CsrLayout {
     n: usize,
-    edges: Vec<(usize, usize)>,
-    /// (i,j) -> edge id
-    index: BTreeMap<(usize, usize), usize>,
-    /// dense n×n edge-id matrix (u32::MAX = no edge) — the hot-path lookup
-    /// (marginals/blocked-sets do S·n² of these per iteration; a BTreeMap
-    /// here was the top profile entry before this cache)
-    dense: Vec<u32>,
-    out: Vec<Vec<usize>>, // out-neighbors of i
-    inn: Vec<Vec<usize>>, // in-neighbors of i
+    /// len n+1; node i's slots are `slot_ptr[i]..slot_ptr[i+1]`.
+    slot_ptr: Vec<usize>,
+    /// len m+n; link slots hold the target node id (ascending within a
+    /// node's segment), the trailing CPU slot holds the sentinel `n`.
+    slot_target: Vec<usize>,
+    /// len m+n; link slots hold the edge id, CPU slots hold `usize::MAX`.
+    slot_edge: Vec<usize>,
 }
 
-const NO_EDGE: u32 = u32::MAX;
+impl CsrLayout {
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total arena length: `m + n` (one CPU slot per node).
+    pub fn num_slots(&self) -> usize {
+        self.slot_target.len()
+    }
+
+    /// Arena range of node `i`'s slots (links first, CPU last).
+    #[inline]
+    pub fn slot_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.slot_ptr[i]..self.slot_ptr[i + 1]
+    }
+
+    /// Arena range of node `i`'s *link* slots (excludes the CPU slot).
+    #[inline]
+    pub fn link_slot_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.slot_ptr[i]..self.slot_ptr[i + 1] - 1
+    }
+
+    /// Row width of node `i`: `out_degree(i) + 1`.
+    #[inline]
+    pub fn width(&self, i: usize) -> usize {
+        self.slot_ptr[i + 1] - self.slot_ptr[i]
+    }
+
+    /// Arena index of node `i`'s CPU slot (always the last of its segment).
+    #[inline]
+    pub fn cpu_slot(&self, i: usize) -> usize {
+        self.slot_ptr[i + 1] - 1
+    }
+
+    /// Target node of an arena slot (`n` for CPU slots).
+    #[inline]
+    pub fn slot_target(&self, t: usize) -> usize {
+        self.slot_target[t]
+    }
+
+    /// Edge id of an arena *link* slot (`usize::MAX` for CPU slots).
+    #[inline]
+    pub fn slot_edge(&self, t: usize) -> usize {
+        self.slot_edge[t]
+    }
+
+    /// Node `i`'s out-neighbor ids, ascending (the link-slot targets).
+    #[inline]
+    pub fn link_targets(&self, i: usize) -> &[usize] {
+        &self.slot_target[self.link_slot_range(i)]
+    }
+
+    /// Arena slot of direction `j` from node `i`: `j == n` resolves to the
+    /// CPU slot, a neighbor id to its link slot (binary search), anything
+    /// else to `None`.
+    #[inline]
+    pub fn slot_of(&self, i: usize, j: usize) -> Option<usize> {
+        let r = self.slot_range(i);
+        if j == self.n {
+            return Some(r.end - 1);
+        }
+        let links = &self.slot_target[r.start..r.end - 1];
+        links.binary_search(&j).ok().map(|p| r.start + p)
+    }
+}
+
+/// A directed graph with CSR adjacency and O(log deg) edge-id lookup.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    edges: Vec<(usize, usize)>,
+    layout: Arc<CsrLayout>,
+    inn: Vec<Vec<usize>>, // in-neighbors of i, ascending
+}
 
 impl Graph {
     /// Build from a node count and a directed edge list. Duplicate edges and
     /// self-loops are rejected.
     pub fn new(n: usize, edge_list: &[(usize, usize)]) -> anyhow::Result<Self> {
-        let mut g = Graph {
-            n,
-            edges: Vec::with_capacity(edge_list.len()),
-            index: BTreeMap::new(),
-            dense: vec![NO_EDGE; n * n],
-            out: vec![Vec::new(); n],
-            inn: vec![Vec::new(); n],
-        };
+        let mut seen = std::collections::BTreeSet::new();
+        let mut out: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n]; // (target, edge id)
+        let mut inn: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut edges = Vec::with_capacity(edge_list.len());
         for &(i, j) in edge_list {
             anyhow::ensure!(i < n && j < n, "edge ({i},{j}) out of range (n={n})");
             anyhow::ensure!(i != j, "self-loop ({i},{i})");
-            anyhow::ensure!(
-                !g.index.contains_key(&(i, j)),
-                "duplicate edge ({i},{j})"
-            );
-            let id = g.edges.len();
-            g.edges.push((i, j));
-            g.index.insert((i, j), id);
-            g.dense[i * n + j] = id as u32;
-            g.out[i].push(j);
-            g.inn[j].push(i);
+            anyhow::ensure!(seen.insert((i, j)), "duplicate edge ({i},{j})");
+            let id = edges.len();
+            edges.push((i, j));
+            out[i].push((j, id));
+            inn[j].push(i);
         }
-        Ok(g)
+        for l in &mut out {
+            l.sort_unstable(); // by target; targets are unique per node
+        }
+        for l in &mut inn {
+            l.sort_unstable();
+        }
+        let mut slot_ptr = Vec::with_capacity(n + 1);
+        let mut slot_target = Vec::with_capacity(edges.len() + n);
+        let mut slot_edge = Vec::with_capacity(edges.len() + n);
+        slot_ptr.push(0);
+        for adj in &out {
+            for &(j, e) in adj {
+                slot_target.push(j);
+                slot_edge.push(e);
+            }
+            slot_target.push(n); // CPU sentinel
+            slot_edge.push(usize::MAX);
+            slot_ptr.push(slot_target.len());
+        }
+        Ok(Graph {
+            edges,
+            layout: Arc::new(CsrLayout {
+                n,
+                slot_ptr,
+                slot_target,
+                slot_edge,
+            }),
+            inn,
+        })
     }
 
     /// Bidirect an undirected edge list: {i,j} -> (i,j) and (j,i).
@@ -65,7 +177,7 @@ impl Graph {
     }
 
     pub fn n(&self) -> usize {
-        self.n
+        self.layout.n
     }
     pub fn m(&self) -> usize {
         self.edges.len()
@@ -76,45 +188,82 @@ impl Graph {
     pub fn edge(&self, id: usize) -> (usize, usize) {
         self.edges[id]
     }
+
+    /// The shared CSR slot layout (see the module docs).
+    #[inline]
+    pub fn layout(&self) -> &Arc<CsrLayout> {
+        &self.layout
+    }
+
     #[inline]
     pub fn edge_id(&self, i: usize, j: usize) -> Option<usize> {
-        let id = self.dense[i * self.n + j];
-        (id != NO_EDGE).then_some(id as usize)
+        if j >= self.layout.n {
+            return None;
+        }
+        self.layout.slot_of(i, j).map(|t| self.layout.slot_edge[t])
     }
     #[inline]
     pub fn has_edge(&self, i: usize, j: usize) -> bool {
-        self.dense[i * self.n + j] != NO_EDGE
+        self.edge_id(i, j).is_some()
     }
+    /// Out-neighbors of `i`, ascending by node id.
     pub fn out_neighbors(&self, i: usize) -> &[usize] {
-        &self.out[i]
+        self.layout.link_targets(i)
     }
+    /// In-neighbors of `i`, ascending by node id.
     pub fn in_neighbors(&self, i: usize) -> &[usize] {
         &self.inn[i]
     }
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.layout.width(i) - 1
+    }
     pub fn max_out_degree(&self) -> usize {
-        self.out.iter().map(Vec::len).max().unwrap_or(0)
+        (0..self.n()).map(|i| self.out_degree(i)).max().unwrap_or(0)
+    }
+
+    /// Iterate `(target, edge id)` over `i`'s out-links, ascending by target
+    /// — index-aligned with the first `out_degree(i)` entries of any CSR row
+    /// for node `i` (φ rows, δ rows, blocked/support flags).
+    pub fn out_links(&self, i: usize) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let r = self.layout.link_slot_range(i);
+        self.layout.slot_target[r.clone()]
+            .iter()
+            .copied()
+            .zip(self.layout.slot_edge[r].iter().copied())
+    }
+
+    /// `(target, edge id)` of node `i`'s `idx`-th out-link slot.
+    #[inline]
+    pub fn link_slot(&self, i: usize, idx: usize) -> (usize, usize) {
+        let t = self.layout.slot_ptr[i] + idx;
+        debug_assert!(t < self.layout.cpu_slot(i), "slot {idx} of node {i} is not a link");
+        (self.layout.slot_target[t], self.layout.slot_edge[t])
     }
 
     /// Is the graph strongly connected? (Kosaraju-lite: forward+backward BFS.)
     pub fn strongly_connected(&self) -> bool {
-        if self.n == 0 {
+        if self.n() == 0 {
             return true;
         }
-        self.bfs_count(0, false) == self.n && self.bfs_count(0, true) == self.n
+        self.bfs_count(0, false) == self.n() && self.bfs_count(0, true) == self.n()
     }
 
     /// Is every node able to reach `dst`?
     pub fn all_reach(&self, dst: usize) -> bool {
-        self.bfs_count(dst, true) == self.n
+        self.bfs_count(dst, true) == self.n()
     }
 
     fn bfs_count(&self, src: usize, reverse: bool) -> usize {
-        let mut seen = vec![false; self.n];
+        let mut seen = vec![false; self.n()];
         let mut queue = vec![src];
         seen[src] = true;
         let mut count = 1;
         while let Some(u) = queue.pop() {
-            let nbrs = if reverse { &self.inn[u] } else { &self.out[u] };
+            let nbrs: &[usize] = if reverse {
+                &self.inn[u]
+            } else {
+                self.layout.link_targets(u)
+            };
             for &v in nbrs {
                 if !seen[v] {
                     seen[v] = true;
@@ -147,8 +296,9 @@ impl Graph {
             }
         }
 
-        let mut dist = vec![f64::INFINITY; self.n];
-        let mut parent: Vec<usize> = (0..self.n).collect();
+        let n = self.n();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut parent: Vec<usize> = (0..n).collect();
         let mut heap = BinaryHeap::new();
         dist[src] = 0.0;
         heap.push(Item(0.0, src));
@@ -156,8 +306,7 @@ impl Graph {
             if d > dist[u] {
                 continue;
             }
-            for &v in &self.out[u] {
-                let e = self.edge_id(u, v).unwrap();
+            for (v, e) in self.out_links(u) {
                 let w = weight(e);
                 debug_assert!(w >= 0.0, "negative weight on edge {e}");
                 let nd = d + w;
@@ -191,8 +340,9 @@ impl Graph {
             }
         }
 
-        let mut dist = vec![f64::INFINITY; self.n];
-        let mut next: Vec<usize> = (0..self.n).collect();
+        let n = self.n();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut next: Vec<usize> = (0..n).collect();
         let mut heap = BinaryHeap::new();
         dist[dst] = 0.0;
         heap.push(Item(0.0, dst));
@@ -234,6 +384,39 @@ mod tests {
         assert_eq!(g.edge_id(1, 0), None);
         assert_eq!(g.out_neighbors(0), &[1, 2]);
         assert_eq!(g.in_neighbors(3), &[1, 2]);
+    }
+
+    #[test]
+    fn csr_layout_shapes() {
+        let g = diamond();
+        let l = g.layout();
+        // arena: m + n slots, one CPU slot per node
+        assert_eq!(l.num_slots(), g.m() + g.n());
+        assert_eq!(l.width(0), 3); // two links + CPU
+        assert_eq!(l.width(3), 1); // no out-links + CPU
+        // CPU slot is last and tagged with the sentinel n
+        assert_eq!(l.slot_target(l.cpu_slot(0)), g.n());
+        assert_eq!(l.slot_of(0, g.n()), Some(l.cpu_slot(0)));
+        // link slots resolve to the right edges, non-links to None
+        let t01 = l.slot_of(0, 1).unwrap();
+        assert_eq!(l.slot_edge(t01), 0);
+        assert_eq!(l.slot_of(0, 3), None);
+        assert_eq!(l.slot_of(3, 0), None);
+    }
+
+    #[test]
+    fn out_links_aligned_with_slots() {
+        let g = diamond();
+        let l = g.layout();
+        for i in 0..g.n() {
+            for (idx, (j, e)) in g.out_links(i).enumerate() {
+                assert_eq!(g.link_slot(i, idx), (j, e));
+                let r = l.slot_range(i);
+                assert_eq!(l.slot_target(r.start + idx), j);
+                assert_eq!(l.slot_edge(r.start + idx), e);
+                assert_eq!(g.edge(e), (i, j));
+            }
+        }
     }
 
     #[test]

@@ -466,6 +466,23 @@ mod tests {
     }
 
     #[test]
+    fn large_tier_topologies_build() {
+        // the `large` scenario-tier families (see crate::scenarios) must
+        // construct quickly and be strongly connected
+        let mut rng = Rng::new(7);
+        let g = by_name("grid-32x32", &mut rng).unwrap();
+        assert_eq!(g.n(), 1024);
+        assert!(g.strongly_connected());
+        let g = by_name("fat-tree-16", &mut rng).unwrap();
+        assert_eq!(g.n(), 64 + 256);
+        assert!(g.strongly_connected());
+        let g = by_name("er-1000-4000", &mut rng).unwrap();
+        assert_eq!(g.n(), 1000);
+        assert_eq!(g.m(), 2 * 4000);
+        assert!(g.strongly_connected());
+    }
+
+    #[test]
     fn small_world_extra_is_clamped_to_available_pairs() {
         // n=6 ring already covers 12 of the C(6,2)=15 pairs; asking for 100
         // extras must terminate with the 3 that remain, not loop forever

@@ -5,9 +5,11 @@
 //! scfo compare  --topology abilene [--iters 500]   # GP vs all baselines
 //! scfo table2                                      # print Table II inventory
 //! scfo fig5 | fig6 | fig7                          # regenerate paper figures
-//! scfo scenarios list                              # the scenario-engine matrix
+//! scfo scenarios list [--tier large]               # the scenario-engine matrix
 //! scfo scenarios run --all --jobs 8 [--out DIR]    # parallel batch + JSON reports
+//! scfo scenarios run --all --tier large            # 1000-node-class sparse tier
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
+//! scfo bench --json [--scenarios a,b] [--iters N]  # GP hot-path → BENCH.json
 //! scfo serve    --topology geant [--slots 200] [--xla]
 //! scfo validate --topology abilene                 # DES vs analytic cost
 //! scfo broadcast --topology geant                  # protocol message audit
@@ -247,8 +249,78 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// GP hot-path benchmark: time per-iteration wall clock + cost trajectory on
+/// the requested scenarios; `--json` writes the machine-readable BENCH.json
+/// perf baseline (schema: docs/PERFORMANCE.md).
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let scenarios = args.flag_or("scenarios", "abilene,geant,sw");
+    let iters = args.flag_usize("iters", 60)?;
+    let mut results = Vec::new();
+    for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        eprintln!("bench {name} ({iters} iters)...");
+        results.push(scfo::bench::bench_gp_scenario(name, iters)?);
+    }
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{}/{}", r.n, r.m),
+                r.stages.to_string(),
+                r.arena_slots.to_string(),
+                format!("{:.3}", r.mean_iter_secs() * 1e3),
+                format!(
+                    "{:.4}",
+                    r.cost_trajectory.last().copied().unwrap_or(f64::NAN)
+                ),
+                match r.peak_rss_bytes {
+                    Some(b) => format!("{:.1}", b as f64 / (1024.0 * 1024.0)),
+                    None => "n/a".to_string(),
+                },
+            ]
+        })
+        .collect();
+    print_table(
+        "GP hot-path bench (sparse CSR core)",
+        &["scenario", "|V|/|E|", "|S|", "arena", "iter ms", "final cost", "peak RSS MB"],
+        &rows,
+    );
+    if args.switch("json") || args.flag("out").is_some() {
+        let out = std::path::PathBuf::from(args.flag_or("out", "BENCH.json"));
+        let doc = scfo::bench::gp_bench_json(&results);
+        std::fs::write(&out, doc.to_string_pretty())?;
+        println!("wrote {}", out.display());
+    }
+    Ok(())
+}
+
 fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     use scfo::scenarios::{run_batch, RunnerOptions, ScenarioSpec};
+
+    /// Expand the selected tier's matrix. Each tier carries its own default
+    /// budgets (standard: 600/300; large: 150/60 — thousand-node scenarios
+    /// need far fewer, more expensive iterations); explicit --iters /
+    /// --event-iters flags override, with --event-iters defaulting to half
+    /// of an explicitly given --iters as before.
+    fn tier_matrix(args: &Args) -> anyhow::Result<Vec<ScenarioSpec>> {
+        let tier = args.flag_or("tier", "standard");
+        let (def_iters, def_event) = match tier.as_str() {
+            "standard" | "default" => (600, 300),
+            "large" => (150, 60),
+            other => anyhow::bail!("unknown scenario tier '{other}' (standard|large)"),
+        };
+        let iters = args.flag_usize("iters", def_iters)?;
+        let event_default = if args.flag("iters").is_some() {
+            iters / 2
+        } else {
+            def_event
+        };
+        let event_iters = args.flag_usize("event-iters", event_default)?;
+        Ok(match tier.as_str() {
+            "large" => ScenarioSpec::large_matrix_sized(iters, event_iters),
+            _ => ScenarioSpec::matrix_sized(iters, event_iters),
+        })
+    }
 
     // Guard against the flags-before-subcommand parser quirk: a run-shaped
     // invocation with no subcommand word must not silently become `list`.
@@ -262,7 +334,7 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     }
     match args.subcommand() {
         Some("list") | None => {
-            let rows: Vec<Vec<String>> = ScenarioSpec::matrix()
+            let rows: Vec<Vec<String>> = tier_matrix(args)?
                 .iter()
                 .map(|s| {
                     vec![
@@ -307,7 +379,7 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
                 vec![spec]
             } else if args.switch("all") || args.flag("filter").is_some() {
                 let filter = args.flag_or("filter", "");
-                ScenarioSpec::matrix_sized(iters, event_iters)
+                tier_matrix(args)?
                     .into_iter()
                     .filter(|s| s.name().contains(&filter))
                     .collect()
@@ -374,6 +446,7 @@ fn main() -> anyhow::Result<()> {
         Some("fig6") => cmd_fig6(&args),
         Some("fig7") => cmd_fig7(&args),
         Some("scenarios") => cmd_scenarios(&args),
+        Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("broadcast") => cmd_broadcast(&args),
@@ -382,8 +455,8 @@ fn main() -> anyhow::Result<()> {
                 eprintln!("unknown command '{o}'");
             }
             eprintln!(
-                "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|serve|validate|broadcast> \
-                 [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] [--xla]"
+                "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|validate|broadcast> \
+                 [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] [--tier large] [--xla]"
             );
             std::process::exit(2);
         }

@@ -9,10 +9,19 @@
 //! mirrors the distributed broadcast protocol of Section IV — the
 //! [`crate::broadcast`] module implements the same recursion with messages
 //! and must agree with this centralized reference (tested).
+//!
+//! δ is stored sparsely: one `f64` per CSR slot of the graph layout
+//! ([`crate::graph::CsrLayout`]) — `out_degree(i)` link slots plus one CPU
+//! slot per node, so a full δ evaluation is O(m + n) per stage instead of
+//! the former dense O(n²). Directions without a slot are semantically
+//! infinite; [`Marginals::delta_at`] reports [`INF_MARGINAL`] for them.
+
+use std::sync::Arc;
 
 use crate::app::Network;
 use crate::flow::FlowState;
-use crate::strategy::{Strategy, PHI_EPS};
+use crate::graph::{CsrLayout, Graph};
+use crate::strategy::{Strategy, TopoScratch, PHI_EPS};
 
 /// Marginal used for unavailable directions ((i,j) ∉ ℰ, or CPU at a final
 /// stage). Kept finite so arithmetic stays NaN-free; semantically ∞.
@@ -23,36 +32,72 @@ pub const INF_MARGINAL: f64 = 1e30;
 pub struct Marginals {
     /// ∂D/∂t_i(a,k): [stage][node].
     pub d_dt: Vec<Vec<f64>>,
-    /// δ_ij(a,k): [stage][node][n+1] (last entry = CPU slot).
+    /// δ_ij(a,k): [stage][CSR slot] — link slots first per node (ascending
+    /// by target), CPU slot last, aligned with [`Strategy::row`].
     pub delta: Vec<Vec<f64>>,
-    n: usize,
+    layout: Arc<CsrLayout>,
 }
 
 impl Marginals {
-    /// Assemble from externally computed parts (e.g. the PJRT-executed XLA
-    /// evaluation in [`crate::runtime`]). `delta` rows are [stage][i*(n+1)+j]
-    /// with the CPU slot last, matching [`Marginals::compute`].
-    pub fn from_parts(d_dt: Vec<Vec<f64>>, delta: Vec<Vec<f64>>, n: usize) -> Marginals {
-        Marginals { d_dt, delta, n }
+    /// Zeroed marginals shaped for `net` (workspace pre-allocation).
+    pub fn new_zeroed(net: &Network) -> Marginals {
+        let layout = Arc::clone(net.graph.layout());
+        Marginals {
+            d_dt: vec![vec![0.0; net.n()]; net.num_stages()],
+            delta: vec![vec![0.0; layout.num_slots()]; net.num_stages()],
+            layout,
+        }
     }
 
+    /// Assemble from externally computed parts (e.g. the PJRT-executed XLA
+    /// evaluation in [`crate::runtime`]). `delta` rows are CSR arena rows
+    /// aligned with `graph`'s slot layout, matching [`Marginals::compute`].
+    pub fn from_parts(d_dt: Vec<Vec<f64>>, delta: Vec<Vec<f64>>, graph: &Graph) -> Marginals {
+        Marginals {
+            d_dt,
+            delta,
+            layout: Arc::clone(graph.layout()),
+        }
+    }
+
+    /// δ in direction `j` from node `i` (`j == n` reads the CPU slot).
+    /// Directions without a slot are semantically infinite.
     #[inline]
     pub fn delta_at(&self, s: usize, i: usize, j: usize) -> f64 {
-        self.delta[s][i * (self.n + 1) + j]
+        match self.layout.slot_of(i, j) {
+            Some(t) => self.delta[s][t],
+            None => INF_MARGINAL,
+        }
     }
-    /// Row δ_i(a,k) of length n+1 (last entry = CPU).
+
+    /// Sparse row δ_i(a,k): `out_degree(i) + 1` entries, link slots first
+    /// (ascending by target), CPU last — index-aligned with
+    /// [`Strategy::row`] and [`Graph::out_links`](Graph::out_links).
     #[inline]
     pub fn delta_row(&self, s: usize, i: usize) -> &[f64] {
-        &self.delta[s][i * (self.n + 1)..(i + 1) * (self.n + 1)]
+        &self.delta[s][self.layout.slot_range(i)]
     }
 
     /// Compute ∂D/∂t and δ for the current operating point.
     pub fn compute(net: &Network, phi: &Strategy, fs: &FlowState) -> Marginals {
+        let mut out = Marginals::new_zeroed(net);
+        let mut topo = TopoScratch::new(net.n());
+        Marginals::compute_into(net, phi, fs, &mut out, &mut topo);
+        out
+    }
+
+    /// Allocation-free variant of [`Marginals::compute`]: writes into a
+    /// pre-shaped `out` (see [`Marginals::new_zeroed`]).
+    pub fn compute_into(
+        net: &Network,
+        phi: &Strategy,
+        fs: &FlowState,
+        out: &mut Marginals,
+        topo: &mut TopoScratch,
+    ) {
         let n = net.n();
-        let ns = net.num_stages();
-        let cpu = phi.cpu();
-        let mut d_dt = vec![vec![0.0; n]; ns];
-        let mut delta = vec![vec![0.0; n * (n + 1)]; ns];
+        let layout = net.graph.layout();
+        debug_assert_eq!(out.delta.len(), net.num_stages());
 
         // Per application, stages from final to first.
         for (a, app) in net.apps.iter().enumerate() {
@@ -60,52 +105,48 @@ impl Marginals {
                 let s = net.stages.id(a, k);
                 let l = net.packet_size(s);
                 let is_final = k == app.num_tasks;
-                let order = phi
-                    .topo_order(s)
-                    .expect("marginals require a loop-free strategy");
+                let acyclic = phi.topo_order_into(s, topo);
+                assert!(acyclic, "marginals require a loop-free strategy");
                 // reverse topological order: downstream d_dt ready first
-                for &i in order.iter().rev() {
+                for &i in topo.order.iter().rev() {
                     let mut acc = 0.0;
                     let row = phi.row(s, i);
-                    for (j, &p) in row.iter().enumerate().take(n) {
+                    for (idx, (j, e)) in net.graph.out_links(i).enumerate() {
+                        let p = row[idx];
                         if p > PHI_EPS {
-                            let e = net.graph.edge_id(i, j).unwrap();
-                            acc += p * (l * fs.link_marginal[e] + d_dt[s][j]);
+                            acc += p * (l * fs.link_marginal[e] + out.d_dt[s][j]);
                         }
                     }
                     if !is_final {
-                        let pc = row[cpu];
+                        let pc = row[row.len() - 1];
                         if pc > PHI_EPS {
                             let next = net.stages.id(a, k + 1);
                             acc += pc
                                 * (net.comp_weight[s][i] * fs.comp_marginal[i]
-                                    + d_dt[next][i]);
+                                    + out.d_dt[next][i]);
                         }
                     }
-                    d_dt[s][i] = acc;
+                    out.d_dt[s][i] = acc;
                 }
-                // modified marginals δ_ij (eq. 7): INF everywhere, then fill
-                // only the |E| link entries + n CPU entries (iterating edges
-                // instead of all n² pairs is ~10x cheaper on dense stages)
-                {
-                    let drow_all = &mut delta[s];
-                    drow_all.fill(INF_MARGINAL);
-                    for e in 0..net.m() {
-                        let (i, j) = net.graph.edge(e);
-                        drow_all[i * (n + 1) + j] = l * fs.link_marginal[e] + d_dt[s][j];
+                // modified marginals δ_ij (eq. 7): one write per slot —
+                // O(m + n) total, no n² scan
+                let next = (!is_final).then(|| net.stages.id(a, k + 1));
+                let drow_all = &mut out.delta[s];
+                drow_all.fill(INF_MARGINAL);
+                for i in 0..n {
+                    let r = layout.slot_range(i);
+                    for t in r.start..r.end - 1 {
+                        let j = layout.slot_target(t);
+                        let e = layout.slot_edge(t);
+                        drow_all[t] = l * fs.link_marginal[e] + out.d_dt[s][j];
                     }
-                    if !is_final {
-                        let next = net.stages.id(a, k + 1);
-                        for i in 0..n {
-                            drow_all[i * (n + 1) + n] = net.comp_weight[s][i]
-                                * fs.comp_marginal[i]
-                                + d_dt[next][i];
-                        }
+                    if let Some(next) = next {
+                        drow_all[r.end - 1] = net.comp_weight[s][i] * fs.comp_marginal[i]
+                            + out.d_dt[next][i];
                     }
                 }
             }
         }
-        Marginals { d_dt, delta, n }
     }
 
     /// Raw KKT marginal ∂D/∂φ_ij(a,k) = t_i(a,k) · δ_ij(a,k) (eq. 3).
@@ -129,9 +170,9 @@ impl Marginals {
                 let drow = self.delta_row(s, i);
                 let min = drow.iter().copied().fold(f64::INFINITY, f64::min);
                 let row = phi.row(s, i);
-                for (j, &p) in row.iter().enumerate() {
+                for (t, &p) in row.iter().enumerate() {
                     if p > PHI_EPS {
-                        worst = worst.max(drow[j] - min);
+                        worst = worst.max(drow[t] - min);
                     }
                 }
             }
@@ -189,7 +230,7 @@ mod tests {
             cw,
         )
         .unwrap();
-        let mut phi = Strategy::zeros(3, 2);
+        let mut phi = Strategy::zeros(&net.graph, 2);
         let s0 = net.stages.id(0, 0);
         let s1 = net.stages.id(0, 1);
         phi.set(s0, 0, 1, 1.0);
@@ -237,8 +278,10 @@ mod tests {
         assert!((mg.delta_at(s0, 0, phi.cpu()) - want_cpu).abs() < 1e-12);
         // final stage CPU is infinite
         assert!(mg.delta_at(s1, 0, phi.cpu()) >= INF_MARGINAL);
-        // non-links are infinite
+        // non-links are infinite (no slot exists for them)
         assert!(mg.delta_at(s0, 0, 2) >= INF_MARGINAL);
+        // sparse δ row is aligned with the φ row
+        assert_eq!(mg.delta_row(s0, 0).len(), phi.row(s0, 0).len());
     }
 
     #[test]

@@ -78,7 +78,8 @@ pub struct EvalOutputs {
     pub traffic: Vec<Vec<f64>>,
     /// ∂D/∂t: [stage][node].
     pub d_dt: Vec<Vec<f64>>,
-    /// δ rows: [stage][i*(n+1)+j], CPU slot last — Marginals layout.
+    /// δ rows: [stage][CSR slot] — the sparse [`Marginals`] arena layout
+    /// (per node: link slots ascending by target, CPU slot last).
     pub delta: Vec<Vec<f64>>,
 }
 
@@ -259,9 +260,10 @@ impl EvalRuntime {
         let dl_flat = outs[5].to_vec::<f64>()?; // (BS, BN, BN)
         let dc_flat = outs[6].to_vec::<f64>()?; // (BS, BN)
 
+        let layout = net.graph.layout();
         let mut traffic = vec![vec![0.0; n]; ns];
         let mut d_dt = vec![vec![0.0; n]; ns];
-        let mut delta = vec![vec![0.0; n * (n + 1)]; ns];
+        let mut delta = vec![vec![0.0; layout.num_slots()]; ns];
         for (a, app) in net.apps.iter().enumerate() {
             for k in 0..app.num_stages() {
                 let s = net.stages.id(a, k);
@@ -269,10 +271,14 @@ impl EvalRuntime {
                 for i in 0..n {
                     traffic[s][i] = t_flat[ps * bn + i];
                     d_dt[s][i] = ddt_flat[ps * bn + i];
-                    for j in 0..n {
-                        delta[s][i * (n + 1) + j] = dl_flat[(ps * bn + i) * bn + j];
+                    // unpad straight into the sparse arena: link slots first
+                    // (ascending by target), then the CPU slot
+                    let r = layout.slot_range(i);
+                    for t in r.start..r.end - 1 {
+                        let j = layout.slot_target(t);
+                        delta[s][t] = dl_flat[(ps * bn + i) * bn + j];
                     }
-                    delta[s][i * (n + 1) + n] = dc_flat[ps * bn + i];
+                    delta[s][r.end - 1] = dc_flat[ps * bn + i];
                 }
             }
         }
@@ -357,7 +363,7 @@ impl XlaGp {
             self.prev = Some((self.phi.clone(), out.total_cost));
         }
         let n = net.n();
-        let mg = Marginals::from_parts(out.d_dt, out.delta, n);
+        let mg = Marginals::from_parts(out.d_dt, out.delta, &net.graph);
         let blocked = BlockedSets::compute(net, &self.phi, &mg);
         for (s, (a, _k)) in net.stages.iter() {
             let is_final = net.is_final_stage(s);
@@ -367,10 +373,10 @@ impl XlaGp {
                     continue;
                 }
                 let drow = mg.delta_row(s, i);
-                let usable = |j: usize| -> bool {
-                    self.support.is_allowed(s, i, j)
-                        && !blocked.is_blocked(s, i, j)
-                        && drow[j] < crate::marginals::INF_MARGINAL
+                let arow = self.support.row(s, i);
+                let brow = blocked.row(s, i);
+                let usable = |t: usize| -> bool {
+                    arow[t] && !brow[t] && drow[t] < crate::marginals::INF_MARGINAL
                 };
                 gp_row_update(
                     self.phi.row_mut(s, i),
@@ -460,13 +466,14 @@ mod tests {
                     out.d_dt[s][i],
                     mg.d_dt[s][i]
                 );
-                for j in 0..=net.n() {
-                    let a = out.delta[s][i * (net.n() + 1) + j];
-                    let b = mg.delta_at(s, i, j);
+                let r = net.graph.layout().slot_range(i);
+                for t in r {
+                    let a = out.delta[s][t];
+                    let b = mg.delta[s][t];
                     let both_inf = a >= 1e29 && b >= 1e29;
                     assert!(
                         both_inf || (a - b).abs() < 1e-8 * (1.0 + b.abs()),
-                        "delta[{s}][{i}][{j}]: xla {a} native {b}"
+                        "delta[{s}][{i}] slot {t}: xla {a} native {b}"
                     );
                 }
             }

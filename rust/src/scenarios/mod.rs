@@ -193,6 +193,17 @@ pub struct ScenarioSpec {
     pub iters: usize,
 }
 
+/// Topology families of the `large` scale tier
+/// ([`ScenarioSpec::large_matrix`]): ≥1000-node sparse networks (plus a
+/// 320-switch fat-tree fabric) that are only tractable under the CSR
+/// slot layout.
+pub const LARGE_FAMILIES: [&str; 4] = [
+    "er-1000-4000",
+    "grid-32x32",
+    "fat-tree-16",
+    "sw-1024-2048",
+];
+
 /// Default per-family workload parameters for generator families that have
 /// no Table-II row: (num_apps, num_sources, link_param, comp_param).
 fn family_defaults(family: &str) -> (usize, usize, f64, f64) {
@@ -262,6 +273,38 @@ impl ScenarioSpec {
     /// 15 scenarios.
     pub fn matrix() -> Vec<ScenarioSpec> {
         Self::matrix_sized(600, 300)
+    }
+
+    /// The `large` scale tier: thousand-node-class topologies that the
+    /// former dense `[stage][n×(n+1)]` layout could not hold (a single
+    /// dense stage at n=1024 is ~8.4 MB of φ plus the same again for δ,
+    /// blocked flags and support — per stage; the CSR arena is ~(m+n)
+    /// entries instead). One nominal-congestion cell per family, with the
+    /// standard dynamic-event schedule. See `docs/PERFORMANCE.md`.
+    pub fn large_matrix() -> Vec<ScenarioSpec> {
+        Self::large_matrix_sized(150, 60)
+    }
+
+    /// The `large` tier with explicit optimization budgets.
+    pub fn large_matrix_sized(iters: usize, event_iters: usize) -> Vec<ScenarioSpec> {
+        LARGE_FAMILIES
+            .iter()
+            .map(|family| {
+                let mut spec = Self::named(family, Congestion::Nominal)
+                    .expect("large families are valid");
+                // Keep |𝒮| small and capacities generous at this scale:
+                // a 1000-node sparse topology funnels many sources' flow
+                // through few cut links, so per-link headroom must grow
+                // with the network diameter.
+                spec.base.num_apps = 2;
+                spec.base.num_sources = 3;
+                spec.base.link_param = 60.0;
+                spec.base.comp_param = 40.0;
+                spec.iters = iters;
+                spec.events = Self::default_schedule(event_iters);
+                spec
+            })
+            .collect()
     }
 
     /// The default matrix with explicit optimization budgets (`iters` for
@@ -363,6 +406,21 @@ mod tests {
             m.iter().map(|s| s.name()).collect();
         assert_eq!(names.len(), m.len());
         assert!(m.iter().all(|s| s.events.len() == 3));
+    }
+
+    #[test]
+    fn large_matrix_targets_thousand_node_class() {
+        let m = ScenarioSpec::large_matrix();
+        assert_eq!(m.len(), LARGE_FAMILIES.len());
+        // at least one ≥1000-node family, all nominal, all scheduled
+        assert!(m
+            .iter()
+            .any(|s| s.base.topology == "er-1000-4000"));
+        for s in &m {
+            assert_eq!(s.congestion, Congestion::Nominal);
+            assert!(!s.events.is_empty());
+            assert!(LARGE_FAMILIES.contains(&s.base.topology.as_str()));
+        }
     }
 
     #[test]

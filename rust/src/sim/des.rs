@@ -159,29 +159,30 @@ pub fn simulate(
             return Next::Exit(pkt.born);
         }
         let row = phi.row(s, node);
+        let cpu = row.len() - 1; // sparse row: link slots first, CPU last
         // sample a direction among positive entries
         let mut x = rng.f64();
-        for (j, &p) in row.iter().enumerate() {
+        for (idx, &p) in row.iter().enumerate() {
             if p <= PHI_EPS {
                 continue;
             }
             x -= p;
-            if x <= 0.0 || j == row.len() - 1 {
-                return if j == net.n() {
+            if x <= 0.0 || idx == cpu {
+                return if idx == cpu {
                     Next::Station(net.m() + node, pkt) // CPU at node
                 } else {
-                    let e = net.graph.edge_id(node, j).expect("phi on links");
+                    let (_j, e) = net.graph.link_slot(node, idx);
                     Next::Station(e, pkt)
                 };
             }
         }
         // numerically possible fallthrough: send to first positive direction
-        for (j, &p) in row.iter().enumerate() {
+        for (idx, &p) in row.iter().enumerate() {
             if p > PHI_EPS {
-                return if j == net.n() {
+                return if idx == cpu {
                     Next::Station(net.m() + node, pkt)
                 } else {
-                    let e = net.graph.edge_id(node, j).unwrap();
+                    let (_j, e) = net.graph.link_slot(node, idx);
                     Next::Station(e, pkt)
                 };
             }

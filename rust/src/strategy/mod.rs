@@ -6,11 +6,22 @@
 //! each (stage, node) row sums to 1, except the (final stage, destination)
 //! row which sums to 0 (results exit the network there).
 //!
-//! Storage is dense: per stage an (n) × (n+1) row-major matrix; column `n`
-//! is the CPU slot. Dense storage keeps the GP update, the XLA bridge and
-//! the broadcast protocol simple; evaluation sizes (n ≤ 100) make it cheap.
+//! Storage is sparse: per stage a single flat arena of `m + n` entries laid
+//! out by the graph's CSR layout ([`crate::graph::CsrLayout`]) — node i owns
+//! `out_degree(i) + 1` slots, link slots first (ascending by target id), CPU
+//! slot last. Directions that are not links simply have no slot, which makes
+//! "support restricted to existing links" structural rather than a runtime
+//! check, and shrinks per-iteration work from O(|𝒮|·n²) to O(|𝒮|·(m+n)) on
+//! sparse topologies (see `docs/PERFORMANCE.md`).
+//!
+//! Node-id addressed accessors ([`Strategy::get`], [`Strategy::set`],
+//! [`Strategy::cpu_frac`]) translate through the layout; the hot paths use
+//! the slot-aligned rows ([`Strategy::row`], [`Strategy::row_mut`]) directly.
+
+use std::sync::Arc;
 
 use crate::app::Network;
+use crate::graph::{CsrLayout, Graph};
 use crate::util::rng::Rng;
 
 /// Tolerance for treating a forwarding fraction as zero.
@@ -38,89 +49,189 @@ pub fn renormalize_row(row: &mut [f64], want: f64) {
     }
 }
 
-/// Dense strategy variable φ.
+/// Reusable scratch buffers for [`Strategy::topo_order_into`] — lets the
+/// per-iteration hot path (flow solve, marginals, loop safety net) run
+/// without heap allocation.
+#[derive(Clone, Debug)]
+pub struct TopoScratch {
+    indeg: Vec<usize>,
+    queue: std::collections::VecDeque<usize>,
+    /// The order produced by the last successful [`Strategy::topo_order_into`].
+    pub order: Vec<usize>,
+}
+
+impl TopoScratch {
+    pub fn new(n: usize) -> TopoScratch {
+        TopoScratch {
+            indeg: vec![0; n],
+            queue: std::collections::VecDeque::with_capacity(n),
+            order: Vec::with_capacity(n),
+        }
+    }
+}
+
+/// Sparse CSR-backed strategy variable φ.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Strategy {
-    n: usize,
+    layout: Arc<CsrLayout>,
     num_stages: usize,
-    /// [stage][i*(n+1) + j]; j == n is the CPU slot.
+    /// [stage][arena slot] — see [`CsrLayout`] for the slot order.
     phi: Vec<Vec<f64>>,
 }
 
 impl Strategy {
-    /// All-zero strategy (infeasible until rows are filled).
-    pub fn zeros(n: usize, num_stages: usize) -> Self {
+    /// All-zero strategy on `graph`'s slot layout (infeasible until rows are
+    /// filled).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use scfo::graph::Graph;
+    /// use scfo::strategy::Strategy;
+    ///
+    /// // 0 -> 1 -> 2 path; each row has out_degree(i)+1 slots, CPU last.
+    /// let g = Graph::new(3, &[(0, 1), (1, 2)]).unwrap();
+    /// let mut phi = Strategy::zeros(&g, 1);
+    /// phi.set(0, 0, 1, 1.0); // forward everything to node 1
+    /// assert_eq!(phi.row(0, 0), &[1.0, 0.0]); // [link to 1, CPU]
+    /// assert_eq!(phi.get(0, 0, 1), 1.0);
+    /// assert_eq!(phi.get(0, 0, 2), 0.0); // (0,2) is not a link: no slot
+    /// ```
+    pub fn zeros(graph: &Graph, num_stages: usize) -> Self {
+        let layout = Arc::clone(graph.layout());
+        let slots = layout.num_slots();
         Strategy {
-            n,
+            layout,
             num_stages,
-            phi: vec![vec![0.0; n * (n + 1)]; num_stages],
+            phi: vec![vec![0.0; slots]; num_stages],
         }
     }
 
     pub fn n(&self) -> usize {
-        self.n
+        self.layout.n()
     }
     pub fn num_stages(&self) -> usize {
         self.num_stages
     }
-    /// Column index of the CPU slot.
+    /// Virtual column id of the CPU direction (`n`), accepted by
+    /// [`Strategy::get`]/[`Strategy::set`] alongside neighbor node ids.
     pub fn cpu(&self) -> usize {
-        self.n
+        self.layout.n()
+    }
+    /// The shared CSR slot layout.
+    pub fn layout(&self) -> &Arc<CsrLayout> {
+        &self.layout
     }
 
+    /// φ in direction `j` from node `i` (`j == n` reads the CPU slot).
+    /// Directions without a slot (non-links) are 0 by construction.
     #[inline]
     pub fn get(&self, s: usize, i: usize, j: usize) -> f64 {
-        self.phi[s][i * (self.n + 1) + j]
+        match self.layout.slot_of(i, j) {
+            Some(t) => self.phi[s][t],
+            None => 0.0,
+        }
     }
+
+    /// Set φ in direction `j` from node `i` (`j == n` writes the CPU slot).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `(i, j)` is neither a link of the underlying graph nor the
+    /// CPU direction — such directions have no slot (they are structurally
+    /// zero and cannot carry mass).
     #[inline]
     pub fn set(&mut self, s: usize, i: usize, j: usize, v: f64) {
-        self.phi[s][i * (self.n + 1) + j] = v;
+        let t = self
+            .layout
+            .slot_of(i, j)
+            .unwrap_or_else(|| panic!("phi[{s}][{i}][{j}]: ({i},{j}) is not a link or the CPU"));
+        self.phi[s][t] = v;
     }
-    /// Row φ_i(a,k) of length n+1 (last entry = CPU).
+
+    /// Sparse row φ_i(a,k): `out_degree(i) + 1` entries, link slots first
+    /// (ascending by target — index-aligned with
+    /// [`Graph::out_links`](crate::graph::Graph::out_links)), CPU last.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use scfo::graph::Graph;
+    /// use scfo::strategy::Strategy;
+    ///
+    /// let g = Graph::bidirected(3, &[(0, 1), (1, 2)]).unwrap();
+    /// let mut phi = Strategy::zeros(&g, 1);
+    /// phi.set(0, 1, 0, 0.25);
+    /// phi.set(0, 1, 2, 0.25);
+    /// phi.set(0, 1, phi.cpu(), 0.5);
+    /// // node 1 has out-links to 0 and 2 (ascending) plus the CPU slot:
+    /// assert_eq!(phi.row(0, 1), &[0.25, 0.25, 0.5]);
+    /// assert_eq!(phi.positive_links(0, 1).collect::<Vec<_>>(), vec![0, 2]);
+    /// assert_eq!(phi.cpu_frac(0, 1), 0.5);
+    /// ```
     #[inline]
     pub fn row(&self, s: usize, i: usize) -> &[f64] {
-        &self.phi[s][i * (self.n + 1)..(i + 1) * (self.n + 1)]
+        &self.phi[s][self.layout.slot_range(i)]
     }
     #[inline]
     pub fn row_mut(&mut self, s: usize, i: usize) -> &mut [f64] {
-        &mut self.phi[s][i * (self.n + 1)..(i + 1) * (self.n + 1)]
+        let r = self.layout.slot_range(i);
+        &mut self.phi[s][r]
     }
 
-    /// Out-neighbors with positive forwarding fraction (excluding CPU).
+    /// Out-neighbors with positive forwarding fraction (excluding CPU),
+    /// ascending by node id.
     pub fn positive_links(&self, s: usize, i: usize) -> impl Iterator<Item = usize> + '_ {
-        let row = self.row(s, i);
-        (0..self.n).filter(move |&j| row[j] > PHI_EPS)
+        let r = self.layout.link_slot_range(i);
+        let vals = &self.phi[s][r];
+        self.layout
+            .link_targets(i)
+            .iter()
+            .zip(vals)
+            .filter(|&(_j, &v)| v > PHI_EPS)
+            .map(|(&j, _v)| j)
     }
 
     /// CPU fraction φ_i0.
+    #[inline]
     pub fn cpu_frac(&self, s: usize, i: usize) -> f64 {
-        self.get(s, i, self.n)
+        self.phi[s][self.layout.cpu_slot(i)]
+    }
+
+    /// Overwrite this strategy with `other`'s values (shapes must match).
+    /// Allocation-free — used by the GP workspace every iteration.
+    pub fn copy_from(&mut self, other: &Strategy) {
+        debug_assert_eq!(self.num_stages, other.num_stages);
+        debug_assert_eq!(self.layout.num_slots(), other.layout.num_slots());
+        for (dst, src) in self.phi.iter_mut().zip(&other.phi) {
+            dst.copy_from_slice(src);
+        }
     }
 
     /// Validate feasibility w.r.t. a network: row sums (constraint (1)),
-    /// support restricted to existing links, no CPU offload at final stages,
-    /// and non-negativity.
+    /// no CPU offload at final stages, and non-negativity. Support outside
+    /// the link set is unrepresentable in the sparse layout, so it needs no
+    /// check.
     pub fn validate(&self, net: &Network) -> anyhow::Result<()> {
-        anyhow::ensure!(self.n == net.n(), "node count mismatch");
+        anyhow::ensure!(self.n() == net.n(), "node count mismatch");
         anyhow::ensure!(self.num_stages == net.num_stages(), "stage count mismatch");
+        anyhow::ensure!(
+            self.layout.num_slots() == net.graph.layout().num_slots(),
+            "slot layout mismatch"
+        );
         for (s, (a, _k)) in net.stages.iter() {
             let is_final = net.is_final_stage(s);
             let dest = net.apps[a].dest;
-            for i in 0..self.n {
+            for i in 0..self.n() {
                 let row = self.row(s, i);
+                let cpu = row.len() - 1;
                 let mut sum = 0.0;
-                for (j, &v) in row.iter().enumerate() {
+                for (t, &v) in row.iter().enumerate() {
                     anyhow::ensure!(
                         v >= -PHI_EPS && v <= 1.0 + 1e-9,
-                        "phi[{s}][{i}][{j}] = {v} out of [0,1]"
+                        "phi[{s}][{i}] slot {t} = {v} out of [0,1]"
                     );
-                    if j < self.n && v > PHI_EPS {
-                        anyhow::ensure!(
-                            net.graph.has_edge(i, j),
-                            "phi[{s}][{i}][{j}] > 0 but ({i},{j}) not a link"
-                        );
-                    }
-                    if j == self.n && v > PHI_EPS {
+                    if t == cpu && v > PHI_EPS {
                         anyhow::ensure!(
                             !is_final,
                             "stage {s} is final but phi_cpu[{i}] = {v} > 0"
@@ -141,60 +252,46 @@ impl Strategy {
     /// Does any stage contain a directed cycle through positive-φ links?
     /// (CPU transitions advance the stage and cannot close a loop.)
     pub fn has_loop(&self) -> bool {
-        for s in 0..self.num_stages {
-            if self.stage_has_loop(s) {
-                return true;
-            }
-        }
-        false
-    }
-
-    fn stage_has_loop(&self, s: usize) -> bool {
-        // Kahn's algorithm on the positive-φ link subgraph.
-        let n = self.n;
-        let mut indeg = vec![0usize; n];
-        for i in 0..n {
-            for j in self.positive_links(s, i) {
-                indeg[j] += 1;
-            }
-        }
-        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
-        let mut removed = 0;
-        while let Some(u) = queue.pop() {
-            removed += 1;
-            for j in self.positive_links(s, u) {
-                indeg[j] -= 1;
-                if indeg[j] == 0 {
-                    queue.push(j);
-                }
-            }
-        }
-        removed < n
+        let mut scratch = TopoScratch::new(self.n());
+        (0..self.num_stages).any(|s| !self.topo_order_into(s, &mut scratch))
     }
 
     /// Topological order of nodes for stage `s` over positive-φ links.
     /// Returns `None` if the stage subgraph has a cycle.
     pub fn topo_order(&self, s: usize) -> Option<Vec<usize>> {
-        let n = self.n;
-        let mut indeg = vec![0usize; n];
+        let mut scratch = TopoScratch::new(self.n());
+        self.topo_order_into(s, &mut scratch).then_some(scratch.order)
+    }
+
+    /// Allocation-free topological sort (Kahn) of stage `s` over positive-φ
+    /// links into `scratch.order`. Returns `false` (and leaves a partial
+    /// order) if the stage subgraph has a cycle.
+    pub fn topo_order_into(&self, s: usize, scratch: &mut TopoScratch) -> bool {
+        let n = self.n();
+        scratch.indeg.clear();
+        scratch.indeg.resize(n, 0);
         for i in 0..n {
             for j in self.positive_links(s, i) {
-                indeg[j] += 1;
+                scratch.indeg[j] += 1;
             }
         }
-        let mut queue: std::collections::VecDeque<usize> =
-            (0..n).filter(|&i| indeg[i] == 0).collect();
-        let mut order = Vec::with_capacity(n);
-        while let Some(u) = queue.pop_front() {
-            order.push(u);
+        scratch.queue.clear();
+        for i in 0..n {
+            if scratch.indeg[i] == 0 {
+                scratch.queue.push_back(i);
+            }
+        }
+        scratch.order.clear();
+        while let Some(u) = scratch.queue.pop_front() {
+            scratch.order.push(u);
             for j in self.positive_links(s, u) {
-                indeg[j] -= 1;
-                if indeg[j] == 0 {
-                    queue.push_back(j);
+                scratch.indeg[j] -= 1;
+                if scratch.indeg[j] == 0 {
+                    scratch.queue.push_back(j);
                 }
             }
         }
-        (order.len() == n).then_some(order)
+        scratch.order.len() == n
     }
 
     /// Renormalize every row to satisfy constraint (1) exactly (fixes small
@@ -206,7 +303,7 @@ impl Strategy {
         for (s, (a, _)) in net.stages.iter() {
             let is_final = net.is_final_stage(s);
             let dest = net.apps[a].dest;
-            for i in 0..self.n {
+            for i in 0..self.n() {
                 let want = if is_final && i == dest { 0.0 } else { 1.0 };
                 renormalize_row(self.row_mut(s, i), want);
             }
@@ -222,7 +319,7 @@ impl Strategy {
     /// Loop-freeness: next hops strictly decrease hop distance to d_a.
     pub fn shortest_path_to_dest(net: &Network) -> Self {
         let n = net.n();
-        let mut phi = Strategy::zeros(n, net.num_stages());
+        let mut phi = Strategy::zeros(&net.graph, net.num_stages());
         for (s, (a, _k)) in net.stages.iter() {
             let dest = net.apps[a].dest;
             let (_dist, next) = net.graph.dijkstra_to(dest, |_| 1.0);
@@ -246,7 +343,7 @@ impl Strategy {
     /// d_a with random weights, plus a random CPU fraction (if not final).
     pub fn random_dag(net: &Network, rng: &mut Rng) -> Self {
         let n = net.n();
-        let mut phi = Strategy::zeros(n, net.num_stages());
+        let mut phi = Strategy::zeros(&net.graph, net.num_stages());
         for (s, (a, _k)) in net.stages.iter() {
             let dest = net.apps[a].dest;
             let (dist, _next) = net.graph.dijkstra_to(dest, |_| 1.0);
@@ -255,25 +352,27 @@ impl Strategy {
                 if i == dest && is_final {
                     continue;
                 }
-                let mut weights = vec![0.0; n + 1];
-                for &j in net.graph.out_neighbors(i) {
+                let width = net.graph.layout().width(i);
+                let mut weights = vec![0.0; width];
+                for (idx, &j) in net.graph.out_neighbors(i).iter().enumerate() {
                     if dist[j] < dist[i] {
-                        weights[j] = rng.range(0.1, 1.0);
+                        weights[idx] = rng.range(0.1, 1.0);
                     }
                 }
                 if !is_final {
-                    weights[n] = rng.range(0.1, 1.0);
+                    weights[width - 1] = rng.range(0.1, 1.0);
                 }
                 let sum: f64 = weights.iter().sum();
+                let row = phi.row_mut(s, i);
                 if sum <= 0.0 {
                     // destination node of a non-final stage with no downhill
                     // neighbor: must offload locally
                     debug_assert!(!is_final);
-                    phi.set(s, i, n, 1.0);
+                    row[width - 1] = 1.0;
                 } else {
-                    for (j, w) in weights.into_iter().enumerate() {
+                    for (t, w) in weights.into_iter().enumerate() {
                         if w > 0.0 {
-                            phi.set(s, i, j, w / sum);
+                            row[t] = w / sum;
                         }
                     }
                 }
@@ -355,14 +454,24 @@ mod tests {
     }
 
     #[test]
-    fn validate_catches_non_link_support() {
+    #[should_panic(expected = "not a link")]
+    fn set_rejects_non_link_direction() {
         let net = net();
         let mut phi = Strategy::shortest_path_to_dest(&net);
-        // 0 -> 10 is not an Abilene link
-        let row = phi.row_mut(0, 0);
-        row.iter_mut().for_each(|v| *v = 0.0);
+        // 0 -> 10 is not an Abilene link: no slot exists for it
         phi.set(0, 0, 10, 1.0);
-        assert!(phi.validate(&net).is_err());
+    }
+
+    #[test]
+    fn non_link_directions_read_as_zero() {
+        let net = net();
+        let phi = Strategy::shortest_path_to_dest(&net);
+        assert_eq!(phi.get(0, 0, 10), 0.0);
+        // and the sparse row width is the out-degree + CPU
+        assert_eq!(
+            phi.row(0, 0).len(),
+            net.graph.out_neighbors(0).len() + 1
+        );
     }
 
     #[test]
@@ -388,6 +497,17 @@ mod tests {
         for s in 0..net.num_stages() {
             let order = phi.topo_order(s).unwrap();
             assert_eq!(order.len(), net.n());
+        }
+    }
+
+    #[test]
+    fn topo_order_into_reuses_scratch() {
+        let net = net();
+        let phi = Strategy::shortest_path_to_dest(&net);
+        let mut scratch = TopoScratch::new(net.n());
+        for s in 0..net.num_stages() {
+            assert!(phi.topo_order_into(s, &mut scratch));
+            assert_eq!(scratch.order, phi.topo_order(s).unwrap());
         }
     }
 

@@ -46,7 +46,7 @@ fn diamond_brute_force() -> f64 {
             let y1 = y1i as f64 / steps as f64;
             for y2i in 0..=steps {
                 let y2 = y2i as f64 / steps as f64;
-                let mut phi = Strategy::zeros(4, 2);
+                let mut phi = Strategy::zeros(&net.graph, 2);
                 // stage 0
                 phi.set(0, 0, 1, x);
                 phi.set(0, 0, 2, 1.0 - x);
@@ -144,7 +144,7 @@ fn proposition1_kkt_point_is_arbitrarily_suboptimal() {
         .unwrap();
 
         // The degenerate strategy (all on the direct link) costs 1:
-        let mut phi_kkt = Strategy::zeros(4, 2);
+        let mut phi_kkt = Strategy::zeros(&net.graph, 2);
         for s in 0..2 {
             phi_kkt.set(s, 0, 3, 1.0);
             phi_kkt.set(s, 1, 2, 1.0);
@@ -198,11 +198,10 @@ fn sufficiency_condition_implies_no_better_neighbor() {
                 if !ok || (j == n && net.is_final_stage(s)) {
                     continue;
                 }
-                let row = cand.row_mut(s, i);
-                for v in row.iter_mut() {
+                for v in cand.row_mut(s, i).iter_mut() {
                     *v *= 1.0 - eps;
                 }
-                row[j] += eps;
+                cand.set(s, i, j, cand.get(s, i, j) + eps);
                 if cand.has_loop() {
                     continue;
                 }

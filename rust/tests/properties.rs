@@ -147,6 +147,96 @@ fn prop_marginals_match_finite_differences() {
 }
 
 #[test]
+fn prop_sparse_marginals_match_dense_reference() {
+    // The CSR core must be numerically equivalent to the textbook dense
+    // recursion. Re-derive eq. (4)/(7) here with plain O(n²) loops over
+    // node-id indices (no CSR machinery at all) and compare to 1e-12.
+    use scfo::marginals::INF_MARGINAL;
+    forall("sparse == dense marginals", 15, |g| {
+        let mut rng = g.rng().fork();
+        let net = random_network(&mut rng);
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+
+        let n = net.n();
+        let cpu = net.n();
+        let mut dense_ddt = vec![vec![0.0; n]; net.num_stages()];
+        for (a, app) in net.apps.iter().enumerate() {
+            for k in (0..app.num_stages()).rev() {
+                let s = net.stages.id(a, k);
+                let l = net.packet_size(s);
+                let is_final = k == app.num_tasks;
+                let order = phi.topo_order(s).unwrap();
+                for &i in order.iter().rev() {
+                    let mut acc = 0.0;
+                    for j in 0..n {
+                        let p = phi.get(s, i, j);
+                        if p > 0.0 {
+                            let e = net.graph.edge_id(i, j).unwrap();
+                            acc += p * (l * fs.link_marginal[e] + dense_ddt[s][j]);
+                        }
+                    }
+                    if !is_final {
+                        let pc = phi.get(s, i, cpu);
+                        if pc > 0.0 {
+                            let next = net.stages.id(a, k + 1);
+                            acc += pc
+                                * (net.comp_weight[s][i] * fs.comp_marginal[i]
+                                    + dense_ddt[next][i]);
+                        }
+                    }
+                    dense_ddt[s][i] = acc;
+                }
+                // δ over the full dense (i, j) index space
+                for i in 0..n {
+                    for j in 0..=n {
+                        let want = if j < n {
+                            match net.graph.edge_id(i, j) {
+                                Some(e) => Some(l * fs.link_marginal[e] + dense_ddt[s][j]),
+                                None => None,
+                            }
+                        } else if !is_final {
+                            let next = net.stages.id(a, k + 1);
+                            Some(
+                                net.comp_weight[s][i] * fs.comp_marginal[i]
+                                    + dense_ddt[next][i],
+                            )
+                        } else {
+                            None
+                        };
+                        let got = mg.delta_at(s, i, j);
+                        match want {
+                            Some(want) => scfo::prop_assert!(
+                                g,
+                                (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                                "delta[{s}][{i}][{j}]: sparse {got} dense {want}"
+                            ),
+                            None => scfo::prop_assert!(
+                                g,
+                                got >= INF_MARGINAL,
+                                "delta[{s}][{i}][{j}]: sparse {got}, dense has no direction"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+        for s in 0..net.num_stages() {
+            for i in 0..n {
+                let (a, b) = (mg.d_dt[s][i], dense_ddt[s][i]);
+                scfo::prop_assert!(
+                    g,
+                    (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+                    "d_dt[{s}][{i}]: sparse {a} dense {b}"
+                );
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn prop_blocked_sets_prevent_loop_formation() {
     forall("blocked sets vs loops", 15, |g| {
         let mut rng = g.rng().fork();

@@ -58,6 +58,26 @@ fn default_matrix_meets_acceptance_shape() {
 }
 
 #[test]
+fn large_tier_scenario_runs_end_to_end() {
+    // er-1000-4000 was unrepresentable under the dense [stage][n×(n+1)]
+    // layout (φ alone ~8 MB per stage, δ/blocked/support again each); under
+    // the CSR core the arena is m+n ≈ 9000 entries per stage and the run
+    // completes in-process even in debug builds. Budgets are shrunk hard —
+    // this test checks end-to-end viability, not convergence quality.
+    let mut spec = ScenarioSpec::named("er-1000-4000", Congestion::Nominal).unwrap();
+    spec.base.num_apps = 1;
+    spec.base.num_sources = 2;
+    spec.base.link_param = 60.0;
+    spec.base.comp_param = 40.0;
+    spec.iters = 6;
+    spec.events.clear();
+    let rep = scfo::scenarios::runner::run_one(&spec, &ScenarioCache::new()).unwrap();
+    assert!(rep.n >= 1000, "large tier must be ≥1000 nodes, got {}", rep.n);
+    assert_eq!(rep.costs.len(), 4); // GP + three baselines still compared
+    assert!(rep.gp_cost().is_finite() && rep.gp_cost() > 0.0);
+}
+
+#[test]
 fn same_seed_and_spec_reproduce_identical_costs() {
     let spec = &small_batch()[0];
     let a = scfo::scenarios::runner::run_one(spec, &ScenarioCache::new()).unwrap();
