@@ -104,6 +104,19 @@ impl Bench {
 
 // ---- GP hot-path benchmark (`scfo bench --json` → BENCH.json) -------------
 
+/// Serving-mode measurements attached to a [`GpBenchResult`] when the bench
+/// drives the online serving loop under a nonstationary workload
+/// (`scfo bench --json --workload NAME`).
+#[derive(Clone, Debug)]
+pub struct DynamicsBench {
+    /// Workload preset/spec name.
+    pub workload: String,
+    /// Serving slots executed.
+    pub slots: usize,
+    /// Controller metrics: detections, regret, reconvergence.
+    pub summary: crate::serving::AdaptationSummary,
+}
+
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
 /// trajectory and a peak-RSS proxy. Emitted into `BENCH.json` by
 /// `scfo bench --json`; schema documented in `docs/PERFORMANCE.md`.
@@ -121,13 +134,17 @@ pub struct GpBenchResult {
     pub build_secs: f64,
     /// Wall time of each timed
     /// [`step`](crate::algo::gp::GradientProjection::step), warm (the
-    /// first, untimed step is excluded).
+    /// first, untimed step is excluded). In serving mode this is the
+    /// optimizer latency per slot.
     pub iter_secs: Vec<f64>,
-    /// Cost after each timed iteration.
+    /// Cost after each timed iteration (serving mode: served cost at the
+    /// true rates per slot).
     pub cost_trajectory: Vec<f64>,
     /// VmHWM from /proc/self/status, if available (Linux). A process-wide
     /// high-water mark, not a per-scenario delta — compare runs, not rows.
     pub peak_rss_bytes: Option<u64>,
+    /// Present when the bench ran the serving loop under a workload.
+    pub dynamics: Option<DynamicsBench>,
 }
 
 /// Peak resident-set high-water mark of this process (Linux `VmHWM`);
@@ -190,6 +207,79 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
         iter_secs,
         cost_trajectory,
         peak_rss_bytes: peak_rss_bytes(),
+        dynamics: None,
+    })
+}
+
+/// Serving-mode bench: run the named scenario through the online serving
+/// loop under the given workload (preset name or spec file) for `slots`
+/// slots, with the adaptation controller attached. `iter_secs` records the
+/// optimizer latency per slot and `cost_trajectory` the served cost at the
+/// true rates; the result's `dynamics` block carries the regret and
+/// reconvergence-slots columns of `BENCH.json`.
+pub fn bench_serving_scenario(
+    family: &str,
+    workload: &str,
+    slots: usize,
+) -> anyhow::Result<GpBenchResult> {
+    use crate::algo::gp::{GpOptions, GradientProjection};
+    use crate::scenarios::{Congestion, ScenarioSpec, LARGE_FAMILIES};
+    use crate::serving::{
+        AdaptationController, ControllerOptions, OnlineServer, ServerOptions,
+    };
+    use crate::util::rng::Rng;
+    use crate::workload::{Workload, WorkloadSpec};
+
+    let spec = if LARGE_FAMILIES.contains(&family) {
+        ScenarioSpec::large_matrix()
+            .into_iter()
+            .find(|s| s.base.topology == family)
+            .expect("large_matrix covers every LARGE_FAMILIES entry")
+    } else {
+        ScenarioSpec::named(family, Congestion::Nominal)?
+    };
+    let wspec = WorkloadSpec::parse(workload)?;
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    let t0 = Instant::now();
+    let net = sc.build(&mut rng)?;
+    let wl = Workload::from_spec(&wspec, &net, 1.0, sc.seed)?;
+    let gp = GradientProjection::new(&net, GpOptions::default());
+    let mut srv = OnlineServer::with_workload(
+        net.clone(),
+        gp,
+        wl,
+        ServerOptions {
+            slot_secs: 1.0,
+            ewma: 0.3,
+            seed: sc.seed,
+        },
+    );
+    srv.attach_controller(AdaptationController::new(ControllerOptions::default()));
+    let build_secs = t0.elapsed().as_secs_f64();
+
+    let metrics = srv.run(slots)?;
+    let summary = srv
+        .controller
+        .as_ref()
+        .expect("controller attached above")
+        .summary();
+
+    Ok(GpBenchResult {
+        name: family.to_string(),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs: metrics.iter().map(|m| m.optimizer_latency).collect(),
+        cost_trajectory: metrics.iter().map(|m| m.cost).collect(),
+        peak_rss_bytes: peak_rss_bytes(),
+        dynamics: Some(DynamicsBench {
+            workload: wspec.name().to_string(),
+            slots,
+            summary,
+        }),
     })
 }
 
@@ -201,7 +291,7 @@ impl GpBenchResult {
 
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
+        let mut doc = Json::obj(vec![
             ("name", Json::Str(self.name.clone())),
             ("n", Json::Num(self.n as f64)),
             ("m", Json::Num(self.m as f64)),
@@ -242,16 +332,41 @@ impl GpBenchResult {
                     None => Json::Null,
                 },
             ),
-        ])
+        ]);
+        if let Some(dyn_) = &self.dynamics {
+            if let Json::Obj(o) = &mut doc {
+                o.insert("workload".into(), Json::Str(dyn_.workload.clone()));
+                o.insert("slots".into(), Json::Num(dyn_.slots as f64));
+                o.insert(
+                    "detections".into(),
+                    Json::Num(dyn_.summary.detections as f64),
+                );
+                o.insert("regret_mean".into(), Json::Num(dyn_.summary.regret_mean));
+                o.insert("regret_total".into(), Json::Num(dyn_.summary.regret_total));
+                o.insert(
+                    "reconvergence_slots_mean".into(),
+                    Json::Num(dyn_.summary.reconverge_mean),
+                );
+                o.insert(
+                    "reconvergence_slots_max".into(),
+                    Json::Num(dyn_.summary.reconverge_max as f64),
+                );
+            }
+        }
+        doc
     }
 }
+
+/// `BENCH.json` schema version: 2 added the optional serving-mode columns
+/// (`workload`, `slots`, `detections`, `regret_*`, `reconvergence_slots_*`).
+pub const BENCH_JSON_VERSION: f64 = 2.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
 pub fn gp_bench_json(results: &[GpBenchResult]) -> crate::util::json::Json {
     use crate::util::json::Json;
     Json::obj(vec![
-        ("version", Json::Num(1.0)),
+        ("version", Json::Num(BENCH_JSON_VERSION)),
         ("tool", Json::Str(format!("scfo {}", crate::version()))),
         (
             "scenarios",
@@ -328,13 +443,41 @@ mod tests {
         assert_eq!(res.cost_trajectory.len(), 3);
         assert!(res.cost_trajectory.iter().all(|c| c.is_finite()));
         assert_eq!(res.arena_slots, res.m + res.n);
+        assert!(res.dynamics.is_none());
         let doc = gp_bench_json(&[res]);
         let text = doc.to_string_pretty();
         let re = crate::util::json::Json::parse(&text).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(BENCH_JSON_VERSION));
         let scenarios = re.get("scenarios").unwrap().as_arr().unwrap();
         assert_eq!(scenarios.len(), 1);
         assert!(scenarios[0].get("iter_secs").unwrap().get("mean").is_some());
+        // static benches carry no serving-mode columns
+        assert!(scenarios[0].get("regret_mean").is_none());
+    }
+
+    #[test]
+    fn serving_bench_emits_regret_and_reconvergence_columns() {
+        let res = bench_serving_scenario("abilene", "flash-crowd", 90).unwrap();
+        assert_eq!(res.iter_secs.len(), 90);
+        assert_eq!(res.cost_trajectory.len(), 90);
+        let d = res.dynamics.as_ref().expect("serving bench has dynamics");
+        assert_eq!(d.workload, "flash-crowd");
+        assert!(d.summary.detections >= 1);
+        assert!(d.summary.regret_mean > 0.0);
+        assert!(d.summary.reconverge_mean >= 1.0);
+        let doc = gp_bench_json(&[res]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("workload").unwrap().as_str(), Some("flash-crowd"));
+        assert!(sc.get("regret_mean").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            sc.get("reconvergence_slots_mean")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                > 0.0
+        );
+        assert!(sc.get("detections").unwrap().as_usize().unwrap() >= 1);
     }
 
     #[test]

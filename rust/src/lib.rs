@@ -15,8 +15,10 @@
 //!   gradient-projection algorithm ([`algo::gp`]) with blocked-node-set loop
 //!   prevention, the Section-IV distributed broadcast protocol
 //!   ([`broadcast`], [`distributed`]), baselines ([`algo`]), flow/marginal
-//!   computation ([`flow`], [`marginals`]), serving loop ([`serving`]) and
-//!   benchmarking/validation substrates ([`sim`], [`bench`]).
+//!   computation ([`flow`], [`marginals`]), the nonstationary workload
+//!   subsystem ([`workload`]: traffic models + trace replay), serving loop
+//!   with online adaptation ([`serving`]) and benchmarking/validation
+//!   substrates ([`sim`], [`bench`]).
 //! * **L2/L1 (python/compile)** — a JAX + Pallas implementation of the dense
 //!   network-evaluation hot path, AOT-lowered to HLO artifacts executed from
 //!   Rust via PJRT ([`runtime`]). Python never runs at request time.
@@ -40,6 +42,7 @@ pub mod runtime;
 pub mod scenarios;
 pub mod serving;
 pub mod sim;
+pub mod workload;
 
 #[cfg(any(test, feature = "testutil"))]
 pub mod testutil;
@@ -74,6 +77,7 @@ pub mod prelude {
     pub use crate::scenarios::{Congestion, DynamicEvent, ScenarioSpec};
     pub use crate::strategy::Strategy;
     pub use crate::util::rng::Rng;
+    pub use crate::workload::{ModelSpec, TrafficModel, Workload, WorkloadSpec};
 }
 
 /// Crate version string.

@@ -5,12 +5,16 @@
 //! scfo compare  --topology abilene [--iters 500]   # GP vs all baselines
 //! scfo table2                                      # print Table II inventory
 //! scfo fig5 | fig6 | fig7                          # regenerate paper figures
-//! scfo scenarios list [--tier large]               # the scenario-engine matrix
+//! scfo scenarios list [--tier large|dynamic]       # the scenario-engine matrix
 //! scfo scenarios run --all --jobs 8 [--out DIR]    # parallel batch + JSON reports
 //! scfo scenarios run --all --tier large            # 1000-node-class sparse tier
+//! scfo scenarios run --all --tier dynamic          # nonstationary serving tier
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
 //! scfo bench --json [--scenarios a,b] [--iters N]  # GP hot-path → BENCH.json
-//! scfo serve    --topology geant [--slots 200] [--xla]
+//! scfo bench --json --workload flash-crowd         # serving-mode bench (regret)
+//! scfo serve    --topology geant [--slots 200] [--workload diurnal] [--xla]
+//! scfo trace record --topology abilene --workload mmpp --slots 120 --out t.json
+//! scfo trace replay t.json | stats t.json          # bit-identical trace replay
 //! scfo validate --topology abilene                 # DES vs analytic cost
 //! scfo broadcast --topology geant                  # protocol message audit
 //! ```
@@ -22,8 +26,13 @@ use scfo::config::Scenario;
 use scfo::flow::FlowState;
 use scfo::graph::topologies::SCENARIO_NAMES;
 use scfo::prelude::*;
-use scfo::serving::{OnlineServer, ServerOptions};
+use scfo::serving::{
+    AdaptationController, ControllerOptions, OnlineServer, Optimizer, ReconvergePolicy,
+    ServerOptions,
+};
 use scfo::sim;
+use scfo::util::json::Json;
+use scfo::workload::{Trace, Workload, WorkloadSpec};
 
 fn scenario_from(args: &Args) -> anyhow::Result<Scenario> {
     if let Some(cfg) = args.flag("config") {
@@ -194,25 +203,12 @@ fn cmd_fig7(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let sc = scenario_from(args)?;
-    let slots = args.flag_usize("slots", 200)?;
-    let mut rng = Rng::new(sc.seed);
-    let net = sc.build(&mut rng)?;
-    let opts = ServerOptions::default();
-    let metrics = if args.switch("xla") {
-        let gp = scfo::runtime::XlaGp::new(&net, GpOptions::default())?;
-        let mut srv = OnlineServer::new(net, gp, opts);
-        let m = srv.run(slots)?;
-        println!("delay histogram: {}", srv.delay_hist.summary());
-        m
-    } else {
-        let gp = GradientProjection::new(&net, GpOptions::default());
-        let mut srv = OnlineServer::new(net, gp, opts);
-        let m = srv.run(slots)?;
-        println!("delay histogram: {}", srv.delay_hist.summary());
-        m
-    };
+/// Drive a built server to completion and print the serving + adaptation
+/// summary (shared by the native and XLA paths of `scfo serve`).
+fn drive_server<O: Optimizer>(mut srv: OnlineServer<O>, slots: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(slots > 0, "--slots must be at least 1");
+    let metrics = srv.run(slots)?;
+    println!("delay histogram: {}", srv.delay_hist.summary());
     let last = metrics.last().unwrap();
     let lat: Vec<f64> = metrics.iter().map(|m| m.optimizer_latency).collect();
     println!(
@@ -223,7 +219,203 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         scfo::util::stats::mean(&lat) * 1e3,
         scfo::util::stats::percentile(&lat, 95.0) * 1e3,
     );
+    if let Some(ctrl) = &srv.controller {
+        let s = ctrl.summary();
+        println!(
+            "adaptation ({}): {} detections; reconvergence mean {:.1} / max {} slots; regret mean {:.4} total {:.4}",
+            ctrl.opts.policy.name(),
+            s.detections,
+            s.reconverge_mean,
+            s.reconverge_max,
+            s.regret_mean,
+            s.regret_total,
+        );
+    }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let sc = scenario_from(args)?;
+    let slots = args.flag_usize("slots", 200)?;
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng)?;
+    let opts = ServerOptions::default();
+    let wspec = match args.flag("workload") {
+        Some(w) => Some(WorkloadSpec::parse(w)?),
+        None => None,
+    };
+    // nonstationary workloads get the controller by default; --adapt forces
+    // it for stationary serving too
+    let adapt = args.switch("adapt") || wspec.is_some();
+    let policy = ReconvergePolicy::parse(&args.flag_or("policy", "warm"))?;
+    let workload = match &wspec {
+        Some(w) => Workload::from_spec(w, &net, opts.slot_secs, sc.seed)?,
+        None => Workload::stationary(&net, opts.slot_secs, opts.seed),
+    };
+    let ctrl = if adapt {
+        Some(AdaptationController::new(ControllerOptions {
+            policy,
+            ..ControllerOptions::default()
+        }))
+    } else {
+        None
+    };
+    if args.switch("xla") {
+        let gp = scfo::runtime::XlaGp::new(&net, GpOptions::default())?;
+        let mut srv = OnlineServer::with_workload(net, gp, workload, opts);
+        if let Some(c) = ctrl {
+            srv.attach_controller(c);
+        }
+        drive_server(srv, slots)
+    } else {
+        let gp = GradientProjection::new(&net, GpOptions::default());
+        let mut srv = OnlineServer::with_workload(net, gp, workload, opts);
+        if let Some(c) = ctrl {
+            srv.attach_controller(c);
+        }
+        drive_server(srv, slots)
+    }
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand() {
+        Some("record") => {
+            let sc = scenario_from(args)?;
+            let wspec = WorkloadSpec::parse(&args.flag_or("workload", "diurnal"))?;
+            let slots = args.flag_usize("slots", 120)?;
+            let slot_secs = args.flag_f64("slot-secs", 1.0)?;
+            let out = std::path::PathBuf::from(args.flag_or("out", "trace.json"));
+            let mut rng = Rng::new(sc.seed);
+            let net = sc.build(&mut rng)?;
+            let mut wl = Workload::from_spec(&wspec, &net, slot_secs, sc.seed)?;
+            let trace = Trace::record(&mut wl, slots, Some(&sc));
+            trace.save(&out)?;
+            let total: u64 = trace.stats().iter().map(|s| s.arrivals).sum();
+            println!(
+                "recorded {slots} slots x {} streams, {total} arrivals (workload {}, scenario {}) -> {}",
+                trace.streams.len(),
+                wspec.name(),
+                sc.name,
+                out.display()
+            );
+            Ok(())
+        }
+        Some("replay") => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("trace replay needs a FILE argument"))?;
+            let trace = Trace::load(std::path::Path::new(path))?;
+            let sc = match &trace.scenario {
+                Some(sc) => sc.clone(),
+                None => scenario_from(args)?,
+            };
+            let slots = args.flag_usize("slots", trace.num_slots())?;
+            anyhow::ensure!(
+                slots > 0,
+                "nothing to replay: the trace is empty and no --slots given"
+            );
+            let mut rng = Rng::new(sc.seed);
+            let net = sc.build(&mut rng)?;
+            let wl = trace.workload();
+            for s in &wl.streams {
+                anyhow::ensure!(
+                    s.app < net.apps.len() && s.node < net.n(),
+                    "trace stream (app {}, node {}) does not fit scenario '{}'",
+                    s.app,
+                    s.node,
+                    sc.name
+                );
+            }
+            let gp = GradientProjection::new(&net, GpOptions::default());
+            let mut srv = OnlineServer::with_workload(
+                net,
+                gp,
+                wl,
+                ServerOptions {
+                    slot_secs: trace.slot_secs,
+                    ..ServerOptions::default()
+                },
+            );
+            srv.attach_controller(AdaptationController::new(ControllerOptions::default()));
+            let metrics = srv.run(slots)?;
+            let last = metrics.last().unwrap();
+            let arrivals: usize = metrics.iter().map(|m| m.arrivals).sum();
+            let s = srv.controller.as_ref().unwrap().summary();
+            // NOTE: deterministic output only (no wall-clock) — CI diffs two
+            // replays of the same trace byte-for-byte.
+            println!(
+                "replayed {} slots ({arrivals} arrivals) of {}",
+                metrics.len(),
+                path
+            );
+            println!(
+                "final cost {:.9}; expected delay {:.9}s; detections {}; regret total {:.9}",
+                last.cost, last.expected_delay, s.detections, s.regret_total
+            );
+            if let Some(out) = args.flag("json") {
+                let doc = Json::obj(vec![
+                    ("trace", Json::Str(path.to_string())),
+                    ("slots", Json::Num(metrics.len() as f64)),
+                    ("arrivals", Json::Num(arrivals as f64)),
+                    ("final_cost", Json::Num(last.cost)),
+                    ("expected_delay", Json::Num(last.expected_delay)),
+                    ("adaptation", s.to_json()),
+                ]);
+                std::fs::write(out, doc.to_string_pretty())?;
+                println!("wrote {out}");
+            }
+            Ok(())
+        }
+        Some("stats") => {
+            let path = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("trace stats needs a FILE argument"))?;
+            let trace = Trace::load(std::path::Path::new(path))?;
+            println!(
+                "trace {path}: v{} | {} slots x {:.3}s | {} streams | scenario {}",
+                scfo::workload::TRACE_VERSION,
+                trace.num_slots(),
+                trace.slot_secs,
+                trace.streams.len(),
+                trace
+                    .scenario
+                    .as_ref()
+                    .map(|s| s.name.as_str())
+                    .unwrap_or("(none)"),
+            );
+            let rows: Vec<Vec<String>> = trace
+                .stats()
+                .iter()
+                .map(|s| {
+                    vec![
+                        format!("({}, {})", s.app, s.node),
+                        s.model.clone(),
+                        s.arrivals.to_string(),
+                        format!("{:.4}", s.mean_rate),
+                        format!("{:.4}", s.peak_rate),
+                        format!("{:.3}", s.dispersion),
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!("Trace streams — {path}"),
+                &["(app, node)", "model", "arrivals", "mean rate", "peak rate", "dispersion"],
+                &rows,
+            );
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown trace subcommand '{o}'");
+            }
+            anyhow::bail!(
+                "usage: scfo trace record --topology T --workload W --slots N --out FILE | \
+                 scfo trace replay FILE [--json OUT] | scfo trace stats FILE"
+            )
+        }
+    }
 }
 
 fn cmd_validate(args: &Args) -> anyhow::Result<()> {
@@ -251,40 +443,87 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
 
 /// GP hot-path benchmark: time per-iteration wall clock + cost trajectory on
 /// the requested scenarios; `--json` writes the machine-readable BENCH.json
-/// perf baseline (schema: docs/PERFORMANCE.md).
+/// perf baseline (schema: docs/PERFORMANCE.md). With `--workload NAME` the
+/// bench drives the online serving loop instead (iters = serving slots) and
+/// BENCH.json gains the regret / reconvergence-slots columns.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let scenarios = args.flag_or("scenarios", "abilene,geant,sw");
     let iters = args.flag_usize("iters", 60)?;
+    let workload = args.flag("workload");
     let mut results = Vec::new();
     for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        eprintln!("bench {name} ({iters} iters)...");
-        results.push(scfo::bench::bench_gp_scenario(name, iters)?);
+        match workload {
+            Some(w) => {
+                eprintln!("bench {name} ({iters} serving slots, workload {w})...");
+                results.push(scfo::bench::bench_serving_scenario(name, w, iters)?);
+            }
+            None => {
+                eprintln!("bench {name} ({iters} iters)...");
+                results.push(scfo::bench::bench_gp_scenario(name, iters)?);
+            }
+        }
     }
-    let rows: Vec<Vec<String>> = results
-        .iter()
-        .map(|r| {
-            vec![
-                r.name.clone(),
-                format!("{}/{}", r.n, r.m),
-                r.stages.to_string(),
-                r.arena_slots.to_string(),
-                format!("{:.3}", r.mean_iter_secs() * 1e3),
-                format!(
-                    "{:.4}",
-                    r.cost_trajectory.last().copied().unwrap_or(f64::NAN)
-                ),
-                match r.peak_rss_bytes {
-                    Some(b) => format!("{:.1}", b as f64 / (1024.0 * 1024.0)),
-                    None => "n/a".to_string(),
-                },
-            ]
-        })
-        .collect();
-    print_table(
-        "GP hot-path bench (sparse CSR core)",
-        &["scenario", "|V|/|E|", "|S|", "arena", "iter ms", "final cost", "peak RSS MB"],
-        &rows,
-    );
+    if workload.is_some() {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                let d = r.dynamics.as_ref().expect("serving bench has dynamics");
+                vec![
+                    r.name.clone(),
+                    d.workload.clone(),
+                    d.slots.to_string(),
+                    format!("{:.3}", r.mean_iter_secs() * 1e3),
+                    format!(
+                        "{:.4}",
+                        r.cost_trajectory.last().copied().unwrap_or(f64::NAN)
+                    ),
+                    format!("{:.4}", d.summary.regret_mean),
+                    format!("{:.1}", d.summary.reconverge_mean),
+                    d.summary.detections.to_string(),
+                ]
+            })
+            .collect();
+        print_table(
+            "Serving-mode bench (online GP under nonstationary workload)",
+            &[
+                "scenario",
+                "workload",
+                "slots",
+                "slot ms",
+                "final cost",
+                "regret mean",
+                "reconv slots",
+                "detections",
+            ],
+            &rows,
+        );
+    } else {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    format!("{}/{}", r.n, r.m),
+                    r.stages.to_string(),
+                    r.arena_slots.to_string(),
+                    format!("{:.3}", r.mean_iter_secs() * 1e3),
+                    format!(
+                        "{:.4}",
+                        r.cost_trajectory.last().copied().unwrap_or(f64::NAN)
+                    ),
+                    match r.peak_rss_bytes {
+                        Some(b) => format!("{:.1}", b as f64 / (1024.0 * 1024.0)),
+                        None => "n/a".to_string(),
+                    },
+                ]
+            })
+            .collect();
+        print_table(
+            "GP hot-path bench (sparse CSR core)",
+            &["scenario", "|V|/|E|", "|S|", "arena", "iter ms", "final cost", "peak RSS MB"],
+            &rows,
+        );
+    }
     if args.switch("json") || args.flag("out").is_some() {
         let out = std::path::PathBuf::from(args.flag_or("out", "BENCH.json"));
         let doc = scfo::bench::gp_bench_json(&results);
@@ -299,15 +538,31 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
 
     /// Expand the selected tier's matrix. Each tier carries its own default
     /// budgets (standard: 600/300; large: 150/60 — thousand-node scenarios
-    /// need far fewer, more expensive iterations); explicit --iters /
-    /// --event-iters flags override, with --event-iters defaulting to half
-    /// of an explicitly given --iters as before.
+    /// need far fewer, more expensive iterations; dynamic: 200 serving
+    /// slots via --slots); explicit --iters / --event-iters flags override,
+    /// with --event-iters defaulting to half of an explicitly given --iters
+    /// as before.
     fn tier_matrix(args: &Args) -> anyhow::Result<Vec<ScenarioSpec>> {
         let tier = args.flag_or("tier", "standard");
+        if tier == "dynamic" {
+            let slots = args.flag_usize("slots", 200)?;
+            let mut specs = ScenarioSpec::dynamic_matrix_sized(slots);
+            // honor --iters (the baseline-comparison budget) like the
+            // other tiers do
+            if args.flag("iters").is_some() {
+                let iters = args.flag_usize("iters", 300)?;
+                for s in &mut specs {
+                    s.iters = iters;
+                }
+            }
+            return Ok(specs);
+        }
         let (def_iters, def_event) = match tier.as_str() {
             "standard" | "default" => (600, 300),
             "large" => (150, 60),
-            other => anyhow::bail!("unknown scenario tier '{other}' (standard|large)"),
+            other => {
+                anyhow::bail!("unknown scenario tier '{other}' (standard|large|dynamic)")
+            }
         };
         let iters = args.flag_usize("iters", def_iters)?;
         let event_default = if args.flag("iters").is_some() {
@@ -337,22 +592,27 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             let rows: Vec<Vec<String>> = tier_matrix(args)?
                 .iter()
                 .map(|s| {
-                    vec![
-                        s.name().to_string(),
-                        s.base.topology.clone(),
-                        s.congestion.name().to_string(),
-                        s.events
+                    let dynamics = match &s.workload {
+                        Some(w) => format!("workload:{} x{}", w.name(), s.slots),
+                        None => s
+                            .events
                             .iter()
                             .map(|e| e.kind())
                             .collect::<Vec<_>>()
                             .join(","),
+                    };
+                    vec![
+                        s.name().to_string(),
+                        s.base.topology.clone(),
+                        s.congestion.name().to_string(),
+                        dynamics,
                         s.iters.to_string(),
                     ]
                 })
                 .collect();
             print_table(
                 "Scenario matrix (scfo scenarios run --all)",
-                &["name", "topology", "congestion", "events", "iters"],
+                &["name", "topology", "congestion", "events/workload", "iters"],
                 &rows,
             );
             Ok(())
@@ -448,6 +708,7 @@ fn main() -> anyhow::Result<()> {
         Some("scenarios") => cmd_scenarios(&args),
         Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("validate") => cmd_validate(&args),
         Some("broadcast") => cmd_broadcast(&args),
         other => {
@@ -455,8 +716,9 @@ fn main() -> anyhow::Result<()> {
                 eprintln!("unknown command '{o}'");
             }
             eprintln!(
-                "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|validate|broadcast> \
-                 [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] [--tier large] [--xla]"
+                "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|trace|validate|broadcast> \
+                 [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] \
+                 [--tier large|dynamic] [--workload SPEC] [--xla]"
             );
             std::process::exit(2);
         }

@@ -28,13 +28,29 @@ impl Counter {
 
 /// Sample reservoir with percentile queries (bounded memory: keeps the most
 /// recent `cap` samples, ring-buffer style).
+///
+/// **Recency-window semantics:** every statistic except [`count`] is
+/// computed over the *most recent `cap` samples only* — once the ring wraps,
+/// older samples are gone. [`count`](Histogram::count) alone is all-time.
+/// This is deliberate: the serving loop wants "what has delay looked like
+/// lately", not a run-lifetime average that a transient can never move.
+///
+/// [`count`]: Histogram::count
 #[derive(Clone, Debug)]
 pub struct Histogram {
     cap: usize,
     buf: Vec<f64>,
     next: usize,
     total: u64,
+    /// Lazily rebuilt ascending view of `buf`, shared by percentile
+    /// queries between records (interior-mutable: queries take `&self`).
+    sorted: std::cell::RefCell<Vec<f64>>,
+    sorted_valid: std::cell::Cell<bool>,
 }
+
+/// Below this window size a percentile query just sorts a fresh copy —
+/// cheaper than maintaining the cache.
+const SMALL_BUF: usize = 32;
 
 impl Histogram {
     pub fn new(cap: usize) -> Self {
@@ -43,6 +59,8 @@ impl Histogram {
             buf: Vec::new(),
             next: 0,
             total: 0,
+            sorted: std::cell::RefCell::new(Vec::new()),
+            sorted_valid: std::cell::Cell::new(false),
         }
     }
     pub fn record(&mut self, x: f64) {
@@ -53,15 +71,32 @@ impl Histogram {
             self.buf[self.next] = x;
             self.next = (self.next + 1) % self.cap;
         }
+        self.sorted_valid.set(false);
     }
+    /// All-time number of recorded samples (NOT limited to the window).
     pub fn count(&self) -> u64 {
         self.total
     }
+    /// Mean of the retained window (most recent `cap` samples).
     pub fn mean(&self) -> f64 {
         stats::mean(&self.buf)
     }
+    /// Percentile (q in [0, 100]) of the retained window. Small windows
+    /// (≤ 32 samples) sort a fresh copy; larger ones reuse a sorted view
+    /// cached between records, so `summary()`-style bursts of queries cost
+    /// one sort, not four.
     pub fn percentile(&self, q: f64) -> f64 {
-        stats::percentile(&self.buf, q)
+        if self.buf.len() <= SMALL_BUF {
+            return stats::percentile(&self.buf, q);
+        }
+        if !self.sorted_valid.get() {
+            let mut sorted = self.sorted.borrow_mut();
+            sorted.clear();
+            sorted.extend_from_slice(&self.buf);
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted_valid.set(true);
+        }
+        stats::percentile_sorted(&self.sorted.borrow(), q)
     }
     pub fn summary(&self) -> String {
         format!(
@@ -130,6 +165,35 @@ mod tests {
         }
         assert_eq!(h.count(), 1000);
         assert!(h.mean() >= 990.0);
+    }
+
+    #[test]
+    fn cached_percentiles_track_new_records() {
+        // the sorted-view cache must invalidate on every record, on both
+        // the fill and the wrap-around path (window > SMALL_BUF)
+        let mut h = Histogram::new(64);
+        for i in 0..64 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.percentile(100.0), 63.0);
+        assert_eq!(h.percentile(0.0), 0.0);
+        h.record(1000.0); // overwrites the oldest sample (0.0)
+        assert_eq!(h.percentile(100.0), 1000.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+        // cached view agrees with a direct sort of the window
+        let direct = stats::percentile(&h.buf, 50.0);
+        assert_eq!(h.percentile(50.0), direct);
+    }
+
+    #[test]
+    fn small_windows_bypass_the_cache() {
+        let mut h = Histogram::new(8);
+        for x in [5.0, 1.0, 9.0] {
+            h.record(x);
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 9.0);
+        assert!(!h.sorted_valid.get(), "small path must not build the cache");
     }
 
     #[test]

@@ -336,6 +336,22 @@ impl XlaGp {
         self.runtime.eval(net, &self.phi)
     }
 
+    /// Reset to the cold-start min-hop strategy and clear the delayed
+    /// trust-region state (the serving controller's cold-restart hook).
+    pub fn restart(&mut self, net: &Network) {
+        self.phi = Strategy::shortest_path_to_dest(net);
+        self.prev = None;
+        self.cur_alpha = self.opts.alpha;
+        self.rejects = 0;
+    }
+
+    /// Multiply the step size by `factor` (the serving controller's
+    /// warm-start boost hook).
+    pub fn scale_step(&mut self, factor: f64) {
+        self.opts.alpha *= factor;
+        self.cur_alpha *= factor;
+    }
+
     /// (n, num_apps) of the loaded artifact bucket.
     pub fn bucket_info(&self) -> (usize, usize) {
         (self.runtime.bucket().n, self.runtime.bucket().num_apps)

@@ -12,7 +12,12 @@
 //! * **congestion level** — a [`Congestion`] multiplier on all input rates;
 //! * **dynamic-event schedule** — an ordered list of [`DynamicEvent`]s
 //!   (input-rate steps and link churn) driving the online-adaptation path of
-//!   [`crate::algo::gp::GradientProjection`] mid-run.
+//!   [`crate::algo::gp::GradientProjection`] mid-run;
+//! * **workload** (optional) — a nonstationary traffic spec
+//!   ([`crate::workload::WorkloadSpec`]); when present the scenario runs
+//!   through the online serving loop with the adaptation controller and its
+//!   report carries regret/reconvergence metrics (`dynamic` tier,
+//!   [`ScenarioSpec::dynamic_matrix`]).
 //!
 //! [`ScenarioSpec::matrix`] expands the default evaluation matrix (families ×
 //! congestion levels, each with the standard event schedule); the
@@ -55,6 +60,7 @@ pub use runner::{run_batch, RunnerOptions, ScenarioCache, ScenarioReport};
 use crate::config::Scenario;
 use crate::cost::CostKind;
 use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
 
 /// Congestion level: a multiplier applied to every exogenous input rate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -191,6 +197,14 @@ pub struct ScenarioSpec {
     /// Optimization budget for the initial solve (and the per-algorithm
     /// budget for the final baseline comparison).
     pub iters: usize,
+    /// Nonstationary traffic spec. When set, the scenario runs through the
+    /// online serving loop ([`crate::serving::OnlineServer`] + adaptation
+    /// controller) for [`ScenarioSpec::slots`] slots instead of the
+    /// event-schedule path, and the report carries regret/reconvergence
+    /// metrics.
+    pub workload: Option<WorkloadSpec>,
+    /// Serving slots for workload-driven (dynamic-tier) scenarios.
+    pub slots: usize,
 }
 
 /// Topology families of the `large` scale tier
@@ -265,7 +279,42 @@ impl ScenarioSpec {
             congestion,
             events: Self::default_schedule(300),
             iters: 600,
+            workload: None,
+            slots: 200,
         })
+    }
+
+    /// Topology families of the `dynamic` tier.
+    pub const DYNAMIC_FAMILIES: [&'static str; 3] = ["abilene", "er-20-40", "grid-4x5"];
+
+    /// Workload presets the `dynamic` tier crosses the families with.
+    pub const DYNAMIC_WORKLOADS: [&'static str; 3] = ["diurnal", "flash-crowd", "mmpp"];
+
+    /// The `dynamic` scale tier: topology families × nonstationary
+    /// workloads, each served online with the adaptation controller
+    /// attached. Reports carry per-slot regret vs the omniscient oracle and
+    /// slots-to-reconvergence per detected change point.
+    pub fn dynamic_matrix() -> Vec<ScenarioSpec> {
+        Self::dynamic_matrix_sized(200)
+    }
+
+    /// The `dynamic` tier with an explicit serving-slot budget.
+    pub fn dynamic_matrix_sized(slots: usize) -> Vec<ScenarioSpec> {
+        let mut out = Vec::with_capacity(Self::DYNAMIC_FAMILIES.len() * Self::DYNAMIC_WORKLOADS.len());
+        for family in Self::DYNAMIC_FAMILIES {
+            for workload in Self::DYNAMIC_WORKLOADS {
+                let mut spec = Self::named(family, Congestion::Nominal)
+                    .expect("dynamic families are valid");
+                spec.base.name = format!("{family}-{workload}");
+                spec.events.clear();
+                spec.iters = 300;
+                spec.slots = slots;
+                spec.workload =
+                    Some(WorkloadSpec::named(workload).expect("dynamic workloads are valid"));
+                out.push(spec);
+            }
+        }
+        out
     }
 
     /// The default evaluation matrix: five topology families × three
@@ -351,6 +400,10 @@ impl ScenarioSpec {
             "events".to_string(),
             Json::Arr(self.events.iter().map(DynamicEvent::to_json).collect()),
         );
+        if let Some(w) = &self.workload {
+            obj.insert("workload".to_string(), w.to_json());
+            obj.insert("slots".to_string(), Json::Num(self.slots as f64));
+        }
         Json::Obj(obj)
     }
 
@@ -367,11 +420,19 @@ impl ScenarioSpec {
                 events.push(DynamicEvent::from_json(e, iters)?);
             }
         }
+        // `workload = "diurnal"` (string) or a full `[workload]` table
+        let workload = match v.get("workload") {
+            Some(w) => Some(WorkloadSpec::from_json(w)?),
+            None => None,
+        };
+        let slots = v.get("slots").and_then(Json::as_usize).unwrap_or(200);
         Ok(ScenarioSpec {
             base,
             congestion,
             events,
             iters,
+            workload,
+            slots,
         })
     }
 
@@ -433,6 +494,69 @@ mod tests {
         assert_eq!(re.events, spec.events);
         assert_eq!(re.iters, spec.iters);
         assert_eq!(re.base.topology, spec.base.topology);
+        assert_eq!(re.workload, None);
+    }
+
+    #[test]
+    fn dynamic_matrix_crosses_families_and_workloads() {
+        let m = ScenarioSpec::dynamic_matrix();
+        assert_eq!(
+            m.len(),
+            ScenarioSpec::DYNAMIC_FAMILIES.len() * ScenarioSpec::DYNAMIC_WORKLOADS.len()
+        );
+        let names: std::collections::BTreeSet<&str> = m.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), m.len(), "dynamic names must be unique");
+        for s in &m {
+            let w = s.workload.as_ref().expect("dynamic specs carry a workload");
+            assert!(ScenarioSpec::DYNAMIC_WORKLOADS.contains(&w.name()));
+            assert!(s.events.is_empty(), "dynamic tier replaces the event path");
+            assert!(s.slots > 0);
+        }
+        // every workload appears once per family
+        for wname in ScenarioSpec::DYNAMIC_WORKLOADS {
+            let count = m
+                .iter()
+                .filter(|s| s.workload.as_ref().unwrap().name() == wname)
+                .count();
+            assert_eq!(count, ScenarioSpec::DYNAMIC_FAMILIES.len());
+        }
+    }
+
+    #[test]
+    fn dynamic_spec_roundtrips_with_workload() {
+        let spec = &ScenarioSpec::dynamic_matrix()[0];
+        let re = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(re.workload, spec.workload);
+        assert_eq!(re.slots, spec.slots);
+        assert_eq!(re.name(), spec.name());
+    }
+
+    #[test]
+    fn spec_workload_parses_from_toml_string_and_table() {
+        let as_string = r#"
+            name = "dyn-a"
+            topology = "abilene"
+            workload = "flash-crowd"
+            slots = 90
+        "#;
+        let v = crate::util::toml::parse(as_string).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(spec.workload.as_ref().unwrap().name(), "flash-crowd");
+        assert_eq!(spec.slots, 90);
+
+        let as_table = r#"
+            name = "dyn-b"
+            topology = "abilene"
+            [workload]
+            kind = "diurnal"
+            period = 16.0
+        "#;
+        let v = crate::util::toml::parse(as_table).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        match &spec.workload.as_ref().unwrap().model {
+            crate::workload::ModelSpec::Diurnal { period, .. } => assert_eq!(*period, 16.0),
+            other => panic!("expected diurnal, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,492 @@
+//! Online adaptation controller: change-point detection on the serving
+//! loop's rate estimates, re-optimization policies, and regret accounting.
+//!
+//! The controller watches the per-stream EWMA rate estimates for drift using
+//! a normalized-innovation statistic: alongside the server's fast EWMA it
+//! maintains a slow EWMA per stream, and each slot forms
+//!
+//! ```text
+//! z = Σ_s (fast_s − slow_s) / sqrt(Σ_s v̂_s),
+//! v̂_s = (w_f/(2−w_f) + w_s/(2−w_s)) · slow_s / T
+//! ```
+//!
+//! — the aggregate fast−slow gap in units of its stationary-Poisson standard
+//! deviation. Under stationary traffic `z` hovers near zero; after a rate
+//! change the fast estimate moves first and `z` grows. A detection fires
+//! when `|z|` crosses [`ControllerOptions::threshold`] (abrupt shifts) or a
+//! two-sided CUSUM of `|z|` crosses [`ControllerOptions::cusum_h`] (gradual
+//! drift), after which the slow estimate re-anchors to the fast one and a
+//! cooldown suppresses immediate re-fires.
+//!
+//! On detection the configured [`ReconvergePolicy`] re-triggers
+//! optimization: `WarmStart` keeps the current φ and temporarily boosts the
+//! optimizer step size (rescheduled back after
+//! [`ControllerOptions::boost_slots`]); `ColdRestart` resets φ to the
+//! min-hop initial strategy.
+//!
+//! Per-slot regret is measured against an *oracle*: a shadow
+//! [`GradientProjection`] solved on the true (not estimated) rates each
+//! slot, warm-started from its own previous solution. See
+//! `docs/WORKLOADS.md` for the methodology and its caveats.
+
+use crate::algo::gp::{GpOptions, GradientProjection};
+use crate::app::Network;
+
+/// What to do with the live optimizer when a change point is detected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconvergePolicy {
+    /// Keep the current φ; temporarily boost the step size so GP re-tracks
+    /// faster, then reschedule it back.
+    WarmStart,
+    /// Reset φ to the min-hop initial strategy and re-optimize from scratch.
+    ColdRestart,
+}
+
+impl ReconvergePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReconvergePolicy::WarmStart => "warm-start",
+            ReconvergePolicy::ColdRestart => "cold-restart",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<ReconvergePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "warm" | "warm-start" => Ok(ReconvergePolicy::WarmStart),
+            "cold" | "cold-restart" => Ok(ReconvergePolicy::ColdRestart),
+            other => anyhow::bail!("unknown policy '{other}' (warm|cold)"),
+        }
+    }
+}
+
+/// Controller configuration.
+#[derive(Clone, Debug)]
+pub struct ControllerOptions {
+    pub policy: ReconvergePolicy,
+    /// Slow-EWMA factor (the fast factor is the server's `ewma`).
+    pub slow_ewma: f64,
+    /// Fire immediately when |z| exceeds this (abrupt change points).
+    pub threshold: f64,
+    /// CUSUM drift allowance k: |z| in excess of this accumulates.
+    pub cusum_k: f64,
+    /// Fire when the CUSUM statistic exceeds this (gradual drift).
+    pub cusum_h: f64,
+    /// Step-size multiplier applied on WarmStart detections.
+    pub alpha_boost: f64,
+    /// Slots the boost stays active before being rescheduled back.
+    pub boost_slots: usize,
+    /// Minimum slots between detections.
+    pub cooldown: usize,
+    /// Warm oracle GP iterations per slot (the regret reference).
+    pub oracle_iters: usize,
+    /// Extra oracle iterations on its very first slot (cold start).
+    pub oracle_warmup_iters: usize,
+    /// A detection counts as reconverged once served cost is within this
+    /// relative tolerance of the oracle cost.
+    pub reconverge_tol: f64,
+}
+
+impl Default for ControllerOptions {
+    fn default() -> Self {
+        ControllerOptions {
+            policy: ReconvergePolicy::WarmStart,
+            slow_ewma: 0.05,
+            threshold: 6.0,
+            cusum_k: 1.5,
+            cusum_h: 8.0,
+            alpha_boost: 3.0,
+            boost_slots: 10,
+            cooldown: 5,
+            oracle_iters: 30,
+            oracle_warmup_iters: 400,
+            reconverge_tol: 0.05,
+        }
+    }
+}
+
+/// Optimizer-side effect requested by the controller for this slot. The
+/// server applies it to its (generic) optimizer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicyAction {
+    None,
+    /// Reset the optimizer to a cold-start strategy.
+    Restart,
+    /// Multiply the optimizer step size by the payload.
+    ScaleStep(f64),
+}
+
+/// One detection and its outcome.
+#[derive(Clone, Debug)]
+pub struct AdaptationEvent {
+    /// Serving slot (1-based, matching `SlotMetrics::slot`) of detection.
+    pub slot: usize,
+    /// Slots from detection until served cost re-entered the oracle's
+    /// tolerance band (≥ 1). For unresolved detections this is the censored
+    /// span observed so far.
+    pub reconverge_slots: usize,
+    /// False while the detection is still waiting for reconvergence.
+    pub resolved: bool,
+}
+
+/// Aggregate adaptation metrics for a run.
+#[derive(Clone, Debug, Default)]
+pub struct AdaptationSummary {
+    /// Slots observed.
+    pub slots: usize,
+    /// Change points detected.
+    pub detections: usize,
+    /// Mean slots-to-reconvergence across detections (censored spans
+    /// included); 0.0 when nothing fired.
+    pub reconverge_mean: f64,
+    /// Worst reconvergence span.
+    pub reconverge_max: usize,
+    /// Σ per-slot regret (served cost − oracle cost, clamped at 0).
+    pub regret_total: f64,
+    /// Mean per-slot regret.
+    pub regret_mean: f64,
+}
+
+impl AdaptationSummary {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("slots", Json::Num(self.slots as f64)),
+            ("detections", Json::Num(self.detections as f64)),
+            ("reconvergence_slots_mean", Json::Num(self.reconverge_mean)),
+            ("reconvergence_slots_max", Json::Num(self.reconverge_max as f64)),
+            ("regret_total", Json::Num(self.regret_total)),
+            ("regret_mean", Json::Num(self.regret_mean)),
+        ])
+    }
+}
+
+/// The controller. Attach to an [`crate::serving::OnlineServer`] via
+/// [`crate::serving::OnlineServer::attach_controller`]; the server feeds it
+/// every slot.
+pub struct AdaptationController {
+    pub opts: ControllerOptions,
+    /// Copied from the server at attach time.
+    pub(super) fast_ewma: f64,
+    pub(super) slot_secs: f64,
+    slow: Vec<f64>,
+    seen: Vec<bool>,
+    cusum: f64,
+    cooldown_left: usize,
+    boost_left: usize,
+    slot: usize,
+    /// Latest normalized-innovation statistic (diagnostics).
+    pub last_z: f64,
+    events: Vec<AdaptationEvent>,
+    regrets: Vec<f64>,
+    oracle: Option<GradientProjection>,
+    /// Latest oracle (omniscient) cost.
+    pub last_oracle_cost: f64,
+}
+
+impl AdaptationController {
+    pub fn new(opts: ControllerOptions) -> AdaptationController {
+        AdaptationController {
+            opts,
+            fast_ewma: 0.3,
+            slot_secs: 1.0,
+            slow: Vec::new(),
+            seen: Vec::new(),
+            cusum: 0.0,
+            cooldown_left: 0,
+            boost_left: 0,
+            slot: 0,
+            last_z: 0.0,
+            events: Vec::new(),
+            regrets: Vec::new(),
+            oracle: None,
+            last_oracle_cost: 0.0,
+        }
+    }
+
+    /// Detection phase, called once per slot with the per-stream observed
+    /// rates (this slot's counts / T) and the server's fast EWMA estimates
+    /// (post-update). Returns the optimizer-side action for this slot.
+    pub fn observe(&mut self, observed: &[f64], fast: &[f64]) -> PolicyAction {
+        self.slot += 1;
+        if observed.len() > self.slow.len() {
+            self.slow.resize(observed.len(), 0.0);
+            self.seen.resize(observed.len(), false);
+        }
+        let ws = self.opts.slow_ewma;
+        let wf = self.fast_ewma;
+        let vfactor = wf / (2.0 - wf) + ws / (2.0 - ws);
+        let mut gap = 0.0;
+        let mut var = 0.0;
+        // opposite-direction shifts on different streams cancel in the
+        // signed aggregate, so also track the largest per-stream |z|
+        let mut stream_z = 0.0f64;
+        for (s, &obs) in observed.iter().enumerate() {
+            if !self.seen[s] {
+                // same cold-start rule as the server's fast estimate
+                self.slow[s] = obs;
+                self.seen[s] = true;
+            } else {
+                self.slow[s] = (1.0 - ws) * self.slow[s] + ws * obs;
+            }
+            let g = fast[s] - self.slow[s];
+            let v = vfactor * self.slow[s].max(1e-9) / self.slot_secs;
+            gap += g;
+            var += v;
+            stream_z = stream_z.max(g.abs() / v.sqrt());
+        }
+        self.last_z = if var > 0.0 { gap / var.sqrt() } else { 0.0 };
+        // CUSUM integrates the aggregate only: a max-statistic has a
+        // nonzero null mean that would drift it upward. Slow *opposing*
+        // drifts therefore rely on the per-stream threshold below.
+        self.cusum = (self.cusum + self.last_z.abs() - self.opts.cusum_k).max(0.0);
+
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+        }
+        let fired = self.cooldown_left == 0
+            && (self.last_z.abs() > self.opts.threshold
+                || stream_z > self.opts.threshold
+                || self.cusum > self.opts.cusum_h);
+        if fired {
+            // re-anchor and re-arm the detector
+            self.slow.copy_from_slice(fast);
+            self.cusum = 0.0;
+            self.cooldown_left = self.opts.cooldown;
+            self.events.push(AdaptationEvent {
+                slot: self.slot,
+                reconverge_slots: 0,
+                resolved: false,
+            });
+            return match self.opts.policy {
+                ReconvergePolicy::ColdRestart => PolicyAction::Restart,
+                ReconvergePolicy::WarmStart => {
+                    let act = if self.boost_left == 0 {
+                        PolicyAction::ScaleStep(self.opts.alpha_boost)
+                    } else {
+                        PolicyAction::None // boost already active; extend it
+                    };
+                    self.boost_left = self.opts.boost_slots;
+                    act
+                }
+            };
+        }
+        if self.boost_left > 0 {
+            self.boost_left -= 1;
+            if self.boost_left == 0 {
+                return PolicyAction::ScaleStep(1.0 / self.opts.alpha_boost);
+            }
+        }
+        PolicyAction::None
+    }
+
+    /// Regret phase, called after the optimizer slot with the served cost at
+    /// the true rates and the truth network itself. Runs the warm oracle,
+    /// records regret, and advances reconvergence tracking. Returns
+    /// `(oracle_cost, regret)`.
+    pub fn post_slot(&mut self, served_cost: f64, truth: &Network) -> (f64, f64) {
+        if let Some(gp) = self.oracle.as_mut() {
+            gp.run(truth, self.opts.oracle_iters);
+        } else {
+            let mut gp = GradientProjection::new(truth, GpOptions::default());
+            gp.run(truth, self.opts.oracle_warmup_iters);
+            self.oracle = Some(gp);
+        }
+        let oracle_cost = self.oracle.as_ref().expect("set above").cost(truth);
+        self.last_oracle_cost = oracle_cost;
+        let regret = (served_cost - oracle_cost).max(0.0);
+        self.regrets.push(regret);
+
+        let tol = self.opts.reconverge_tol;
+        for ev in &mut self.events {
+            if !ev.resolved {
+                ev.reconverge_slots += 1;
+                if served_cost <= oracle_cost * (1.0 + tol) {
+                    ev.resolved = true;
+                }
+            }
+        }
+        (oracle_cost, regret)
+    }
+
+    /// Detections so far.
+    pub fn events(&self) -> &[AdaptationEvent] {
+        &self.events
+    }
+
+    /// Per-slot regret trace.
+    pub fn regrets(&self) -> &[f64] {
+        &self.regrets
+    }
+
+    /// Aggregate metrics over the run so far.
+    pub fn summary(&self) -> AdaptationSummary {
+        let detections = self.events.len();
+        let (mut mean, mut max) = (0.0, 0usize);
+        if detections > 0 {
+            let spans: Vec<usize> = self.events.iter().map(|e| e.reconverge_slots).collect();
+            mean = spans.iter().sum::<usize>() as f64 / detections as f64;
+            max = spans.iter().copied().max().unwrap_or(0);
+        }
+        let regret_total: f64 = self.regrets.iter().sum();
+        AdaptationSummary {
+            slots: self.slot,
+            detections,
+            reconverge_mean: mean,
+            reconverge_max: max,
+            regret_total,
+            regret_mean: if self.slot > 0 {
+                regret_total / self.slot as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Feed the detector synthetic Poisson streams directly (no server).
+    /// Returns the total detection count afterwards.
+    fn run_detector(
+        ctrl: &mut AdaptationController,
+        rates: &[f64],
+        slots: usize,
+        rng: &mut Rng,
+        fast: &mut [f64],
+        seen: &mut [bool],
+    ) -> usize {
+        for _ in 0..slots {
+            let mut obs = vec![0.0; rates.len()];
+            for (s, &r) in rates.iter().enumerate() {
+                if r <= 0.0 {
+                    continue;
+                }
+                let mut count = 0usize;
+                let mut t = rng.exp(r);
+                while t < 1.0 {
+                    count += 1;
+                    t += rng.exp(r);
+                }
+                obs[s] = count as f64;
+                if !seen[s] {
+                    fast[s] = obs[s];
+                    seen[s] = true;
+                } else {
+                    fast[s] = 0.7 * fast[s] + 0.3 * obs[s];
+                }
+            }
+            let _ = ctrl.observe(&obs, fast);
+        }
+        ctrl.events().len()
+    }
+
+    #[test]
+    fn stationary_streams_do_not_fire() {
+        let mut ctrl = AdaptationController::new(ControllerOptions::default());
+        let rates = [1.0, 0.8, 1.2];
+        let mut fast = [0.0; 3];
+        let mut seen = [false; 3];
+        let mut rng = Rng::new(2024);
+        let fired = run_detector(&mut ctrl, &rates, 300, &mut rng, &mut fast, &mut seen);
+        assert_eq!(fired, 0, "false alarm under stationary Poisson");
+    }
+
+    #[test]
+    fn abrupt_step_fires_quickly() {
+        let mut ctrl = AdaptationController::new(ControllerOptions::default());
+        let mut fast = [0.0; 3];
+        let mut seen = [false; 3];
+        let mut rng = Rng::new(7);
+        run_detector(&mut ctrl, &[1.0, 0.8, 1.2], 60, &mut rng, &mut fast, &mut seen);
+        assert_eq!(ctrl.events().len(), 0);
+        // all streams step x6 (a flash crowd hitting every source)
+        run_detector(&mut ctrl, &[6.0, 4.8, 7.2], 10, &mut rng, &mut fast, &mut seen);
+        assert!(
+            !ctrl.events().is_empty(),
+            "no detection within 10 slots of a 6x step (z={})",
+            ctrl.last_z
+        );
+        let ev = &ctrl.events()[0];
+        assert!(ev.slot > 60 && ev.slot <= 70, "fired at slot {}", ev.slot);
+    }
+
+    #[test]
+    fn opposing_stream_shifts_are_detected() {
+        // one stream surges while another collapses by the same amount:
+        // the signed aggregate nets to ~0, the per-stream |z| must fire
+        let mut ctrl = AdaptationController::new(ControllerOptions::default());
+        let mut fast = [0.0; 2];
+        let mut seen = [false; 2];
+        let mut rng = Rng::new(31);
+        run_detector(&mut ctrl, &[1.0, 5.0], 60, &mut rng, &mut fast, &mut seen);
+        assert_eq!(ctrl.events().len(), 0);
+        let fired = run_detector(&mut ctrl, &[5.0, 1.0], 12, &mut rng, &mut fast, &mut seen);
+        assert!(
+            fired >= 1,
+            "opposing shifts cancelled in the detector (z={})",
+            ctrl.last_z
+        );
+    }
+
+    #[test]
+    fn warm_start_boost_is_applied_and_rescheduled_back() {
+        let mut ctrl = AdaptationController::new(ControllerOptions {
+            policy: ReconvergePolicy::WarmStart,
+            boost_slots: 3,
+            cooldown: 1,
+            ..ControllerOptions::default()
+        });
+        // prime one stationary slot, then an enormous step
+        assert_eq!(ctrl.observe(&[1.0], &[1.0]), PolicyAction::None);
+        let act = ctrl.observe(&[50.0], &[15.7]);
+        assert_eq!(act, PolicyAction::ScaleStep(3.0));
+        // boost expires after boost_slots quiet slots
+        let mut unboost = None;
+        for _ in 0..5 {
+            match ctrl.observe(&[1.0], &[ctrl.slow[0]]) {
+                PolicyAction::ScaleStep(f) => unboost = Some(f),
+                PolicyAction::None => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let f = unboost.expect("boost never rescheduled back");
+        assert!((f - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cold_restart_policy_requests_restart() {
+        let opts = ControllerOptions {
+            policy: ReconvergePolicy::ColdRestart,
+            ..ControllerOptions::default()
+        };
+        let mut ctrl = AdaptationController::new(opts);
+        assert_eq!(ctrl.observe(&[1.0], &[1.0]), PolicyAction::None);
+        assert_eq!(ctrl.observe(&[60.0], &[18.7]), PolicyAction::Restart);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [ReconvergePolicy::WarmStart, ReconvergePolicy::ColdRestart] {
+            assert_eq!(ReconvergePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(ReconvergePolicy::parse("lukewarm").is_err());
+    }
+
+    #[test]
+    fn summary_counts_regret_and_reconvergence() {
+        let mut ctrl = AdaptationController::new(ControllerOptions::default());
+        let net = crate::testutil::small_net(true);
+        ctrl.observe(&[1.0, 0.8], &[1.0, 0.8]);
+        let (oracle, regret) = ctrl.post_slot(100.0, &net);
+        assert!(oracle > 0.0 && regret > 0.0);
+        let s = ctrl.summary();
+        assert_eq!(s.slots, 1);
+        assert!(s.regret_total > 0.0);
+        let v = s.to_json();
+        assert!(v.get("regret_mean").is_some());
+        assert!(v.get("reconvergence_slots_mean").is_some());
+    }
+}

@@ -1,17 +1,33 @@
 //! Online serving loop — the deployment-shaped wrapper around the optimizer.
 //!
-//! Requests (computation jobs) arrive as Poisson streams at the source
-//! nodes; the server estimates per-(app, node) arrival rates with an EWMA,
-//! feeds them to the optimizer every slot (the paper's online mode: GP needs
-//! no prior knowledge of r_i(a)), and reports delay/throughput metrics. Both
-//! the native optimizer and the PJRT-backed [`crate::runtime::XlaGp`] plug
-//! in via [`Optimizer`].
+//! Requests (computation jobs) arrive at the source nodes from a
+//! [`Workload`] — any composition of the traffic models in
+//! [`crate::workload`] (stationary Poisson, diurnal, MMPP bursts, flash
+//! crowds, drift, or a recorded trace). The server estimates per-(app, node)
+//! arrival rates with an EWMA (initialized from the first observed slot, so
+//! early slots don't under-provision φ), feeds them to the optimizer every
+//! slot (the paper's online mode: GP needs no prior knowledge of r_i(a)),
+//! and reports delay/throughput metrics against the *true* rates.
+//!
+//! An optional [`AdaptationController`] watches the rate estimates for
+//! change points and re-triggers optimization (warm-start step boost or cold
+//! restart), while measuring per-slot cost regret against a warm omniscient
+//! GP oracle and time-to-reconvergence per detection — see [`adapt`].
+//!
+//! Both the native optimizer and the PJRT-backed [`crate::runtime::XlaGp`]
+//! plug in via [`Optimizer`].
+
+pub mod adapt;
+
+pub use adapt::{
+    AdaptationController, AdaptationSummary, ControllerOptions, PolicyAction, ReconvergePolicy,
+};
 
 use crate::app::Network;
 use crate::flow::FlowState;
 use crate::metrics::Histogram;
 use crate::strategy::Strategy;
-use crate::util::rng::Rng;
+use crate::workload::Workload;
 
 /// Anything that can advance a strategy by one slot on the current network.
 pub trait Optimizer {
@@ -19,6 +35,12 @@ pub trait Optimizer {
     fn slot(&mut self, net: &Network) -> anyhow::Result<f64>;
     /// Current strategy.
     fn strategy(&self) -> &Strategy;
+    /// Reset to a cold-start strategy for the current network (the
+    /// [`ReconvergePolicy::ColdRestart`] hook; default: no-op).
+    fn restart(&mut self, _net: &Network) {}
+    /// Multiply the step size by `factor` (the warm-start boost hook;
+    /// default: no-op).
+    fn scale_step(&mut self, _factor: f64) {}
 }
 
 impl Optimizer for crate::algo::gp::GradientProjection {
@@ -28,6 +50,12 @@ impl Optimizer for crate::algo::gp::GradientProjection {
     fn strategy(&self) -> &Strategy {
         &self.phi
     }
+    fn restart(&mut self, net: &Network) {
+        *self = crate::algo::gp::GradientProjection::new(net, self.opts.clone());
+    }
+    fn scale_step(&mut self, factor: f64) {
+        self.opts.alpha *= factor;
+    }
 }
 
 impl Optimizer for crate::runtime::XlaGp {
@@ -36,6 +64,12 @@ impl Optimizer for crate::runtime::XlaGp {
     }
     fn strategy(&self) -> &Strategy {
         &self.phi
+    }
+    fn restart(&mut self, net: &Network) {
+        crate::runtime::XlaGp::restart(self, net);
+    }
+    fn scale_step(&mut self, factor: f64) {
+        crate::runtime::XlaGp::scale_step(self, factor);
     }
 }
 
@@ -71,39 +105,64 @@ pub struct SlotMetrics {
     pub expected_delay: f64,
     /// wall-clock time the optimizer slot took (s) — the L3 hot-path latency
     pub optimizer_latency: f64,
+    /// omniscient-GP cost this slot (controller attached only)
+    pub oracle_cost: Option<f64>,
+    /// served cost − oracle cost, clamped at 0 (controller attached only)
+    pub regret: Option<f64>,
+    /// true iff the controller detected a change point this slot
+    pub detection: bool,
 }
 
 /// The online server.
 pub struct OnlineServer<O: Optimizer> {
-    /// true (hidden) arrival rates used to draw traffic
-    true_rates: Vec<Vec<f64>>,
+    /// the arrival process (owns the hidden true rates)
+    pub workload: Workload,
     /// the rate estimates the optimizer sees (EWMA over observed counts)
     est_rates: Vec<Vec<f64>>,
+    /// whether (app, node) has observed its first slot yet
+    est_seen: Vec<Vec<bool>>,
     pub net: Network,
     pub optimizer: O,
     opts: ServerOptions,
-    rng: Rng,
     pub delay_hist: Histogram,
     slot_no: usize,
+    /// change-point detection + regret accounting, when attached
+    pub controller: Option<AdaptationController>,
 }
 
 impl<O: Optimizer> OnlineServer<O> {
-    /// `net`'s input_rates are taken as the true arrival rates; the
-    /// optimizer starts from zero knowledge (estimates at 0).
+    /// Stationary-Poisson serving: `net`'s input_rates become the hidden
+    /// true rates (the legacy behavior). The optimizer starts from zero
+    /// knowledge (estimates at 0 until the first slot is observed).
     pub fn new(net: Network, optimizer: O, opts: ServerOptions) -> Self {
-        let true_rates: Vec<Vec<f64>> =
-            net.apps.iter().map(|a| a.input_rates.clone()).collect();
+        let workload = Workload::stationary(&net, opts.slot_secs, opts.seed);
+        Self::with_workload(net, optimizer, workload, opts)
+    }
+
+    /// Serve an arbitrary [`Workload`] (nonstationary models, trace replay).
+    /// The workload's `slot_secs` is authoritative: `opts.slot_secs` is
+    /// overridden to match, so rate estimates (counts / T) can never be
+    /// scaled by a different slot duration than the one that generated the
+    /// counts.
+    pub fn with_workload(
+        net: Network,
+        optimizer: O,
+        workload: Workload,
+        mut opts: ServerOptions,
+    ) -> Self {
+        opts.slot_secs = workload.slot_secs;
         let est_rates = vec![vec![0.0; net.n()]; net.apps.len()];
-        let rng = Rng::new(opts.seed);
+        let est_seen = vec![vec![false; net.n()]; net.apps.len()];
         let mut srv = OnlineServer {
-            true_rates,
+            workload,
             est_rates,
+            est_seen,
             net,
             optimizer,
             opts,
-            rng,
             delay_hist: Histogram::new(4096),
             slot_no: 0,
+            controller: None,
         };
         // optimizer starts against zero estimated load
         for (a, est) in srv.est_rates.iter().enumerate() {
@@ -112,64 +171,96 @@ impl<O: Optimizer> OnlineServer<O> {
         srv
     }
 
-    /// Change the hidden true rate (models demand shifts mid-run).
-    pub fn set_true_rate(&mut self, app: usize, node: usize, rate: f64) {
-        self.true_rates[app][node] = rate;
+    /// Attach an [`AdaptationController`]; it inherits the server's EWMA
+    /// factor and slot duration for its normalized-innovation statistic.
+    pub fn attach_controller(&mut self, mut ctrl: AdaptationController) {
+        ctrl.fast_ewma = self.opts.ewma;
+        ctrl.slot_secs = self.opts.slot_secs;
+        self.controller = Some(ctrl);
     }
 
-    /// Run one serving slot: draw Poisson arrivals, update estimates, run
-    /// the optimizer, report metrics.
+    /// Change the hidden true base rate (models demand shifts mid-run).
+    pub fn set_true_rate(&mut self, app: usize, node: usize, rate: f64) {
+        self.workload.set_base_rate(app, node, rate);
+    }
+
+    /// Current rate estimate for (app, node).
+    pub fn estimated_rate(&self, app: usize, node: usize) -> f64 {
+        self.est_rates[app][node]
+    }
+
+    /// Run one serving slot: draw arrivals from the workload, update
+    /// estimates, run the controller + optimizer, report metrics.
     pub fn run_slot(&mut self) -> anyhow::Result<SlotMetrics> {
         self.slot_no += 1;
-        // 1. arrivals this slot (Poisson counts, slot_secs horizon)
-        let mut arrivals = 0usize;
-        for (a, rates) in self.true_rates.iter().enumerate() {
-            for (i, &r) in rates.iter().enumerate() {
-                if r <= 0.0 {
-                    self.est_rates[a][i] *= 1.0 - self.opts.ewma;
-                    continue;
-                }
-                // sample Poisson(r * T) by thinning exponential gaps
-                let mut count = 0usize;
-                let mut t = self.rng.exp(r);
-                while t < self.opts.slot_secs {
-                    count += 1;
-                    t += self.rng.exp(r);
-                }
-                arrivals += count;
-                let observed = count as f64 / self.opts.slot_secs;
-                self.est_rates[a][i] = (1.0 - self.opts.ewma) * self.est_rates[a][i]
-                    + self.opts.ewma * observed;
+        // 1. arrivals this slot, per stream
+        let arrivals = self.workload.sample_slot();
+        // 2. rate estimation (EWMA, initialized from the first observation
+        //    instead of decaying up from zero)
+        let w = self.opts.ewma;
+        let mut obs_buf = Vec::with_capacity(self.workload.streams.len());
+        let mut est_buf = Vec::with_capacity(self.workload.streams.len());
+        for s in &self.workload.streams {
+            let observed = s.last_offsets.len() as f64 / self.opts.slot_secs;
+            let est = &mut self.est_rates[s.app][s.node];
+            if !self.est_seen[s.app][s.node] {
+                *est = observed;
+                self.est_seen[s.app][s.node] = true;
+            } else {
+                *est = (1.0 - w) * *est + w * observed;
             }
+            obs_buf.push(observed);
+            est_buf.push(*est);
         }
-        // 2. expose estimates to the optimizer
+        // 3. expose estimates to the optimizer
         for (a, est) in self.est_rates.iter().enumerate() {
             self.net.apps[a].input_rates.copy_from_slice(est);
         }
-        // 3. optimizer slot (timed: this is the L3 hot path)
+        // 4. change-point detection + re-optimization policy
+        let mut detection = false;
+        if let Some(ctrl) = self.controller.as_mut() {
+            let before = ctrl.events().len();
+            let action = ctrl.observe(&obs_buf, &est_buf);
+            detection = ctrl.events().len() > before;
+            match action {
+                PolicyAction::None => {}
+                PolicyAction::Restart => self.optimizer.restart(&self.net),
+                PolicyAction::ScaleStep(f) => self.optimizer.scale_step(f),
+            }
+        }
+        // 5. optimizer slot (timed: this is the L3 hot path)
         let t0 = std::time::Instant::now();
         let _opt_cost = self.optimizer.slot(&self.net)?;
         let optimizer_latency = t0.elapsed().as_secs_f64();
-        // 4. metrics at the TRUE rates (what users experience)
+        // 6. metrics at the TRUE rates (what users experience)
         let mut truth = self.net.clone();
-        for (a, rates) in self.true_rates.iter().enumerate() {
-            truth.apps[a].input_rates.copy_from_slice(rates);
-        }
+        self.workload.apply_true_rates(&mut truth);
         let fs = FlowState::solve(&truth, self.optimizer.strategy())
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let lambda: f64 = self.true_rates.iter().flatten().sum();
+        let lambda = self.workload.total_true_rate();
         let expected_delay = if lambda > 0.0 {
             fs.total_cost / lambda
         } else {
             0.0
         };
         self.delay_hist.record(expected_delay);
+        // 7. regret vs the omniscient oracle + reconvergence bookkeeping
+        let (oracle_cost, regret) = match self.controller.as_mut() {
+            Some(ctrl) => {
+                let (o, r) = ctrl.post_slot(fs.total_cost, &truth);
+                (Some(o), Some(r))
+            }
+            None => (None, None),
+        };
         Ok(SlotMetrics {
             slot: self.slot_no,
             arrivals,
             cost: fs.total_cost,
             expected_delay,
             optimizer_latency,
+            oracle_cost,
+            regret,
+            detection,
         })
     }
 
@@ -184,6 +275,7 @@ mod tests {
     use super::*;
     use crate::algo::gp::{GpOptions, GradientProjection};
     use crate::testutil::small_net;
+    use crate::workload::{Workload, WorkloadSpec};
 
     #[test]
     fn server_learns_rates_and_converges() {
@@ -191,17 +283,16 @@ mod tests {
         let gp = GradientProjection::new(&net, GpOptions::default());
         let mut srv = OnlineServer::new(net, gp, ServerOptions::default());
         let metrics = srv.run(80).unwrap();
-        // estimates must approach the truth
-        for (a, rates) in srv.true_rates.iter().enumerate() {
-            for (i, &r) in rates.iter().enumerate() {
-                if r > 0.0 {
-                    let est = srv.est_rates[a][i];
-                    assert!(
-                        (est - r).abs() < 0.5 * r + 0.2,
-                        "rate ({a},{i}): est {est} true {r}"
-                    );
-                }
-            }
+        // estimates must approach the (stationary) truth
+        for s in &srv.workload.streams {
+            let r = s.base_rate();
+            let est = srv.est_rates[s.app][s.node];
+            assert!(
+                (est - r).abs() < 0.5 * r + 0.2,
+                "rate ({},{}): est {est} true {r}",
+                s.app,
+                s.node
+            );
         }
         // cost at the end beats the beginning (optimizer adapted to load)
         let head = metrics[3].cost;
@@ -211,6 +302,26 @@ mod tests {
             "no improvement under serving: {head} -> {tail}"
         );
         assert!(metrics.iter().all(|m| m.expected_delay.is_finite()));
+    }
+
+    #[test]
+    fn first_slot_estimate_equals_first_observation() {
+        // the EWMA cold-start fix: after one slot the estimate IS the first
+        // observed rate, not ewma · observed decaying up from zero
+        let net = small_net(true);
+        let gp = GradientProjection::new(&net, GpOptions::default());
+        let mut srv = OnlineServer::new(net, gp, ServerOptions::default());
+        srv.run(1).unwrap();
+        for s in &srv.workload.streams {
+            let observed = s.last_offsets.len() as f64; // slot_secs = 1
+            assert_eq!(
+                srv.estimated_rate(s.app, s.node),
+                observed,
+                "stream ({},{}) first-slot estimate must equal the observation",
+                s.app,
+                s.node
+            );
+        }
     }
 
     #[test]
@@ -228,14 +339,82 @@ mod tests {
         // after re-adaptation, the served cost must be within 15% of a
         // clairvoyant GP solved directly on the new true rates
         let mut truth = srv.net.clone();
-        for (a, rates) in srv.true_rates.iter().enumerate() {
-            truth.apps[a].input_rates.copy_from_slice(rates);
+        for app in &mut truth.apps {
+            for r in &mut app.input_rates {
+                *r = 0.0;
+            }
+        }
+        for s in &srv.workload.streams {
+            truth.apps[s.app].input_rates[s.node] = s.base_rate();
         }
         let mut gp = GradientProjection::new(&truth, GpOptions::default());
         let opt = gp.run(&truth, 2000).final_cost;
         assert!(
             after <= opt * 1.15,
             "re-adapted cost {after} vs clairvoyant optimum {opt}"
+        );
+    }
+
+    #[test]
+    fn nonstationary_workload_serves_and_reports_regret() {
+        let net = small_net(true);
+        let wl = Workload::from_spec(
+            &WorkloadSpec::named("flash-crowd").unwrap(),
+            &net,
+            1.0,
+            11,
+        )
+        .unwrap();
+        let gp = GradientProjection::new(&net, GpOptions::default());
+        let mut srv = OnlineServer::with_workload(net, gp, wl, ServerOptions::default());
+        srv.attach_controller(AdaptationController::new(ControllerOptions::default()));
+        let metrics = srv.run(90).unwrap();
+        // the flash crowd (onset at t = 30) must be detected
+        let summary = srv.controller.as_ref().unwrap().summary();
+        assert!(summary.detections >= 1, "flash crowd not detected");
+        assert!(summary.regret_total > 0.0);
+        assert!(summary.reconverge_mean >= 1.0);
+        let fired_at = metrics.iter().find(|m| m.detection).unwrap().slot;
+        assert!(
+            (31..=48).contains(&fired_at),
+            "detection at slot {fired_at}, expected shortly after the t=30 onset"
+        );
+        assert!(metrics.iter().all(|m| m.oracle_cost.unwrap() > 0.0));
+    }
+
+    #[test]
+    fn cold_restart_policy_still_converges() {
+        let net = small_net(true);
+        let wl = Workload::from_spec(
+            &WorkloadSpec::named("flash-crowd").unwrap(),
+            &net,
+            1.0,
+            11,
+        )
+        .unwrap();
+        let gp = GradientProjection::new(&net, GpOptions::default());
+        let mut srv = OnlineServer::with_workload(net, gp, wl, ServerOptions::default());
+        srv.attach_controller(AdaptationController::new(ControllerOptions {
+            policy: ReconvergePolicy::ColdRestart,
+            ..ControllerOptions::default()
+        }));
+        let metrics = srv.run(120).unwrap();
+        let summary = srv.controller.as_ref().unwrap().summary();
+        assert!(summary.detections >= 1);
+        // after the crowd decays (t > 70) the server must re-approach the
+        // oracle: regret in the final quarter well below the spike regret
+        let spike_regret: f64 = metrics[30..55]
+            .iter()
+            .map(|m| m.regret.unwrap())
+            .fold(0.0, f64::max);
+        let tail_regret: f64 = metrics[100..]
+            .iter()
+            .map(|m| m.regret.unwrap())
+            .sum::<f64>()
+            / 20.0;
+        assert!(
+            tail_regret < spike_regret * 0.5 + 1e-9,
+            "tail regret {tail_regret} vs spike {spike_regret}"
         );
     }
 }

@@ -4,7 +4,7 @@
 pub mod des;
 pub mod flowsim;
 
-pub use des::{simulate, DesReport};
+pub use des::{simulate, simulate_workload, DesReport};
 pub use flowsim::{
     compare_algorithms, compare_on_network, packet_size_sweep, rate_sweep, ComparisonRow, HopRow,
 };

@@ -26,13 +26,22 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (q / 100.0) * (s.len() - 1) as f64;
+    percentile_sorted(&s, q)
+}
+
+/// [`percentile`] on an already-ascending slice (skips the sort — callers
+/// that cache a sorted view, like `metrics::Histogram`, use this).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        s[lo]
+        sorted[lo]
     } else {
-        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
     }
 }
 

@@ -1,0 +1,716 @@
+//! Nonstationary workload subsystem: traffic models, declarative workload
+//! specs, and trace record/replay.
+//!
+//! This module owns *how traffic reaches the optimizer*. The paper claims
+//! Algorithm 1 "adapts to changes in input rates … as an online algorithm";
+//! exercising that claim needs more than fixed-rate Poisson arrivals, so the
+//! serving loop ([`crate::serving::OnlineServer`]), the scenario engine
+//! ([`crate::scenarios`]) and the DES ([`crate::sim::des`]) all draw their
+//! arrivals from a [`Workload`] built here.
+//!
+//! Three layers:
+//!
+//! * [`models`] — the [`TrafficModel`] trait and its implementations:
+//!   stationary Poisson, diurnal (sinusoidal) modulation, two-state MMPP
+//!   bursts, flash-crowd spikes and linear drift. All deterministic under
+//!   [`crate::util::rng::Rng`].
+//! * [`trace`] — a versioned JSON/CSV trace format: record any workload,
+//!   replay it bit-identically ([`trace::Trace`], [`trace::TraceModel`]).
+//! * this file — [`ModelSpec`]/[`WorkloadSpec`] (declarative, TOML/JSON,
+//!   per-(app, node) assignable) and [`Workload`] (one model + RNG per
+//!   source stream, sampled slot by slot).
+//!
+//! # Examples
+//!
+//! Build a diurnal workload over the Abilene scenario and sample slots:
+//!
+//! ```
+//! use scfo::config::Scenario;
+//! use scfo::prelude::*;
+//!
+//! let sc = Scenario::table2("abilene").unwrap();
+//! let mut rng = Rng::new(sc.seed);
+//! let net = sc.build(&mut rng).unwrap();
+//!
+//! let spec = WorkloadSpec::named("diurnal").unwrap();
+//! let mut wl = Workload::from_spec(&spec, &net, 1.0, 42).unwrap();
+//! let mut total = 0;
+//! for _ in 0..50 {
+//!     total += wl.sample_slot();
+//! }
+//! assert!(total > 0);
+//! // the same spec + seed reproduces the exact same arrivals
+//! let mut wl2 = Workload::from_spec(&spec, &net, 1.0, 42).unwrap();
+//! let total2: usize = (0..50).map(|_| wl2.sample_slot()).sum();
+//! assert_eq!(total, total2);
+//! assert_eq!(spec.model, ModelSpec::named("diurnal").unwrap());
+//! ```
+
+pub mod models;
+pub mod trace;
+
+pub use models::{Diurnal, Drift, FlashCrowd, Mmpp, Poisson, TrafficModel};
+pub use trace::{TRACE_VERSION, Trace, TraceModel, TraceStream, TraceStreamStats};
+
+use std::collections::BTreeMap;
+
+use crate::app::Network;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Declarative description of one traffic model (shape parameters only; the
+/// base rate comes from the network's per-(app, node) input rates).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelSpec {
+    /// Stationary Poisson at the base rate (the legacy serving behavior).
+    Poisson,
+    /// Sinusoidal modulation: `λ(t) = base·(1 + amplitude·sin(2πt/period + phase))`.
+    Diurnal { period: f64, amplitude: f64, phase: f64 },
+    /// Two-state Markov-modulated Poisson: background `base`, bursts at
+    /// `base·gain`, exponential dwell times (seconds).
+    Mmpp { gain: f64, dwell_base: f64, dwell_burst: f64 },
+    /// Flash crowd: ramp from `base` to `base·peak` starting at `start`
+    /// over `ramp` seconds, `hold` plateau, linear `decay` back.
+    FlashCrowd { peak: f64, start: f64, ramp: f64, hold: f64, decay: f64 },
+    /// Linear rate drift: `λ(t) = base·max(0, 1 + slope·t)`.
+    Drift { slope: f64 },
+    /// Replay a recorded trace file (JSON or CSV; see [`trace`]).
+    Trace { path: String },
+}
+
+impl ModelSpec {
+    /// Stable kind tag.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ModelSpec::Poisson => "poisson",
+            ModelSpec::Diurnal { .. } => "diurnal",
+            ModelSpec::Mmpp { .. } => "mmpp",
+            ModelSpec::FlashCrowd { .. } => "flash-crowd",
+            ModelSpec::Drift { .. } => "drift",
+            ModelSpec::Trace { .. } => "trace",
+        }
+    }
+
+    /// A named preset: `poisson` (or `stationary`), `diurnal`, `mmpp`,
+    /// `flash-crowd`, `drift`, or `trace:<path>`.
+    pub fn named(name: &str) -> anyhow::Result<ModelSpec> {
+        if let Some(path) = name.strip_prefix("trace:") {
+            return Ok(ModelSpec::Trace {
+                path: path.to_string(),
+            });
+        }
+        match name {
+            "poisson" | "stationary" => Ok(ModelSpec::Poisson),
+            "diurnal" => Ok(ModelSpec::Diurnal {
+                period: 24.0,
+                amplitude: 0.8,
+                phase: 0.0,
+            }),
+            "mmpp" => Ok(ModelSpec::Mmpp {
+                gain: 4.0,
+                dwell_base: 8.0,
+                dwell_burst: 4.0,
+            }),
+            "flash-crowd" => Ok(ModelSpec::FlashCrowd {
+                peak: 6.0,
+                start: 30.0,
+                ramp: 5.0,
+                hold: 20.0,
+                decay: 15.0,
+            }),
+            "drift" => Ok(ModelSpec::Drift { slope: 0.01 }),
+            other => anyhow::bail!(
+                "unknown traffic model '{other}' \
+                 (poisson|diurnal|mmpp|flash-crowd|drift|trace:<path>)"
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::Str(self.kind().to_string()))];
+        match self {
+            ModelSpec::Poisson => {}
+            ModelSpec::Diurnal {
+                period,
+                amplitude,
+                phase,
+            } => {
+                pairs.push(("period", Json::Num(*period)));
+                pairs.push(("amplitude", Json::Num(*amplitude)));
+                pairs.push(("phase", Json::Num(*phase)));
+            }
+            ModelSpec::Mmpp {
+                gain,
+                dwell_base,
+                dwell_burst,
+            } => {
+                pairs.push(("gain", Json::Num(*gain)));
+                pairs.push(("dwell_base", Json::Num(*dwell_base)));
+                pairs.push(("dwell_burst", Json::Num(*dwell_burst)));
+            }
+            ModelSpec::FlashCrowd {
+                peak,
+                start,
+                ramp,
+                hold,
+                decay,
+            } => {
+                pairs.push(("peak", Json::Num(*peak)));
+                pairs.push(("start", Json::Num(*start)));
+                pairs.push(("ramp", Json::Num(*ramp)));
+                pairs.push(("hold", Json::Num(*hold)));
+                pairs.push(("decay", Json::Num(*decay)));
+            }
+            ModelSpec::Drift { slope } => pairs.push(("slope", Json::Num(*slope))),
+            ModelSpec::Trace { path } => pairs.push(("path", Json::Str(path.clone()))),
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse from a JSON object with a `kind` field; parameters missing from
+    /// the object keep the named preset's defaults.
+    pub fn from_json(v: &Json) -> anyhow::Result<ModelSpec> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("traffic model: missing 'kind'"))?;
+        let getf = |k: &str, d: f64| v.get(k).and_then(Json::as_f64).unwrap_or(d);
+        // `kind = "trace"` has no preset name (the preset form is
+        // `trace:<path>`); resolve it from the required `path` field so
+        // to_json output round-trips
+        let mut spec = if kind == "trace" {
+            let path = v
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("trace model: missing 'path'"))?;
+            ModelSpec::Trace {
+                path: path.to_string(),
+            }
+        } else {
+            ModelSpec::named(kind)?
+        };
+        match &mut spec {
+            ModelSpec::Poisson => {}
+            ModelSpec::Diurnal {
+                period,
+                amplitude,
+                phase,
+            } => {
+                *period = getf("period", *period);
+                *amplitude = getf("amplitude", *amplitude);
+                *phase = getf("phase", *phase);
+            }
+            ModelSpec::Mmpp {
+                gain,
+                dwell_base,
+                dwell_burst,
+            } => {
+                *gain = getf("gain", *gain);
+                *dwell_base = getf("dwell_base", *dwell_base);
+                *dwell_burst = getf("dwell_burst", *dwell_burst);
+            }
+            ModelSpec::FlashCrowd {
+                peak,
+                start,
+                ramp,
+                hold,
+                decay,
+            } => {
+                *peak = getf("peak", *peak);
+                *start = getf("start", *start);
+                *ramp = getf("ramp", *ramp);
+                *hold = getf("hold", *hold);
+                *decay = getf("decay", *decay);
+            }
+            ModelSpec::Drift { slope } => *slope = getf("slope", *slope),
+            ModelSpec::Trace { path } => {
+                if let Some(p) = v.get("path").and_then(Json::as_str) {
+                    *path = p.to_string();
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Instantiate the model for one stream at `base` rate. Trace models
+    /// must be resolved at the workload level (they need the stream
+    /// identity), so this errors for [`ModelSpec::Trace`].
+    fn build(&self, base: f64) -> anyhow::Result<Box<dyn TrafficModel>> {
+        Ok(match self {
+            ModelSpec::Poisson => Box::new(Poisson::new(base)),
+            ModelSpec::Diurnal {
+                period,
+                amplitude,
+                phase,
+            } => Box::new(Diurnal::new(base, *amplitude, *period, *phase)?),
+            ModelSpec::Mmpp {
+                gain,
+                dwell_base,
+                dwell_burst,
+            } => Box::new(Mmpp::new(base, *gain, *dwell_base, *dwell_burst)?),
+            ModelSpec::FlashCrowd {
+                peak,
+                start,
+                ramp,
+                hold,
+                decay,
+            } => Box::new(FlashCrowd::new(base, *peak, *start, *ramp, *hold, *decay)?),
+            ModelSpec::Drift { slope } => Box::new(Drift::new(base, *slope)),
+            ModelSpec::Trace { path } => {
+                anyhow::bail!("trace model '{path}' must be built via Workload::from_spec")
+            }
+        })
+    }
+}
+
+/// A per-stream override within a [`WorkloadSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamOverride {
+    pub app: usize,
+    pub node: usize,
+    pub model: ModelSpec,
+}
+
+/// Declarative workload: a default model for every source stream plus
+/// per-(app, node) overrides. Loads from a preset name, a TOML/JSON file,
+/// or inline JSON (the scenario spec's `workload` field).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    /// Default model applied to every (app, node) source.
+    pub model: ModelSpec,
+    /// Per-stream overrides (win over `model`).
+    pub overrides: Vec<StreamOverride>,
+}
+
+impl WorkloadSpec {
+    /// A spec that applies one model uniformly.
+    pub fn uniform(model: ModelSpec) -> WorkloadSpec {
+        WorkloadSpec {
+            model,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// A named preset (see [`ModelSpec::named`]) applied uniformly.
+    pub fn named(name: &str) -> anyhow::Result<WorkloadSpec> {
+        Ok(WorkloadSpec::uniform(ModelSpec::named(name)?))
+    }
+
+    /// Parse a CLI-ish workload argument: a `.toml`/`.json` spec file path,
+    /// or a preset name (`diurnal`, `flash-crowd`, `mmpp`, `trace:<path>`, …).
+    pub fn parse(s: &str) -> anyhow::Result<WorkloadSpec> {
+        let lower = s.to_ascii_lowercase();
+        if lower.ends_with(".toml") || lower.ends_with(".json") {
+            let path = std::path::Path::new(s);
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read {s}: {e}"))?;
+            let v = crate::config::parse_config_text(&text, path)?;
+            return WorkloadSpec::from_json(&v);
+        }
+        WorkloadSpec::named(s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.model.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("ModelSpec::to_json returns an object"),
+        };
+        if !self.overrides.is_empty() {
+            let streams = self
+                .overrides
+                .iter()
+                .map(|ov| {
+                    let mut o = match ov.model.to_json() {
+                        Json::Obj(o) => o,
+                        _ => unreachable!(),
+                    };
+                    o.insert("app".into(), Json::Num(ov.app as f64));
+                    o.insert("node".into(), Json::Num(ov.node as f64));
+                    Json::Obj(o)
+                })
+                .collect();
+            obj.insert("streams".into(), Json::Arr(streams));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Accepts either a bare preset name (`Json::Str`) or an object with a
+    /// `kind` field plus an optional `streams` override array.
+    pub fn from_json(v: &Json) -> anyhow::Result<WorkloadSpec> {
+        if let Some(name) = v.as_str() {
+            return WorkloadSpec::named(name);
+        }
+        let model = ModelSpec::from_json(v)?;
+        let mut overrides = Vec::new();
+        if let Some(arr) = v.get("streams").and_then(Json::as_arr) {
+            for s in arr {
+                let app = s
+                    .get("app")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("workload stream override: missing 'app'"))?;
+                let node = s
+                    .get("node")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("workload stream override: missing 'node'"))?;
+                overrides.push(StreamOverride {
+                    app,
+                    node,
+                    model: ModelSpec::from_json(s)?,
+                });
+            }
+        }
+        Ok(WorkloadSpec { model, overrides })
+    }
+
+    /// Short display name (the default model's kind).
+    pub fn name(&self) -> &'static str {
+        self.model.kind()
+    }
+}
+
+/// One live arrival stream: an (app, node) source with its model and its own
+/// forked RNG (so sampling order never couples streams).
+pub struct Stream {
+    pub app: usize,
+    pub node: usize,
+    model: Box<dyn TrafficModel>,
+    rng: Rng,
+    /// Arrival offsets within the most recently sampled slot, ascending.
+    pub last_offsets: Vec<f64>,
+    /// Time-averaged true rate over the most recently sampled slot (before
+    /// any slot is sampled: the model's rate at t = 0).
+    pub last_rate: f64,
+}
+
+impl Stream {
+    pub fn new(app: usize, node: usize, model: Box<dyn TrafficModel>, rng: Rng) -> Stream {
+        let last_rate = model.rate_at(0.0);
+        Stream {
+            app,
+            node,
+            model,
+            rng,
+            last_offsets: Vec::new(),
+            last_rate,
+        }
+    }
+
+    /// The stream's model kind tag.
+    pub fn model_kind(&self) -> &'static str {
+        self.model.kind()
+    }
+
+    /// The stream's base rate.
+    pub fn base_rate(&self) -> f64 {
+        self.model.base_rate()
+    }
+
+    /// Instantaneous true rate at absolute time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        self.model.rate_at(t)
+    }
+}
+
+/// The workload of a network: one [`Stream`] per (app, node) source,
+/// advanced in lock-step one slot at a time.
+pub struct Workload {
+    /// Slot duration in seconds.
+    pub slot_secs: f64,
+    pub streams: Vec<Stream>,
+    /// Next slot index to sample.
+    slot: usize,
+    /// Spawns RNGs for streams added after construction
+    /// ([`Workload::set_base_rate`] on a previously silent node).
+    spawn_rng: Rng,
+}
+
+impl Workload {
+    /// Stationary Poisson at the network's current input rates — the legacy
+    /// serving behavior, now just one model among several.
+    pub fn stationary(net: &Network, slot_secs: f64, seed: u64) -> Workload {
+        Self::from_spec(&WorkloadSpec::uniform(ModelSpec::Poisson), net, slot_secs, seed)
+            .expect("stationary Poisson cannot fail to build")
+    }
+
+    /// Build from a declarative spec: one stream per (app, node) with a
+    /// positive input rate, base rates taken from the network. Stream RNGs
+    /// are forked deterministically from `seed` in (app, node) order.
+    pub fn from_spec(
+        spec: &WorkloadSpec,
+        net: &Network,
+        slot_secs: f64,
+        seed: u64,
+    ) -> anyhow::Result<Workload> {
+        anyhow::ensure!(slot_secs > 0.0, "slot_secs must be positive");
+        // load each referenced trace file once
+        let mut traces: BTreeMap<String, Trace> = BTreeMap::new();
+        let mut model_for = |ms: &ModelSpec, app: usize, node: usize, base: f64| {
+            match ms {
+                ModelSpec::Trace { path } => {
+                    if !traces.contains_key(path.as_str()) {
+                        let t = Trace::load(std::path::Path::new(path))?;
+                        traces.insert(path.clone(), t);
+                    }
+                    let t = &traces[path.as_str()];
+                    let idx = t
+                        .streams
+                        .iter()
+                        .position(|s| s.app == app && s.node == node)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("trace '{path}' has no stream for (app {app}, node {node})")
+                        })?;
+                    let arrivals = t.slots.iter().map(|sl| sl.arrivals[idx].clone()).collect();
+                    let rates = t.slots.iter().map(|sl| sl.rates[idx]).collect();
+                    Ok(Box::new(TraceModel::new(t.streams[idx].base_rate, arrivals, rates))
+                        as Box<dyn TrafficModel>)
+                }
+                other => other.build(base),
+            }
+        };
+        let mut master = Rng::new(seed);
+        let mut streams = Vec::new();
+        for (a, app) in net.apps.iter().enumerate() {
+            for (i, &r) in app.input_rates.iter().enumerate() {
+                if r <= 0.0 {
+                    continue;
+                }
+                let ms = spec
+                    .overrides
+                    .iter()
+                    .find(|ov| ov.app == a && ov.node == i)
+                    .map(|ov| &ov.model)
+                    .unwrap_or(&spec.model);
+                let rng = master.fork();
+                streams.push(Stream::new(a, i, model_for(ms, a, i, r)?, rng));
+            }
+        }
+        Ok(Workload {
+            slot_secs,
+            streams,
+            slot: 0,
+            spawn_rng: master,
+        })
+    }
+
+    /// Assemble from prebuilt streams (the trace replayer's entry point).
+    pub fn from_streams(slot_secs: f64, streams: Vec<Stream>, spawn_rng: Rng) -> Workload {
+        Workload {
+            slot_secs,
+            streams,
+            slot: 0,
+            spawn_rng,
+        }
+    }
+
+    /// Index of the next slot to sample.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Absolute time at the start of the next slot.
+    pub fn time(&self) -> f64 {
+        self.slot as f64 * self.slot_secs
+    }
+
+    /// Sample one slot across all streams; per-stream offsets and true
+    /// rates land in [`Stream::last_offsets`] / [`Stream::last_rate`].
+    /// Returns the total arrival count.
+    pub fn sample_slot(&mut self) -> usize {
+        let t0 = self.time();
+        let dt = self.slot_secs;
+        let mut total = 0;
+        for s in &mut self.streams {
+            s.last_offsets.clear();
+            s.last_rate = s.model.sample_slot(t0, dt, &mut s.rng, &mut s.last_offsets);
+            total += s.last_offsets.len();
+        }
+        self.slot += 1;
+        total
+    }
+
+    /// Sum of the streams' latest true rates (offered load λ̄).
+    pub fn total_true_rate(&self) -> f64 {
+        self.streams.iter().map(|s| s.last_rate).sum()
+    }
+
+    /// Write the latest per-stream true rates into an `apps × n` rate grid
+    /// (entries without a stream are zeroed).
+    pub fn true_rates_into(&self, rates: &mut [Vec<f64>]) {
+        for row in rates.iter_mut() {
+            for r in row.iter_mut() {
+                *r = 0.0;
+            }
+        }
+        for s in &self.streams {
+            rates[s.app][s.node] = s.last_rate;
+        }
+    }
+
+    /// Overwrite `net`'s input rates with the latest true per-stream rates
+    /// (all other entries zeroed) — the "truth network" used for serving
+    /// metrics and the regret oracle.
+    pub fn apply_true_rates(&self, net: &mut Network) {
+        for app in &mut net.apps {
+            for r in &mut app.input_rates {
+                *r = 0.0;
+            }
+        }
+        for s in &self.streams {
+            net.apps[s.app].input_rates[s.node] = s.last_rate;
+        }
+    }
+
+    /// Re-anchor one stream's base rate (demand-shift hook). Creates a new
+    /// stationary Poisson stream if (app, node) had none.
+    pub fn set_base_rate(&mut self, app: usize, node: usize, rate: f64) {
+        if let Some(s) = self
+            .streams
+            .iter_mut()
+            .find(|s| s.app == app && s.node == node)
+        {
+            s.model.set_base_rate(rate);
+            s.last_rate = s.model.rate_at(self.slot as f64 * self.slot_secs);
+        } else if rate > 0.0 {
+            let rng = self.spawn_rng.fork();
+            self.streams
+                .push(Stream::new(app, node, Box::new(Poisson::new(rate)), rng));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::small_net;
+
+    #[test]
+    fn named_presets_roundtrip_json() {
+        for name in ["poisson", "diurnal", "mmpp", "flash-crowd", "drift"] {
+            let spec = WorkloadSpec::named(name).unwrap();
+            let re = WorkloadSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, re, "{name}");
+            assert_eq!(spec.name(), name);
+        }
+        assert!(WorkloadSpec::named("nope").is_err());
+        let tr = ModelSpec::named("trace:/tmp/x.json").unwrap();
+        assert_eq!(
+            tr,
+            ModelSpec::Trace {
+                path: "/tmp/x.json".into()
+            }
+        );
+    }
+
+    #[test]
+    fn trace_model_spec_roundtrips_json() {
+        let spec = WorkloadSpec::uniform(ModelSpec::Trace {
+            path: "t.json".into(),
+        });
+        let re = WorkloadSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, re);
+        // table form: kind = "trace" requires a path
+        let v = crate::util::toml::parse("kind = \"trace\"").unwrap();
+        assert!(WorkloadSpec::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn spec_accepts_bare_string_json() {
+        let spec = WorkloadSpec::from_json(&Json::Str("mmpp".into())).unwrap();
+        assert_eq!(spec.model.kind(), "mmpp");
+    }
+
+    #[test]
+    fn spec_parses_from_toml_table_with_overrides() {
+        let doc = r#"
+            kind = "diurnal"
+            period = 12.0
+            amplitude = 0.5
+            [[streams]]
+            app = 0
+            node = 3
+            kind = "flash-crowd"
+            peak = 9.0
+        "#;
+        let v = crate::util::toml::parse(doc).unwrap();
+        let spec = WorkloadSpec::from_json(&v).unwrap();
+        assert_eq!(
+            spec.model,
+            ModelSpec::Diurnal {
+                period: 12.0,
+                amplitude: 0.5,
+                phase: 0.0
+            }
+        );
+        assert_eq!(spec.overrides.len(), 1);
+        assert_eq!(spec.overrides[0].app, 0);
+        assert_eq!(spec.overrides[0].node, 3);
+        match &spec.overrides[0].model {
+            ModelSpec::FlashCrowd { peak, .. } => assert_eq!(*peak, 9.0),
+            other => panic!("expected flash-crowd override, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn workload_builds_one_stream_per_source() {
+        let net = small_net(true);
+        let wl = Workload::stationary(&net, 1.0, 1);
+        assert_eq!(wl.streams.len(), 2); // sources at nodes 0 and 3
+        assert_eq!(wl.streams[0].base_rate(), 1.0);
+        assert_eq!(wl.streams[1].base_rate(), 0.8);
+        // pre-sample true rates are the t=0 model rates
+        let mut grid = vec![vec![9.9; net.n()]; 1];
+        wl.true_rates_into(&mut grid);
+        assert_eq!(grid[0][0], 1.0);
+        assert_eq!(grid[0][3], 0.8);
+        assert_eq!(grid[0][5], 0.0);
+    }
+
+    #[test]
+    fn overrides_select_per_stream_models() {
+        let net = small_net(true);
+        let mut spec = WorkloadSpec::named("poisson").unwrap();
+        spec.overrides.push(StreamOverride {
+            app: 0,
+            node: 3,
+            model: ModelSpec::named("mmpp").unwrap(),
+        });
+        let wl = Workload::from_spec(&spec, &net, 1.0, 5).unwrap();
+        assert_eq!(wl.streams[0].model_kind(), "poisson");
+        assert_eq!(wl.streams[1].model_kind(), "mmpp");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_stream_independent() {
+        let net = small_net(true);
+        let run = |seed: u64| {
+            let mut wl =
+                Workload::from_spec(&WorkloadSpec::named("mmpp").unwrap(), &net, 1.0, seed)
+                    .unwrap();
+            let mut all = Vec::new();
+            for _ in 0..40 {
+                wl.sample_slot();
+                all.push(
+                    wl.streams
+                        .iter()
+                        .map(|s| s.last_offsets.clone())
+                        .collect::<Vec<_>>(),
+                );
+            }
+            all
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn set_base_rate_rescales_or_spawns() {
+        let net = small_net(true);
+        let mut wl = Workload::stationary(&net, 1.0, 3);
+        wl.set_base_rate(0, 0, 2.5);
+        assert_eq!(wl.streams[0].base_rate(), 2.5);
+        assert_eq!(wl.streams.len(), 2);
+        wl.set_base_rate(0, 7, 1.2); // previously silent node
+        assert_eq!(wl.streams.len(), 3);
+        assert_eq!(wl.streams[2].node, 7);
+    }
+}

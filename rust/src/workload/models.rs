@@ -1,0 +1,477 @@
+//! Traffic models: the stochastic processes that generate request arrivals.
+//!
+//! Every model implements [`TrafficModel`]: it owns the *shape* of a single
+//! (app, node) arrival stream relative to a base rate, samples one slot of
+//! arrival timestamps at a time, and reports the true mean rate the slot was
+//! drawn from (the omniscient reference used for regret accounting).
+//!
+//! All randomness flows through the caller-provided [`Rng`], so a model's
+//! arrival sequence is a pure function of (parameters, seed) — the
+//! determinism contract `rust/tests/workload.rs` pins down.
+
+use crate::util::rng::Rng;
+
+/// A nonstationary arrival process for one (app, node) stream.
+///
+/// Implementations must be deterministic: equal parameters + an equal-seeded
+/// [`Rng`] must reproduce bit-identical arrival sequences.
+pub trait TrafficModel: Send {
+    /// Stable model name (used in trace headers and reports).
+    fn kind(&self) -> &'static str;
+
+    /// Instantaneous mean rate at absolute time `t` (requests/second), given
+    /// the model's *current* internal state. Does not advance state.
+    fn rate_at(&self, t: f64) -> f64;
+
+    /// The base (nominal) rate the shape is scaled around.
+    fn base_rate(&self) -> f64;
+
+    /// Rescale the model around a new base rate (demand-shift hook).
+    fn set_base_rate(&mut self, rate: f64);
+
+    /// Sample arrival offsets within `[0, dt)` for the slot starting at
+    /// absolute time `t0`, appending them to `out` in increasing order.
+    /// Advances internal state (MMPP phase, trace cursor) across the slot
+    /// and returns the time-averaged true rate over the slot.
+    fn sample_slot(&mut self, t0: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>) -> f64;
+}
+
+/// Homogeneous-Poisson arrivals within `[0, dt)` at `rate`, appended to
+/// `out` (exponential gap sampling — the classic thinning-free special
+/// case). Shared by the stationary model and the piecewise-constant MMPP
+/// segments.
+pub(crate) fn sample_poisson(rate: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>, base_t: f64) {
+    if rate <= 0.0 || dt <= 0.0 {
+        return;
+    }
+    let mut t = rng.exp(rate);
+    while t < dt {
+        out.push(base_t + t);
+        t += rng.exp(rate);
+    }
+}
+
+/// Nonhomogeneous-Poisson sampling by thinning: candidate arrivals at
+/// `bound`, accepted with probability `rate(t)/bound`. `bound` must
+/// dominate `rate` over `[t0, t0 + dt)`.
+pub(crate) fn sample_thinned(
+    rate: impl Fn(f64) -> f64,
+    bound: f64,
+    t0: f64,
+    dt: f64,
+    rng: &mut Rng,
+    out: &mut Vec<f64>,
+) {
+    if bound <= 0.0 || dt <= 0.0 {
+        return;
+    }
+    let mut t = rng.exp(bound);
+    while t < dt {
+        if rng.f64() * bound <= rate(t0 + t) {
+            out.push(t);
+        }
+        t += rng.exp(bound);
+    }
+}
+
+/// Midpoint-rule time average of `rate` over `[t0, t0 + dt)` (deterministic;
+/// 64 panels are ample for the piecewise-linear / sinusoidal shapes here).
+pub(crate) fn avg_rate(rate: impl Fn(f64) -> f64, t0: f64, dt: f64) -> f64 {
+    const PANELS: usize = 64;
+    let h = dt / PANELS as f64;
+    (0..PANELS).map(|i| rate(t0 + (i as f64 + 0.5) * h)).sum::<f64>() / PANELS as f64
+}
+
+// ---- stationary Poisson ---------------------------------------------------
+
+/// Stationary Poisson arrivals at a fixed rate — the pre-workload-subsystem
+/// serving behavior.
+#[derive(Clone, Debug)]
+pub struct Poisson {
+    rate: f64,
+}
+
+impl Poisson {
+    pub fn new(rate: f64) -> Poisson {
+        Poisson { rate: rate.max(0.0) }
+    }
+}
+
+impl TrafficModel for Poisson {
+    fn kind(&self) -> &'static str {
+        "poisson"
+    }
+    fn rate_at(&self, _t: f64) -> f64 {
+        self.rate
+    }
+    fn base_rate(&self) -> f64 {
+        self.rate
+    }
+    fn set_base_rate(&mut self, rate: f64) {
+        self.rate = rate.max(0.0);
+    }
+    fn sample_slot(&mut self, _t0: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>) -> f64 {
+        sample_poisson(self.rate, dt, rng, out, 0.0);
+        self.rate
+    }
+}
+
+// ---- diurnal (sinusoidal) modulation --------------------------------------
+
+/// Sinusoidally modulated Poisson process:
+/// `λ(t) = base · (1 + amplitude · sin(2π t / period + phase))`.
+/// `amplitude ∈ [0, 1]` keeps the rate non-negative without clipping.
+#[derive(Clone, Debug)]
+pub struct Diurnal {
+    base: f64,
+    pub amplitude: f64,
+    pub period: f64,
+    pub phase: f64,
+}
+
+impl Diurnal {
+    pub fn new(base: f64, amplitude: f64, period: f64, phase: f64) -> anyhow::Result<Diurnal> {
+        anyhow::ensure!(period > 0.0, "diurnal period must be positive");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&amplitude),
+            "diurnal amplitude must be in [0, 1]"
+        );
+        Ok(Diurnal {
+            base: base.max(0.0),
+            amplitude,
+            period,
+            phase,
+        })
+    }
+
+    fn shape(&self, t: f64) -> f64 {
+        let w = std::f64::consts::TAU / self.period;
+        (1.0 + self.amplitude * (w * t + self.phase).sin()).max(0.0)
+    }
+}
+
+impl TrafficModel for Diurnal {
+    fn kind(&self) -> &'static str {
+        "diurnal"
+    }
+    fn rate_at(&self, t: f64) -> f64 {
+        self.base * self.shape(t)
+    }
+    fn base_rate(&self) -> f64 {
+        self.base
+    }
+    fn set_base_rate(&mut self, rate: f64) {
+        self.base = rate.max(0.0);
+    }
+    fn sample_slot(&mut self, t0: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>) -> f64 {
+        let bound = self.base * (1.0 + self.amplitude);
+        sample_thinned(|t| self.rate_at(t), bound, t0, dt, rng, out);
+        avg_rate(|t| self.rate_at(t), t0, dt)
+    }
+}
+
+// ---- Markov-modulated Poisson process -------------------------------------
+
+/// Two-state MMPP: a background state at `base` and a burst state at
+/// `base · gain`, with exponentially distributed dwell times (means
+/// `dwell_base` / `dwell_burst` seconds). State persists across slots.
+#[derive(Clone, Debug)]
+pub struct Mmpp {
+    base: f64,
+    pub gain: f64,
+    pub dwell_base: f64,
+    pub dwell_burst: f64,
+    /// 0 = background, 1 = burst.
+    state: usize,
+    /// Time left in the current state; drawn lazily on first sample.
+    remaining: f64,
+    started: bool,
+}
+
+impl Mmpp {
+    pub fn new(base: f64, gain: f64, dwell_base: f64, dwell_burst: f64) -> anyhow::Result<Mmpp> {
+        anyhow::ensure!(gain > 0.0, "mmpp gain must be positive");
+        anyhow::ensure!(
+            dwell_base > 0.0 && dwell_burst > 0.0,
+            "mmpp dwell times must be positive"
+        );
+        Ok(Mmpp {
+            base: base.max(0.0),
+            gain,
+            dwell_base,
+            dwell_burst,
+            state: 0,
+            remaining: 0.0,
+            started: false,
+        })
+    }
+
+    fn state_rate(&self) -> f64 {
+        if self.state == 0 {
+            self.base
+        } else {
+            self.base * self.gain
+        }
+    }
+
+    fn dwell_mean(&self) -> f64 {
+        if self.state == 0 {
+            self.dwell_base
+        } else {
+            self.dwell_burst
+        }
+    }
+}
+
+impl TrafficModel for Mmpp {
+    fn kind(&self) -> &'static str {
+        "mmpp"
+    }
+    fn rate_at(&self, _t: f64) -> f64 {
+        self.state_rate()
+    }
+    fn base_rate(&self) -> f64 {
+        self.base
+    }
+    fn set_base_rate(&mut self, rate: f64) {
+        self.base = rate.max(0.0);
+    }
+    fn sample_slot(&mut self, _t0: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>) -> f64 {
+        if !self.started {
+            self.remaining = rng.exp(1.0 / self.dwell_mean());
+            self.started = true;
+        }
+        let mut t = 0.0;
+        let mut rate_time = 0.0;
+        while t < dt {
+            if self.remaining <= 0.0 {
+                self.state = 1 - self.state;
+                self.remaining = rng.exp(1.0 / self.dwell_mean());
+            }
+            let seg = self.remaining.min(dt - t);
+            let r = self.state_rate();
+            sample_poisson(r, seg, rng, out, t);
+            rate_time += r * seg;
+            self.remaining -= seg;
+            t += seg;
+        }
+        rate_time / dt
+    }
+}
+
+// ---- flash crowd ----------------------------------------------------------
+
+/// Flash-crowd spike: baseline until `start`, linear ramp to
+/// `base · peak` over `ramp` seconds, a `hold` plateau, then a linear decay
+/// back to baseline over `decay` seconds.
+#[derive(Clone, Debug)]
+pub struct FlashCrowd {
+    base: f64,
+    pub peak: f64,
+    pub start: f64,
+    pub ramp: f64,
+    pub hold: f64,
+    pub decay: f64,
+}
+
+impl FlashCrowd {
+    pub fn new(
+        base: f64,
+        peak: f64,
+        start: f64,
+        ramp: f64,
+        hold: f64,
+        decay: f64,
+    ) -> anyhow::Result<FlashCrowd> {
+        anyhow::ensure!(peak >= 1.0, "flash-crowd peak factor must be >= 1");
+        anyhow::ensure!(
+            start >= 0.0 && ramp > 0.0 && hold >= 0.0 && decay > 0.0,
+            "flash-crowd times must be non-negative (ramp/decay positive)"
+        );
+        Ok(FlashCrowd {
+            base: base.max(0.0),
+            peak,
+            start,
+            ramp,
+            hold,
+            decay,
+        })
+    }
+}
+
+impl TrafficModel for FlashCrowd {
+    fn kind(&self) -> &'static str {
+        "flash-crowd"
+    }
+    fn rate_at(&self, t: f64) -> f64 {
+        let peak = self.base * self.peak;
+        let t1 = self.start;
+        let t2 = t1 + self.ramp;
+        let t3 = t2 + self.hold;
+        let t4 = t3 + self.decay;
+        if t < t1 || t >= t4 {
+            self.base
+        } else if t < t2 {
+            self.base + (peak - self.base) * (t - t1) / self.ramp
+        } else if t < t3 {
+            peak
+        } else {
+            peak - (peak - self.base) * (t - t3) / self.decay
+        }
+    }
+    fn base_rate(&self) -> f64 {
+        self.base
+    }
+    fn set_base_rate(&mut self, rate: f64) {
+        self.base = rate.max(0.0);
+    }
+    fn sample_slot(&mut self, t0: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>) -> f64 {
+        let bound = self.base * self.peak;
+        sample_thinned(|t| self.rate_at(t), bound, t0, dt, rng, out);
+        avg_rate(|t| self.rate_at(t), t0, dt)
+    }
+}
+
+// ---- linear drift ---------------------------------------------------------
+
+/// Linear rate drift: `λ(t) = base · max(0, 1 + slope · t)` — slow secular
+/// growth (or decline) that exercises the EWMA tracking loop without any
+/// abrupt change point.
+#[derive(Clone, Debug)]
+pub struct Drift {
+    base: f64,
+    pub slope: f64,
+}
+
+impl Drift {
+    pub fn new(base: f64, slope: f64) -> Drift {
+        Drift {
+            base: base.max(0.0),
+            slope,
+        }
+    }
+}
+
+impl TrafficModel for Drift {
+    fn kind(&self) -> &'static str {
+        "drift"
+    }
+    fn rate_at(&self, t: f64) -> f64 {
+        self.base * (1.0 + self.slope * t).max(0.0)
+    }
+    fn base_rate(&self) -> f64 {
+        self.base
+    }
+    fn set_base_rate(&mut self, rate: f64) {
+        self.base = rate.max(0.0);
+    }
+    fn sample_slot(&mut self, t0: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>) -> f64 {
+        // the rate is monotone on the slot, so the larger endpoint dominates
+        let bound = self.rate_at(t0).max(self.rate_at(t0 + dt));
+        sample_thinned(|t| self.rate_at(t), bound, t0, dt, rng, out);
+        avg_rate(|t| self.rate_at(t), t0, dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<M: TrafficModel>(model: &mut M, slots: usize, dt: f64, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..slots)
+            .map(|s| {
+                let mut out = Vec::new();
+                model.sample_slot(s as f64 * dt, dt, &mut rng, &mut out);
+                out
+            })
+            .collect()
+    }
+
+    #[test]
+    fn poisson_mean_count_matches_rate() {
+        let mut m = Poisson::new(3.0);
+        let slots = drain(&mut m, 4000, 1.0, 11);
+        let total: usize = slots.iter().map(Vec::len).sum();
+        let mean = total as f64 / 4000.0;
+        assert!((mean - 3.0).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn offsets_are_sorted_and_in_slot() {
+        let mut m = Diurnal::new(4.0, 0.8, 24.0, 0.0).unwrap();
+        for slot in drain(&mut m, 200, 1.0, 5) {
+            for w in slot.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            assert!(slot.iter().all(|&t| (0.0..1.0).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn diurnal_modulates_rate() {
+        let m = Diurnal::new(2.0, 0.5, 20.0, 0.0).unwrap();
+        assert!((m.rate_at(5.0) - 3.0).abs() < 1e-12); // peak of sin at T/4
+        assert!((m.rate_at(15.0) - 1.0).abs() < 1e-12); // trough at 3T/4
+        // empirical rate over one period ≈ base
+        let mut m2 = m.clone();
+        let slots = drain(&mut m2, 4000, 1.0, 9);
+        let mean = slots.iter().map(Vec::len).sum::<usize>() as f64 / 4000.0;
+        assert!((mean - 2.0).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn mmpp_visits_both_states_and_mean_is_mixture() {
+        let mut m = Mmpp::new(1.0, 5.0, 8.0, 4.0).unwrap();
+        let mut rng = Rng::new(3);
+        let mut rates = Vec::new();
+        for s in 0..4000 {
+            let mut out = Vec::new();
+            rates.push(m.sample_slot(s as f64, 1.0, &mut rng, &mut out));
+        }
+        let lo = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rates.iter().cloned().fold(0.0, f64::max);
+        assert!(lo < 1.5 && hi > 3.5, "state mix not visited: lo {lo} hi {hi}");
+        // stationary mixture: dwell 8 in base, 4 in burst -> E λ = (8·1 + 4·5)/12
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        let expect = (8.0 + 4.0 * 5.0) / 12.0;
+        assert!((mean - expect).abs() < 0.4, "mean {mean} vs {expect}");
+    }
+
+    #[test]
+    fn flash_crowd_profile_shape() {
+        let m = FlashCrowd::new(1.0, 6.0, 10.0, 5.0, 10.0, 5.0).unwrap();
+        assert_eq!(m.rate_at(0.0), 1.0);
+        assert!((m.rate_at(12.5) - 3.5).abs() < 1e-12); // mid-ramp
+        assert_eq!(m.rate_at(20.0), 6.0); // plateau
+        assert_eq!(m.rate_at(40.0), 1.0); // recovered
+    }
+
+    #[test]
+    fn drift_grows_linearly_and_clamps() {
+        let m = Drift::new(2.0, 0.1);
+        assert!((m.rate_at(10.0) - 4.0).abs() < 1e-12);
+        let d = Drift::new(2.0, -0.1);
+        assert_eq!(d.rate_at(100.0), 0.0);
+    }
+
+    #[test]
+    fn models_are_bit_deterministic_per_seed() {
+        let a = drain(&mut Mmpp::new(2.0, 4.0, 8.0, 4.0).unwrap(), 60, 1.0, 77);
+        let b = drain(&mut Mmpp::new(2.0, 4.0, 8.0, 4.0).unwrap(), 60, 1.0, 77);
+        assert_eq!(a, b);
+        let c = drain(&mut Diurnal::new(2.0, 0.8, 24.0, 0.0).unwrap(), 60, 1.0, 77);
+        let d = drain(&mut Diurnal::new(2.0, 0.8, 24.0, 0.0).unwrap(), 60, 1.0, 77);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn true_rate_reported_matches_shape_average() {
+        let mut m = FlashCrowd::new(1.0, 6.0, 0.0, 10.0, 0.0, 10.0).unwrap();
+        let mut rng = Rng::new(1);
+        let mut out = Vec::new();
+        // slot [0,1): ramp from 1.0, slope (6-1)/10 = 0.5/s -> avg ≈ 1.25
+        let r = m.sample_slot(0.0, 1.0, &mut rng, &mut out);
+        assert!((r - 1.25).abs() < 0.01, "avg {r}");
+    }
+}

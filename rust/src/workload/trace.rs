@@ -1,0 +1,614 @@
+//! Versioned workload traces: record any [`Workload`] to a file, replay it
+//! bit-identically.
+//!
+//! A trace captures, per slot and per (app, node) stream, the exact arrival
+//! offsets the workload produced *and* the true mean rate it reported — so a
+//! replayed trace reproduces both the served arrivals and the omniscient
+//! regret reference exactly. Two on-disk formats share the schema:
+//!
+//! * **JSON** (`.json`) — the canonical format, version-tagged;
+//! * **CSV** (anything else, canonically `.csv`) — a line-oriented format
+//!   for spreadsheet-style inspection, with `scfo-trace,<version>` as its
+//!   first line.
+//!
+//! Versioning rules (see `docs/WORKLOADS.md`): readers accept exactly the
+//! versions they know (currently [`TRACE_VERSION`]) and reject anything
+//! newer; fields may be *added* within a version only if absent means "not
+//! recorded". Both serializers round-trip `f64` values losslessly (Rust's
+//! shortest-round-trip float formatting), which is what makes
+//! record-then-replay bit-identical.
+
+use crate::config::Scenario;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::models::TrafficModel;
+use crate::workload::Workload;
+
+/// Current trace format version (JSON `version` field / CSV magic line).
+pub const TRACE_VERSION: u64 = 1;
+
+/// Identity of one recorded stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceStream {
+    pub app: usize,
+    pub node: usize,
+    /// Kind tag of the model that generated the stream (`"diurnal"`, …).
+    pub model: String,
+    /// The base rate the model was scaled around when recorded.
+    pub base_rate: f64,
+}
+
+/// One slot of recorded data across all streams.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TraceSlot {
+    /// True mean rate per stream over this slot.
+    pub rates: Vec<f64>,
+    /// Arrival offsets within the slot, per stream, ascending.
+    pub arrivals: Vec<Vec<f64>>,
+}
+
+/// A recorded workload: header + per-slot arrivals and true rates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub slot_secs: f64,
+    /// The scenario the trace was recorded against, if known — makes
+    /// `scfo trace replay` self-contained (it rebuilds the same network).
+    pub scenario: Option<Scenario>,
+    pub streams: Vec<TraceStream>,
+    pub slots: Vec<TraceSlot>,
+}
+
+impl Trace {
+    /// Sample `slots` slots from `workload` and capture everything needed
+    /// for bit-identical replay.
+    pub fn record(workload: &mut Workload, slots: usize, scenario: Option<&Scenario>) -> Trace {
+        let streams = workload
+            .streams
+            .iter()
+            .map(|s| TraceStream {
+                app: s.app,
+                node: s.node,
+                model: s.model_kind().to_string(),
+                base_rate: s.base_rate(),
+            })
+            .collect();
+        let mut out = Trace {
+            slot_secs: workload.slot_secs,
+            scenario: scenario.cloned(),
+            streams,
+            slots: Vec::with_capacity(slots),
+        };
+        for _ in 0..slots {
+            workload.sample_slot();
+            out.slots.push(TraceSlot {
+                rates: workload.streams.iter().map(|s| s.last_rate).collect(),
+                arrivals: workload
+                    .streams
+                    .iter()
+                    .map(|s| s.last_offsets.clone())
+                    .collect(),
+            });
+        }
+        out
+    }
+
+    /// Number of recorded slots.
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Build a [`Workload`] that replays this trace (cyclically past its
+    /// end). Arrival offsets and true rates reproduce the recording exactly.
+    pub fn workload(&self) -> Workload {
+        let streams = self
+            .streams
+            .iter()
+            .enumerate()
+            .map(|(idx, st)| {
+                let arrivals = self.slots.iter().map(|sl| sl.arrivals[idx].clone()).collect();
+                let rates = self.slots.iter().map(|sl| sl.rates[idx]).collect();
+                crate::workload::Stream::new(
+                    st.app,
+                    st.node,
+                    Box::new(TraceModel::new(st.base_rate, arrivals, rates)),
+                    Rng::new(0), // a trace consumes no randomness
+                )
+            })
+            .collect();
+        Workload::from_streams(self.slot_secs, streams, Rng::new(0))
+    }
+
+    /// Per-stream summary statistics (for `scfo trace stats`).
+    pub fn stats(&self) -> Vec<TraceStreamStats> {
+        self.streams
+            .iter()
+            .enumerate()
+            .map(|(idx, st)| {
+                let counts: Vec<f64> = self
+                    .slots
+                    .iter()
+                    .map(|sl| sl.arrivals[idx].len() as f64)
+                    .collect();
+                let total: f64 = counts.iter().sum();
+                let mean = crate::util::stats::mean(&counts);
+                let sd = crate::util::stats::stddev(&counts);
+                let dispersion = if mean > 0.0 { sd * sd / mean } else { 0.0 };
+                let peak_rate = self
+                    .slots
+                    .iter()
+                    .map(|sl| sl.rates[idx])
+                    .fold(0.0, f64::max);
+                TraceStreamStats {
+                    app: st.app,
+                    node: st.node,
+                    model: st.model.clone(),
+                    arrivals: total as u64,
+                    mean_rate: if self.slots.is_empty() {
+                        0.0
+                    } else {
+                        total / (self.slots.len() as f64 * self.slot_secs)
+                    },
+                    peak_rate,
+                    dispersion,
+                }
+            })
+            .collect()
+    }
+
+    // ---- JSON -------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let streams = Json::Arr(
+            self.streams
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("app", Json::Num(s.app as f64)),
+                        ("node", Json::Num(s.node as f64)),
+                        ("model", Json::Str(s.model.clone())),
+                        ("base_rate", Json::Num(s.base_rate)),
+                    ])
+                })
+                .collect(),
+        );
+        let slots = Json::Arr(
+            self.slots
+                .iter()
+                .map(|sl| {
+                    Json::obj(vec![
+                        ("rates", Json::arr_f64(&sl.rates)),
+                        (
+                            "arrivals",
+                            Json::Arr(sl.arrivals.iter().map(|a| Json::arr_f64(a)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let mut pairs = vec![
+            ("version", Json::Num(TRACE_VERSION as f64)),
+            ("slot_secs", Json::Num(self.slot_secs)),
+            ("streams", streams),
+            ("slot_data", slots),
+        ];
+        if let Some(sc) = &self.scenario {
+            pairs.push(("scenario", sc.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Trace> {
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("trace: missing 'version'"))?;
+        anyhow::ensure!(
+            version as u64 == TRACE_VERSION,
+            "trace version {version} unsupported (this build reads v{TRACE_VERSION})"
+        );
+        let slot_secs = v
+            .get("slot_secs")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("trace: missing 'slot_secs'"))?;
+        anyhow::ensure!(slot_secs > 0.0, "trace: slot_secs must be positive");
+        let scenario = match v.get("scenario") {
+            Some(sc) => Some(Scenario::from_json(sc)?),
+            None => None,
+        };
+        let mut streams = Vec::new();
+        for s in v
+            .get("streams")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace: missing 'streams'"))?
+        {
+            streams.push(TraceStream {
+                app: s
+                    .get("app")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("trace stream: missing 'app'"))?,
+                node: s
+                    .get("node")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("trace stream: missing 'node'"))?,
+                model: s
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                base_rate: s.get("base_rate").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        let mut slots = Vec::new();
+        for sl in v
+            .get("slot_data")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace: missing 'slot_data'"))?
+        {
+            // strict: a non-numeric entry is a corrupted trace, not data to
+            // skip — silent drops would break the bit-identical-replay
+            // contract without a diagnostic
+            let f64_arr = |v: &[Json], what: &str| -> anyhow::Result<Vec<f64>> {
+                v.iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("trace slot: non-numeric {what} entry"))
+                    })
+                    .collect()
+            };
+            let rates = f64_arr(
+                sl.get("rates")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("trace slot: missing 'rates'"))?,
+                "rate",
+            )?;
+            let mut arrivals = Vec::new();
+            for a in sl
+                .get("arrivals")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("trace slot: missing 'arrivals'"))?
+            {
+                arrivals.push(f64_arr(
+                    a.as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("trace slot: arrivals must be arrays"))?,
+                    "arrival",
+                )?);
+            }
+            anyhow::ensure!(
+                rates.len() == streams.len() && arrivals.len() == streams.len(),
+                "trace slot: stream count mismatch"
+            );
+            slots.push(TraceSlot { rates, arrivals });
+        }
+        Ok(Trace {
+            slot_secs,
+            scenario,
+            streams,
+            slots,
+        })
+    }
+
+    // ---- CSV --------------------------------------------------------------
+
+    pub fn to_csv(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "scfo-trace,{TRACE_VERSION}");
+        let _ = writeln!(out, "slot_secs,{}", self.slot_secs);
+        let _ = writeln!(out, "slots,{}", self.slots.len());
+        if let Some(sc) = &self.scenario {
+            let compact = sc.to_json().to_string();
+            let _ = writeln!(out, "# scenario {compact}");
+        }
+        for (idx, s) in self.streams.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "stream,{idx},{},{},{},{}",
+                s.app, s.node, s.model, s.base_rate
+            );
+        }
+        for (slot, sl) in self.slots.iter().enumerate() {
+            for (idx, r) in sl.rates.iter().enumerate() {
+                let _ = writeln!(out, "rate,{slot},{idx},{r}");
+            }
+            for (idx, arrs) in sl.arrivals.iter().enumerate() {
+                for t in arrs {
+                    let _ = writeln!(out, "arr,{slot},{idx},{t}");
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_csv(text: &str) -> anyhow::Result<Trace> {
+        let mut lines = text.lines().enumerate();
+        let (_, magic) = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("trace csv: empty file"))?;
+        let version: u64 = magic
+            .strip_prefix("scfo-trace,")
+            .and_then(|v| v.trim().parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("trace csv: bad magic line '{magic}'"))?;
+        anyhow::ensure!(
+            version == TRACE_VERSION,
+            "trace version {version} unsupported (this build reads v{TRACE_VERSION})"
+        );
+        let mut slot_secs = 1.0;
+        let mut num_slots = 0usize;
+        let mut scenario = None;
+        let mut streams: Vec<TraceStream> = Vec::new();
+        let mut slots: Vec<TraceSlot> = Vec::new();
+        for (lineno, raw) in lines {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                if let Some(sc) = rest.trim().strip_prefix("scenario ") {
+                    scenario = Some(Scenario::from_json(&Json::parse(sc.trim())?)?);
+                }
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            let err = |msg: &str| anyhow::anyhow!("trace csv line {}: {msg}", lineno + 1);
+            let parse_f = |s: &str, msg: &'static str| -> anyhow::Result<f64> {
+                s.trim().parse().map_err(|_| err(msg))
+            };
+            let parse_u = |s: &str, msg: &'static str| -> anyhow::Result<usize> {
+                s.trim().parse().map_err(|_| err(msg))
+            };
+            match fields[0] {
+                "slot_secs" => {
+                    anyhow::ensure!(fields.len() == 2, err("slot_secs needs 1 value"));
+                    slot_secs = parse_f(fields[1], "bad slot_secs")?;
+                }
+                "slots" => {
+                    anyhow::ensure!(fields.len() == 2, err("slots needs 1 value"));
+                    num_slots = parse_u(fields[1], "bad slot count")?;
+                    slots = vec![TraceSlot::default(); num_slots];
+                }
+                "stream" => {
+                    anyhow::ensure!(fields.len() == 6, err("stream needs 5 values"));
+                    let idx = parse_u(fields[1], "bad stream index")?;
+                    anyhow::ensure!(idx == streams.len(), err("stream indices must be dense"));
+                    streams.push(TraceStream {
+                        app: parse_u(fields[2], "bad app")?,
+                        node: parse_u(fields[3], "bad node")?,
+                        model: fields[4].trim().to_string(),
+                        base_rate: parse_f(fields[5], "bad base_rate")?,
+                    });
+                    for sl in &mut slots {
+                        sl.rates.push(0.0);
+                        sl.arrivals.push(Vec::new());
+                    }
+                }
+                "rate" => {
+                    anyhow::ensure!(fields.len() == 4, err("rate needs 3 values"));
+                    let slot = parse_u(fields[1], "bad slot")?;
+                    let idx = parse_u(fields[2], "bad stream")?;
+                    anyhow::ensure!(slot < num_slots && idx < streams.len(), err("rate out of range"));
+                    slots[slot].rates[idx] = parse_f(fields[3], "bad rate")?;
+                }
+                "arr" => {
+                    anyhow::ensure!(fields.len() == 4, err("arr needs 3 values"));
+                    let slot = parse_u(fields[1], "bad slot")?;
+                    let idx = parse_u(fields[2], "bad stream")?;
+                    anyhow::ensure!(slot < num_slots && idx < streams.len(), err("arr out of range"));
+                    slots[slot].arrivals[idx].push(parse_f(fields[3], "bad offset")?);
+                }
+                other => anyhow::bail!("trace csv line {}: unknown record '{other}'", lineno + 1),
+            }
+        }
+        anyhow::ensure!(slot_secs > 0.0, "trace csv: slot_secs must be positive");
+        Ok(Trace {
+            slot_secs,
+            scenario,
+            streams,
+            slots,
+        })
+    }
+
+    // ---- file I/O (format by extension) ------------------------------------
+
+    /// Write the trace to `path` — `.json` for JSON, anything else CSV.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let text = if is_json(path) {
+            self.to_json().to_string_pretty()
+        } else {
+            self.to_csv()
+        };
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))
+    }
+
+    /// Read a trace from `path` — `.json` parsed as JSON, anything else CSV.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        if is_json(path) {
+            Trace::from_json(&Json::parse(&text)?)
+        } else {
+            Trace::from_csv(&text)
+        }
+    }
+}
+
+fn is_json(path: &std::path::Path) -> bool {
+    path.extension()
+        .and_then(|e| e.to_str())
+        .map(|e| e.eq_ignore_ascii_case("json"))
+        .unwrap_or(false)
+}
+
+/// Per-stream trace summary (for `scfo trace stats`).
+#[derive(Clone, Debug)]
+pub struct TraceStreamStats {
+    pub app: usize,
+    pub node: usize,
+    pub model: String,
+    pub arrivals: u64,
+    /// Empirical mean arrival rate over the whole trace (req/s).
+    pub mean_rate: f64,
+    /// Largest recorded per-slot true rate.
+    pub peak_rate: f64,
+    /// Index of dispersion of per-slot counts (variance/mean; 1 ≈ Poisson,
+    /// > 1 bursty).
+    pub dispersion: f64,
+}
+
+/// Replays one recorded stream. Consumes no randomness; replay past the end
+/// wraps around (cyclic), so a short trace can drive a long serve.
+#[derive(Clone, Debug)]
+pub struct TraceModel {
+    base: f64,
+    arrivals: Vec<Vec<f64>>,
+    rates: Vec<f64>,
+    cursor: usize,
+}
+
+impl TraceModel {
+    pub fn new(base: f64, arrivals: Vec<Vec<f64>>, rates: Vec<f64>) -> TraceModel {
+        debug_assert_eq!(arrivals.len(), rates.len());
+        TraceModel {
+            base,
+            arrivals,
+            rates,
+            cursor: 0,
+        }
+    }
+}
+
+impl TrafficModel for TraceModel {
+    fn kind(&self) -> &'static str {
+        "trace"
+    }
+    fn rate_at(&self, _t: f64) -> f64 {
+        if self.rates.is_empty() {
+            0.0
+        } else {
+            // same cyclic position sample_slot would play next
+            self.rates[self.cursor % self.rates.len()]
+        }
+    }
+    fn base_rate(&self) -> f64 {
+        self.base
+    }
+    fn set_base_rate(&mut self, _rate: f64) {
+        // a trace is immutable history; rate changes are meaningless here
+    }
+    fn sample_slot(&mut self, _t0: f64, _dt: f64, _rng: &mut Rng, out: &mut Vec<f64>) -> f64 {
+        if self.rates.is_empty() {
+            return 0.0;
+        }
+        let i = self.cursor % self.rates.len();
+        out.extend_from_slice(&self.arrivals[i]);
+        self.cursor += 1;
+        self.rates[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::small_net;
+    use crate::workload::{ModelSpec, WorkloadSpec};
+
+    fn sample_workload() -> Workload {
+        let spec = WorkloadSpec::uniform(ModelSpec::Diurnal {
+            period: 24.0,
+            amplitude: 0.8,
+            phase: 0.0,
+        });
+        Workload::from_spec(&spec, &small_net(true), 1.0, 42).unwrap()
+    }
+
+    #[test]
+    fn record_then_replay_is_bit_identical() {
+        let mut wl = sample_workload();
+        let trace = Trace::record(&mut wl, 30, None);
+        // a fresh, identically-seeded workload reproduces the trace
+        let mut wl2 = sample_workload();
+        let trace2 = Trace::record(&mut wl2, 30, None);
+        assert_eq!(trace, trace2);
+        // and replaying the trace reproduces arrivals + rates exactly
+        let mut replay = trace.workload();
+        for sl in &trace.slots {
+            replay.sample_slot();
+            for (idx, s) in replay.streams.iter().enumerate() {
+                assert_eq!(s.last_offsets, sl.arrivals[idx]);
+                assert_eq!(s.last_rate, sl.rates[idx]);
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut wl = sample_workload();
+        let trace = Trace::record(&mut wl, 12, None);
+        let text = trace.to_json().to_string_pretty();
+        let re = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(trace, re);
+    }
+
+    #[test]
+    fn csv_roundtrip_is_exact() {
+        let mut wl = sample_workload();
+        let trace = Trace::record(&mut wl, 12, None);
+        let re = Trace::from_csv(&trace.to_csv()).unwrap();
+        assert_eq!(trace, re);
+    }
+
+    #[test]
+    fn scenario_header_survives_both_formats() {
+        let sc = Scenario::table2("abilene").unwrap();
+        let mut wl = sample_workload();
+        let trace = Trace::record(&mut wl, 3, Some(&sc));
+        let j = Trace::from_json(&Json::parse(&trace.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(j.scenario.as_ref().unwrap().topology, "abilene");
+        let c = Trace::from_csv(&trace.to_csv()).unwrap();
+        assert_eq!(c.scenario.as_ref().unwrap().topology, "abilene");
+    }
+
+    #[test]
+    fn rejects_future_versions() {
+        let mut wl = sample_workload();
+        let trace = Trace::record(&mut wl, 2, None);
+        let mut v = trace.to_json();
+        if let Json::Obj(o) = &mut v {
+            o.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(Trace::from_json(&v).is_err());
+        let csv = trace.to_csv().replacen("scfo-trace,1", "scfo-trace,99", 1);
+        assert!(Trace::from_csv(&csv).is_err());
+    }
+
+    #[test]
+    fn replay_wraps_cyclically() {
+        let mut wl = sample_workload();
+        let trace = Trace::record(&mut wl, 5, None);
+        let mut replay = trace.workload();
+        for _ in 0..5 {
+            replay.sample_slot();
+        }
+        replay.sample_slot(); // slot 5 replays slot 0
+        for (idx, s) in replay.streams.iter().enumerate() {
+            assert_eq!(s.last_offsets, trace.slots[0].arrivals[idx]);
+        }
+    }
+
+    #[test]
+    fn stats_report_burstiness() {
+        let spec = WorkloadSpec::uniform(ModelSpec::Mmpp {
+            gain: 6.0,
+            dwell_base: 8.0,
+            dwell_burst: 4.0,
+        });
+        let mut wl = Workload::from_spec(&spec, &small_net(true), 1.0, 7).unwrap();
+        let trace = Trace::record(&mut wl, 400, None);
+        let stats = trace.stats();
+        assert_eq!(stats.len(), 2); // small_net has two sources
+        for st in &stats {
+            assert!(st.arrivals > 0);
+            assert!(st.dispersion > 1.2, "MMPP should be over-dispersed: {st:?}");
+        }
+    }
+}

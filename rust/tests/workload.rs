@@ -1,0 +1,162 @@
+//! Workload-subsystem integration tests: model determinism (property),
+//! trace record → replay fidelity through the full serving loop, and the
+//! adaptation controller's stationary null behavior.
+
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::config::Scenario;
+use scfo::prop_assert;
+use scfo::serving::{
+    AdaptationController, ControllerOptions, OnlineServer, ServerOptions,
+};
+use scfo::util::prop::forall;
+use scfo::util::rng::Rng;
+use scfo::workload::{ModelSpec, Trace, Workload, WorkloadSpec};
+
+fn test_net() -> scfo::app::Network {
+    let sc = Scenario::table2("abilene").unwrap();
+    let mut rng = Rng::new(sc.seed);
+    sc.build(&mut rng).unwrap()
+}
+
+/// Per slot, per stream: (arrival offsets, true mean rate).
+type Drained = Vec<Vec<(Vec<f64>, f64)>>;
+
+/// Sample `slots` slots and return (offsets, true rates) per slot per stream.
+fn drain(wl: &mut Workload, slots: usize) -> Drained {
+    (0..slots)
+        .map(|_| {
+            wl.sample_slot();
+            wl.streams
+                .iter()
+                .map(|s| (s.last_offsets.clone(), s.last_rate))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn every_model_is_bit_deterministic_and_trace_faithful() {
+    let net = test_net();
+    forall("workload determinism", 20, |g| {
+        let spec = WorkloadSpec::uniform(match g.usize_in(0, 4) {
+            0 => ModelSpec::Poisson,
+            1 => ModelSpec::Diurnal {
+                period: g.f64_in(4.0, 50.0),
+                amplitude: g.f64_in(0.0, 1.0),
+                phase: g.f64_in(0.0, 6.28),
+            },
+            2 => ModelSpec::Mmpp {
+                gain: g.f64_in(1.5, 8.0),
+                dwell_base: g.f64_in(1.0, 20.0),
+                dwell_burst: g.f64_in(1.0, 10.0),
+            },
+            3 => ModelSpec::FlashCrowd {
+                peak: g.f64_in(1.5, 10.0),
+                start: g.f64_in(0.0, 20.0),
+                ramp: g.f64_in(0.5, 10.0),
+                hold: g.f64_in(0.0, 10.0),
+                decay: g.f64_in(0.5, 10.0),
+            },
+            _ => ModelSpec::Drift {
+                slope: g.f64_in(-0.01, 0.05),
+            },
+        });
+        let seed = g.rng().next_u64();
+        // 1. equal seeds → bit-identical arrival sequences
+        let mut w1 = Workload::from_spec(&spec, &net, 1.0, seed).unwrap();
+        let mut w2 = Workload::from_spec(&spec, &net, 1.0, seed).unwrap();
+        let (a, b) = (drain(&mut w1, 25), drain(&mut w2, 25));
+        prop_assert!(g, a == b, "model {} not deterministic", spec.model.kind());
+        // 2. recorded-then-replayed traces reproduce the arrivals exactly
+        let mut w3 = Workload::from_spec(&spec, &net, 1.0, seed).unwrap();
+        let trace = Trace::record(&mut w3, 25, None);
+        let mut replayed = trace.workload();
+        let c = drain(&mut replayed, 25);
+        prop_assert!(g, a == c, "trace replay diverges for {}", spec.model.kind());
+        true
+    });
+}
+
+#[test]
+fn trace_files_roundtrip_in_both_formats() {
+    let net = test_net();
+    let spec = WorkloadSpec::named("mmpp").unwrap();
+    let mut wl = Workload::from_spec(&spec, &net, 1.0, 17).unwrap();
+    let sc = Scenario::table2("abilene").unwrap();
+    let trace = Trace::record(&mut wl, 40, Some(&sc));
+
+    let dir = std::env::temp_dir().join(format!("scfo-trace-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in ["t.json", "t.csv"] {
+        let path = dir.join(name);
+        trace.save(&path).unwrap();
+        let re = Trace::load(&path).unwrap();
+        assert_eq!(trace, re, "{name} round trip must be lossless");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recorded_trace_replays_to_bit_identical_serving_results() {
+    let net = test_net();
+    let wspec = WorkloadSpec::named("diurnal").unwrap();
+    let serve = |wl: Workload| -> Vec<f64> {
+        let gp = GradientProjection::new(&net, GpOptions::default());
+        let mut srv = OnlineServer::with_workload(net.clone(), gp, wl, ServerOptions::default());
+        srv.run(60).unwrap().iter().map(|m| m.cost).collect()
+    };
+    // serve the live model
+    let live = serve(Workload::from_spec(&wspec, &net, 1.0, 33).unwrap());
+    // record the identically-seeded model, then serve the trace instead
+    let mut rec = Workload::from_spec(&wspec, &net, 1.0, 33).unwrap();
+    let trace = Trace::record(&mut rec, 60, None);
+    let replayed = serve(trace.workload());
+    assert_eq!(
+        live, replayed,
+        "trace-driven serving must be bit-identical to the live model"
+    );
+    // ... and so must a second replay of the same trace
+    let again = serve(trace.workload());
+    assert_eq!(replayed, again);
+}
+
+#[test]
+fn controller_is_silent_under_stationary_poisson_and_cost_converges() {
+    let net = test_net();
+    let gp = GradientProjection::new(&net, GpOptions::default());
+    let mut srv = OnlineServer::new(net.clone(), gp, ServerOptions::default());
+    srv.attach_controller(AdaptationController::new(ControllerOptions::default()));
+    let metrics = srv.run(150).unwrap();
+    let summary = srv.controller.as_ref().unwrap().summary();
+    assert_eq!(
+        summary.detections, 0,
+        "controller fired under stationary Poisson traffic"
+    );
+    assert_eq!(summary.reconverge_mean, 0.0);
+    // the served cost approaches the offline clairvoyant GP optimum
+    let mut offline = GradientProjection::new(&net, GpOptions::default());
+    let opt = offline.run(&net, 2000).final_cost;
+    let served = metrics.last().unwrap().cost;
+    assert!(
+        served <= opt * 1.15,
+        "served cost {served} vs offline optimum {opt}"
+    );
+    // regret is positive early (cold start) but defined every slot
+    assert!(summary.regret_total > 0.0);
+    assert!(metrics.iter().all(|m| m.regret.unwrap().is_finite()));
+}
+
+#[test]
+fn nonstationary_workload_triggers_detection_with_nonzero_metrics() {
+    let net = test_net();
+    let wl = Workload::from_spec(&WorkloadSpec::named("flash-crowd").unwrap(), &net, 1.0, 5)
+        .unwrap();
+    let gp = GradientProjection::new(&net, GpOptions::default());
+    let mut srv = OnlineServer::with_workload(net, gp, wl, ServerOptions::default());
+    srv.attach_controller(AdaptationController::new(ControllerOptions::default()));
+    srv.run(90).unwrap();
+    let summary = srv.controller.as_ref().unwrap().summary();
+    assert!(summary.detections >= 1, "flash crowd must be detected");
+    assert!(summary.regret_mean > 0.0);
+    assert!(summary.reconverge_mean >= 1.0);
+}
