@@ -1,15 +1,15 @@
-//! The Section-IV distributed runtime, for real: one thread per network
-//! node, marginal-cost broadcast over channels, per-node GP updates — plus
-//! fault injection on the peer message plane.
+//! The asynchronous sharded distributed runtime, for real: node actors
+//! sharded across worker threads, exchanging versioned marginal broadcasts
+//! through a virtual-time transport, with no global round barrier — and a
+//! deterministic chaos run on top.
 //!
 //! ```bash
 //! cargo run --release --example distributed_broadcast
 //! ```
 
-use std::time::Duration;
-
+use scfo::algo::gp::{GpOptions, GradientProjection};
 use scfo::config::Scenario;
-use scfo::distributed::{Cluster, ClusterOptions, LossyConfig};
+use scfo::distributed::{AsyncRuntime, FaultSpec, RuntimeOptions};
 use scfo::prelude::*;
 
 fn main() -> anyhow::Result<()> {
@@ -18,72 +18,61 @@ fn main() -> anyhow::Result<()> {
     let net = sc.build(&mut rng)?;
     let phi0 = Strategy::shortest_path_to_dest(&net);
 
-    println!("== reliable fabric: distributed == centralized ==");
-    let mut cluster = Cluster::spawn(
+    println!("== in-mem fabric: async runtime vs centralized GP ==");
+    let mut rt = AsyncRuntime::in_mem(
         net.clone(),
         phi0.clone(),
-        ClusterOptions {
-            alpha: 0.1,
-            adaptive: false, // bit-parity with the non-backtracking optimizer
-            ..Default::default()
+        RuntimeOptions {
+            shards: 4,
+            ..RuntimeOptions::default()
         },
     );
-    let mut gp = GradientProjection::with_strategy(
-        &net,
-        phi0.clone(),
-        GpOptions {
-            alpha: 0.1,
-            backtrack: false,
-            ..Default::default()
-        },
-    );
-    for slot in 0..40 {
-        let out = cluster.run_slot();
-        gp.step(&net);
-        let diff = cluster.phi.max_diff(&gp.phi);
-        if slot % 10 == 0 {
-            println!(
-                "  slot {slot:>3}: cost {:.4}  |distributed - centralized|_inf = {diff:.2e}",
-                out.cost
-            );
-        }
-        assert!(diff < 1e-9, "slot {slot} diverged by {diff}");
-    }
-    println!("  final cost {:.4}", cluster.cost());
-    let converged = cluster.phi.clone();
-    cluster.shutdown();
-
-    println!("== lossy fabric (2% peer-message drop): slots abort, never corrupt ==");
-    let mut cluster = Cluster::spawn(
-        net.clone(),
-        converged,
-        ClusterOptions {
-            alpha: 0.1,
-            slot_timeout: Duration::from_millis(250),
-            lossy: Some(LossyConfig {
-                drop_prob: 0.02,
-                seed: 11,
-            }),
-            adaptive: true,
-        },
-    );
-    let mut applied = 0;
-    let mut skipped = 0;
-    for _ in 0..30 {
-        let out = cluster.run_slot();
-        if out.applied {
-            applied += 1;
-        } else {
-            skipped += 1;
-        }
-        cluster.phi.validate(&net)?;
-        assert!(!cluster.phi.has_loop());
-    }
+    let rep = rt.run_until_quiescent();
+    let mut gp = GradientProjection::new(&net, GpOptions::default());
+    let central = gp.run(&net, 4000).final_cost;
     println!(
-        "  30 slots: {applied} applied, {skipped} skipped, {} peer msgs dropped, final cost {:.4}",
-        cluster.dropped_messages(),
-        cluster.cost()
+        "  quiesced after {} rounds ({} ticks): cost {:.6} vs centralized {:.6}",
+        rep.epochs, rep.ticks, rep.final_cost, central
     );
-    cluster.shutdown();
+    println!(
+        "  {} peer msgs ({} bytes), max queue depth {}, {} control msgs",
+        rep.stats.transport.sent,
+        rep.stats.transport.bytes_sent,
+        rep.stats.transport.max_queue_depth,
+        rep.stats.control_messages,
+    );
+
+    println!("\n== sim-net fabric: seeded chaos (lossy preset) ==");
+    let faults = FaultSpec::lossy(42);
+    let mut chaos = AsyncRuntime::sim_net(
+        net.clone(),
+        phi0,
+        faults,
+        RuntimeOptions {
+            shards: 4,
+            ..RuntimeOptions::default()
+        },
+    );
+    let crep = chaos.run_until_quiescent();
+    chaos.strategy().validate(&net)?;
+    assert!(!chaos.strategy().has_loop());
+    let t = &crep.stats.transport;
+    println!(
+        "  quiesced after {} rounds: cost {:.6} (gap to centralized {:.2e})",
+        crep.epochs,
+        crep.final_cost,
+        (crep.final_cost - central).abs() / (1.0 + central)
+    );
+    println!(
+        "  sent {} / delivered {} / dropped {} (fault {}, overflow {}), duplicated {}, stale reads {}",
+        t.sent,
+        t.delivered,
+        t.dropped_total(),
+        t.dropped_fault,
+        t.dropped_overflow,
+        t.duplicated,
+        crep.stats.stale_reads,
+    );
+    println!("  rerun with the same (seed, fault-spec) is bit-identical — see rust/tests/chaos.rs");
     Ok(())
 }

@@ -117,6 +117,29 @@ pub struct DynamicsBench {
     pub summary: crate::serving::AdaptationSummary,
 }
 
+/// Distributed-runtime measurements attached to a [`GpBenchResult`] when
+/// the bench drives the asynchronous sharded runtime
+/// (`scfo bench --json --distributed`). These are the BENCH.json v3
+/// columns: convergence wall-time, message count, max queue depth.
+#[derive(Clone, Debug)]
+pub struct DistributedBench {
+    pub shards: usize,
+    /// `in-mem` or `sim-net`.
+    pub transport: String,
+    /// Fault-spec name (`clean` / `lossy` / `partition` / custom).
+    pub faults: String,
+    /// Wall-clock seconds from spawn to quiescence (or budget exhaustion).
+    pub convergence_secs: f64,
+    pub converged: bool,
+    /// Measurement epochs ("rounds").
+    pub rounds: u64,
+    pub messages: usize,
+    pub bytes: u64,
+    pub max_queue_depth: usize,
+    pub dropped: usize,
+    pub stale_reads: u64,
+}
+
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
 /// trajectory and a peak-RSS proxy. Emitted into `BENCH.json` by
 /// `scfo bench --json`; schema documented in `docs/PERFORMANCE.md`.
@@ -145,6 +168,9 @@ pub struct GpBenchResult {
     pub peak_rss_bytes: Option<u64>,
     /// Present when the bench ran the serving loop under a workload.
     pub dynamics: Option<DynamicsBench>,
+    /// Present when the bench ran the asynchronous distributed runtime
+    /// (`iter_secs` is then the wall time per measurement epoch).
+    pub distributed: Option<DistributedBench>,
 }
 
 /// Peak resident-set high-water mark of this process (Linux `VmHWM`);
@@ -208,6 +234,101 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
         cost_trajectory,
         peak_rss_bytes: peak_rss_bytes(),
         dynamics: None,
+        distributed: None,
+    })
+}
+
+/// Distributed-runtime bench: run the named scenario through the
+/// asynchronous sharded runtime ([`crate::distributed::AsyncRuntime`]) with
+/// `shards` workers under the named fault preset (or a spec file path),
+/// until quiescence or `max_epochs`. `iter_secs` records the wall time per
+/// measurement epoch and `cost_trajectory` the measured cost per epoch; the
+/// result's `distributed` block carries the BENCH.json v3 columns
+/// (convergence wall-time, message count, max queue depth, ...).
+pub fn bench_distributed_scenario(
+    family: &str,
+    shards: usize,
+    faults: &crate::distributed::FaultSpec,
+    max_epochs: usize,
+) -> anyhow::Result<GpBenchResult> {
+    use crate::distributed::{AsyncRuntime, RuntimeOptions};
+    use crate::scenarios::{Congestion, ScenarioSpec, LARGE_FAMILIES};
+    use crate::strategy::Strategy;
+    use crate::util::rng::Rng;
+
+    // distributed-tier families get that tier's workload overrides, large
+    // families the large tier's; anything else the named defaults
+    let spec = if let Some(s) = ScenarioSpec::distributed_matrix()
+        .into_iter()
+        .find(|s| s.base.topology == family)
+    {
+        s
+    } else if LARGE_FAMILIES.contains(&family) {
+        ScenarioSpec::large_matrix()
+            .into_iter()
+            .find(|s| s.base.topology == family)
+            .expect("large_matrix covers every LARGE_FAMILIES entry")
+    } else {
+        ScenarioSpec::named(family, Congestion::Nominal)?
+    };
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    let t0 = Instant::now();
+    let net = sc.build(&mut rng)?;
+    let phi0 = Strategy::shortest_path_to_dest(&net);
+    let opts = RuntimeOptions {
+        shards,
+        max_epochs: max_epochs as u64,
+        ..RuntimeOptions::default()
+    };
+    let mut rt = if faults.is_clean() {
+        AsyncRuntime::in_mem(net.clone(), phi0, opts)
+    } else {
+        AsyncRuntime::sim_net(net.clone(), phi0, faults.clone(), opts)
+    };
+    let build_secs = t0.elapsed().as_secs_f64();
+
+    let run0 = Instant::now();
+    let mut iter_secs = Vec::new();
+    let mut cost_trajectory = Vec::new();
+    while rt.epoch() < max_epochs as u64 {
+        let t = Instant::now();
+        let cost = rt.run_epoch();
+        iter_secs.push(t.elapsed().as_secs_f64());
+        cost_trajectory.push(cost);
+        if rt.quiescent() {
+            break;
+        }
+    }
+    let final_cost = rt.refresh();
+    cost_trajectory.push(final_cost);
+    let convergence_secs = run0.elapsed().as_secs_f64();
+    let stats = rt.stats();
+
+    Ok(GpBenchResult {
+        name: family.to_string(),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs,
+        cost_trajectory,
+        peak_rss_bytes: peak_rss_bytes(),
+        dynamics: None,
+        distributed: Some(DistributedBench {
+            shards: stats.shards,
+            transport: stats.transport_name.clone(),
+            faults: faults.name.clone(),
+            convergence_secs,
+            converged: rt.quiescent(),
+            rounds: stats.epochs,
+            messages: stats.transport.sent,
+            bytes: stats.transport.bytes_sent,
+            max_queue_depth: stats.transport.max_queue_depth,
+            dropped: stats.transport.dropped_total(),
+            stale_reads: stats.stale_reads,
+        }),
     })
 }
 
@@ -280,6 +401,7 @@ pub fn bench_serving_scenario(
             slots,
             summary,
         }),
+        distributed: None,
     })
 }
 
@@ -333,6 +455,27 @@ impl GpBenchResult {
                 },
             ),
         ]);
+        if let Some(dist) = &self.distributed {
+            if let Json::Obj(o) = &mut doc {
+                o.insert("shards".into(), Json::Num(dist.shards as f64));
+                o.insert("transport".into(), Json::Str(dist.transport.clone()));
+                o.insert("faults".into(), Json::Str(dist.faults.clone()));
+                o.insert(
+                    "convergence_secs".into(),
+                    Json::Num(dist.convergence_secs),
+                );
+                o.insert("converged".into(), Json::Bool(dist.converged));
+                o.insert("rounds".into(), Json::Num(dist.rounds as f64));
+                o.insert("messages".into(), Json::Num(dist.messages as f64));
+                o.insert("bytes_sent".into(), Json::Num(dist.bytes as f64));
+                o.insert(
+                    "max_queue_depth".into(),
+                    Json::Num(dist.max_queue_depth as f64),
+                );
+                o.insert("dropped".into(), Json::Num(dist.dropped as f64));
+                o.insert("stale_reads".into(), Json::Num(dist.stale_reads as f64));
+            }
+        }
         if let Some(dyn_) = &self.dynamics {
             if let Json::Obj(o) = &mut doc {
                 o.insert("workload".into(), Json::Str(dyn_.workload.clone()));
@@ -358,8 +501,11 @@ impl GpBenchResult {
 }
 
 /// `BENCH.json` schema version: 2 added the optional serving-mode columns
-/// (`workload`, `slots`, `detections`, `regret_*`, `reconvergence_slots_*`).
-pub const BENCH_JSON_VERSION: f64 = 2.0;
+/// (`workload`, `slots`, `detections`, `regret_*`, `reconvergence_slots_*`);
+/// 3 added the optional distributed-runtime columns (`shards`, `transport`,
+/// `faults`, `convergence_secs`, `converged`, `rounds`, `messages`,
+/// `bytes_sent`, `max_queue_depth`, `dropped`, `stale_reads`).
+pub const BENCH_JSON_VERSION: f64 = 3.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
@@ -478,6 +624,28 @@ mod tests {
                 > 0.0
         );
         assert!(sc.get("detections").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    #[test]
+    fn distributed_bench_emits_v3_columns() {
+        let faults = crate::distributed::FaultSpec::lossy(3);
+        let res = bench_distributed_scenario("abilene", 2, &faults, 3000).unwrap();
+        let d = res.distributed.as_ref().expect("distributed block present");
+        assert!(d.converged, "abilene must quiesce within the budget");
+        assert!(d.rounds > 0 && d.messages > 0 && d.bytes > 0);
+        assert!(d.max_queue_depth > 0);
+        assert_eq!(res.iter_secs.len() as u64, d.rounds);
+        let doc = gp_bench_json(&[res]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(3.0));
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("transport").unwrap().as_str(), Some("sim-net"));
+        assert_eq!(sc.get("faults").unwrap().as_str(), Some("lossy"));
+        assert!(sc.get("convergence_secs").unwrap().as_f64().unwrap() > 0.0);
+        assert!(sc.get("messages").unwrap().as_usize().unwrap() > 0);
+        assert!(sc.get("max_queue_depth").unwrap().as_usize().unwrap() > 0);
+        assert!(sc.get("rounds").unwrap().as_usize().unwrap() > 0);
+        assert_eq!(sc.get("converged").unwrap().as_bool(), Some(true));
     }
 
     #[test]

@@ -18,9 +18,13 @@
 //!
 //! This module runs the protocol in a round-based single-process simulator
 //! with explicit [`Msg`] records (message/round accounting for the paper's
-//! complexity claims); [`crate::distributed`] runs the same protocol over
-//! real threads and channels. Both must agree exactly with the centralized
-//! recursion in [`crate::marginals`] — tested below.
+//! complexity claims — the ideal, barrier-synchronized reference).
+//! [`crate::distributed`] runs the *asynchronous* version of the same
+//! exchange: versioned marginal broadcasts over a fault-injectable
+//! transport, where nodes proceed on stale values instead of completing a
+//! round. Both must agree with the centralized recursion in
+//! [`crate::marginals`] at quiescence — tested below and in
+//! `rust/tests/chaos.rs`.
 
 use crate::app::Network;
 use crate::flow::FlowState;

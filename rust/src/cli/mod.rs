@@ -68,6 +68,14 @@ impl Args {
             None => Ok(default),
         }
     }
+    pub fn flag_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flag(name) {
+            Some(v) => Ok(v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))?),
+            None => Ok(default),
+        }
+    }
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -103,6 +111,14 @@ mod tests {
     fn equals_form() {
         let a = parse("bench --alpha=0.25");
         assert_eq!(a.flag_f64("alpha", 0.0).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn u64_flags() {
+        let a = parse("distributed run --seed 18446744073709551615");
+        assert_eq!(a.flag_u64("seed", 0).unwrap(), u64::MAX);
+        assert_eq!(a.flag_u64("epochs", 7).unwrap(), 7);
+        assert!(parse("x --seed abc").flag_u64("seed", 0).is_err());
     }
 
     #[test]

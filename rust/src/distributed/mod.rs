@@ -1,19 +1,31 @@
-//! Distributed runtime: the Section-IV protocol over real threads.
+//! Asynchronous sharded distributed runtime with deterministic fault
+//! injection.
 //!
-//! * [`transport`] — per-node channels, control vs (lossy-injectable) peer
-//!   planes;
-//! * [`node`] — per-node actor: broadcast participation + local GP update
-//!   from strictly local information;
-//! * [`coordinator`] — slot-paced leader/environment with abort-on-timeout
-//!   and online adaptation knobs.
+//! * [`transport`] — the [`Transport`] trait with bounded per-receiver
+//!   queues, plus two implementations: the ideal [`InMemTransport`] and the
+//!   seeded chaos injector [`SimNetTransport`] driven by a [`FaultSpec`]
+//!   (drop / duplicate / delay-reorder distributions and scripted,
+//!   heal-able partitions);
+//! * [`node`] — per-node actors that exchange *versioned* marginal
+//!   broadcasts and proceed on stale neighbor values instead of waiting on
+//!   a global round barrier;
+//! * [`coordinator`] — the [`AsyncRuntime`] engine: a virtual clock,
+//!   actors sharded across a fixed worker-thread pool, the measurement
+//!   plane, and the distributed quiescence detector (epoch-stamped
+//!   local-improvement vector aggregated up a spanning tree) that replaces
+//!   the old lock-step round counter. [`DistributedOptimizer`] adapts the
+//!   runtime to the serving loop's [`crate::serving::Optimizer`] hooks
+//!   (`restart` / `scale_step`), so the dynamic scenario tier can run
+//!   distributed.
 //!
-//! The distributed iterates are bit-compatible with the centralized
-//! [`crate::algo::gp::GradientProjection`] (tested), so every optimality
-//! result carries over.
+//! Any run — including a chaos run — is **bit-reproducible** from
+//! `(seed, fault spec)` and independent of the shard count; the final cost
+//! matches the centralized [`crate::algo::gp::GradientProjection`] optimum
+//! (chaos suite: `rust/tests/chaos.rs`, methodology: `docs/TESTING.md`).
 
 pub mod coordinator;
 pub mod node;
 pub mod transport;
 
-pub use coordinator::{Cluster, ClusterOptions, SlotOutcome};
-pub use transport::LossyConfig;
+pub use coordinator::{AsyncRuntime, DistributedOptimizer, RunReport, RuntimeOptions, RuntimeStats};
+pub use transport::{FaultSpec, InMemTransport, Partition, PeerMsg, SimNetTransport, Transport};

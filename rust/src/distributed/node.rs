@@ -1,15 +1,32 @@
-//! Per-node actor: owns its φ rows, participates in the Section-IV marginal
-//! broadcast, and performs its local eq. (8)–(10) update.
+//! Per-node actor for the asynchronous runtime.
+//!
+//! An [`AsyncNode`] owns its φ rows and a *view* of its out-neighbors'
+//! latest marginal values. Each virtual tick it
+//!
+//! 1. absorbs control messages (measurements, loop-revert reseeds,
+//!    quiescence reports from its spanning-tree children),
+//! 2. absorbs peer marginal broadcasts (keeping only the newest version per
+//!    (neighbor, stage) — duplicates and reordered stragglers are ignored),
+//! 3. recomputes its own ∂D/∂t per stage (eq. 4) from whatever it currently
+//!    knows — **stale neighbor values are used as-is**; there is no global
+//!    barrier — and rebroadcasts values that changed (plus a periodic
+//!    refresh so dropped messages are eventually repaired),
+//! 4. runs the local eq. (8)–(10) row update against its possibly-stale δ
+//!    view, and
+//! 5. participates in the distributed quiescence protocol: per measurement
+//!    epoch it aggregates the max local improvement (|Δφ|) of its
+//!    spanning-tree subtree and forwards it toward the root, which declares
+//!    quiescence after enough consecutive quiet epochs.
 //!
 //! A node only ever touches information it could obtain locally in a real
-//! deployment: its own measurements (link marginals on out-links, CPU
-//! marginal, own traffic), values received from neighbors, and its own rows.
+//! deployment: its own measurements, values received from neighbors, and its
+//! own rows. The runtime (one process here) merely schedules ticks and
+//! routes messages.
 
-use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::collections::BTreeMap;
 
 use crate::algo::gp::gp_row_update;
-use crate::distributed::transport::{Fabric, NetMsg, PeerMsg, Reply, SlotData};
+use crate::distributed::transport::PeerMsg;
 use crate::marginals::INF_MARGINAL;
 use crate::strategy::{renormalize_row, PHI_EPS};
 
@@ -27,22 +44,44 @@ pub struct StageMeta {
     pub comp_weight: f64,
     /// Stage id of (a, k+1), if any.
     pub next: Option<usize>,
-    /// Stage id of (a, k-1), if any.
-    pub prev: Option<usize>,
+}
+
+/// Local measurements pushed to a node at each epoch boundary (what it would
+/// measure on its own links/CPU in a real deployment), plus the epoch stamp
+/// and the runtime-paced stepsize.
+#[derive(Clone, Debug)]
+pub struct MeasureMsg {
+    pub epoch: u64,
+    pub alpha: f64,
+    /// D'_ij(F_ij) per out-link slot (index-aligned with the sparse rows).
+    pub link_marginal: Vec<f64>,
+    /// C'_i(G_i).
+    pub comp_marginal: f64,
+    /// Own traffic t_i(a,k) per stage.
+    pub traffic: Vec<f64>,
+}
+
+/// Reliable control-plane messages (engine-routed, never faulted — the
+/// paper's out-of-band measurement/management channel).
+#[derive(Clone, Debug)]
+pub enum CtrlMsg {
+    /// Epoch-boundary measurement (runtime -> node).
+    Measure(MeasureMsg),
+    /// Loop-safety revert: overwrite one stage row (runtime -> node).
+    Reseed { stage: usize, row: Vec<f64> },
+    /// Quiescence aggregation up the spanning tree (child -> parent):
+    /// the max |Δφ| applied anywhere in the child's subtree during `epoch`.
+    Report { epoch: u64, improvement: f64 },
 }
 
 /// Static node configuration.
 ///
-/// Rows are *sparse*: `out_degree + 1` entries per stage, index-aligned with
-/// `out_neighbors` (ascending by node id, matching the graph's CSR slot
-/// order), CPU slot last — the same layout the centralized
-/// [`crate::strategy::Strategy`] rows use, so leader and nodes exchange rows
-/// verbatim.
+/// Rows are sparse: `out_degree + 1` entries per stage, index-aligned with
+/// `out_neighbors` (ascending by node id — the graph's CSR slot order), CPU
+/// slot last, exactly like the centralized [`crate::strategy::Strategy`].
 #[derive(Clone, Debug)]
 pub struct NodeConfig {
     pub id: usize,
-    pub n: usize,
-    pub alpha: f64,
     /// Ascending by node id (the CSR link-slot order).
     pub out_neighbors: Vec<usize>,
     pub in_neighbors: Vec<usize>,
@@ -51,342 +90,510 @@ pub struct NodeConfig {
     pub support: Vec<Vec<bool>>,
     /// Initial φ rows: [stage][out_degree+1] (CPU slot last).
     pub phi_rows: Vec<Vec<f64>>,
+    /// Spanning-tree parent (None for the quiescence root).
+    pub tree_parent: Option<usize>,
+    pub tree_children: Vec<usize>,
+    /// Run the local φ update every this many ticks.
+    pub update_every: u64,
+    /// Rebroadcast unchanged marginals at least every this many ticks
+    /// (repairs dropped messages).
+    pub refresh_every: u64,
+    /// Broadcast a recomputed marginal only if it moved more than this.
+    pub rebroadcast_tol: f64,
+    /// Root only: an epoch is "quiet" when the aggregated improvement is
+    /// below this.
+    pub quiesce_tol: f64,
 }
 
-/// Per-slot broadcast state.
-struct SlotState {
-    seq: u64,
-    data: SlotData,
-    /// received d_dt from out-neighbor j for stage s: [s][j]
-    nbr_ddt: Vec<Vec<Option<f64>>>,
-    nbr_dirty: Vec<Vec<bool>>,
-    /// own values
-    own_ddt: Vec<Option<f64>>,
-    own_dirty: Vec<bool>,
-    /// outstanding downstream values per stage
-    pending_downstream: Vec<usize>,
-    /// total messages received per stage (completion needs out_degree)
-    received: Vec<usize>,
-    replied: bool,
+/// Latest known value from one out-neighbor for one stage.
+#[derive(Clone, Copy, Debug)]
+struct NbrView {
+    epoch: u64,
+    version: u64,
+    d_dt: f64,
+    dirty: bool,
 }
 
-/// Sentinel in `nbr_slot` for nodes that are not out-neighbors.
+/// The node actor. The runtime fills `inbox`/`ctrl_in`, calls
+/// [`AsyncNode::step`], then drains `outbox`/`ctrl_out`.
+pub struct AsyncNode {
+    pub cfg: NodeConfig,
+    /// φ rows, persisted across ticks: [stage][out_degree+1] (CPU last).
+    pub rows: Vec<Vec<f64>>,
+    /// Latest measurement (None until the first epoch boundary).
+    meas: Option<MeasureMsg>,
+    /// [stage][out-link slot]: newest received neighbor value.
+    view: Vec<Vec<Option<NbrView>>>,
+    /// Own ∂D/∂t per stage: (epoch computed under, value, dirty).
+    own: Vec<(u64, f64, bool)>,
+    /// Per-stage broadcast version counter.
+    version: Vec<u64>,
+    /// Last broadcast value per stage (rebroadcast threshold).
+    last_bcast: Vec<f64>,
+    last_refresh: u64,
+    /// node id -> out-link slot index (usize::MAX if not an out-neighbor).
+    nbr_slot: Vec<usize>,
+    /// Stage ids in reverse chain order (final stages first), so CPU terms
+    /// are available within one recompute pass.
+    stage_order: Vec<usize>,
+    /// Max |Δφ| applied since the current epoch started.
+    improvement: f64,
+    /// Finalized own improvement per epoch, awaiting subtree aggregation.
+    own_epoch: BTreeMap<u64, f64>,
+    /// epoch -> (children reported, running max) for the tree aggregation.
+    pending: BTreeMap<u64, (usize, f64)>,
+    /// Root only: consecutive quiet epochs so far.
+    pub quiet_streak: u64,
+    /// Row updates that consumed at least one neighbor value lagging more
+    /// than one epoch behind the node's current measurement (one epoch of
+    /// lag is the clean-fabric pipeline minimum and is not counted).
+    pub stale_reads: u64,
+    // ---- I/O (runtime-managed) -------------------------------------------
+    pub inbox: Vec<PeerMsg>,
+    pub ctrl_in: Vec<CtrlMsg>,
+    pub ctrl_in_next: Vec<CtrlMsg>,
+    pub outbox: Vec<(usize, PeerMsg)>,
+    pub ctrl_out: Vec<(usize, CtrlMsg)>,
+}
+
 const NO_SLOT: usize = usize::MAX;
 
-/// The node actor. Drive it with [`NodeActor::run`] on a dedicated thread.
-pub struct NodeActor {
-    cfg: NodeConfig,
-    fabric: Arc<Fabric>,
-    rx: Receiver<NetMsg>,
-    reply_tx: std::sync::mpsc::Sender<Reply>,
-    /// node id -> index into the sparse rows (NO_SLOT if not an out-neighbor)
-    nbr_slot: Vec<usize>,
-    /// φ rows, persisted across slots: [stage][out_degree+1] (CPU last).
-    rows: Vec<Vec<f64>>,
-    /// Pre-update rows of the most recent applied slot + its seq, kept so
-    /// the leader can reject a slot (trust-region revert).
-    undo: Option<(u64, Vec<Vec<f64>>)>,
-}
-
-impl NodeActor {
+impl AsyncNode {
+    /// Build the actor. `seed_ddt`/`seed_dirty` bootstrap the marginal state
+    /// (per stage: own value and per-out-neighbor values) from the globally
+    /// known initial strategy, mirroring a deployment where the initial
+    /// min-hop configuration and its marginals are distributed at install
+    /// time.
     pub fn new(
         cfg: NodeConfig,
-        fabric: Arc<Fabric>,
-        rx: Receiver<NetMsg>,
-        reply_tx: std::sync::mpsc::Sender<Reply>,
-    ) -> Self {
-        let rows = cfg.phi_rows.clone();
-        let mut nbr_slot = vec![NO_SLOT; cfg.n];
+        n: usize,
+        seed_ddt: &[Vec<f64>],
+        seed_dirty: &[Vec<bool>],
+    ) -> AsyncNode {
+        let ns = cfg.stage_meta.len();
+        let deg = cfg.out_neighbors.len();
+        let mut nbr_slot = vec![NO_SLOT; n];
         for (idx, &j) in cfg.out_neighbors.iter().enumerate() {
             nbr_slot[j] = idx;
         }
-        NodeActor {
-            cfg,
-            fabric,
-            rx,
-            reply_tx,
-            nbr_slot,
-            rows,
-            undo: None,
-        }
-    }
-
-    /// Main loop: blocks on the inbox until Shutdown.
-    pub fn run(mut self) {
-        let mut slot: Option<SlotState> = None;
-        // Peer marginals can outrun our own SlotStart (peers race ahead);
-        // stash them and replay once the slot opens.
-        let mut stash: Vec<PeerMsg> = Vec::new();
-        loop {
-            let msg = match self.rx.recv() {
-                Ok(m) => m,
-                Err(_) => return, // coordinator gone
-            };
-            match msg {
-                NetMsg::Shutdown => return,
-                NetMsg::SlotStart(data) => {
-                    let seq = data.seq;
-                    let mut st = self.fresh_slot(data);
-                    self.kickoff(&mut st);
-                    // replay early arrivals for this slot, drop stale ones
-                    let replay: Vec<PeerMsg> = {
-                        stash.retain(|m| m.seq >= seq);
-                        stash.drain(..).collect()
-                    };
-                    for pm in replay {
-                        if pm.seq == seq {
-                            self.handle_marginal(&mut st, pm);
-                        } else {
-                            stash.push(pm); // future slot (cannot happen today)
-                        }
-                    }
-                    self.try_finish(&mut st);
-                    slot = Some(st);
-                }
-                NetMsg::Revert { seq } => {
-                    if let Some((useq, prev)) = self.undo.take() {
-                        if useq == seq {
-                            self.rows = prev;
-                        } else {
-                            self.undo = Some((useq, prev));
-                        }
-                    }
-                    let _ = self.reply_tx.send(Reply::Skipped {
-                        seq,
-                        node: self.cfg.id,
-                    });
-                }
-                NetMsg::AbortSlot { seq } => {
-                    let skip = match &slot {
-                        Some(st) if st.seq == seq && !st.replied => true,
-                        _ => false,
-                    };
-                    if skip {
-                        if let Some(st) = &mut slot {
-                            st.replied = true;
-                        }
-                        let _ = self.reply_tx.send(Reply::Skipped {
-                            seq,
-                            node: self.cfg.id,
-                        });
-                    }
-                    // stale aborts are ignored
-                }
-                NetMsg::Marginal(pm) => {
-                    let current = slot.as_ref().map(|st| st.seq);
-                    match current {
-                        Some(seq) if pm.seq == seq => {
-                            let mut st = slot.take().unwrap();
-                            if !st.replied {
-                                self.handle_marginal(&mut st, pm);
-                                self.try_finish(&mut st);
-                            }
-                            slot = Some(st);
-                        }
-                        Some(seq) if pm.seq > seq => stash.push(pm),
-                        None => stash.push(pm),
-                        _ => {} // straggler from an aborted/old slot
-                    }
-                }
-            }
-        }
-    }
-
-    /// Record one peer marginal and run the readiness cascade.
-    fn handle_marginal(&mut self, st: &mut SlotState, pm: PeerMsg) {
-        let s = pm.stage;
-        let j = pm.from;
-        if st.nbr_ddt[s][j].is_none() {
-            st.nbr_ddt[s][j] = Some(pm.d_dt);
-            st.nbr_dirty[s][j] = pm.dirty;
-            st.received[s] += 1;
-            let slot = self.nbr_slot[j];
-            if slot != NO_SLOT && self.rows[s][slot] > PHI_EPS && st.own_ddt[s].is_none() {
-                st.pending_downstream[s] -= 1;
-            }
-            self.cascade(st, s);
-        }
-    }
-
-    fn fresh_slot(&self, data: SlotData) -> SlotState {
-        let ns = self.cfg.stage_meta.len();
-        let n = self.cfg.n;
-        let deg = self.cfg.out_neighbors.len();
-        let mut pending = vec![0usize; ns];
+        let mut stage_order: Vec<usize> = (0..ns).collect();
+        stage_order.sort_by_key(|&s| std::cmp::Reverse(cfg.stage_meta[s].k));
+        let mut view = vec![vec![None; deg]; ns];
+        let mut own = Vec::with_capacity(ns);
         for s in 0..ns {
-            pending[s] = (0..deg).filter(|&t| self.rows[s][t] > PHI_EPS).count();
+            own.push((0, seed_ddt[s][cfg.id], seed_dirty[s][cfg.id]));
+            for (idx, &j) in cfg.out_neighbors.iter().enumerate() {
+                view[s][idx] = Some(NbrView {
+                    epoch: 0,
+                    version: 0,
+                    d_dt: seed_ddt[s][j],
+                    dirty: seed_dirty[s][j],
+                });
+            }
         }
-        SlotState {
-            seq: data.seq,
-            data,
-            nbr_ddt: vec![vec![None; n]; ns],
-            nbr_dirty: vec![vec![false; n]; ns],
-            own_ddt: vec![None; ns],
-            own_dirty: vec![false; ns],
-            pending_downstream: pending,
-            received: vec![0; ns],
-            replied: false,
+        let last_bcast = own.iter().map(|&(_, v, _)| v).collect();
+        let rows = cfg.phi_rows.clone();
+        AsyncNode {
+            rows,
+            meas: None,
+            view,
+            own,
+            version: vec![1; ns],
+            last_bcast,
+            last_refresh: 0,
+            nbr_slot,
+            stage_order,
+            improvement: 0.0,
+            own_epoch: BTreeMap::new(),
+            pending: BTreeMap::new(),
+            quiet_streak: 0,
+            stale_reads: 0,
+            inbox: Vec::new(),
+            ctrl_in: Vec::new(),
+            ctrl_in_next: Vec::new(),
+            outbox: Vec::new(),
+            ctrl_out: Vec::new(),
+            cfg,
         }
     }
 
-    /// Compute every stage that is ready at slot start (no downstream
-    /// dependencies), final stages first so CPU terms are available.
-    fn kickoff(&mut self, st: &mut SlotState) {
-        // process stages in reverse chain order per app: final stages first
-        let mut order: Vec<usize> = (0..self.cfg.stage_meta.len()).collect();
-        order.sort_by_key(|&s| std::cmp::Reverse(self.cfg.stage_meta[s].k));
-        for s in order {
-            self.try_compute(st, s);
+    /// Current measurement epoch (0 before the first measurement).
+    pub fn epoch(&self) -> u64 {
+        self.meas.as_ref().map_or(0, |m| m.epoch)
+    }
+
+    /// Management-plane row overwrite (runtime restart hook). Counts toward
+    /// the epoch's improvement so the quiescence detector re-arms.
+    pub fn overwrite_row(&mut self, stage: usize, row: &[f64]) {
+        let diff = self.rows[stage]
+            .iter()
+            .zip(row)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        self.improvement = self.improvement.max(diff);
+        self.rows[stage].copy_from_slice(row);
+    }
+
+    /// One virtual tick. Pure per-node state transition: reads only this
+    /// node's state and its inboxes, writes only this node's state and its
+    /// outboxes — which is what makes sharded execution deterministic.
+    pub fn step(&mut self, now: u64) {
+        self.absorb_ctrl(now);
+        self.absorb_peers();
+        if self.meas.is_some() {
+            self.recompute_marginals(now);
+            if now % self.cfg.update_every == 0 {
+                self.update_rows();
+            }
         }
     }
 
-    /// Try to compute stage s; on success, cascade to the previous stage of
-    /// the same app (its CPU term just became available).
-    fn cascade(&mut self, st: &mut SlotState, s: usize) {
-        if self.try_compute(st, s) {
-            let mut cur = self.cfg.stage_meta[s].prev;
-            while let Some(p) = cur {
-                if self.try_compute(st, p) {
-                    cur = self.cfg.stage_meta[p].prev;
-                } else {
-                    break;
+    // ---- inbound ---------------------------------------------------------
+
+    fn absorb_ctrl(&mut self, now: u64) {
+        let msgs: Vec<CtrlMsg> = self.ctrl_in.drain(..).collect();
+        for msg in msgs {
+            match msg {
+                CtrlMsg::Measure(m) => {
+                    // finalize the epoch that just ended and kick off its
+                    // subtree aggregation
+                    if let Some(prev) = &self.meas {
+                        let done = prev.epoch;
+                        self.own_epoch.insert(done, self.improvement);
+                        self.improvement = 0.0;
+                        self.try_report(done);
+                    }
+                    self.meas = Some(m);
+                    // epoch boundary: force a refresh broadcast this tick so
+                    // downstream nodes see epoch-stamped values promptly
+                    self.last_refresh = now.saturating_sub(self.cfg.refresh_every);
+                }
+                CtrlMsg::Reseed { stage, row } => {
+                    self.overwrite_row(stage, &row);
+                }
+                CtrlMsg::Report { epoch, improvement } => {
+                    let e = self.pending.entry(epoch).or_insert((0, 0.0));
+                    e.0 += 1;
+                    e.1 = e.1.max(improvement);
+                    self.try_report(epoch);
                 }
             }
         }
     }
 
-    /// eq. (4a)/(4b) for one stage, if all inputs are present.
-    fn try_compute(&mut self, st: &mut SlotState, s: usize) -> bool {
-        if st.own_ddt[s].is_some() {
-            return false;
-        }
-        let meta = &self.cfg.stage_meta[s];
-        if st.pending_downstream[s] > 0 {
-            return false;
-        }
-        if !meta.is_final {
-            let next = meta.next.expect("non-final stage has next");
-            if st.own_ddt[next].is_none() {
-                return false;
+    fn absorb_peers(&mut self) {
+        let msgs: Vec<PeerMsg> = self.inbox.drain(..).collect();
+        for pm in msgs {
+            let slot = self.nbr_slot[pm.from];
+            if slot == NO_SLOT || pm.stage >= self.view.len() {
+                continue;
+            }
+            let cur = &mut self.view[pm.stage][slot];
+            let newer = match cur {
+                Some(v) => pm.version > v.version,
+                None => true,
+            };
+            if newer {
+                *cur = Some(NbrView {
+                    epoch: pm.epoch,
+                    version: pm.version,
+                    d_dt: pm.d_dt,
+                    dirty: pm.dirty,
+                });
             }
         }
-        let deg = self.cfg.out_neighbors.len();
-        let row = &self.rows[s];
-        let mut acc = 0.0;
-        let mut dirty = false;
-        for (t, &j) in self.cfg.out_neighbors.iter().enumerate() {
-            let p = row[t];
-            if p > PHI_EPS {
-                let v = st.nbr_ddt[s][j].expect("pending_downstream == 0");
-                acc += p * (meta.packet_size * st.data.link_marginal[j] + v);
-                if st.nbr_dirty[s][j] {
-                    dirty = true;
-                }
-            }
-        }
-        if !meta.is_final && row[deg] > PHI_EPS {
-            let next = meta.next.unwrap();
-            acc += row[deg]
-                * (meta.comp_weight * st.data.comp_marginal
-                    + st.own_ddt[next].unwrap());
-        }
-        if !dirty {
-            for (t, &j) in self.cfg.out_neighbors.iter().enumerate() {
-                if row[t] > PHI_EPS && st.nbr_ddt[s][j].unwrap() > acc + 1e-15 {
-                    dirty = true;
-                    break;
-                }
-            }
-        }
-        st.own_ddt[s] = Some(acc);
-        st.own_dirty[s] = dirty;
-        // broadcast to ALL in-neighbors
-        for &j in &self.cfg.in_neighbors {
-            self.fabric.send_peer(
-                j,
-                PeerMsg {
-                    seq: st.seq,
-                    from: self.cfg.id,
-                    stage: s,
-                    d_dt: acc,
-                    dirty,
-                },
-            );
-        }
-        true
     }
 
-    /// If the broadcast is complete (all own stages computed, all
-    /// out-neighbor values received for every stage), run the local update
-    /// and reply to the coordinator.
-    fn try_finish(&mut self, st: &mut SlotState) {
-        if st.replied {
-            return;
-        }
-        let ns = self.cfg.stage_meta.len();
+    // ---- marginal recomputation + broadcast ------------------------------
+
+    /// Eq. (4a)/(4b) over the node's *current* (possibly stale) view, final
+    /// stages first so the CPU term of stage k can use stage k+1's fresh
+    /// value. Changed values are broadcast to all in-neighbors; every
+    /// `refresh_every` ticks everything is rebroadcast regardless, so a
+    /// dropped message is repaired by the next refresh.
+    //
+    // Indexed loop over `stage_order`: iterating it by reference would hold
+    // a borrow of `self` across the per-stage state mutations below.
+    #[allow(clippy::needless_range_loop)]
+    fn recompute_marginals(&mut self, now: u64) {
+        let meas = self.meas.as_ref().expect("checked by step");
+        let epoch = meas.epoch;
+        let refresh_due = now >= self.last_refresh + self.cfg.refresh_every;
         let deg = self.cfg.out_neighbors.len();
-        let complete = (0..ns).all(|s| st.own_ddt[s].is_some() && st.received[s] == deg);
-        if !complete {
-            return;
+        for idx in 0..self.stage_order.len() {
+            let s = self.stage_order[idx];
+            let m = &self.cfg.stage_meta[s];
+            let row = &self.rows[s];
+            let mut acc = 0.0;
+            let mut dirty = false;
+            let mut computable = true;
+            for t in 0..deg {
+                let p = row[t];
+                if p > PHI_EPS {
+                    match self.view[s][t] {
+                        Some(v) => {
+                            acc += p * (m.packet_size * meas.link_marginal[t] + v.d_dt);
+                            if v.dirty {
+                                dirty = true;
+                            }
+                        }
+                        None => {
+                            computable = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if computable && !m.is_final && row[deg] > PHI_EPS {
+                let next = m.next.expect("non-final stage has next");
+                acc += row[deg] * (m.comp_weight * meas.comp_marginal + self.own[next].1);
+            }
+            if computable {
+                if !dirty {
+                    // category-2 test: any downstream neighbor with a larger
+                    // marginal than our own makes the link improper
+                    for t in 0..deg {
+                        if row[t] > PHI_EPS {
+                            if let Some(v) = self.view[s][t] {
+                                if v.d_dt > acc + 1e-15 {
+                                    dirty = true;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                self.own[s] = (epoch, acc, dirty);
+            }
+            let (own_epoch, own_val, own_dirty) = self.own[s];
+            let changed = (own_val - self.last_bcast[s]).abs() > self.cfg.rebroadcast_tol;
+            if changed || refresh_due {
+                self.version[s] += 1;
+                let version = self.version[s];
+                for &j in &self.cfg.in_neighbors {
+                    self.outbox.push((
+                        j,
+                        PeerMsg {
+                            from: self.cfg.id,
+                            stage: s,
+                            epoch: own_epoch,
+                            version,
+                            d_dt: own_val,
+                            dirty: own_dirty,
+                        },
+                    ));
+                }
+                self.last_bcast[s] = own_val;
+            }
         }
-        self.undo = Some((st.seq, self.rows.clone()));
-        self.local_update(st);
-        st.replied = true;
-        let _ = self.reply_tx.send(Reply::Rows {
-            seq: st.seq,
-            node: self.cfg.id,
-            rows: self.rows.clone(),
-        });
+        if refresh_due {
+            self.last_refresh = now;
+        }
     }
 
-    /// Local eq. (8)–(10) update on every owned row.
-    fn local_update(&mut self, st: &SlotState) {
+    // ---- local eq. (8)–(10) update ---------------------------------------
+
+    fn update_rows(&mut self) {
+        let meas = self.meas.as_ref().expect("checked by step");
+        let epoch = meas.epoch;
         let deg = self.cfg.out_neighbors.len();
+        let mut drow = vec![0.0f64; deg + 1];
         for s in 0..self.cfg.stage_meta.len() {
-            let meta = &self.cfg.stage_meta[s];
-            if meta.is_final && self.cfg.id == meta.dest {
-                continue; // exit row
+            let m = &self.cfg.stage_meta[s];
+            if m.is_final && self.cfg.id == m.dest {
+                continue; // exit row stays empty
             }
-            let own = st.own_ddt[s].unwrap();
-            // δ row (eq. 7), sparse: one entry per out-link slot + CPU last
-            let mut drow = vec![INF_MARGINAL; deg + 1];
-            for (t, &j) in self.cfg.out_neighbors.iter().enumerate() {
-                let v = st.nbr_ddt[s][j].expect("complete slot");
-                drow[t] = meta.packet_size * st.data.link_marginal[j] + v;
+            let own_val = self.own[s].1;
+            let mut stale = false;
+            for t in 0..deg {
+                drow[t] = match self.view[s][t] {
+                    Some(v) => {
+                        // One epoch of lag is inherent (neighbor values for
+                        // epoch e arrive after our epoch-e update); a stale
+                        // read is information lagging BEYOND that pipeline
+                        // minimum — i.e. caused by loss/delay/partition,
+                        // not by the clean asynchronous schedule itself.
+                        if v.epoch + 1 < epoch {
+                            stale = true;
+                        }
+                        m.packet_size * meas.link_marginal[t] + v.d_dt
+                    }
+                    None => INF_MARGINAL,
+                };
             }
-            if !meta.is_final {
-                let next = meta.next.unwrap();
-                drow[deg] = meta.comp_weight * st.data.comp_marginal
-                    + st.own_ddt[next].unwrap();
-            }
+            drow[deg] = if m.is_final {
+                INF_MARGINAL
+            } else {
+                let next = m.next.expect("non-final stage has next");
+                m.comp_weight * meas.comp_marginal + self.own[next].1
+            };
             let support = &self.cfg.support[s];
-            let nbr_ddt = &st.nbr_ddt[s];
-            let nbr_dirty = &st.nbr_dirty[s];
-            let out_nbrs = &self.cfg.out_neighbors;
+            let view = &self.view[s];
+            let drow_ref = &drow;
             let usable = |t: usize| -> bool {
-                if !support[t] || drow[t] >= INF_MARGINAL {
+                if !support[t] || drow_ref[t] >= INF_MARGINAL {
                     return false;
                 }
                 if t < deg {
                     // blocked-set test from purely local + piggybacked info
-                    let j = out_nbrs[t];
-                    let v = nbr_ddt[j].unwrap();
-                    if v > own + 1e-15 || nbr_dirty[j] {
-                        return false;
-                    }
+                    return match view[t] {
+                        Some(v) => !(v.dirty || v.d_dt > own_val + 1e-15),
+                        None => false,
+                    };
                 }
                 true
             };
-            gp_row_update(
+            let change = gp_row_update(
                 &mut self.rows[s],
-                &drow,
+                drow_ref,
                 usable,
-                st.data.traffic[s],
-                st.data.alpha,
+                meas.traffic[s],
+                meas.alpha,
             );
-            // same row-local renormalization the leader's mirror applies, so
-            // node state and mirror stay bit-identical
             renormalize_row(&mut self.rows[s], 1.0);
+            if change > 0.0 {
+                self.improvement = self.improvement.max(change);
+                if stale {
+                    self.stale_reads += 1;
+                }
+            }
         }
+    }
+
+    // ---- quiescence aggregation ------------------------------------------
+
+    /// If epoch `e`'s own value is finalized and all spanning-tree children
+    /// have reported, fold and forward toward the root (or, at the root,
+    /// update the quiet streak).
+    fn try_report(&mut self, epoch: u64) {
+        let Some(&own) = self.own_epoch.get(&epoch) else {
+            return;
+        };
+        let nchildren = self.cfg.tree_children.len();
+        let reported = self.pending.get(&epoch).map(|e| e.0).unwrap_or(0);
+        if reported < nchildren {
+            return;
+        }
+        let children_max = self.pending.remove(&epoch).map(|e| e.1).unwrap_or(0.0);
+        self.own_epoch.remove(&epoch);
+        let agg = own.max(children_max);
+        match self.cfg.tree_parent {
+            Some(parent) => {
+                self.ctrl_out.push((
+                    parent,
+                    CtrlMsg::Report {
+                        epoch,
+                        improvement: agg,
+                    },
+                ));
+            }
+            None => {
+                // root: a quiet epoch extends the streak, a loud one resets
+                if agg < self.cfg.quiesce_tol {
+                    self.quiet_streak += 1;
+                } else {
+                    self.quiet_streak = 0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf_cfg() -> NodeConfig {
+        NodeConfig {
+            id: 0,
+            out_neighbors: vec![1],
+            in_neighbors: vec![1],
+            stage_meta: vec![StageMeta {
+                app: 0,
+                k: 0,
+                is_final: true,
+                dest: 1,
+                packet_size: 1.0,
+                comp_weight: 0.0,
+                next: None,
+            }],
+            support: vec![vec![true, false]],
+            phi_rows: vec![vec![1.0, 0.0]],
+            tree_parent: Some(1),
+            tree_children: Vec::new(),
+            update_every: 1,
+            refresh_every: 2,
+            rebroadcast_tol: 1e-12,
+            quiesce_tol: 1e-9,
+        }
+    }
+
+    fn measure(epoch: u64) -> CtrlMsg {
+        CtrlMsg::Measure(MeasureMsg {
+            epoch,
+            alpha: 0.1,
+            link_marginal: vec![0.5],
+            comp_marginal: 0.0,
+            traffic: vec![1.0],
+        })
+    }
+
+    #[test]
+    fn newer_versions_win_and_stragglers_are_ignored() {
+        let mut node = AsyncNode::new(leaf_cfg(), 2, &[vec![3.0, 0.0]], &[vec![false, false]]);
+        node.ctrl_in.push(measure(1));
+        node.inbox.push(PeerMsg {
+            from: 1,
+            stage: 0,
+            epoch: 1,
+            version: 7,
+            d_dt: 2.0,
+            dirty: false,
+        });
+        // an older (reordered) version arriving later must not overwrite
+        node.inbox.push(PeerMsg {
+            from: 1,
+            stage: 0,
+            epoch: 0,
+            version: 3,
+            d_dt: 99.0,
+            dirty: true,
+        });
+        node.step(1);
+        // own d_dt = φ·(L·D' + nbr) = 1.0 · (0.5 + 2.0)
+        assert!((node.own[0].1 - 2.5).abs() < 1e-12);
+        assert!(!node.own[0].2);
+    }
+
+    #[test]
+    fn leaf_reports_epoch_improvement_to_parent() {
+        let mut node = AsyncNode::new(leaf_cfg(), 2, &[vec![3.0, 0.0]], &[vec![false, false]]);
+        node.ctrl_in.push(measure(1));
+        node.step(1);
+        node.step(2);
+        // next epoch boundary finalizes epoch 1 and reports it upward
+        node.ctrl_in.push(measure(2));
+        node.step(3);
+        let report = node
+            .ctrl_out
+            .iter()
+            .find(|(_to, m)| matches!(m, CtrlMsg::Report { epoch: 1, .. }));
+        assert!(report.is_some(), "leaf must report epoch 1 to its parent");
+    }
+
+    #[test]
+    fn refresh_rebroadcasts_unchanged_values() {
+        let mut node = AsyncNode::new(leaf_cfg(), 2, &[vec![3.0, 0.0]], &[vec![false, false]]);
+        node.ctrl_in.push(measure(1));
+        node.step(1);
+        let first = node.outbox.len();
+        assert!(first > 0, "epoch boundary must broadcast");
+        node.outbox.clear();
+        node.step(2);
+        node.step(3);
+        assert!(
+            !node.outbox.is_empty(),
+            "periodic refresh must rebroadcast even without changes"
+        );
     }
 }

@@ -13,8 +13,9 @@
 //! ## Layers
 //! * **L3 (this crate)** — the paper's coordination contribution: the
 //!   gradient-projection algorithm ([`algo::gp`]) with blocked-node-set loop
-//!   prevention, the Section-IV distributed broadcast protocol
-//!   ([`broadcast`], [`distributed`]), baselines ([`algo`]), flow/marginal
+//!   prevention, the Section-IV broadcast protocol ([`broadcast`]) and its
+//!   asynchronous sharded runtime with deterministic fault injection
+//!   ([`distributed`]), baselines ([`algo`]), flow/marginal
 //!   computation ([`flow`], [`marginals`]), the nonstationary workload
 //!   subsystem ([`workload`]: traffic models + trace replay), serving loop
 //!   with online adaptation ([`serving`]) and benchmarking/validation

@@ -5,13 +5,18 @@
 //! scfo compare  --topology abilene [--iters 500]   # GP vs all baselines
 //! scfo table2                                      # print Table II inventory
 //! scfo fig5 | fig6 | fig7                          # regenerate paper figures
-//! scfo scenarios list [--tier large|dynamic]       # the scenario-engine matrix
+//! scfo scenarios list [--tier large|dynamic|distributed]  # scenario matrices
 //! scfo scenarios run --all --jobs 8 [--out DIR]    # parallel batch + JSON reports
 //! scfo scenarios run --all --tier large            # 1000-node-class sparse tier
 //! scfo scenarios run --all --tier dynamic          # nonstationary serving tier
+//! scfo scenarios run --all --tier distributed      # async-runtime chaos tier
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
+//! scfo distributed run --shards 4 --faults lossy   # async sharded runtime
+//! scfo distributed run --faults spec.toml --json D.json  # custom fault spec
+//! scfo distributed faults                          # list fault presets
 //! scfo bench --json [--scenarios a,b] [--iters N]  # GP hot-path → BENCH.json
 //! scfo bench --json --workload flash-crowd         # serving-mode bench (regret)
+//! scfo bench --json --distributed --shards 4       # async runtime → BENCH.json v3
 //! scfo serve    --topology geant [--slots 200] [--workload diurnal] [--xla]
 //! scfo trace record --topology abilene --workload mmpp --slots 120 --out t.json
 //! scfo trace replay t.json | stats t.json          # bit-identical trace replay
@@ -248,9 +253,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // it for stationary serving too
     let adapt = args.switch("adapt") || wspec.is_some();
     let policy = ReconvergePolicy::parse(&args.flag_or("policy", "warm"))?;
+    // both arms honor --seed (via sc.seed) so stationary and workload-driven
+    // serving are seeded consistently
     let workload = match &wspec {
         Some(w) => Workload::from_spec(w, &net, opts.slot_secs, sc.seed)?,
-        None => Workload::stationary(&net, opts.slot_secs, opts.seed),
+        None => Workload::stationary(&net, opts.slot_secs, sc.seed),
     };
     let ctrl = if adapt {
         Some(AdaptationController::new(ControllerOptions {
@@ -450,8 +457,25 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let scenarios = args.flag_or("scenarios", "abilene,geant,sw");
     let iters = args.flag_usize("iters", 60)?;
     let workload = args.flag("workload");
+    let distributed = args.switch("distributed") || args.flag("faults").is_some();
     let mut results = Vec::new();
     for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if distributed {
+            use scfo::distributed::FaultSpec;
+            let shards = args.flag_usize("shards", 4)?;
+            let epochs = args.flag_usize("epochs", 4000)?;
+            let fname = args.flag_or("faults", "lossy");
+            let faults = if fname.ends_with(".toml") || fname.ends_with(".json") {
+                FaultSpec::load(std::path::Path::new(&fname))?
+            } else {
+                FaultSpec::preset(&fname, args.flag_u64("fault-seed", 2023)?)?
+            };
+            eprintln!("bench {name} (distributed, {shards} shards, faults {})...", faults.name);
+            results.push(scfo::bench::bench_distributed_scenario(
+                name, shards, &faults, epochs,
+            )?);
+            continue;
+        }
         match workload {
             Some(w) => {
                 eprintln!("bench {name} ({iters} serving slots, workload {w})...");
@@ -463,7 +487,45 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    if workload.is_some() {
+    if distributed {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                let d = r
+                    .distributed
+                    .as_ref()
+                    .expect("distributed bench has a distributed block");
+                vec![
+                    r.name.clone(),
+                    format!("{}/{}", r.n, r.m),
+                    format!("{}x {}", d.shards, d.transport),
+                    d.faults.clone(),
+                    if d.converged { "yes" } else { "NO" }.to_string(),
+                    d.rounds.to_string(),
+                    format!("{:.2}", d.convergence_secs),
+                    d.messages.to_string(),
+                    d.max_queue_depth.to_string(),
+                    d.stale_reads.to_string(),
+                ]
+            })
+            .collect();
+        print_table(
+            "Distributed async runtime bench (BENCH.json v3 columns)",
+            &[
+                "scenario",
+                "|V|/|E|",
+                "shards",
+                "faults",
+                "quiesced",
+                "rounds",
+                "conv secs",
+                "messages",
+                "max queue",
+                "stale reads",
+            ],
+            &rows,
+        );
+    } else if workload.is_some() {
         let rows: Vec<Vec<String>> = results
             .iter()
             .map(|r| {
@@ -544,6 +606,18 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     /// as before.
     fn tier_matrix(args: &Args) -> anyhow::Result<Vec<ScenarioSpec>> {
         let tier = args.flag_or("tier", "standard");
+        if tier == "distributed" {
+            let shards = args.flag_usize("shards", 4)?;
+            let epochs = args.flag_usize("epochs", 2000)?;
+            let mut specs = ScenarioSpec::distributed_matrix_sized(shards, epochs);
+            if args.flag("iters").is_some() {
+                let iters = args.flag_usize("iters", 1500)?;
+                for s in &mut specs {
+                    s.iters = iters;
+                }
+            }
+            return Ok(specs);
+        }
         if tier == "dynamic" {
             let slots = args.flag_usize("slots", 200)?;
             let mut specs = ScenarioSpec::dynamic_matrix_sized(slots);
@@ -561,7 +635,9 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             "standard" | "default" => (600, 300),
             "large" => (150, 60),
             other => {
-                anyhow::bail!("unknown scenario tier '{other}' (standard|large|dynamic)")
+                anyhow::bail!(
+                    "unknown scenario tier '{other}' (standard|large|dynamic|distributed)"
+                )
             }
         };
         let iters = args.flag_usize("iters", def_iters)?;
@@ -592,9 +668,12 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             let rows: Vec<Vec<String>> = tier_matrix(args)?
                 .iter()
                 .map(|s| {
-                    let dynamics = match &s.workload {
-                        Some(w) => format!("workload:{} x{}", w.name(), s.slots),
-                        None => s
+                    let dynamics = match (&s.workload, &s.distributed) {
+                        (Some(w), _) => format!("workload:{} x{}", w.name(), s.slots),
+                        (None, Some(d)) => {
+                            format!("faults:{} x{} shards", d.faults.name, d.shards)
+                        }
+                        (None, None) => s
                             .events
                             .iter()
                             .map(|e| e.kind())
@@ -676,6 +755,148 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+/// The asynchronous sharded runtime from the command line: run a topology
+/// to quiescence under a fault spec (preset name or TOML/JSON file), print
+/// the rounds/messages/bytes summary, optionally dump it as JSON.
+fn cmd_distributed(args: &Args) -> anyhow::Result<()> {
+    use scfo::distributed::{AsyncRuntime, FaultSpec, RuntimeOptions};
+
+    match args.subcommand() {
+        Some("faults") => {
+            let rows: Vec<Vec<String>> = FaultSpec::PRESETS
+                .iter()
+                .map(|name| {
+                    let f = FaultSpec::preset(name, 0).unwrap();
+                    vec![
+                        f.name.clone(),
+                        format!("{:.2}", f.drop),
+                        format!("{:.2}", f.dup),
+                        format!("{}..={}", f.min_delay, f.max_delay),
+                        f.partitions.len().to_string(),
+                    ]
+                })
+                .collect();
+            print_table(
+                "Fault presets (scfo distributed run --faults NAME)",
+                &["name", "drop", "dup", "delay ticks", "partitions"],
+                &rows,
+            );
+            Ok(())
+        }
+        Some("run") => {
+            // accept generator families (er-200-800, sw-1024-2048, ...) in
+            // addition to the Table-II names and --config files
+            let sc = if args.flag("config").is_some() {
+                scenario_from(args)?
+            } else {
+                let topo = args.flag_or("topology", "abilene");
+                match scenario_from(args) {
+                    Ok(sc) => sc,
+                    Err(_) => {
+                        let mut sc = ScenarioSpec::named(&topo, Congestion::Nominal)?
+                            .effective_base();
+                        sc.seed = args.flag_usize("seed", sc.seed as usize)? as u64;
+                        sc
+                    }
+                }
+            };
+            let shards = args.flag_usize("shards", 4)?;
+            let max_epochs = args.flag_u64("epochs", 4000)?;
+            let faults = match args.flag("faults") {
+                None => FaultSpec::clean(sc.seed),
+                Some(f) if f.ends_with(".toml") || f.ends_with(".json") => {
+                    FaultSpec::load(std::path::Path::new(f))?
+                }
+                Some(name) => FaultSpec::preset(name, args.flag_u64("fault-seed", sc.seed)?)?,
+            };
+            let mut rng = Rng::new(sc.seed);
+            let net = sc.build(&mut rng)?;
+            println!(
+                "distributed {} : |V|={} |E|={} |S|={} shards={} faults={}",
+                sc.name,
+                net.n(),
+                net.m(),
+                net.num_stages(),
+                shards,
+                faults.name
+            );
+            let phi0 = Strategy::shortest_path_to_dest(&net);
+            let opts = RuntimeOptions {
+                shards,
+                max_epochs,
+                alpha: args.flag_f64("alpha", 0.1)?,
+                ..RuntimeOptions::default()
+            };
+            let mut rt = if faults.is_clean() {
+                AsyncRuntime::in_mem(net.clone(), phi0, opts)
+            } else {
+                AsyncRuntime::sim_net(net.clone(), phi0, faults.clone(), opts)
+            };
+            let rep = rt.run_until_quiescent();
+            let s = &rep.stats;
+            println!(
+                "{} after {} rounds ({} ticks): final cost {:.9}",
+                if rep.converged { "quiesced" } else { "budget exhausted" },
+                rep.epochs,
+                rep.ticks,
+                rep.final_cost
+            );
+            println!(
+                "transport {}: {} msgs sent / {} delivered / {} dropped ({} fault, {} partition, {} overflow), {} bytes, max queue depth {}",
+                s.transport_name,
+                s.transport.sent,
+                s.transport.delivered,
+                s.transport.dropped_total(),
+                s.transport.dropped_fault,
+                s.transport.dropped_partition,
+                s.transport.dropped_overflow,
+                s.transport.bytes_sent,
+                s.transport.max_queue_depth,
+            );
+            println!(
+                "control msgs {}, stale reads {}, safety-net reverts {}",
+                s.control_messages, s.stale_reads, s.reverted_stages
+            );
+            if args.switch("compare") {
+                let mut gp = GradientProjection::new(&net, GpOptions::default());
+                let central = gp.run(&net, args.flag_usize("iters", 2000)?).final_cost;
+                let rel = (rep.final_cost - central).abs() / (1.0 + central);
+                println!("centralized GP {central:.9}; relative gap {rel:.3e}");
+            }
+            if let Some(out) = args.flag("json") {
+                let doc = Json::obj(vec![
+                    ("scenario", Json::Str(sc.name.clone())),
+                    ("shards", Json::Num(shards as f64)),
+                    ("faults", faults.to_json()),
+                    ("converged", Json::Bool(rep.converged)),
+                    ("rounds", Json::Num(rep.epochs as f64)),
+                    ("ticks", Json::Num(rep.ticks as f64)),
+                    ("final_cost", Json::Num(rep.final_cost)),
+                    ("messages_sent", Json::Num(s.transport.sent as f64)),
+                    ("messages_dropped", Json::Num(s.transport.dropped_total() as f64)),
+                    ("bytes_sent", Json::Num(s.transport.bytes_sent as f64)),
+                    ("max_queue_depth", Json::Num(s.transport.max_queue_depth as f64)),
+                    ("stale_reads", Json::Num(s.stale_reads as f64)),
+                    ("cost_trace", Json::arr_f64(&rep.cost_trace)),
+                ]);
+                std::fs::write(out, doc.to_string_pretty())?;
+                println!("wrote {out}");
+            }
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown distributed subcommand '{o}'");
+            }
+            anyhow::bail!(
+                "usage: scfo distributed run --topology T --shards N \
+                 [--faults clean|lossy|partition|spec.toml] [--epochs N] [--compare] \
+                 [--json OUT] | scfo distributed faults"
+            )
+        }
+    }
+}
+
 fn cmd_broadcast(args: &Args) -> anyhow::Result<()> {
     let sc = scenario_from(args)?;
     let mut rng = Rng::new(sc.seed);
@@ -710,15 +931,17 @@ fn main() -> anyhow::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("trace") => cmd_trace(&args),
         Some("validate") => cmd_validate(&args),
+        Some("distributed") => cmd_distributed(&args),
         Some("broadcast") => cmd_broadcast(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown command '{o}'");
             }
             eprintln!(
-                "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|trace|validate|broadcast> \
+                "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|trace|validate|distributed|broadcast> \
                  [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] \
-                 [--tier large|dynamic] [--workload SPEC] [--xla]"
+                 [--tier large|dynamic|distributed] [--workload SPEC] [--shards N] \
+                 [--faults SPEC] [--xla]"
             );
             std::process::exit(2);
         }

@@ -55,12 +55,56 @@
 
 pub mod runner;
 
-pub use runner::{run_batch, RunnerOptions, ScenarioCache, ScenarioReport};
+pub use runner::{run_batch, DistributedSummary, RunnerOptions, ScenarioCache, ScenarioReport};
 
 use crate::config::Scenario;
 use crate::cost::CostKind;
+use crate::distributed::FaultSpec;
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
+
+/// How a scenario runs the asynchronous distributed runtime
+/// ([`crate::distributed::AsyncRuntime`]) instead of the centralized
+/// optimizer. The report then carries a `distributed` block with
+/// rounds/messages/bytes/stale-reads columns and compares the distributed
+/// final cost against a centralized reference solve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistributedSpec {
+    /// Worker threads the node actors are sharded across.
+    pub shards: usize,
+    /// Fault model; `clean` selects the ideal in-memory transport.
+    pub faults: FaultSpec,
+    /// Epoch budget for the quiescence run.
+    pub max_epochs: usize,
+}
+
+impl DistributedSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("faults", self.faults.to_json()),
+            ("max_epochs", Json::Num(self.max_epochs as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<DistributedSpec> {
+        let shards = v.get("shards").and_then(Json::as_usize).unwrap_or(4);
+        anyhow::ensure!(shards >= 1, "distributed.shards must be >= 1");
+        let faults = match v.get("faults") {
+            Some(f) => FaultSpec::from_json(f)?,
+            None => FaultSpec::clean(0),
+        };
+        let max_epochs = v
+            .get("max_epochs")
+            .and_then(Json::as_usize)
+            .unwrap_or(2000);
+        Ok(DistributedSpec {
+            shards,
+            faults,
+            max_epochs,
+        })
+    }
+}
 
 /// Congestion level: a multiplier applied to every exogenous input rate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -205,6 +249,11 @@ pub struct ScenarioSpec {
     pub workload: Option<WorkloadSpec>,
     /// Serving slots for workload-driven (dynamic-tier) scenarios.
     pub slots: usize,
+    /// Distributed-runtime spec. Alone, the scenario runs the async runtime
+    /// to quiescence and compares it against a centralized reference;
+    /// combined with `workload`, the dynamic serving loop drives the
+    /// distributed optimizer instead of the centralized one.
+    pub distributed: Option<DistributedSpec>,
 }
 
 /// Topology families of the `large` scale tier
@@ -281,6 +330,7 @@ impl ScenarioSpec {
             iters: 600,
             workload: None,
             slots: 200,
+            distributed: None,
         })
     }
 
@@ -334,6 +384,19 @@ impl ScenarioSpec {
         Self::large_matrix_sized(150, 60)
     }
 
+    /// Workload overrides shared by every scale-tier (≥200-node) cell —
+    /// keep |𝒮| small and capacities generous: a 1000-node sparse topology
+    /// funnels many sources' flow through few cut links, so per-link
+    /// headroom must grow with the network diameter. Used by the `large`
+    /// and `distributed` tiers and the heavy integration tests, so a retune
+    /// reaches all of them.
+    pub fn apply_scale_overrides(&mut self) {
+        self.base.num_apps = 2;
+        self.base.num_sources = 3;
+        self.base.link_param = 60.0;
+        self.base.comp_param = 40.0;
+    }
+
     /// The `large` tier with explicit optimization budgets.
     pub fn large_matrix_sized(iters: usize, event_iters: usize) -> Vec<ScenarioSpec> {
         LARGE_FAMILIES
@@ -341,19 +404,54 @@ impl ScenarioSpec {
             .map(|family| {
                 let mut spec = Self::named(family, Congestion::Nominal)
                     .expect("large families are valid");
-                // Keep |𝒮| small and capacities generous at this scale:
-                // a 1000-node sparse topology funnels many sources' flow
-                // through few cut links, so per-link headroom must grow
-                // with the network diameter.
-                spec.base.num_apps = 2;
-                spec.base.num_sources = 3;
-                spec.base.link_param = 60.0;
-                spec.base.comp_param = 40.0;
+                spec.apply_scale_overrides();
                 spec.iters = iters;
                 spec.events = Self::default_schedule(event_iters);
                 spec
             })
             .collect()
+    }
+
+    /// Topology families of the `distributed` tier: one small real network
+    /// plus three scale rungs of the sharded async runtime.
+    pub const DISTRIBUTED_FAMILIES: [&'static str; 4] =
+        ["abilene", "er-200-800", "er-1000-4000", "sw-1024-2048"];
+
+    /// Fault presets the `distributed` tier crosses the families with.
+    pub const DISTRIBUTED_FAULTS: [&'static str; 3] = ["clean", "lossy", "partition"];
+
+    /// The `distributed` scale tier: families × fault presets, each running
+    /// the asynchronous sharded runtime to quiescence and comparing against
+    /// a centralized reference solve. Reports carry the
+    /// rounds/messages/bytes/stale-reads columns.
+    pub fn distributed_matrix() -> Vec<ScenarioSpec> {
+        Self::distributed_matrix_sized(4, 2000)
+    }
+
+    /// The `distributed` tier with explicit shard count and epoch budget.
+    pub fn distributed_matrix_sized(shards: usize, max_epochs: usize) -> Vec<ScenarioSpec> {
+        let mut out =
+            Vec::with_capacity(Self::DISTRIBUTED_FAMILIES.len() * Self::DISTRIBUTED_FAULTS.len());
+        for family in Self::DISTRIBUTED_FAMILIES {
+            for fault in Self::DISTRIBUTED_FAULTS {
+                let mut spec =
+                    Self::named(family, Congestion::Nominal).expect("distributed families are valid");
+                if family != "abilene" {
+                    spec.apply_scale_overrides();
+                }
+                spec.base.name = format!("{family}-dist-{fault}");
+                spec.events.clear();
+                spec.iters = 1500; // centralized-reference budget
+                spec.distributed = Some(DistributedSpec {
+                    shards,
+                    faults: FaultSpec::preset(fault, spec.base.seed)
+                        .expect("distributed presets are valid"),
+                    max_epochs,
+                });
+                out.push(spec);
+            }
+        }
+        out
     }
 
     /// The default matrix with explicit optimization budgets (`iters` for
@@ -404,6 +502,9 @@ impl ScenarioSpec {
             obj.insert("workload".to_string(), w.to_json());
             obj.insert("slots".to_string(), Json::Num(self.slots as f64));
         }
+        if let Some(d) = &self.distributed {
+            obj.insert("distributed".to_string(), d.to_json());
+        }
         Json::Obj(obj)
     }
 
@@ -426,6 +527,10 @@ impl ScenarioSpec {
             None => None,
         };
         let slots = v.get("slots").and_then(Json::as_usize).unwrap_or(200);
+        let distributed = match v.get("distributed") {
+            Some(d) => Some(DistributedSpec::from_json(d)?),
+            None => None,
+        };
         Ok(ScenarioSpec {
             base,
             congestion,
@@ -433,6 +538,7 @@ impl ScenarioSpec {
             iters,
             workload,
             slots,
+            distributed,
         })
     }
 
@@ -524,7 +630,8 @@ mod tests {
 
     #[test]
     fn dynamic_spec_roundtrips_with_workload() {
-        let spec = &ScenarioSpec::dynamic_matrix()[0];
+        let matrix = ScenarioSpec::dynamic_matrix();
+        let spec = &matrix[0];
         let re = ScenarioSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(re.workload, spec.workload);
         assert_eq!(re.slots, spec.slots);
@@ -586,6 +693,38 @@ mod tests {
             }
         );
         assert_eq!(spec.events[1], DynamicEvent::LinkDown { iters: 123 });
+    }
+
+    #[test]
+    fn distributed_matrix_crosses_families_and_faults() {
+        let m = ScenarioSpec::distributed_matrix();
+        assert_eq!(
+            m.len(),
+            ScenarioSpec::DISTRIBUTED_FAMILIES.len() * ScenarioSpec::DISTRIBUTED_FAULTS.len()
+        );
+        let names: std::collections::BTreeSet<&str> = m.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), m.len(), "distributed names must be unique");
+        for s in &m {
+            let d = s.distributed.as_ref().expect("distributed specs carry a spec");
+            assert!(d.shards >= 1);
+            assert!(ScenarioSpec::DISTRIBUTED_FAULTS.contains(&d.faults.name.as_str()));
+            assert!(s.events.is_empty());
+            assert!(s.workload.is_none());
+        }
+        assert!(m.iter().any(|s| s.base.topology == "er-1000-4000"));
+    }
+
+    #[test]
+    fn distributed_spec_roundtrips() {
+        let matrix = ScenarioSpec::distributed_matrix();
+        let spec = &matrix[1];
+        let re = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(re.distributed, spec.distributed);
+        assert_eq!(re.name(), spec.name());
+        // a plain spec round-trips without one
+        let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+        let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
+        assert_eq!(re.distributed, None);
     }
 
     #[test]

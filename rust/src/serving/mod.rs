@@ -41,6 +41,35 @@ pub trait Optimizer {
     /// Multiply the step size by `factor` (the warm-start boost hook;
     /// default: no-op).
     fn scale_step(&mut self, _factor: f64) {}
+    /// Message/round counters for distributed optimizers (`None` for
+    /// centralized ones). Lets report writers recover the async runtime's
+    /// statistics through a `Box<dyn Optimizer>`.
+    fn runtime_stats(&self) -> Option<crate::distributed::RuntimeStats> {
+        None
+    }
+}
+
+/// Boxed optimizers serve too (lets callers pick the optimizer at runtime,
+/// e.g. centralized vs distributed in the scenario runner's dynamic tier).
+/// The reconvergence hooks delegate, so [`AdaptationController`] policies
+/// reach the inner optimizer — including
+/// [`crate::distributed::DistributedOptimizer`].
+impl<T: Optimizer + ?Sized> Optimizer for Box<T> {
+    fn slot(&mut self, net: &Network) -> anyhow::Result<f64> {
+        (**self).slot(net)
+    }
+    fn strategy(&self) -> &Strategy {
+        (**self).strategy()
+    }
+    fn restart(&mut self, net: &Network) {
+        (**self).restart(net);
+    }
+    fn scale_step(&mut self, factor: f64) {
+        (**self).scale_step(factor);
+    }
+    fn runtime_stats(&self) -> Option<crate::distributed::RuntimeStats> {
+        (**self).runtime_stats()
+    }
 }
 
 impl Optimizer for crate::algo::gp::GradientProjection {

@@ -97,6 +97,13 @@ pub struct DesReport {
     pub sim_time: f64,
     /// total exogenous arrival rate λ̄ (for Little cross-check).
     pub lambda: f64,
+    /// Time-average occupancy per link station (edge id order) — the
+    /// measured counterpart of the analytic per-link M/M/1 mean
+    /// F/(d̄−F); cross-validated against
+    /// [`crate::sim::analytic_link_profile`] in `rust/tests/sim_crossval.rs`.
+    pub link_occupancy: Vec<f64>,
+    /// Time-average occupancy per CPU station (node id order).
+    pub cpu_occupancy: Vec<f64>,
 }
 
 /// Run the DES for `horizon` simulated seconds with self-rescheduling
@@ -335,6 +342,8 @@ fn simulate_inner(
         area += stn.area;
     }
     let sim_time = now.max(1e-9);
+    let link_occupancy: Vec<f64> = stations[..m].iter().map(|s| s.area / sim_time).collect();
+    let cpu_occupancy: Vec<f64> = stations[m..].iter().map(|s| s.area / sim_time).collect();
     Ok(DesReport {
         avg_occupancy: area / sim_time,
         mean_delay: if delivered > 0 {
@@ -345,6 +354,8 @@ fn simulate_inner(
         delivered,
         sim_time,
         lambda,
+        link_occupancy,
+        cpu_occupancy,
     })
 }
 

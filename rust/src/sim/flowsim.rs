@@ -144,6 +144,54 @@ pub fn packet_size_sweep(
     Ok(rows)
 }
 
+/// Analytic steady-state profile of one link under a strategy: the flow
+/// model's M/M/1 utilization and mean occupancy the DES must reproduce.
+#[derive(Clone, Debug)]
+pub struct LinkProfile {
+    pub edge: usize,
+    /// F_ij, bits/sec.
+    pub flow: f64,
+    /// F_ij / d̄_ij (requires a Queue link cost).
+    pub utilization: f64,
+    /// M/M/1 mean queue length F/(d̄−F) — the link's contribution to D(φ).
+    pub occupancy: f64,
+}
+
+/// Per-link analytic profile of the flow model at `(net, phi)`. Requires
+/// Queue link costs (the M/M/1 semantics the DES also assumes); this is the
+/// analytic side of the DES cross-validation
+/// (`rust/tests/sim_crossval.rs`).
+pub fn analytic_link_profile(
+    net: &Network,
+    phi: &crate::strategy::Strategy,
+) -> anyhow::Result<Vec<LinkProfile>> {
+    use crate::cost::CostFn;
+    let fs = FlowState::solve(net, phi).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut out = Vec::with_capacity(net.m());
+    for e in 0..net.m() {
+        let cap = match net.link_cost[e] {
+            CostFn::Queue { cap } => cap,
+            _ => anyhow::bail!("analytic_link_profile requires Queue link costs"),
+        };
+        let flow = fs.link_flow[e];
+        out.push(LinkProfile {
+            edge: e,
+            flow,
+            utilization: flow / cap,
+            occupancy: net.link_cost[e].cost(flow),
+        });
+    }
+    Ok(out)
+}
+
+/// Analytic expected per-packet delay via Little's law: D(φ) / λ̄.
+pub fn analytic_mean_delay(net: &Network, phi: &crate::strategy::Strategy) -> anyhow::Result<f64> {
+    let fs = FlowState::solve(net, phi).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let lambda: f64 = net.apps.iter().map(|a| a.total_input()).sum();
+    anyhow::ensure!(lambda > 0.0, "no exogenous traffic");
+    Ok(fs.total_cost / lambda)
+}
+
 /// Gap of an algorithm's cost to a lower bound on the optimum: the convex
 /// flow-domain relaxation evaluated by GP itself (GP converges to the global
 /// optimum per Theorem 1, so it IS the reference).

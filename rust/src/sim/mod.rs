@@ -6,5 +6,6 @@ pub mod flowsim;
 
 pub use des::{simulate, simulate_workload, DesReport};
 pub use flowsim::{
-    compare_algorithms, compare_on_network, packet_size_sweep, rate_sweep, ComparisonRow, HopRow,
+    analytic_link_profile, analytic_mean_delay, compare_algorithms, compare_on_network,
+    packet_size_sweep, rate_sweep, ComparisonRow, HopRow, LinkProfile,
 };

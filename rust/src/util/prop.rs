@@ -15,8 +15,20 @@
 //!
 //! Each case gets a deterministic seed derived from the test name and case
 //! index, so failures are reproducible and reported with the failing seed.
+//!
+//! ## Shrinking
+//!
+//! [`forall_cases`] separates generation from checking: the generator
+//! produces a concrete *case value* (any [`Shrink`] type) and the property
+//! judges it. On failure the harness greedily walks [`Shrink::shrink`]
+//! candidates — halving numeric inputs toward zero, removing elements from
+//! vectors, deleting edges/nodes from topologies ([`Shrink` for
+//! `Graph`](crate::graph::Graph)) — re-testing each, and panics with the
+//! *minimal* still-failing counterexample plus the replay seed
+//! ([`replay_case`]).
 
 use super::rng::Rng;
+use crate::graph::Graph;
 
 /// Per-case random input generator handed to the property closure.
 pub struct Gen {
@@ -94,6 +106,226 @@ where
     }
 }
 
+/// Verdict of a [`forall_cases`] property on one concrete case.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PropResult {
+    Pass,
+    Fail(String),
+    /// The generated case does not satisfy the property's preconditions
+    /// (also used to reject invalid shrink candidates).
+    Discard,
+}
+
+/// Types whose failing values can be shrunk toward a minimal counterexample.
+/// `shrink` returns *strictly simpler* candidates (the harness guards
+/// against non-terminating shrink loops with a budget, but candidates
+/// should still always decrease some size measure).
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for f64 {
+    /// Halve toward zero, try zero and the integer truncation.
+    fn shrink(&self) -> Vec<f64> {
+        let x = *self;
+        if x == 0.0 {
+            return Vec::new();
+        }
+        let mut out = vec![0.0, x / 2.0];
+        if x.fract() != 0.0 {
+            out.push(x.trunc());
+        }
+        out.retain(|c| c.abs() < x.abs());
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let x = *self;
+        match x {
+            0 => Vec::new(),
+            1 => vec![0],
+            _ => vec![0, x / 2, x - 1],
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<u64> {
+        let x = *self;
+        match x {
+            0 => Vec::new(),
+            1 => vec![0],
+            _ => vec![0, x / 2, x - 1],
+        }
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b));
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    /// Remove the front/back half, remove single elements, then shrink
+    /// individual elements.
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        if n > 1 {
+            out.push(self[n / 2..].to_vec());
+            out.push(self[..n / 2].to_vec());
+        }
+        for i in 0..n {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for (i, x) in self.iter().enumerate() {
+            for sx in x.shrink() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for Graph {
+    /// Subgraph shrinking: drop one directed edge at a time, or drop the
+    /// highest-numbered node together with its incident edges. Candidates
+    /// that fail graph validation are skipped (properties additionally
+    /// discard candidates violating their own preconditions, e.g.
+    /// reachability).
+    fn shrink(&self) -> Vec<Graph> {
+        let mut out = Vec::new();
+        let n = self.n();
+        let edges = self.edges();
+        for skip in 0..edges.len() {
+            let es: Vec<(usize, usize)> = edges
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != skip)
+                .map(|(_, &e)| e)
+                .collect();
+            if let Ok(g) = Graph::new(n, &es) {
+                out.push(g);
+            }
+        }
+        if n > 1 {
+            let es: Vec<(usize, usize)> = edges
+                .iter()
+                .copied()
+                .filter(|&(i, j)| i != n - 1 && j != n - 1)
+                .collect();
+            if let Ok(g) = Graph::new(n - 1, &es) {
+                out.push(g);
+            }
+        }
+        out
+    }
+}
+
+/// Budget of property evaluations spent shrinking one failure.
+const SHRINK_BUDGET: usize = 2000;
+
+/// Greedily shrink `witness` while the property keeps failing; returns the
+/// minimal counterexample and its failure message.
+fn shrink_to_minimal<T: Shrink>(
+    witness: T,
+    msg: String,
+    prop: &mut impl FnMut(&T) -> PropResult,
+) -> (T, String, usize) {
+    let mut cur = witness;
+    let mut cur_msg = msg;
+    let mut evals = 0usize;
+    let mut steps = 0usize;
+    'outer: loop {
+        for cand in cur.shrink() {
+            if evals >= SHRINK_BUDGET {
+                break 'outer;
+            }
+            evals += 1;
+            if let PropResult::Fail(m) = prop(&cand) {
+                cur = cand;
+                cur_msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break; // no candidate still fails: minimal
+    }
+    (cur, cur_msg, steps)
+}
+
+/// Run `cases` random cases of a property with shrinking: `gen` builds a
+/// concrete case value from the per-case RNG, `prop` judges it (returning
+/// [`PropResult::Discard`] for values outside the property's
+/// preconditions). On failure, panics with the minimal counterexample (per
+/// [`Shrink`]) and the replay seed for [`replay_case`].
+pub fn forall_cases<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            seed,
+            case,
+            failure: None,
+        };
+        let value = gen(&mut g);
+        match prop(&value) {
+            PropResult::Pass | PropResult::Discard => {}
+            PropResult::Fail(msg) => {
+                let (minimal, min_msg, steps) = shrink_to_minimal(value, msg, &mut prop);
+                panic!(
+                    "property '{name}' failed at case {case} (replay seed {seed:#x}): {min_msg}\n\
+                     minimal counterexample after {steps} shrink steps:\n{minimal:#?}"
+                );
+            }
+        }
+    }
+}
+
+/// Re-run a single [`forall_cases`] failure by its replay seed.
+pub fn replay_case<T, G, P>(name: &str, seed: u64, mut gen: G, mut prop: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        seed,
+        case: 0,
+        failure: None,
+    };
+    let value = gen(&mut g);
+    let verdict = prop(&value);
+    assert!(
+        !matches!(verdict, PropResult::Fail(_)),
+        "replay of '{name}' seed {seed:#x} failed: {verdict:?} on {value:#?}"
+    );
+}
+
 /// Re-run a single failing case by seed (debug helper).
 pub fn replay<F>(name: &str, seed: u64, mut prop: F)
 where
@@ -134,6 +366,117 @@ mod tests {
             prop_assert!(g, false, "nope");
             true
         });
+    }
+
+    #[test]
+    fn shrink_halves_numeric_inputs_to_minimal() {
+        // property: x < 100. The generator emits values up to 1e6; the
+        // minimal counterexample must land just at/above the boundary.
+        let mut witnessed = None;
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall_cases(
+                "x below 100",
+                50,
+                |g: &mut Gen| g.f64_in(0.0, 1e6),
+                |&x| {
+                    if x < 100.0 {
+                        PropResult::Pass
+                    } else {
+                        witnessed = Some(x);
+                        PropResult::Fail(format!("x = {x}"))
+                    }
+                },
+            );
+        }));
+        let err = res.expect_err("property must fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("replay seed"), "no replay seed in: {msg}");
+        assert!(msg.contains("minimal counterexample"), "{msg}");
+        // halving from anywhere below 1e6 lands in [100, 200)
+        let last = witnessed.expect("saw a failure");
+        assert!(
+            (100.0..200.0).contains(&last),
+            "minimal witness {last} not shrunk to the boundary"
+        );
+    }
+
+    #[test]
+    fn shrink_removes_vector_elements() {
+        // property: no element is >= 10; minimal counterexample is [10].
+        let mut minimal_len = usize::MAX;
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall_cases(
+                "all below 10",
+                20,
+                |g: &mut Gen| {
+                    let n = g.usize_in(3, 8);
+                    (0..n).map(|_| g.usize_in(0, 40)).collect::<Vec<usize>>()
+                },
+                |v| {
+                    if v.iter().all(|&x| x < 10) {
+                        PropResult::Pass
+                    } else {
+                        minimal_len = minimal_len.min(v.len());
+                        PropResult::Fail(format!("{v:?}"))
+                    }
+                },
+            );
+        }));
+        assert!(res.is_err(), "property must fail");
+        assert_eq!(minimal_len, 1, "vector not shrunk to a single element");
+    }
+
+    #[test]
+    fn graph_shrink_produces_subgraphs() {
+        let g = Graph::bidirected(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]).unwrap();
+        let cands = g.shrink();
+        assert!(!cands.is_empty());
+        // every candidate is strictly smaller
+        for c in &cands {
+            assert!(
+                c.m() < g.m() || c.n() < g.n(),
+                "candidate not smaller: n={} m={}",
+                c.n(),
+                c.m()
+            );
+        }
+        // node-removal candidate exists
+        assert!(cands.iter().any(|c| c.n() == 3));
+    }
+
+    #[test]
+    fn discarded_cases_do_not_fail() {
+        forall_cases(
+            "discards are fine",
+            30,
+            |g: &mut Gen| g.usize_in(0, 10),
+            |&x| {
+                if x % 2 == 1 {
+                    PropResult::Discard // odd inputs out of scope
+                } else {
+                    PropResult::Pass
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn replay_case_reruns_by_seed() {
+        replay_case(
+            "anything",
+            0x1234,
+            |g: &mut Gen| g.f64_in(0.0, 1.0),
+            |&x| {
+                if (0.0..1.0).contains(&x) {
+                    PropResult::Pass
+                } else {
+                    PropResult::Fail("out of range".into())
+                }
+            },
+        );
     }
 
     #[test]

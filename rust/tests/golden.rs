@@ -1,0 +1,191 @@
+//! Golden-file regression tests: fixed-seed scenario reports, one per tier
+//! (default, large, dynamic, distributed), compared against the committed
+//! files under `rust/tests/golden/` with a tolerance-aware JSON comparator.
+//!
+//! * `SCFO_BLESS=1 cargo test --test golden` regenerates the files;
+//! * a missing golden is bootstrapped (written, reported) and compared from
+//!   the next run on — CI runs the suite twice and diffs, so even an
+//!   uncommitted bootstrap still gates nondeterminism;
+//! * numbers compare with relative tolerance 1e-9; volatile keys
+//!   (wall-clock timings, cache bits, RSS) are skipped.
+//!
+//! Policy and blessing workflow: `docs/TESTING.md`.
+
+use scfo::prelude::*;
+use scfo::scenarios::{runner, DistributedSpec};
+use scfo::util::json::Json;
+
+/// Keys whose values are wall-clock / environment dependent.
+const VOLATILE_KEYS: [&str; 7] = [
+    "solve_secs",
+    "cache_hit",
+    "build_secs",
+    "iter_secs",
+    "iter_secs_samples",
+    "peak_rss_bytes",
+    "convergence_secs",
+];
+
+const REL_TOL: f64 = 1e-9;
+
+/// Structural JSON comparison with numeric tolerance; returns the list of
+/// mismatches as `path: detail` lines.
+fn diff_json(path: &str, want: &Json, got: &Json, out: &mut Vec<String>) {
+    match (want, got) {
+        (Json::Num(a), Json::Num(b)) => {
+            let tol = REL_TOL * (1.0 + a.abs());
+            if (a - b).abs() > tol && !(a.is_nan() && b.is_nan()) {
+                out.push(format!("{path}: {a} != {b} (tol {tol:.1e})"));
+            }
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            for (k, va) in a {
+                if VOLATILE_KEYS.contains(&k.as_str()) {
+                    continue;
+                }
+                match b.get(k) {
+                    Some(vb) => diff_json(&format!("{path}.{k}"), va, vb, out),
+                    None => out.push(format!("{path}.{k}: missing in new report")),
+                }
+            }
+            for k in b.keys() {
+                if !a.contains_key(k) && !VOLATILE_KEYS.contains(&k.as_str()) {
+                    out.push(format!("{path}.{k}: new key not in golden"));
+                }
+            }
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                out.push(format!("{path}: length {} != {}", a.len(), b.len()));
+                return;
+            }
+            for (i, (va, vb)) in a.iter().zip(b).enumerate() {
+                diff_json(&format!("{path}[{i}]"), va, vb, out);
+            }
+        }
+        (a, b) => {
+            if a != b {
+                out.push(format!("{path}: {a:?} != {b:?}"));
+            }
+        }
+    }
+}
+
+fn golden_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Compare `actual` against `tests/golden/<name>.json`; bless when
+/// `SCFO_BLESS=1` or the golden does not exist yet (bootstrap).
+fn check_golden(name: &str, actual: &Json) {
+    let path = golden_dir().join(format!("{name}.json"));
+    let bless = std::env::var("SCFO_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, actual.to_string_pretty()).unwrap();
+        eprintln!(
+            "golden '{name}': {} {}",
+            if bless { "blessed" } else { "bootstrapped (missing)" },
+            path.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let want = Json::parse(&text).unwrap_or_else(|e| panic!("unparseable golden {name}: {e}"));
+    let mut diffs = Vec::new();
+    diff_json(name, &want, actual, &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "golden '{name}' mismatch ({} diffs) — intentional change? rerun with SCFO_BLESS=1 \
+         and commit the updated golden:\n{}",
+        diffs.len(),
+        diffs.join("\n")
+    );
+}
+
+// ---- one scenario per tier ------------------------------------------------
+
+/// Default tier: abilene at light congestion with the standard (shrunk)
+/// event schedule.
+#[test]
+fn golden_default_tier_abilene() {
+    let mut spec = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+    spec.iters = 120;
+    spec.events = vec![
+        DynamicEvent::RateScale {
+            factor: 1.3,
+            iters: 80,
+        },
+        DynamicEvent::LinkDown { iters: 80 },
+        DynamicEvent::LinkUp { iters: 80 },
+    ];
+    let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
+    check_golden("default-abilene-light", &rep.to_json());
+}
+
+/// Large tier: the er-1000-4000 GP hot path (bench form — cost trajectory,
+/// arena shape; timings are volatile and skipped).
+#[test]
+fn golden_large_tier_er_1000_4000() {
+    let res = scfo::bench::bench_gp_scenario("er-1000-4000", 10).unwrap();
+    check_golden("large-er-1000-4000", &res.to_json());
+}
+
+/// Dynamic tier: abilene under the flash-crowd workload with the adaptation
+/// controller (regret/reconvergence columns).
+#[test]
+fn golden_dynamic_tier_flash_crowd() {
+    let mut spec = ScenarioSpec::named("abilene", Congestion::Nominal).unwrap();
+    spec.base.name = "abilene-flash-crowd".to_string();
+    spec.events.clear();
+    spec.iters = 150;
+    spec.slots = 60;
+    spec.workload = Some(WorkloadSpec::named("flash-crowd").unwrap());
+    let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
+    check_golden("dynamic-abilene-flash-crowd", &rep.to_json());
+}
+
+/// Distributed tier: abilene through the async runtime under the lossy
+/// fault spec (rounds/messages/bytes/stale-reads columns).
+#[test]
+fn golden_distributed_tier_abilene_lossy() {
+    let mut spec = ScenarioSpec::named("abilene", Congestion::Nominal).unwrap();
+    spec.base.name = "abilene-dist-lossy".to_string();
+    spec.events.clear();
+    spec.iters = 800;
+    spec.distributed = Some(DistributedSpec {
+        shards: 2,
+        faults: scfo::distributed::FaultSpec::lossy(spec.base.seed),
+        max_epochs: 4000,
+    });
+    let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
+    check_golden("distributed-abilene-lossy", &rep.to_json());
+}
+
+// ---- comparator self-tests ------------------------------------------------
+
+#[test]
+fn comparator_tolerates_jitter_and_flags_real_diffs() {
+    let want = Json::parse(r#"{"a": 1.0, "b": [1.0, 2.0], "solve_secs": 9.0, "s": "x"}"#).unwrap();
+    let close = Json::parse(r#"{"a": 1.0000000000001, "b": [1.0, 2.0], "solve_secs": 1.0, "s": "x"}"#)
+        .unwrap();
+    let mut diffs = Vec::new();
+    diff_json("t", &want, &close, &mut diffs);
+    assert!(diffs.is_empty(), "{diffs:?}");
+
+    let wrong = Json::parse(r#"{"a": 1.1, "b": [1.0], "solve_secs": 9.0, "s": "y"}"#).unwrap();
+    let mut diffs = Vec::new();
+    diff_json("t", &want, &wrong, &mut diffs);
+    assert_eq!(diffs.len(), 3, "{diffs:?}"); // a off, b length, s string
+}
+
+#[test]
+fn comparator_reports_missing_and_extra_keys() {
+    let want = Json::parse(r#"{"a": 1.0, "b": 2.0}"#).unwrap();
+    let got = Json::parse(r#"{"a": 1.0, "c": 3.0}"#).unwrap();
+    let mut diffs = Vec::new();
+    diff_json("t", &want, &got, &mut diffs);
+    assert_eq!(diffs.len(), 2, "{diffs:?}");
+    assert!(diffs.iter().any(|d| d.contains("t.b")));
+    assert!(diffs.iter().any(|d| d.contains("t.c")));
+}

@@ -9,7 +9,7 @@ use scfo::flow::FlowState;
 use scfo::graph::topologies;
 use scfo::marginals::Marginals;
 use scfo::prelude::*;
-use scfo::util::prop::forall;
+use scfo::util::prop::{forall, forall_cases, PropResult};
 use scfo::util::rng::Rng;
 
 /// Random network on a random Table-II-style topology with random apps.
@@ -54,6 +54,81 @@ fn random_network(rng: &mut Rng) -> Network {
         })
         .collect();
     Network::new(g, apps, link_cost, comp_cost, comp_weight).unwrap()
+}
+
+/// Single-app network on an arbitrary digraph (dest 0, source at the
+/// highest node id); `None` when node 0 is not reachable from everywhere —
+/// the property's precondition.
+fn single_app_net(g: &Graph) -> Option<Network> {
+    if !g.all_reach(0) {
+        return None;
+    }
+    let n = g.n();
+    let m = g.m();
+    let mut input_rates = vec![0.0; n];
+    input_rates[n - 1] = 1.0;
+    let apps = vec![Application {
+        dest: 0,
+        num_tasks: 1,
+        packet_sizes: vec![4.0, 1.0],
+        input_rates,
+    }];
+    let stages = StageRegistry::new(&apps);
+    let cw = vec![vec![1.0; n]; stages.len()];
+    Network::new(
+        g.clone(),
+        apps,
+        vec![CostFn::Linear { d: 1.0 }; m],
+        vec![CostFn::Linear { d: 1.0 }; n],
+        cw,
+    )
+    .ok()
+}
+
+/// Shrinking-enabled topology property: flow conservation holds on every
+/// random digraph where the destination is reachable. A failure shrinks the
+/// topology itself (edge deletions / node drops, discarding candidates that
+/// break reachability) and reports the minimal counterexample graph.
+#[test]
+fn prop_conservation_on_random_digraphs_with_subgraph_shrinking() {
+    forall_cases(
+        "conservation on random digraphs",
+        25,
+        |g| {
+            let rng = g.rng();
+            let n = 6 + rng.usize(6);
+            // bidirected ring guarantees connectivity, plus random chords
+            let mut edges: Vec<(usize, usize)> = Vec::new();
+            for i in 0..n {
+                edges.push((i, (i + 1) % n));
+                edges.push(((i + 1) % n, i));
+            }
+            for _ in 0..2 * n {
+                let a = rng.usize(n);
+                let b = rng.usize(n);
+                if a != b && !edges.contains(&(a, b)) {
+                    edges.push((a, b));
+                }
+            }
+            Graph::new(n, &edges).unwrap()
+        },
+        |g: &Graph| {
+            let Some(net) = single_app_net(g) else {
+                return PropResult::Discard;
+            };
+            let phi = Strategy::shortest_path_to_dest(&net);
+            let fs = match FlowState::solve(&net, &phi) {
+                Ok(fs) => fs,
+                Err(e) => return PropResult::Fail(format!("flow solve failed: {e}")),
+            };
+            let res = fs.conservation_residual(&net, &phi);
+            if res < 1e-8 {
+                PropResult::Pass
+            } else {
+                PropResult::Fail(format!("conservation residual {res}"))
+            }
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,104 @@
+//! Cross-validation of the two simulators: the packet-level DES
+//! (`sim/des.rs`) and the analytic flow model (`sim/flowsim.rs`) must agree
+//! on per-link utilization/occupancy and mean delay — this pins the M/M/1
+//! cost semantics both sides assume (D_ij(F) = F/(d̄−F) as a mean queue
+//! length, delay via Little's law).
+//!
+//! Bounds are statistical-CI-shaped: the DES is a stochastic system
+//! measured over a finite horizon, so loaded links get a relative band and
+//! lightly-loaded links an absolute one.
+
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::prelude::*;
+use scfo::sim;
+
+fn build(family: &str) -> Network {
+    let spec = ScenarioSpec::named(family, Congestion::Nominal).unwrap();
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    sc.build(&mut rng).unwrap()
+}
+
+fn crossval(family: &str, horizon: f64, seed: u64) {
+    let net = build(family);
+    let mut gp = GradientProjection::new(&net, GpOptions::default());
+    gp.run(&net, 300);
+    let phi = gp.phi.clone();
+
+    let analytic = sim::analytic_link_profile(&net, &phi).unwrap();
+    let analytic_delay = sim::analytic_mean_delay(&net, &phi).unwrap();
+    let rep = sim::simulate(&net, &phi, horizon, seed).unwrap();
+    assert_eq!(rep.link_occupancy.len(), net.m());
+    assert!(rep.delivered > 1000, "{family}: too few packets delivered");
+
+    // 1. per-link occupancy: loaded links within 35% relative or 0.08
+    //    absolute; idle links essentially empty.
+    let mut loaded = 0;
+    let mut abs_err_sum = 0.0;
+    for p in &analytic {
+        let measured = rep.link_occupancy[p.edge];
+        if p.utilization > 0.05 {
+            loaded += 1;
+            let err = (measured - p.occupancy).abs();
+            let band = (0.35 * p.occupancy).max(0.08);
+            assert!(
+                err <= band,
+                "{family}: link {} occupancy {measured:.4} vs analytic {:.4} \
+                 (util {:.2}, band {band:.4})",
+                p.edge,
+                p.occupancy,
+                p.utilization
+            );
+            abs_err_sum += err;
+        } else {
+            assert!(
+                measured < 0.06 + 2.0 * p.occupancy,
+                "{family}: near-idle link {} measured occupancy {measured:.4}",
+                p.edge
+            );
+        }
+    }
+    assert!(loaded >= 3, "{family}: optimized flow uses too few links");
+    // aggregate per-link error must be tighter than the per-link band
+    assert!(
+        abs_err_sum / loaded as f64 <= 0.06,
+        "{family}: mean per-link occupancy error {:.4}",
+        abs_err_sum / loaded as f64
+    );
+
+    // 2. mean delay: DES sojourn vs analytic D(φ)/λ̄ (Little).
+    let rel = (rep.mean_delay - analytic_delay).abs() / analytic_delay;
+    assert!(
+        rel < 0.2,
+        "{family}: DES delay {:.4}s vs analytic {:.4}s (rel {rel:.3})",
+        rep.mean_delay,
+        analytic_delay
+    );
+
+    // 3. total occupancy decomposition: links + CPUs ≈ D(φ).
+    let total_links: f64 = rep.link_occupancy.iter().sum();
+    let total_cpus: f64 = rep.cpu_occupancy.iter().sum();
+    let rel_total = (total_links + total_cpus - rep.avg_occupancy).abs()
+        / rep.avg_occupancy.max(1e-9);
+    assert!(rel_total < 1e-9, "{family}: per-station sums disagree with total");
+}
+
+#[test]
+fn des_matches_analytic_link_profile_on_abilene() {
+    crossval("abilene", 6000.0, 42);
+}
+
+#[test]
+fn des_matches_analytic_link_profile_on_grid_4x5() {
+    crossval("grid-4x5", 6000.0, 17);
+}
+
+#[test]
+fn analytic_profile_rejects_linear_costs() {
+    let mut net = build("abilene");
+    for c in &mut net.link_cost {
+        *c = CostFn::Linear { d: 1.0 };
+    }
+    let phi = Strategy::shortest_path_to_dest(&net);
+    assert!(sim::analytic_link_profile(&net, &phi).is_err());
+}

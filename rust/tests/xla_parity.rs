@@ -12,11 +12,18 @@ use scfo::prelude::*;
 use scfo::runtime::{EvalRuntime, XlaGp};
 use scfo::util::rng::Rng;
 
+/// Self-skip guard. Rust's libtest has no runtime skip verdict, so a test
+/// that cannot run still exits green — the explicit reason below is the
+/// contract that makes those passes auditable: CI logs are grepped for
+/// `skipped: missing XLA artifact` to distinguish "parity verified" from
+/// "parity not exercised" (see docs/TESTING.md).
 fn artifacts_or_skip() -> bool {
     if scfo::runtime::artifacts_available() {
         true
     } else {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        eprintln!(
+            "skipped: missing XLA artifact — parity not exercised (build with `make artifacts`)"
+        );
         false
     }
 }
