@@ -457,6 +457,20 @@ impl GradientProjection {
         }
     }
 
+    /// Adopt a new network shape mid-run, warm-starting from `phi` (already
+    /// shaped for `net` — e.g. the control plane's per-stage row remap after
+    /// an application registers or drains). Keeps the tuned options
+    /// (including any boosted step size) but rebuilds the support mask and
+    /// workspace for the new stage count, so reconvergence is incremental
+    /// rather than from scratch.
+    pub fn rebind(&mut self, net: &Network, phi: &Strategy) {
+        let mut opts = self.opts.clone();
+        // a caller-supplied support mask is shaped for the old stage set;
+        // it cannot survive an application-set change
+        opts.support = None;
+        *self = GradientProjection::with_strategy(net, phi.clone(), opts);
+    }
+
     /// One GP slot: returns the iteration diagnostics. The accepted iterate
     /// is guaranteed feasible and loop-free. Allocation-free after
     /// construction (all buffers live in the [`Workspace`]).

@@ -140,6 +140,31 @@ pub struct DistributedBench {
     pub stale_reads: u64,
 }
 
+/// Control-plane measurements attached to a [`GpBenchResult`] when the
+/// bench drives the multi-tenant control plane (`scfo bench --json
+/// --control`). These are the BENCH.json v4 columns: admission latency,
+/// apps served, and warm-vs-cold reconvergence after an app arrival.
+#[derive(Clone, Debug)]
+pub struct ControlBench {
+    /// Serving slots executed.
+    pub slots: usize,
+    /// Register attempts (accepted + rejected).
+    pub apps_registered: usize,
+    pub admission_accepted: usize,
+    pub admission_rejected: usize,
+    /// Wall-clock seconds per admission evaluation (probe included).
+    pub admission_latency_secs_mean: f64,
+    pub admission_latency_secs_p95: f64,
+    /// Epoch rebuilds committed during the run.
+    pub epochs: u64,
+    /// GP iterations to reach within 2% of the post-arrival optimum from
+    /// the control plane's warm (probe-seeded) strategy …
+    pub reconverge_iters_warm: usize,
+    /// … and from a cold min-hop restart on the same network. Warm must be
+    /// measurably smaller (asserted by `rust/tests/control.rs`).
+    pub reconverge_iters_cold: usize,
+}
+
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
 /// trajectory and a peak-RSS proxy. Emitted into `BENCH.json` by
 /// `scfo bench --json`; schema documented in `docs/PERFORMANCE.md`.
@@ -171,6 +196,9 @@ pub struct GpBenchResult {
     /// Present when the bench ran the asynchronous distributed runtime
     /// (`iter_secs` is then the wall time per measurement epoch).
     pub distributed: Option<DistributedBench>,
+    /// Present when the bench drove the multi-tenant control plane
+    /// (`iter_secs` is then the optimizer latency per served slot).
+    pub control: Option<ControlBench>,
 }
 
 /// Peak resident-set high-water mark of this process (Linux `VmHWM`);
@@ -235,6 +263,7 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
         peak_rss_bytes: peak_rss_bytes(),
         dynamics: None,
         distributed: None,
+        control: None,
     })
 }
 
@@ -329,6 +358,7 @@ pub fn bench_distributed_scenario(
             dropped: stats.transport.dropped_total(),
             stale_reads: stats.stale_reads,
         }),
+        control: None,
     })
 }
 
@@ -402,6 +432,106 @@ pub fn bench_serving_scenario(
             summary,
         }),
         distributed: None,
+        control: None,
+    })
+}
+
+/// Control-plane bench: serve the named scenario through the multi-tenant
+/// [`crate::control::ControlPlane`] for `slots` slots, registering one app
+/// a third of the way in (admission latency is measured by the plane) and
+/// draining it at two thirds. After the arrival, warm-vs-cold reconvergence
+/// is measured offline: GP iterations to come within 2% of a long reference
+/// solve's cost, once from the plane's committed (probe-seeded) strategy
+/// and once from a cold min-hop start on the same post-arrival network.
+/// `iter_secs` records the optimizer latency per slot; the result's
+/// `control` block carries the BENCH.json v4 columns.
+pub fn bench_control_scenario(family: &str, slots: usize) -> anyhow::Result<GpBenchResult> {
+    use crate::algo::gp::{GpOptions, GradientProjection};
+    use crate::control::{iters_to_reach, AppSpec, AppStatus, ControlOptions, ControlPlane};
+    use crate::scenarios::{Congestion, ScenarioSpec};
+    use crate::strategy::Strategy;
+
+    anyhow::ensure!(slots >= 3, "control bench needs at least 3 slots");
+    let spec = ScenarioSpec::named(family, Congestion::Light)?;
+    let sc = spec.effective_base();
+    let t0 = Instant::now();
+    let mut plane = ControlPlane::new(sc, ControlOptions::default())?;
+    let build_secs = t0.elapsed().as_secs_f64();
+    let n = plane.graph().n();
+
+    let mut iter_secs = Vec::with_capacity(slots);
+    let mut cost_trajectory = Vec::with_capacity(slots);
+    let serve = |plane: &mut ControlPlane,
+                 iter_secs: &mut Vec<f64>,
+                 costs: &mut Vec<f64>,
+                 k: usize|
+     -> anyhow::Result<()> {
+        for _ in 0..k {
+            let m = plane.run_slot()?;
+            iter_secs.push(m.optimizer_latency);
+            costs.push(m.cost);
+        }
+        Ok(())
+    };
+
+    let third = slots / 3;
+    serve(&mut plane, &mut iter_secs, &mut cost_trajectory, third)?;
+
+    // the arrival: one modest app at the far end of the topology
+    let arrival = AppSpec {
+        id: "bench-arrival".into(),
+        dest: n - 1,
+        num_tasks: 2,
+        packet_sizes: vec![10.0, 5.0, 1.0],
+        rates: vec![(0, 0.2)],
+        status: AppStatus::Active,
+    };
+    let decision = plane.register(arrival)?;
+
+    // warm-vs-cold reconvergence on the post-arrival truth network
+    let mut truth = plane.server.net.clone();
+    plane.server.workload.apply_true_rates(&mut truth);
+    let warm_phi = plane.server.optimizer.strategy().clone();
+    let cold_phi = Strategy::shortest_path_to_dest(&truth);
+    let mut reference =
+        GradientProjection::with_strategy(&truth, cold_phi.clone(), GpOptions::default());
+    let target = reference.run(&truth, 4000).final_cost;
+    let reconverge_iters_warm = iters_to_reach(&truth, &warm_phi, target, 0.02, 4000);
+    let reconverge_iters_cold = iters_to_reach(&truth, &cold_phi, target, 0.02, 4000);
+
+    serve(&mut plane, &mut iter_secs, &mut cost_trajectory, third)?;
+    if decision.accepted() {
+        plane.drain("bench-arrival")?;
+    }
+    let remaining = slots - iter_secs.len();
+    serve(&mut plane, &mut iter_secs, &mut cost_trajectory, remaining)?;
+
+    let control = ControlBench {
+        slots,
+        apps_registered: (plane.stats.admission_accepted + plane.stats.admission_rejected)
+            as usize,
+        admission_accepted: plane.stats.admission_accepted as usize,
+        admission_rejected: plane.stats.admission_rejected as usize,
+        admission_latency_secs_mean: plane.stats.admission_latency.mean(),
+        admission_latency_secs_p95: plane.stats.admission_latency.percentile(95.0),
+        epochs: plane.epoch(),
+        reconverge_iters_warm,
+        reconverge_iters_cold,
+    };
+    let net = &plane.server.net;
+    Ok(GpBenchResult {
+        name: family.to_string(),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs,
+        cost_trajectory,
+        peak_rss_bytes: peak_rss_bytes(),
+        dynamics: None,
+        distributed: None,
+        control: Some(control),
     })
 }
 
@@ -476,6 +606,40 @@ impl GpBenchResult {
                 o.insert("stale_reads".into(), Json::Num(dist.stale_reads as f64));
             }
         }
+        if let Some(ctl) = &self.control {
+            if let Json::Obj(o) = &mut doc {
+                o.insert("slots".into(), Json::Num(ctl.slots as f64));
+                o.insert(
+                    "apps_registered".into(),
+                    Json::Num(ctl.apps_registered as f64),
+                );
+                o.insert(
+                    "admission_accepted".into(),
+                    Json::Num(ctl.admission_accepted as f64),
+                );
+                o.insert(
+                    "admission_rejected".into(),
+                    Json::Num(ctl.admission_rejected as f64),
+                );
+                o.insert(
+                    "admission_latency_secs_mean".into(),
+                    Json::Num(ctl.admission_latency_secs_mean),
+                );
+                o.insert(
+                    "admission_latency_secs_p95".into(),
+                    Json::Num(ctl.admission_latency_secs_p95),
+                );
+                o.insert("control_epochs".into(), Json::Num(ctl.epochs as f64));
+                o.insert(
+                    "reconverge_iters_warm".into(),
+                    Json::Num(ctl.reconverge_iters_warm as f64),
+                );
+                o.insert(
+                    "reconverge_iters_cold".into(),
+                    Json::Num(ctl.reconverge_iters_cold as f64),
+                );
+            }
+        }
         if let Some(dyn_) = &self.dynamics {
             if let Json::Obj(o) = &mut doc {
                 o.insert("workload".into(), Json::Str(dyn_.workload.clone()));
@@ -504,8 +668,11 @@ impl GpBenchResult {
 /// (`workload`, `slots`, `detections`, `regret_*`, `reconvergence_slots_*`);
 /// 3 added the optional distributed-runtime columns (`shards`, `transport`,
 /// `faults`, `convergence_secs`, `converged`, `rounds`, `messages`,
-/// `bytes_sent`, `max_queue_depth`, `dropped`, `stale_reads`).
-pub const BENCH_JSON_VERSION: f64 = 3.0;
+/// `bytes_sent`, `max_queue_depth`, `dropped`, `stale_reads`); 4 added the
+/// optional control-plane columns (`apps_registered`,
+/// `admission_accepted`/`_rejected`, `admission_latency_secs_mean`/`_p95`,
+/// `control_epochs`, `reconverge_iters_warm`/`_cold`).
+pub const BENCH_JSON_VERSION: f64 = 4.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
@@ -637,7 +804,7 @@ mod tests {
         assert_eq!(res.iter_secs.len() as u64, d.rounds);
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(3.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(BENCH_JSON_VERSION));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         assert_eq!(sc.get("transport").unwrap().as_str(), Some("sim-net"));
         assert_eq!(sc.get("faults").unwrap().as_str(), Some("lossy"));
@@ -646,6 +813,37 @@ mod tests {
         assert!(sc.get("max_queue_depth").unwrap().as_usize().unwrap() > 0);
         assert!(sc.get("rounds").unwrap().as_usize().unwrap() > 0);
         assert_eq!(sc.get("converged").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn control_bench_emits_v4_columns() {
+        let res = bench_control_scenario("abilene", 30).unwrap();
+        assert_eq!(res.iter_secs.len(), 30);
+        let c = res.control.as_ref().expect("control block present");
+        assert_eq!(c.apps_registered, 1);
+        assert_eq!(c.admission_accepted + c.admission_rejected, 1);
+        assert!(c.admission_latency_secs_mean > 0.0);
+        assert!(c.reconverge_iters_cold > 0);
+        assert!(
+            c.reconverge_iters_warm <= c.reconverge_iters_cold,
+            "warm {} vs cold {}",
+            c.reconverge_iters_warm,
+            c.reconverge_iters_cold
+        );
+        let doc = gp_bench_json(&[res]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(4.0));
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "apps_registered",
+            "admission_accepted",
+            "admission_latency_secs_mean",
+            "control_epochs",
+            "reconverge_iters_warm",
+            "reconverge_iters_cold",
+        ] {
+            assert!(sc.get(key).is_some(), "missing v4 column {key}");
+        }
     }
 
     #[test]

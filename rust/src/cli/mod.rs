@@ -85,6 +85,56 @@ impl Args {
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(String::as_str)
     }
+
+    /// The values of every valued flag (order: flag-name order). Used by
+    /// [`guard_subcommand`] to detect a flag that swallowed the subcommand
+    /// word.
+    pub fn flag_values(&self) -> impl Iterator<Item = &str> {
+        self.flags.values().map(String::as_str)
+    }
+}
+
+/// Guard against the flags-before-subcommand parser quirk: a bare `--flag`
+/// followed by a non-flag token parses as a *valued* flag, so
+/// `scfo trace --json replay t.json` silently eats `replay` as the value of
+/// `--json` instead of selecting the subcommand. Call with the command's
+/// valid subcommand words; for single-level commands (`serve`, `bench`)
+/// pass an empty list and stray positionals are rejected instead.
+///
+/// Rules:
+/// * `subcommands` empty — the command takes flags only: any positional is
+///   an error (it is either a typo or a flag-eaten invocation).
+/// * otherwise — the first positional must be one of `subcommands`. When it
+///   is missing or unknown, a flag value matching a subcommand word turns
+///   the error into the precise "flags must come after the subcommand"
+///   diagnosis.
+pub fn guard_subcommand(args: &Args, cmd: &str, subcommands: &[&str]) -> anyhow::Result<()> {
+    if subcommands.is_empty() {
+        if let Some(stray) = args.subcommand() {
+            anyhow::bail!(
+                "'{cmd}' takes no subcommand, got '{stray}' (flags must come after '{cmd}')"
+            );
+        }
+        return Ok(());
+    }
+    match args.subcommand() {
+        Some(s) if subcommands.contains(&s) => Ok(()),
+        other => {
+            if let Some(eaten) = args.flag_values().find(|v| subcommands.contains(v)) {
+                anyhow::bail!(
+                    "a flag before the subcommand consumed '{eaten}': flags must come after \
+                     the subcommand (use `scfo {cmd} {eaten} --flags...`)"
+                );
+            }
+            let list = subcommands.join("|");
+            match other {
+                Some(s) => anyhow::bail!("unknown {cmd} subcommand '{s}' ({list})"),
+                None => anyhow::bail!(
+                    "missing {cmd} subcommand ({list}); flags must come after the subcommand"
+                ),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +183,65 @@ mod tests {
         let a = parse("run --quiet");
         assert!(a.switch("quiet"));
         assert_eq!(a.flag("quiet"), None);
+    }
+
+    #[test]
+    fn guard_serve_rejects_stray_positionals() {
+        // `serve` is flags-only
+        assert!(guard_subcommand(&parse("serve --slots 100"), "serve", &[]).is_ok());
+        let err = guard_subcommand(&parse("serve run --slots 100"), "serve", &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("takes no subcommand"), "{err}");
+    }
+
+    #[test]
+    fn guard_bench_rejects_stray_positionals() {
+        assert!(guard_subcommand(&parse("bench --json --iters 25"), "bench", &[]).is_ok());
+        assert!(guard_subcommand(&parse("bench gp --json"), "bench", &[]).is_err());
+    }
+
+    #[test]
+    fn guard_trace_diagnoses_flag_eaten_subcommand() {
+        let subs = ["record", "replay", "stats"];
+        assert!(guard_subcommand(&parse("trace replay t.json --json o.json"), "trace", &subs).is_ok());
+        // `--json replay` eats the subcommand word: precise diagnosis
+        let err = guard_subcommand(&parse("trace --json replay t.json"), "trace", &subs)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("flags must come after the subcommand"), "{err}");
+        assert!(err.contains("replay"), "{err}");
+        // plain missing subcommand
+        let err = guard_subcommand(&parse("trace --slots 40"), "trace", &subs)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing trace subcommand"), "{err}");
+        // unknown subcommand stays an unknown-subcommand error
+        let err = guard_subcommand(&parse("trace wipe t.json"), "trace", &subs)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown trace subcommand 'wipe'"), "{err}");
+    }
+
+    #[test]
+    fn guard_distributed_diagnoses_flag_eaten_subcommand() {
+        let subs = ["run", "faults"];
+        assert!(guard_subcommand(&parse("distributed run --shards 4"), "distributed", &subs).is_ok());
+        assert!(guard_subcommand(&parse("distributed faults"), "distributed", &subs).is_ok());
+        let err = guard_subcommand(&parse("distributed --faults run"), "distributed", &subs)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("consumed 'run'"), "{err}");
+    }
+
+    #[test]
+    fn guard_scenarios_covers_list_and_run() {
+        let subs = ["list", "run"];
+        assert!(guard_subcommand(&parse("scenarios run --all"), "scenarios", &subs).is_ok());
+        let err = guard_subcommand(&parse("scenarios --jobs run --all"), "scenarios", &subs)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("consumed 'run'"), "{err}");
     }
 
     #[test]

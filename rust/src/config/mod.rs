@@ -183,7 +183,18 @@ impl Scenario {
             ("packet_base", Json::Num(self.packet_base)),
             ("packet_decay", Json::Num(self.packet_decay)),
             ("comp_weight", Json::Num(self.comp_weight)),
-            ("seed", Json::Num(self.seed as f64)),
+            // seeds below 2^53 stay human-readable numbers; larger ones use
+            // the lossless hex form (f64 would silently round them, and the
+            // control plane's checkpoint restore rebuilds the topology from
+            // this seed — see Json::from_u64)
+            (
+                "seed",
+                if self.seed < (1u64 << 53) {
+                    Json::Num(self.seed as f64)
+                } else {
+                    Json::from_u64(self.seed)
+                },
+            ),
         ])
     }
 
@@ -213,7 +224,10 @@ impl Scenario {
             packet_base: getf("packet_base", 10.0),
             packet_decay: getf("packet_decay", 5.0),
             comp_weight: getf("comp_weight", 1.0),
-            seed: getf("seed", 2023.0) as u64,
+            seed: v
+                .get("seed")
+                .and_then(Json::as_u64_lossless)
+                .unwrap_or(2023),
         })
     }
 
@@ -278,6 +292,21 @@ mod tests {
         let sc = Scenario::table2("geant").unwrap();
         let re = Scenario::from_json(&sc.to_json()).unwrap();
         assert_eq!(format!("{sc:?}"), format!("{re:?}"));
+    }
+
+    #[test]
+    fn huge_seeds_roundtrip_losslessly() {
+        // seeds past 2^53 would corrupt through f64; the hex form keeps the
+        // deterministic topology rebuild (checkpoint restore) exact
+        let mut sc = Scenario::table2("abilene").unwrap();
+        sc.seed = (1u64 << 53) + 1;
+        let re = Scenario::from_json(&sc.to_json()).unwrap();
+        assert_eq!(re.seed, sc.seed);
+        // small seeds stay plain numbers for config readability
+        sc.seed = 2023;
+        let v = sc.to_json();
+        assert_eq!(v.get("seed").unwrap().as_usize(), Some(2023));
+        assert_eq!(Scenario::from_json(&v).unwrap().seed, 2023);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Admission control: feasibility gate against the congestion-aware
+//! capacity region.
+//!
+//! The M/M/1 queue costs `F/(C − F)` blow up at capacity — admitting an
+//! application that pushes any link or CPU past its capacity makes the
+//! operating point infeasible no matter how the optimizer routes. Before a
+//! register/update commits, the [`AdmissionController`] therefore evaluates
+//! the *candidate* network (current fleet + the new spec) at a probed
+//! operating point: warm-start φ (surviving apps keep their rows, the
+//! candidate gets min-hop seeding), run a short burst of GP iterations, and
+//! require
+//!
+//! 1. every link utilization `F_e / C_e` and CPU utilization `G_i / C_i`
+//!    strictly below a configurable headroom fraction, and
+//! 2. the predicted aggregate-cost increase within a configurable budget.
+//!
+//! Accepts return the probed strategy so the commit path can warm-start the
+//! live optimizer from the already-reconverged point; rejects return a
+//! machine-readable reason (surfaced as HTTP 409 by the ops API).
+
+use crate::algo::gp::{GpOptions, GradientProjection};
+use crate::app::Network;
+use crate::flow::FlowState;
+use crate::strategy::Strategy;
+use crate::util::json::Json;
+
+/// Admission policy knobs.
+#[derive(Clone, Debug)]
+pub struct AdmissionOptions {
+    /// Utilization ceiling as a fraction of capacity: admit only if every
+    /// link/CPU stays strictly below `headroom · C` at the probed point.
+    pub headroom: f64,
+    /// Reject if the probed aggregate cost exceeds the current cost by more
+    /// than this (absolute). `f64::INFINITY` disables the budget.
+    pub max_cost_increase: f64,
+    /// GP iterations spent probing the candidate operating point. More
+    /// iterations tighten the estimate (and warm the commit further) at the
+    /// price of admission latency — the tradeoff BENCH.json v4 measures.
+    pub probe_iters: usize,
+}
+
+impl Default for AdmissionOptions {
+    fn default() -> Self {
+        AdmissionOptions {
+            headroom: 0.9,
+            max_cost_increase: f64::INFINITY,
+            probe_iters: 60,
+        }
+    }
+}
+
+/// The outcome of an admission evaluation.
+#[derive(Clone, Debug)]
+pub enum AdmissionDecision {
+    Accepted {
+        /// Aggregate cost at the probed operating point.
+        predicted_cost: f64,
+        /// Worst link/CPU utilization at the probed point (diagnostics).
+        peak_utilization: f64,
+        /// The probed strategy — commit warm-starts the optimizer from it.
+        probe: Strategy,
+    },
+    Rejected {
+        /// Human- and machine-readable reason (`reason` field of the HTTP
+        /// 409 body).
+        reason: String,
+    },
+}
+
+impl AdmissionDecision {
+    pub fn accepted(&self) -> bool {
+        matches!(self, AdmissionDecision::Accepted { .. })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            AdmissionDecision::Accepted {
+                predicted_cost,
+                peak_utilization,
+                ..
+            } => Json::obj(vec![
+                ("accepted", Json::Bool(true)),
+                ("predicted_cost", Json::Num(*predicted_cost)),
+                ("peak_utilization", Json::Num(*peak_utilization)),
+            ]),
+            AdmissionDecision::Rejected { reason } => Json::obj(vec![
+                ("accepted", Json::Bool(false)),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+        }
+    }
+}
+
+/// The admission gate. Stateless between evaluations; the control plane
+/// owns the accept/reject counters and latency histogram.
+#[derive(Clone, Debug, Default)]
+pub struct AdmissionController {
+    pub opts: AdmissionOptions,
+}
+
+impl AdmissionController {
+    pub fn new(opts: AdmissionOptions) -> AdmissionController {
+        AdmissionController { opts }
+    }
+
+    /// Evaluate a candidate network at its probed operating point.
+    /// `warm` must be feasible and loop-free for `net` (the control plane
+    /// passes the per-stage row remap of the live φ with min-hop seeding
+    /// for the candidate app); `current_cost` is the fleet's aggregate cost
+    /// before the change (the cost-budget baseline).
+    pub fn evaluate(
+        &self,
+        net: &Network,
+        warm: &Strategy,
+        current_cost: f64,
+    ) -> AdmissionDecision {
+        let mut gp = GradientProjection::with_strategy(net, warm.clone(), GpOptions::default());
+        gp.run(net, self.opts.probe_iters);
+        let fs = match FlowState::solve(net, &gp.phi) {
+            Ok(fs) => fs,
+            Err(e) => {
+                return AdmissionDecision::Rejected {
+                    reason: format!("probe produced an unsolvable strategy: {e}"),
+                }
+            }
+        };
+        let headroom = self.opts.headroom;
+        let mut peak = 0.0f64;
+        for e in 0..net.m() {
+            if let Some(cap) = net.link_cost[e].capacity() {
+                let util = fs.link_flow[e] / cap;
+                peak = peak.max(util);
+                if util >= headroom {
+                    let (i, j) = net.graph.edge(e);
+                    return AdmissionDecision::Rejected {
+                        reason: format!(
+                            "link ({i} -> {j}) utilization {util:.3} >= headroom {headroom:.2}"
+                        ),
+                    };
+                }
+            }
+        }
+        for i in 0..net.n() {
+            if let Some(cap) = net.comp_cost[i].capacity() {
+                let util = fs.workload[i] / cap;
+                peak = peak.max(util);
+                if util >= headroom {
+                    return AdmissionDecision::Rejected {
+                        reason: format!(
+                            "cpu {i} utilization {util:.3} >= headroom {headroom:.2}"
+                        ),
+                    };
+                }
+            }
+        }
+        let delta = fs.total_cost - current_cost;
+        if current_cost.is_finite() && delta > self.opts.max_cost_increase {
+            return AdmissionDecision::Rejected {
+                reason: format!(
+                    "predicted cost increase {delta:.4} exceeds budget {:.4}",
+                    self.opts.max_cost_increase
+                ),
+            };
+        }
+        AdmissionDecision::Accepted {
+            predicted_cost: fs.total_cost,
+            peak_utilization: peak,
+            probe: gp.phi,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::small_net;
+
+    #[test]
+    fn feasible_candidate_is_accepted_with_probe() {
+        let net = small_net(true);
+        let warm = Strategy::shortest_path_to_dest(&net);
+        let ctl = AdmissionController::default();
+        let d = ctl.evaluate(&net, &warm, f64::INFINITY);
+        match d {
+            AdmissionDecision::Accepted {
+                predicted_cost,
+                peak_utilization,
+                ref probe,
+            } => {
+                assert!(predicted_cost > 0.0 && predicted_cost.is_finite());
+                assert!(peak_utilization < ctl.opts.headroom);
+                probe.validate(&net).unwrap();
+            }
+            AdmissionDecision::Rejected { ref reason } => panic!("rejected: {reason}"),
+        }
+        assert!(d.to_json().get("accepted").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn overload_is_rejected_with_a_reason() {
+        let mut net = small_net(true);
+        // scale demand far past any queue capacity
+        for app in &mut net.apps {
+            for r in &mut app.input_rates {
+                *r *= 1e4;
+            }
+        }
+        let warm = Strategy::shortest_path_to_dest(&net);
+        let ctl = AdmissionController::default();
+        match ctl.evaluate(&net, &warm, 1.0) {
+            AdmissionDecision::Rejected { reason } => {
+                assert!(
+                    reason.contains("utilization"),
+                    "reason should name the bottleneck: {reason}"
+                );
+            }
+            AdmissionDecision::Accepted { .. } => panic!("overload admitted"),
+        }
+    }
+
+    #[test]
+    fn cost_budget_rejects_expensive_candidates() {
+        let net = small_net(true);
+        let warm = Strategy::shortest_path_to_dest(&net);
+        let ctl = AdmissionController::new(AdmissionOptions {
+            max_cost_increase: 1e-12,
+            ..AdmissionOptions::default()
+        });
+        // current cost ~0 makes any real fleet blow the budget
+        match ctl.evaluate(&net, &warm, 0.0) {
+            AdmissionDecision::Rejected { reason } => {
+                assert!(reason.contains("budget"), "{reason}");
+            }
+            AdmissionDecision::Accepted { .. } => panic!("budget ignored"),
+        }
+    }
+}

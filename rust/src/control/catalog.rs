@@ -1,0 +1,495 @@
+//! Application catalog: the control plane's registry of service-chain
+//! applications and their lifecycle.
+//!
+//! Each [`AppSpec`] is a declarative description of one [`Application`] —
+//! destination, chain length, packet schedule, sparse per-node input rates —
+//! keyed by a caller-chosen string id. The catalog supports
+//! register / update / drain / remove at runtime; [`AppCatalog::build_network`]
+//! assembles the current fleet into a concrete [`Network`] on the control
+//! plane's fixed topology (one *epoch* per rebuild), and
+//! [`AppCatalog::remap`] expresses how application indices moved between two
+//! epochs so φ rows, rate-estimate rows and workload streams can follow
+//! their app (see [`crate::control::warm_strategy`]).
+//!
+//! Catalog order is registration order: surviving apps keep their relative
+//! position across rebuilds and new apps append, which keeps the remap a
+//! simple order-preserving injection.
+
+use crate::app::{Application, Network, StageRegistry};
+use crate::config::Scenario;
+use crate::graph::Graph;
+use crate::util::json::Json;
+
+/// Lifecycle state of a registered application.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppStatus {
+    /// Serving traffic.
+    Active,
+    /// Kept in the network (φ rows intact, in-flight work finishes) but its
+    /// exogenous input rates are forced to zero. A drained app can be
+    /// removed or re-activated by an update.
+    Draining,
+}
+
+impl AppStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppStatus::Active => "active",
+            AppStatus::Draining => "draining",
+        }
+    }
+}
+
+/// Declarative description of one service-chain application.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppSpec {
+    /// Caller-chosen unique id (HTTP: `POST /apps`, `DELETE /apps/{id}`).
+    pub id: String,
+    /// Result destination d_a.
+    pub dest: usize,
+    /// |𝒯_a| — chained tasks.
+    pub num_tasks: usize,
+    /// L_(a,k) per stage; len = num_tasks + 1.
+    pub packet_sizes: Vec<f64>,
+    /// Sparse exogenous input rates: (node, packets/sec).
+    pub rates: Vec<(usize, f64)>,
+    pub status: AppStatus,
+}
+
+impl AppSpec {
+    /// Shape/range validation against an `n`-node topology.
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.id.is_empty(), "app id must be non-empty");
+        let id_ok = self.id.len() <= 64
+            && self
+                .id
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+        anyhow::ensure!(
+            id_ok,
+            "app id '{}' must be <= 64 chars of [A-Za-z0-9._-]",
+            self.id
+        );
+        anyhow::ensure!(
+            self.dest < n,
+            "app '{}': dest {} out of range (n={n})",
+            self.id,
+            self.dest
+        );
+        anyhow::ensure!(
+            self.packet_sizes.len() == self.num_tasks + 1,
+            "app '{}': {} packet sizes for {} tasks (need tasks + 1)",
+            self.id,
+            self.packet_sizes.len(),
+            self.num_tasks
+        );
+        anyhow::ensure!(
+            self.packet_sizes.iter().all(|&l| l > 0.0 && l.is_finite()),
+            "app '{}': packet sizes must be positive and finite",
+            self.id
+        );
+        anyhow::ensure!(
+            !self.rates.is_empty(),
+            "app '{}': needs at least one source",
+            self.id
+        );
+        for &(node, rate) in &self.rates {
+            anyhow::ensure!(
+                node < n,
+                "app '{}': source node {node} out of range",
+                self.id
+            );
+            anyhow::ensure!(
+                rate >= 0.0 && rate.is_finite(),
+                "app '{}': rate at node {node} must be finite and >= 0",
+                self.id
+            );
+        }
+        let mut nodes: Vec<usize> = self.rates.iter().map(|&(i, _)| i).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        anyhow::ensure!(
+            nodes.len() == self.rates.len(),
+            "app '{}': duplicate source node",
+            self.id
+        );
+        Ok(())
+    }
+
+    /// Densify into an [`Application`]; a draining app's rates are zeroed.
+    pub fn application(&self, n: usize) -> Application {
+        let mut input_rates = vec![0.0; n];
+        if self.status == AppStatus::Active {
+            for &(node, rate) in &self.rates {
+                input_rates[node] = rate;
+            }
+        }
+        Application {
+            dest: self.dest,
+            num_tasks: self.num_tasks,
+            packet_sizes: self.packet_sizes.clone(),
+            input_rates,
+        }
+    }
+
+    /// Total offered input rate (zero while draining).
+    pub fn total_rate(&self) -> f64 {
+        if self.status == AppStatus::Active {
+            self.rates.iter().map(|&(_, r)| r).sum()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("dest", Json::Num(self.dest as f64)),
+            ("num_tasks", Json::Num(self.num_tasks as f64)),
+            ("packet_sizes", Json::arr_f64(&self.packet_sizes)),
+            (
+                "rates",
+                Json::Arr(
+                    self.rates
+                        .iter()
+                        .map(|&(i, r)| Json::Arr(vec![Json::Num(i as f64), Json::Num(r)]))
+                        .collect(),
+                ),
+            ),
+            ("status", Json::Str(self.status.name().into())),
+        ])
+    }
+
+    /// Parse an app spec from JSON (the `POST /apps` body and the snapshot
+    /// format). `rates` accepts `[[node, rate], ...]`; `packet_sizes`
+    /// defaults to the Table-II schedule (10/5/1-style decay) when absent.
+    pub fn from_json(v: &Json) -> anyhow::Result<AppSpec> {
+        let id = v
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("app spec: missing 'id'"))?
+            .to_string();
+        let dest = v
+            .get("dest")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("app spec '{id}': missing 'dest'"))?;
+        let num_tasks = v.get("num_tasks").and_then(Json::as_usize).unwrap_or(2);
+        let packet_sizes: Vec<f64> = match v.get("packet_sizes").and_then(Json::as_arr) {
+            Some(arr) => arr.iter().filter_map(Json::as_f64).collect(),
+            None => (0..=num_tasks)
+                .map(|k| (10.0 - 5.0 * k as f64).max(1.0))
+                .collect(),
+        };
+        let mut rates = Vec::new();
+        for pair in v
+            .get("rates")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("app spec '{id}': missing 'rates'"))?
+        {
+            let pair = pair
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("app spec '{id}': rates entries are [node, rate]"))?;
+            let node = pair[0]
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("app spec '{id}': bad source node"))?;
+            let rate = pair[1]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("app spec '{id}': bad source rate"))?;
+            rates.push((node, rate));
+        }
+        let status = match v.get("status").and_then(Json::as_str) {
+            Some("draining") => AppStatus::Draining,
+            _ => AppStatus::Active,
+        };
+        Ok(AppSpec {
+            id,
+            dest,
+            num_tasks,
+            packet_sizes,
+            rates,
+            status,
+        })
+    }
+}
+
+/// The registry of applications currently on (or draining from) the system.
+#[derive(Clone, Debug, Default)]
+pub struct AppCatalog {
+    /// Registration order — application index order in the built network.
+    apps: Vec<AppSpec>,
+}
+
+impl AppCatalog {
+    pub fn new() -> AppCatalog {
+        AppCatalog::default()
+    }
+
+    /// Seed a catalog from an already-built network's applications, ids
+    /// `app-0` … `app-{k-1}` (the control plane's bootstrap import: the
+    /// catalog rebuild then reproduces the network it was imported from).
+    pub fn import_network(net: &Network) -> AppCatalog {
+        let apps = net
+            .apps
+            .iter()
+            .enumerate()
+            .map(|(a, app)| AppSpec {
+                id: format!("app-{a}"),
+                dest: app.dest,
+                num_tasks: app.num_tasks,
+                packet_sizes: app.packet_sizes.clone(),
+                rates: app
+                    .input_rates
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &r)| r > 0.0)
+                    .map(|(i, &r)| (i, r))
+                    .collect(),
+                status: AppStatus::Active,
+            })
+            .collect();
+        AppCatalog { apps }
+    }
+
+    pub fn len(&self) -> usize {
+        self.apps.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.apps.is_empty()
+    }
+    pub fn iter(&self) -> impl Iterator<Item = &AppSpec> {
+        self.apps.iter()
+    }
+    pub fn get(&self, id: &str) -> Option<&AppSpec> {
+        self.apps.iter().find(|a| a.id == id)
+    }
+    /// Current ids in application-index order.
+    pub fn ids(&self) -> Vec<String> {
+        self.apps.iter().map(|a| a.id.clone()).collect()
+    }
+
+    /// Register a new application (id must be unused).
+    pub fn register(&mut self, spec: AppSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.get(&spec.id).is_none(),
+            "app '{}' already registered",
+            spec.id
+        );
+        self.apps.push(spec);
+        Ok(())
+    }
+
+    /// Replace an existing application's spec in place (same index).
+    pub fn update(&mut self, spec: AppSpec) -> anyhow::Result<()> {
+        let slot = self
+            .apps
+            .iter_mut()
+            .find(|a| a.id == spec.id)
+            .ok_or_else(|| anyhow::anyhow!("app '{}' is not registered", spec.id))?;
+        *slot = spec;
+        Ok(())
+    }
+
+    /// Stop an app's traffic (rates forced to zero) while keeping it in the
+    /// network so in-flight work drains through its φ rows.
+    pub fn drain(&mut self, id: &str) -> anyhow::Result<()> {
+        let app = self
+            .apps
+            .iter_mut()
+            .find(|a| a.id == id)
+            .ok_or_else(|| anyhow::anyhow!("app '{id}' is not registered"))?;
+        app.status = AppStatus::Draining;
+        Ok(())
+    }
+
+    /// Remove an app entirely (its φ rows disappear at the next rebuild).
+    pub fn remove(&mut self, id: &str) -> anyhow::Result<()> {
+        let before = self.apps.len();
+        self.apps.retain(|a| a.id != id);
+        anyhow::ensure!(self.apps.len() < before, "app '{id}' is not registered");
+        Ok(())
+    }
+
+    /// Densify the fleet in catalog order.
+    pub fn applications(&self, n: usize) -> Vec<Application> {
+        self.apps.iter().map(|a| a.application(n)).collect()
+    }
+
+    /// Assemble the current fleet into a network on the control plane's
+    /// fixed topology. Cost functions and computation weights follow the
+    /// scenario's recipe (w_i(a,k) = comp_weight · L_(a,k)), so a catalog
+    /// imported from a scenario build reproduces that network exactly.
+    pub fn build_network(&self, sc: &Scenario, graph: &Graph) -> anyhow::Result<Network> {
+        let n = graph.n();
+        for app in &self.apps {
+            app.validate(n)?;
+        }
+        let apps = self.applications(n);
+        let stages = StageRegistry::new(&apps);
+        let comp_weight = stages
+            .iter()
+            .map(|(_s, (a, k))| {
+                let w = if k < apps[a].num_tasks {
+                    sc.comp_weight * apps[a].packet_sizes[k]
+                } else {
+                    0.0
+                };
+                vec![w; n]
+            })
+            .collect();
+        let link_cost = (0..graph.m())
+            .map(|_| sc.link_kind.instantiate(sc.link_param))
+            .collect();
+        let comp_cost = (0..n).map(|_| sc.comp_kind.instantiate(sc.comp_param)).collect();
+        Network::new(graph.clone(), apps, link_cost, comp_cost, comp_weight)
+    }
+
+    /// For each id in `old_ids` (a previous epoch's application order), the
+    /// app's index in THIS catalog, or `None` if it was removed.
+    pub fn remap(&self, old_ids: &[String]) -> Vec<Option<usize>> {
+        old_ids
+            .iter()
+            .map(|id| self.apps.iter().position(|a| &a.id == id))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.apps.iter().map(AppSpec::to_json).collect())
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<AppCatalog> {
+        let mut catalog = AppCatalog::new();
+        for av in v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("catalog: expected an array of app specs"))?
+        {
+            catalog.register(AppSpec::from_json(av)?)?;
+        }
+        Ok(catalog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::util::rng::Rng;
+
+    fn scaffold() -> (Scenario, Graph, AppCatalog) {
+        let sc = Scenario::table2("abilene").unwrap();
+        let mut rng = Rng::new(sc.seed);
+        let net = sc.build(&mut rng).unwrap();
+        let graph = net.graph.clone();
+        let catalog = AppCatalog::import_network(&net);
+        (sc, graph, catalog)
+    }
+
+    #[test]
+    fn import_then_rebuild_reproduces_the_network() {
+        let sc = Scenario::table2("abilene").unwrap();
+        let mut rng = Rng::new(sc.seed);
+        let net = sc.build(&mut rng).unwrap();
+        let catalog = AppCatalog::import_network(&net);
+        let rebuilt = catalog.build_network(&sc, &net.graph).unwrap();
+        assert_eq!(rebuilt.num_stages(), net.num_stages());
+        for (a, b) in net.apps.iter().zip(&rebuilt.apps) {
+            assert_eq!(a.dest, b.dest);
+            assert_eq!(a.input_rates, b.input_rates);
+            assert_eq!(a.packet_sizes, b.packet_sizes);
+        }
+        assert_eq!(net.comp_weight, rebuilt.comp_weight);
+    }
+
+    #[test]
+    fn lifecycle_register_drain_remove() {
+        let (sc, graph, mut catalog) = scaffold();
+        let k = catalog.len();
+        let spec = AppSpec {
+            id: "video".into(),
+            dest: 3,
+            num_tasks: 2,
+            packet_sizes: vec![10.0, 5.0, 1.0],
+            rates: vec![(0, 0.4), (7, 0.2)],
+            status: AppStatus::Active,
+        };
+        catalog.register(spec.clone()).unwrap();
+        assert!(catalog.register(spec).is_err(), "duplicate id rejected");
+        assert_eq!(catalog.len(), k + 1);
+        let net = catalog.build_network(&sc, &graph).unwrap();
+        assert_eq!(net.apps.len(), k + 1);
+        assert_eq!(net.apps[k].input_rates[0], 0.4);
+
+        catalog.drain("video").unwrap();
+        let net = catalog.build_network(&sc, &graph).unwrap();
+        assert_eq!(net.apps.len(), k + 1, "draining apps stay in the network");
+        assert!(net.apps[k].input_rates.iter().all(|&r| r == 0.0));
+
+        catalog.remove("video").unwrap();
+        assert_eq!(catalog.len(), k);
+        assert!(catalog.drain("video").is_err());
+        assert!(catalog.remove("video").is_err());
+    }
+
+    #[test]
+    fn remap_tracks_surviving_apps() {
+        let (_sc, _graph, mut catalog) = scaffold();
+        let old_ids = catalog.ids();
+        catalog.remove(&old_ids[1]).unwrap();
+        catalog
+            .register(AppSpec {
+                id: "late".into(),
+                dest: 0,
+                num_tasks: 1,
+                packet_sizes: vec![4.0, 1.0],
+                rates: vec![(5, 0.1)],
+                status: AppStatus::Active,
+            })
+            .unwrap();
+        let remap = catalog.remap(&old_ids);
+        assert_eq!(remap[0], Some(0));
+        assert_eq!(remap[1], None, "removed app has no new index");
+        assert_eq!(remap[2], Some(1), "later apps shift down");
+        assert_eq!(catalog.get("late").map(|_| ()), Some(()));
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_shapes() {
+        let ok = AppSpec {
+            id: "x".into(),
+            dest: 2,
+            num_tasks: 1,
+            packet_sizes: vec![2.0, 1.0],
+            rates: vec![(0, 1.0)],
+            status: AppStatus::Active,
+        };
+        ok.validate(5).unwrap();
+        let mut bad = ok.clone();
+        bad.dest = 9;
+        assert!(bad.validate(5).is_err());
+        let mut bad = ok.clone();
+        bad.packet_sizes = vec![2.0];
+        assert!(bad.validate(5).is_err());
+        let mut bad = ok.clone();
+        bad.rates = vec![(0, 1.0), (0, 2.0)];
+        assert!(bad.validate(5).is_err(), "duplicate source");
+        let mut bad = ok.clone();
+        bad.rates = vec![(0, -1.0)];
+        assert!(bad.validate(5).is_err());
+        let mut bad = ok;
+        bad.id = "spaces not ok".into();
+        assert!(bad.validate(5).is_err());
+    }
+
+    #[test]
+    fn catalog_json_roundtrip() {
+        let (_sc, _graph, mut catalog) = scaffold();
+        catalog.drain(&catalog.ids()[0]).unwrap();
+        let text = catalog.to_json().to_string_pretty();
+        let re = AppCatalog::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re.len(), catalog.len());
+        for (a, b) in catalog.iter().zip(re.iter()) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(re.iter().next().unwrap().status, AppStatus::Draining);
+    }
+}

@@ -1,0 +1,300 @@
+//! Std-only HTTP/1.1 ops API — the system's first network-facing surface.
+//!
+//! A deliberately small server on [`std::net::TcpListener`] (no new
+//! crates): the listener is non-blocking and the control plane polls it
+//! *between serving slots* ([`OpsServer::poll`]), so every handler runs on
+//! the serving thread with exclusive `&mut ControlPlane` access — no locks,
+//! no handler/optimizer races, and request effects are ordered with slot
+//! boundaries. Connections are `Connection: close`; bodies are bounded.
+//!
+//! | Method & path      | Effect                                              |
+//! |--------------------|-----------------------------------------------------|
+//! | `GET /healthz`     | liveness: `{"ok":true,"epoch":E,"slot":S}`          |
+//! | `GET /status`      | epoch, fleet, cost, per-link/CPU utilization        |
+//! | `GET /metrics`     | Prometheus text format ([`crate::metrics`])         |
+//! | `POST /apps`       | register (or update, if the id exists) an app spec; |
+//! |                    | admission-checked — 200 accept / 409 reject         |
+//! | `DELETE /apps/{id}`| drain an active app; a draining app is removed      |
+//! | `POST /checkpoint` | atomic snapshot into the configured directory       |
+//!
+//! See `docs/CONTROL_PLANE.md` for the API reference with examples.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+use crate::control::{AppStatus, ControlPlane};
+use crate::util::json::Json;
+
+/// Upper bound on request head + body we are willing to buffer.
+const MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Per-connection socket timeout: a stalled client cannot stall serving
+/// for longer than this.
+const IO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// The ops listener. Bind once, then [`OpsServer::poll`] between slots.
+pub struct OpsServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+/// A parsed request.
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+impl OpsServer {
+    /// Bind the ops API (e.g. `127.0.0.1:8080`; port 0 picks a free port).
+    pub fn bind(addr: &str) -> anyhow::Result<OpsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind ops API on {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("ops API listener: {e}"))?;
+        let addr = listener.local_addr()?;
+        Ok(OpsServer { listener, addr })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept and serve every connection currently queued; returns the
+    /// number handled. Never blocks beyond the per-connection IO timeout.
+    pub fn poll(
+        &self,
+        plane: &mut ControlPlane,
+        checkpoint_dir: Option<&Path>,
+    ) -> usize {
+        let mut handled = 0;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    handled += 1;
+                    plane.stats.http.counter("scfo_http_requests_total").inc();
+                    if let Err(e) = handle_connection(stream, plane, checkpoint_dir) {
+                        plane.stats.http.counter("scfo_http_errors_total").inc();
+                        crate::log_warn!("ops API connection error: {e}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    crate::log_warn!("ops API accept error: {e}");
+                    break;
+                }
+            }
+        }
+        handled
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    plane: &mut ControlPlane,
+    checkpoint_dir: Option<&Path>,
+) -> anyhow::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let body = Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string();
+            let _ = respond(&mut stream, 400, "application/json", &body);
+            return Ok(());
+        }
+    };
+    let (code, content_type, body) = route(&req, plane, checkpoint_dir);
+    respond(&mut stream, code, content_type, &body)
+}
+
+/// Parse one HTTP/1.1 request off the stream: request line, headers (only
+/// `Content-Length` matters), body.
+fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let header_end = loop {
+        let k = stream.read(&mut chunk)?;
+        anyhow::ensure!(k > 0, "connection closed mid-request");
+        buf.extend_from_slice(&chunk[..k]);
+        anyhow::ensure!(buf.len() <= MAX_REQUEST_BYTES, "request too large");
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| anyhow::anyhow!("non-UTF8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .to_ascii_uppercase();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request line has no path"))?
+        .to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    anyhow::ensure!(
+        header_end + 4 + content_length <= MAX_REQUEST_BYTES,
+        "request body too large"
+    );
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let k = stream.read(&mut chunk)?;
+        anyhow::ensure!(k > 0, "connection closed mid-body");
+        body.extend_from_slice(&chunk[..k]);
+    }
+    body.truncate(content_length);
+    Ok(Request {
+        method,
+        path,
+        body: String::from_utf8(body).map_err(|_| anyhow::anyhow!("non-UTF8 body"))?,
+    })
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Dispatch a request against the control plane. Returns
+/// (status, content type, body).
+fn route(
+    req: &Request,
+    plane: &mut ControlPlane,
+    checkpoint_dir: Option<&Path>,
+) -> (u16, &'static str, String) {
+    let json = |code: u16, v: Json| (code, "application/json", v.to_string_pretty());
+    let err = |code: u16, msg: String| {
+        (
+            code,
+            "application/json",
+            Json::obj(vec![("error", Json::Str(msg))]).to_string_pretty(),
+        )
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => json(
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("version", Json::Str(crate::version().to_string())),
+                ("epoch", Json::Num(plane.epoch() as f64)),
+                ("slot", Json::Num(plane.slots_served() as f64)),
+            ]),
+        ),
+        ("GET", "/status") => json(200, plane.status_json()),
+        ("GET", "/metrics") => (200, "text/plain; version=0.0.4", plane.metrics_text()),
+        ("POST", "/apps") => {
+            let spec = match Json::parse(&req.body)
+                .map_err(|e| anyhow::anyhow!("{e}"))
+                .and_then(|v| crate::control::AppSpec::from_json(&v))
+            {
+                Ok(s) => s,
+                Err(e) => return err(400, format!("bad app spec: {e}")),
+            };
+            let exists = plane.catalog.get(&spec.id).is_some();
+            let outcome = if exists {
+                plane.update(spec)
+            } else {
+                plane.register(spec)
+            };
+            match outcome {
+                Ok(decision) => {
+                    let code = if decision.accepted() { 200 } else { 409 };
+                    let mut doc = match decision.to_json() {
+                        Json::Obj(o) => o,
+                        _ => unreachable!("decision serializes to an object"),
+                    };
+                    doc.insert("epoch".into(), Json::Num(plane.epoch() as f64));
+                    doc.insert(
+                        "action".into(),
+                        Json::Str(if exists { "update" } else { "register" }.into()),
+                    );
+                    json(code, Json::Obj(doc))
+                }
+                Err(e) => err(400, e.to_string()),
+            }
+        }
+        ("POST", "/checkpoint") => match checkpoint_dir {
+            Some(dir) => match plane.checkpoint(dir) {
+                Ok(path) => json(
+                    200,
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("path", Json::Str(path.display().to_string())),
+                        ("epoch", Json::Num(plane.epoch() as f64)),
+                        ("slot", Json::Num(plane.slots_served() as f64)),
+                    ]),
+                ),
+                Err(e) => err(500, format!("checkpoint failed: {e}")),
+            },
+            None => err(
+                409,
+                "no checkpoint directory configured (scfo serve --checkpoint DIR)".into(),
+            ),
+        },
+        ("DELETE", path) if path.starts_with("/apps/") => {
+            let id = &path["/apps/".len()..];
+            let Some(app) = plane.catalog.get(id) else {
+                return err(404, format!("app '{id}' is not registered"));
+            };
+            // two-step teardown: an active app drains first; deleting a
+            // draining app removes it
+            let outcome = if app.status == AppStatus::Active {
+                plane.drain(id).map(|()| "draining")
+            } else {
+                plane.remove(id).map(|()| "removed")
+            };
+            match outcome {
+                Ok(state) => json(
+                    200,
+                    Json::obj(vec![
+                        ("id", Json::Str(id.to_string())),
+                        ("state", Json::Str(state.into())),
+                        ("epoch", Json::Num(plane.epoch() as f64)),
+                    ]),
+                ),
+                Err(e) => err(500, e.to_string()),
+            }
+        }
+        ("GET", _) | ("POST", _) | ("DELETE", _) => err(404, format!("no route {} {}", req.method, req.path)),
+        _ => err(405, format!("method {} not allowed", req.method)),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    code: u16,
+    content_type: &str,
+    body: &str,
+) -> anyhow::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}

@@ -1,0 +1,730 @@
+//! Multi-tenant control plane: application lifecycle, admission control,
+//! checkpoint/restore, and the HTTP ops API.
+//!
+//! The serving loop ([`crate::serving::OnlineServer`]) optimizes a *fixed*
+//! application set; the paper's claim that the algorithm "adapts to changes
+//! in input rates … as an online algorithm" extends naturally to whole
+//! applications arriving and departing. This module owns that fleet view:
+//!
+//! * [`catalog`] — [`AppCatalog`]: register / update / drain / remove of
+//!   [`AppSpec`]s at runtime, and the epoch-versioned network rebuild;
+//! * [`admission`] — [`AdmissionController`]: before a register/update
+//!   commits, probe the candidate operating point and require every
+//!   link/CPU utilization strictly under a capacity headroom and the
+//!   predicted cost delta within budget;
+//! * [`snapshot`] — versioned, atomically-written checkpoints;
+//!   `scfo serve --checkpoint DIR --restore` resumes bit-identically;
+//! * [`http`] — a std-only HTTP/1.1 ops server (`scfo serve --http ADDR`):
+//!   `GET /healthz|/status|/metrics`, `POST /apps`, `DELETE /apps/{id}`,
+//!   `POST /checkpoint` — the system's first network-facing surface.
+//!
+//! ## Epoch rebuilds and warm starts
+//!
+//! Every fleet change bumps the control plane's *epoch*: the [`Network`] is
+//! re-assembled from the catalog on the fixed topology (same graph, same
+//! CSR arena), and the live optimizer is re-bound through
+//! [`crate::serving::Optimizer::rebind`] with a warm strategy —
+//! [`warm_strategy`] copies each surviving app's φ rows per stage through
+//! the [`StageRegistry`](crate::app::StageRegistry) remap and seeds rows
+//! for new apps by min-hop shortest path. Accepted admissions go one step
+//! further: the admission probe's already-reconverged strategy seeds the
+//! commit, and a temporary step-size boost (via
+//! [`crate::serving::Optimizer::scale_step`]) accelerates the residual
+//! reconvergence. `rust/tests/control.rs` pins that this warm path takes
+//! measurably fewer optimizer iterations than a cold restart; BENCH.json v4
+//! reports both counts.
+
+pub mod admission;
+pub mod catalog;
+pub mod http;
+pub mod snapshot;
+
+pub use admission::{AdmissionController, AdmissionDecision, AdmissionOptions};
+pub use catalog::{AppCatalog, AppSpec, AppStatus};
+pub use http::OpsServer;
+pub use snapshot::{SNAPSHOT_FILE, SNAPSHOT_VERSION};
+
+use std::path::{Path, PathBuf};
+
+use crate::algo::gp::{GpOptions, GradientProjection};
+use crate::app::Network;
+use crate::config::Scenario;
+use crate::flow::FlowState;
+use crate::graph::{topologies, Graph};
+use crate::metrics::{prometheus_line, Histogram, Registry};
+use crate::serving::{
+    AdaptationController, ControllerOptions, OnlineServer, Optimizer, ServerOptions, SlotMetrics,
+};
+use crate::strategy::Strategy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{Workload, WorkloadSpec};
+
+/// Control-plane configuration.
+#[derive(Clone, Debug)]
+pub struct ControlOptions {
+    pub server: ServerOptions,
+    pub admission: AdmissionOptions,
+    /// Adaptation-controller options (used when `adapt` is set).
+    pub controller: ControllerOptions,
+    /// Attach the change-point [`AdaptationController`] to the serving loop.
+    pub adapt: bool,
+    /// Step-size boost applied at each epoch rebuild, rescheduled back
+    /// after `boost_slots` served slots. 1.0 disables boosting.
+    pub boost: f64,
+    pub boost_slots: usize,
+    /// Nonstationary traffic spec; `None` = stationary Poisson at the
+    /// catalog's registered rates. Trace workloads cannot be checkpointed.
+    pub workload: Option<WorkloadSpec>,
+}
+
+impl Default for ControlOptions {
+    fn default() -> Self {
+        ControlOptions {
+            server: ServerOptions::default(),
+            admission: AdmissionOptions::default(),
+            controller: ControllerOptions::default(),
+            adapt: false,
+            boost: 3.0,
+            boost_slots: 10,
+            workload: None,
+        }
+    }
+}
+
+/// Operational counters exposed by `/metrics`.
+#[derive(Debug)]
+pub struct ControlStats {
+    /// Wall-clock seconds per admission evaluation (probe included).
+    pub admission_latency: Histogram,
+    pub admission_accepted: u64,
+    pub admission_rejected: u64,
+    /// HTTP request counters (`scfo_http_requests_total` etc.).
+    pub http: Registry,
+    /// Metrics of the most recent served slot.
+    pub last: Option<SlotMetrics>,
+}
+
+impl Default for ControlStats {
+    fn default() -> Self {
+        ControlStats {
+            admission_latency: Histogram::new(1024),
+            admission_accepted: 0,
+            admission_rejected: 0,
+            http: Registry::new(),
+            last: None,
+        }
+    }
+}
+
+/// The multi-tenant control plane: owns a running
+/// `OnlineServer<Box<dyn Optimizer>>` and manages the application fleet on
+/// it. See the module docs for the architecture.
+pub struct ControlPlane {
+    /// Topology + cost scaffold. Its app-generation fields seeded the
+    /// initial fleet (imported into the catalog at construction) and are
+    /// unused afterwards; the catalog is authoritative.
+    pub scenario: Scenario,
+    /// The fixed topology every epoch rebuilds on.
+    graph: Graph,
+    pub catalog: AppCatalog,
+    pub admission: AdmissionController,
+    pub server: OnlineServer<Box<dyn Optimizer>>,
+    pub opts: ControlOptions,
+    epoch: u64,
+    /// Slots until the rebuild boost is scaled back (0 = no boost active).
+    boost_left: usize,
+    pub stats: ControlStats,
+}
+
+impl ControlPlane {
+    /// Build a control plane from a scenario: the scenario's generated
+    /// applications become the initial catalog (`app-0` …), served by a
+    /// centralized GP optimizer from the min-hop initial strategy.
+    pub fn new(scenario: Scenario, opts: ControlOptions) -> anyhow::Result<ControlPlane> {
+        let mut rng = Rng::new(scenario.seed);
+        let net = scenario.build(&mut rng)?;
+        let graph = net.graph.clone();
+        let catalog = AppCatalog::import_network(&net);
+        let phi0 = Strategy::shortest_path_to_dest(&net);
+        let gp = GradientProjection::with_strategy(&net, phi0, GpOptions::default());
+        Self::assemble(scenario, graph, catalog, Box::new(gp), net, opts)
+    }
+
+    /// Like [`ControlPlane::new`] but serving through a caller-built
+    /// optimizer (e.g. [`crate::distributed::DistributedOptimizer`], which
+    /// must be constructed on the same initial network).
+    pub fn with_optimizer(
+        scenario: Scenario,
+        optimizer: Box<dyn Optimizer>,
+        opts: ControlOptions,
+    ) -> anyhow::Result<ControlPlane> {
+        let mut rng = Rng::new(scenario.seed);
+        let net = scenario.build(&mut rng)?;
+        let graph = net.graph.clone();
+        let catalog = AppCatalog::import_network(&net);
+        Self::assemble(scenario, graph, catalog, optimizer, net, opts)
+    }
+
+    fn assemble(
+        scenario: Scenario,
+        graph: Graph,
+        catalog: AppCatalog,
+        optimizer: Box<dyn Optimizer>,
+        net: Network,
+        opts: ControlOptions,
+    ) -> anyhow::Result<ControlPlane> {
+        let mut sopts = opts.server.clone();
+        sopts.seed = scenario.seed;
+        let workload = match &opts.workload {
+            Some(spec) => Workload::from_spec(spec, &net, sopts.slot_secs, scenario.seed)?,
+            None => Workload::stationary(&net, sopts.slot_secs, scenario.seed),
+        };
+        let mut server = OnlineServer::with_workload(net, optimizer, workload, sopts);
+        if opts.adapt {
+            server.attach_controller(AdaptationController::new(opts.controller.clone()));
+        }
+        Ok(ControlPlane {
+            scenario,
+            graph,
+            catalog,
+            admission: AdmissionController::new(opts.admission.clone()),
+            server,
+            opts,
+            epoch: 0,
+            boost_left: 0,
+            stats: ControlStats::default(),
+        })
+    }
+
+    /// The current rebuild epoch (bumped by every committed fleet change).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Serving slots completed.
+    pub fn slots_served(&self) -> usize {
+        self.server.slots_served()
+    }
+
+    /// The fixed topology.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Serve one slot; manages the epoch-rebuild boost expiry.
+    pub fn run_slot(&mut self) -> anyhow::Result<SlotMetrics> {
+        let m = self.server.run_slot()?;
+        if self.boost_left > 0 {
+            self.boost_left -= 1;
+            if self.boost_left == 0 && self.opts.boost > 1.0 {
+                self.server.optimizer.scale_step(1.0 / self.opts.boost);
+            }
+        }
+        self.stats.last = Some(m.clone());
+        Ok(m)
+    }
+
+    /// Aggregate cost of the live strategy at the workload's current true
+    /// rates (the admission cost-budget baseline and `/status` cost).
+    pub fn current_cost(&self) -> f64 {
+        let mut truth = self.server.net.clone();
+        self.server.workload.apply_true_rates(&mut truth);
+        match FlowState::solve(&truth, self.server.optimizer.strategy()) {
+            Ok(fs) => fs.total_cost,
+            Err(_) => f64::INFINITY,
+        }
+    }
+
+    /// Register a new application. Admission-checked: the decision is
+    /// returned either way, and only accepts mutate the fleet.
+    pub fn register(&mut self, spec: AppSpec) -> anyhow::Result<AdmissionDecision> {
+        spec.validate(self.graph.n())?;
+        anyhow::ensure!(
+            self.catalog.get(&spec.id).is_none(),
+            "app '{}' already registered",
+            spec.id
+        );
+        self.admit_and_commit(spec, false)
+    }
+
+    /// Update a registered application (rates, chain, destination).
+    /// Admission-checked like a register.
+    pub fn update(&mut self, spec: AppSpec) -> anyhow::Result<AdmissionDecision> {
+        spec.validate(self.graph.n())?;
+        anyhow::ensure!(
+            self.catalog.get(&spec.id).is_some(),
+            "app '{}' is not registered",
+            spec.id
+        );
+        self.admit_and_commit(spec, true)
+    }
+
+    fn admit_and_commit(
+        &mut self,
+        spec: AppSpec,
+        is_update: bool,
+    ) -> anyhow::Result<AdmissionDecision> {
+        let t0 = std::time::Instant::now();
+        let mut cand = self.catalog.clone();
+        if is_update {
+            cand.update(spec)?;
+        } else {
+            cand.register(spec)?;
+        }
+        let net = cand.build_network(&self.scenario, &self.graph)?;
+        let remap = cand.remap(&self.catalog.ids());
+        let warm = warm_strategy(
+            &self.server.net,
+            self.server.optimizer.strategy(),
+            &net,
+            &remap,
+        );
+        let decision = self.admission.evaluate(&net, &warm, self.current_cost());
+        self.stats
+            .admission_latency
+            .record(t0.elapsed().as_secs_f64());
+        match &decision {
+            AdmissionDecision::Accepted { probe, .. } => {
+                self.stats.admission_accepted += 1;
+                // commit with the candidate assembly already built for the
+                // probe — no second build_network/remap on the accept path
+                let probe = probe.clone();
+                self.commit(cand, net, &remap, probe);
+            }
+            AdmissionDecision::Rejected { .. } => self.stats.admission_rejected += 1,
+        }
+        Ok(decision)
+    }
+
+    /// Stop an app's traffic; its φ rows stay so in-flight work drains.
+    /// Load only decreases, so no admission check.
+    pub fn drain(&mut self, id: &str) -> anyhow::Result<()> {
+        let mut cand = self.catalog.clone();
+        cand.drain(id)?;
+        self.rebuild_and_commit(cand)
+    }
+
+    /// Remove an app entirely (usually after a drain).
+    pub fn remove(&mut self, id: &str) -> anyhow::Result<()> {
+        let mut cand = self.catalog.clone();
+        cand.remove(id)?;
+        self.rebuild_and_commit(cand)
+    }
+
+    /// Assemble the candidate network + warm strategy for an
+    /// unconditionally-admitted lifecycle change (drain/remove), then
+    /// commit it.
+    fn rebuild_and_commit(&mut self, catalog: AppCatalog) -> anyhow::Result<()> {
+        let net = catalog.build_network(&self.scenario, &self.graph)?;
+        let remap = catalog.remap(&self.catalog.ids());
+        let phi = warm_strategy(
+            &self.server.net,
+            self.server.optimizer.strategy(),
+            &net,
+            &remap,
+        );
+        self.commit(catalog, net, &remap, phi);
+        Ok(())
+    }
+
+    /// Commit a fleet change whose network, remap and warm strategy are
+    /// already assembled: rebind the optimizer (+ reconvergence boost) and
+    /// the serving state, adopt the catalog, bump the epoch.
+    fn commit(&mut self, catalog: AppCatalog, net: Network, remap: &[Option<usize>], phi: Strategy) {
+        self.server.optimizer.rebind(&net, &phi);
+        if self.opts.boost > 1.0 {
+            if self.boost_left == 0 {
+                self.server.optimizer.scale_step(self.opts.boost);
+            }
+            self.boost_left = self.opts.boost_slots; // extend an active boost
+        }
+        self.server.rebind_network(net, remap);
+        self.catalog = catalog;
+        self.epoch += 1;
+    }
+
+    // ---- checkpoint / restore ---------------------------------------------
+
+    /// Snapshot the full control-plane state as one JSON document (see
+    /// [`snapshot`] for the format and guarantees).
+    pub fn snapshot_json(&self) -> anyhow::Result<Json> {
+        Ok(Json::obj(vec![
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("scenario", self.scenario.to_json()),
+            ("catalog", self.catalog.to_json()),
+            ("phi", self.server.optimizer.strategy().to_json()),
+            (
+                "alpha",
+                match self.server.optimizer.step_size() {
+                    Some(a) => Json::Num(a),
+                    None => Json::Null,
+                },
+            ),
+            ("boost_left", Json::Num(self.boost_left as f64)),
+            ("server", self.server.state_json()?),
+            (
+                "admission_accepted",
+                Json::Num(self.stats.admission_accepted as f64),
+            ),
+            (
+                "admission_rejected",
+                Json::Num(self.stats.admission_rejected as f64),
+            ),
+            (
+                "admission_latency",
+                self.stats.admission_latency.state_json(),
+            ),
+        ]))
+    }
+
+    /// Write an atomic checkpoint into `dir`; returns the snapshot path.
+    pub fn checkpoint(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        snapshot::write_atomic(dir, &self.snapshot_json()?)
+    }
+
+    /// Resume from the checkpoint in `dir`. The topology rebuilds
+    /// deterministically from the scenario seed; catalog, φ, step size,
+    /// estimates, workload (model + RNG state) and controller state restore
+    /// exactly, so the serving loop continues bit-identically with an
+    /// uninterrupted run (pinned by `rust/tests/control.rs`).
+    pub fn restore(dir: &Path, opts: ControlOptions) -> anyhow::Result<ControlPlane> {
+        let doc = snapshot::load(dir)?;
+        let scenario = Scenario::from_json(
+            doc.get("scenario")
+                .ok_or_else(|| anyhow::anyhow!("snapshot: missing 'scenario'"))?,
+        )?;
+        let mut rng = Rng::new(scenario.seed);
+        let graph = topologies::by_name(&scenario.topology, &mut rng)?;
+        let catalog = AppCatalog::from_json(
+            doc.get("catalog")
+                .ok_or_else(|| anyhow::anyhow!("snapshot: missing 'catalog'"))?,
+        )?;
+        let net = catalog.build_network(&scenario, &graph)?;
+        let phi = Strategy::from_json(
+            &net.graph,
+            doc.get("phi")
+                .ok_or_else(|| anyhow::anyhow!("snapshot: missing 'phi'"))?,
+        )?;
+        phi.validate(&net)
+            .map_err(|e| anyhow::anyhow!("snapshot phi invalid for the rebuilt network: {e}"))?;
+        let alpha = doc
+            .get("alpha")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| GpOptions::default().alpha);
+        let gp = GradientProjection::with_strategy(
+            &net,
+            phi,
+            GpOptions {
+                alpha,
+                ..GpOptions::default()
+            },
+        );
+        let mut plane = Self::assemble(scenario, graph, catalog, Box::new(gp), net, opts)?;
+        plane.server.load_state_json(
+            doc.get("server")
+                .ok_or_else(|| anyhow::anyhow!("snapshot: missing 'server'"))?,
+        )?;
+        plane.epoch = doc.get("epoch").and_then(Json::as_usize).unwrap_or(0) as u64;
+        plane.boost_left = doc.get("boost_left").and_then(Json::as_usize).unwrap_or(0);
+        plane.stats.admission_accepted = doc
+            .get("admission_accepted")
+            .and_then(Json::as_usize)
+            .unwrap_or(0) as u64;
+        plane.stats.admission_rejected = doc
+            .get("admission_rejected")
+            .and_then(Json::as_usize)
+            .unwrap_or(0) as u64;
+        if let Some(h) = doc.get("admission_latency") {
+            plane.stats.admission_latency = Histogram::from_state_json(h)?;
+        }
+        Ok(plane)
+    }
+
+    // ---- ops surfaces ------------------------------------------------------
+
+    /// The `GET /status` document: epoch, slot, fleet, cost, per-link and
+    /// per-CPU utilization at the current true rates.
+    pub fn status_json(&self) -> Json {
+        let mut truth = self.server.net.clone();
+        self.server.workload.apply_true_rates(&mut truth);
+        let phi = self.server.optimizer.strategy();
+        let (cost, link_util, cpu_util) = match FlowState::solve(&truth, phi) {
+            Ok(fs) => {
+                let link: Vec<f64> = (0..truth.m())
+                    .map(|e| match truth.link_cost[e].capacity() {
+                        Some(cap) => fs.link_flow[e] / cap,
+                        None => 0.0,
+                    })
+                    .collect();
+                let cpu: Vec<f64> = (0..truth.n())
+                    .map(|i| match truth.comp_cost[i].capacity() {
+                        Some(cap) => fs.workload[i] / cap,
+                        None => 0.0,
+                    })
+                    .collect();
+                (fs.total_cost, link, cpu)
+            }
+            Err(_) => (f64::INFINITY, Vec::new(), Vec::new()),
+        };
+        let apps = self
+            .catalog
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("id", Json::Str(a.id.clone())),
+                    ("status", Json::Str(a.status.name().into())),
+                    ("dest", Json::Num(a.dest as f64)),
+                    ("num_tasks", Json::Num(a.num_tasks as f64)),
+                    ("total_rate", Json::Num(a.total_rate())),
+                ])
+            })
+            .collect();
+        let max = |xs: &[f64]| xs.iter().cloned().fold(0.0, f64::max);
+        Json::obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("slot", Json::Num(self.slots_served() as f64)),
+            ("cost", Json::Num(cost)),
+            ("apps", Json::Arr(apps)),
+            (
+                "utilization",
+                Json::obj(vec![
+                    ("link_max", Json::Num(max(&link_util))),
+                    ("cpu_max", Json::Num(max(&cpu_util))),
+                    ("links", Json::arr_f64(&link_util)),
+                    ("cpus", Json::arr_f64(&cpu_util)),
+                ]),
+            ),
+            (
+                "admission",
+                Json::obj(vec![
+                    ("accepted", Json::Num(self.stats.admission_accepted as f64)),
+                    ("rejected", Json::Num(self.stats.admission_rejected as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The `GET /metrics` document (Prometheus text exposition format,
+    /// rendered through [`crate::metrics`]).
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&prometheus_line("scfo_epoch", "gauge", self.epoch as f64));
+        out.push_str(&prometheus_line(
+            "scfo_slots_served_total",
+            "counter",
+            self.slots_served() as f64,
+        ));
+        out.push_str(&prometheus_line(
+            "scfo_apps_total",
+            "gauge",
+            self.catalog.len() as f64,
+        ));
+        out.push_str(&prometheus_line(
+            "scfo_apps_active",
+            "gauge",
+            self.catalog
+                .iter()
+                .filter(|a| a.status == AppStatus::Active)
+                .count() as f64,
+        ));
+        if let Some(last) = &self.stats.last {
+            out.push_str(&prometheus_line("scfo_cost", "gauge", last.cost));
+            out.push_str(&prometheus_line(
+                "scfo_expected_delay_seconds",
+                "gauge",
+                last.expected_delay,
+            ));
+            out.push_str(&prometheus_line(
+                "scfo_optimizer_latency_seconds",
+                "gauge",
+                last.optimizer_latency,
+            ));
+        }
+        out.push_str(&prometheus_line(
+            "scfo_admission_accepted_total",
+            "counter",
+            self.stats.admission_accepted as f64,
+        ));
+        out.push_str(&prometheus_line(
+            "scfo_admission_rejected_total",
+            "counter",
+            self.stats.admission_rejected as f64,
+        ));
+        if self.stats.admission_latency.count() > 0 {
+            out.push_str(&prometheus_line(
+                "scfo_admission_latency_seconds_mean",
+                "gauge",
+                self.stats.admission_latency.mean(),
+            ));
+            out.push_str(&prometheus_line(
+                "scfo_admission_latency_seconds_p95",
+                "gauge",
+                self.stats.admission_latency.percentile(95.0),
+            ));
+        }
+        out.push_str(&self.stats.http.prometheus_text());
+        out
+    }
+}
+
+/// Warm-start strategy for an epoch rebuild: start from the min-hop
+/// strategy on the new network (which seeds every new app's rows), then
+/// copy each surviving app's φ rows per stage through the stage-registry
+/// remap — `remap[old_app] = Some(new_app)`. Apps whose destination or
+/// chain length changed keep the min-hop seeding (their old rows are
+/// shaped for different exit/offload constraints). The topology — and
+/// hence the CSR arena — is unchanged, so rows copy verbatim.
+pub fn warm_strategy(
+    old_net: &Network,
+    old_phi: &Strategy,
+    new_net: &Network,
+    remap: &[Option<usize>],
+) -> Strategy {
+    let mut phi = Strategy::shortest_path_to_dest(new_net);
+    for (old_a, new_a) in remap.iter().enumerate() {
+        let Some(na) = new_a else { continue };
+        let old_app = &old_net.apps[old_a];
+        let new_app = &new_net.apps[*na];
+        if old_app.dest != new_app.dest || old_app.num_tasks != new_app.num_tasks {
+            continue;
+        }
+        for k in 0..old_app.num_stages() {
+            let so = old_net.stages.id(old_a, k);
+            let sn = new_net.stages.id(*na, k);
+            for i in 0..new_net.n() {
+                phi.row_mut(sn, i).copy_from_slice(old_phi.row(so, i));
+            }
+        }
+    }
+    phi
+}
+
+/// GP iterations needed, starting from `phi0`, to bring the aggregate cost
+/// within `rel_tol` (relative) of `target`; `max_iters` if never reached.
+/// The warm-vs-cold reconvergence comparison of BENCH.json v4 (and the
+/// acceptance test) runs this once from the control plane's warm strategy
+/// and once from the min-hop cold start, against a shared target computed
+/// by a long reference solve.
+pub fn iters_to_reach(
+    net: &Network,
+    phi0: &Strategy,
+    target: f64,
+    rel_tol: f64,
+    max_iters: usize,
+) -> usize {
+    let mut gp = GradientProjection::with_strategy(net, phi0.clone(), GpOptions::default());
+    let bound = target * (1.0 + rel_tol);
+    if gp.cost(net) <= bound {
+        return 0;
+    }
+    for it in 1..=max_iters {
+        if gp.step(net).cost <= bound {
+            return it;
+        }
+    }
+    max_iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::{Congestion, ScenarioSpec};
+
+    fn small_plane() -> ControlPlane {
+        // light congestion keeps the initial fleet comfortably inside the
+        // admission headroom, so the lifecycle tests exercise accepts
+        let spec = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+        ControlPlane::new(spec.effective_base(), ControlOptions::default()).unwrap()
+    }
+
+    fn tiny_app(id: &str, n: usize) -> AppSpec {
+        AppSpec {
+            id: id.into(),
+            dest: 2 % n,
+            num_tasks: 2,
+            packet_sizes: vec![10.0, 5.0, 1.0],
+            rates: vec![(5 % n, 0.3)],
+            status: AppStatus::Active,
+        }
+    }
+
+    #[test]
+    fn register_bumps_epoch_and_grows_fleet() {
+        let mut plane = small_plane();
+        plane.run_slot().unwrap();
+        let apps0 = plane.catalog.len();
+        let d = plane.register(tiny_app("svc-a", plane.graph().n())).unwrap();
+        assert!(d.accepted(), "{d:?}");
+        assert_eq!(plane.epoch(), 1);
+        assert_eq!(plane.catalog.len(), apps0 + 1);
+        assert_eq!(plane.server.net.apps.len(), apps0 + 1);
+        assert_eq!(
+            plane.server.optimizer.strategy().num_stages(),
+            plane.server.net.num_stages()
+        );
+        // serving continues across the rebuild
+        let m = plane.run_slot().unwrap();
+        assert!(m.cost.is_finite());
+        assert_eq!(plane.stats.admission_accepted, 1);
+    }
+
+    #[test]
+    fn drain_then_remove_shrinks_the_fleet() {
+        let mut plane = small_plane();
+        let n = plane.graph().n();
+        plane.register(tiny_app("svc-b", n)).unwrap();
+        let apps = plane.catalog.len();
+        plane.drain("svc-b").unwrap();
+        assert_eq!(plane.catalog.get("svc-b").unwrap().status, AppStatus::Draining);
+        assert_eq!(plane.catalog.len(), apps, "draining keeps the app");
+        plane.run_slot().unwrap();
+        plane.remove("svc-b").unwrap();
+        assert_eq!(plane.catalog.len(), apps - 1);
+        assert_eq!(plane.epoch(), 3);
+        plane.run_slot().unwrap();
+    }
+
+    #[test]
+    fn overloaded_register_is_rejected_and_fleet_untouched() {
+        let mut plane = small_plane();
+        let n = plane.graph().n();
+        let mut monster = tiny_app("monster", n);
+        monster.rates = vec![(0, 1e5)];
+        let d = plane.register(monster).unwrap();
+        assert!(!d.accepted());
+        assert_eq!(plane.epoch(), 0, "rejected register must not bump the epoch");
+        assert!(plane.catalog.get("monster").is_none());
+        assert_eq!(plane.stats.admission_rejected, 1);
+        plane.run_slot().unwrap();
+    }
+
+    #[test]
+    fn warm_strategy_preserves_surviving_rows() {
+        let plane = small_plane();
+        let old_net = &plane.server.net;
+        let old_phi = plane.server.optimizer.strategy();
+        // identity remap: warm == old rows for every stage
+        let remap: Vec<Option<usize>> = (0..old_net.apps.len()).map(Some).collect();
+        let warm = warm_strategy(old_net, old_phi, old_net, &remap);
+        assert_eq!(warm.max_diff(old_phi), 0.0);
+    }
+
+    #[test]
+    fn status_and_metrics_render() {
+        let mut plane = small_plane();
+        plane.run_slot().unwrap();
+        let status = plane.status_json();
+        assert!(status.get("epoch").is_some());
+        assert!(status.get("utilization").unwrap().get("link_max").is_some());
+        assert_eq!(
+            status.get("apps").unwrap().as_arr().unwrap().len(),
+            plane.catalog.len()
+        );
+        let metrics = plane.metrics_text();
+        assert!(metrics.contains("scfo_epoch"));
+        assert!(metrics.contains("scfo_slots_served_total 1"));
+        assert!(metrics.contains("scfo_cost"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Versioned checkpoint/restore for the control plane.
+//!
+//! A snapshot is one JSON document capturing everything the serving loop
+//! needs to resume **bit-identically** (pinned by `rust/tests/control.rs`):
+//!
+//! * the network spec — the base [`crate::config::Scenario`] scaffold
+//!   (topology + cost families; its graph rebuilds deterministically from
+//!   the seed) and the [`crate::control::AppCatalog`] fleet with lifecycle
+//!   states,
+//! * the live strategy φ (CSR arena rows; f64 values round-trip losslessly
+//!   through [`crate::util::json`]) and the optimizer step size,
+//! * the serving state — rate estimates, slot counter, delay histogram,
+//!   full workload state (per-stream model parameters + evolution state
+//!   such as the MMPP phase, and raw RNG words), and the adaptation
+//!   controller's EWMA/CUSUM/oracle state when attached,
+//! * the control-plane epoch and admission counters.
+//!
+//! Writes are atomic: the document lands in `snapshot.json.tmp` and is
+//! renamed over `snapshot.json`, so a crash mid-write never corrupts the
+//! last good checkpoint. Readers accept exactly the versions they know
+//! ([`SNAPSHOT_VERSION`]) and reject anything newer — the same policy as
+//! the trace format (`docs/WORKLOADS.md`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// File name of the live snapshot inside a checkpoint directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// Path of the snapshot document inside `dir`.
+pub fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join(SNAPSHOT_FILE)
+}
+
+/// Atomically persist a snapshot document into `dir` (created if missing):
+/// write `snapshot.json.tmp`, fsync-free rename over `snapshot.json`.
+/// Returns the final path.
+pub fn write_atomic(dir: &Path, doc: &Json) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("checkpoint dir {}: {e}", dir.display()))?;
+    let final_path = snapshot_path(dir);
+    let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+    std::fs::write(&tmp, doc.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &final_path)
+        .map_err(|e| anyhow::anyhow!("renaming {} into place: {e}", tmp.display()))?;
+    Ok(final_path)
+}
+
+/// Load and version-check the snapshot document from `dir`.
+pub fn load(dir: &Path) -> anyhow::Result<Json> {
+    let path = snapshot_path(dir);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let version = doc
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("{}: missing 'version'", path.display()))? as u64;
+    anyhow::ensure!(
+        version <= SNAPSHOT_VERSION,
+        "{}: snapshot version {version} is newer than this binary understands ({SNAPSHOT_VERSION})",
+        path.display()
+    );
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("scfo-snap-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn write_is_atomic_and_loads_back() {
+        let dir = tmp_dir("atomic");
+        let doc = Json::obj(vec![
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+            ("epoch", Json::Num(3.0)),
+        ]);
+        let path = write_atomic(&dir, &doc).unwrap();
+        assert!(path.ends_with(SNAPSHOT_FILE));
+        assert!(!dir.join("snapshot.json.tmp").exists(), "tmp file renamed away");
+        let re = load(&dir).unwrap();
+        assert_eq!(re.get("epoch").unwrap().as_usize(), Some(3));
+        // overwrite in place (the periodic checkpoint path)
+        let doc2 = Json::obj(vec![
+            ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+            ("epoch", Json::Num(4.0)),
+        ]);
+        write_atomic(&dir, &doc2).unwrap();
+        assert_eq!(load(&dir).unwrap().get("epoch").unwrap().as_usize(), Some(4));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn newer_versions_are_rejected() {
+        let dir = tmp_dir("version");
+        let doc = Json::obj(vec![(
+            "version",
+            Json::Num((SNAPSHOT_VERSION + 1) as f64),
+        )]);
+        write_atomic(&dir, &doc).unwrap();
+        let err = load(&dir).unwrap_err().to_string();
+        assert!(err.contains("newer"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_snapshot_is_a_clean_error() {
+        let dir = tmp_dir("missing");
+        assert!(load(&dir).is_err());
+    }
+}

@@ -159,6 +159,11 @@ pub struct AsyncRuntime {
     /// the root's quiet streak is stale until the change's first loud epoch
     /// has propagated up the tree.
     quiesce_hold_until: u64,
+    /// The fault spec the transport was built from (`None` for the ideal
+    /// in-memory transport or a custom [`AsyncRuntime::with_transport`]
+    /// transport) — kept so a control-plane [`AsyncRuntime::rebind`] can
+    /// rebuild the same fault environment for the new application set.
+    faults: Option<FaultSpec>,
 }
 
 /// BFS spanning tree over out-links from `root` (all shipped topologies are
@@ -277,6 +282,7 @@ impl AsyncRuntime {
             root,
             tree_depth,
             quiesce_hold_until: 0,
+            faults: None,
             net,
         }
     }
@@ -294,8 +300,30 @@ impl AsyncRuntime {
         faults: FaultSpec,
         opts: RuntimeOptions,
     ) -> AsyncRuntime {
-        let transport = Arc::new(SimNetTransport::new(net.n(), opts.queue_cap, faults));
-        Self::with_transport(net, phi0, transport, opts)
+        let transport = Arc::new(SimNetTransport::new(net.n(), opts.queue_cap, faults.clone()));
+        let mut rt = Self::with_transport(net, phi0, transport, opts);
+        rt.faults = Some(faults);
+        rt
+    }
+
+    /// Control-plane epoch rebuild: adopt a new application set on the same
+    /// topology, warm-starting every node actor from `phi` (already shaped
+    /// for `net`). The actor fleet and transport are rebuilt — in-flight
+    /// messages are stage-indexed against the old registry and would be
+    /// meaningless — but the trust-region step size carries over, so
+    /// reconvergence is incremental rather than cold. Message/round
+    /// counters restart with the new fleet.
+    pub fn rebind(&mut self, net: Network, phi: Strategy) {
+        let opts = self.opts.clone();
+        let cur_alpha = self.cur_alpha;
+        // preserve the transport kind exactly: a clean-spec SimNetTransport
+        // stays a SimNetTransport (its stats/name must not flip mid-run)
+        let mut fresh = match self.faults.clone() {
+            Some(f) => AsyncRuntime::sim_net(net, phi, f, opts),
+            None => AsyncRuntime::in_mem(net, phi, opts),
+        };
+        fresh.cur_alpha = cur_alpha;
+        *self = fresh;
     }
 
     /// Reference to the environment network (rates, topology).
@@ -600,6 +628,10 @@ impl crate::serving::Optimizer for DistributedOptimizer {
 
     fn scale_step(&mut self, factor: f64) {
         self.rt.scale_step(factor);
+    }
+
+    fn rebind(&mut self, net: &Network, phi: &Strategy) {
+        self.rt.rebind(net.clone(), phi.clone());
     }
 
     fn runtime_stats(&self) -> Option<RuntimeStats> {

@@ -18,8 +18,10 @@
 //!   ([`distributed`]), baselines ([`algo`]), flow/marginal
 //!   computation ([`flow`], [`marginals`]), the nonstationary workload
 //!   subsystem ([`workload`]: traffic models + trace replay), serving loop
-//!   with online adaptation ([`serving`]) and benchmarking/validation
-//!   substrates ([`sim`], [`bench`]).
+//!   with online adaptation ([`serving`]), the multi-tenant control plane
+//!   ([`control`]: app lifecycle, admission control, checkpoint/restore and
+//!   the HTTP ops API) and benchmarking/validation substrates ([`sim`],
+//!   [`bench`]).
 //! * **L2/L1 (python/compile)** — a JAX + Pallas implementation of the dense
 //!   network-evaluation hot path, AOT-lowered to HLO artifacts executed from
 //!   Rust via PJRT ([`runtime`]). Python never runs at request time.
@@ -37,6 +39,7 @@ pub mod bench;
 pub mod broadcast;
 pub mod cli;
 pub mod config;
+pub mod control;
 pub mod distributed;
 pub mod metrics;
 pub mod runtime;

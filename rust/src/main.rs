@@ -10,6 +10,7 @@
 //! scfo scenarios run --all --tier large            # 1000-node-class sparse tier
 //! scfo scenarios run --all --tier dynamic          # nonstationary serving tier
 //! scfo scenarios run --all --tier distributed      # async-runtime chaos tier
+//! scfo scenarios run --all --tier churn            # control-plane app churn tier
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
 //! scfo distributed run --shards 4 --faults lossy   # async sharded runtime
 //! scfo distributed run --faults spec.toml --json D.json  # custom fault spec
@@ -18,6 +19,9 @@
 //! scfo bench --json --workload flash-crowd         # serving-mode bench (regret)
 //! scfo bench --json --distributed --shards 4       # async runtime → BENCH.json v3
 //! scfo serve    --topology geant [--slots 200] [--workload diurnal] [--xla]
+//! scfo serve    --http 127.0.0.1:8080 --checkpoint ckpt [--slots 0]   # control plane
+//! scfo serve    --checkpoint ckpt --restore        # resume bit-identically
+//! scfo bench --json --control [--slots 90]         # control plane → BENCH.json v4
 //! scfo trace record --topology abilene --workload mmpp --slots 120 --out t.json
 //! scfo trace replay t.json | stats t.json          # bit-identical trace replay
 //! scfo validate --topology abilene                 # DES vs analytic cost
@@ -239,7 +243,139 @@ fn drive_server<O: Optimizer>(mut srv: OnlineServer<O>, slots: usize) -> anyhow:
     Ok(())
 }
 
+/// Control-plane serving: `scfo serve --http ADDR | --checkpoint DIR
+/// [--restore]`. Builds (or restores) a [`scfo::control::ControlPlane`],
+/// serves slots, polls the ops API between slots, and checkpoints
+/// periodically. `--slots 0` serves until killed (the CI smoke mode).
+fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
+    use scfo::control::{ControlOptions, ControlPlane, OpsServer};
+
+    anyhow::ensure!(
+        !args.switch("xla"),
+        "--xla is not supported with the control plane (centralized GP only)"
+    );
+    let slots = args.flag_usize("slots", 200)?; // 0 = serve until killed
+    let checkpoint_dir = args.flag("checkpoint").map(std::path::PathBuf::from);
+    let checkpoint_every = args.flag_usize("checkpoint-every", 50)?;
+    let default_pace: u64 = if args.flag("http").is_some() { 20 } else { 0 };
+    let pace_ms = args.flag_u64("pace", default_pace)?;
+
+    let mut copts = ControlOptions {
+        adapt: args.switch("adapt") || args.flag("workload").is_some(),
+        ..ControlOptions::default()
+    };
+    copts.controller.policy = ReconvergePolicy::parse(&args.flag_or("policy", "warm"))?;
+    if let Some(w) = args.flag("workload") {
+        copts.workload = Some(WorkloadSpec::parse(w)?);
+    }
+    copts.admission.headroom = args.flag_f64("admit-headroom", copts.admission.headroom)?;
+    copts.admission.max_cost_increase =
+        args.flag_f64("admit-budget", copts.admission.max_cost_increase)?;
+
+    let mut plane = if args.switch("restore") {
+        let dir = checkpoint_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("--restore needs --checkpoint DIR"))?;
+        let plane = ControlPlane::restore(&dir, copts)?;
+        println!(
+            "restored from {}: epoch {}, slot {}, {} apps",
+            dir.display(),
+            plane.epoch(),
+            plane.slots_served(),
+            plane.catalog.len()
+        );
+        plane
+    } else {
+        let sc = scenario_from(args)?;
+        let plane = ControlPlane::new(sc, copts)?;
+        println!(
+            "control plane on {}: {} apps, |V|={} |E|={}",
+            plane.scenario.name,
+            plane.catalog.len(),
+            plane.graph().n(),
+            plane.graph().m()
+        );
+        plane
+    };
+    let ops = match args.flag("http") {
+        Some(addr) => {
+            let srv = OpsServer::bind(addr)?;
+            println!("ops API listening on http://{}", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
+
+    let mut served = 0usize;
+    loop {
+        if slots > 0 && served >= slots {
+            break;
+        }
+        plane.run_slot()?;
+        served += 1;
+        if let Some(dir) = &checkpoint_dir {
+            if checkpoint_every > 0 && plane.slots_served() % checkpoint_every == 0 {
+                plane.checkpoint(dir)?;
+            }
+        }
+        match &ops {
+            Some(srv) if pace_ms > 0 => {
+                // pace the loop while staying responsive to the ops API
+                let deadline =
+                    std::time::Instant::now() + std::time::Duration::from_millis(pace_ms);
+                loop {
+                    srv.poll(&mut plane, checkpoint_dir.as_deref());
+                    if std::time::Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+            Some(srv) => {
+                srv.poll(&mut plane, checkpoint_dir.as_deref());
+            }
+            None if pace_ms > 0 => {
+                std::thread::sleep(std::time::Duration::from_millis(pace_ms))
+            }
+            None => {}
+        }
+    }
+    if let Some(dir) = &checkpoint_dir {
+        let path = plane.checkpoint(dir)?;
+        println!("final checkpoint: {}", path.display());
+    }
+    let last_cost = plane
+        .stats
+        .last
+        .as_ref()
+        .map(|m| m.cost)
+        .unwrap_or(f64::NAN);
+    println!(
+        "served {served} slots; epoch {}; {} apps; final cost {:.6}; admission {}/{} accepted",
+        plane.epoch(),
+        plane.catalog.len(),
+        last_cost,
+        plane.stats.admission_accepted,
+        plane.stats.admission_accepted + plane.stats.admission_rejected,
+    );
+    println!("delay histogram: {}", plane.server.delay_hist.summary());
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    scfo::cli::guard_subcommand(args, "serve", &[])?;
+    // --restore is a switch; if the parser quirk turned it into a valued
+    // flag (`--restore ckpt`), refuse instead of silently starting a fresh
+    // run that would overwrite the snapshot the user meant to resume
+    if let Some(v) = args.flag("restore") {
+        anyhow::bail!(
+            "--restore takes no value (got '{v}'); use `scfo serve --checkpoint DIR --restore`"
+        );
+    }
+    if args.flag("http").is_some() || args.flag("checkpoint").is_some() || args.switch("restore")
+    {
+        return cmd_serve_control(args);
+    }
     let sc = scenario_from(args)?;
     let slots = args.flag_usize("slots", 200)?;
     let mut rng = Rng::new(sc.seed);
@@ -285,6 +421,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    scfo::cli::guard_subcommand(args, "trace", &["record", "replay", "stats"])?;
     match args.subcommand() {
         Some("record") => {
             let sc = scenario_from(args)?;
@@ -454,12 +591,20 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
 /// bench drives the online serving loop instead (iters = serving slots) and
 /// BENCH.json gains the regret / reconvergence-slots columns.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    scfo::cli::guard_subcommand(args, "bench", &[])?;
     let scenarios = args.flag_or("scenarios", "abilene,geant,sw");
     let iters = args.flag_usize("iters", 60)?;
     let workload = args.flag("workload");
     let distributed = args.switch("distributed") || args.flag("faults").is_some();
+    let control = args.switch("control");
     let mut results = Vec::new();
     for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if control {
+            let slots = args.flag_usize("slots", 90)?;
+            eprintln!("bench {name} (control plane, {slots} slots)...");
+            results.push(scfo::bench::bench_control_scenario(name, slots)?);
+            continue;
+        }
         if distributed {
             use scfo::distributed::FaultSpec;
             let shards = args.flag_usize("shards", 4)?;
@@ -487,7 +632,43 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    if distributed {
+    if control {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                let c = r.control.as_ref().expect("control bench has a control block");
+                vec![
+                    r.name.clone(),
+                    format!("{}/{}", r.n, r.m),
+                    c.slots.to_string(),
+                    format!("{}/{}", c.admission_accepted, c.apps_registered),
+                    format!("{:.2}", c.admission_latency_secs_mean * 1e3),
+                    c.epochs.to_string(),
+                    c.reconverge_iters_warm.to_string(),
+                    c.reconverge_iters_cold.to_string(),
+                    format!(
+                        "{:.4}",
+                        r.cost_trajectory.last().copied().unwrap_or(f64::NAN)
+                    ),
+                ]
+            })
+            .collect();
+        print_table(
+            "Control-plane bench (BENCH.json v4 columns)",
+            &[
+                "scenario",
+                "|V|/|E|",
+                "slots",
+                "admitted",
+                "admit ms",
+                "epochs",
+                "reconv warm",
+                "reconv cold",
+                "final cost",
+            ],
+            &rows,
+        );
+    } else if distributed {
         let rows: Vec<Vec<String>> = results
             .iter()
             .map(|r| {
@@ -618,6 +799,17 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             }
             return Ok(specs);
         }
+        if tier == "churn" {
+            let slots = args.flag_usize("slots", 200)?;
+            let mut specs = ScenarioSpec::churn_matrix_sized(slots);
+            if args.flag("iters").is_some() {
+                let iters = args.flag_usize("iters", 300)?;
+                for s in &mut specs {
+                    s.iters = iters;
+                }
+            }
+            return Ok(specs);
+        }
         if tier == "dynamic" {
             let slots = args.flag_usize("slots", 200)?;
             let mut specs = ScenarioSpec::dynamic_matrix_sized(slots);
@@ -636,7 +828,7 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             "large" => (150, 60),
             other => {
                 anyhow::bail!(
-                    "unknown scenario tier '{other}' (standard|large|dynamic|distributed)"
+                    "unknown scenario tier '{other}' (standard|large|dynamic|distributed|churn)"
                 )
             }
         };
@@ -653,8 +845,14 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
         })
     }
 
-    // Guard against the flags-before-subcommand parser quirk: a run-shaped
-    // invocation with no subcommand word must not silently become `list`.
+    // Guard against the flags-before-subcommand parser quirk (shared
+    // helper — also diagnoses a flag that swallowed the subcommand word).
+    // A bare `scfo scenarios [--tier ...]` still defaults to `list`, so the
+    // shared guard only applies when a subcommand-shaped token is in play;
+    // a run-shaped invocation with no subcommand must not silently `list`.
+    if args.subcommand().is_some() || args.flag_values().any(|v| v == "list" || v == "run") {
+        scfo::cli::guard_subcommand(args, "scenarios", &["list", "run"])?;
+    }
     if args.subcommand().is_none()
         && (args.switch("all") || args.flag("spec").is_some() || args.flag("filter").is_some())
     {
@@ -668,17 +866,21 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             let rows: Vec<Vec<String>> = tier_matrix(args)?
                 .iter()
                 .map(|s| {
-                    let dynamics = match (&s.workload, &s.distributed) {
-                        (Some(w), _) => format!("workload:{} x{}", w.name(), s.slots),
-                        (None, Some(d)) => {
-                            format!("faults:{} x{} shards", d.faults.name, d.shards)
+                    let dynamics = if let Some(c) = &s.churn {
+                        format!("churn:{} events x{}", c.events.len(), s.slots)
+                    } else {
+                        match (&s.workload, &s.distributed) {
+                            (Some(w), _) => format!("workload:{} x{}", w.name(), s.slots),
+                            (None, Some(d)) => {
+                                format!("faults:{} x{} shards", d.faults.name, d.shards)
+                            }
+                            (None, None) => s
+                                .events
+                                .iter()
+                                .map(|e| e.kind())
+                                .collect::<Vec<_>>()
+                                .join(","),
                         }
-                        (None, None) => s
-                            .events
-                            .iter()
-                            .map(|e| e.kind())
-                            .collect::<Vec<_>>()
-                            .join(","),
                     };
                     vec![
                         s.name().to_string(),
@@ -761,6 +963,7 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
 fn cmd_distributed(args: &Args) -> anyhow::Result<()> {
     use scfo::distributed::{AsyncRuntime, FaultSpec, RuntimeOptions};
 
+    scfo::cli::guard_subcommand(args, "distributed", &["run", "faults"])?;
     match args.subcommand() {
         Some("faults") => {
             let rows: Vec<Vec<String>> = FaultSpec::PRESETS
@@ -940,8 +1143,8 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|trace|validate|distributed|broadcast> \
                  [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] \
-                 [--tier large|dynamic|distributed] [--workload SPEC] [--shards N] \
-                 [--faults SPEC] [--xla]"
+                 [--tier large|dynamic|distributed|churn] [--workload SPEC] [--shards N] \
+                 [--faults SPEC] [--http ADDR] [--checkpoint DIR] [--restore] [--control] [--xla]"
             );
             std::process::exit(2);
         }

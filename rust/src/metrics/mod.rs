@@ -109,6 +109,57 @@ impl Histogram {
             stats::max(&self.buf),
         )
     }
+
+    /// Serialize the ring state (window, cursor, all-time count) for
+    /// checkpointing; [`Histogram::from_state_json`] restores it exactly.
+    pub fn state_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("cap", Json::Num(self.cap as f64)),
+            ("buf", Json::arr_f64(&self.buf)),
+            ("next", Json::Num(self.next as f64)),
+            ("total", Json::Num(self.total as f64)),
+        ])
+    }
+
+    /// Rebuild a histogram from [`Histogram::state_json`] output.
+    pub fn from_state_json(v: &crate::util::json::Json) -> anyhow::Result<Histogram> {
+        use crate::util::json::Json;
+        let cap = v
+            .get("cap")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("histogram state: missing 'cap'"))?;
+        let buf: Vec<f64> = v
+            .get("buf")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("histogram state: missing 'buf'"))?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0))
+            .collect();
+        anyhow::ensure!(buf.len() <= cap.max(1), "histogram state: buf exceeds cap");
+        let next = v.get("next").and_then(Json::as_usize).unwrap_or(0);
+        anyhow::ensure!(
+            next == 0 || next < buf.len().max(1),
+            "histogram state: cursor out of range"
+        );
+        let total = v.get("total").and_then(Json::as_usize).unwrap_or(buf.len()) as u64;
+        let mut h = Histogram::new(cap);
+        h.buf = buf;
+        h.next = next;
+        h.total = total;
+        Ok(h)
+    }
+}
+
+/// One Prometheus text-exposition line with a `# TYPE` header.
+/// Non-finite values are skipped by emitting the header only (Prometheus
+/// has no NaN-safe ingestion contract worth fighting).
+pub fn prometheus_line(name: &str, kind: &str, value: f64) -> String {
+    if value.is_finite() {
+        format!("# TYPE {name} {kind}\n{name} {value}\n")
+    } else {
+        format!("# TYPE {name} {kind}\n")
+    }
 }
 
 /// Named metric registry for end-of-run reports.
@@ -131,6 +182,16 @@ impl Registry {
             .iter()
             .map(|(k, c)| (k.clone(), c.get()))
             .collect()
+    }
+
+    /// Render every counter in Prometheus text exposition format (the
+    /// `GET /metrics` endpoint of the control plane's ops API).
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in self.report() {
+            out.push_str(&prometheus_line(&name, "counter", value as f64));
+        }
+        out
     }
 }
 
@@ -194,6 +255,37 @@ mod tests {
         assert_eq!(h.percentile(0.0), 1.0);
         assert_eq!(h.percentile(100.0), 9.0);
         assert!(!h.sorted_valid.get(), "small path must not build the cache");
+    }
+
+    #[test]
+    fn histogram_state_roundtrip_preserves_window_and_count() {
+        let mut h = Histogram::new(8);
+        for i in 0..20 {
+            h.record(i as f64);
+        }
+        let v = h.state_json();
+        let re = crate::util::json::Json::parse(&v.to_string()).unwrap();
+        let g = Histogram::from_state_json(&re).unwrap();
+        assert_eq!(g.count(), h.count());
+        assert_eq!(g.buf, h.buf);
+        assert_eq!(g.next, h.next);
+        assert_eq!(g.percentile(50.0), h.percentile(50.0));
+        // and further records continue the same ring positions
+        let mut h2 = g.clone();
+        let mut h3 = h.clone();
+        h2.record(99.0);
+        h3.record(99.0);
+        assert_eq!(h2.buf, h3.buf);
+    }
+
+    #[test]
+    fn prometheus_text_renders_counters() {
+        let mut r = Registry::new();
+        r.counter("scfo_requests_total").add(7);
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE scfo_requests_total counter"));
+        assert!(text.contains("scfo_requests_total 7"));
+        assert!(prometheus_line("x", "gauge", f64::NAN).ends_with("gauge\n"));
     }
 
     #[test]

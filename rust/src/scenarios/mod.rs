@@ -55,9 +55,12 @@
 
 pub mod runner;
 
-pub use runner::{run_batch, DistributedSummary, RunnerOptions, ScenarioCache, ScenarioReport};
+pub use runner::{
+    run_batch, ChurnSummary, DistributedSummary, RunnerOptions, ScenarioCache, ScenarioReport,
+};
 
 use crate::config::Scenario;
+use crate::control::AppSpec;
 use crate::cost::CostKind;
 use crate::distributed::FaultSpec;
 use crate::util::json::Json;
@@ -229,6 +232,161 @@ impl DynamicEvent {
     }
 }
 
+/// One scripted control-plane action within a [`ChurnSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnAction {
+    /// Register an explicitly specified application (admission-checked).
+    Register(AppSpec),
+    /// Register a deterministically *generated* application: destination
+    /// and sources are drawn from a churn RNG forked off the scenario
+    /// seed, rates from the scenario's `[rate_lo, rate_hi] · rate_scale ·
+    /// rate` range — portable across topology families.
+    RegisterRandom { id: String, rate: f64 },
+    /// Stop an app's traffic (kept in the network while in-flight work
+    /// drains).
+    Drain { id: String },
+    /// Remove an app entirely.
+    Remove { id: String },
+}
+
+impl ChurnAction {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ChurnAction::Register(_) => "register",
+            ChurnAction::RegisterRandom { .. } => "register-random",
+            ChurnAction::Drain { .. } => "drain",
+            ChurnAction::Remove { .. } => "remove",
+        }
+    }
+}
+
+/// One timed control-plane event in a churn schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnEvent {
+    /// Serving slot (0-based) the action fires *before*.
+    pub at_slot: usize,
+    pub action: ChurnAction,
+}
+
+impl ChurnEvent {
+    pub fn to_json(&self) -> Json {
+        let mut obj = match &self.action {
+            ChurnAction::Register(spec) => match spec.to_json() {
+                Json::Obj(o) => o,
+                _ => unreachable!("AppSpec::to_json returns an object"),
+            },
+            ChurnAction::RegisterRandom { id, rate } => {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("id".to_string(), Json::Str(id.clone()));
+                o.insert("rate".to_string(), Json::Num(*rate));
+                o
+            }
+            ChurnAction::Drain { id } | ChurnAction::Remove { id } => {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("id".to_string(), Json::Str(id.clone()));
+                o
+            }
+        };
+        obj.insert("kind".to_string(), Json::Str(self.action.kind().into()));
+        obj.insert("at_slot".to_string(), Json::Num(self.at_slot as f64));
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ChurnEvent> {
+        let at_slot = v
+            .get("at_slot")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("churn event: missing 'at_slot'"))?;
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("churn event: missing 'kind'"))?;
+        let id = || -> anyhow::Result<String> {
+            Ok(v.get("id")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("churn '{kind}' event: missing 'id'"))?
+                .to_string())
+        };
+        let action = match kind {
+            "register" => ChurnAction::Register(AppSpec::from_json(v)?),
+            "register-random" => ChurnAction::RegisterRandom {
+                id: id()?,
+                rate: v.get("rate").and_then(Json::as_f64).unwrap_or(1.0),
+            },
+            "drain" => ChurnAction::Drain { id: id()? },
+            "remove" => ChurnAction::Remove { id: id()? },
+            other => anyhow::bail!("unknown churn event kind '{other}'"),
+        };
+        Ok(ChurnEvent { at_slot, action })
+    }
+}
+
+/// Scripted app arrival/departure schedule — the control-plane (`churn`)
+/// tier. Served through [`crate::control::ControlPlane`] by
+/// [`runner::run_churn`]: every action is admission-checked and triggers an
+/// epoch rebuild; the report carries accept/reject counts and the
+/// reconvergence slots after each accepted arrival.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChurnSpec {
+    /// Events in firing order (sorted by `at_slot` at load time).
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnSpec {
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(ChurnEvent::to_json).collect())
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ChurnSpec> {
+        let mut events = Vec::new();
+        for e in v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("churn: expected an array of events"))?
+        {
+            events.push(ChurnEvent::from_json(e)?);
+        }
+        events.sort_by_key(|e| e.at_slot);
+        Ok(ChurnSpec { events })
+    }
+
+    /// The default schedule: two arrivals, a drain of the second arrival,
+    /// and a late third arrival — spread across `slots` serving slots.
+    pub fn default_schedule(slots: usize) -> ChurnSpec {
+        let at = |frac_num: usize| slots * frac_num / 100;
+        ChurnSpec {
+            events: vec![
+                ChurnEvent {
+                    at_slot: at(20),
+                    action: ChurnAction::RegisterRandom {
+                        id: "churn-a".into(),
+                        rate: 1.0,
+                    },
+                },
+                ChurnEvent {
+                    at_slot: at(40),
+                    action: ChurnAction::RegisterRandom {
+                        id: "churn-b".into(),
+                        rate: 1.0,
+                    },
+                },
+                ChurnEvent {
+                    at_slot: at(60),
+                    action: ChurnAction::Drain {
+                        id: "churn-b".into(),
+                    },
+                },
+                ChurnEvent {
+                    at_slot: at(80),
+                    action: ChurnAction::RegisterRandom {
+                        id: "churn-c".into(),
+                        rate: 0.8,
+                    },
+                },
+            ],
+        }
+    }
+}
+
 /// A fully specified experiment: base workload × congestion × schedule.
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
@@ -254,6 +412,12 @@ pub struct ScenarioSpec {
     /// combined with `workload`, the dynamic serving loop drives the
     /// distributed optimizer instead of the centralized one.
     pub distributed: Option<DistributedSpec>,
+    /// Scripted app arrival/departure schedule (the `churn` tier). When
+    /// set, the scenario serves [`ScenarioSpec::slots`] slots through the
+    /// multi-tenant control plane, applying the schedule's
+    /// admission-checked lifecycle actions; combines with `workload` for
+    /// nonstationary traffic underneath the churn.
+    pub churn: Option<ChurnSpec>,
 }
 
 /// Topology families of the `large` scale tier
@@ -331,7 +495,35 @@ impl ScenarioSpec {
             workload: None,
             slots: 200,
             distributed: None,
+            churn: None,
         })
+    }
+
+    /// Topology families of the `churn` tier.
+    pub const CHURN_FAMILIES: [&'static str; 3] = ["abilene", "er-20-40", "grid-4x5"];
+
+    /// The `churn` scale tier: small families at light congestion (leaving
+    /// admission headroom for arrivals), each serving the default scripted
+    /// app arrival/departure schedule through the control plane.
+    pub fn churn_matrix() -> Vec<ScenarioSpec> {
+        Self::churn_matrix_sized(200)
+    }
+
+    /// The `churn` tier with an explicit serving-slot budget.
+    pub fn churn_matrix_sized(slots: usize) -> Vec<ScenarioSpec> {
+        Self::CHURN_FAMILIES
+            .iter()
+            .map(|family| {
+                let mut spec =
+                    Self::named(family, Congestion::Light).expect("churn families are valid");
+                spec.base.name = format!("{family}-churn");
+                spec.events.clear();
+                spec.iters = 300;
+                spec.slots = slots;
+                spec.churn = Some(ChurnSpec::default_schedule(slots));
+                spec
+            })
+            .collect()
     }
 
     /// Topology families of the `dynamic` tier.
@@ -500,10 +692,15 @@ impl ScenarioSpec {
         );
         if let Some(w) = &self.workload {
             obj.insert("workload".to_string(), w.to_json());
+        }
+        if self.workload.is_some() || self.churn.is_some() {
             obj.insert("slots".to_string(), Json::Num(self.slots as f64));
         }
         if let Some(d) = &self.distributed {
             obj.insert("distributed".to_string(), d.to_json());
+        }
+        if let Some(c) = &self.churn {
+            obj.insert("churn".to_string(), c.to_json());
         }
         Json::Obj(obj)
     }
@@ -531,6 +728,10 @@ impl ScenarioSpec {
             Some(d) => Some(DistributedSpec::from_json(d)?),
             None => None,
         };
+        let churn = match v.get("churn") {
+            Some(c) => Some(ChurnSpec::from_json(c)?),
+            None => None,
+        };
         Ok(ScenarioSpec {
             base,
             congestion,
@@ -539,6 +740,7 @@ impl ScenarioSpec {
             workload,
             slots,
             distributed,
+            churn,
         })
     }
 
@@ -725,6 +927,65 @@ mod tests {
         let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
         let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
         assert_eq!(re.distributed, None);
+    }
+
+    #[test]
+    fn churn_matrix_carries_schedules() {
+        let m = ScenarioSpec::churn_matrix();
+        assert_eq!(m.len(), ScenarioSpec::CHURN_FAMILIES.len());
+        for s in &m {
+            let c = s.churn.as_ref().expect("churn specs carry a schedule");
+            assert!(c.events.len() >= 3);
+            assert!(s.slots > 0);
+            assert_eq!(s.congestion, Congestion::Light);
+            assert!(s.name().ends_with("-churn"));
+            // sorted by firing slot, all inside the serving window
+            for w in c.events.windows(2) {
+                assert!(w[0].at_slot <= w[1].at_slot);
+            }
+            assert!(c.events.iter().all(|e| e.at_slot < s.slots));
+        }
+    }
+
+    #[test]
+    fn churn_spec_roundtrips_json_and_toml() {
+        let spec = &ScenarioSpec::churn_matrix()[0];
+        let re = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(re.churn, spec.churn);
+        assert_eq!(re.slots, spec.slots);
+
+        let toml_text = r#"
+            name = "my-churn"
+            topology = "abilene"
+            slots = 120
+            [[churn]]
+            at_slot = 10
+            kind = "register"
+            id = "svc"
+            dest = 3
+            num_tasks = 1
+            packet_sizes = [4.0, 1.0]
+            rates = [[0, 0.5]]
+            [[churn]]
+            at_slot = 60
+            kind = "drain"
+            id = "svc"
+        "#;
+        let v = crate::util::toml::parse(toml_text).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        let c = spec.churn.as_ref().unwrap();
+        assert_eq!(c.events.len(), 2);
+        match &c.events[0].action {
+            ChurnAction::Register(app) => {
+                assert_eq!(app.id, "svc");
+                assert_eq!(app.rates, vec![(0, 0.5)]);
+            }
+            other => panic!("expected register, got {other:?}"),
+        }
+        assert_eq!(
+            c.events[1].action,
+            ChurnAction::Drain { id: "svc".into() }
+        );
     }
 
     #[test]

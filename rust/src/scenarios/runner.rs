@@ -16,10 +16,11 @@ use std::sync::{Arc, Mutex};
 use crate::algo::gp::{GpOptions, GradientProjection};
 use crate::algo::Algorithm;
 use crate::app::Network;
+use crate::control::{AppSpec, AppStatus, ControlOptions, ControlPlane};
 use crate::distributed::{AsyncRuntime, DistributedOptimizer, RuntimeOptions};
 use crate::flow::FlowState;
 use crate::graph::{topologies, Graph};
-use crate::scenarios::{DynamicEvent, ScenarioSpec};
+use crate::scenarios::{ChurnAction, DynamicEvent, ScenarioSpec};
 use crate::serving::{
     AdaptationController, AdaptationSummary, ControllerOptions, OnlineServer, Optimizer,
     ServerOptions,
@@ -92,6 +93,46 @@ pub struct ScenarioReport {
     pub adaptation: Option<AdaptationSummary>,
     /// Async-runtime metrics (distributed scenarios only).
     pub distributed: Option<DistributedSummary>,
+    /// Control-plane metrics (churn scenarios only).
+    pub churn: Option<ChurnSummary>,
+}
+
+/// Control-plane columns of a churn scenario report: scripted lifecycle
+/// events, admission outcomes, epoch rebuilds, and the serving-slot spans
+/// each accepted arrival needed to reconverge (cost back within 2% of the
+/// best cost seen before the next event).
+#[derive(Clone, Debug)]
+pub struct ChurnSummary {
+    pub events: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// Epoch counter after the run (= committed fleet changes).
+    pub epochs: u64,
+    /// Applications still registered at the end (draining included).
+    pub final_apps: usize,
+    /// Per accepted arrival, slots from commit until the served cost
+    /// re-entered 2% of the window optimum.
+    pub reconverge_slots: Vec<usize>,
+    /// Mean wall-clock seconds per admission evaluation (volatile — the
+    /// golden comparator skips it).
+    pub admission_latency_secs_mean: f64,
+}
+
+impl ChurnSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events", Json::Num(self.events as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("final_apps", Json::Num(self.final_apps as f64)),
+            ("reconverge_slots", Json::arr_usize(&self.reconverge_slots)),
+            (
+                "admission_latency_secs_mean",
+                Json::Num(self.admission_latency_secs_mean),
+            ),
+        ])
+    }
 }
 
 /// Async-runtime columns of a distributed scenario report: rounds (epochs),
@@ -200,6 +241,8 @@ impl ScenarioReport {
         ];
         if let Some(w) = &self.workload {
             pairs.push(("workload", Json::Str(w.clone())));
+        }
+        if self.workload.is_some() || self.churn.is_some() {
             pairs.push(("slots", Json::Num(self.slots as f64)));
         }
         if let Some(a) = &self.adaptation {
@@ -207,6 +250,9 @@ impl ScenarioReport {
         }
         if let Some(d) = &self.distributed {
             pairs.push(("distributed", d.to_json()));
+        }
+        if let Some(c) = &self.churn {
+            pairs.push(("churn", c.to_json()));
         }
         Json::obj(pairs)
     }
@@ -378,6 +424,9 @@ fn prune_links(net: &Network, removed: &[(usize, usize)]) -> anyhow::Result<Netw
 /// GP solve, the dynamic-event schedule with online adaptation, then the
 /// final GP-vs-baselines comparison on the resulting network state.
 pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<ScenarioReport> {
+    if spec.churn.is_some() {
+        return run_churn(spec);
+    }
     if spec.workload.is_some() {
         return run_dynamic(spec, cache);
     }
@@ -464,6 +513,7 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
         slots: 0,
         adaptation: None,
         distributed: None,
+        churn: None,
     })
 }
 
@@ -554,6 +604,7 @@ pub fn run_distributed(
         slots: 0,
         adaptation: None,
         distributed: Some(summary),
+        churn: None,
     })
 }
 
@@ -689,6 +740,187 @@ pub fn run_dynamic(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result
         slots: spec.slots,
         adaptation: Some(summary),
         distributed: dist_stats,
+        churn: None,
+    })
+}
+
+/// Execute a churn-tier scenario: serve `spec.slots` slots through the
+/// multi-tenant [`ControlPlane`], firing the scripted app
+/// arrival/departure schedule. Every register is admission-checked (the
+/// report counts accepts/rejects) and commits through the epoch-rebuild
+/// warm-start path; after the run the report's `churn` block carries the
+/// per-arrival reconvergence spans (slots until the served cost re-entered
+/// 2% of the best cost before the next event). The final GP strategy is
+/// compared against the baselines re-solved on the final true rates, like
+/// the dynamic tier.
+///
+/// No topology cache: the control plane builds its own graph from the
+/// scenario seed (bit-identical to a cached build — `Scenario::build` is
+/// deterministic), and churn scenarios are rare enough per batch that the
+/// reuse would not pay for the plumbing.
+pub fn run_churn(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
+    let churn = spec
+        .churn
+        .as_ref()
+        .expect("run_churn requires a churn spec");
+    anyhow::ensure!(
+        spec.slots > 0,
+        "churn scenario '{}' needs slots >= 1",
+        spec.name()
+    );
+    let watch = Stopwatch::start();
+    let copts = ControlOptions {
+        workload: spec.workload.clone(),
+        ..ControlOptions::default()
+    };
+    let mut plane = ControlPlane::new(spec.effective_base(), copts)?;
+    let n = plane.graph().n();
+    let sc = plane.scenario.clone();
+    // register-random draws are forked off the scenario seed, independent
+    // of the workload/topology streams
+    let mut churn_rng = Rng::new(sc.seed ^ 0xC0FF_EE00);
+
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    let mut arrival_slots: Vec<usize> = Vec::new();
+    let mut costs = Vec::with_capacity(spec.slots);
+    let mut event_idx = 0usize;
+    for slot in 0..spec.slots {
+        while event_idx < churn.events.len() && churn.events[event_idx].at_slot <= slot {
+            let event = &churn.events[event_idx];
+            event_idx += 1;
+            // a scripted register whose id already exists (e.g. re-register
+            // while draining) goes through the admission-checked update
+            // path, like the HTTP surface — it must not abort the scenario
+            let mut admit = |plane: &mut ControlPlane, app: AppSpec| -> anyhow::Result<()> {
+                let decision = if plane.catalog.get(&app.id).is_some() {
+                    plane.update(app)?
+                } else {
+                    plane.register(app)?
+                };
+                if decision.accepted() {
+                    accepted += 1;
+                    arrival_slots.push(slot);
+                } else {
+                    rejected += 1;
+                }
+                Ok(())
+            };
+            match &event.action {
+                ChurnAction::Register(app) => {
+                    let mut app = app.clone();
+                    app.status = AppStatus::Active;
+                    admit(&mut plane, app)?;
+                }
+                ChurnAction::RegisterRandom { id, rate } => {
+                    let dest = churn_rng.usize(n);
+                    let sources = churn_rng.choose_distinct(n, sc.num_sources.min(n));
+                    let rates = sources
+                        .into_iter()
+                        .map(|i| {
+                            (i, churn_rng.range(sc.rate_lo, sc.rate_hi) * sc.rate_scale * rate)
+                        })
+                        .collect();
+                    let app = AppSpec {
+                        id: id.clone(),
+                        dest,
+                        num_tasks: sc.num_tasks,
+                        packet_sizes: (0..=sc.num_tasks).map(|k| sc.packet_size(k)).collect(),
+                        rates,
+                        status: AppStatus::Active,
+                    };
+                    admit(&mut plane, app)?;
+                }
+                // scripted schedules may drain/remove an app whose register
+                // was rejected by admission — skip, don't abort the run
+                ChurnAction::Drain { id } => {
+                    if plane.catalog.get(id).is_some() {
+                        plane.drain(id)?;
+                    }
+                }
+                ChurnAction::Remove { id } => {
+                    if plane.catalog.get(id).is_some() {
+                        plane.remove(id)?;
+                    }
+                }
+            }
+        }
+        costs.push(plane.run_slot()?.cost);
+    }
+
+    // post-hoc reconvergence per accepted arrival: within the window up to
+    // the next event (or run end), slots until cost <= 1.02 · window min
+    let event_slots: Vec<usize> = churn.events.iter().map(|e| e.at_slot).collect();
+    let reconverge_slots: Vec<usize> = arrival_slots
+        .iter()
+        .map(|&t| {
+            let end = event_slots
+                .iter()
+                .copied()
+                .find(|&u| u > t)
+                .unwrap_or(spec.slots)
+                .min(spec.slots);
+            let window = &costs[t..end];
+            let target = window.iter().cloned().fold(f64::INFINITY, f64::min);
+            window
+                .iter()
+                .position(|&c| c <= target * 1.02)
+                .unwrap_or(window.len())
+        })
+        .collect();
+
+    let summary = ChurnSummary {
+        events: churn.events.len(),
+        accepted,
+        rejected,
+        epochs: plane.epoch(),
+        final_apps: plane.catalog.len(),
+        reconverge_slots,
+        admission_latency_secs_mean: plane.stats.admission_latency.mean(),
+    };
+
+    // final comparison on the last slot's true rates, like the dynamic tier
+    let mut truth = plane.server.net.clone();
+    plane.server.workload.apply_true_rates(&mut truth);
+    let gp_cost = costs.last().copied().unwrap_or(f64::NAN);
+    let mut cost_rows: Vec<(String, f64)> = vec![(Algorithm::Gp.name().to_string(), gp_cost)];
+    for alg in [Algorithm::Spoc, Algorithm::Lcof, Algorithm::LprSc] {
+        cost_rows.push((alg.name().to_string(), alg.solve(&truth, spec.iters)?));
+    }
+    let gp_within_baselines = cost_rows
+        .iter()
+        .skip(1)
+        .all(|(_, c)| gp_cost <= c * (1.0 + 1e-9) + 1e-12);
+
+    let phases = vec![
+        PhaseOutcome {
+            label: "serving-start".to_string(),
+            gp_cost: costs.first().copied().unwrap_or(f64::NAN),
+        },
+        PhaseOutcome {
+            label: "serving-end".to_string(),
+            gp_cost,
+        },
+    ];
+
+    Ok(ScenarioReport {
+        name: spec.name().to_string(),
+        topology: spec.base.topology.clone(),
+        congestion: spec.congestion.name().to_string(),
+        seed: spec.base.seed,
+        n: truth.n(),
+        m: truth.m(),
+        apps: truth.apps.len(),
+        phases,
+        costs: cost_rows,
+        gp_within_baselines,
+        solve_secs: watch.elapsed_secs(),
+        cache_hit: false,
+        workload: spec.workload.as_ref().map(|w| w.name().to_string()),
+        slots: spec.slots,
+        adaptation: None,
+        distributed: None,
+        churn: Some(summary),
     })
 }
 
@@ -991,6 +1223,52 @@ mod tests {
         // serving mode has no quiescence run or centralized reference
         assert_eq!(d.converged, None);
         assert_eq!(d.rel_gap_to_centralized, None);
+    }
+
+    fn quick_churn_spec(slots: usize) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::churn_matrix_sized(slots)
+            .into_iter()
+            .find(|s| s.base.topology == "abilene")
+            .unwrap();
+        spec.iters = 120;
+        spec
+    }
+
+    #[test]
+    fn churn_scenario_reports_admissions_and_reconvergence() {
+        let rep = run_one(&quick_churn_spec(80), &ScenarioCache::new()).unwrap();
+        let c = rep.churn.as_ref().expect("churn report has a churn block");
+        assert_eq!(c.events, 4);
+        assert_eq!(c.accepted + c.rejected, 3, "three registers scripted");
+        assert!(c.accepted >= 1, "light congestion must admit something");
+        // epochs = accepts + the drain (which only fires if its target was
+        // itself admitted)
+        let epochs = c.epochs as usize;
+        assert!(
+            epochs == c.accepted || epochs == c.accepted + 1,
+            "epochs {epochs} vs accepted {}",
+            c.accepted
+        );
+        assert_eq!(c.reconverge_slots.len(), c.accepted);
+        assert!(rep.gp_cost().is_finite() && rep.gp_cost() > 0.0);
+        assert_eq!(rep.costs.len(), 4, "GP + three baselines");
+        // the JSON report exposes the churn block
+        let v = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        let block = v.get("churn").expect("churn block serialized");
+        assert!(block.get("accepted").unwrap().as_usize().unwrap() >= 1);
+        assert!(block.get("reconverge_slots").is_some());
+    }
+
+    #[test]
+    fn churn_scenario_is_deterministic() {
+        let spec = quick_churn_spec(60);
+        let a = run_one(&spec, &ScenarioCache::new()).unwrap();
+        let b = run_one(&spec, &ScenarioCache::new()).unwrap();
+        assert_eq!(a.gp_cost().to_bits(), b.gp_cost().to_bits());
+        let (ca, cb) = (a.churn.unwrap(), b.churn.unwrap());
+        assert_eq!(ca.accepted, cb.accepted);
+        assert_eq!(ca.rejected, cb.rejected);
+        assert_eq!(ca.reconverge_slots, cb.reconverge_slots);
     }
 
     #[test]

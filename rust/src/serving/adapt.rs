@@ -211,6 +211,11 @@ impl AdaptationController {
         if observed.len() > self.slow.len() {
             self.slow.resize(observed.len(), 0.0);
             self.seen.resize(observed.len(), false);
+        } else if observed.len() < self.slow.len() {
+            // the stream set shrank (a control-plane app removal): drop the
+            // stale anchors so the re-anchor path stays shape-consistent
+            self.slow.truncate(observed.len());
+            self.seen.truncate(observed.len());
         }
         let ws = self.opts.slow_ewma;
         let wf = self.fast_ewma;
@@ -306,6 +311,123 @@ impl AdaptationController {
             }
         }
         (oracle_cost, regret)
+    }
+
+    /// Serialize the controller's mutable state (EWMA anchors, CUSUM,
+    /// cooldown/boost counters, detection history, regret trace, oracle φ)
+    /// for checkpointing. Options are *not* serialized — a restore
+    /// reconstructs them from configuration, then loads this state.
+    pub fn state_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("slot", Json::Num(e.slot as f64)),
+                    ("reconverge_slots", Json::Num(e.reconverge_slots as f64)),
+                    ("resolved", Json::Bool(e.resolved)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("slow", Json::arr_f64(&self.slow)),
+            (
+                "seen",
+                Json::Arr(self.seen.iter().map(|&b| Json::Bool(b)).collect()),
+            ),
+            ("cusum", Json::Num(self.cusum)),
+            ("cooldown_left", Json::Num(self.cooldown_left as f64)),
+            ("boost_left", Json::Num(self.boost_left as f64)),
+            ("slot", Json::Num(self.slot as f64)),
+            ("last_z", Json::Num(self.last_z)),
+            ("events", Json::Arr(events)),
+            ("regrets", Json::arr_f64(&self.regrets)),
+            ("last_oracle_cost", Json::Num(self.last_oracle_cost)),
+            (
+                "oracle_phi",
+                match &self.oracle {
+                    Some(gp) => gp.phi.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Restore state saved by [`AdaptationController::state_json`]. `net`
+    /// supplies the graph/stage shape the oracle strategy is rebuilt on
+    /// (the serving network — same shape as the truth network the oracle
+    /// optimizes).
+    pub fn load_state(
+        &mut self,
+        v: &crate::util::json::Json,
+        net: &Network,
+    ) -> anyhow::Result<()> {
+        use crate::util::json::Json;
+        let nums = |k: &str| -> anyhow::Result<Vec<f64>> {
+            Ok(v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("controller state: missing '{k}'"))?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0))
+                .collect())
+        };
+        self.slow = nums("slow")?;
+        self.seen = v
+            .get("seen")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("controller state: missing 'seen'"))?
+            .iter()
+            .map(|x| x.as_bool().unwrap_or(false))
+            .collect();
+        anyhow::ensure!(
+            self.seen.len() == self.slow.len(),
+            "controller state: seen/slow length mismatch"
+        );
+        self.cusum = v.get("cusum").and_then(Json::as_f64).unwrap_or(0.0);
+        self.cooldown_left = v
+            .get("cooldown_left")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        self.boost_left = v.get("boost_left").and_then(Json::as_usize).unwrap_or(0);
+        self.slot = v
+            .get("slot")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("controller state: missing 'slot'"))?;
+        self.last_z = v.get("last_z").and_then(Json::as_f64).unwrap_or(0.0);
+        self.events.clear();
+        if let Some(events) = v.get("events").and_then(Json::as_arr) {
+            for e in events {
+                self.events.push(AdaptationEvent {
+                    slot: e
+                        .get("slot")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow::anyhow!("controller event: missing 'slot'"))?,
+                    reconverge_slots: e
+                        .get("reconverge_slots")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0),
+                    resolved: e.get("resolved").and_then(Json::as_bool).unwrap_or(false),
+                });
+            }
+        }
+        self.regrets = nums("regrets")?;
+        self.last_oracle_cost = v
+            .get("last_oracle_cost")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        self.oracle = match v.get("oracle_phi") {
+            Some(Json::Null) | None => None,
+            Some(p) => {
+                let phi = crate::strategy::Strategy::from_json(&net.graph, p)?;
+                Some(GradientProjection::with_strategy(
+                    net,
+                    phi,
+                    GpOptions::default(),
+                ))
+            }
+        };
+        Ok(())
     }
 
     /// Detections so far.
@@ -473,6 +595,47 @@ mod tests {
             assert_eq!(ReconvergePolicy::parse(p.name()).unwrap(), p);
         }
         assert!(ReconvergePolicy::parse("lukewarm").is_err());
+    }
+
+    #[test]
+    fn shrinking_stream_sets_do_not_panic_the_detector() {
+        // a control-plane app removal shrinks the observed vector; the
+        // detector must truncate its anchors (and not panic on re-anchor)
+        let mut ctrl = AdaptationController::new(ControllerOptions::default());
+        ctrl.observe(&[1.0, 0.8, 1.2], &[1.0, 0.8, 1.2]);
+        ctrl.observe(&[1.0, 0.8, 1.2], &[1.0, 0.8, 1.2]);
+        // two streams left, one of them stepping hard enough to fire
+        let act = ctrl.observe(&[60.0, 0.8], &[18.7, 0.8]);
+        assert_ne!(act, PolicyAction::None, "step after shrink must still fire");
+        assert_eq!(ctrl.slow.len(), 2);
+    }
+
+    #[test]
+    fn controller_state_roundtrip_resumes_identically() {
+        let net = crate::testutil::small_net(true);
+        let mut a = AdaptationController::new(ControllerOptions::default());
+        a.observe(&[1.0, 0.8], &[1.0, 0.8]);
+        a.post_slot(50.0, &net);
+        a.observe(&[60.0, 0.8], &[18.7, 0.8]); // abrupt step: fires
+        a.post_slot(80.0, &net);
+        let v = crate::util::json::Json::parse(&a.state_json().to_string_pretty()).unwrap();
+        let mut b = AdaptationController::new(ControllerOptions::default());
+        b.load_state(&v, &net).unwrap();
+        assert_eq!(b.events().len(), a.events().len());
+        assert_eq!(b.slot, a.slot);
+        assert_eq!(b.cusum.to_bits(), a.cusum.to_bits());
+        // subsequent slots behave identically, including the warm oracle
+        for obs in [[2.0, 1.0], [1.5, 0.9], [1.2, 0.7]] {
+            let fast = [a.slow[0], a.slow[1]];
+            let act_a = a.observe(&obs, &fast);
+            let act_b = b.observe(&obs, &fast);
+            assert_eq!(act_a, act_b);
+            assert_eq!(a.last_z.to_bits(), b.last_z.to_bits());
+            let (oa, ra) = a.post_slot(30.0, &net);
+            let (ob, rb) = b.post_slot(30.0, &net);
+            assert_eq!(oa.to_bits(), ob.to_bits());
+            assert_eq!(ra.to_bits(), rb.to_bits());
+        }
     }
 
     #[test]

@@ -47,6 +47,19 @@ pub trait Optimizer {
     fn runtime_stats(&self) -> Option<crate::distributed::RuntimeStats> {
         None
     }
+    /// Adopt a new network shape mid-run (the control plane's epoch rebuild
+    /// after an application registers, drains or is removed), warm-starting
+    /// from `phi` — already remapped to the new stage registry. The default
+    /// falls back to a cold restart on the new network; centralized GP and
+    /// the distributed runtime override it to reconverge incrementally.
+    fn rebind(&mut self, net: &Network, _phi: &Strategy) {
+        self.restart(net);
+    }
+    /// Current step size, for checkpointing (`None` when not meaningful —
+    /// restore then falls back to the configured default).
+    fn step_size(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Boxed optimizers serve too (lets callers pick the optimizer at runtime,
@@ -70,6 +83,12 @@ impl<T: Optimizer + ?Sized> Optimizer for Box<T> {
     fn runtime_stats(&self) -> Option<crate::distributed::RuntimeStats> {
         (**self).runtime_stats()
     }
+    fn rebind(&mut self, net: &Network, phi: &Strategy) {
+        (**self).rebind(net, phi);
+    }
+    fn step_size(&self) -> Option<f64> {
+        (**self).step_size()
+    }
 }
 
 impl Optimizer for crate::algo::gp::GradientProjection {
@@ -84,6 +103,12 @@ impl Optimizer for crate::algo::gp::GradientProjection {
     }
     fn scale_step(&mut self, factor: f64) {
         self.opts.alpha *= factor;
+    }
+    fn rebind(&mut self, net: &Network, phi: &Strategy) {
+        crate::algo::gp::GradientProjection::rebind(self, net, phi);
+    }
+    fn step_size(&self) -> Option<f64> {
+        Some(self.opts.alpha)
     }
 }
 
@@ -211,6 +236,171 @@ impl<O: Optimizer> OnlineServer<O> {
     /// Change the hidden true base rate (models demand shifts mid-run).
     pub fn set_true_rate(&mut self, app: usize, node: usize, rate: f64) {
         self.workload.set_base_rate(app, node, rate);
+    }
+
+    /// Serving slots completed so far.
+    pub fn slots_served(&self) -> usize {
+        self.slot_no
+    }
+
+    /// The server's configuration.
+    pub fn options(&self) -> &ServerOptions {
+        &self.opts
+    }
+
+    /// Control-plane epoch rebuild: swap in a network whose application set
+    /// changed. `remap[old_app] = Some(new_app)` for surviving apps, `None`
+    /// for removed ones. Rate-estimate rows follow their app; new apps
+    /// start unobserved (the usual EWMA cold start). The workload is
+    /// rebound too ([`Workload::rebind`]): surviving streams keep their
+    /// model/RNG state, new sources get fresh streams. The optimizer is
+    /// NOT touched here — callers rebind it first ([`Optimizer::rebind`])
+    /// so its strategy is shaped for `net` before the next slot runs.
+    ///
+    /// An attached [`AdaptationController`]'s per-stream slow-EWMA anchors
+    /// are indexed by stream position; when a removal shifts stream
+    /// indices they transiently misalign and re-learn over the next few
+    /// slots (deterministically — worst case a spurious detection right
+    /// after an epoch rebuild, when a reconvergence boost is active
+    /// anyway).
+    pub fn rebind_network(&mut self, net: Network, remap: &[Option<usize>]) {
+        let mut est_rates = vec![vec![0.0; net.n()]; net.apps.len()];
+        let mut est_seen = vec![vec![false; net.n()]; net.apps.len()];
+        for (old_a, new_a) in remap.iter().enumerate() {
+            if let Some(na) = new_a {
+                est_rates[*na] = std::mem::take(&mut self.est_rates[old_a]);
+                est_seen[*na] = std::mem::take(&mut self.est_seen[old_a]);
+            }
+        }
+        self.est_rates = est_rates;
+        self.est_seen = est_seen;
+        // rebind the workload against the truth rates before the estimate
+        // plane overwrites them below
+        self.workload.rebind(&net, remap);
+        self.net = net;
+        for (a, est) in self.est_rates.iter().enumerate() {
+            self.net.apps[a].input_rates.copy_from_slice(est);
+        }
+    }
+
+    /// Serialize the serving-loop state — estimates, slot counter, delay
+    /// histogram, workload and (if attached) controller — for
+    /// checkpointing. The optimizer is serialized separately (φ via
+    /// [`Optimizer::strategy`], step size via [`Optimizer::step_size`]).
+    pub fn state_json(&self) -> anyhow::Result<crate::util::json::Json> {
+        use crate::util::json::Json;
+        Ok(Json::obj(vec![
+            (
+                "est_rates",
+                Json::Arr(self.est_rates.iter().map(|r| Json::arr_f64(r)).collect()),
+            ),
+            (
+                "est_seen",
+                Json::Arr(
+                    self.est_seen
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|&b| Json::Bool(b)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("slot", Json::Num(self.slot_no as f64)),
+            ("delay_hist", self.delay_hist.state_json()),
+            ("workload", self.workload.state_json()?),
+            (
+                "controller",
+                match &self.controller {
+                    Some(c) => c.state_json(),
+                    None => Json::Null,
+                },
+            ),
+        ]))
+    }
+
+    /// Restore state saved by [`OnlineServer::state_json`] into a server
+    /// already built on the same network shape. If the snapshot carries
+    /// controller state and none is attached, a default-options controller
+    /// is attached first (CLI options override by attaching before calling
+    /// this).
+    pub fn load_state_json(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::util::json::Json;
+        let rates = v
+            .get("est_rates")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("server state: missing 'est_rates'"))?;
+        anyhow::ensure!(
+            rates.len() == self.net.apps.len(),
+            "server state: {} estimate rows for {} apps",
+            rates.len(),
+            self.net.apps.len()
+        );
+        for (row, rv) in self.est_rates.iter_mut().zip(rates) {
+            let rv = rv
+                .as_arr()
+                .filter(|a| a.len() == row.len())
+                .ok_or_else(|| anyhow::anyhow!("server state: bad estimate row shape"))?;
+            for (x, j) in row.iter_mut().zip(rv) {
+                *x = j
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("server state: non-numeric estimate"))?;
+            }
+        }
+        if let Some(seen) = v.get("est_seen").and_then(Json::as_arr) {
+            anyhow::ensure!(
+                seen.len() == self.est_seen.len(),
+                "server state: est_seen shape"
+            );
+            for (row, rv) in self.est_seen.iter_mut().zip(seen) {
+                let rv = rv
+                    .as_arr()
+                    .filter(|a| a.len() == row.len())
+                    .ok_or_else(|| anyhow::anyhow!("server state: bad est_seen row shape"))?;
+                for (x, j) in row.iter_mut().zip(rv) {
+                    *x = j.as_bool().unwrap_or(false);
+                }
+            }
+        }
+        self.slot_no = v
+            .get("slot")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("server state: missing 'slot'"))?;
+        if let Some(h) = v.get("delay_hist") {
+            self.delay_hist = crate::metrics::Histogram::from_state_json(h)?;
+        }
+        let wl = v
+            .get("workload")
+            .ok_or_else(|| anyhow::anyhow!("server state: missing 'workload'"))?;
+        let workload = Workload::from_state_json(wl)?;
+        for s in &workload.streams {
+            anyhow::ensure!(
+                s.app < self.net.apps.len() && s.node < self.net.n(),
+                "server state: stream (app {}, node {}) outside the network",
+                s.app,
+                s.node
+            );
+        }
+        self.opts.slot_secs = workload.slot_secs;
+        self.workload = workload;
+        match v.get("controller") {
+            Some(crate::util::json::Json::Null) | None => {}
+            Some(c) => {
+                if self.controller.is_none() {
+                    self.attach_controller(AdaptationController::new(
+                        adapt::ControllerOptions::default(),
+                    ));
+                }
+                let net = self.net.clone();
+                self.controller
+                    .as_mut()
+                    .expect("attached above")
+                    .load_state(c, &net)?;
+            }
+        }
+        // expose the restored estimates to the optimizer's network view,
+        // exactly as a served slot would have left them
+        for (a, est) in self.est_rates.iter().enumerate() {
+            self.net.apps[a].input_rates.copy_from_slice(est);
+        }
+        Ok(())
     }
 
     /// Current rate estimate for (app, node).

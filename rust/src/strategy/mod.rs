@@ -381,6 +381,42 @@ impl Strategy {
         phi
     }
 
+    /// Serialize φ as `[stage][arena slot]` (the checkpoint format; slots
+    /// follow the CSR arena order — node 0's row, node 1's row, …).
+    /// Restored by [`Strategy::from_json`] on the same graph; f64 values
+    /// round-trip losslessly through [`crate::util::json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(self.phi.iter().map(|row| Json::arr_f64(row)).collect())
+    }
+
+    /// Rebuild a strategy on `graph`'s slot layout from [`Strategy::to_json`]
+    /// output. Rejects stage or arena shape mismatches.
+    pub fn from_json(graph: &Graph, v: &crate::util::json::Json) -> anyhow::Result<Strategy> {
+        use crate::util::json::Json;
+        let stages = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("phi: expected a [stage][slot] array"))?;
+        let mut phi = Strategy::zeros(graph, stages.len());
+        let slots = phi.layout.num_slots();
+        for (s, row) in stages.iter().enumerate() {
+            let row = row
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("phi stage {s}: expected an array"))?;
+            anyhow::ensure!(
+                row.len() == slots,
+                "phi stage {s}: {} slots, graph arena has {slots}",
+                row.len()
+            );
+            for (t, x) in row.iter().enumerate() {
+                phi.phi[s][t] = x
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("phi stage {s} slot {t}: not a number"))?;
+            }
+        }
+        Ok(phi)
+    }
+
     /// L∞ distance between two strategies (convergence diagnostics).
     pub fn max_diff(&self, other: &Strategy) -> f64 {
         let mut d: f64 = 0.0;
@@ -509,6 +545,20 @@ mod tests {
             assert!(phi.topo_order_into(s, &mut scratch));
             assert_eq!(scratch.order, phi.topo_order(s).unwrap());
         }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let net = net();
+        let mut rng = Rng::new(5);
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let text = phi.to_json().to_string_pretty();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        let re = Strategy::from_json(&net.graph, &v).unwrap();
+        assert_eq!(re, phi, "phi must round-trip bit-exactly through JSON");
+        // shape mismatches are rejected
+        let small = crate::graph::Graph::new(2, &[(0, 1), (1, 0)]).unwrap();
+        assert!(Strategy::from_json(&small, &v).is_err());
     }
 
     #[test]

@@ -76,7 +76,28 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
 
+    /// Lossless u64 decoding: accepts the hex-string form written by
+    /// [`Json::from_u64`] as well as plain non-negative integral numbers
+    /// (exact only below 2^53 — the reason the hex form exists).
+    pub fn as_u64_lossless(&self) -> Option<u64> {
+        match self {
+            Json::Str(s) => {
+                let hex = s.strip_prefix("0x")?;
+                u64::from_str_radix(hex, 16).ok()
+            }
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9.0e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
     // ---- constructors ----------------------------------------------------
+    /// Lossless u64 encoding as a hex string. `Json::Num` stores f64, which
+    /// silently corrupts integers above 2^53 — RNG state words need all 64
+    /// bits to round-trip ([`Json::as_u64_lossless`] reads both forms).
+    pub fn from_u64(x: u64) -> Json {
+        Json::Str(format!("0x{x:016x}"))
+    }
+
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -454,6 +475,22 @@ mod tests {
     fn integer_formatting_is_exact() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn u64_roundtrips_losslessly() {
+        for x in [0u64, 1, u64::MAX, 1u64 << 53, 0xDEADBEEF_CAFEBABE] {
+            let v = Json::from_u64(x);
+            assert_eq!(v.as_u64_lossless(), Some(x), "{x}");
+            // survives a serialize/parse cycle too
+            let re = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(re.as_u64_lossless(), Some(x), "{x}");
+        }
+        // plain small integral numbers are accepted as a convenience
+        assert_eq!(Json::Num(42.0).as_u64_lossless(), Some(42));
+        assert_eq!(Json::Num(-1.0).as_u64_lossless(), None);
+        assert_eq!(Json::Num(0.5).as_u64_lossless(), None);
+        assert_eq!(Json::Str("xyz".into()).as_u64_lossless(), None);
     }
 
     #[test]

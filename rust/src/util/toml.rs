@@ -191,7 +191,7 @@ fn parse_value(v: &str, lineno: usize) -> anyhow::Result<Json> {
         let inner = inner.trim();
         let mut items = Vec::new();
         if !inner.is_empty() {
-            for part in inner.split(',') {
+            for part in split_top_level(inner) {
                 let part = part.trim();
                 if part.is_empty() {
                     continue; // trailing comma
@@ -205,6 +205,30 @@ fn parse_value(v: &str, lineno: usize) -> anyhow::Result<Json> {
     num.parse::<f64>()
         .map(Json::Num)
         .map_err(|_| anyhow::anyhow!("toml line {}: bad value '{v}'", lineno + 1))
+}
+
+/// Split an array body on commas at bracket depth 0 (quote-aware), so
+/// nested arrays like `[[0, 0.5], [3, 1.0]]` — the control-plane churn
+/// specs' sparse rate lists — parse correctly.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
 }
 
 #[cfg(test)]
@@ -266,6 +290,21 @@ mod tests {
         assert_eq!(evs[0].get("kind").unwrap().as_str(), Some("rate-scale"));
         assert_eq!(evs[0].get("factor").unwrap().as_f64(), Some(1.5));
         assert_eq!(evs[1].get("kind").unwrap().as_str(), Some("link-down"));
+    }
+
+    #[test]
+    fn nested_arrays_parse() {
+        let v = parse("rates = [[0, 0.5], [3, 1.0]]").unwrap();
+        let arr = v.get("rates").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_arr().unwrap()[0].as_usize(), Some(0));
+        assert_eq!(arr[0].as_arr().unwrap()[1].as_f64(), Some(0.5));
+        assert_eq!(arr[1].as_arr().unwrap()[0].as_usize(), Some(3));
+        // strings containing commas and brackets stay intact
+        let v = parse("xs = [\"a,b\", \"c]d\"]").unwrap();
+        let arr = v.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_str(), Some("a,b"));
+        assert_eq!(arr[1].as_str(), Some("c]d"));
     }
 
     #[test]

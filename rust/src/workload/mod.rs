@@ -560,6 +560,157 @@ impl Workload {
         }
     }
 
+    /// Control-plane epoch rebuild: renumber the streams onto a new
+    /// application set. `remap[old_app] = Some(new_app)` for surviving
+    /// apps, `None` for removed ones (their streams are dropped). Surviving
+    /// streams keep their model + RNG state — a rebuild does not perturb
+    /// their arrival sequences — but re-anchor their base rate to `net`'s
+    /// current input rate (the catalog's authoritative truth, which is how
+    /// app *updates* take effect). Sources present in `net` without a
+    /// stream get fresh stationary-Poisson streams, forked deterministically
+    /// from the workload's spawn RNG in (app, node) order.
+    pub fn rebind(&mut self, net: &Network, remap: &[Option<usize>]) {
+        let old = std::mem::take(&mut self.streams);
+        for mut s in old {
+            let Some(&Some(na)) = remap.get(s.app) else {
+                continue; // app removed: stream retires with it
+            };
+            s.app = na;
+            let rate = net.apps[na].input_rates[s.node];
+            s.model.set_base_rate(rate);
+            s.last_rate = s.model.rate_at(self.time());
+            self.streams.push(s);
+        }
+        for (a, app) in net.apps.iter().enumerate() {
+            for (i, &r) in app.input_rates.iter().enumerate() {
+                if r > 0.0 && !self.streams.iter().any(|s| s.app == a && s.node == i) {
+                    let rng = self.spawn_rng.fork();
+                    self.streams
+                        .push(Stream::new(a, i, Box::new(Poisson::new(r)), rng));
+                }
+            }
+        }
+    }
+
+    /// Serialize the full workload state — per-stream model parameters,
+    /// evolution state and RNG words, plus the slot cursor — so a restored
+    /// workload resumes its arrival streams bit-identically
+    /// ([`Workload::from_state_json`]). Errors for trace-replay streams,
+    /// whose history lives in an external file.
+    pub fn state_json(&self) -> anyhow::Result<Json> {
+        let mut streams = Vec::with_capacity(self.streams.len());
+        for s in &self.streams {
+            let spec = s.model.spec_json().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "stream (app {}, node {}): '{}' workloads cannot be checkpointed",
+                    s.app,
+                    s.node,
+                    s.model.kind()
+                )
+            })?;
+            streams.push(Json::obj(vec![
+                ("app", Json::Num(s.app as f64)),
+                ("node", Json::Num(s.node as f64)),
+                ("base", Json::Num(s.model.base_rate())),
+                ("model", spec),
+                ("state", s.model.state_json()),
+                (
+                    "rng",
+                    Json::Arr(s.rng.state().iter().map(|&w| Json::from_u64(w)).collect()),
+                ),
+            ]));
+        }
+        Ok(Json::obj(vec![
+            ("slot_secs", Json::Num(self.slot_secs)),
+            ("slot", Json::Num(self.slot as f64)),
+            (
+                "spawn_rng",
+                Json::Arr(
+                    self.spawn_rng
+                        .state()
+                        .iter()
+                        .map(|&w| Json::from_u64(w))
+                        .collect(),
+                ),
+            ),
+            ("streams", Json::Arr(streams)),
+        ]))
+    }
+
+    /// Rebuild a workload from [`Workload::state_json`] output. The stream
+    /// order, models, evolution state and RNG positions are restored
+    /// exactly, so sampling resumes bit-identically.
+    pub fn from_state_json(v: &Json) -> anyhow::Result<Workload> {
+        let rng_from = |v: &Json, what: &str| -> anyhow::Result<Rng> {
+            let arr = v
+                .as_arr()
+                .filter(|a| a.len() == 4)
+                .ok_or_else(|| anyhow::anyhow!("workload state: bad {what} rng"))?;
+            let mut words = [0u64; 4];
+            for (w, j) in words.iter_mut().zip(arr) {
+                *w = j
+                    .as_u64_lossless()
+                    .ok_or_else(|| anyhow::anyhow!("workload state: bad {what} rng word"))?;
+            }
+            Ok(Rng::from_state(words))
+        };
+        let slot_secs = v
+            .get("slot_secs")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("workload state: missing 'slot_secs'"))?;
+        anyhow::ensure!(slot_secs > 0.0, "workload state: slot_secs must be positive");
+        let slot = v
+            .get("slot")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("workload state: missing 'slot'"))?;
+        let spawn_rng = rng_from(
+            v.get("spawn_rng")
+                .ok_or_else(|| anyhow::anyhow!("workload state: missing 'spawn_rng'"))?,
+            "spawn",
+        )?;
+        let mut streams = Vec::new();
+        for sv in v
+            .get("streams")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("workload state: missing 'streams'"))?
+        {
+            let app = sv
+                .get("app")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("stream state: missing 'app'"))?;
+            let node = sv
+                .get("node")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("stream state: missing 'node'"))?;
+            let base = sv
+                .get("base")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("stream state: missing 'base'"))?;
+            let spec = ModelSpec::from_json(
+                sv.get("model")
+                    .ok_or_else(|| anyhow::anyhow!("stream state: missing 'model'"))?,
+            )?;
+            let mut model = spec.build(base)?;
+            if let Some(state) = sv.get("state") {
+                model.load_state(state)?;
+            }
+            let rng = rng_from(
+                sv.get("rng")
+                    .ok_or_else(|| anyhow::anyhow!("stream state: missing 'rng'"))?,
+                "stream",
+            )?;
+            streams.push(Stream::new(app, node, model, rng));
+        }
+        let mut wl = Workload::from_streams(slot_secs, streams, spawn_rng);
+        wl.slot = slot;
+        // re-derive each stream's pre-sample rate at the restored clock
+        let t = wl.time();
+        for s in &mut wl.streams {
+            s.last_rate = s.model.rate_at(t);
+        }
+        Ok(wl)
+    }
+
     /// Re-anchor one stream's base rate (demand-shift hook). Creates a new
     /// stationary Poisson stream if (app, node) had none.
     pub fn set_base_rate(&mut self, app: usize, node: usize, rate: f64) {
@@ -700,6 +851,91 @@ mod tests {
         };
         assert_eq!(run(9), run(9));
         assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn workload_state_roundtrip_resumes_bit_identically() {
+        let net = small_net(true);
+        let spec = WorkloadSpec::named("mmpp").unwrap();
+        let mut a = Workload::from_spec(&spec, &net, 1.0, 77).unwrap();
+        for _ in 0..25 {
+            a.sample_slot();
+        }
+        let snap = a.state_json().unwrap();
+        // serialize/parse cycle (what the checkpoint file does)
+        let snap = Json::parse(&snap.to_string_pretty()).unwrap();
+        let mut b = Workload::from_state_json(&snap).unwrap();
+        assert_eq!(b.slot(), a.slot());
+        assert_eq!(b.streams.len(), a.streams.len());
+        for _ in 0..25 {
+            a.sample_slot();
+            b.sample_slot();
+            for (sa, sb) in a.streams.iter().zip(&b.streams) {
+                assert_eq!(sa.last_offsets, sb.last_offsets);
+                assert_eq!(sa.last_rate.to_bits(), sb.last_rate.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn trace_workloads_refuse_checkpointing() {
+        let net = small_net(true);
+        let mut wl = Workload::stationary(&net, 1.0, 5);
+        let trace = Trace::record(&mut Workload::stationary(&net, 1.0, 5), 3, None);
+        let s = &wl.streams[0];
+        let (app, node) = (s.app, s.node);
+        let arrivals = trace.slots.iter().map(|sl| sl.arrivals[0].clone()).collect();
+        let rates = trace.slots.iter().map(|sl| sl.rates[0]).collect();
+        wl.streams[0] = Stream::new(
+            app,
+            node,
+            Box::new(TraceModel::new(1.0, arrivals, rates)),
+            Rng::new(1),
+        );
+        assert!(wl.state_json().is_err());
+    }
+
+    #[test]
+    fn rebind_preserves_survivors_and_spawns_new_streams() {
+        let net = small_net(true); // 1 app, sources at nodes 0 and 3
+        let mut a = Workload::stationary(&net, 1.0, 9);
+        let mut b = Workload::stationary(&net, 1.0, 9);
+        for _ in 0..10 {
+            a.sample_slot();
+            b.sample_slot();
+        }
+        // grow a two-app network: old app 0 survives as app 1
+        let mut apps = net.apps.clone();
+        let mut extra = net.apps[0].clone();
+        extra.input_rates.iter_mut().for_each(|r| *r = 0.0);
+        extra.input_rates[5] = 0.7;
+        apps.insert(0, extra);
+        let stages = crate::app::StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; net.n()]; stages.len()];
+        let net2 = crate::app::Network::new(
+            net.graph.clone(),
+            apps,
+            net.link_cost.clone(),
+            net.comp_cost.clone(),
+            cw,
+        )
+        .unwrap();
+        b.rebind(&net2, &[Some(1)]);
+        assert_eq!(b.streams.len(), 3, "two survivors + one new source");
+        assert!(b.streams.iter().any(|s| s.app == 0 && s.node == 5));
+        // surviving streams continue their exact arrival sequences
+        for _ in 0..10 {
+            a.sample_slot();
+            b.sample_slot();
+            for sa in &a.streams {
+                let sb = b
+                    .streams
+                    .iter()
+                    .find(|s| s.app == 1 && s.node == sa.node)
+                    .expect("survivor present");
+                assert_eq!(sa.last_offsets, sb.last_offsets);
+            }
+        }
     }
 
     #[test]

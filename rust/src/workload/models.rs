@@ -9,6 +9,7 @@
 //! arrival sequence is a pure function of (parameters, seed) — the
 //! determinism contract `rust/tests/workload.rs` pins down.
 
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// A nonstationary arrival process for one (app, node) stream.
@@ -18,6 +19,25 @@ use crate::util::rng::Rng;
 pub trait TrafficModel: Send {
     /// Stable model name (used in trace headers and reports).
     fn kind(&self) -> &'static str;
+
+    /// Shape parameters as a [`crate::workload::ModelSpec`]-shaped JSON
+    /// object (the checkpoint format: spec + base rate rebuild the model,
+    /// [`TrafficModel::state_json`] restores its evolution state). `None`
+    /// for models that cannot be reconstructed from parameters alone
+    /// (trace replay holds external history).
+    fn spec_json(&self) -> Option<Json>;
+
+    /// Internal evolution state (MMPP phase/dwell, trace cursor) for
+    /// checkpointing; stateless models return `Json::Null`.
+    fn state_json(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore state saved by [`TrafficModel::state_json`] (no-op for
+    /// stateless models).
+    fn load_state(&mut self, _v: &Json) -> anyhow::Result<()> {
+        Ok(())
+    }
 
     /// Instantaneous mean rate at absolute time `t` (requests/second), given
     /// the model's *current* internal state. Does not advance state.
@@ -101,6 +121,9 @@ impl TrafficModel for Poisson {
     fn kind(&self) -> &'static str {
         "poisson"
     }
+    fn spec_json(&self) -> Option<Json> {
+        Some(Json::obj(vec![("kind", Json::Str("poisson".into()))]))
+    }
     fn rate_at(&self, _t: f64) -> f64 {
         self.rate
     }
@@ -153,6 +176,14 @@ impl Diurnal {
 impl TrafficModel for Diurnal {
     fn kind(&self) -> &'static str {
         "diurnal"
+    }
+    fn spec_json(&self) -> Option<Json> {
+        Some(Json::obj(vec![
+            ("kind", Json::Str("diurnal".into())),
+            ("period", Json::Num(self.period)),
+            ("amplitude", Json::Num(self.amplitude)),
+            ("phase", Json::Num(self.phase)),
+        ]))
     }
     fn rate_at(&self, t: f64) -> f64 {
         self.base * self.shape(t)
@@ -226,6 +257,37 @@ impl Mmpp {
 impl TrafficModel for Mmpp {
     fn kind(&self) -> &'static str {
         "mmpp"
+    }
+    fn spec_json(&self) -> Option<Json> {
+        Some(Json::obj(vec![
+            ("kind", Json::Str("mmpp".into())),
+            ("gain", Json::Num(self.gain)),
+            ("dwell_base", Json::Num(self.dwell_base)),
+            ("dwell_burst", Json::Num(self.dwell_burst)),
+        ]))
+    }
+    fn state_json(&self) -> Json {
+        Json::obj(vec![
+            ("state", Json::Num(self.state as f64)),
+            ("remaining", Json::Num(self.remaining)),
+            ("started", Json::Bool(self.started)),
+        ])
+    }
+    fn load_state(&mut self, v: &Json) -> anyhow::Result<()> {
+        if matches!(v, Json::Null) {
+            return Ok(());
+        }
+        self.state = v
+            .get("state")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("mmpp state: missing 'state'"))?;
+        anyhow::ensure!(self.state <= 1, "mmpp state must be 0 or 1");
+        self.remaining = v
+            .get("remaining")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("mmpp state: missing 'remaining'"))?;
+        self.started = v.get("started").and_then(Json::as_bool).unwrap_or(true);
+        Ok(())
     }
     fn rate_at(&self, _t: f64) -> f64 {
         self.state_rate()
@@ -303,6 +365,16 @@ impl TrafficModel for FlashCrowd {
     fn kind(&self) -> &'static str {
         "flash-crowd"
     }
+    fn spec_json(&self) -> Option<Json> {
+        Some(Json::obj(vec![
+            ("kind", Json::Str("flash-crowd".into())),
+            ("peak", Json::Num(self.peak)),
+            ("start", Json::Num(self.start)),
+            ("ramp", Json::Num(self.ramp)),
+            ("hold", Json::Num(self.hold)),
+            ("decay", Json::Num(self.decay)),
+        ]))
+    }
     fn rate_at(&self, t: f64) -> f64 {
         let peak = self.base * self.peak;
         let t1 = self.start;
@@ -355,6 +427,12 @@ impl Drift {
 impl TrafficModel for Drift {
     fn kind(&self) -> &'static str {
         "drift"
+    }
+    fn spec_json(&self) -> Option<Json> {
+        Some(Json::obj(vec![
+            ("kind", Json::Str("drift".into())),
+            ("slope", Json::Num(self.slope)),
+        ]))
     }
     fn rate_at(&self, t: f64) -> f64 {
         self.base * (1.0 + self.slope * t).max(0.0)
@@ -463,6 +541,49 @@ mod tests {
         let c = drain(&mut Diurnal::new(2.0, 0.8, 24.0, 0.0).unwrap(), 60, 1.0, 77);
         let d = drain(&mut Diurnal::new(2.0, 0.8, 24.0, 0.0).unwrap(), 60, 1.0, 77);
         assert_eq!(c, d);
+    }
+
+    #[test]
+    fn mmpp_state_roundtrip_resumes_identically() {
+        // run A for 30 slots, snapshot (model state + rng), restore into a
+        // fresh model: the next 30 slots must be bit-identical to an
+        // uninterrupted run
+        let mut a = Mmpp::new(2.0, 5.0, 8.0, 4.0).unwrap();
+        let mut rng_a = Rng::new(99);
+        let mut out = Vec::new();
+        for s in 0..30 {
+            out.clear();
+            a.sample_slot(s as f64, 1.0, &mut rng_a, &mut out);
+        }
+        let spec = crate::workload::ModelSpec::from_json(&a.spec_json().unwrap()).unwrap();
+        let state = a.state_json();
+        let rng_state = rng_a.state();
+
+        let mut b = match spec {
+            crate::workload::ModelSpec::Mmpp {
+                gain,
+                dwell_base,
+                dwell_burst,
+            } => Mmpp::new(a.base_rate(), gain, dwell_base, dwell_burst).unwrap(),
+            other => panic!("expected mmpp spec, got {other:?}"),
+        };
+        b.load_state(&state).unwrap();
+        let mut rng_b = Rng::from_state(rng_state);
+        for s in 30..60 {
+            let mut oa = Vec::new();
+            let mut ob = Vec::new();
+            let ra = a.sample_slot(s as f64, 1.0, &mut rng_a, &mut oa);
+            let rb = b.sample_slot(s as f64, 1.0, &mut rng_b, &mut ob);
+            assert_eq!(oa, ob, "slot {s}");
+            assert_eq!(ra.to_bits(), rb.to_bits(), "slot {s}");
+        }
+    }
+
+    #[test]
+    fn stateless_models_report_null_state() {
+        assert_eq!(Poisson::new(1.0).state_json(), Json::Null);
+        assert_eq!(Drift::new(1.0, 0.1).state_json(), Json::Null);
+        assert!(Poisson::new(1.0).spec_json().is_some());
     }
 
     #[test]

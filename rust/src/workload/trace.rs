@@ -481,6 +481,25 @@ impl TrafficModel for TraceModel {
     fn kind(&self) -> &'static str {
         "trace"
     }
+    fn spec_json(&self) -> Option<Json> {
+        // a trace model carries external history a checkpoint cannot
+        // reconstruct from parameters — callers must re-resolve the trace
+        // file (the control plane rejects checkpointing trace workloads)
+        None
+    }
+    fn state_json(&self) -> Json {
+        Json::obj(vec![("cursor", Json::Num(self.cursor as f64))])
+    }
+    fn load_state(&mut self, v: &Json) -> anyhow::Result<()> {
+        if matches!(v, Json::Null) {
+            return Ok(());
+        }
+        self.cursor = v
+            .get("cursor")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("trace model state: missing 'cursor'"))?;
+        Ok(())
+    }
     fn rate_at(&self, _t: f64) -> f64 {
         if self.rates.is_empty() {
             0.0

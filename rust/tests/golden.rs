@@ -16,7 +16,7 @@ use scfo::scenarios::{runner, DistributedSpec};
 use scfo::util::json::Json;
 
 /// Keys whose values are wall-clock / environment dependent.
-const VOLATILE_KEYS: [&str; 7] = [
+const VOLATILE_KEYS: [&str; 9] = [
     "solve_secs",
     "cache_hit",
     "build_secs",
@@ -24,6 +24,8 @@ const VOLATILE_KEYS: [&str; 7] = [
     "iter_secs_samples",
     "peak_rss_bytes",
     "convergence_secs",
+    "admission_latency_secs_mean",
+    "admission_latency_secs_p95",
 ];
 
 const REL_TOL: f64 = 1e-9;
@@ -160,6 +162,20 @@ fn golden_distributed_tier_abilene_lossy() {
     });
     let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
     check_golden("distributed-abilene-lossy", &rep.to_json());
+}
+
+/// Churn (control-plane) tier: abilene at light congestion serving the
+/// default scripted app arrival/departure schedule; pins admission
+/// outcomes, epoch count and the reconvergence spans.
+#[test]
+fn golden_churn_tier_abilene() {
+    let mut spec = scfo::scenarios::ScenarioSpec::churn_matrix_sized(80)
+        .into_iter()
+        .find(|s| s.base.topology == "abilene")
+        .expect("churn matrix covers abilene");
+    spec.iters = 120;
+    let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
+    check_golden("churn-abilene-light", &rep.to_json());
 }
 
 // ---- comparator self-tests ------------------------------------------------
