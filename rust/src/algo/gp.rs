@@ -58,7 +58,7 @@ use crate::app::Network;
 use crate::flow::FlowState;
 use crate::graph::CsrLayout;
 use crate::marginals::{Marginals, INF_MARGINAL};
-use crate::strategy::{Strategy, TopoScratch, PHI_EPS};
+use crate::strategy::{Strategy, TopoScratch};
 
 /// Restricts the set of usable out-directions per (stage, node).
 /// One flag per CSR slot, aligned with [`Strategy::row`].
@@ -458,15 +458,23 @@ impl GradientProjection {
     }
 
     /// Adopt a new network shape mid-run, warm-starting from `phi` (already
-    /// shaped for `net` — e.g. the control plane's per-stage row remap after
-    /// an application registers or drains). Keeps the tuned options
-    /// (including any boosted step size) but rebuilds the support mask and
-    /// workspace for the new stage count, so reconvergence is incremental
-    /// rather than from scratch.
+    /// shaped for `net`). This is the single epoch-rebuild hook for both
+    /// kinds of churn:
+    ///
+    /// * **application churn** — the control plane's per-stage row remap
+    ///   after an app registers or drains
+    ///   ([`crate::control::warm_strategy`]);
+    /// * **topology churn** — a link removal or repair rebuilt the CSR
+    ///   arena, with surviving rows remapped slot-by-slot via
+    ///   [`Strategy::rebind_topology`] (see [`crate::topo`]).
+    ///
+    /// Keeps the tuned options (including any boosted step size) but
+    /// rebuilds the support mask and workspace for the new arena and stage
+    /// count, so reconvergence is incremental rather than from scratch.
     pub fn rebind(&mut self, net: &Network, phi: &Strategy) {
         let mut opts = self.opts.clone();
-        // a caller-supplied support mask is shaped for the old stage set;
-        // it cannot survive an application-set change
+        // a caller-supplied support mask is shaped for the old arena and
+        // stage set; it cannot survive an epoch rebuild
         opts.support = None;
         *self = GradientProjection::with_strategy(net, phi.clone(), opts);
     }
@@ -567,51 +575,6 @@ impl GradientProjection {
     /// Current cost.
     pub fn cost(&self, net: &Network) -> f64 {
         FlowState::solve(net, &self.phi).unwrap().total_cost
-    }
-
-    /// Adapt to a topology change: link (i,j) removed. Reroutes any φ mass on
-    /// the dead link to the remaining usable directions (paper: "node i only
-    /// needs to add j to the blocked node set").
-    pub fn on_link_removed(&mut self, net: &Network, i: usize, j: usize) {
-        let layout = net.graph.layout();
-        let Some(t) = layout.slot_of(i, j) else {
-            return; // not a link of this graph
-        };
-        let local = t - layout.slot_range(i).start;
-        for s in 0..net.num_stages() {
-            self.support.allowed[s][t] = false;
-            let mass = self.phi.row(s, i)[local];
-            if mass > PHI_EPS {
-                self.phi.row_mut(s, i)[local] = 0.0;
-                // redistribute onto remaining positive directions, or the
-                // minimum-hop next hop toward the destination if none remain
-                let row_sum: f64 = self.phi.row(s, i).iter().sum();
-                if row_sum > PHI_EPS {
-                    let scale = (row_sum + mass) / row_sum;
-                    for v in self.phi.row_mut(s, i) {
-                        *v *= scale;
-                    }
-                } else {
-                    let dest = net.dest_of_stage(s);
-                    let (_d, next) = net.graph.dijkstra_to(dest, |_| 1.0);
-                    if i != dest {
-                        self.phi.set(s, i, next[i], 1.0);
-                    } else if !net.is_final_stage(s) {
-                        self.phi.set(s, i, self.phi.cpu(), 1.0);
-                    }
-                }
-            }
-        }
-    }
-
-    /// Adapt to a topology change: link (i,j) added back — simply re-allow
-    /// the direction; GP will start shifting mass onto it if profitable.
-    pub fn on_link_added(&mut self, net: &Network, i: usize, j: usize) {
-        if let Some(t) = net.graph.layout().slot_of(i, j) {
-            for s in 0..net.num_stages() {
-                self.support.allowed[s][t] = true;
-            }
-        }
     }
 }
 
@@ -866,22 +829,44 @@ mod tests {
     }
 
     #[test]
-    fn link_removal_keeps_feasible() {
+    fn link_removal_rebuilds_arena_and_keeps_feasible() {
+        // topology churn: remove the (0,1) pair, rebuild the CSR arena,
+        // remap φ slot-by-slot and rebind the optimizer — the epoch-rebuild
+        // path (the dense-era on_link_removed support hack is gone)
         let net = small_net(true);
         let mut gp = GradientProjection::new(&net, GpOptions::default());
         gp.run(&net, 30);
-        // remove a link that carries traffic in the min-hop tree
-        let (i, j) = (0usize, 1usize);
-        assert!(net.graph.has_edge(i, j));
-        gp.on_link_removed(&net, i, j);
-        gp.phi.validate(&net).unwrap();
-        assert!(!gp.phi.has_loop());
-        for s in 0..net.num_stages() {
-            assert_eq!(gp.phi.get(s, i, j), 0.0);
+        let mut edges = Vec::new();
+        let mut link_cost = Vec::new();
+        for (id, &e) in net.graph.edges().iter().enumerate() {
+            if e != (0, 1) && e != (1, 0) {
+                edges.push(e);
+                link_cost.push(net.link_cost[id].clone());
+            }
         }
-        // keeps optimizing afterwards
-        let before = gp.cost(&net);
-        let rep = gp.run(&net, 200);
-        assert!(rep.final_cost <= before + 1e-9);
+        let pruned = Network::new(
+            Graph::new(net.n(), &edges).unwrap(),
+            net.apps.clone(),
+            link_cost,
+            net.comp_cost.clone(),
+            net.comp_weight.clone(),
+        )
+        .unwrap();
+        let phi = gp.phi.rebind_topology(&pruned);
+        gp.rebind(&pruned, &phi);
+        gp.phi.validate(&pruned).unwrap();
+        assert!(!gp.phi.has_loop());
+        for s in 0..pruned.num_stages() {
+            assert_eq!(gp.phi.get(s, 0, 1), 0.0, "dead direction has no slot");
+        }
+        // keeps optimizing on the rebuilt arena (monotone from the warm start)
+        let warm = gp.cost(&pruned);
+        let rep = gp.run(&pruned, 2000);
+        assert!(rep.final_cost <= warm + 1e-9);
+        // and the warm rebind lands on the same optimum as a cold build
+        let mut cold = GradientProjection::new(&pruned, GpOptions::default());
+        let cold_opt = cold.run(&pruned, 4000).final_cost;
+        let rel = (rep.final_cost - cold_opt).abs() / (1.0 + cold_opt);
+        assert!(rel < 1e-3, "warm {} vs cold {cold_opt}", rep.final_cost);
     }
 }

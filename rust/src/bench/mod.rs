@@ -119,7 +119,7 @@ pub struct DynamicsBench {
 
 /// Distributed-runtime measurements attached to a [`GpBenchResult`] when
 /// the bench drives the asynchronous sharded runtime
-/// (`scfo bench --json --distributed`). These are the BENCH.json v3
+/// (`scfo bench --json --distributed`). These are the BENCH.json v5
 /// columns: convergence wall-time, message count, max queue depth.
 #[derive(Clone, Debug)]
 pub struct DistributedBench {
@@ -142,7 +142,7 @@ pub struct DistributedBench {
 
 /// Control-plane measurements attached to a [`GpBenchResult`] when the
 /// bench drives the multi-tenant control plane (`scfo bench --json
-/// --control`). These are the BENCH.json v4 columns: admission latency,
+/// --control`). These are the BENCH.json v5 columns: admission latency,
 /// apps served, and warm-vs-cold reconvergence after an app arrival.
 #[derive(Clone, Debug)]
 pub struct ControlBench {
@@ -163,6 +163,39 @@ pub struct ControlBench {
     /// … and from a cold min-hop restart on the same network. Warm must be
     /// measurably smaller (asserted by `rust/tests/control.rs`).
     pub reconverge_iters_cold: usize,
+}
+
+/// Topology-churn measurements attached to a [`GpBenchResult`] when the
+/// bench flaps links through the control plane (`scfo bench --json
+/// --topo-churn`). These are the BENCH.json v5 columns: arena-rebind
+/// latency, warm-vs-cold reconvergence after each epoch rebuild, and the
+/// cost optimality the slot remap retained relative to a fresh-build
+/// oracle on the post-churn graph.
+#[derive(Clone, Debug)]
+pub struct TopoChurnBench {
+    /// Serving slots executed.
+    pub slots: usize,
+    /// Scripted events in the schedule.
+    pub events: usize,
+    /// Applied topology changes = epoch rebuilds (removals + repair
+    /// batches that survived the connectivity filter).
+    pub changes: usize,
+    /// Topology epoch counter after the run.
+    pub epochs: u64,
+    /// Link pairs removed across the run (before their repairs).
+    pub removed_pairs_total: usize,
+    /// Wall-clock seconds per topology commit: incremental CSR rebuild,
+    /// slot-by-slot φ remap, optimizer re-fleet.
+    pub rebind_secs_mean: f64,
+    /// GP iterations from the warm (remapped) strategy to within 2% of a
+    /// fresh-build oracle on the post-change network, mean over changes …
+    pub reconverge_iters_warm_mean: f64,
+    /// … and from a cold min-hop restart on the same network. Warm must
+    /// not exceed cold (asserted by the bench test below).
+    pub reconverge_iters_cold_mean: f64,
+    /// Oracle cost ÷ warm post-rebind cost, mean over changes (≤ ~1.0;
+    /// 1.0 means the remap lost nothing).
+    pub retained_optimality_mean: f64,
 }
 
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
@@ -199,6 +232,9 @@ pub struct GpBenchResult {
     /// Present when the bench drove the multi-tenant control plane
     /// (`iter_secs` is then the optimizer latency per served slot).
     pub control: Option<ControlBench>,
+    /// Present when the bench flapped links through the control plane
+    /// (`iter_secs` is then the optimizer latency per served slot).
+    pub topo_churn: Option<TopoChurnBench>,
 }
 
 /// Peak resident-set high-water mark of this process (Linux `VmHWM`);
@@ -264,6 +300,7 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
         dynamics: None,
         distributed: None,
         control: None,
+        topo_churn: None,
     })
 }
 
@@ -272,7 +309,7 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
 /// `shards` workers under the named fault preset (or a spec file path),
 /// until quiescence or `max_epochs`. `iter_secs` records the wall time per
 /// measurement epoch and `cost_trajectory` the measured cost per epoch; the
-/// result's `distributed` block carries the BENCH.json v3 columns
+/// result's `distributed` block carries the BENCH.json v5 columns
 /// (convergence wall-time, message count, max queue depth, ...).
 pub fn bench_distributed_scenario(
     family: &str,
@@ -359,6 +396,7 @@ pub fn bench_distributed_scenario(
             stale_reads: stats.stale_reads,
         }),
         control: None,
+        topo_churn: None,
     })
 }
 
@@ -433,6 +471,7 @@ pub fn bench_serving_scenario(
         }),
         distributed: None,
         control: None,
+        topo_churn: None,
     })
 }
 
@@ -444,7 +483,7 @@ pub fn bench_serving_scenario(
 /// solve's cost, once from the plane's committed (probe-seeded) strategy
 /// and once from a cold min-hop start on the same post-arrival network.
 /// `iter_secs` records the optimizer latency per slot; the result's
-/// `control` block carries the BENCH.json v4 columns.
+/// `control` block carries the BENCH.json v5 columns.
 pub fn bench_control_scenario(family: &str, slots: usize) -> anyhow::Result<GpBenchResult> {
     use crate::algo::gp::{GpOptions, GradientProjection};
     use crate::control::{iters_to_reach, AppSpec, AppStatus, ControlOptions, ControlPlane};
@@ -532,6 +571,114 @@ pub fn bench_control_scenario(family: &str, slots: usize) -> anyhow::Result<GpBe
         dynamics: None,
         distributed: None,
         control: Some(control),
+        topo_churn: None,
+    })
+}
+
+/// Topology-churn bench: serve the named scenario through the control
+/// plane for `slots` slots while the default flap schedule
+/// ([`crate::topo::TopoChurnSpec::default_schedule`]) removes and repairs
+/// links. Each topology commit (scripted removal or due-repair batch) is
+/// timed end to end — incremental CSR rebuild, φ slot remap, optimizer
+/// re-fleet — and followed by an offline warm-vs-cold measurement: GP
+/// iterations to come within 2% of a fresh-build oracle's cost on the
+/// post-change truth network, once from the plane's remapped strategy and
+/// once from a cold min-hop start. `iter_secs` records the optimizer
+/// latency per slot; the result's `topo_churn` block carries the
+/// BENCH.json v5 columns.
+pub fn bench_topo_churn_scenario(family: &str, slots: usize) -> anyhow::Result<GpBenchResult> {
+    use crate::algo::gp::{GpOptions, GradientProjection};
+    use crate::control::{iters_to_reach, ControlOptions, ControlPlane};
+    use crate::scenarios::{Congestion, ScenarioSpec};
+    use crate::strategy::Strategy;
+    use crate::topo::TopoChurnSpec;
+    use crate::util::rng::Rng;
+
+    anyhow::ensure!(slots >= 4, "topo-churn bench needs at least 4 slots");
+    let spec = ScenarioSpec::named(family, Congestion::Light)?;
+    let sc = spec.effective_base();
+    let seed = sc.seed;
+    let t0 = Instant::now();
+    let mut plane = ControlPlane::new(sc, ControlOptions::default())?;
+    let build_secs = t0.elapsed().as_secs_f64();
+
+    let schedule = TopoChurnSpec::default_schedule(slots);
+    // same fork as the scenario runner, so the two paths flap identically
+    let mut churn_rng = Rng::new(seed ^ 0x70D0_CAFE);
+    let mut iter_secs = Vec::with_capacity(slots);
+    let mut cost_trajectory = Vec::with_capacity(slots);
+    let mut rebind_secs = Vec::new();
+    let mut warm_iters: Vec<f64> = Vec::new();
+    let mut cold_iters: Vec<f64> = Vec::new();
+    let mut retained: Vec<f64> = Vec::new();
+    let mut removed_total = 0usize;
+    let mut changes = 0usize;
+    let mut next_event = 0usize;
+
+    for slot in 0..slots {
+        let mut changed = false;
+        let t = Instant::now();
+        if !plane.apply_due_repairs(slot)?.is_empty() {
+            changed = true;
+        }
+        while next_event < schedule.events.len() && schedule.events[next_event].at_slot <= slot {
+            let removed =
+                plane.apply_topo_event(&schedule.events[next_event].action, &mut churn_rng)?;
+            if !removed.is_empty() {
+                changed = true;
+                removed_total += removed.len();
+            }
+            next_event += 1;
+        }
+        if changed {
+            rebind_secs.push(t.elapsed().as_secs_f64());
+            changes += 1;
+            // warm-vs-cold reconvergence on the post-change truth network
+            let mut truth = plane.server.net.clone();
+            plane.server.workload.apply_true_rates(&mut truth);
+            let warm_phi = plane.server.optimizer.strategy().clone();
+            let cold_phi = Strategy::shortest_path_to_dest(&truth);
+            let mut reference =
+                GradientProjection::with_strategy(&truth, cold_phi.clone(), GpOptions::default());
+            let oracle = reference.run(&truth, 2000).final_cost;
+            warm_iters.push(iters_to_reach(&truth, &warm_phi, oracle, 0.02, 2000) as f64);
+            cold_iters.push(iters_to_reach(&truth, &cold_phi, oracle, 0.02, 2000) as f64);
+            let warm_now =
+                GradientProjection::with_strategy(&truth, warm_phi, GpOptions::default())
+                    .cost(&truth);
+            retained.push(oracle / warm_now.max(1e-300));
+        }
+        let m = plane.run_slot()?;
+        iter_secs.push(m.optimizer_latency);
+        cost_trajectory.push(m.cost);
+    }
+
+    let topo = TopoChurnBench {
+        slots,
+        events: schedule.events.len(),
+        changes,
+        epochs: plane.topology().epoch(),
+        removed_pairs_total: removed_total,
+        rebind_secs_mean: stats::mean(&rebind_secs),
+        reconverge_iters_warm_mean: stats::mean(&warm_iters),
+        reconverge_iters_cold_mean: stats::mean(&cold_iters),
+        retained_optimality_mean: stats::mean(&retained),
+    };
+    let net = &plane.server.net;
+    Ok(GpBenchResult {
+        name: family.to_string(),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs,
+        cost_trajectory,
+        peak_rss_bytes: peak_rss_bytes(),
+        dynamics: None,
+        distributed: None,
+        control: None,
+        topo_churn: Some(topo),
     })
 }
 
@@ -640,6 +787,31 @@ impl GpBenchResult {
                 );
             }
         }
+        if let Some(tc) = &self.topo_churn {
+            if let Json::Obj(o) = &mut doc {
+                o.insert("slots".into(), Json::Num(tc.slots as f64));
+                o.insert("topo_events".into(), Json::Num(tc.events as f64));
+                o.insert("topo_changes".into(), Json::Num(tc.changes as f64));
+                o.insert("topo_epochs".into(), Json::Num(tc.epochs as f64));
+                o.insert(
+                    "removed_pairs_total".into(),
+                    Json::Num(tc.removed_pairs_total as f64),
+                );
+                o.insert("rebind_secs_mean".into(), Json::Num(tc.rebind_secs_mean));
+                o.insert(
+                    "reconverge_iters_warm_mean".into(),
+                    Json::Num(tc.reconverge_iters_warm_mean),
+                );
+                o.insert(
+                    "reconverge_iters_cold_mean".into(),
+                    Json::Num(tc.reconverge_iters_cold_mean),
+                );
+                o.insert(
+                    "retained_optimality_mean".into(),
+                    Json::Num(tc.retained_optimality_mean),
+                );
+            }
+        }
         if let Some(dyn_) = &self.dynamics {
             if let Json::Obj(o) = &mut doc {
                 o.insert("workload".into(), Json::Str(dyn_.workload.clone()));
@@ -671,8 +843,11 @@ impl GpBenchResult {
 /// `bytes_sent`, `max_queue_depth`, `dropped`, `stale_reads`); 4 added the
 /// optional control-plane columns (`apps_registered`,
 /// `admission_accepted`/`_rejected`, `admission_latency_secs_mean`/`_p95`,
-/// `control_epochs`, `reconverge_iters_warm`/`_cold`).
-pub const BENCH_JSON_VERSION: f64 = 4.0;
+/// `control_epochs`, `reconverge_iters_warm`/`_cold`); 5 added the
+/// optional topology-churn columns (`topo_events`, `topo_changes`,
+/// `topo_epochs`, `removed_pairs_total`, `rebind_secs_mean`,
+/// `reconverge_iters_warm_mean`/`_cold_mean`, `retained_optimality_mean`).
+pub const BENCH_JSON_VERSION: f64 = 5.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
@@ -816,7 +991,7 @@ mod tests {
     }
 
     #[test]
-    fn control_bench_emits_v4_columns() {
+    fn control_bench_emits_admission_columns() {
         let res = bench_control_scenario("abilene", 30).unwrap();
         assert_eq!(res.iter_secs.len(), 30);
         let c = res.control.as_ref().expect("control block present");
@@ -832,7 +1007,7 @@ mod tests {
         );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(4.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(BENCH_JSON_VERSION));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "apps_registered",
@@ -844,6 +1019,51 @@ mod tests {
         ] {
             assert!(sc.get(key).is_some(), "missing v4 column {key}");
         }
+    }
+
+    #[test]
+    fn topo_churn_bench_emits_v5_columns() {
+        let res = bench_topo_churn_scenario("abilene", 30).unwrap();
+        assert_eq!(res.iter_secs.len(), 30);
+        assert!(res.cost_trajectory.iter().all(|c| c.is_finite()));
+        let tc = res.topo_churn.as_ref().expect("topo-churn block present");
+        assert_eq!(tc.events, 3, "default schedule is three events");
+        assert!(tc.changes >= 1, "at least one flap must land");
+        assert!(tc.epochs >= tc.changes as u64);
+        assert!(tc.removed_pairs_total >= 1);
+        assert!(tc.rebind_secs_mean > 0.0);
+        assert!(tc.reconverge_iters_cold_mean >= 1.0);
+        assert!(
+            tc.reconverge_iters_warm_mean <= tc.reconverge_iters_cold_mean,
+            "warm {} vs cold {}",
+            tc.reconverge_iters_warm_mean,
+            tc.reconverge_iters_cold_mean
+        );
+        assert!(
+            tc.retained_optimality_mean.is_finite() && tc.retained_optimality_mean > 0.0
+        );
+        let doc = gp_bench_json(&[res]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(5.0));
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "topo_events",
+            "topo_changes",
+            "topo_epochs",
+            "removed_pairs_total",
+            "rebind_secs_mean",
+            "reconverge_iters_warm_mean",
+            "reconverge_iters_cold_mean",
+            "retained_optimality_mean",
+        ] {
+            assert!(sc.get(key).is_some(), "missing v5 column {key}");
+        }
+        // static benches carry no topo-churn columns
+        let plain = bench_gp_scenario("abilene", 2).unwrap();
+        let doc = gp_bench_json(&[plain]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert!(sc.get("rebind_secs_mean").is_none());
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub struct AdmissionOptions {
     pub max_cost_increase: f64,
     /// GP iterations spent probing the candidate operating point. More
     /// iterations tighten the estimate (and warm the commit further) at the
-    /// price of admission latency — the tradeoff BENCH.json v4 measures.
+    /// price of admission latency — the tradeoff BENCH.json v5 measures.
     pub probe_iters: usize,
 }
 

@@ -21,7 +21,7 @@
 //! ## Epoch rebuilds and warm starts
 //!
 //! Every fleet change bumps the control plane's *epoch*: the [`Network`] is
-//! re-assembled from the catalog on the fixed topology (same graph, same
+//! re-assembled from the catalog on the current topology (same graph, same
 //! CSR arena), and the live optimizer is re-bound through
 //! [`crate::serving::Optimizer::rebind`] with a warm strategy —
 //! [`warm_strategy`] copies each surviving app's φ rows per stage through
@@ -31,8 +31,23 @@
 //! commit, and a temporary step-size boost (via
 //! [`crate::serving::Optimizer::scale_step`]) accelerates the residual
 //! reconvergence. `rust/tests/control.rs` pins that this warm path takes
-//! measurably fewer optimizer iterations than a cold restart; BENCH.json v4
+//! measurably fewer optimizer iterations than a cold restart; BENCH.json v5
 //! reports both counts.
+//!
+//! ## Topology epochs
+//!
+//! Topology churn composes with app churn through the same commit path. A
+//! [`TopologyState`] tracks the removed link pairs and their pending repair
+//! schedule against the epoch-0 base graph;
+//! [`ControlPlane::apply_topo_event`] / [`ControlPlane::remove_link_pair`] /
+//! [`ControlPlane::apply_due_repairs`] mutate it and trigger a *topology
+//! commit*: the network is re-assembled from the catalog on the pruned (or
+//! repaired) graph — a **new CSR arena** — and the live strategy is
+//! slot-remapped onto it by [`Strategy::rebind_topology`] before the shared
+//! optimizer-rebind/boost/serving-rebind sequence runs. The churn state
+//! rides in every checkpoint (snapshot key `topology`), so a run restored
+//! mid-flap rebuilds the same pruned arena and repairs on the same slot as
+//! an uninterrupted one.
 
 pub mod admission;
 pub mod catalog;
@@ -56,6 +71,7 @@ use crate::serving::{
     AdaptationController, ControllerOptions, OnlineServer, Optimizer, ServerOptions, SlotMetrics,
 };
 use crate::strategy::Strategy;
+use crate::topo::{TopoAction, TopologyState};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::{Workload, WorkloadSpec};
@@ -125,8 +141,17 @@ pub struct ControlPlane {
     /// initial fleet (imported into the catalog at construction) and are
     /// unused afterwards; the catalog is authoritative.
     pub scenario: Scenario,
-    /// The fixed topology every epoch rebuilds on.
+    /// The epoch-0 base topology (full link set).
     graph: Graph,
+    /// Link-churn bookkeeping: currently-removed pairs, the pending repair
+    /// schedule, and the topology epoch. Only its graph-level operations
+    /// are used here — the base network it wraps may carry a stale app
+    /// list, which is irrelevant (the catalog is authoritative for apps).
+    topo: TopologyState,
+    /// The current (possibly degraded) topology every epoch rebuilds on:
+    /// `graph` minus the removed pairs. Cached from
+    /// [`TopologyState::current_graph`] at each topology commit.
+    cur_graph: Graph,
     pub catalog: AppCatalog,
     pub admission: AdmissionController,
     pub server: OnlineServer<Box<dyn Optimizer>>,
@@ -180,6 +205,11 @@ impl ControlPlane {
             Some(spec) => Workload::from_spec(spec, &net, sopts.slot_secs, scenario.seed)?,
             None => Workload::stationary(&net, sopts.slot_secs, scenario.seed),
         };
+        // the serving net is the current-graph build; constructors pass the
+        // full-graph build, and restore() swaps in the checkpointed churn
+        // state right after assembly
+        let topo = TopologyState::new(net.clone());
+        let cur_graph = net.graph.clone();
         let mut server = OnlineServer::with_workload(net, optimizer, workload, sopts);
         if opts.adapt {
             server.attach_controller(AdaptationController::new(opts.controller.clone()));
@@ -187,6 +217,8 @@ impl ControlPlane {
         Ok(ControlPlane {
             scenario,
             graph,
+            topo,
+            cur_graph,
             catalog,
             admission: AdmissionController::new(opts.admission.clone()),
             server,
@@ -207,9 +239,19 @@ impl ControlPlane {
         self.server.slots_served()
     }
 
-    /// The fixed topology.
+    /// The epoch-0 base topology (full link set).
     pub fn graph(&self) -> &Graph {
         &self.graph
+    }
+
+    /// The current (possibly degraded) topology.
+    pub fn current_graph(&self) -> &Graph {
+        &self.cur_graph
+    }
+
+    /// The link-churn state: removed pairs, pending repairs, topology epoch.
+    pub fn topology(&self) -> &TopologyState {
+        &self.topo
     }
 
     /// Serve one slot; manages the epoch-rebuild boost expiry.
@@ -272,7 +314,7 @@ impl ControlPlane {
         } else {
             cand.register(spec)?;
         }
-        let net = cand.build_network(&self.scenario, &self.graph)?;
+        let net = cand.build_network(&self.scenario, &self.cur_graph)?;
         let remap = cand.remap(&self.catalog.ids());
         let warm = warm_strategy(
             &self.server.net,
@@ -316,7 +358,7 @@ impl ControlPlane {
     /// unconditionally-admitted lifecycle change (drain/remove), then
     /// commit it.
     fn rebuild_and_commit(&mut self, catalog: AppCatalog) -> anyhow::Result<()> {
-        let net = catalog.build_network(&self.scenario, &self.graph)?;
+        let net = catalog.build_network(&self.scenario, &self.cur_graph)?;
         let remap = catalog.remap(&self.catalog.ids());
         let phi = warm_strategy(
             &self.server.net,
@@ -344,6 +386,72 @@ impl ControlPlane {
         self.epoch += 1;
     }
 
+    // ---- topology churn ----------------------------------------------------
+
+    /// Apply one scripted topology event at the current serving slot:
+    /// remove the picked link pairs and schedule their repair. Returns the
+    /// pairs actually removed (possibly fewer than scripted — the
+    /// connectivity filter skips cut links); commits an epoch rebuild when
+    /// anything changed. Composes with app churn: the same serving state,
+    /// catalog and checkpoint machinery carry through.
+    pub fn apply_topo_event(
+        &mut self,
+        action: &TopoAction,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<(usize, usize)>> {
+        let at_slot = self.slots_served();
+        let picked = self.topo.apply_event(at_slot, action, rng);
+        if !picked.is_empty() {
+            self.commit_topology()?;
+        }
+        Ok(picked)
+    }
+
+    /// Remove one link pair now, scheduled to repair at serving slot `due`.
+    /// Errors if the pair is not a present base link or if removing it
+    /// would disconnect the graph.
+    pub fn remove_link_pair(&mut self, i: usize, j: usize, due: usize) -> anyhow::Result<()> {
+        self.topo.remove_pair(i, j, due)?;
+        self.commit_topology()
+    }
+
+    /// Restore one removed link pair immediately (dropping its pending
+    /// repair). Returns whether it was removed.
+    pub fn restore_link_pair(&mut self, i: usize, j: usize) -> anyhow::Result<bool> {
+        if !self.topo.restore_pair(i, j) {
+            return Ok(false);
+        }
+        self.commit_topology()?;
+        Ok(true)
+    }
+
+    /// Restore every link pair whose repair is due at or before `slot`
+    /// (typically called with [`ControlPlane::slots_served`] each slot).
+    /// Returns the restored pairs; commits one epoch rebuild if any.
+    pub fn apply_due_repairs(&mut self, slot: usize) -> anyhow::Result<Vec<(usize, usize)>> {
+        let restored = self.topo.due_repairs(slot);
+        if !restored.is_empty() {
+            self.commit_topology()?;
+        }
+        Ok(restored)
+    }
+
+    /// Epoch rebuild for a topology change: same fleet, new CSR arena. The
+    /// network is re-assembled from the catalog on the pruned/repaired
+    /// graph, φ slot-remaps onto the new arena
+    /// ([`Strategy::rebind_topology`]), and the commit path (optimizer
+    /// rebind + boost + serving-state rebind with an identity app remap)
+    /// is shared with app churn.
+    fn commit_topology(&mut self) -> anyhow::Result<()> {
+        self.cur_graph = self.topo.current_graph();
+        let catalog = self.catalog.clone();
+        let net = catalog.build_network(&self.scenario, &self.cur_graph)?;
+        let phi = self.server.optimizer.strategy().rebind_topology(&net);
+        let remap: Vec<Option<usize>> = (0..catalog.len()).map(Some).collect();
+        self.commit(catalog, net, &remap, phi);
+        Ok(())
+    }
+
     // ---- checkpoint / restore ---------------------------------------------
 
     /// Snapshot the full control-plane state as one JSON document (see
@@ -363,6 +471,7 @@ impl ControlPlane {
                 },
             ),
             ("boost_left", Json::Num(self.boost_left as f64)),
+            ("topology", self.topo.state_json()),
             ("server", self.server.state_json()?),
             (
                 "admission_accepted",
@@ -384,11 +493,13 @@ impl ControlPlane {
         snapshot::write_atomic(dir, &self.snapshot_json()?)
     }
 
-    /// Resume from the checkpoint in `dir`. The topology rebuilds
-    /// deterministically from the scenario seed; catalog, φ, step size,
-    /// estimates, workload (model + RNG state) and controller state restore
-    /// exactly, so the serving loop continues bit-identically with an
-    /// uninterrupted run (pinned by `rust/tests/control.rs`).
+    /// Resume from the checkpoint in `dir`. The base topology rebuilds
+    /// deterministically from the scenario seed and the checkpointed
+    /// link-churn state (removed pairs + pending repair schedule) replays
+    /// on top of it; catalog, φ (parsed against the pruned arena), step
+    /// size, estimates, workload (model + RNG state) and controller state
+    /// restore exactly, so the serving loop continues bit-identically with
+    /// an uninterrupted run (pinned by `rust/tests/control.rs`).
     pub fn restore(dir: &Path, opts: ControlOptions) -> anyhow::Result<ControlPlane> {
         let doc = snapshot::load(dir)?;
         let scenario = Scenario::from_json(
@@ -401,7 +512,16 @@ impl ControlPlane {
             doc.get("catalog")
                 .ok_or_else(|| anyhow::anyhow!("snapshot: missing 'catalog'"))?,
         )?;
-        let net = catalog.build_network(&scenario, &graph)?;
+        // replay the checkpointed link-churn state (removed pairs + pending
+        // repair schedule) onto the freshly-built base BEFORE parsing φ:
+        // a snapshot taken mid-flap stored φ on the pruned arena, so it
+        // must be parsed against the same pruned graph
+        let mut topo = TopologyState::new(catalog.build_network(&scenario, &graph)?);
+        if let Some(t) = doc.get("topology") {
+            topo.load_state_json(t)?;
+        }
+        let cur_graph = topo.current_graph();
+        let net = catalog.build_network(&scenario, &cur_graph)?;
         let phi = Strategy::from_json(
             &net.graph,
             doc.get("phi")
@@ -422,6 +542,8 @@ impl ControlPlane {
             },
         );
         let mut plane = Self::assemble(scenario, graph, catalog, Box::new(gp), net, opts)?;
+        plane.topo = topo;
+        plane.cur_graph = cur_graph;
         plane.server.load_state_json(
             doc.get("server")
                 .ok_or_else(|| anyhow::anyhow!("snapshot: missing 'server'"))?,
@@ -574,14 +696,27 @@ impl ControlPlane {
 /// copy each surviving app's φ rows per stage through the stage-registry
 /// remap — `remap[old_app] = Some(new_app)`. Apps whose destination or
 /// chain length changed keep the min-hop seeding (their old rows are
-/// shaped for different exit/offload constraints). The topology — and
-/// hence the CSR arena — is unchanged, so rows copy verbatim.
+/// shaped for different exit/offload constraints).
+///
+/// Rows copy verbatim only when the CSR arena is unchanged. When the edge
+/// set differs (a topology commit), the whole strategy is slot-remapped
+/// onto the new arena by [`Strategy::rebind_topology`] instead — the
+/// control plane never changes the fleet and the topology in one commit,
+/// so the stage sets match in that branch.
 pub fn warm_strategy(
     old_net: &Network,
     old_phi: &Strategy,
     new_net: &Network,
     remap: &[Option<usize>],
 ) -> Strategy {
+    if old_net.graph.edges() != new_net.graph.edges() {
+        debug_assert_eq!(
+            old_net.num_stages(),
+            new_net.num_stages(),
+            "topology and fleet changes must commit separately"
+        );
+        return old_phi.rebind_topology(new_net);
+    }
     let mut phi = Strategy::shortest_path_to_dest(new_net);
     for (old_a, new_a) in remap.iter().enumerate() {
         let Some(na) = new_a else { continue };
@@ -603,7 +738,7 @@ pub fn warm_strategy(
 
 /// GP iterations needed, starting from `phi0`, to bring the aggregate cost
 /// within `rel_tol` (relative) of `target`; `max_iters` if never reached.
-/// The warm-vs-cold reconvergence comparison of BENCH.json v4 (and the
+/// The warm-vs-cold reconvergence comparison of BENCH.json v5 (and the
 /// acceptance test) runs this once from the control plane's warm strategy
 /// and once from the min-hop cold start, against a shared target computed
 /// by a long reference solve.
@@ -709,6 +844,73 @@ mod tests {
         let remap: Vec<Option<usize>> = (0..old_net.apps.len()).map(Some).collect();
         let warm = warm_strategy(old_net, old_phi, old_net, &remap);
         assert_eq!(warm.max_diff(old_phi), 0.0);
+    }
+
+    #[test]
+    fn topo_flap_rebuilds_arena_and_serving_continues() {
+        let mut plane = small_plane();
+        plane.run_slot().unwrap();
+        let m0 = plane.server.net.m();
+        plane.remove_link_pair(0, 1, 5).unwrap();
+        assert_eq!(plane.epoch(), 1, "topology commit bumps the epoch");
+        assert_eq!(plane.server.net.m(), m0 - 2, "pair removal drops both directions");
+        assert_eq!(plane.topology().removed_pairs(), vec![(0, 1)]);
+        assert_eq!(plane.current_graph().m(), m0 - 2);
+        assert_eq!(plane.graph().m(), m0, "base graph untouched");
+        // φ lives on the pruned arena and serving continues
+        assert!(plane.run_slot().unwrap().cost.is_finite());
+        while plane.slots_served() < 5 {
+            plane.run_slot().unwrap();
+        }
+        let restored = plane.apply_due_repairs(plane.slots_served()).unwrap();
+        assert_eq!(restored, vec![(0, 1)]);
+        assert_eq!(plane.server.net.m(), m0);
+        assert!(plane.run_slot().unwrap().cost.is_finite());
+    }
+
+    #[test]
+    fn topology_and_app_churn_compose() {
+        let mut plane = small_plane();
+        let n = plane.graph().n();
+        plane.remove_link_pair(0, 1, 100).unwrap();
+        let d = plane.register(tiny_app("svc-t", n)).unwrap();
+        assert!(d.accepted(), "{d:?}");
+        // the arrival's admission probe and commit ran on the pruned graph
+        assert_eq!(plane.server.net.m(), plane.current_graph().m());
+        assert!(!plane.server.net.graph.has_edge(0, 1));
+        plane.run_slot().unwrap();
+        assert!(plane.restore_link_pair(0, 1).unwrap());
+        assert!(!plane.restore_link_pair(0, 1).unwrap(), "second restore no-op");
+        assert_eq!(plane.server.net.m(), plane.graph().m());
+        assert_eq!(plane.server.net.apps.len(), plane.catalog.len());
+        plane.run_slot().unwrap();
+    }
+
+    #[test]
+    fn snapshot_round_trips_topology_state() {
+        let mut plane = small_plane();
+        plane.remove_link_pair(0, 1, 42).unwrap();
+        plane.run_slot().unwrap();
+        let dir = std::env::temp_dir().join(format!("scfo-ctl-topo-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        plane.checkpoint(&dir).unwrap();
+        let re = ControlPlane::restore(&dir, ControlOptions::default()).unwrap();
+        assert_eq!(re.topology().removed_pairs(), vec![(0, 1)]);
+        assert_eq!(
+            re.topology().pending_repairs(),
+            plane.topology().pending_repairs()
+        );
+        assert_eq!(re.topology().epoch(), plane.topology().epoch());
+        assert_eq!(re.server.net.m(), plane.server.net.m(), "pruned arena rebuilt");
+        assert_eq!(
+            re.server
+                .optimizer
+                .strategy()
+                .max_diff(plane.server.optimizer.strategy()),
+            0.0,
+            "φ restored bit-exactly on the pruned arena"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //!   full workload state (per-stream model parameters + evolution state
 //!   such as the MMPP phase, and raw RNG words), and the adaptation
 //!   controller's EWMA/CUSUM/oracle state when attached,
+//! * the link-churn state (version 2) — removed link pairs and the pending
+//!   repair schedule, so a run restored mid-flap rebuilds the same pruned
+//!   CSR arena and repairs on the same slot,
 //! * the control-plane epoch and admission counters.
 //!
 //! Writes are atomic: the document lands in `snapshot.json.tmp` and is
@@ -25,8 +28,9 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
-/// Current snapshot format version.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// Current snapshot format version. Version 2 added the optional
+/// `topology` key (link-churn state); version-1 snapshots still load.
+pub const SNAPSHOT_VERSION: u64 = 2;
 
 /// File name of the live snapshot inside a checkpoint directory.
 pub const SNAPSHOT_FILE: &str = "snapshot.json";

@@ -98,7 +98,7 @@ impl Default for RuntimeOptions {
     }
 }
 
-/// Aggregate runtime counters (BENCH.json v3 / scenario-report columns).
+/// Aggregate runtime counters (BENCH.json v5 / scenario-report columns).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RuntimeStats {
     pub transport: TransportStats,
@@ -306,11 +306,13 @@ impl AsyncRuntime {
         rt
     }
 
-    /// Control-plane epoch rebuild: adopt a new application set on the same
+    /// Control-plane epoch rebuild: adopt a new application set and/or
     /// topology, warm-starting every node actor from `phi` (already shaped
-    /// for `net`). The actor fleet and transport are rebuilt — in-flight
-    /// messages are stage-indexed against the old registry and would be
-    /// meaningless — but the trust-region step size carries over, so
+    /// for `net` — after a link flap that is the slot-remapped strategy
+    /// from [`crate::strategy::Strategy::rebind_topology`]). The actor
+    /// fleet and transport are rebuilt — in-flight messages are
+    /// stage-indexed against the old registry and would be meaningless —
+    /// but the trust-region step size and fault spec carry over, so
     /// reconvergence is incremental rather than cold. Message/round
     /// counters restart with the new fleet.
     pub fn rebind(&mut self, net: Network, phi: Strategy) {

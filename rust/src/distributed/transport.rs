@@ -25,7 +25,7 @@
 //! Queues are bounded ([`InMemTransport::new`] / [`SimNetTransport::new`]
 //! take a capacity): a send to a full mailbox is counted as an overflow drop,
 //! and the high-water mark is reported in [`TransportStats`] (the
-//! `max queue depth` column of BENCH.json v3).
+//! `max queue depth` column of BENCH.json v5).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;

@@ -17,7 +17,9 @@
 //!   asynchronous sharded runtime with deterministic fault injection
 //!   ([`distributed`]), baselines ([`algo`]), flow/marginal
 //!   computation ([`flow`], [`marginals`]), the nonstationary workload
-//!   subsystem ([`workload`]: traffic models + trace replay), serving loop
+//!   subsystem ([`workload`]: traffic models + trace replay), epoch-versioned
+//!   topology churn ([`topo`]: link flaps, regional outages, scripted repair
+//!   schedules), serving loop
 //!   with online adaptation ([`serving`]), the multi-tenant control plane
 //!   ([`control`]: app lifecycle, admission control, checkpoint/restore and
 //!   the HTTP ops API) and benchmarking/validation substrates ([`sim`],
@@ -46,6 +48,7 @@ pub mod runtime;
 pub mod scenarios;
 pub mod serving;
 pub mod sim;
+pub mod topo;
 pub mod workload;
 
 #[cfg(any(test, feature = "testutil"))]

@@ -11,17 +11,19 @@
 //! scfo scenarios run --all --tier dynamic          # nonstationary serving tier
 //! scfo scenarios run --all --tier distributed      # async-runtime chaos tier
 //! scfo scenarios run --all --tier churn            # control-plane app churn tier
+//! scfo scenarios run --all --tier topo-churn       # link-flap epoch-rebind tier
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
 //! scfo distributed run --shards 4 --faults lossy   # async sharded runtime
 //! scfo distributed run --faults spec.toml --json D.json  # custom fault spec
 //! scfo distributed faults                          # list fault presets
 //! scfo bench --json [--scenarios a,b] [--iters N]  # GP hot-path → BENCH.json
 //! scfo bench --json --workload flash-crowd         # serving-mode bench (regret)
-//! scfo bench --json --distributed --shards 4       # async runtime → BENCH.json v3
+//! scfo bench --json --distributed --shards 4       # async runtime → BENCH.json v5
 //! scfo serve    --topology geant [--slots 200] [--workload diurnal] [--xla]
 //! scfo serve    --http 127.0.0.1:8080 --checkpoint ckpt [--slots 0]   # control plane
 //! scfo serve    --checkpoint ckpt --restore        # resume bit-identically
-//! scfo bench --json --control [--slots 90]         # control plane → BENCH.json v4
+//! scfo bench --json --control [--slots 90]         # control plane → BENCH.json v5
+//! scfo bench --json --topo-churn [--slots 60]      # link flaps → BENCH.json v5
 //! scfo trace record --topology abilene --workload mmpp --slots 120 --out t.json
 //! scfo trace replay t.json | stats t.json          # bit-identical trace replay
 //! scfo validate --topology abilene                 # DES vs analytic cost
@@ -597,8 +599,15 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let workload = args.flag("workload");
     let distributed = args.switch("distributed") || args.flag("faults").is_some();
     let control = args.switch("control");
+    let topo_churn = args.switch("topo-churn");
     let mut results = Vec::new();
     for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if topo_churn {
+            let slots = args.flag_usize("slots", 60)?;
+            eprintln!("bench {name} (topo churn, {slots} slots)...");
+            results.push(scfo::bench::bench_topo_churn_scenario(name, slots)?);
+            continue;
+        }
         if control {
             let slots = args.flag_usize("slots", 90)?;
             eprintln!("bench {name} (control plane, {slots} slots)...");
@@ -632,7 +641,46 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    if control {
+    if topo_churn {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                let tc = r
+                    .topo_churn
+                    .as_ref()
+                    .expect("topo-churn bench has a topo_churn block");
+                vec![
+                    r.name.clone(),
+                    format!("{}/{}", r.n, r.m),
+                    tc.slots.to_string(),
+                    format!("{}/{}", tc.changes, tc.events),
+                    format!("{:.2}", tc.rebind_secs_mean * 1e3),
+                    format!("{:.1}", tc.reconverge_iters_warm_mean),
+                    format!("{:.1}", tc.reconverge_iters_cold_mean),
+                    format!("{:.4}", tc.retained_optimality_mean),
+                    format!(
+                        "{:.4}",
+                        r.cost_trajectory.last().copied().unwrap_or(f64::NAN)
+                    ),
+                ]
+            })
+            .collect();
+        print_table(
+            "Topology-churn bench (BENCH.json v5 columns)",
+            &[
+                "scenario",
+                "|V|/|E|",
+                "slots",
+                "changes",
+                "rebind ms",
+                "reconv warm",
+                "reconv cold",
+                "retained",
+                "final cost",
+            ],
+            &rows,
+        );
+    } else if control {
         let rows: Vec<Vec<String>> = results
             .iter()
             .map(|r| {
@@ -654,7 +702,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             })
             .collect();
         print_table(
-            "Control-plane bench (BENCH.json v4 columns)",
+            "Control-plane bench (BENCH.json v5 columns)",
             &[
                 "scenario",
                 "|V|/|E|",
@@ -691,7 +739,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             })
             .collect();
         print_table(
-            "Distributed async runtime bench (BENCH.json v3 columns)",
+            "Distributed async runtime bench (BENCH.json v5 columns)",
             &[
                 "scenario",
                 "|V|/|E|",
@@ -810,6 +858,11 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             }
             return Ok(specs);
         }
+        if tier == "topo-churn" {
+            let slots = args.flag_usize("slots", 150)?;
+            let iters = args.flag_usize("iters", 150)?;
+            return Ok(ScenarioSpec::topo_churn_matrix_sized(slots, iters));
+        }
         if tier == "dynamic" {
             let slots = args.flag_usize("slots", 200)?;
             let mut specs = ScenarioSpec::dynamic_matrix_sized(slots);
@@ -828,7 +881,8 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             "large" => (150, 60),
             other => {
                 anyhow::bail!(
-                    "unknown scenario tier '{other}' (standard|large|dynamic|distributed|churn)"
+                    "unknown scenario tier '{other}' \
+                     (standard|large|dynamic|distributed|churn|topo-churn)"
                 )
             }
         };
@@ -866,7 +920,9 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             let rows: Vec<Vec<String>> = tier_matrix(args)?
                 .iter()
                 .map(|s| {
-                    let dynamics = if let Some(c) = &s.churn {
+                    let dynamics = if let Some(tc) = &s.topo_churn {
+                        format!("topo-churn:{} events x{}", tc.events.len(), s.slots)
+                    } else if let Some(c) = &s.churn {
                         format!("churn:{} events x{}", c.events.len(), s.slots)
                     } else {
                         match (&s.workload, &s.distributed) {
@@ -1143,8 +1199,9 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|trace|validate|distributed|broadcast> \
                  [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] \
-                 [--tier large|dynamic|distributed|churn] [--workload SPEC] [--shards N] \
-                 [--faults SPEC] [--http ADDR] [--checkpoint DIR] [--restore] [--control] [--xla]"
+                 [--tier large|dynamic|distributed|churn|topo-churn] [--workload SPEC] [--shards N] \
+                 [--faults SPEC] [--http ADDR] [--checkpoint DIR] [--restore] [--control] \
+                 [--topo-churn] [--xla]"
             );
             std::process::exit(2);
         }

@@ -17,7 +17,12 @@
 //!   ([`crate::workload::WorkloadSpec`]); when present the scenario runs
 //!   through the online serving loop with the adaptation controller and its
 //!   report carries regret/reconvergence metrics (`dynamic` tier,
-//!   [`ScenarioSpec::dynamic_matrix`]).
+//!   [`ScenarioSpec::dynamic_matrix`]);
+//! * **topology churn** (optional) — a scripted link-flap/outage schedule
+//!   ([`crate::topo::TopoChurnSpec`]); when present the scenario serves its
+//!   slots under epoch-versioned CSR rebinds and the report compares warm
+//!   reconvergence against a fresh-build oracle (`topo-churn` tier,
+//!   [`ScenarioSpec::topo_churn_matrix`]).
 //!
 //! [`ScenarioSpec::matrix`] expands the default evaluation matrix (families ×
 //! congestion levels, each with the standard event schedule); the
@@ -57,12 +62,14 @@ pub mod runner;
 
 pub use runner::{
     run_batch, ChurnSummary, DistributedSummary, RunnerOptions, ScenarioCache, ScenarioReport,
+    TopoChurnSummary,
 };
 
 use crate::config::Scenario;
 use crate::control::AppSpec;
 use crate::cost::CostKind;
 use crate::distributed::FaultSpec;
+use crate::topo::TopoChurnSpec;
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
 
@@ -162,11 +169,15 @@ pub enum DynamicEvent {
     /// Multiply every application's input rates by `factor` (a demand step).
     RateScale { factor: f64, iters: usize },
     /// Remove the most-loaded removable link (deterministic choice: highest
-    /// GP link flow whose removal keeps every destination reachable). Drives
-    /// [`crate::algo::gp::GradientProjection::on_link_removed`].
+    /// GP link flow whose removal keeps every destination reachable). The
+    /// runner rebuilds the CSR arena on the pruned graph and warm-starts GP
+    /// from the slot-remapped strategy
+    /// ([`crate::strategy::Strategy::rebind_topology`] →
+    /// [`crate::serving::Optimizer::rebind`]).
     LinkDown { iters: usize },
-    /// Restore the most recently removed link
-    /// ([`crate::algo::gp::GradientProjection::on_link_added`]).
+    /// Restore the most recently removed link: another epoch rebuild, back
+    /// onto the denser arena — the repaired slots re-enter at zero mass and
+    /// the optimizer shifts flow onto them only as the marginals warrant.
     LinkUp { iters: usize },
 }
 
@@ -418,6 +429,14 @@ pub struct ScenarioSpec {
     /// admission-checked lifecycle actions; combines with `workload` for
     /// nonstationary traffic underneath the churn.
     pub churn: Option<ChurnSpec>,
+    /// Scripted topology-churn schedule (the `topo-churn` tier). When set,
+    /// the scenario serves [`ScenarioSpec::slots`] slots under
+    /// epoch-versioned link flaps and regional outages: each change
+    /// rebuilds the CSR arena on the surviving graph and warm-starts GP
+    /// from the slot-remapped strategy; the report carries rebind latency,
+    /// warm-vs-cold reconvergence slots and the retained cost optimality
+    /// against a fresh-build oracle.
+    pub topo_churn: Option<TopoChurnSpec>,
 }
 
 /// Topology families of the `large` scale tier
@@ -496,6 +515,7 @@ impl ScenarioSpec {
             slots: 200,
             distributed: None,
             churn: None,
+            topo_churn: None,
         })
     }
 
@@ -521,6 +541,44 @@ impl ScenarioSpec {
                 spec.iters = 300;
                 spec.slots = slots;
                 spec.churn = Some(ChurnSpec::default_schedule(slots));
+                spec
+            })
+            .collect()
+    }
+
+    /// Topology families of the `topo-churn` tier: the thousand-node scale
+    /// rungs plus a ten-thousand-node ER graph — topology churn is only
+    /// interesting where a cold rebuild is expensive enough for the
+    /// incremental rebind to matter.
+    pub const TOPO_CHURN_FAMILIES: [&'static str; 4] = [
+        "er-1000-4000",
+        "grid-32x32",
+        "sw-1024-2048",
+        "er-10000-30000",
+    ];
+
+    /// The `topo-churn` scale tier: each family serves the default scripted
+    /// flap/outage schedule ([`TopoChurnSpec::default_schedule`]) — every
+    /// topology change is an epoch rebuild (incremental CSR rebind +
+    /// φ remap) and the report compares warm reconvergence against a
+    /// cold fresh-build oracle.
+    pub fn topo_churn_matrix() -> Vec<ScenarioSpec> {
+        Self::topo_churn_matrix_sized(150, 150)
+    }
+
+    /// The `topo-churn` tier with explicit serving-slot and oracle budgets.
+    pub fn topo_churn_matrix_sized(slots: usize, iters: usize) -> Vec<ScenarioSpec> {
+        Self::TOPO_CHURN_FAMILIES
+            .iter()
+            .map(|family| {
+                let mut spec = Self::named(family, Congestion::Nominal)
+                    .expect("topo-churn families are valid");
+                spec.apply_scale_overrides();
+                spec.base.name = format!("{family}-topo-churn");
+                spec.events.clear();
+                spec.iters = iters;
+                spec.slots = slots;
+                spec.topo_churn = Some(TopoChurnSpec::default_schedule(slots));
                 spec
             })
             .collect()
@@ -693,7 +751,7 @@ impl ScenarioSpec {
         if let Some(w) = &self.workload {
             obj.insert("workload".to_string(), w.to_json());
         }
-        if self.workload.is_some() || self.churn.is_some() {
+        if self.workload.is_some() || self.churn.is_some() || self.topo_churn.is_some() {
             obj.insert("slots".to_string(), Json::Num(self.slots as f64));
         }
         if let Some(d) = &self.distributed {
@@ -701,6 +759,9 @@ impl ScenarioSpec {
         }
         if let Some(c) = &self.churn {
             obj.insert("churn".to_string(), c.to_json());
+        }
+        if let Some(t) = &self.topo_churn {
+            obj.insert("topo_churn".to_string(), t.to_json());
         }
         Json::Obj(obj)
     }
@@ -732,6 +793,10 @@ impl ScenarioSpec {
             Some(c) => Some(ChurnSpec::from_json(c)?),
             None => None,
         };
+        let topo_churn = match v.get("topo_churn") {
+            Some(t) => Some(TopoChurnSpec::from_json(t)?),
+            None => None,
+        };
         Ok(ScenarioSpec {
             base,
             congestion,
@@ -741,6 +806,7 @@ impl ScenarioSpec {
             slots,
             distributed,
             churn,
+            topo_churn,
         })
     }
 
@@ -986,6 +1052,41 @@ mod tests {
             c.events[1].action,
             ChurnAction::Drain { id: "svc".into() }
         );
+    }
+
+    #[test]
+    fn topo_churn_matrix_carries_schedules() {
+        let m = ScenarioSpec::topo_churn_matrix();
+        assert_eq!(m.len(), ScenarioSpec::TOPO_CHURN_FAMILIES.len());
+        for s in &m {
+            let t = s
+                .topo_churn
+                .as_ref()
+                .expect("topo-churn specs carry a schedule");
+            assert_eq!(t.events.len(), 3);
+            assert!(s.slots > 0);
+            assert!(s.name().ends_with("-topo-churn"));
+            // every event fires AND repairs inside the serving window, so
+            // the final epoch exercises the restore path
+            for e in &t.events {
+                assert!(e.at_slot < s.slots);
+                assert!(e.at_slot + e.action.repair_after() < s.slots);
+            }
+        }
+        assert!(m.iter().any(|s| s.base.topology == "er-10000-30000"));
+    }
+
+    #[test]
+    fn topo_churn_spec_roundtrips() {
+        let spec = &ScenarioSpec::topo_churn_matrix()[0];
+        let re = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(re.topo_churn, spec.topo_churn);
+        assert_eq!(re.slots, spec.slots);
+        assert_eq!(re.name(), spec.name());
+        // a plain spec round-trips without one
+        let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+        let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
+        assert_eq!(re.topo_churn, None);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::serving::{
     ServerOptions,
 };
 use crate::strategy::Strategy;
+use crate::topo::TopologyState;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
@@ -95,6 +96,8 @@ pub struct ScenarioReport {
     pub distributed: Option<DistributedSummary>,
     /// Control-plane metrics (churn scenarios only).
     pub churn: Option<ChurnSummary>,
+    /// Epoch-rebuild metrics (topo-churn scenarios only).
+    pub topo_churn: Option<TopoChurnSummary>,
 }
 
 /// Control-plane columns of a churn scenario report: scripted lifecycle
@@ -130,6 +133,81 @@ impl ChurnSummary {
             (
                 "admission_latency_secs_mean",
                 Json::Num(self.admission_latency_secs_mean),
+            ),
+        ])
+    }
+}
+
+/// Topology-churn columns of a `topo-churn` scenario report. Every applied
+/// change (scripted flap/outage or a due repair batch) is one epoch rebuild:
+/// the CSR arena is rebuilt on the surviving graph, φ is slot-remapped
+/// ([`Strategy::rebind_topology`]) and GP warm-starts from it. Per change
+/// the report carries the rebind latency (volatile), the serving slots the
+/// warm strategy needed to re-enter 2% of a fresh-build oracle's cost, the
+/// slots a cold min-hop restart would have needed on the same graph, and
+/// the retained cost optimality (oracle cost ÷ warm cost right after the
+/// rebind, before any re-optimization — 1.0 means the remap lost nothing).
+#[derive(Clone, Debug)]
+pub struct TopoChurnSummary {
+    /// Scripted events in the schedule.
+    pub events: usize,
+    /// Applied topology changes = epoch rebuilds (events that removed
+    /// something, plus due-repair batches).
+    pub changes: usize,
+    /// Topology epoch counter after the run.
+    pub epochs: u64,
+    /// Link pairs removed across the run (before their repairs).
+    pub removed_pairs_total: usize,
+    /// Mean wall-clock seconds per arena rebind (volatile — the golden
+    /// comparator skips it).
+    pub rebind_secs_mean: f64,
+    /// Per change, slots from the warm rebind until cost ≤ 1.02 · oracle.
+    pub reconverge_slots_warm: Vec<usize>,
+    /// Per change, iterations a cold min-hop restart needed for the same
+    /// target (measured on a throwaway GP, one iteration per slot).
+    pub reconverge_slots_cold: Vec<usize>,
+    /// Per change, oracle cost ÷ warm post-rebind cost (≤ ~1.0).
+    pub retained_optimality: Vec<f64>,
+}
+
+impl TopoChurnSummary {
+    fn mean(xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let warm: Vec<f64> = self.reconverge_slots_warm.iter().map(|&s| s as f64).collect();
+        let cold: Vec<f64> = self.reconverge_slots_cold.iter().map(|&s| s as f64).collect();
+        Json::obj(vec![
+            ("events", Json::Num(self.events as f64)),
+            ("changes", Json::Num(self.changes as f64)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            (
+                "removed_pairs_total",
+                Json::Num(self.removed_pairs_total as f64),
+            ),
+            ("rebind_secs_mean", Json::Num(self.rebind_secs_mean)),
+            (
+                "reconverge_slots_warm",
+                Json::arr_usize(&self.reconverge_slots_warm),
+            ),
+            (
+                "reconverge_slots_cold",
+                Json::arr_usize(&self.reconverge_slots_cold),
+            ),
+            ("reconverge_slots_warm_mean", Json::Num(Self::mean(&warm))),
+            ("reconverge_slots_cold_mean", Json::Num(Self::mean(&cold))),
+            (
+                "retained_optimality",
+                Json::arr_f64(&self.retained_optimality),
+            ),
+            (
+                "retained_optimality_mean",
+                Json::Num(Self::mean(&self.retained_optimality)),
             ),
         ])
     }
@@ -242,7 +320,7 @@ impl ScenarioReport {
         if let Some(w) = &self.workload {
             pairs.push(("workload", Json::Str(w.clone())));
         }
-        if self.workload.is_some() || self.churn.is_some() {
+        if self.workload.is_some() || self.churn.is_some() || self.topo_churn.is_some() {
             pairs.push(("slots", Json::Num(self.slots as f64)));
         }
         if let Some(a) = &self.adaptation {
@@ -253,6 +331,9 @@ impl ScenarioReport {
         }
         if let Some(c) = &self.churn {
             pairs.push(("churn", c.to_json()));
+        }
+        if let Some(t) = &self.topo_churn {
+            pairs.push(("topo_churn", t.to_json()));
         }
         Json::obj(pairs)
     }
@@ -424,6 +505,9 @@ fn prune_links(net: &Network, removed: &[(usize, usize)]) -> anyhow::Result<Netw
 /// GP solve, the dynamic-event schedule with online adaptation, then the
 /// final GP-vs-baselines comparison on the resulting network state.
 pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<ScenarioReport> {
+    if spec.topo_churn.is_some() {
+        return run_topo_churn(spec, cache);
+    }
     if spec.churn.is_some() {
         return run_churn(spec);
     }
@@ -435,10 +519,15 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
     }
     let watch = Stopwatch::start();
     let (graph, mut rng, cache_hit) = cache.topology(spec)?;
-    let mut net = spec.effective_base().build_on((*graph).clone(), &mut rng)?;
+    // `full_net` keeps every link of the built topology (rates mutate in
+    // place on demand steps); `net` is the epoch's live network — a pruned
+    // rebuild of `full_net` minus the currently-failed links.
+    let mut full_net = spec.effective_base().build_on((*graph).clone(), &mut rng)?;
 
-    let phi0 = cache.initial_strategy(spec, &net);
-    let mut gp = GradientProjection::with_strategy(&net, (*phi0).clone(), GpOptions::default());
+    let phi0 = cache.initial_strategy(spec, &full_net);
+    let mut gp =
+        GradientProjection::with_strategy(&full_net, (*phi0).clone(), GpOptions::default());
+    let mut net = full_net.clone();
     let mut phases = Vec::with_capacity(spec.events.len() + 1);
     gp.run(&net, spec.iters);
     phases.push(PhaseOutcome {
@@ -446,26 +535,35 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
         gp_cost: gp.cost(&net),
     });
 
-    // Apply the dynamic-event schedule; GP adapts online (no restart).
+    // Apply the dynamic-event schedule. Each topology event rebuilds the
+    // CSR arena on the surviving graph and warm-starts GP from the
+    // slot-remapped strategy ([`Strategy::rebind_topology`]); rate steps
+    // adapt online with no rebuild.
     let mut removed: Vec<(usize, usize)> = Vec::new();
     for event in &spec.events {
         match event {
             DynamicEvent::RateScale { factor, .. } => {
-                for app in &mut net.apps {
+                for app in full_net.apps.iter_mut().chain(net.apps.iter_mut()) {
                     for r in &mut app.input_rates {
                         *r *= factor;
                     }
                 }
             }
             DynamicEvent::LinkDown { .. } => {
-                if let Some((i, j)) = pick_removable_link(&net, &gp.phi, &removed) {
-                    gp.on_link_removed(&net, i, j);
+                if let Some((i, j)) = pick_removable_link(&net, &gp.phi, &[]) {
                     removed.push((i, j));
+                    let pruned = prune_links(&full_net, &removed)?;
+                    let phi = gp.phi.rebind_topology(&pruned);
+                    gp.rebind(&pruned, &phi);
+                    net = pruned;
                 }
             }
             DynamicEvent::LinkUp { .. } => {
-                if let Some((i, j)) = removed.pop() {
-                    gp.on_link_added(&net, i, j);
+                if removed.pop().is_some() {
+                    let restored = prune_links(&full_net, &removed)?;
+                    let phi = gp.phi.rebind_topology(&restored);
+                    gp.rebind(&restored, &phi);
+                    net = restored;
                 }
             }
         }
@@ -477,15 +575,10 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
     }
 
     // Final comparison: the baselines re-solve the final network state from
-    // scratch. GP's cost is evaluated on its own (support-masked) network —
-    // removed links carry zero flow there, so the costs are directly
-    // comparable to the pruned-graph solves.
-    let pruned = if removed.is_empty() {
-        None
-    } else {
-        Some(prune_links(&net, &removed)?)
-    };
-    let final_net = pruned.as_ref().unwrap_or(&net);
+    // scratch. GP's arena already lives on the pruned graph (failed links
+    // are not merely zero-flow — they have no slots), so its cost is
+    // directly comparable to the pruned-graph solves.
+    let final_net = &net;
     let gp_cost = phases.last().expect("initial phase always present").gp_cost;
     let mut costs: Vec<(String, f64)> = vec![(Algorithm::Gp.name().to_string(), gp_cost)];
     for alg in [Algorithm::Spoc, Algorithm::Lcof, Algorithm::LprSc] {
@@ -514,6 +607,7 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
         adaptation: None,
         distributed: None,
         churn: None,
+        topo_churn: None,
     })
 }
 
@@ -605,6 +699,7 @@ pub fn run_distributed(
         adaptation: None,
         distributed: Some(summary),
         churn: None,
+        topo_churn: None,
     })
 }
 
@@ -741,6 +836,7 @@ pub fn run_dynamic(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result
         adaptation: Some(summary),
         distributed: dist_stats,
         churn: None,
+        topo_churn: None,
     })
 }
 
@@ -921,6 +1017,198 @@ pub fn run_churn(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
         adaptation: None,
         distributed: None,
         churn: Some(summary),
+        topo_churn: None,
+    })
+}
+
+/// Execute a topo-churn-tier scenario: serve `spec.slots` slots (one GP
+/// adaptation step per slot) while the scripted
+/// [`crate::topo::TopoChurnSpec`] schedule
+/// flaps links and degrades regions. Every applied change — a scripted
+/// event that removed something, or a due repair batch — is one epoch
+/// rebuild: [`TopologyState::current_network`] rebuilds the pruned network
+/// (CSR arena included), [`Strategy::rebind_topology`] slot-remaps φ onto
+/// it, and [`Optimizer::rebind`] warm-starts GP from the remapped strategy.
+///
+/// Per change the runner also solves a *fresh-build oracle* (cold GP from
+/// min-hop, full `spec.iters` budget) on the post-change graph and derives
+/// the report's `topo_churn` block: rebind latency, warm-vs-cold
+/// reconvergence slots against the oracle's 2% band, and the retained cost
+/// optimality of the remapped strategy before any re-optimization.
+pub fn run_topo_churn(
+    spec: &ScenarioSpec,
+    cache: &ScenarioCache,
+) -> anyhow::Result<ScenarioReport> {
+    let tspec = spec
+        .topo_churn
+        .as_ref()
+        .expect("run_topo_churn requires a topo_churn spec");
+    anyhow::ensure!(
+        spec.slots > 0,
+        "topo-churn scenario '{}' needs slots >= 1",
+        spec.name()
+    );
+    let watch = Stopwatch::start();
+    let (graph, mut rng, cache_hit) = cache.topology(spec)?;
+    let base = spec.effective_base().build_on((*graph).clone(), &mut rng)?;
+    let phi0 = cache.initial_strategy(spec, &base);
+    let mut gp = GradientProjection::with_strategy(&base, (*phi0).clone(), GpOptions::default());
+    gp.run(&base, spec.iters);
+
+    let mut topo = TopologyState::new(base.clone());
+    let mut cur = base;
+    let mut events = tspec.events.clone();
+    events.sort_by_key(|e| e.at_slot);
+    // flap-pick draws are forked off the scenario seed, independent of the
+    // topology/workload streams (and of the app-churn fork)
+    let mut churn_rng = Rng::new(spec.base.seed ^ 0x70D0_CAFE);
+
+    let mut phases = vec![PhaseOutcome {
+        label: "initial".to_string(),
+        gp_cost: gp.cost(&cur),
+    }];
+    let mut rebind_secs: Vec<f64> = Vec::new();
+    let mut reconverge_warm: Vec<usize> = Vec::new();
+    let mut reconverge_cold: Vec<usize> = Vec::new();
+    let mut retained: Vec<f64> = Vec::new();
+    let mut removed_total = 0usize;
+    let mut changes = 0usize;
+    // warm-reconvergence measurement in flight: (cost target, slots so far)
+    let mut measuring: Option<(f64, usize)> = None;
+
+    let mut event_idx = 0usize;
+    let mut costs = Vec::with_capacity(spec.slots);
+    for slot in 0..spec.slots {
+        let mut changed = false;
+        let mut label = "";
+        if !topo.due_repairs(slot).is_empty() {
+            changed = true;
+            label = "topo-repair";
+        }
+        while event_idx < events.len() && events[event_idx].at_slot <= slot {
+            let picked = topo.apply_event(slot, &events[event_idx].action, &mut churn_rng);
+            event_idx += 1;
+            if !picked.is_empty() {
+                removed_total += picked.len();
+                changed = true;
+                label = "topo-rebind";
+            }
+        }
+        if changed {
+            changes += 1;
+            // a change preempting an unfinished measurement caps it at the
+            // window length — warm never scores worse than the window
+            if let Some((_, slots)) = measuring.take() {
+                reconverge_warm.push(slots);
+            }
+            cur = topo.current_network();
+            let w = Stopwatch::start();
+            let phi = gp.phi.rebind_topology(&cur);
+            gp.rebind(&cur, &phi);
+            rebind_secs.push(w.elapsed_secs());
+            let warm_now = gp.cost(&cur);
+            // fresh-build oracle: cold GP from min-hop, full budget
+            let mut oracle = GradientProjection::with_strategy(
+                &cur,
+                Strategy::shortest_path_to_dest(&cur),
+                GpOptions::default(),
+            );
+            let oracle_cost = oracle.run(&cur, spec.iters).final_cost;
+            retained.push(oracle_cost / warm_now);
+            let target = oracle_cost * 1.02;
+            // cold reconvergence: one iteration per slot from min-hop
+            let mut cold = GradientProjection::with_strategy(
+                &cur,
+                Strategy::shortest_path_to_dest(&cur),
+                GpOptions::default(),
+            );
+            let mut cold_slots = 0usize;
+            while cold.cost(&cur) > target && cold_slots < spec.slots {
+                cold.run(&cur, 1);
+                cold_slots += 1;
+            }
+            reconverge_cold.push(cold_slots);
+            if warm_now <= target {
+                reconverge_warm.push(0);
+            } else {
+                measuring = Some((target, 0));
+            }
+            phases.push(PhaseOutcome {
+                label: label.to_string(),
+                gp_cost: warm_now,
+            });
+        }
+        // serve the slot: one online adaptation step
+        gp.run(&cur, 1);
+        let cost = gp.cost(&cur);
+        costs.push(cost);
+        if let Some((target, slots)) = measuring {
+            let slots = slots + 1;
+            if cost <= target {
+                reconverge_warm.push(slots);
+                measuring = None;
+            } else {
+                measuring = Some((target, slots));
+            }
+        }
+    }
+    // run ended mid-measurement: cap at the remaining window
+    if let Some((_, slots)) = measuring.take() {
+        reconverge_warm.push(slots);
+    }
+
+    let gp_cost = costs.last().copied().unwrap_or(f64::NAN);
+    phases.push(PhaseOutcome {
+        label: "serving-end".to_string(),
+        gp_cost,
+    });
+
+    // final comparison on the final network state (all scheduled repairs
+    // that came due have been applied), like the event-schedule tier
+    let mut cost_rows: Vec<(String, f64)> = vec![(Algorithm::Gp.name().to_string(), gp_cost)];
+    for alg in [Algorithm::Spoc, Algorithm::Lcof, Algorithm::LprSc] {
+        cost_rows.push((alg.name().to_string(), alg.solve(&cur, spec.iters)?));
+    }
+    let gp_within_baselines = cost_rows
+        .iter()
+        .skip(1)
+        .all(|(_, c)| gp_cost <= c * (1.0 + 1e-9) + 1e-12);
+
+    let rebind_secs_mean = if rebind_secs.is_empty() {
+        0.0
+    } else {
+        rebind_secs.iter().sum::<f64>() / rebind_secs.len() as f64
+    };
+    let summary = TopoChurnSummary {
+        events: events.len(),
+        changes,
+        epochs: topo.epoch(),
+        removed_pairs_total: removed_total,
+        rebind_secs_mean,
+        reconverge_slots_warm: reconverge_warm,
+        reconverge_slots_cold: reconverge_cold,
+        retained_optimality: retained,
+    };
+
+    Ok(ScenarioReport {
+        name: spec.name().to_string(),
+        topology: spec.base.topology.clone(),
+        congestion: spec.congestion.name().to_string(),
+        seed: spec.base.seed,
+        n: cur.n(),
+        m: cur.m(),
+        apps: cur.apps.len(),
+        phases,
+        costs: cost_rows,
+        gp_within_baselines,
+        solve_secs: watch.elapsed_secs(),
+        cache_hit,
+        workload: None,
+        slots: spec.slots,
+        adaptation: None,
+        distributed: None,
+        churn: None,
+        topo_churn: Some(summary),
     })
 }
 
@@ -1269,6 +1557,76 @@ mod tests {
         assert_eq!(ca.accepted, cb.accepted);
         assert_eq!(ca.rejected, cb.rejected);
         assert_eq!(ca.reconverge_slots, cb.reconverge_slots);
+    }
+
+    fn quick_topo_churn_spec(slots: usize) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::named("er-20-40", Congestion::Nominal).unwrap();
+        spec.base.name = "er-20-40-topo-churn".to_string();
+        spec.events.clear();
+        spec.iters = 150;
+        spec.slots = slots;
+        spec.topo_churn = Some(crate::topo::TopoChurnSpec::default_schedule(slots));
+        spec
+    }
+
+    #[test]
+    fn topo_churn_scenario_reports_rebinds_and_reconvergence() {
+        let cache = ScenarioCache::new();
+        let rep = run_one(&quick_topo_churn_spec(60), &cache).unwrap();
+        let t = rep.topo_churn.as_ref().expect("topo-churn block present");
+        assert_eq!(t.events, 3, "default schedule fires three events");
+        // three removals + three repair batches, minus any the connectivity
+        // filter emptied — at least the repairs of what was removed
+        assert!(t.changes >= 2, "changes {} too few", t.changes);
+        // ≥: a repair batch and an event landing on the same slot merge
+        // into one rebuild but bump the epoch twice
+        assert!(
+            t.epochs as usize >= t.changes,
+            "epochs {} vs changes {}",
+            t.epochs,
+            t.changes
+        );
+        assert!(t.removed_pairs_total >= 1);
+        assert_eq!(t.reconverge_slots_warm.len(), t.changes);
+        assert_eq!(t.reconverge_slots_cold.len(), t.changes);
+        assert_eq!(t.retained_optimality.len(), t.changes);
+        for &r in &t.retained_optimality {
+            assert!(r.is_finite() && r > 0.0, "retained optimality {r}");
+        }
+        // the epoch rebuilds show up as phases, and the final comparison
+        // ran on the fully-repaired network
+        assert!(rep.phases.iter().any(|p| p.label == "topo-rebind"));
+        assert_eq!(rep.phases.last().unwrap().label, "serving-end");
+        assert_eq!(rep.costs.len(), 4, "GP + three baselines");
+        assert!(rep.gp_cost().is_finite() && rep.gp_cost() > 0.0);
+        // the JSON report exposes the acceptance-gated v5 columns
+        let v = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        let block = v.get("topo_churn").expect("topo_churn block serialized");
+        for key in [
+            "changes",
+            "rebind_secs_mean",
+            "reconverge_slots_warm",
+            "reconverge_slots_cold",
+            "retained_optimality_mean",
+        ] {
+            assert!(block.get(key).is_some(), "missing column {key}");
+        }
+    }
+
+    #[test]
+    fn topo_churn_scenario_is_deterministic() {
+        let spec = quick_topo_churn_spec(50);
+        let a = run_one(&spec, &ScenarioCache::new()).unwrap();
+        let b = run_one(&spec, &ScenarioCache::new()).unwrap();
+        assert_eq!(a.gp_cost().to_bits(), b.gp_cost().to_bits());
+        let (ta, tb) = (a.topo_churn.unwrap(), b.topo_churn.unwrap());
+        assert_eq!(ta.changes, tb.changes);
+        assert_eq!(ta.removed_pairs_total, tb.removed_pairs_total);
+        assert_eq!(ta.reconverge_slots_warm, tb.reconverge_slots_warm);
+        assert_eq!(ta.reconverge_slots_cold, tb.reconverge_slots_cold);
+        for (x, y) in ta.retained_optimality.iter().zip(&tb.retained_optimality) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -381,6 +381,115 @@ impl Strategy {
         phi
     }
 
+    /// Remap φ onto a network whose graph shares the node set but whose link
+    /// set changed (topology churn — see [`crate::topo`]). Per (stage, node)
+    /// row, the two sorted link-target lists are merge-walked: surviving
+    /// directions copy their mass slot-by-slot into the new arena, the CPU
+    /// slot carries over, and mass orphaned on removed links redistributes
+    /// proportionally over the row's surviving entries (surviving + orphaned
+    /// = the row target, so one [`renormalize_row`] does it). Link slots that
+    /// exist only in the new arena start at 0 — gradient projection shifts
+    /// mass onto them as it reconverges. Rows that lose *all* mass are
+    /// reseeded onto the min-hop next hop toward the stage's destination on
+    /// the NEW graph (the destination itself offloads locally).
+    ///
+    /// Because each surviving row's support is a subset of its old support,
+    /// redistribution alone cannot create a forwarding loop — but reseeded
+    /// rows mixed with surviving rows can close one, so every stage is
+    /// topology-checked and falls back to a whole-stage min-hop seed if a
+    /// cycle appears.
+    ///
+    /// The result is always feasible and loop-free for `new_net`
+    /// ([`Strategy::validate`] passes). Remapping onto an identical layout
+    /// reproduces `self` exactly (rows copy verbatim; renormalization is
+    /// idempotent).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `new_net` disagrees with `self` on node count or stage
+    /// registry — topology rebind changes links, never nodes or apps.
+    pub fn rebind_topology(&self, new_net: &Network) -> Strategy {
+        assert_eq!(
+            self.n(),
+            new_net.n(),
+            "topology rebind keeps the node set"
+        );
+        assert_eq!(
+            self.num_stages,
+            new_net.num_stages(),
+            "topology rebind keeps the stage registry"
+        );
+        let n = self.n();
+        let mut out = Strategy::zeros(&new_net.graph, self.num_stages);
+        let new_layout = Arc::clone(new_net.graph.layout());
+        let mut scratch = TopoScratch::new(n);
+        for (s, (a, _k)) in new_net.stages.iter() {
+            let dest = new_net.apps[a].dest;
+            let is_final = new_net.is_final_stage(s);
+            // min-hop next hops on the NEW graph: emptied-row reseeds and
+            // the loop-safety fallback both route along these
+            let (_dist, next) = new_net.graph.dijkstra_to(dest, |_| 1.0);
+            let reseed_row = |out: &mut Strategy, i: usize| {
+                let r = new_layout.slot_range(i);
+                out.phi[s][r].iter_mut().for_each(|v| *v = 0.0);
+                if i == dest {
+                    debug_assert!(!is_final, "exit rows are never reseeded");
+                    out.phi[s][new_layout.cpu_slot(i)] = 1.0;
+                } else {
+                    let t = new_layout
+                        .slot_of(i, next[i])
+                        .expect("min-hop next hop is a link of the new graph");
+                    out.phi[s][t] = 1.0;
+                }
+            };
+            let mut emptied: Vec<usize> = Vec::new();
+            for i in 0..n {
+                if is_final && i == dest {
+                    continue; // exit row stays zero
+                }
+                let old_row = self.row(s, i);
+                let old_targets = self.layout.link_targets(i);
+                let new_targets = new_layout.link_targets(i);
+                let range = new_layout.slot_range(i);
+                let new_row = &mut out.phi[s][range];
+                // merge-walk the sorted target lists: surviving links copy
+                let mut oi = 0usize;
+                for (t, &j) in new_targets.iter().enumerate() {
+                    while oi < old_targets.len() && old_targets[oi] < j {
+                        oi += 1;
+                    }
+                    if oi < old_targets.len() && old_targets[oi] == j {
+                        new_row[t] = old_row[oi];
+                        oi += 1;
+                    }
+                }
+                // the CPU slot always survives (last in both rows)
+                let w = new_row.len();
+                new_row[w - 1] = old_row[old_row.len() - 1];
+                if new_row.iter().sum::<f64>() > PHI_EPS {
+                    renormalize_row(new_row, 1.0);
+                } else {
+                    emptied.push(i);
+                }
+            }
+            for &i in &emptied {
+                reseed_row(&mut out, i);
+            }
+            if !out.topo_order_into(s, &mut scratch) {
+                // surviving rows mixed with reseeded ones closed a cycle the
+                // old strategy never had: fall back to a min-hop stage
+                for i in 0..n {
+                    if is_final && i == dest {
+                        continue;
+                    }
+                    reseed_row(&mut out, i);
+                }
+                debug_assert!(out.topo_order_into(s, &mut scratch));
+            }
+        }
+        out
+    }
+
     /// Serialize φ as `[stage][arena slot]` (the checkpoint format; slots
     /// follow the CSR arena order — node 0's row, node 1's row, …).
     /// Restored by [`Strategy::from_json`] on the same graph; f64 values
@@ -436,8 +545,7 @@ mod tests {
     use crate::cost::CostFn;
     use crate::graph::topologies;
 
-    fn net() -> Network {
-        let g = topologies::abilene();
+    fn net_on(g: crate::graph::Graph) -> Network {
         let n = g.n();
         let m = g.m();
         let mut r = vec![0.0; n];
@@ -459,6 +567,22 @@ mod tests {
             cw,
         )
         .unwrap()
+    }
+
+    fn net() -> Network {
+        net_on(topologies::abilene())
+    }
+
+    /// Abilene minus the given directed pairs.
+    fn net_without(pairs: &[(usize, usize)]) -> Network {
+        let g0 = topologies::abilene();
+        let edges: Vec<(usize, usize)> = g0
+            .edges()
+            .iter()
+            .copied()
+            .filter(|e| !pairs.contains(e))
+            .collect();
+        net_on(crate::graph::Graph::new(g0.n(), &edges).unwrap())
     }
 
     #[test]
@@ -559,6 +683,100 @@ mod tests {
         // shape mismatches are rejected
         let small = crate::graph::Graph::new(2, &[(0, 1), (1, 0)]).unwrap();
         assert!(Strategy::from_json(&small, &v).is_err());
+    }
+
+    #[test]
+    fn rebind_onto_identical_layout_is_exact() {
+        let net = net();
+        let mut rng = Rng::new(11);
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let re = phi.rebind_topology(&net);
+        assert_eq!(re.max_diff(&phi), 0.0, "identity rebind must copy verbatim");
+    }
+
+    #[test]
+    fn rebind_after_link_removal_is_feasible_many_seeds() {
+        let full = net();
+        let pruned = net_without(&[(0, 1), (1, 0), (4, 5), (5, 4)]);
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let phi = Strategy::random_dag(&full, &mut rng);
+            let re = phi.rebind_topology(&pruned);
+            re.validate(&pruned)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert!(!re.has_loop(), "seed {seed}: rebind introduced a loop");
+            // removed directions have no slot — structurally zero
+            assert_eq!(re.get(0, 0, 1), 0.0);
+            assert_eq!(re.get(0, 4, 5), 0.0);
+        }
+    }
+
+    #[test]
+    fn rebind_redistributes_orphaned_mass_proportionally() {
+        let full = net();
+        let pruned = net_without(&[(1, 0), (1, 2)]);
+        let mut phi = Strategy::zeros(&full.graph, full.num_stages());
+        for (s, (a, _)) in full.stages.iter() {
+            let dest = full.apps[a].dest;
+            let is_final = full.is_final_stage(s);
+            for i in 0..full.n() {
+                if is_final && i == dest {
+                    continue;
+                }
+                if i == 1 && !is_final {
+                    // node 1 (abilene: links to 0, 2, 3): half the mass on
+                    // soon-dead links, the rest split 0.3 link / 0.2 CPU
+                    phi.set(s, 1, 0, 0.25);
+                    phi.set(s, 1, 2, 0.25);
+                    phi.set(s, 1, 3, 0.3);
+                    phi.set(s, 1, phi.cpu(), 0.2);
+                } else if i == dest && !is_final {
+                    phi.set(s, i, phi.cpu(), 1.0);
+                } else {
+                    let (_d, next) = full.graph.dijkstra_to(dest, |_| 1.0);
+                    phi.set(s, i, next[i], 1.0);
+                }
+            }
+        }
+        phi.validate(&full).unwrap();
+        let re = phi.rebind_topology(&pruned);
+        re.validate(&pruned).unwrap();
+        // 0.5 orphaned mass spreads 0.3:0.2 over the survivors
+        assert!((re.get(0, 1, 3) - 0.6).abs() < 1e-12, "{}", re.get(0, 1, 3));
+        assert!((re.cpu_frac(0, 1) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rebind_reseeds_emptied_rows_min_hop() {
+        let full = net();
+        // node 0's only abilene out-links are 1 and 2; shortest-path init
+        // puts all of node 0's mass on one of them
+        let phi = Strategy::shortest_path_to_dest(&full);
+        let hop = full.graph.dijkstra_to(10, |_| 1.0).1[0];
+        let dead = [(0, hop), (hop, 0)];
+        let pruned = net_without(&dead);
+        let re = phi.rebind_topology(&pruned);
+        re.validate(&pruned).unwrap();
+        assert!(!re.has_loop());
+        // the emptied row re-routes along the pruned graph's min-hop tree
+        let want = pruned.graph.dijkstra_to(10, |_| 1.0).1[0];
+        assert_eq!(re.get(0, 0, want), 1.0);
+    }
+
+    #[test]
+    fn rebind_restores_links_with_zero_mass() {
+        let full = net();
+        let pruned = net_without(&[(0, 1), (1, 0)]);
+        let mut rng = Rng::new(3);
+        let phi = Strategy::random_dag(&pruned, &mut rng);
+        let re = phi.rebind_topology(&full);
+        re.validate(&full).unwrap();
+        assert!(!re.has_loop());
+        // repaired links come back as fresh slots with no mass yet
+        assert_eq!(re.get(0, 0, 1), 0.0);
+        assert_eq!(re.get(0, 1, 0), 0.0);
+        // and surviving rows are untouched (sum already 1 → verbatim copy)
+        assert_eq!(re.row(0, 5), phi.row(0, 5));
     }
 
     #[test]

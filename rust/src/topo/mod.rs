@@ -1,0 +1,710 @@
+//! Epoch-versioned topology state: link flaps and regional outages on a
+//! fixed node set.
+//!
+//! The paper claims the distributed algorithm "adapts to changes in input
+//! rates **and network topology**"; this module is the topology half. A
+//! [`TopologyState`] wraps the epoch-0 base [`Network`] and a set of
+//! currently-removed directed link pairs; every applied edit bumps a
+//! monotone *topology epoch* and the current network is rebuilt by
+//! filtering the base edge list and its per-edge cost functions in tandem
+//! (edge ids renumber, costs follow their (i, j) pair). Strategies survive
+//! an edit via [`crate::strategy::Strategy::rebind_topology`], optimizers
+//! via [`crate::serving::Optimizer::rebind`].
+//!
+//! Invariants, chosen so every downstream layer keeps working unchanged:
+//!
+//! * **The node set is constant.** [`Network::new`] requires every node to
+//!   reach every application destination, so a fully-isolated node is
+//!   unrepresentable; "regional node loss" is modeled as best-effort
+//!   *degradation* — a region's incident link pairs are removed one pair at
+//!   a time, each subject to the connectivity filter.
+//! * **Links are removed and restored in bidirected pairs**, keeping the
+//!   graph symmetric (the distributed runtime's spanning tree and the
+//!   bidirected topology builders assume it).
+//! * **Every edit preserves strong connectivity.** A removal that would
+//!   disconnect the graph is skipped, not failed: scripted churn is
+//!   best-effort under the feasibility envelope.
+//! * **Only original links flap.** Repair restores base links verbatim, so
+//!   no cost function is ever invented after scenario build.
+//!
+//! Scripted churn is described by a [`TopoChurnSpec`] — a schedule of
+//! [`TopoEvent`]s, each carrying a repair delay — and executed against a
+//! [`TopologyState`], whose *pending repair schedule* (due slot → pairs to
+//! restore) is first-class checkpoint state
+//! ([`TopologyState::state_json`]), so a run restored mid-flap repairs on
+//! the same slot as an uninterrupted one.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::app::Network;
+use crate::graph::Graph;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// An undirected link pair, normalized as `(min, max)`.
+fn norm(i: usize, j: usize) -> (usize, usize) {
+    (i.min(j), i.max(j))
+}
+
+/// One scripted topology edit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TopoAction {
+    /// Remove `links` link pairs (flow-agnostic deterministic pick), to be
+    /// restored `repair_after` slots after the event fires.
+    LinkFlap { links: usize, repair_after: usize },
+    /// Degrade a region of `nodes` BFS-contiguous nodes: remove each
+    /// member's incident link pairs (connectivity permitting), restored
+    /// `repair_after` slots after the event fires.
+    RegionOutage { nodes: usize, repair_after: usize },
+}
+
+impl TopoAction {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TopoAction::LinkFlap { .. } => "link-flap",
+            TopoAction::RegionOutage { .. } => "region-outage",
+        }
+    }
+
+    pub fn repair_after(&self) -> usize {
+        match self {
+            TopoAction::LinkFlap { repair_after, .. }
+            | TopoAction::RegionOutage { repair_after, .. } => *repair_after,
+        }
+    }
+}
+
+/// A [`TopoAction`] pinned to a serving slot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TopoEvent {
+    pub at_slot: usize,
+    pub action: TopoAction,
+}
+
+impl TopoEvent {
+    /// Flat-object form: `{"kind": ..., "at_slot": ..., <action fields>}`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("kind", Json::Str(self.action.kind().to_string())),
+            ("at_slot", Json::Num(self.at_slot as f64)),
+            (
+                "repair_after",
+                Json::Num(self.action.repair_after() as f64),
+            ),
+        ];
+        match &self.action {
+            TopoAction::LinkFlap { links, .. } => {
+                fields.push(("links", Json::Num(*links as f64)));
+            }
+            TopoAction::RegionOutage { nodes, .. } => {
+                fields.push(("nodes", Json::Num(*nodes as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<TopoEvent> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("topo event: missing 'kind'"))?;
+        let at_slot = v
+            .get("at_slot")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("topo event: missing 'at_slot'"))?;
+        let repair_after = v
+            .get("repair_after")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("topo event: missing 'repair_after'"))?;
+        let action = match kind {
+            "link-flap" => TopoAction::LinkFlap {
+                links: v
+                    .get("links")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("link-flap: missing 'links'"))?,
+                repair_after,
+            },
+            "region-outage" => TopoAction::RegionOutage {
+                nodes: v
+                    .get("nodes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("region-outage: missing 'nodes'"))?,
+                repair_after,
+            },
+            other => anyhow::bail!("topo event: unknown kind '{other}'"),
+        };
+        Ok(TopoEvent { at_slot, action })
+    }
+}
+
+/// A scripted topology-churn schedule (the `topo_churn` block of a
+/// [`crate::scenarios::ScenarioSpec`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TopoChurnSpec {
+    /// Events in schedule order (sorted by `at_slot` at execution).
+    pub events: Vec<TopoEvent>,
+}
+
+impl TopoChurnSpec {
+    /// The default scripted schedule for a `slots`-slot run: a two-link
+    /// flap early, a two-node regional outage mid-run, one more single-link
+    /// flap late — every outage repairs before the run ends, so the final
+    /// epoch exercises the restore path too.
+    pub fn default_schedule(slots: usize) -> TopoChurnSpec {
+        let at = |pct: usize| slots * pct / 100;
+        let after = |pct: usize| (slots * pct / 100).max(1);
+        TopoChurnSpec {
+            events: vec![
+                TopoEvent {
+                    at_slot: at(20),
+                    action: TopoAction::LinkFlap {
+                        links: 2,
+                        repair_after: after(25),
+                    },
+                },
+                TopoEvent {
+                    at_slot: at(50),
+                    action: TopoAction::RegionOutage {
+                        nodes: 2,
+                        repair_after: after(20),
+                    },
+                },
+                TopoEvent {
+                    at_slot: at(80),
+                    action: TopoAction::LinkFlap {
+                        links: 1,
+                        repair_after: after(15),
+                    },
+                },
+            ],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "events",
+            Json::Arr(self.events.iter().map(TopoEvent::to_json).collect()),
+        )])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<TopoChurnSpec> {
+        let events = v
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("topo churn spec: missing 'events'"))?
+            .iter()
+            .map(TopoEvent::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TopoChurnSpec { events })
+    }
+}
+
+/// Epoch-versioned view of a network under link churn.
+///
+/// Holds the epoch-0 base network, the set of currently-removed undirected
+/// pairs and the pending repair schedule. All edits go through the
+/// connectivity filter; [`TopologyState::current_network`] is always a
+/// valid, strongly-connected [`Network`].
+#[derive(Clone, Debug)]
+pub struct TopologyState {
+    base: Network,
+    /// Currently-removed undirected pairs, normalized `(min, max)`.
+    removed: BTreeSet<(usize, usize)>,
+    /// Due slot → pairs to restore then.
+    pending: BTreeMap<usize, Vec<(usize, usize)>>,
+    epoch: u64,
+}
+
+impl TopologyState {
+    pub fn new(base: Network) -> TopologyState {
+        TopologyState {
+            base,
+            removed: BTreeSet::new(),
+            pending: BTreeMap::new(),
+            epoch: 0,
+        }
+    }
+
+    /// The epoch-0 network (full link set).
+    pub fn base(&self) -> &Network {
+        &self.base
+    }
+
+    /// Monotone edit counter; bumps once per applied event / repair batch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Currently-removed undirected pairs, ascending.
+    pub fn removed_pairs(&self) -> Vec<(usize, usize)> {
+        self.removed.iter().copied().collect()
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        !self.removed.is_empty()
+    }
+
+    /// The pending repair schedule: (due slot, pairs), ascending by slot.
+    pub fn pending_repairs(&self) -> Vec<(usize, Vec<(usize, usize)>)> {
+        self.pending
+            .iter()
+            .map(|(&slot, pairs)| (slot, pairs.clone()))
+            .collect()
+    }
+
+    fn is_removed_edge(&self, e: (usize, usize)) -> bool {
+        self.removed.contains(&norm(e.0, e.1))
+    }
+
+    /// The current graph: base edges minus removed pairs. Edge ids renumber.
+    pub fn current_graph(&self) -> Graph {
+        let edges: Vec<(usize, usize)> = self
+            .base
+            .graph
+            .edges()
+            .iter()
+            .copied()
+            .filter(|&e| !self.is_removed_edge(e))
+            .collect();
+        Graph::new(self.base.n(), &edges).expect("filtered edge subset of a valid graph")
+    }
+
+    /// The current network: base edges and their cost functions filtered in
+    /// tandem (costs follow their (i, j) pair through the renumbering);
+    /// apps, computation costs and weights are the base's.
+    pub fn current_network(&self) -> Network {
+        let mut edges = Vec::with_capacity(self.base.m());
+        let mut link_cost = Vec::with_capacity(self.base.m());
+        for (id, &e) in self.base.graph.edges().iter().enumerate() {
+            if !self.is_removed_edge(e) {
+                edges.push(e);
+                link_cost.push(self.base.link_cost[id].clone());
+            }
+        }
+        let graph = Graph::new(self.base.n(), &edges).expect("filtered edge subset");
+        Network::new(
+            graph,
+            self.base.apps.clone(),
+            link_cost,
+            self.base.comp_cost.clone(),
+            self.base.comp_weight.clone(),
+        )
+        .expect("edits preserve strong connectivity")
+    }
+
+    /// Would the graph stay strongly connected with `extra` pairs also
+    /// removed? (Strong connectivity implies every app's reachability.)
+    fn survives(&self, extra: &BTreeSet<(usize, usize)>) -> bool {
+        let edges: Vec<(usize, usize)> = self
+            .base
+            .graph
+            .edges()
+            .iter()
+            .copied()
+            .filter(|&e| !self.is_removed_edge(e) && !extra.contains(&norm(e.0, e.1)))
+            .collect();
+        match Graph::new(self.base.n(), &edges) {
+            Ok(g) => g.strongly_connected(),
+            Err(_) => false,
+        }
+    }
+
+    /// Remove one undirected pair now, restoring it at `due` (a future
+    /// serving slot). Errors if the pair is not a (present) base link or if
+    /// removing it would disconnect the graph. Bumps the epoch.
+    pub fn remove_pair(&mut self, i: usize, j: usize, due: usize) -> anyhow::Result<()> {
+        let pair = norm(i, j);
+        anyhow::ensure!(
+            self.base.graph.has_edge(pair.0, pair.1),
+            "({i},{j}) is not a base link"
+        );
+        anyhow::ensure!(
+            !self.removed.contains(&pair),
+            "({i},{j}) is already removed"
+        );
+        let extra: BTreeSet<_> = [pair].into_iter().collect();
+        anyhow::ensure!(
+            self.survives(&extra),
+            "removing ({i},{j}) would disconnect the graph"
+        );
+        self.removed.insert(pair);
+        self.pending.entry(due).or_default().push(pair);
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Restore one undirected pair immediately (also drops it from the
+    /// pending schedule). Returns whether it was removed. Bumps the epoch
+    /// on change.
+    pub fn restore_pair(&mut self, i: usize, j: usize) -> bool {
+        let pair = norm(i, j);
+        if !self.removed.remove(&pair) {
+            return false;
+        }
+        for pairs in self.pending.values_mut() {
+            pairs.retain(|&p| p != pair);
+        }
+        self.pending.retain(|_, pairs| !pairs.is_empty());
+        self.epoch += 1;
+        true
+    }
+
+    /// Apply one scripted event at `at_slot`: pick the pairs to remove
+    /// (deterministically, from `rng`), remove them, and schedule their
+    /// repair `repair_after` slots later. Returns the pairs actually
+    /// removed — possibly fewer than asked when the connectivity filter
+    /// skips candidates. Bumps the epoch once if anything changed.
+    pub fn apply_event(
+        &mut self,
+        at_slot: usize,
+        action: &TopoAction,
+        rng: &mut Rng,
+    ) -> Vec<(usize, usize)> {
+        let picked = match action {
+            TopoAction::LinkFlap { links, .. } => self.pick_flap_pairs(*links, rng),
+            TopoAction::RegionOutage { nodes, .. } => self.pick_region_pairs(*nodes, rng),
+        };
+        if picked.is_empty() {
+            return picked;
+        }
+        let due = at_slot + action.repair_after();
+        for &pair in &picked {
+            self.removed.insert(pair);
+        }
+        self.pending
+            .entry(due)
+            .or_default()
+            .extend(picked.iter().copied());
+        self.epoch += 1;
+        picked
+    }
+
+    /// Restore every pair due at or before `slot`. Returns the restored
+    /// pairs (ascending); bumps the epoch once if any.
+    pub fn due_repairs(&mut self, slot: usize) -> Vec<(usize, usize)> {
+        let due: Vec<usize> = self
+            .pending
+            .range(..=slot)
+            .map(|(&s, _)| s)
+            .collect();
+        let mut restored = Vec::new();
+        for s in due {
+            if let Some(pairs) = self.pending.remove(&s) {
+                for pair in pairs {
+                    if self.removed.remove(&pair) {
+                        restored.push(pair);
+                    }
+                }
+            }
+        }
+        if !restored.is_empty() {
+            restored.sort_unstable();
+            self.epoch += 1;
+        }
+        restored
+    }
+
+    /// Next pending repair slot, if any (drives the caller's event loop).
+    pub fn next_repair_slot(&self) -> Option<usize> {
+        self.pending.keys().next().copied()
+    }
+
+    /// `links` removable pairs: candidates are the present undirected base
+    /// pairs in a seeded random order; each is kept only if connectivity
+    /// survives the cumulative removal.
+    fn pick_flap_pairs(&self, links: usize, rng: &mut Rng) -> Vec<(usize, usize)> {
+        let mut candidates: Vec<(usize, usize)> = self
+            .base
+            .graph
+            .edges()
+            .iter()
+            .filter(|&&(i, j)| i < j && !self.removed.contains(&(i, j)))
+            .copied()
+            .collect();
+        rng.shuffle(&mut candidates);
+        let mut picked = BTreeSet::new();
+        for pair in candidates {
+            if picked.len() == links {
+                break;
+            }
+            picked.insert(pair);
+            if !self.survives(&picked) {
+                picked.remove(&pair);
+            }
+        }
+        picked.into_iter().collect()
+    }
+
+    /// Incident pairs of a BFS-contiguous region of `nodes` nodes around a
+    /// seeded random center, filtered pair-by-pair for connectivity.
+    fn pick_region_pairs(&self, nodes: usize, rng: &mut Rng) -> Vec<(usize, usize)> {
+        let n = self.base.n();
+        if n == 0 || nodes == 0 {
+            return Vec::new();
+        }
+        let cur = self.current_graph();
+        // BFS outward from a random center on the current graph
+        let center = rng.usize(n);
+        let mut region = Vec::with_capacity(nodes);
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::new();
+        seen[center] = true;
+        queue.push_back(center);
+        while let Some(u) = queue.pop_front() {
+            region.push(u);
+            if region.len() == nodes {
+                break;
+            }
+            for &v in cur.out_neighbors(u) {
+                if !seen[v] {
+                    seen[v] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+        // best-effort degradation: drop each incident pair that the
+        // connectivity filter allows
+        let mut picked = BTreeSet::new();
+        for &u in &region {
+            for &v in cur.out_neighbors(u) {
+                let pair = norm(u, v);
+                if picked.contains(&pair) {
+                    continue;
+                }
+                picked.insert(pair);
+                if !self.survives(&picked) {
+                    picked.remove(&pair);
+                }
+            }
+        }
+        picked.into_iter().collect()
+    }
+
+    /// Serialize the churn state (epoch, removed pairs, pending repair
+    /// schedule) for checkpointing. The base network is NOT serialized —
+    /// restore rebuilds it from the scenario and replays this state on top
+    /// ([`TopologyState::load_state_json`]).
+    pub fn state_json(&self) -> Json {
+        let pair_json = |&(i, j): &(usize, usize)| {
+            Json::Arr(vec![Json::Num(i as f64), Json::Num(j as f64)])
+        };
+        Json::obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            (
+                "removed",
+                Json::Arr(self.removed.iter().map(pair_json).collect()),
+            ),
+            (
+                "pending",
+                Json::Arr(
+                    self.pending
+                        .iter()
+                        .map(|(&slot, pairs)| {
+                            Json::obj(vec![
+                                ("due", Json::Num(slot as f64)),
+                                ("pairs", Json::Arr(pairs.iter().map(pair_json).collect())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Restore churn state saved by [`TopologyState::state_json`] onto a
+    /// freshly-built base. Validates every pair against the base link set.
+    pub fn load_state_json(&mut self, v: &Json) -> anyhow::Result<()> {
+        let parse_pair = |p: &Json| -> anyhow::Result<(usize, usize)> {
+            let arr = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("topology state: pair is [i, j]"))?;
+            let i = arr[0]
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("topology state: bad pair node"))?;
+            let j = arr[1]
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("topology state: bad pair node"))?;
+            anyhow::ensure!(
+                self.base.graph.has_edge(i.min(j), i.max(j)),
+                "topology state: ({i},{j}) is not a base link"
+            );
+            Ok(norm(i, j))
+        };
+        let mut removed = BTreeSet::new();
+        for p in v
+            .get("removed")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("topology state: missing 'removed'"))?
+        {
+            removed.insert(parse_pair(p)?);
+        }
+        let mut pending: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        for entry in v
+            .get("pending")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("topology state: missing 'pending'"))?
+        {
+            let due = entry
+                .get("due")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("topology state: pending entry missing 'due'"))?;
+            let pairs = entry
+                .get("pairs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("topology state: pending entry missing 'pairs'"))?
+                .iter()
+                .map(parse_pair)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            pending.insert(due, pairs);
+        }
+        self.epoch = v
+            .get("epoch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("topology state: missing 'epoch'"))?
+            as u64;
+        self.removed = removed;
+        self.pending = pending;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{Application, StageRegistry};
+    use crate::cost::CostFn;
+    use crate::graph::topologies;
+
+    fn base_net() -> Network {
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let mut r = vec![0.0; n];
+        r[0] = 1.0;
+        let apps = vec![Application {
+            dest: 10,
+            num_tasks: 1,
+            packet_sizes: vec![10.0, 1.0],
+            input_rates: r,
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; n]; stages.len()];
+        Network::new(
+            g,
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; m],
+            vec![CostFn::Linear { d: 1.0 }; n],
+            cw,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn remove_then_repair_round_trips_the_link_set() {
+        let mut st = TopologyState::new(base_net());
+        let m0 = st.current_network().m();
+        st.remove_pair(0, 1, 10).unwrap();
+        assert_eq!(st.epoch(), 1);
+        assert!(st.is_degraded());
+        let pruned = st.current_network();
+        assert_eq!(pruned.m(), m0 - 2, "pair removal drops both directions");
+        assert!(!pruned.graph.has_edge(0, 1));
+        assert!(!pruned.graph.has_edge(1, 0));
+        assert!(pruned.graph.strongly_connected());
+        // not due yet
+        assert!(st.due_repairs(9).is_empty());
+        let restored = st.due_repairs(10);
+        assert_eq!(restored, vec![(0, 1)]);
+        assert_eq!(st.epoch(), 2);
+        assert!(!st.is_degraded());
+        assert_eq!(st.current_network().m(), m0);
+    }
+
+    #[test]
+    fn connectivity_filter_rejects_cut_links() {
+        let mut st = TopologyState::new(base_net());
+        // abilene: cutting both of node 0's pairs would isolate it; the
+        // second removal must be refused
+        st.remove_pair(0, 1, 100).unwrap();
+        assert!(st.remove_pair(0, 2, 100).is_err());
+        // double removal and non-links are rejected too
+        assert!(st.remove_pair(0, 1, 100).is_err());
+        assert!(st.remove_pair(0, 10, 100).is_err());
+    }
+
+    #[test]
+    fn scripted_flap_is_deterministic_and_repairs_on_schedule() {
+        let action = TopoAction::LinkFlap {
+            links: 2,
+            repair_after: 7,
+        };
+        let mut a = TopologyState::new(base_net());
+        let mut b = TopologyState::new(base_net());
+        let pa = a.apply_event(5, &action, &mut Rng::new(42));
+        let pb = b.apply_event(5, &action, &mut Rng::new(42));
+        assert_eq!(pa, pb, "same seed, same pick");
+        assert_eq!(pa.len(), 2);
+        assert_eq!(a.next_repair_slot(), Some(12));
+        assert!(a.due_repairs(11).is_empty());
+        assert_eq!(a.due_repairs(12), pa);
+        assert_eq!(a.current_network().m(), base_net().m());
+    }
+
+    #[test]
+    fn region_outage_degrades_but_never_disconnects() {
+        let action = TopoAction::RegionOutage {
+            nodes: 3,
+            repair_after: 5,
+        };
+        for seed in 0..10 {
+            let mut st = TopologyState::new(base_net());
+            let picked = st.apply_event(0, &action, &mut Rng::new(seed));
+            assert!(!picked.is_empty(), "seed {seed}: region removed nothing");
+            let net = st.current_network();
+            assert!(net.graph.strongly_connected(), "seed {seed}");
+            assert_eq!(net.m(), base_net().m() - 2 * picked.len());
+        }
+    }
+
+    #[test]
+    fn state_json_round_trips_removed_and_pending() {
+        let mut st = TopologyState::new(base_net());
+        st.remove_pair(0, 1, 30).unwrap();
+        st.remove_pair(4, 5, 45).unwrap();
+        let text = st.state_json().to_string_pretty();
+        let mut re = TopologyState::new(base_net());
+        re.load_state_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re.epoch(), st.epoch());
+        assert_eq!(re.removed_pairs(), st.removed_pairs());
+        assert_eq!(re.pending_repairs(), st.pending_repairs());
+        assert_eq!(re.current_network().m(), st.current_network().m());
+        // bad pairs are rejected
+        let bad = Json::parse(r#"{"epoch": 1, "removed": [[0, 9]], "pending": []}"#).unwrap();
+        assert!(TopologyState::new(base_net()).load_state_json(&bad).is_err());
+    }
+
+    #[test]
+    fn spec_json_round_trips() {
+        let spec = TopoChurnSpec::default_schedule(100);
+        assert_eq!(spec.events.len(), 3);
+        let text = spec.to_json().to_string_pretty();
+        let re = TopoChurnSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re, spec);
+        assert!(TopoChurnSpec::from_json(
+            &Json::parse(r#"{"events": [{"kind": "nope", "at_slot": 1, "repair_after": 1}]}"#)
+                .unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn restore_pair_drops_pending_entry() {
+        let mut st = TopologyState::new(base_net());
+        st.remove_pair(0, 1, 50).unwrap();
+        assert!(st.restore_pair(1, 0), "normalized pair restores");
+        assert!(!st.restore_pair(0, 1), "second restore is a no-op");
+        assert!(st.pending_repairs().is_empty());
+        assert_eq!(st.next_repair_slot(), None);
+    }
+}

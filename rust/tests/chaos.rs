@@ -16,6 +16,14 @@
 //! A stationary-null case closes the loop with the serving layer: under
 //! stationary Poisson traffic the `AdaptationController` must fire zero
 //! spurious restarts while driving the distributed optimizer.
+//!
+//! The flap-under-faults cases compose topology churn with the transport
+//! fault specs: a scripted link flap at er-200-800 (remove → warm
+//! [`Strategy::rebind_topology`] remap → [`AsyncRuntime::rebind`] →
+//! repair), run under the `lossy` and `partition` presets. Each phase must
+//! re-quiesce within 1e-6 of centralized GP on the post-churn graph, be
+//! bit-identical across reruns per (seed, spec), and be invisible to the
+//! shard count.
 
 use scfo::algo::gp::{GpOptions, GradientProjection};
 use scfo::distributed::{
@@ -25,6 +33,7 @@ use scfo::prelude::*;
 use scfo::serving::{
     AdaptationController, ControllerOptions, OnlineServer, ServerOptions,
 };
+use scfo::topo::{TopoAction, TopologyState};
 use scfo::workload::Workload;
 
 /// Fault seed: `SCFO_CHAOS_SEED` (CI sweeps it), default 7.
@@ -258,4 +267,186 @@ fn stationary_null_no_spurious_restarts_distributed() {
     );
     assert!(metrics.iter().all(|m| !m.detection));
     assert!(metrics.iter().all(|m| m.cost.is_finite()));
+}
+
+// ---------------------------------------------------------------------------
+// Flap under faults: scripted topology churn × transport fault specs.
+// ---------------------------------------------------------------------------
+
+/// Churn RNG salt shared with the `topo-churn` scenario tier, so the chaos
+/// flap and `scfo scenarios run --tier topo-churn` pick from the same
+/// deterministic stream family.
+const CHURN_RNG_SALT: u64 = 0x70D0_CAFE;
+
+/// The scale-tier family the flap cases run at (same workload overrides as
+/// the `distributed` tier uses for ≥200-node cells).
+const FLAP_FAMILY: &str = "er-200-800";
+
+fn build_scaled_network(family: &str) -> Network {
+    let mut spec = ScenarioSpec::named(family, Congestion::Nominal).unwrap();
+    spec.apply_scale_overrides();
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    sc.build(&mut rng).unwrap()
+}
+
+/// Script one link flap on `base`: remove two link pairs at slot 0 (due
+/// for repair at slot 1), then restore them. Returns the degraded and
+/// repaired networks. Deterministic in `seed` alone — every fault spec and
+/// shard count sees the identical churn — and exercises the epoch/pending
+/// bookkeeping of [`TopologyState`] on the way.
+fn flap_nets(base: &Network, seed: u64) -> (Network, Network) {
+    let mut topo = TopologyState::new(base.clone());
+    let mut churn_rng = Rng::new(seed ^ CHURN_RNG_SALT);
+    let flap = TopoAction::LinkFlap {
+        links: 2,
+        repair_after: 1,
+    };
+    let picked = topo.apply_event(0, &flap, &mut churn_rng);
+    assert!(!picked.is_empty(), "scripted flap removed no link pair");
+    assert_eq!(topo.epoch(), 1);
+    let degraded = topo.current_network();
+    assert!(topo.is_degraded());
+
+    let restored = topo.due_repairs(1);
+    assert_eq!(restored, picked, "repair schedule lost a pair");
+    assert_eq!(topo.epoch(), 2);
+    assert!(!topo.is_degraded());
+    let repaired = topo.current_network();
+    assert_eq!(
+        repaired.graph.edges(),
+        base.graph.edges(),
+        "full repair must restore the exact base edge set"
+    );
+    (degraded, repaired)
+}
+
+/// One flap chain: quiesce on `base` under `faults`, warm-remap the
+/// converged strategy onto the degraded arena ([`Strategy::rebind_topology`]
+/// + [`AsyncRuntime::rebind`]), re-quiesce, repair, re-quiesce again.
+/// Returns the per-phase reports (pre-flap, degraded, repaired).
+fn run_flap_chain(
+    base: &Network,
+    degraded_net: &Network,
+    repaired_net: &Network,
+    faults: FaultSpec,
+    shards: usize,
+) -> (RunReport, RunReport, RunReport) {
+    let name = faults.name.clone();
+    let phi0 = Strategy::shortest_path_to_dest(base);
+    let opts = RuntimeOptions {
+        shards,
+        max_epochs: 12_000,
+        ..RuntimeOptions::default()
+    };
+    let mut rt = AsyncRuntime::sim_net(base.clone(), phi0, faults, opts);
+    let pre = rt.run_until_quiescent();
+    assert!(pre.converged, "{name}: pre-flap run did not quiesce");
+
+    let phi_warm = rt.strategy().rebind_topology(degraded_net);
+    rt.rebind(degraded_net.clone(), phi_warm);
+    let degraded = rt.run_until_quiescent();
+    assert!(degraded.converged, "{name}: degraded run did not quiesce");
+
+    let phi_back = rt.strategy().rebind_topology(repaired_net);
+    rt.rebind(repaired_net.clone(), phi_back);
+    let repaired = rt.run_until_quiescent();
+    assert!(repaired.converged, "{name}: repaired run did not quiesce");
+    (pre, degraded, repaired)
+}
+
+/// Flap under `lossy` and `partition`: after every phase of the chain the
+/// runtime must land within 1e-6 (relative) of centralized GP **on the
+/// graph of that phase** — the degraded arena mid-flap, the restored base
+/// arena after repair.
+#[test]
+fn flap_under_faults_matches_centralized_on_post_churn_graph() {
+    let seed = chaos_seed();
+    let base = build_scaled_network(FLAP_FAMILY);
+    let (degraded_net, repaired_net) = flap_nets(&base, seed);
+    let central_degraded = centralized_final_cost(&degraded_net);
+    let central_repaired = centralized_final_cost(&repaired_net);
+    for preset in ["lossy", "partition"] {
+        let faults = FaultSpec::preset(preset, seed).unwrap();
+        let (pre, degraded, repaired) =
+            run_flap_chain(&base, &degraded_net, &repaired_net, faults, 4);
+        digest(FLAP_FAMILY, &format!("flap-{preset}-pre"), &pre);
+        digest(FLAP_FAMILY, &format!("flap-{preset}-degraded"), &degraded);
+        digest(FLAP_FAMILY, &format!("flap-{preset}-repaired"), &repaired);
+        let rel = (degraded.final_cost - central_degraded).abs() / (1.0 + central_degraded);
+        assert!(
+            rel < 1e-6,
+            "{preset}: degraded async {} vs centralized {central_degraded} (rel {rel:.2e})",
+            degraded.final_cost
+        );
+        let rel = (repaired.final_cost - central_repaired).abs() / (1.0 + central_repaired);
+        assert!(
+            rel < 1e-6,
+            "{preset}: repaired async {} vs centralized {central_repaired} (rel {rel:.2e})",
+            repaired.final_cost
+        );
+    }
+}
+
+/// The whole flap chain is bit-reproducible per (seed, fault-spec): both
+/// the mid-flap and post-repair phases rerun to identical cost bits,
+/// epoch counts and transport counters.
+#[test]
+fn flap_chains_are_bit_identical_per_seed_and_spec() {
+    let seed = chaos_seed();
+    let base = build_scaled_network(FLAP_FAMILY);
+    let (degraded_net, repaired_net) = flap_nets(&base, seed);
+    for preset in ["lossy", "partition"] {
+        let faults = FaultSpec::preset(preset, seed).unwrap();
+        let a = run_flap_chain(&base, &degraded_net, &repaired_net, faults.clone(), 4);
+        let b = run_flap_chain(&base, &degraded_net, &repaired_net, faults, 4);
+        for (phase, (x, y)) in [
+            ("pre", (&a.0, &b.0)),
+            ("degraded", (&a.1, &b.1)),
+            ("repaired", (&a.2, &b.2)),
+        ] {
+            assert_eq!(
+                x.final_cost.to_bits(),
+                y.final_cost.to_bits(),
+                "{preset}/{phase}: cost bits differ across reruns"
+            );
+            assert_eq!(x.epochs, y.epochs, "{preset}/{phase}: epoch count differs");
+            assert_eq!(
+                x.stats, y.stats,
+                "{preset}/{phase}: transport counters differ"
+            );
+        }
+    }
+}
+
+/// Shard count stays unobservable through a flap: rebinding onto the
+/// degraded and repaired arenas with 1, 4 and 7 shards yields identical
+/// cost bits and transport counters in every phase.
+#[test]
+fn flap_shard_count_is_not_observable() {
+    let seed = chaos_seed();
+    let base = build_scaled_network(FLAP_FAMILY);
+    let (degraded_net, repaired_net) = flap_nets(&base, seed);
+    let faults = FaultSpec::lossy(seed);
+    let a = run_flap_chain(&base, &degraded_net, &repaired_net, faults.clone(), 1);
+    let b = run_flap_chain(&base, &degraded_net, &repaired_net, faults.clone(), 4);
+    let c = run_flap_chain(&base, &degraded_net, &repaired_net, faults, 7);
+    for (phase, (x, y, z)) in [
+        ("pre", (&a.0, &b.0, &c.0)),
+        ("degraded", (&a.1, &b.1, &c.1)),
+        ("repaired", (&a.2, &b.2, &c.2)),
+    ] {
+        assert_eq!(
+            x.final_cost.to_bits(),
+            y.final_cost.to_bits(),
+            "{phase}: 1 vs 4 shards"
+        );
+        assert_eq!(
+            y.final_cost.to_bits(),
+            z.final_cost.to_bits(),
+            "{phase}: 4 vs 7 shards"
+        );
+        assert_eq!(x.stats.transport, y.stats.transport, "{phase}");
+        assert_eq!(y.stats.transport, z.stats.transport, "{phase}");
+    }
 }

@@ -1,7 +1,8 @@
 //! Control-plane acceptance tests: admission safety (property-based),
-//! checkpoint/restore bit-identical resume, warm-vs-cold reconvergence
-//! after an app arrival, the end-to-end churn demo, and the HTTP ops API
-//! over a real loopback socket.
+//! checkpoint/restore bit-identical resume (including a checkpoint taken
+//! **mid-flap**, with a topology repair still pending), warm-vs-cold
+//! reconvergence after an app arrival, the end-to-end churn demo, and the
+//! HTTP ops API over a real loopback socket.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -13,6 +14,7 @@ use scfo::control::{
 use scfo::flow::FlowState;
 use scfo::prelude::*;
 use scfo::scenarios::{Congestion, ScenarioSpec};
+use scfo::topo::TopoAction;
 use scfo::util::json::Json;
 use scfo::util::prop::forall;
 use scfo::workload::WorkloadSpec;
@@ -299,6 +301,94 @@ fn churn_with_restore_matches_uninterrupted_run() {
     assert!(
         rel <= 1e-9,
         "final cost after restore diverged: {final_ref} vs {final_restored} (rel {rel:.3e})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: checkpoint **mid-flap** — links removed, their repair still
+/// pending — kill, restore, and the resumed run matches an uninterrupted
+/// one within 1e-9, including the pending repair firing on its original
+/// schedule.
+#[test]
+fn snapshot_mid_flap_restores_pending_repair_schedule() {
+    // Serve, register an app, then flap two links due for repair 10 slots
+    // later; stop mid-degradation with the repair still pending.
+    let run_prefix = |plane: &mut ControlPlane| {
+        for _ in 0..8 {
+            plane.run_slot().unwrap();
+        }
+        assert!(plane
+            .register(small_app("flap-app", 6, vec![(1, 0.25)]))
+            .unwrap()
+            .accepted());
+        for _ in 0..4 {
+            plane.run_slot().unwrap();
+        }
+        let mut churn_rng = Rng::new(0x70D0_CAFE);
+        let picked = plane
+            .apply_topo_event(
+                &TopoAction::LinkFlap {
+                    links: 2,
+                    repair_after: 10,
+                },
+                &mut churn_rng,
+            )
+            .unwrap();
+        assert!(!picked.is_empty(), "scripted flap removed nothing");
+        assert!(plane.topology().is_degraded());
+        for _ in 0..4 {
+            plane.run_slot().unwrap();
+        }
+    };
+    // Serve past the repair-due slot, draining due repairs exactly as the
+    // production serving loop does.
+    let run_suffix = |plane: &mut ControlPlane| -> f64 {
+        let mut last = f64::NAN;
+        for _ in 0..14 {
+            let slot = plane.slots_served();
+            plane.apply_due_repairs(slot).unwrap();
+            last = plane.run_slot().unwrap().cost;
+        }
+        assert!(
+            !plane.topology().is_degraded(),
+            "pending repair never fired after restore"
+        );
+        last
+    };
+
+    // uninterrupted reference
+    let mut reference = light_plane(ControlOptions::default());
+    run_prefix(&mut reference);
+    let final_ref = run_suffix(&mut reference);
+
+    // interrupted run: same prefix, checkpoint mid-flap, "kill", restore
+    let mut interrupted = light_plane(ControlOptions::default());
+    run_prefix(&mut interrupted);
+    let dir = tmp_dir("mid-flap");
+    interrupted.checkpoint(&dir).unwrap();
+    let expected_removed = interrupted.topology().removed_pairs();
+    let expected_pending = interrupted.topology().pending_repairs();
+    let expected_epoch = interrupted.topology().epoch();
+    drop(interrupted);
+
+    let mut restored = ControlPlane::restore(&dir, ControlOptions::default()).unwrap();
+    assert!(
+        restored.topology().is_degraded(),
+        "degradation lost in the snapshot"
+    );
+    assert_eq!(restored.topology().removed_pairs(), expected_removed);
+    assert_eq!(
+        restored.topology().pending_repairs(),
+        expected_pending,
+        "pending repair schedule lost in the snapshot"
+    );
+    assert_eq!(restored.topology().epoch(), expected_epoch);
+    let final_restored = run_suffix(&mut restored);
+
+    let rel = (final_ref - final_restored).abs() / (1.0 + final_ref.abs());
+    assert!(
+        rel <= 1e-9,
+        "mid-flap restore diverged: {final_ref} vs {final_restored} (rel {rel:.3e})"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }

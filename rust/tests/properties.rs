@@ -131,6 +131,207 @@ fn prop_conservation_on_random_digraphs_with_subgraph_shrinking() {
     );
 }
 
+/// Shrinking-enabled topology-churn equivalence: after ANY sequence of
+/// link remove/restore events, the incrementally rebound arena + remapped
+/// φ ([`scfo::topo::TopologyState`] + `Strategy::rebind_topology` chained
+/// through every intermediate epoch) is equivalent to a cold build on the
+/// final graph — identical edge list, φ feasible and loop-free on the
+/// cold arena, flow conservation exact, and bit-for-bit the same cost on
+/// both builds (within 1e-9 relative). A failure shrinks both the
+/// topology (subgraph shrinker) and the event sequence, replaying each
+/// candidate greedily toward the minimal counterexample.
+#[test]
+fn prop_incremental_rebind_equals_cold_build_with_shrinking() {
+    use scfo::topo::TopologyState;
+
+    // toggle the t-th undirected base pair: remove if present (skipping
+    // connectivity-filtered picks), restore if currently removed
+    fn apply_toggles(
+        topo: &mut TopologyState,
+        phi: Strategy,
+        toggles: &[usize],
+    ) -> Strategy {
+        let pairs: Vec<(usize, usize)> = topo
+            .base()
+            .graph
+            .edges()
+            .iter()
+            .copied()
+            .filter(|&(i, j)| i < j)
+            .collect();
+        let mut phi = phi;
+        for &t in toggles {
+            let (i, j) = pairs[t % pairs.len()];
+            let changed = if topo.removed_pairs().contains(&(i, j)) {
+                topo.restore_pair(i, j)
+            } else {
+                // never due: repairs are driven explicitly by the toggles
+                topo.remove_pair(i, j, usize::MAX).is_ok()
+            };
+            if changed {
+                phi = phi.rebind_topology(&topo.current_network());
+            }
+        }
+        phi
+    }
+
+    forall_cases(
+        "incremental rebind == cold build",
+        20,
+        |g| {
+            let rng = g.rng();
+            // bidirected ring (flaps remove undirected pairs) + chords
+            let n = 6 + rng.usize(6);
+            let mut und: Vec<(usize, usize)> = (0..n)
+                .map(|i| {
+                    let j = (i + 1) % n;
+                    (i.min(j), i.max(j))
+                })
+                .collect();
+            for _ in 0..n {
+                let a = rng.usize(n);
+                let b = rng.usize(n);
+                let p = (a.min(b), a.max(b));
+                if a != b && !und.contains(&p) {
+                    und.push(p);
+                }
+            }
+            let mut edges = Vec::with_capacity(2 * und.len());
+            for &(i, j) in &und {
+                edges.push((i, j));
+                edges.push((j, i));
+            }
+            let graph = Graph::new(n, &edges).unwrap();
+            let toggles: Vec<usize> = (0..rng.usize(9)).map(|_| rng.usize(64)).collect();
+            (graph, toggles)
+        },
+        |(graph, toggles): &(Graph, Vec<usize>)| {
+            let Some(net) = single_app_net(graph) else {
+                return PropResult::Discard; // shrunk candidate broke reachability
+            };
+            if graph.edges().iter().all(|&(i, j)| i >= j) {
+                return PropResult::Discard; // no undirected pair to toggle
+            }
+            let mut rng = Rng::new(0xF1A9);
+            let phi0 = Strategy::random_dag(&net, &mut rng);
+            let mut topo = TopologyState::new(net.clone());
+            let phi = apply_toggles(&mut topo, phi0, toggles);
+            let incr = topo.current_network();
+            // cold build on the final edge set — an independent construction
+            let removed = topo.removed_pairs();
+            let final_edges: Vec<(usize, usize)> = graph
+                .edges()
+                .iter()
+                .copied()
+                .filter(|&(i, j)| !removed.contains(&(i.min(j), i.max(j))))
+                .collect();
+            let cold_graph = match Graph::new(graph.n(), &final_edges) {
+                Ok(g) => g,
+                Err(e) => return PropResult::Fail(format!("cold graph build: {e}")),
+            };
+            let Some(cold) = single_app_net(&cold_graph) else {
+                return PropResult::Fail("cold build lost reachability".into());
+            };
+            if incr.graph.edges() != cold.graph.edges() {
+                return PropResult::Fail(format!(
+                    "arena edge lists diverged: incremental {} vs cold {} edges",
+                    incr.m(),
+                    cold.m()
+                ));
+            }
+            if let Err(e) = phi.validate(&cold) {
+                return PropResult::Fail(format!("remapped phi invalid on cold build: {e}"));
+            }
+            if phi.has_loop() {
+                return PropResult::Fail("remapped phi has a loop".into());
+            }
+            let fs_incr = match FlowState::solve(&incr, &phi) {
+                Ok(fs) => fs,
+                Err(e) => return PropResult::Fail(format!("incremental solve: {e}")),
+            };
+            let fs_cold = match FlowState::solve(&cold, &phi) {
+                Ok(fs) => fs,
+                Err(e) => return PropResult::Fail(format!("cold solve: {e}")),
+            };
+            let res = fs_incr.conservation_residual(&incr, &phi);
+            if res > 1e-9 {
+                return PropResult::Fail(format!("conservation residual {res}"));
+            }
+            let (a, b) = (fs_incr.total_cost, fs_cold.total_cost);
+            if (a - b).abs() > 1e-9 * (1.0 + b.abs()) {
+                return PropResult::Fail(format!("cost diverged: incremental {a} vs cold {b}"));
+            }
+            PropResult::Pass
+        },
+    );
+}
+
+/// Acceptance gate: on every default-matrix family, a flap + rebind is
+/// equivalent to a cold rebuild within 1e-9 — and after the repair the
+/// rebound strategy returns to the full arena intact.
+#[test]
+fn rebind_matches_cold_rebuild_on_default_matrix_families() {
+    use scfo::scenarios::{Congestion, ScenarioSpec};
+    use scfo::topo::{TopoAction, TopologyState};
+
+    for family in ["er-20-40", "grid-4x5", "fat-tree-4", "abilene", "geant"] {
+        let spec = ScenarioSpec::named(family, Congestion::Light).unwrap();
+        let sc = spec.effective_base();
+        let mut rng = Rng::new(sc.seed);
+        let graph = topologies::by_name(&sc.topology, &mut rng).unwrap();
+        let base = sc.build_on(graph, &mut rng).unwrap();
+        let mut gp = GradientProjection::new(&base, GpOptions::default());
+        gp.run(&base, 200);
+
+        let mut topo = TopologyState::new(base.clone());
+        let mut churn_rng = Rng::new(sc.seed ^ 0x70D0_CAFE);
+        let action = TopoAction::LinkFlap {
+            links: 2,
+            repair_after: 1,
+        };
+        let picked = topo.apply_event(0, &action, &mut churn_rng);
+        assert!(!picked.is_empty(), "{family}: flap removed nothing");
+        let pruned = topo.current_network();
+        let warm = gp.phi.rebind_topology(&pruned);
+        warm.validate(&pruned)
+            .unwrap_or_else(|e| panic!("{family}: {e}"));
+
+        // cold rebuild of the same pruned network, constructed independently
+        let mut edges = Vec::new();
+        let mut link_cost = Vec::new();
+        for (id, &(i, j)) in base.graph.edges().iter().enumerate() {
+            if !picked.contains(&(i.min(j), i.max(j))) {
+                edges.push((i, j));
+                link_cost.push(base.link_cost[id].clone());
+            }
+        }
+        let cold = Network::new(
+            Graph::new(base.n(), &edges).unwrap(),
+            base.apps.clone(),
+            link_cost,
+            base.comp_cost.clone(),
+            base.comp_weight.clone(),
+        )
+        .unwrap();
+        assert_eq!(pruned.graph.edges(), cold.graph.edges(), "{family}");
+        let ci = FlowState::solve(&pruned, &warm).unwrap().total_cost;
+        let cc = FlowState::solve(&cold, &warm).unwrap().total_cost;
+        assert!(
+            (ci - cc).abs() <= 1e-9 * (1.0 + cc.abs()),
+            "{family}: incremental {ci} vs cold {cc}"
+        );
+
+        // repair: back onto the full arena, strategy still valid
+        assert_eq!(topo.due_repairs(1), picked, "{family}");
+        let repaired = topo.current_network();
+        assert_eq!(repaired.graph.edges(), base.graph.edges(), "{family}");
+        let back = warm.rebind_topology(&repaired);
+        back.validate(&repaired)
+            .unwrap_or_else(|e| panic!("{family}: {e}"));
+        assert!(!back.has_loop(), "{family}");
+    }
+}
+
 #[test]
 fn prop_flow_conservation_holds_for_random_strategies() {
     forall("flow conservation", 40, |g| {
