@@ -198,6 +198,33 @@ pub struct TopoChurnBench {
     pub retained_optimality_mean: f64,
 }
 
+/// Million-stream workload hot-path measurements attached to a
+/// [`GpBenchResult`] when the bench drives the batched (structure-of-arrays)
+/// serving loop with no optimizer (`scfo bench --json --massive`). These are
+/// the BENCH.json v6 columns: stream count, per-slot wall time, and sampling
+/// throughput. `streams`, `arrivals_total`, `detections` and `offered_load`
+/// are bit-deterministic for a given spec; the wall-time columns are not.
+#[derive(Clone, Debug)]
+pub struct MassiveBench {
+    /// Concurrent streams sampled per slot.
+    pub streams: usize,
+    /// Serving slots executed.
+    pub slots: usize,
+    /// Arrivals summed over all slots and streams.
+    pub arrivals_total: usize,
+    /// Change-point detections fired by the column-scan controller.
+    pub detections: usize,
+    /// Sum of true rates after the final slot.
+    pub offered_load: f64,
+    /// Wall-clock seconds per slot of the batched hot loop
+    /// (sample + estimator scan + detector scan), mean …
+    pub slot_wall_ms_mean: f64,
+    /// … and max over the run (milliseconds).
+    pub slot_wall_ms_max: f64,
+    /// Streams processed per wall-clock second at the mean slot time.
+    pub streams_per_sec: f64,
+}
+
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
 /// trajectory and a peak-RSS proxy. Emitted into `BENCH.json` by
 /// `scfo bench --json`; schema documented in `docs/PERFORMANCE.md`.
@@ -235,6 +262,9 @@ pub struct GpBenchResult {
     /// Present when the bench flapped links through the control plane
     /// (`iter_secs` is then the optimizer latency per served slot).
     pub topo_churn: Option<TopoChurnBench>,
+    /// Present when the bench drove the million-stream batched workload
+    /// hot path (`iter_secs` is then the wall time per served slot).
+    pub massive: Option<MassiveBench>,
 }
 
 /// Peak resident-set high-water mark of this process (Linux `VmHWM`);
@@ -301,6 +331,7 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
         distributed: None,
         control: None,
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -397,6 +428,7 @@ pub fn bench_distributed_scenario(
         }),
         control: None,
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -472,6 +504,7 @@ pub fn bench_serving_scenario(
         distributed: None,
         control: None,
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -572,6 +605,7 @@ pub fn bench_control_scenario(family: &str, slots: usize) -> anyhow::Result<GpBe
         distributed: None,
         control: Some(control),
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -679,6 +713,96 @@ pub fn bench_topo_churn_scenario(family: &str, slots: usize) -> anyhow::Result<G
         distributed: None,
         control: None,
         topo_churn: Some(topo),
+        massive: None,
+    })
+}
+
+/// Million-stream workload bench: build the massive-tier scenario
+/// (`er-1000-4000`, `apps × sources` MMPP streams) and drive the batched
+/// structure-of-arrays hot loop — SoA slot sampling, [`StreamEstimator`]
+/// EWMA scan, column-scan change-point detection — for `slots` slots with
+/// no optimizer attached. `iter_secs` records the wall time per served
+/// slot; `cost_trajectory` is empty (nothing is optimized, so `final_cost`
+/// serializes as `null`). The result's `massive` block carries the
+/// BENCH.json v6 columns: `streams`, `slot_wall_ms_mean`/`_max`,
+/// `streams_per_sec`.
+///
+/// [`StreamEstimator`]: crate::serving::StreamEstimator
+pub fn bench_massive_scenario(
+    apps: usize,
+    sources: usize,
+    slots: usize,
+) -> anyhow::Result<GpBenchResult> {
+    use crate::scenarios::ScenarioSpec;
+    use crate::serving::{AdaptationController, ControllerOptions, StreamEstimator};
+    use crate::util::rng::Rng;
+    use crate::workload::Workload;
+
+    anyhow::ensure!(slots >= 1, "massive bench needs at least 1 slot");
+    let spec = ScenarioSpec::massive_matrix_sized(apps, sources, slots)
+        .pop()
+        .expect("massive matrix has exactly one spec");
+    let wspec = spec
+        .workload
+        .as_ref()
+        .expect("massive spec carries a workload");
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    let t0 = Instant::now();
+    let net = sc.build(&mut rng)?;
+    let mut workload = Workload::from_spec(wspec, &net, 1.0, sc.seed)?;
+    anyhow::ensure!(
+        workload.enable_batching(),
+        "massive bench workload must be batchable"
+    );
+    let build_secs = t0.elapsed().as_secs_f64();
+    let streams = workload.streams.len();
+
+    let mut est = StreamEstimator::new(1.0, 0.3);
+    let mut ctrl = AdaptationController::new(ControllerOptions::default());
+    let mut arrivals_total = 0usize;
+    let mut iter_secs = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        let t = Instant::now();
+        arrivals_total += workload.sample_slot();
+        let (obs, fast) = est.update(&workload);
+        let _ = ctrl.observe(obs, fast);
+        iter_secs.push(t.elapsed().as_secs_f64());
+    }
+    let detections = ctrl.events().len();
+    let offered_load = workload.total_true_rate();
+    let slot_wall_ms_mean = stats::mean(&iter_secs) * 1e3;
+    let slot_wall_ms_max = iter_secs.iter().cloned().fold(0.0, f64::max) * 1e3;
+    let streams_per_sec = if slot_wall_ms_mean > 0.0 {
+        streams as f64 / (slot_wall_ms_mean / 1e3)
+    } else {
+        0.0
+    };
+
+    Ok(GpBenchResult {
+        name: spec.name().to_string(),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs,
+        cost_trajectory: Vec::new(),
+        peak_rss_bytes: peak_rss_bytes(),
+        dynamics: None,
+        distributed: None,
+        control: None,
+        topo_churn: None,
+        massive: Some(MassiveBench {
+            streams,
+            slots,
+            arrivals_total,
+            detections,
+            offered_load,
+            slot_wall_ms_mean,
+            slot_wall_ms_max,
+            streams_per_sec,
+        }),
     })
 }
 
@@ -812,6 +936,24 @@ impl GpBenchResult {
                 );
             }
         }
+        if let Some(ms) = &self.massive {
+            if let Json::Obj(o) = &mut doc {
+                o.insert("streams".into(), Json::Num(ms.streams as f64));
+                o.insert("slots".into(), Json::Num(ms.slots as f64));
+                o.insert(
+                    "arrivals_total".into(),
+                    Json::Num(ms.arrivals_total as f64),
+                );
+                o.insert("detections".into(), Json::Num(ms.detections as f64));
+                o.insert("offered_load".into(), Json::Num(ms.offered_load));
+                o.insert(
+                    "slot_wall_ms_mean".into(),
+                    Json::Num(ms.slot_wall_ms_mean),
+                );
+                o.insert("slot_wall_ms_max".into(), Json::Num(ms.slot_wall_ms_max));
+                o.insert("streams_per_sec".into(), Json::Num(ms.streams_per_sec));
+            }
+        }
         if let Some(dyn_) = &self.dynamics {
             if let Json::Obj(o) = &mut doc {
                 o.insert("workload".into(), Json::Str(dyn_.workload.clone()));
@@ -846,8 +988,11 @@ impl GpBenchResult {
 /// `control_epochs`, `reconverge_iters_warm`/`_cold`); 5 added the
 /// optional topology-churn columns (`topo_events`, `topo_changes`,
 /// `topo_epochs`, `removed_pairs_total`, `rebind_secs_mean`,
-/// `reconverge_iters_warm_mean`/`_cold_mean`, `retained_optimality_mean`).
-pub const BENCH_JSON_VERSION: f64 = 5.0;
+/// `reconverge_iters_warm_mean`/`_cold_mean`, `retained_optimality_mean`);
+/// 6 added the optional million-stream workload columns (`streams`,
+/// `arrivals_total`, `detections`, `offered_load`, `slot_wall_ms_mean`,
+/// `slot_wall_ms_max`, `streams_per_sec`).
+pub const BENCH_JSON_VERSION: f64 = 6.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
@@ -1044,7 +1189,7 @@ mod tests {
         );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(5.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(6.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "topo_events",
@@ -1064,6 +1209,47 @@ mod tests {
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         assert!(sc.get("rebind_secs_mean").is_none());
+    }
+
+    #[test]
+    fn massive_bench_emits_v6_columns() {
+        // sized down: same tier shape (er-1000-4000, MMPP, batched SoA hot
+        // loop, no optimizer), far fewer streams so the test stays fast
+        let res = bench_massive_scenario(4, 50, 10).unwrap();
+        assert_eq!(res.iter_secs.len(), 10);
+        assert!(res.cost_trajectory.is_empty());
+        let ms = res.massive.as_ref().expect("massive block present");
+        assert_eq!(ms.streams, 200);
+        assert_eq!(ms.slots, 10);
+        assert!(ms.arrivals_total > 0);
+        assert!(ms.offered_load > 0.0);
+        assert!(ms.slot_wall_ms_mean > 0.0);
+        assert!(ms.slot_wall_ms_max >= ms.slot_wall_ms_mean);
+        assert!(ms.streams_per_sec > 0.0);
+        let doc = gp_bench_json(&[res]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(6.0));
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "streams",
+            "arrivals_total",
+            "detections",
+            "offered_load",
+            "slot_wall_ms_mean",
+            "slot_wall_ms_max",
+            "streams_per_sec",
+        ] {
+            assert!(sc.get(key).is_some(), "missing v6 column {key}");
+        }
+        assert_eq!(sc.get("streams").unwrap().as_usize(), Some(200));
+        // no optimizer ran: final_cost degrades to null, not a number
+        assert!(sc.get("final_cost").unwrap().as_f64().is_none());
+        // static benches carry no massive columns
+        let plain = bench_gp_scenario("abilene", 2).unwrap();
+        let doc = gp_bench_json(&[plain]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert!(sc.get("streams_per_sec").is_none());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! scfo scenarios run --all --tier distributed      # async-runtime chaos tier
 //! scfo scenarios run --all --tier churn            # control-plane app churn tier
 //! scfo scenarios run --all --tier topo-churn       # link-flap epoch-rebind tier
+//! scfo scenarios run --tier massive                # million-stream SoA hot path
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
 //! scfo distributed run --shards 4 --faults lossy   # async sharded runtime
 //! scfo distributed run --faults spec.toml --json D.json  # custom fault spec
@@ -24,6 +25,7 @@
 //! scfo serve    --checkpoint ckpt --restore        # resume bit-identically
 //! scfo bench --json --control [--slots 90]         # control plane → BENCH.json v5
 //! scfo bench --json --topo-churn [--slots 60]      # link flaps → BENCH.json v5
+//! scfo bench --json --massive [--apps 1000] [--sources 1000]  # 1M streams → v6
 //! scfo trace record --topology abilene --workload mmpp --slots 120 --out t.json
 //! scfo trace replay t.json | stats t.json          # bit-identical trace replay
 //! scfo validate --topology abilene                 # DES vs analytic cost
@@ -600,8 +602,21 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let distributed = args.switch("distributed") || args.flag("faults").is_some();
     let control = args.switch("control");
     let topo_churn = args.switch("topo-churn");
+    let massive = args.switch("massive");
     let mut results = Vec::new();
+    if massive {
+        // the massive tier has one fixed family (er-1000-4000); size the
+        // stream table with --apps/--sources instead of --scenarios
+        let apps = args.flag_usize("apps", 1000)?;
+        let sources = args.flag_usize("sources", 1000)?;
+        let slots = args.flag_usize("slots", 20)?;
+        eprintln!("bench massive ({apps} x {sources} streams, {slots} slots)...");
+        results.push(scfo::bench::bench_massive_scenario(apps, sources, slots)?);
+    }
     for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if massive {
+            break;
+        }
         if topo_churn {
             let slots = args.flag_usize("slots", 60)?;
             eprintln!("bench {name} (topo churn, {slots} slots)...");
@@ -641,7 +656,40 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    if topo_churn {
+    if massive {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                let ms = r.massive.as_ref().expect("massive bench has a massive block");
+                vec![
+                    r.name.clone(),
+                    format!("{}/{}", r.n, r.m),
+                    ms.streams.to_string(),
+                    ms.slots.to_string(),
+                    ms.arrivals_total.to_string(),
+                    ms.detections.to_string(),
+                    format!("{:.2}", ms.slot_wall_ms_mean),
+                    format!("{:.2}", ms.slot_wall_ms_max),
+                    format!("{:.0}", ms.streams_per_sec),
+                ]
+            })
+            .collect();
+        print_table(
+            "Million-stream workload bench (BENCH.json v6 columns)",
+            &[
+                "scenario",
+                "|V|/|E|",
+                "streams",
+                "slots",
+                "arrivals",
+                "detections",
+                "slot ms mean",
+                "slot ms max",
+                "streams/sec",
+            ],
+            &rows,
+        );
+    } else if topo_churn {
         let rows: Vec<Vec<String>> = results
             .iter()
             .map(|r| {
@@ -863,6 +911,15 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             let iters = args.flag_usize("iters", 150)?;
             return Ok(ScenarioSpec::topo_churn_matrix_sized(slots, iters));
         }
+        if tier == "massive" {
+            // million-stream batched workload hot path; --apps/--sources
+            // size the stream table (streams = apps x sources), --slots the
+            // served horizon. No optimizer runs in this tier.
+            let apps = args.flag_usize("apps", 1000)?;
+            let sources = args.flag_usize("sources", 1000)?;
+            let slots = args.flag_usize("slots", 20)?;
+            return Ok(ScenarioSpec::massive_matrix_sized(apps, sources, slots));
+        }
         if tier == "dynamic" {
             let slots = args.flag_usize("slots", 200)?;
             let mut specs = ScenarioSpec::dynamic_matrix_sized(slots);
@@ -882,7 +939,7 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             other => {
                 anyhow::bail!(
                     "unknown scenario tier '{other}' \
-                     (standard|large|dynamic|distributed|churn|topo-churn)"
+                     (standard|large|dynamic|distributed|churn|topo-churn|massive)"
                 )
             }
         };
@@ -974,7 +1031,11 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
                     }
                 }
                 vec![spec]
-            } else if args.switch("all") || args.flag("filter").is_some() {
+            } else if args.switch("all")
+                || args.flag("filter").is_some()
+                // an explicit tier selects its whole matrix, --all implied
+                || args.flag("tier").is_some()
+            {
                 let filter = args.flag_or("filter", "");
                 tier_matrix(args)?
                     .into_iter()
@@ -982,7 +1043,7 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
                     .collect()
             } else {
                 anyhow::bail!(
-                    "scenarios run needs --all, --filter SUBSTR or --spec FILE"
+                    "scenarios run needs --all, --filter SUBSTR, --tier NAME or --spec FILE"
                 );
             };
             anyhow::ensure!(!specs.is_empty(), "scenario filter matched nothing");
@@ -1199,7 +1260,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|trace|validate|distributed|broadcast> \
                  [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] \
-                 [--tier large|dynamic|distributed|churn|topo-churn] [--workload SPEC] [--shards N] \
+                 [--tier large|dynamic|distributed|churn|topo-churn|massive] [--workload SPEC] [--shards N] \
                  [--faults SPEC] [--http ADDR] [--checkpoint DIR] [--restore] [--control] \
                  [--topo-churn] [--xla]"
             );

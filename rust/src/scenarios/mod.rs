@@ -61,8 +61,8 @@
 pub mod runner;
 
 pub use runner::{
-    run_batch, ChurnSummary, DistributedSummary, RunnerOptions, ScenarioCache, ScenarioReport,
-    TopoChurnSummary,
+    run_batch, run_massive, ChurnSummary, DistributedSummary, MassiveSummary, RunnerOptions,
+    ScenarioCache, ScenarioReport, TopoChurnSummary,
 };
 
 use crate::config::Scenario;
@@ -437,6 +437,14 @@ pub struct ScenarioSpec {
     /// warm-vs-cold reconvergence slots and the retained cost optimality
     /// against a fresh-build oracle.
     pub topo_churn: Option<TopoChurnSpec>,
+    /// Million-stream workload hot-path marker (the `massive` tier). When
+    /// set, the scenario skips the optimizer entirely and serves
+    /// [`ScenarioSpec::slots`] slots of the batched SoA sampler
+    /// ([`crate::workload::StreamTable`]) through the flat
+    /// estimator/detector columns ([`runner::run_massive`]); the report's
+    /// `massive` block carries slot wall-time and streams/sec. Stream count
+    /// is `base.num_apps × base.num_sources`.
+    pub massive: bool,
 }
 
 /// Topology families of the `large` scale tier
@@ -516,7 +524,41 @@ impl ScenarioSpec {
             distributed: None,
             churn: None,
             topo_churn: None,
+            massive: false,
         })
+    }
+
+    /// Topology family of the `massive` scale tier: the thousand-node
+    /// sparse ER graph, with enough apps × sources to cross one million
+    /// concurrent arrival streams.
+    pub const MASSIVE_FAMILY: &'static str = "er-1000-4000";
+
+    /// The `massive` scale tier: one cell, ≥1,000,000 MMPP streams on
+    /// [`ScenarioSpec::MASSIVE_FAMILY`], served through the batched SoA
+    /// workload hot path (no optimizer — the tier pins sampling, EWMA
+    /// estimation and change-point detection throughput).
+    pub fn massive_matrix() -> Vec<ScenarioSpec> {
+        Self::massive_matrix_sized(1000, 1000, 20)
+    }
+
+    /// The `massive` tier with explicit app/source counts and slot budget
+    /// (streams = apps × sources; tests size this down).
+    pub fn massive_matrix_sized(apps: usize, sources: usize, slots: usize) -> Vec<ScenarioSpec> {
+        let mut spec = Self::named(Self::MASSIVE_FAMILY, Congestion::Nominal)
+            .expect("massive family is valid");
+        spec.base.name = format!("{}-massive", Self::MASSIVE_FAMILY);
+        spec.base.num_apps = apps;
+        spec.base.num_sources = sources;
+        // generous capacities like the other scale tiers, so the offered
+        // load stays physically meaningful in the report
+        spec.base.link_param = 60.0;
+        spec.base.comp_param = 40.0;
+        spec.events.clear();
+        spec.iters = 0; // no optimizer runs in this tier
+        spec.slots = slots;
+        spec.workload = Some(WorkloadSpec::named("mmpp").expect("mmpp is a valid workload"));
+        spec.massive = true;
+        vec![spec]
     }
 
     /// Topology families of the `churn` tier.
@@ -763,6 +805,9 @@ impl ScenarioSpec {
         if let Some(t) = &self.topo_churn {
             obj.insert("topo_churn".to_string(), t.to_json());
         }
+        if self.massive {
+            obj.insert("massive".to_string(), Json::Bool(true));
+        }
         Json::Obj(obj)
     }
 
@@ -797,6 +842,7 @@ impl ScenarioSpec {
             Some(t) => Some(TopoChurnSpec::from_json(t)?),
             None => None,
         };
+        let massive = v.get("massive").and_then(Json::as_bool).unwrap_or(false);
         Ok(ScenarioSpec {
             base,
             congestion,
@@ -807,6 +853,7 @@ impl ScenarioSpec {
             distributed,
             churn,
             topo_churn,
+            massive,
         })
     }
 
@@ -1087,6 +1134,32 @@ mod tests {
         let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
         let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
         assert_eq!(re.topo_churn, None);
+    }
+
+    #[test]
+    fn massive_matrix_targets_a_million_streams() {
+        let m = ScenarioSpec::massive_matrix();
+        assert_eq!(m.len(), 1);
+        let s = &m[0];
+        assert!(s.massive);
+        assert_eq!(s.base.topology, ScenarioSpec::MASSIVE_FAMILY);
+        assert!(
+            s.base.num_apps * s.base.num_sources >= 1_000_000,
+            "acceptance floor: >= 1M streams"
+        );
+        assert!(s.workload.is_some(), "massive tier carries a workload");
+        assert!(s.slots > 0);
+        assert!(s.events.is_empty());
+        // the marker survives the JSON round trip
+        let re = ScenarioSpec::from_json(&s.to_json()).unwrap();
+        assert!(re.massive);
+        assert_eq!(re.base.num_apps, s.base.num_apps);
+        assert_eq!(re.base.num_sources, s.base.num_sources);
+        assert_eq!(re.slots, s.slots);
+        // a plain spec round-trips without the marker
+        let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+        let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
+        assert!(!re.massive);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::graph::{topologies, Graph};
 use crate::scenarios::{ChurnAction, DynamicEvent, ScenarioSpec};
 use crate::serving::{
     AdaptationController, AdaptationSummary, ControllerOptions, OnlineServer, Optimizer,
-    ServerOptions,
+    ServerOptions, StreamEstimator,
 };
 use crate::strategy::Strategy;
 use crate::topo::TopologyState;
@@ -98,6 +98,52 @@ pub struct ScenarioReport {
     pub churn: Option<ChurnSummary>,
     /// Epoch-rebuild metrics (topo-churn scenarios only).
     pub topo_churn: Option<TopoChurnSummary>,
+    /// Workload hot-path throughput metrics (massive scenarios only).
+    pub massive: Option<MassiveSummary>,
+}
+
+/// Workload hot-path columns of a `massive` scenario report: stream count,
+/// arrival volume, and the per-slot wall-time of the batched
+/// sample → estimate → detect loop. The wall-time-derived columns
+/// (`build_secs`, `slot_wall_ms_*`, `streams_per_sec`) are volatile — the
+/// golden comparator skips them; everything else is bit-deterministic.
+#[derive(Clone, Debug)]
+pub struct MassiveSummary {
+    /// Live arrival streams (= apps × sources).
+    pub streams: usize,
+    /// Serving slots executed.
+    pub slots: usize,
+    /// Total arrivals sampled across all slots.
+    pub arrivals_total: usize,
+    /// Change points the column-scan detector fired.
+    pub detections: usize,
+    /// Σ latest per-stream true rates after the last slot (offered load λ̄).
+    pub offered_load: f64,
+    /// Wall-clock seconds to build the network + workload + stream table.
+    pub build_secs: f64,
+    /// Mean wall-clock milliseconds per slot of the hot loop.
+    pub slot_wall_ms_mean: f64,
+    /// Worst slot wall-time in milliseconds.
+    pub slot_wall_ms_max: f64,
+    /// Streams processed per second of hot-loop wall time
+    /// (streams ÷ mean slot seconds).
+    pub streams_per_sec: f64,
+}
+
+impl MassiveSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("streams", Json::Num(self.streams as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("arrivals_total", Json::Num(self.arrivals_total as f64)),
+            ("detections", Json::Num(self.detections as f64)),
+            ("offered_load", Json::Num(self.offered_load)),
+            ("build_secs", Json::Num(self.build_secs)),
+            ("slot_wall_ms_mean", Json::Num(self.slot_wall_ms_mean)),
+            ("slot_wall_ms_max", Json::Num(self.slot_wall_ms_max)),
+            ("streams_per_sec", Json::Num(self.streams_per_sec)),
+        ])
+    }
 }
 
 /// Control-plane columns of a churn scenario report: scripted lifecycle
@@ -335,6 +381,9 @@ impl ScenarioReport {
         if let Some(t) = &self.topo_churn {
             pairs.push(("topo_churn", t.to_json()));
         }
+        if let Some(ms) = &self.massive {
+            pairs.push(("massive", ms.to_json()));
+        }
         Json::obj(pairs)
     }
 }
@@ -505,6 +554,9 @@ fn prune_links(net: &Network, removed: &[(usize, usize)]) -> anyhow::Result<Netw
 /// GP solve, the dynamic-event schedule with online adaptation, then the
 /// final GP-vs-baselines comparison on the resulting network state.
 pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<ScenarioReport> {
+    if spec.massive {
+        return run_massive(spec, cache);
+    }
     if spec.topo_churn.is_some() {
         return run_topo_churn(spec, cache);
     }
@@ -608,6 +660,7 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
         distributed: None,
         churn: None,
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -700,6 +753,7 @@ pub fn run_distributed(
         distributed: Some(summary),
         churn: None,
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -837,6 +891,7 @@ pub fn run_dynamic(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result
         distributed: dist_stats,
         churn: None,
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -1018,6 +1073,7 @@ pub fn run_churn(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
         distributed: None,
         churn: Some(summary),
         topo_churn: None,
+        massive: None,
     })
 }
 
@@ -1209,6 +1265,97 @@ pub fn run_topo_churn(
         distributed: None,
         churn: None,
         topo_churn: Some(summary),
+        massive: None,
+    })
+}
+
+/// Execute a massive-tier scenario: serve `spec.slots` slots of the
+/// batched SoA workload hot path — [`crate::workload::StreamTable`]
+/// family-batched sampling, the flat [`StreamEstimator`] EWMA columns, and
+/// one [`AdaptationController::observe`] column scan — with wall-time
+/// instrumentation per slot. No optimizer runs: at a thousand applications
+/// the GP arena would dwarf the workload itself, and the tier exists to pin
+/// workload throughput (streams/sec), not routing quality. Everything in
+/// the report except the wall-time columns is bit-deterministic.
+pub fn run_massive(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<ScenarioReport> {
+    let wspec = spec.workload.as_ref().ok_or_else(|| {
+        anyhow::anyhow!("massive scenario '{}' needs a workload", spec.name())
+    })?;
+    anyhow::ensure!(
+        spec.slots > 0,
+        "massive scenario '{}' needs slots >= 1",
+        spec.name()
+    );
+    let watch = Stopwatch::start();
+    let (graph, mut rng, cache_hit) = cache.topology(spec)?;
+    let build = Stopwatch::start();
+    let net = spec.effective_base().build_on((*graph).clone(), &mut rng)?;
+    let mut workload = Workload::from_spec(wspec, &net, 1.0, spec.base.seed)?;
+    anyhow::ensure!(
+        workload.enable_batching(),
+        "massive scenario '{}': workload is not batchable (trace streams?)",
+        spec.name()
+    );
+    let build_secs = build.elapsed_secs();
+    let streams = workload.streams.len();
+
+    // The hot loop. Per slot: one batched sample pass per model family,
+    // one linear EWMA pass over the estimator columns, one detector scan.
+    let mut est = StreamEstimator::new(1.0, 0.3);
+    let mut ctrl = AdaptationController::new(ControllerOptions::default());
+    let mut arrivals_total = 0usize;
+    let mut slot_ms = Vec::with_capacity(spec.slots);
+    for _ in 0..spec.slots {
+        let w = Stopwatch::start();
+        arrivals_total += workload.sample_slot();
+        let (obs, fast) = est.update(&workload);
+        let _ = ctrl.observe(obs, fast);
+        slot_ms.push(w.elapsed_secs() * 1e3);
+    }
+    let detections = ctrl.events().len();
+    let offered_load = workload.total_true_rate();
+
+    let slot_wall_ms_mean = slot_ms.iter().sum::<f64>() / slot_ms.len() as f64;
+    let slot_wall_ms_max = slot_ms.iter().cloned().fold(0.0, f64::max);
+    let streams_per_sec = if slot_wall_ms_mean > 0.0 {
+        streams as f64 / (slot_wall_ms_mean / 1e3)
+    } else {
+        0.0
+    };
+
+    let summary = MassiveSummary {
+        streams,
+        slots: spec.slots,
+        arrivals_total,
+        detections,
+        offered_load,
+        build_secs,
+        slot_wall_ms_mean,
+        slot_wall_ms_max,
+        streams_per_sec,
+    };
+
+    Ok(ScenarioReport {
+        name: spec.name().to_string(),
+        topology: spec.base.topology.clone(),
+        congestion: spec.congestion.name().to_string(),
+        seed: spec.base.seed,
+        n: net.n(),
+        m: net.m(),
+        apps: net.apps.len(),
+        // no optimizer, so no phase trajectory or cost comparison
+        phases: Vec::new(),
+        costs: Vec::new(),
+        gp_within_baselines: true,
+        solve_secs: watch.elapsed_secs(),
+        cache_hit,
+        workload: Some(wspec.name().to_string()),
+        slots: spec.slots,
+        adaptation: None,
+        distributed: None,
+        churn: None,
+        topo_churn: None,
+        massive: Some(summary),
     })
 }
 
@@ -1627,6 +1774,54 @@ mod tests {
         for (x, y) in ta.retained_optimality.iter().zip(&tb.retained_optimality) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    fn quick_massive_spec(apps: usize, sources: usize, slots: usize) -> ScenarioSpec {
+        crate::scenarios::ScenarioSpec::massive_matrix_sized(apps, sources, slots)
+            .into_iter()
+            .next()
+            .unwrap()
+    }
+
+    #[test]
+    fn massive_scenario_reports_streams_and_throughput() {
+        let cache = ScenarioCache::new();
+        let rep = run_one(&quick_massive_spec(4, 50, 12), &cache).unwrap();
+        let ms = rep.massive.as_ref().expect("massive block present");
+        assert_eq!(ms.streams, 4 * 50, "one stream per (app, source)");
+        assert_eq!(ms.slots, 12);
+        assert!(ms.arrivals_total > 0, "mmpp streams must produce arrivals");
+        assert!(ms.offered_load > 0.0);
+        assert!(ms.slot_wall_ms_mean >= 0.0 && ms.slot_wall_ms_max >= ms.slot_wall_ms_mean);
+        assert!(ms.streams_per_sec > 0.0);
+        // no optimizer ran
+        assert!(rep.phases.is_empty());
+        assert!(rep.costs.is_empty());
+        assert_eq!(rep.workload.as_deref(), Some("mmpp"));
+        // the JSON report exposes the acceptance-gated v6 columns
+        let v = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        let block = v.get("massive").expect("massive block serialized");
+        for key in [
+            "streams",
+            "arrivals_total",
+            "slot_wall_ms_mean",
+            "streams_per_sec",
+        ] {
+            assert!(block.get(key).is_some(), "missing column {key}");
+        }
+        assert_eq!(block.get("streams").unwrap().as_usize(), Some(200));
+    }
+
+    #[test]
+    fn massive_scenario_is_deterministic_modulo_wall_time() {
+        let spec = quick_massive_spec(3, 40, 10);
+        let a = run_one(&spec, &ScenarioCache::new()).unwrap();
+        let b = run_one(&spec, &ScenarioCache::new()).unwrap();
+        let (ma, mb) = (a.massive.unwrap(), b.massive.unwrap());
+        assert_eq!(ma.streams, mb.streams);
+        assert_eq!(ma.arrivals_total, mb.arrivals_total);
+        assert_eq!(ma.detections, mb.detections);
+        assert_eq!(ma.offered_load.to_bits(), mb.offered_load.to_bits());
     }
 
     #[test]

@@ -160,6 +160,76 @@ impl AdaptationSummary {
     }
 }
 
+/// Per-stream detector state as flat columns indexed by stream id — the
+/// SoA layout matching the serving loop's observation/estimate columns, so
+/// [`AdaptationController::observe`] is one linear scan regardless of
+/// stream count.
+pub(crate) struct DetectorColumns {
+    /// Slow-EWMA anchor per stream.
+    pub(crate) slow: Vec<f64>,
+    /// Whether the stream has observed its first slot yet.
+    pub(crate) seen: Vec<bool>,
+}
+
+impl DetectorColumns {
+    fn new() -> DetectorColumns {
+        DetectorColumns {
+            slow: Vec::new(),
+            seen: Vec::new(),
+        }
+    }
+
+    /// Track the stream set: grow with unseen anchors; truncate on shrink
+    /// (a control-plane app removal) so the re-anchor path stays
+    /// shape-consistent.
+    fn resize(&mut self, n: usize) {
+        if n > self.slow.len() {
+            self.slow.resize(n, 0.0);
+            self.seen.resize(n, false);
+        } else if n < self.slow.len() {
+            self.slow.truncate(n);
+            self.seen.truncate(n);
+        }
+    }
+
+    /// One linear scan over the columns: advance the slow anchors and
+    /// accumulate the aggregate `(gap, var)` plus the largest per-stream
+    /// normalized innovation. Identical arithmetic (and accumulation
+    /// order) to the per-stream reference formulation.
+    fn scan(
+        &mut self,
+        observed: &[f64],
+        fast: &[f64],
+        ws: f64,
+        vfactor: f64,
+        slot_secs: f64,
+    ) -> (f64, f64, f64) {
+        let mut gap = 0.0;
+        let mut var = 0.0;
+        let mut stream_z = 0.0f64;
+        for (s, &obs) in observed.iter().enumerate() {
+            if !self.seen[s] {
+                // same cold-start rule as the server's fast estimate
+                self.slow[s] = obs;
+                self.seen[s] = true;
+            } else {
+                self.slow[s] = (1.0 - ws) * self.slow[s] + ws * obs;
+            }
+            let g = fast[s] - self.slow[s];
+            let v = vfactor * self.slow[s].max(1e-9) / slot_secs;
+            gap += g;
+            var += v;
+            stream_z = stream_z.max(g.abs() / v.sqrt());
+        }
+        (gap, var, stream_z)
+    }
+
+    /// Re-anchor every slow estimate to the fast column (post-detection).
+    fn reanchor(&mut self, fast: &[f64]) {
+        self.slow.copy_from_slice(fast);
+    }
+}
+
 /// The controller. Attach to an [`crate::serving::OnlineServer`] via
 /// [`crate::serving::OnlineServer::attach_controller`]; the server feeds it
 /// every slot.
@@ -168,8 +238,7 @@ pub struct AdaptationController {
     /// Copied from the server at attach time.
     pub(super) fast_ewma: f64,
     pub(super) slot_secs: f64,
-    slow: Vec<f64>,
-    seen: Vec<bool>,
+    det: DetectorColumns,
     cusum: f64,
     cooldown_left: usize,
     boost_left: usize,
@@ -189,8 +258,7 @@ impl AdaptationController {
             opts,
             fast_ewma: 0.3,
             slot_secs: 1.0,
-            slow: Vec::new(),
-            seen: Vec::new(),
+            det: DetectorColumns::new(),
             cusum: 0.0,
             cooldown_left: 0,
             boost_left: 0,
@@ -208,37 +276,14 @@ impl AdaptationController {
     /// (post-update). Returns the optimizer-side action for this slot.
     pub fn observe(&mut self, observed: &[f64], fast: &[f64]) -> PolicyAction {
         self.slot += 1;
-        if observed.len() > self.slow.len() {
-            self.slow.resize(observed.len(), 0.0);
-            self.seen.resize(observed.len(), false);
-        } else if observed.len() < self.slow.len() {
-            // the stream set shrank (a control-plane app removal): drop the
-            // stale anchors so the re-anchor path stays shape-consistent
-            self.slow.truncate(observed.len());
-            self.seen.truncate(observed.len());
-        }
+        self.det.resize(observed.len());
         let ws = self.opts.slow_ewma;
         let wf = self.fast_ewma;
         let vfactor = wf / (2.0 - wf) + ws / (2.0 - ws);
-        let mut gap = 0.0;
-        let mut var = 0.0;
         // opposite-direction shifts on different streams cancel in the
-        // signed aggregate, so also track the largest per-stream |z|
-        let mut stream_z = 0.0f64;
-        for (s, &obs) in observed.iter().enumerate() {
-            if !self.seen[s] {
-                // same cold-start rule as the server's fast estimate
-                self.slow[s] = obs;
-                self.seen[s] = true;
-            } else {
-                self.slow[s] = (1.0 - ws) * self.slow[s] + ws * obs;
-            }
-            let g = fast[s] - self.slow[s];
-            let v = vfactor * self.slow[s].max(1e-9) / self.slot_secs;
-            gap += g;
-            var += v;
-            stream_z = stream_z.max(g.abs() / v.sqrt());
-        }
+        // signed aggregate, so the scan also tracks the largest per-stream
+        // |z| alongside (gap, var)
+        let (gap, var, stream_z) = self.det.scan(observed, fast, ws, vfactor, self.slot_secs);
         self.last_z = if var > 0.0 { gap / var.sqrt() } else { 0.0 };
         // CUSUM integrates the aggregate only: a max-statistic has a
         // nonzero null mean that would drift it upward. Slow *opposing*
@@ -254,7 +299,7 @@ impl AdaptationController {
                 || self.cusum > self.opts.cusum_h);
         if fired {
             // re-anchor and re-arm the detector
-            self.slow.copy_from_slice(fast);
+            self.det.reanchor(fast);
             self.cusum = 0.0;
             self.cooldown_left = self.opts.cooldown;
             self.events.push(AdaptationEvent {
@@ -331,10 +376,10 @@ impl AdaptationController {
             })
             .collect();
         Json::obj(vec![
-            ("slow", Json::arr_f64(&self.slow)),
+            ("slow", Json::arr_f64(&self.det.slow)),
             (
                 "seen",
-                Json::Arr(self.seen.iter().map(|&b| Json::Bool(b)).collect()),
+                Json::Arr(self.det.seen.iter().map(|&b| Json::Bool(b)).collect()),
             ),
             ("cusum", Json::Num(self.cusum)),
             ("cooldown_left", Json::Num(self.cooldown_left as f64)),
@@ -372,8 +417,8 @@ impl AdaptationController {
                 .map(|x| x.as_f64().unwrap_or(0.0))
                 .collect())
         };
-        self.slow = nums("slow")?;
-        self.seen = v
+        self.det.slow = nums("slow")?;
+        self.det.seen = v
             .get("seen")
             .and_then(Json::as_arr)
             .ok_or_else(|| anyhow::anyhow!("controller state: missing 'seen'"))?
@@ -381,7 +426,7 @@ impl AdaptationController {
             .map(|x| x.as_bool().unwrap_or(false))
             .collect();
         anyhow::ensure!(
-            self.seen.len() == self.slow.len(),
+            self.det.seen.len() == self.det.slow.len(),
             "controller state: seen/slow length mismatch"
         );
         self.cusum = v.get("cusum").and_then(Json::as_f64).unwrap_or(0.0);
@@ -568,7 +613,7 @@ mod tests {
         // boost expires after boost_slots quiet slots
         let mut unboost = None;
         for _ in 0..5 {
-            match ctrl.observe(&[1.0], &[ctrl.slow[0]]) {
+            match ctrl.observe(&[1.0], &[ctrl.det.slow[0]]) {
                 PolicyAction::ScaleStep(f) => unboost = Some(f),
                 PolicyAction::None => {}
                 other => panic!("unexpected {other:?}"),
@@ -607,7 +652,7 @@ mod tests {
         // two streams left, one of them stepping hard enough to fire
         let act = ctrl.observe(&[60.0, 0.8], &[18.7, 0.8]);
         assert_ne!(act, PolicyAction::None, "step after shrink must still fire");
-        assert_eq!(ctrl.slow.len(), 2);
+        assert_eq!(ctrl.det.slow.len(), 2);
     }
 
     #[test]
@@ -626,7 +671,7 @@ mod tests {
         assert_eq!(b.cusum.to_bits(), a.cusum.to_bits());
         // subsequent slots behave identically, including the warm oracle
         for obs in [[2.0, 1.0], [1.5, 0.9], [1.2, 0.7]] {
-            let fast = [a.slow[0], a.slow[1]];
+            let fast = [a.det.slow[0], a.det.slow[1]];
             let act_a = a.observe(&obs, &fast);
             let act_b = b.observe(&obs, &fast);
             assert_eq!(act_a, act_b);

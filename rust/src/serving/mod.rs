@@ -175,6 +175,12 @@ pub struct OnlineServer<O: Optimizer> {
     est_rates: Vec<Vec<f64>>,
     /// whether (app, node) has observed its first slot yet
     est_seen: Vec<Vec<bool>>,
+    /// flat per-stream observation column (this slot's counts / T),
+    /// indexed by stream id and reused across slots — the detector scans
+    /// it linearly without per-slot allocation
+    obs_col: Vec<f64>,
+    /// flat per-stream fast-EWMA estimate column, same indexing
+    est_col: Vec<f64>,
     pub net: Network,
     pub optimizer: O,
     opts: ServerOptions,
@@ -197,20 +203,24 @@ impl<O: Optimizer> OnlineServer<O> {
     /// The workload's `slot_secs` is authoritative: `opts.slot_secs` is
     /// overridden to match, so rate estimates (counts / T) can never be
     /// scaled by a different slot duration than the one that generated the
-    /// counts.
+    /// counts. Batched SoA sampling is enabled when the workload supports
+    /// it (bit-identical to the boxed path; trace replay stays boxed).
     pub fn with_workload(
         net: Network,
         optimizer: O,
-        workload: Workload,
+        mut workload: Workload,
         mut opts: ServerOptions,
     ) -> Self {
         opts.slot_secs = workload.slot_secs;
+        workload.enable_batching();
         let est_rates = vec![vec![0.0; net.n()]; net.apps.len()];
         let est_seen = vec![vec![false; net.n()]; net.apps.len()];
         let mut srv = OnlineServer {
             workload,
             est_rates,
             est_seen,
+            obs_col: Vec::new(),
+            est_col: Vec::new(),
             net,
             optimizer,
             opts,
@@ -412,14 +422,18 @@ impl<O: Optimizer> OnlineServer<O> {
     /// estimates, run the controller + optimizer, report metrics.
     pub fn run_slot(&mut self) -> anyhow::Result<SlotMetrics> {
         self.slot_no += 1;
-        // 1. arrivals this slot, per stream
+        // 1. arrivals this slot, per stream (batched SoA passes when the
+        //    workload's stream table is active)
         let arrivals = self.workload.sample_slot();
         // 2. rate estimation (EWMA, initialized from the first observation
-        //    instead of decaying up from zero)
+        //    instead of decaying up from zero). The per-stream columns are
+        //    persistent and indexed by stream id — no per-slot allocation,
+        //    and resize covers control-plane stream-set changes.
         let w = self.opts.ewma;
-        let mut obs_buf = Vec::with_capacity(self.workload.streams.len());
-        let mut est_buf = Vec::with_capacity(self.workload.streams.len());
-        for s in &self.workload.streams {
+        let n = self.workload.streams.len();
+        self.obs_col.resize(n, 0.0);
+        self.est_col.resize(n, 0.0);
+        for (i, s) in self.workload.streams.iter().enumerate() {
             let observed = s.last_offsets.len() as f64 / self.opts.slot_secs;
             let est = &mut self.est_rates[s.app][s.node];
             if !self.est_seen[s.app][s.node] {
@@ -428,18 +442,19 @@ impl<O: Optimizer> OnlineServer<O> {
             } else {
                 *est = (1.0 - w) * *est + w * observed;
             }
-            obs_buf.push(observed);
-            est_buf.push(*est);
+            self.obs_col[i] = observed;
+            self.est_col[i] = *est;
         }
         // 3. expose estimates to the optimizer
         for (a, est) in self.est_rates.iter().enumerate() {
             self.net.apps[a].input_rates.copy_from_slice(est);
         }
-        // 4. change-point detection + re-optimization policy
+        // 4. change-point detection + re-optimization policy: a linear
+        //    scan over the detector columns, aligned with obs/est above
         let mut detection = false;
         if let Some(ctrl) = self.controller.as_mut() {
             let before = ctrl.events().len();
-            let action = ctrl.observe(&obs_buf, &est_buf);
+            let action = ctrl.observe(&self.obs_col, &self.est_col);
             detection = ctrl.events().len() > before;
             match action {
                 PolicyAction::None => {}
@@ -486,6 +501,55 @@ impl<O: Optimizer> OnlineServer<O> {
     /// Run many slots, returning all metrics.
     pub fn run(&mut self, slots: usize) -> anyhow::Result<Vec<SlotMetrics>> {
         (0..slots).map(|_| self.run_slot()).collect()
+    }
+}
+
+/// Flat per-stream rate-estimation columns for stream sets too large for
+/// the per-(app, node) estimate grid — the `massive` tier's hot path.
+/// Applies the same EWMA-with-cold-start rule as [`OnlineServer::run_slot`]
+/// step 2, indexed by stream id, with zero steady-state allocation. Feed
+/// the returned columns straight to [`AdaptationController::observe`].
+pub struct StreamEstimator {
+    slot_secs: f64,
+    ewma: f64,
+    /// observed rate this slot (counts / T), indexed by stream id
+    pub obs: Vec<f64>,
+    /// fast EWMA estimate, indexed by stream id
+    pub est: Vec<f64>,
+    /// whether the stream has observed its first slot yet
+    pub seen: Vec<bool>,
+}
+
+impl StreamEstimator {
+    pub fn new(slot_secs: f64, ewma: f64) -> StreamEstimator {
+        StreamEstimator {
+            slot_secs,
+            ewma,
+            obs: Vec::new(),
+            est: Vec::new(),
+            seen: Vec::new(),
+        }
+    }
+
+    /// Update the columns from the workload's latest sampled slot; returns
+    /// `(observed, estimate)` column slices for the detector scan.
+    pub fn update(&mut self, workload: &Workload) -> (&[f64], &[f64]) {
+        let n = workload.streams.len();
+        self.obs.resize(n, 0.0);
+        self.est.resize(n, 0.0);
+        self.seen.resize(n, false);
+        let w = self.ewma;
+        for (i, s) in workload.streams.iter().enumerate() {
+            let observed = s.last_offsets.len() as f64 / self.slot_secs;
+            if !self.seen[i] {
+                self.est[i] = observed;
+                self.seen[i] = true;
+            } else {
+                self.est[i] = (1.0 - w) * self.est[i] + w * observed;
+            }
+            self.obs[i] = observed;
+        }
+        (&self.obs, &self.est)
     }
 }
 

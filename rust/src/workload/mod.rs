@@ -47,9 +47,11 @@
 //! ```
 
 pub mod models;
+pub mod soa;
 pub mod trace;
 
 pub use models::{Diurnal, Drift, FlashCrowd, Mmpp, Poisson, TrafficModel};
+pub use soa::StreamTable;
 pub use trace::{TRACE_VERSION, Trace, TraceModel, TraceStream, TraceStreamStats};
 
 use std::collections::BTreeMap;
@@ -413,6 +415,15 @@ impl Stream {
 
 /// The workload of a network: one [`Stream`] per (app, node) source,
 /// advanced in lock-step one slot at a time.
+///
+/// Two sampling engines share this type. The boxed per-stream path (one
+/// virtual [`TrafficModel::sample_slot`] call per stream) is the reference
+/// implementation and the only path trace replay can use. Calling
+/// [`Workload::enable_batching`] derives a [`StreamTable`] — flat SoA
+/// columns batch-sampled one model family at a time — which produces
+/// bit-identical arrivals (see [`soa`]) while scaling to millions of
+/// streams. Boxed-path mutations (rebind, base-rate changes) sync the
+/// table's live RNG/evolution state back first and rebuild it after.
 pub struct Workload {
     /// Slot duration in seconds.
     pub slot_secs: f64,
@@ -422,6 +433,8 @@ pub struct Workload {
     /// Spawns RNGs for streams added after construction
     /// ([`Workload::set_base_rate`] on a previously silent node).
     spawn_rng: Rng,
+    /// SoA batched-sampling engine (`None` = boxed reference path).
+    table: Option<StreamTable>,
 }
 
 impl Workload {
@@ -489,6 +502,7 @@ impl Workload {
             streams,
             slot: 0,
             spawn_rng: master,
+            table: None,
         })
     }
 
@@ -499,6 +513,36 @@ impl Workload {
             streams,
             slot: 0,
             spawn_rng,
+            table: None,
+        }
+    }
+
+    /// Switch the hot path to the SoA batched engine ([`StreamTable`]):
+    /// arrivals are drawn in one pass per model family over flat columns,
+    /// bit-identically to the boxed path. Returns `false` (staying boxed)
+    /// when any stream is table-ineligible (trace replay). Idempotent —
+    /// re-enabling rebuilds the table from the current boxed state.
+    pub fn enable_batching(&mut self) -> bool {
+        self.sync_from_table();
+        self.table = StreamTable::from_streams(&self.streams);
+        self.table.is_some()
+    }
+
+    /// Whether the SoA batched engine is active.
+    pub fn batching(&self) -> bool {
+        self.table.is_some()
+    }
+
+    /// The active SoA stream table, if batching is enabled.
+    pub fn stream_table(&self) -> Option<&StreamTable> {
+        self.table.as_ref()
+    }
+
+    /// Drop the table after writing its live RNG + evolution state back
+    /// into the boxed streams (no-op when already boxed).
+    fn sync_from_table(&mut self) {
+        if let Some(t) = self.table.take() {
+            t.sync_streams(&mut self.streams);
         }
     }
 
@@ -513,17 +557,23 @@ impl Workload {
     }
 
     /// Sample one slot across all streams; per-stream offsets and true
-    /// rates land in [`Stream::last_offsets`] / [`Stream::last_rate`].
-    /// Returns the total arrival count.
+    /// rates land in [`Stream::last_offsets`] / [`Stream::last_rate`]
+    /// regardless of engine, so trace recording and the serving loop read
+    /// the same contract either way. Returns the total arrival count.
     pub fn sample_slot(&mut self) -> usize {
         let t0 = self.time();
         let dt = self.slot_secs;
-        let mut total = 0;
-        for s in &mut self.streams {
-            s.last_offsets.clear();
-            s.last_rate = s.model.sample_slot(t0, dt, &mut s.rng, &mut s.last_offsets);
-            total += s.last_offsets.len();
-        }
+        let total = if let Some(table) = self.table.as_mut() {
+            table.sample_slot_into(t0, dt, &mut self.streams)
+        } else {
+            let mut total = 0;
+            for s in &mut self.streams {
+                s.last_offsets.clear();
+                s.last_rate = s.model.sample_slot(t0, dt, &mut s.rng, &mut s.last_offsets);
+                total += s.last_offsets.len();
+            }
+            total
+        };
         self.slot += 1;
         total
     }
@@ -570,6 +620,10 @@ impl Workload {
     /// stream get fresh stationary-Poisson streams, forked deterministically
     /// from the workload's spawn RNG in (app, node) order.
     pub fn rebind(&mut self, net: &Network, remap: &[Option<usize>]) {
+        // the rebind mutates boxed models (base re-anchor, spawns), so pull
+        // the batched engine's live state back first and rebuild it after
+        let batched = self.table.is_some();
+        self.sync_from_table();
         let old = std::mem::take(&mut self.streams);
         for mut s in old {
             let Some(&Some(na)) = remap.get(s.app) else {
@@ -590,6 +644,9 @@ impl Workload {
                 }
             }
         }
+        if batched {
+            self.enable_batching();
+        }
     }
 
     /// Serialize the full workload state — per-stream model parameters,
@@ -599,7 +656,7 @@ impl Workload {
     /// whose history lives in an external file.
     pub fn state_json(&self) -> anyhow::Result<Json> {
         let mut streams = Vec::with_capacity(self.streams.len());
-        for s in &self.streams {
+        for (i, s) in self.streams.iter().enumerate() {
             let spec = s.model.spec_json().ok_or_else(|| {
                 anyhow::anyhow!(
                     "stream (app {}, node {}): '{}' workloads cannot be checkpointed",
@@ -608,21 +665,28 @@ impl Workload {
                     s.model.kind()
                 )
             })?;
+            // while the batched engine is active, the live RNG words and
+            // evolution state are in its columns, not the boxed models
+            let (state, rng_words) = match &self.table {
+                Some(t) => (t.model_state_json(i), t.rng_words(i)),
+                None => (s.model.state_json(), s.rng.state()),
+            };
             streams.push(Json::obj(vec![
                 ("app", Json::Num(s.app as f64)),
                 ("node", Json::Num(s.node as f64)),
                 ("base", Json::Num(s.model.base_rate())),
                 ("model", spec),
-                ("state", s.model.state_json()),
+                ("state", state),
                 (
                     "rng",
-                    Json::Arr(s.rng.state().iter().map(|&w| Json::from_u64(w)).collect()),
+                    Json::Arr(rng_words.iter().map(|&w| Json::from_u64(w)).collect()),
                 ),
             ]));
         }
         Ok(Json::obj(vec![
             ("slot_secs", Json::Num(self.slot_secs)),
             ("slot", Json::Num(self.slot as f64)),
+            ("batched", Json::Bool(self.table.is_some())),
             (
                 "spawn_rng",
                 Json::Arr(
@@ -708,12 +772,21 @@ impl Workload {
         for s in &mut wl.streams {
             s.last_rate = s.model.rate_at(t);
         }
+        // restore the batched engine when the snapshot was taken with it
+        // active (bit-identical either way; this preserves the hot path)
+        if v.get("batched").and_then(Json::as_bool).unwrap_or(false) {
+            wl.enable_batching();
+        }
         Ok(wl)
     }
 
     /// Re-anchor one stream's base rate (demand-shift hook). Creates a new
-    /// stationary Poisson stream if (app, node) had none.
+    /// stationary Poisson stream if (app, node) had none. Runs on the boxed
+    /// path; an active stream table is synced back and rebuilt around the
+    /// new rate.
     pub fn set_base_rate(&mut self, app: usize, node: usize, rate: f64) {
+        let batched = self.table.is_some();
+        self.sync_from_table();
         if let Some(s) = self
             .streams
             .iter_mut()
@@ -725,6 +798,9 @@ impl Workload {
             let rng = self.spawn_rng.fork();
             self.streams
                 .push(Stream::new(app, node, Box::new(Poisson::new(rate)), rng));
+        }
+        if batched {
+            self.enable_batching();
         }
     }
 }
@@ -868,6 +944,56 @@ mod tests {
         assert_eq!(b.slot(), a.slot());
         assert_eq!(b.streams.len(), a.streams.len());
         for _ in 0..25 {
+            a.sample_slot();
+            b.sample_slot();
+            for (sa, sb) in a.streams.iter().zip(&b.streams) {
+                assert_eq!(sa.last_offsets, sb.last_offsets);
+                assert_eq!(sa.last_rate.to_bits(), sb.last_rate.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_state_roundtrip_restores_batching() {
+        let net = small_net(true);
+        let spec = WorkloadSpec::named("mmpp").unwrap();
+        let mut a = Workload::from_spec(&spec, &net, 1.0, 13).unwrap();
+        assert!(a.enable_batching());
+        for _ in 0..20 {
+            a.sample_slot();
+        }
+        let snap = Json::parse(&a.state_json().unwrap().to_string_pretty()).unwrap();
+        let mut b = Workload::from_state_json(&snap).unwrap();
+        assert!(b.batching(), "snapshot must restore the batched engine");
+        for _ in 0..20 {
+            a.sample_slot();
+            b.sample_slot();
+            for (sa, sb) in a.streams.iter().zip(&b.streams) {
+                assert_eq!(sa.last_offsets, sb.last_offsets);
+                assert_eq!(sa.last_rate.to_bits(), sb.last_rate.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rebind_keeps_survivor_sequences() {
+        // the batched twin of rebind_preserves_survivors_and_spawns_new_streams:
+        // sync-back + rebuild across a rebind must not perturb survivor RNGs
+        let net = small_net(true);
+        let mut a = Workload::from_spec(&WorkloadSpec::named("mmpp").unwrap(), &net, 1.0, 9)
+            .unwrap();
+        let mut b = Workload::from_spec(&WorkloadSpec::named("mmpp").unwrap(), &net, 1.0, 9)
+            .unwrap();
+        assert!(b.enable_batching());
+        for _ in 0..10 {
+            a.sample_slot();
+            b.sample_slot();
+        }
+        let remap = [Some(0)];
+        a.rebind(&net, &remap);
+        b.rebind(&net, &remap);
+        assert!(b.batching(), "rebind must re-enable the batched engine");
+        for _ in 0..10 {
             a.sample_slot();
             b.sample_slot();
             for (sa, sb) in a.streams.iter().zip(&b.streams) {

@@ -58,8 +58,10 @@ pub trait TrafficModel: Send {
 
 /// Homogeneous-Poisson arrivals within `[0, dt)` at `rate`, appended to
 /// `out` (exponential gap sampling — the classic thinning-free special
-/// case). Shared by the stationary model and the piecewise-constant MMPP
-/// segments.
+/// case). Shared by the stationary model, the piecewise-constant MMPP
+/// segments, and the SoA batched passes in [`crate::workload::StreamTable`]
+/// — the batched/boxed equivalence guarantee rests on both paths calling
+/// exactly these kernels with each stream's own RNG.
 pub(crate) fn sample_poisson(rate: f64, dt: f64, rng: &mut Rng, out: &mut Vec<f64>, base_t: f64) {
     if rate <= 0.0 || dt <= 0.0 {
         return;
@@ -235,6 +237,19 @@ impl Mmpp {
             remaining: 0.0,
             started: false,
         })
+    }
+
+    /// Raw evolution state `(state, remaining, started)` — the SoA stream
+    /// table ([`crate::workload::StreamTable`]) keeps these as flat columns.
+    pub(crate) fn evolution(&self) -> (usize, f64, bool) {
+        (self.state, self.remaining, self.started)
+    }
+
+    /// Restore evolution state captured by [`Mmpp::evolution`].
+    pub(crate) fn set_evolution(&mut self, state: usize, remaining: f64, started: bool) {
+        self.state = state;
+        self.remaining = remaining;
+        self.started = started;
     }
 
     fn state_rate(&self) -> f64 {

@@ -1,0 +1,404 @@
+//! Structure-of-arrays stream table: the batched sampling engine behind
+//! [`Workload`](super::Workload)'s hot path.
+//!
+//! The boxed [`TrafficModel`] path samples one stream at a time through a
+//! virtual call — fine at hundreds of streams, not at millions. The
+//! [`StreamTable`] flattens the stream set into columns indexed by a stable
+//! stream id (the stream's position in `Workload::streams`): base rates,
+//! per-family shape parameters, MMPP evolution state and per-stream RNG
+//! words all live in flat `Vec`s, and arrivals are drawn in one monomorphic
+//! pass per model family instead of one dynamic dispatch per stream.
+//!
+//! # Equivalence guarantee
+//!
+//! Every stream owns a forked RNG, so sampling order never couples streams;
+//! each family pass calls the *same* kernels ([`models::sample_poisson`],
+//! thinning, midpoint averaging) through the same model arithmetic the boxed
+//! path uses, consuming only that stream's RNG. The batched path is
+//! therefore bit-identical to the reference path by construction — pinned by
+//! the `soa_equiv` property-test suite. The boxed path stays authoritative
+//! for construction, rebinds and trace replay; the table is derived from it
+//! and rebuilt whenever the stream set changes.
+
+use super::models::{Diurnal, Drift, FlashCrowd, Mmpp, TrafficModel, sample_poisson};
+use super::{ModelSpec, Stream};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Model family of one stream row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Poisson,
+    Diurnal,
+    Mmpp,
+    FlashCrowd,
+    Drift,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Poisson => "poisson",
+            Family::Diurnal => "diurnal",
+            Family::Mmpp => "mmpp",
+            Family::FlashCrowd => "flash-crowd",
+            Family::Drift => "drift",
+        }
+    }
+}
+
+/// Flat per-stream columns plus per-family index lists. Parameter columns
+/// are indexed *family-locally* (`fpos[id]` maps a stream id to its slot in
+/// its family's columns); the `rng`/`base`/`last_rate` columns are indexed
+/// by stream id directly.
+pub struct StreamTable {
+    /// stream id -> model family.
+    family: Vec<Family>,
+    /// stream id -> position within its family's parameter columns.
+    fpos: Vec<u32>,
+    /// Base rate column (immutable while the table is active — base-rate
+    /// changes go through the boxed path, which rebuilds the table).
+    base: Vec<f64>,
+    /// Per-stream RNG words — authoritative while the table is active; the
+    /// boxed streams' RNGs are synced back on demand.
+    rng: Vec<Rng>,
+    /// Time-averaged true rate over the most recently sampled slot.
+    last_rate: Vec<f64>,
+    // family index lists: stream ids in ascending order
+    poisson: Vec<u32>,
+    diurnal: Vec<u32>,
+    mmpp: Vec<u32>,
+    flash: Vec<u32>,
+    drift: Vec<u32>,
+    // diurnal shape columns
+    d_amplitude: Vec<f64>,
+    d_period: Vec<f64>,
+    d_phase: Vec<f64>,
+    // MMPP shape + evolution columns
+    m_gain: Vec<f64>,
+    m_dwell_base: Vec<f64>,
+    m_dwell_burst: Vec<f64>,
+    m_state: Vec<usize>,
+    m_remaining: Vec<f64>,
+    m_started: Vec<bool>,
+    // flash-crowd shape columns
+    f_peak: Vec<f64>,
+    f_start: Vec<f64>,
+    f_ramp: Vec<f64>,
+    f_hold: Vec<f64>,
+    f_decay: Vec<f64>,
+    // drift shape column
+    dr_slope: Vec<f64>,
+}
+
+impl StreamTable {
+    fn empty(n: usize) -> StreamTable {
+        StreamTable {
+            family: Vec::with_capacity(n),
+            fpos: Vec::with_capacity(n),
+            base: Vec::with_capacity(n),
+            rng: Vec::with_capacity(n),
+            last_rate: Vec::with_capacity(n),
+            poisson: Vec::new(),
+            diurnal: Vec::new(),
+            mmpp: Vec::new(),
+            flash: Vec::new(),
+            drift: Vec::new(),
+            d_amplitude: Vec::new(),
+            d_period: Vec::new(),
+            d_phase: Vec::new(),
+            m_gain: Vec::new(),
+            m_dwell_base: Vec::new(),
+            m_dwell_burst: Vec::new(),
+            m_state: Vec::new(),
+            m_remaining: Vec::new(),
+            m_started: Vec::new(),
+            f_peak: Vec::new(),
+            f_start: Vec::new(),
+            f_ramp: Vec::new(),
+            f_hold: Vec::new(),
+            f_decay: Vec::new(),
+            dr_slope: Vec::new(),
+        }
+    }
+
+    /// Build the table from boxed streams, capturing shape parameters,
+    /// evolution state and RNG words through the checkpoint contract
+    /// (`spec_json`/`state_json`). Returns `None` when any stream is
+    /// table-ineligible (trace replay holds external history and stays on
+    /// the boxed path).
+    pub(crate) fn from_streams(streams: &[Stream]) -> Option<StreamTable> {
+        let mut t = StreamTable::empty(streams.len());
+        for (i, s) in streams.iter().enumerate() {
+            let spec = ModelSpec::from_json(&s.model.spec_json()?).ok()?;
+            t.base.push(s.model.base_rate());
+            t.rng.push(s.rng.clone());
+            t.last_rate.push(s.last_rate);
+            let id = i as u32;
+            match spec {
+                ModelSpec::Poisson => {
+                    t.family.push(Family::Poisson);
+                    t.fpos.push(t.poisson.len() as u32);
+                    t.poisson.push(id);
+                }
+                ModelSpec::Diurnal {
+                    period,
+                    amplitude,
+                    phase,
+                } => {
+                    t.family.push(Family::Diurnal);
+                    t.fpos.push(t.diurnal.len() as u32);
+                    t.diurnal.push(id);
+                    t.d_amplitude.push(amplitude);
+                    t.d_period.push(period);
+                    t.d_phase.push(phase);
+                }
+                ModelSpec::Mmpp {
+                    gain,
+                    dwell_base,
+                    dwell_burst,
+                } => {
+                    t.family.push(Family::Mmpp);
+                    t.fpos.push(t.mmpp.len() as u32);
+                    t.mmpp.push(id);
+                    t.m_gain.push(gain);
+                    t.m_dwell_base.push(dwell_base);
+                    t.m_dwell_burst.push(dwell_burst);
+                    let st = s.model.state_json();
+                    t.m_state
+                        .push(st.get("state").and_then(Json::as_usize).unwrap_or(0));
+                    t.m_remaining
+                        .push(st.get("remaining").and_then(Json::as_f64).unwrap_or(0.0));
+                    t.m_started
+                        .push(st.get("started").and_then(Json::as_bool).unwrap_or(false));
+                }
+                ModelSpec::FlashCrowd {
+                    peak,
+                    start,
+                    ramp,
+                    hold,
+                    decay,
+                } => {
+                    t.family.push(Family::FlashCrowd);
+                    t.fpos.push(t.flash.len() as u32);
+                    t.flash.push(id);
+                    t.f_peak.push(peak);
+                    t.f_start.push(start);
+                    t.f_ramp.push(ramp);
+                    t.f_hold.push(hold);
+                    t.f_decay.push(decay);
+                }
+                ModelSpec::Drift { slope } => {
+                    t.family.push(Family::Drift);
+                    t.fpos.push(t.drift.len() as u32);
+                    t.drift.push(id);
+                    t.dr_slope.push(slope);
+                }
+                ModelSpec::Trace { .. } => return None,
+            }
+        }
+        Some(t)
+    }
+
+    /// Streams in the table.
+    pub fn len(&self) -> usize {
+        self.family.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.family.is_empty()
+    }
+
+    /// `(family, streams)` histogram — one entry per family, fixed order.
+    pub fn family_sizes(&self) -> [(&'static str, usize); 5] {
+        [
+            ("poisson", self.poisson.len()),
+            ("diurnal", self.diurnal.len()),
+            ("mmpp", self.mmpp.len()),
+            ("flash-crowd", self.flash.len()),
+            ("drift", self.drift.len()),
+        ]
+    }
+
+    /// Latest per-stream true rates (post-sample), indexed by stream id.
+    pub fn last_rates(&self) -> &[f64] {
+        &self.last_rate
+    }
+
+    /// Sample one slot with one pass per model family, writing each
+    /// stream's arrival offsets and true rate back into the boxed streams
+    /// (the trace recorder and the serving loop read them there). Returns
+    /// the total arrival count. Each stream consumes only its own RNG, so
+    /// the result is bit-identical to the boxed per-stream path regardless
+    /// of pass order.
+    pub(crate) fn sample_slot_into(&mut self, t0: f64, dt: f64, streams: &mut [Stream]) -> usize {
+        debug_assert_eq!(streams.len(), self.len(), "table out of sync with streams");
+        let mut total = 0usize;
+        for &sid in &self.poisson {
+            let i = sid as usize;
+            let s = &mut streams[i];
+            s.last_offsets.clear();
+            // same kernel + same per-stream RNG as Poisson::sample_slot
+            sample_poisson(self.base[i], dt, &mut self.rng[i], &mut s.last_offsets, 0.0);
+            let r = self.base[i];
+            self.last_rate[i] = r;
+            s.last_rate = r;
+            total += s.last_offsets.len();
+        }
+        for (k, &sid) in self.diurnal.iter().enumerate() {
+            let i = sid as usize;
+            let s = &mut streams[i];
+            s.last_offsets.clear();
+            let mut m =
+                Diurnal::new(self.base[i], self.d_amplitude[k], self.d_period[k], self.d_phase[k])
+                    .expect("diurnal columns hold validated parameters");
+            let r = m.sample_slot(t0, dt, &mut self.rng[i], &mut s.last_offsets);
+            self.last_rate[i] = r;
+            s.last_rate = r;
+            total += s.last_offsets.len();
+        }
+        for (k, &sid) in self.mmpp.iter().enumerate() {
+            let i = sid as usize;
+            let s = &mut streams[i];
+            s.last_offsets.clear();
+            let mut m = Mmpp::new(
+                self.base[i],
+                self.m_gain[k],
+                self.m_dwell_base[k],
+                self.m_dwell_burst[k],
+            )
+            .expect("mmpp columns hold validated parameters");
+            m.set_evolution(self.m_state[k], self.m_remaining[k], self.m_started[k]);
+            let r = m.sample_slot(t0, dt, &mut self.rng[i], &mut s.last_offsets);
+            let (state, remaining, started) = m.evolution();
+            self.m_state[k] = state;
+            self.m_remaining[k] = remaining;
+            self.m_started[k] = started;
+            self.last_rate[i] = r;
+            s.last_rate = r;
+            total += s.last_offsets.len();
+        }
+        for (k, &sid) in self.flash.iter().enumerate() {
+            let i = sid as usize;
+            let s = &mut streams[i];
+            s.last_offsets.clear();
+            let mut m = FlashCrowd::new(
+                self.base[i],
+                self.f_peak[k],
+                self.f_start[k],
+                self.f_ramp[k],
+                self.f_hold[k],
+                self.f_decay[k],
+            )
+            .expect("flash-crowd columns hold validated parameters");
+            let r = m.sample_slot(t0, dt, &mut self.rng[i], &mut s.last_offsets);
+            self.last_rate[i] = r;
+            s.last_rate = r;
+            total += s.last_offsets.len();
+        }
+        for (k, &sid) in self.drift.iter().enumerate() {
+            let i = sid as usize;
+            let s = &mut streams[i];
+            s.last_offsets.clear();
+            let mut m = Drift::new(self.base[i], self.dr_slope[k]);
+            let r = m.sample_slot(t0, dt, &mut self.rng[i], &mut s.last_offsets);
+            self.last_rate[i] = r;
+            s.last_rate = r;
+            total += s.last_offsets.len();
+        }
+        total
+    }
+
+    /// RNG words for stream `i` (the checkpoint format's `rng` field).
+    pub(crate) fn rng_words(&self, i: usize) -> [u64; 4] {
+        self.rng[i].state()
+    }
+
+    /// Evolution state for stream `i`, shaped exactly like the boxed
+    /// model's `state_json` (`Json::Null` for stateless families).
+    pub(crate) fn model_state_json(&self, i: usize) -> Json {
+        if self.family[i] == Family::Mmpp {
+            let k = self.fpos[i] as usize;
+            Json::obj(vec![
+                ("state", Json::Num(self.m_state[k] as f64)),
+                ("remaining", Json::Num(self.m_remaining[k])),
+                ("started", Json::Bool(self.m_started[k])),
+            ])
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Write the table's live RNG and evolution state back into the boxed
+    /// streams, consuming the table. Called before any boxed-path mutation
+    /// (rebind, base-rate change, spawn) so the reference path resumes
+    /// exactly where the batched path left off.
+    pub(crate) fn sync_streams(self, streams: &mut [Stream]) {
+        debug_assert_eq!(streams.len(), self.len(), "table out of sync with streams");
+        for (i, s) in streams.iter_mut().enumerate() {
+            s.rng = self.rng[i].clone();
+            let st = self.model_state_json(i);
+            if !matches!(st, Json::Null) {
+                s.model
+                    .load_state(&st)
+                    .expect("table evolution state matches the model family");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::testutil::small_net;
+    use crate::workload::{ModelSpec, StreamOverride, Workload, WorkloadSpec};
+
+    fn mixed_spec() -> WorkloadSpec {
+        let mut spec = WorkloadSpec::named("diurnal").unwrap();
+        spec.overrides.push(StreamOverride {
+            app: 0,
+            node: 3,
+            model: ModelSpec::named("mmpp").unwrap(),
+        });
+        spec
+    }
+
+    #[test]
+    fn batched_sampling_is_bit_identical_to_boxed() {
+        let net = small_net(true);
+        let spec = mixed_spec();
+        let mut boxed = Workload::from_spec(&spec, &net, 1.0, 41).unwrap();
+        let mut batched = Workload::from_spec(&spec, &net, 1.0, 41).unwrap();
+        assert!(batched.enable_batching());
+        for slot in 0..60 {
+            let a = boxed.sample_slot();
+            let b = batched.sample_slot();
+            assert_eq!(a, b, "slot {slot} arrival total");
+            for (sa, sb) in boxed.streams.iter().zip(&batched.streams) {
+                assert_eq!(sa.last_offsets, sb.last_offsets, "slot {slot}");
+                assert_eq!(sa.last_rate.to_bits(), sb.last_rate.to_bits(), "slot {slot}");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_streams_refuse_batching() {
+        let net = small_net(true);
+        let mut wl = Workload::stationary(&net, 1.0, 5);
+        let trace = crate::workload::Trace::record(&mut Workload::stationary(&net, 1.0, 5), 3, None);
+        let mut replay = trace.workload();
+        assert!(wl.enable_batching(), "plain poisson must be batchable");
+        assert!(!replay.enable_batching(), "trace replay must stay boxed");
+        assert!(!replay.batching());
+    }
+
+    #[test]
+    fn family_sizes_partition_the_streams() {
+        let net = small_net(true);
+        let mut wl = Workload::from_spec(&mixed_spec(), &net, 1.0, 3).unwrap();
+        assert!(wl.enable_batching());
+        let t = wl.stream_table().expect("batched");
+        let total: usize = t.family_sizes().iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, t.len());
+        assert_eq!(t.len(), wl.streams.len());
+    }
+}

@@ -22,7 +22,7 @@ use scfo::scenarios::{runner, DistributedSpec};
 use scfo::util::json::Json;
 
 /// Keys whose values are wall-clock / environment dependent.
-const VOLATILE_KEYS: [&str; 10] = [
+const VOLATILE_KEYS: [&str; 13] = [
     "solve_secs",
     "cache_hit",
     "build_secs",
@@ -33,6 +33,9 @@ const VOLATILE_KEYS: [&str; 10] = [
     "admission_latency_secs_mean",
     "admission_latency_secs_p95",
     "rebind_secs_mean",
+    "slot_wall_ms_mean",
+    "slot_wall_ms_max",
+    "streams_per_sec",
 ];
 
 const REL_TOL: f64 = 1e-9;
@@ -237,6 +240,19 @@ fn golden_topo_churn_tier_er_20_40() {
     spec.topo_churn = Some(scfo::topo::TopoChurnSpec::default_schedule(60));
     let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
     check_golden("topo-churn-er-20-40", &rep.to_json());
+}
+
+/// Massive tier: a sized-down stream table (same er-1000-4000 family and
+/// batched SoA hot loop as the million-stream run) pinning stream count,
+/// arrivals, detections and offered load; the slot wall-time and
+/// streams/sec columns are volatile and skipped.
+#[test]
+fn golden_massive_tier_er_1000_4000() {
+    let spec = ScenarioSpec::massive_matrix_sized(8, 100, 15)
+        .pop()
+        .expect("massive matrix has one spec");
+    let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
+    check_golden("massive-er-1000-4000", &rep.to_json());
 }
 
 // ---- comparator self-tests ------------------------------------------------

@@ -1,0 +1,273 @@
+//! Sampling-equivalence test layer for the SoA batched workload engine.
+//!
+//! The `massive` tier's throughput rests on one invariant: the batched
+//! structure-of-arrays sampler is *bit-identical* to the boxed
+//! `TrafficModel` reference path — same arrival offsets, same true rates,
+//! same RNG consumption — for every model family, any seed, and across
+//! epoch rebinds that grow or shrink the stream set. This suite pins that
+//! invariant three ways:
+//!
+//! 1. a shrinking property test (`util::prop`) over (family, seed) pairs
+//!    that reports a minimal (model, seed, slot) counterexample on failure,
+//! 2. trace record → replay fidelity: traces recorded from the batched
+//!    path round-trip through JSON and CSV files and replay byte-identical
+//!    serving results through `OnlineServer`,
+//! 3. a massive-scale (10k-stream) checkpoint/restore smoke with f64 bit
+//!    equality over 30 post-restore slots.
+//!
+//! The `equiv_digest_is_stable` case prints one
+//! `equiv-digest <family> <arrival-bits> arrivals=<n>` line per model
+//! family under `SCFO_EQUIV_SEED`; the CI `chaos-and-golden` job runs the
+//! suite twice per seed and fails on any run-to-run diff (the flakiness
+//! gate — see docs/TESTING.md).
+
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::app::{Network, StageRegistry};
+use scfo::config::Scenario;
+use scfo::scenarios::ScenarioSpec;
+use scfo::serving::{OnlineServer, ServerOptions};
+use scfo::util::json::Json;
+use scfo::util::prop::{forall_cases, PropResult};
+use scfo::util::rng::Rng;
+use scfo::workload::{Trace, Workload, WorkloadSpec};
+
+/// Every batchable model family, in `ModelSpec::named` preset form.
+const FAMILIES: [&str; 5] = ["poisson", "diurnal", "mmpp", "flash-crowd", "drift"];
+
+fn equiv_seed() -> u64 {
+    std::env::var("SCFO_EQUIV_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7)
+}
+
+fn test_net() -> Network {
+    let sc = Scenario::table2("abilene").unwrap();
+    let mut rng = Rng::new(sc.seed);
+    sc.build(&mut rng).unwrap()
+}
+
+/// A two-app variant of `net`: the original app survives (as app 1) and a
+/// new app with a single source at node 5 is prepended — the "grow" side
+/// of a control-plane rebind. Shrinking back maps `[None, Some(0)]`.
+fn grown_net(net: &Network) -> Network {
+    let mut apps = net.apps.clone();
+    let mut extra = net.apps[0].clone();
+    extra.input_rates.iter_mut().for_each(|r| *r = 0.0);
+    extra.input_rates[5] = 0.7;
+    apps.insert(0, extra);
+    let stages = StageRegistry::new(&apps);
+    let cw = vec![vec![1.0; net.n()]; stages.len()];
+    Network::new(
+        net.graph.clone(),
+        apps,
+        net.link_cost.clone(),
+        net.comp_cost.clone(),
+        cw,
+    )
+    .unwrap()
+}
+
+/// Sample one slot on both engines and demand bit equality of arrival
+/// totals, per-stream offsets and true rates.
+fn compare_slot(
+    boxed: &mut Workload,
+    batched: &mut Workload,
+    slot: usize,
+    phase: &str,
+) -> Result<(), String> {
+    let a = boxed.sample_slot();
+    let b = batched.sample_slot();
+    if a != b {
+        return Err(format!("arrival totals {a} vs {b} at slot {slot} ({phase})"));
+    }
+    for (i, (sa, sb)) in boxed.streams.iter().zip(&batched.streams).enumerate() {
+        let same_offsets = sa.last_offsets.len() == sb.last_offsets.len()
+            && sa
+                .last_offsets
+                .iter()
+                .zip(&sb.last_offsets)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+        if !same_offsets {
+            return Err(format!("stream {i} offsets diverge at slot {slot} ({phase})"));
+        }
+        if sa.last_rate.to_bits() != sb.last_rate.to_bits() {
+            return Err(format!(
+                "stream {i} rate {} vs {} at slot {slot} ({phase})",
+                sa.last_rate, sb.last_rate
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The central property: for every (family, seed), the batched engine is
+/// bit-identical to the boxed reference over base serving, a grow rebind
+/// and a shrink rebind. Failures shrink toward the minimal (model, seed)
+/// pair; the message pins the first diverging slot and phase.
+#[test]
+fn batched_sampler_is_bit_identical_to_boxed_across_rebinds() {
+    let net = test_net();
+    let net2 = grown_net(&net);
+    forall_cases(
+        "soa batched == boxed",
+        25,
+        |g| (g.usize_in(0, FAMILIES.len() - 1), g.rng().next_u64()),
+        |&(model, seed)| {
+            let Some(&family) = FAMILIES.get(model) else {
+                return PropResult::Discard;
+            };
+            let spec = WorkloadSpec::named(family).unwrap();
+            let fail = |msg: String| PropResult::Fail(format!("family {family} seed {seed}: {msg}"));
+            let mut boxed = Workload::from_spec(&spec, &net, 1.0, seed).unwrap();
+            let mut batched = Workload::from_spec(&spec, &net, 1.0, seed).unwrap();
+            if !batched.enable_batching() {
+                return fail("family must be batchable".into());
+            }
+            for slot in 0..12 {
+                if let Err(e) = compare_slot(&mut boxed, &mut batched, slot, "base") {
+                    return fail(e);
+                }
+            }
+            // grow: old app 0 survives as app 1, node-5 stream spawns
+            boxed.rebind(&net2, &[Some(1)]);
+            batched.rebind(&net2, &[Some(1)]);
+            if !batched.batching() {
+                return fail("grow rebind must re-enable batching".into());
+            }
+            for slot in 12..20 {
+                if let Err(e) = compare_slot(&mut boxed, &mut batched, slot, "grown") {
+                    return fail(e);
+                }
+            }
+            // shrink: drop the spawned app, survivor renumbers back to 0
+            boxed.rebind(&net, &[None, Some(0)]);
+            batched.rebind(&net, &[None, Some(0)]);
+            if !batched.batching() {
+                return fail("shrink rebind must re-enable batching".into());
+            }
+            for slot in 20..28 {
+                if let Err(e) = compare_slot(&mut boxed, &mut batched, slot, "shrunk") {
+                    return fail(e);
+                }
+            }
+            PropResult::Pass
+        },
+    );
+}
+
+/// Traces recorded *from the batched engine* replay byte-identical serving
+/// results — through both on-disk formats. The replay workload itself
+/// stays boxed (trace history is external), so this also pins the
+/// batched-record → boxed-replay seam.
+#[test]
+fn batched_traces_replay_byte_identically_in_both_formats() {
+    let net = test_net();
+    let wspec = WorkloadSpec::named("mmpp").unwrap();
+    let serve = |wl: Workload| -> Vec<u64> {
+        let gp = GradientProjection::new(&net, GpOptions::default());
+        let mut srv = OnlineServer::with_workload(net.clone(), gp, wl, ServerOptions::default());
+        srv.run(40).unwrap().iter().map(|m| m.cost.to_bits()).collect()
+    };
+    let mut live_wl = Workload::from_spec(&wspec, &net, 1.0, 29).unwrap();
+    assert!(live_wl.enable_batching());
+    let live = serve(live_wl);
+
+    let mut rec = Workload::from_spec(&wspec, &net, 1.0, 29).unwrap();
+    assert!(rec.enable_batching());
+    let trace = Trace::record(&mut rec, 40, None);
+    assert!(!trace.workload().batching(), "trace replay stays boxed");
+
+    let dir = std::env::temp_dir().join(format!("scfo-soa-equiv-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in ["t.json", "t.csv"] {
+        let path = dir.join(name);
+        trace.save(&path).unwrap();
+        let re = Trace::load(&path).unwrap();
+        assert_eq!(trace, re, "{name} round trip must be lossless");
+        let replayed = serve(re.workload());
+        assert_eq!(
+            live, replayed,
+            "{name}: trace-driven serving must be byte-identical to the batched live model"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Massive-scale smoke: a 10,000-stream batched workload on the massive
+/// tier's er-1000-4000 family round-trips checkpoint/restore, and the
+/// restored engine tracks the original with f64 bit equality for 30
+/// post-restore slots.
+#[test]
+fn massive_scale_checkpoint_restore_is_bit_exact() {
+    let spec = ScenarioSpec::massive_matrix_sized(10, 1000, 20)
+        .pop()
+        .expect("massive matrix has one spec");
+    let wspec = spec.workload.as_ref().expect("massive spec carries a workload");
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    let net = sc.build(&mut rng).unwrap();
+    let mut a = Workload::from_spec(wspec, &net, 1.0, sc.seed).unwrap();
+    assert_eq!(a.streams.len(), 10_000, "10 apps x 1000 sources");
+    assert!(a.enable_batching());
+    for _ in 0..20 {
+        a.sample_slot();
+    }
+    // serialize through text, as a checkpoint file would
+    let snap = Json::parse(&a.state_json().unwrap().to_string_pretty()).unwrap();
+    let mut b = Workload::from_state_json(&snap).unwrap();
+    assert!(b.batching(), "restore must re-enable the batched engine");
+    assert_eq!(b.slot(), a.slot(), "slot cursor must survive the checkpoint");
+    for slot in 0..30 {
+        let ta = a.sample_slot();
+        let tb = b.sample_slot();
+        assert_eq!(ta, tb, "post-restore slot {slot} arrival total");
+        for (i, (sa, sb)) in a.streams.iter().zip(&b.streams).enumerate() {
+            assert_eq!(
+                sa.last_offsets.len(),
+                sb.last_offsets.len(),
+                "post-restore slot {slot} stream {i}"
+            );
+            assert!(
+                sa.last_offsets
+                    .iter()
+                    .zip(&sb.last_offsets)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "post-restore slot {slot} stream {i} offsets"
+            );
+            assert_eq!(
+                sa.last_rate.to_bits(),
+                sb.last_rate.to_bits(),
+                "post-restore slot {slot} stream {i} rate"
+            );
+        }
+    }
+}
+
+/// One `equiv-digest` line per model family: an FNV-1a fold over every
+/// arrival-offset and true-rate bit pattern from 40 batched slots. The CI
+/// flakiness gate replays this under several `SCFO_EQUIV_SEED` values,
+/// twice each, and diffs the output.
+#[test]
+fn equiv_digest_is_stable() {
+    let seed = equiv_seed();
+    let net = test_net();
+    for family in FAMILIES {
+        let spec = WorkloadSpec::named(family).unwrap();
+        let mut wl = Workload::from_spec(&spec, &net, 1.0, seed).unwrap();
+        assert!(wl.enable_batching(), "{family} must be batchable");
+        let mut acc: u64 = 0xcbf29ce484222325;
+        let mut fold = |bits: u64| acc = (acc ^ bits).wrapping_mul(0x100000001b3);
+        let mut arrivals = 0usize;
+        for _ in 0..40 {
+            arrivals += wl.sample_slot();
+            for s in &wl.streams {
+                for x in &s.last_offsets {
+                    fold(x.to_bits());
+                }
+                fold(s.last_rate.to_bits());
+            }
+        }
+        println!("equiv-digest {family} {acc:016x} arrivals={arrivals}");
+    }
+}
