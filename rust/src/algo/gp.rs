@@ -365,6 +365,9 @@ pub struct GradientProjection {
     pub opts: GpOptions,
     support: SupportMask,
     ws: Workspace,
+    /// Lifetime iteration count; exported as the `gp_iter` virtual
+    /// coordinate on trace spans ([`crate::obs`]).
+    iters_done: u64,
 }
 
 /// Build the eq. (9) update for stepsize `alpha` into `cand` (which must
@@ -454,6 +457,7 @@ impl GradientProjection {
             opts,
             support,
             ws: Workspace::new(net),
+            iters_done: 0,
         }
     }
 
@@ -476,27 +480,45 @@ impl GradientProjection {
         // a caller-supplied support mask is shaped for the old arena and
         // stage set; it cannot survive an epoch rebuild
         opts.support = None;
+        let iters = self.iters_done;
         *self = GradientProjection::with_strategy(net, phi.clone(), opts);
+        // the gp_iter trace coordinate stays continuous across epoch rebinds
+        self.iters_done = iters;
     }
 
     /// One GP slot: returns the iteration diagnostics. The accepted iterate
     /// is guaranteed feasible and loop-free. Allocation-free after
     /// construction (all buffers live in the [`Workspace`]).
     pub fn step(&mut self, net: &Network) -> IterStats {
-        FlowState::solve_into(net, &self.phi, &mut self.ws.fs, &mut self.ws.topo)
-            .expect("loop-free invariant");
-        Marginals::compute_into(net, &self.phi, &self.ws.fs, &mut self.ws.mg, &mut self.ws.topo);
-        BlockedSets::compute_into(
-            net,
-            &self.phi,
-            &self.ws.mg,
-            &mut self.ws.blocked,
-            &mut self.ws.dirty,
-            &mut self.ws.topo,
-        );
+        self.iters_done += 1;
+        crate::obs::set_gp_iter(self.iters_done);
+        let _step_span = crate::obs_span!("gp", "step");
+        {
+            let _span = crate::obs_span!("gp", "flow-solve");
+            FlowState::solve_into(net, &self.phi, &mut self.ws.fs, &mut self.ws.topo)
+                .expect("loop-free invariant");
+        }
+        {
+            // eq. (4)-(7) marginal-cost recursion
+            let _span = crate::obs_span!("gp", "marginals");
+            Marginals::compute_into(net, &self.phi, &self.ws.fs, &mut self.ws.mg, &mut self.ws.topo);
+        }
+        {
+            let _span = crate::obs_span!("gp", "blocked-sets");
+            BlockedSets::compute_into(
+                net,
+                &self.phi,
+                &self.ws.mg,
+                &mut self.ws.blocked,
+                &mut self.ws.dirty,
+                &mut self.ws.topo,
+            );
+        }
         let base_cost = self.ws.fs.total_cost;
         let residual = self.ws.mg.condition6_residual(net, &self.phi);
 
+        // eq. (8)-(10) projected update + backtracking line search
+        let _proj_span = crate::obs_span!("gp", "projection");
         let mut alpha = self.opts.alpha;
         let mut backtracks = 0;
         loop {

@@ -201,7 +201,7 @@ pub struct TopoChurnBench {
 /// Million-stream workload hot-path measurements attached to a
 /// [`GpBenchResult`] when the bench drives the batched (structure-of-arrays)
 /// serving loop with no optimizer (`scfo bench --json --massive`). These are
-/// the BENCH.json v6 columns: stream count, per-slot wall time, and sampling
+/// the BENCH.json v6/v7 columns: stream count, per-slot wall time, sampling
 /// throughput. `streams`, `arrivals_total`, `detections` and `offered_load`
 /// are bit-deterministic for a given spec; the wall-time columns are not.
 #[derive(Clone, Debug)]
@@ -223,6 +223,13 @@ pub struct MassiveBench {
     pub slot_wall_ms_max: f64,
     /// Streams processed per wall-clock second at the mean slot time.
     pub streams_per_sec: f64,
+    /// v7 per-phase slot wall-time breakdown (mean milliseconds):
+    /// SoA family sampling passes …
+    pub phase_sample_ms_mean: f64,
+    /// … the estimator column scan …
+    pub phase_estimate_ms_mean: f64,
+    /// … and the change-point detector scan.
+    pub phase_detect_ms_mean: f64,
 }
 
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
@@ -724,8 +731,8 @@ pub fn bench_topo_churn_scenario(family: &str, slots: usize) -> anyhow::Result<G
 /// no optimizer attached. `iter_secs` records the wall time per served
 /// slot; `cost_trajectory` is empty (nothing is optimized, so `final_cost`
 /// serializes as `null`). The result's `massive` block carries the
-/// BENCH.json v6 columns: `streams`, `slot_wall_ms_mean`/`_max`,
-/// `streams_per_sec`.
+/// BENCH.json v6 columns (`streams`, `slot_wall_ms_mean`/`_max`,
+/// `streams_per_sec`) plus the v7 per-phase breakdown.
 ///
 /// [`StreamEstimator`]: crate::serving::StreamEstimator
 pub fn bench_massive_scenario(
@@ -762,15 +769,32 @@ pub fn bench_massive_scenario(
     let mut ctrl = AdaptationController::new(ControllerOptions::default());
     let mut arrivals_total = 0usize;
     let mut iter_secs = Vec::with_capacity(slots);
-    for _ in 0..slots {
+    let mut sample_secs = Vec::with_capacity(slots);
+    let mut estimate_secs = Vec::with_capacity(slots);
+    let mut detect_secs = Vec::with_capacity(slots);
+    for slot in 0..slots {
+        crate::obs::set_slot(slot as u64 + 1);
+        let _slot_span = crate::obs_span!("bench", "massive-slot");
         let t = Instant::now();
         arrivals_total += workload.sample_slot();
+        sample_secs.push(t.elapsed().as_secs_f64());
+        let t_est = Instant::now();
+        let span = crate::obs_span!("bench", "estimate");
         let (obs, fast) = est.update(&workload);
+        drop(span);
+        estimate_secs.push(t_est.elapsed().as_secs_f64());
+        let t_det = Instant::now();
+        let span = crate::obs_span!("bench", "detect");
         let _ = ctrl.observe(obs, fast);
+        drop(span);
+        detect_secs.push(t_det.elapsed().as_secs_f64());
         iter_secs.push(t.elapsed().as_secs_f64());
     }
     let detections = ctrl.events().len();
     let offered_load = workload.total_true_rate();
+    let phase_sample_ms_mean = stats::mean(&sample_secs) * 1e3;
+    let phase_estimate_ms_mean = stats::mean(&estimate_secs) * 1e3;
+    let phase_detect_ms_mean = stats::mean(&detect_secs) * 1e3;
     let slot_wall_ms_mean = stats::mean(&iter_secs) * 1e3;
     let slot_wall_ms_max = iter_secs.iter().cloned().fold(0.0, f64::max) * 1e3;
     let streams_per_sec = if slot_wall_ms_mean > 0.0 {
@@ -802,6 +826,9 @@ pub fn bench_massive_scenario(
             slot_wall_ms_mean,
             slot_wall_ms_max,
             streams_per_sec,
+            phase_sample_ms_mean,
+            phase_estimate_ms_mean,
+            phase_detect_ms_mean,
         }),
     })
 }
@@ -952,6 +979,18 @@ impl GpBenchResult {
                 );
                 o.insert("slot_wall_ms_max".into(), Json::Num(ms.slot_wall_ms_max));
                 o.insert("streams_per_sec".into(), Json::Num(ms.streams_per_sec));
+                o.insert(
+                    "phase_sample_ms_mean".into(),
+                    Json::Num(ms.phase_sample_ms_mean),
+                );
+                o.insert(
+                    "phase_estimate_ms_mean".into(),
+                    Json::Num(ms.phase_estimate_ms_mean),
+                );
+                o.insert(
+                    "phase_detect_ms_mean".into(),
+                    Json::Num(ms.phase_detect_ms_mean),
+                );
             }
         }
         if let Some(dyn_) = &self.dynamics {
@@ -991,8 +1030,10 @@ impl GpBenchResult {
 /// `reconverge_iters_warm_mean`/`_cold_mean`, `retained_optimality_mean`);
 /// 6 added the optional million-stream workload columns (`streams`,
 /// `arrivals_total`, `detections`, `offered_load`, `slot_wall_ms_mean`,
-/// `slot_wall_ms_max`, `streams_per_sec`).
-pub const BENCH_JSON_VERSION: f64 = 6.0;
+/// `slot_wall_ms_max`, `streams_per_sec`); 7 added the massive tier's
+/// per-phase slot wall-time breakdown (`phase_sample_ms_mean`,
+/// `phase_estimate_ms_mean`, `phase_detect_ms_mean`).
+pub const BENCH_JSON_VERSION: f64 = 7.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
@@ -1189,7 +1230,7 @@ mod tests {
         );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(6.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(7.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "topo_events",
@@ -1212,7 +1253,7 @@ mod tests {
     }
 
     #[test]
-    fn massive_bench_emits_v6_columns() {
+    fn massive_bench_emits_v7_columns() {
         // sized down: same tier shape (er-1000-4000, MMPP, batched SoA hot
         // loop, no optimizer), far fewer streams so the test stays fast
         let res = bench_massive_scenario(4, 50, 10).unwrap();
@@ -1226,9 +1267,17 @@ mod tests {
         assert!(ms.slot_wall_ms_mean > 0.0);
         assert!(ms.slot_wall_ms_max >= ms.slot_wall_ms_mean);
         assert!(ms.streams_per_sec > 0.0);
+        // the v7 phase breakdown sums to no more than the full slot time
+        assert!(ms.phase_sample_ms_mean >= 0.0);
+        assert!(ms.phase_estimate_ms_mean >= 0.0);
+        assert!(ms.phase_detect_ms_mean >= 0.0);
+        assert!(
+            ms.phase_sample_ms_mean + ms.phase_estimate_ms_mean + ms.phase_detect_ms_mean
+                <= ms.slot_wall_ms_mean * 1.0001 + 1e-9
+        );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(6.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(7.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "streams",
@@ -1238,8 +1287,11 @@ mod tests {
             "slot_wall_ms_mean",
             "slot_wall_ms_max",
             "streams_per_sec",
+            "phase_sample_ms_mean",
+            "phase_estimate_ms_mean",
+            "phase_detect_ms_mean",
         ] {
-            assert!(sc.get(key).is_some(), "missing v6 column {key}");
+            assert!(sc.get(key).is_some(), "missing v7 column {key}");
         }
         assert_eq!(sc.get("streams").unwrap().as_usize(), Some(200));
         // no optimizer ran: final_cost degrades to null, not a number

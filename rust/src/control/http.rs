@@ -12,6 +12,7 @@
 //! | `GET /healthz`     | liveness: `{"ok":true,"epoch":E,"slot":S}`          |
 //! | `GET /status`      | epoch, fleet, cost, per-link/CPU utilization        |
 //! | `GET /metrics`     | Prometheus text format ([`crate::metrics`])         |
+//! | `GET /profile`     | flight-recorder snapshot as Chrome trace JSON       |
 //! | `POST /apps`       | register (or update, if the id exists) an app spec; |
 //! |                    | admission-checked — 200 accept / 409 reject         |
 //! | `DELETE /apps/{id}`| drain an active app; a draining app is removed      |
@@ -197,6 +198,13 @@ fn route(
         ),
         ("GET", "/status") => json(200, plane.status_json()),
         ("GET", "/metrics") => (200, "text/plain; version=0.0.4", plane.metrics_text()),
+        // flight-recorder snapshot as Chrome trace-event JSON; an empty
+        // array while tracing is disabled (still a valid trace document)
+        ("GET", "/profile") => (
+            200,
+            "application/json",
+            crate::obs::chrome_trace_json().to_string_pretty(),
+        ),
         ("POST", "/apps") => {
             let spec = match Json::parse(&req.body)
                 .map_err(|e| anyhow::anyhow!("{e}"))

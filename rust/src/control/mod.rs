@@ -66,9 +66,12 @@ use crate::app::Network;
 use crate::config::Scenario;
 use crate::flow::FlowState;
 use crate::graph::{topologies, Graph};
-use crate::metrics::{prometheus_line, Histogram, Registry};
+use crate::metrics::{
+    prometheus_histogram_family, prometheus_line, Histogram, PromHistogram, Registry,
+};
 use crate::serving::{
     AdaptationController, ControllerOptions, OnlineServer, Optimizer, ServerOptions, SlotMetrics,
+    SLOT_PHASES,
 };
 use crate::strategy::Strategy;
 use crate::topo::{TopoAction, TopologyState};
@@ -111,14 +114,31 @@ impl Default for ControlOptions {
 /// Operational counters exposed by `/metrics`.
 #[derive(Debug)]
 pub struct ControlStats {
-    /// Wall-clock seconds per admission evaluation (probe included).
+    /// Wall-clock seconds per admission evaluation (probe included):
+    /// recency-window reservoir for BENCH columns and the checkpoint.
     pub admission_latency: Histogram,
     pub admission_accepted: u64,
     pub admission_rejected: u64,
+    /// Bucketed admission-latency histogram for `/metrics`
+    /// (`scfo_admission_latency_seconds`). Process-lifetime only — bucket
+    /// counts are not checkpointed.
+    pub admission_hist: PromHistogram,
+    /// Bucketed epoch-rebind (optimizer rebind + serving-state rebind)
+    /// latency for `/metrics` (`scfo_rebind_latency_seconds`).
+    pub rebind_hist: PromHistogram,
+    /// Per-phase slot wall time (`scfo_slot_phase_seconds{phase=…}`),
+    /// indexed like [`SLOT_PHASES`].
+    pub slot_phase: [PromHistogram; 4],
     /// HTTP request counters (`scfo_http_requests_total` etc.).
     pub http: Registry,
     /// Metrics of the most recent served slot.
     pub last: Option<SlotMetrics>,
+}
+
+/// Latency bucket shape shared by the control plane's `/metrics`
+/// histograms: 1 µs × 4ⁿ, 12 buckets (tops out at ~4.2 s before `+Inf`).
+fn latency_buckets() -> PromHistogram {
+    PromHistogram::exponential(1e-6, 4.0, 12)
 }
 
 impl Default for ControlStats {
@@ -127,6 +147,14 @@ impl Default for ControlStats {
             admission_latency: Histogram::new(1024),
             admission_accepted: 0,
             admission_rejected: 0,
+            admission_hist: latency_buckets(),
+            rebind_hist: latency_buckets(),
+            slot_phase: [
+                latency_buckets(),
+                latency_buckets(),
+                latency_buckets(),
+                latency_buckets(),
+            ],
             http: Registry::new(),
             last: None,
         }
@@ -256,12 +284,17 @@ impl ControlPlane {
 
     /// Serve one slot; manages the epoch-rebuild boost expiry.
     pub fn run_slot(&mut self) -> anyhow::Result<SlotMetrics> {
+        crate::obs::set_control_epoch(self.epoch);
+        crate::obs::set_topo_epoch(self.topo.epoch());
         let m = self.server.run_slot()?;
         if self.boost_left > 0 {
             self.boost_left -= 1;
             if self.boost_left == 0 && self.opts.boost > 1.0 {
                 self.server.optimizer.scale_step(1.0 / self.opts.boost);
             }
+        }
+        for (h, secs) in self.stats.slot_phase.iter().zip(m.phase_secs) {
+            h.observe(secs);
         }
         self.stats.last = Some(m.clone());
         Ok(m)
@@ -307,6 +340,7 @@ impl ControlPlane {
         spec: AppSpec,
         is_update: bool,
     ) -> anyhow::Result<AdmissionDecision> {
+        let _span = crate::obs_span!("control", "admission");
         let t0 = std::time::Instant::now();
         let mut cand = self.catalog.clone();
         if is_update {
@@ -323,9 +357,9 @@ impl ControlPlane {
             &remap,
         );
         let decision = self.admission.evaluate(&net, &warm, self.current_cost());
-        self.stats
-            .admission_latency
-            .record(t0.elapsed().as_secs_f64());
+        let admission_secs = t0.elapsed().as_secs_f64();
+        self.stats.admission_latency.record(admission_secs);
+        self.stats.admission_hist.observe(admission_secs);
         match &decision {
             AdmissionDecision::Accepted { probe, .. } => {
                 self.stats.admission_accepted += 1;
@@ -374,6 +408,8 @@ impl ControlPlane {
     /// already assembled: rebind the optimizer (+ reconvergence boost) and
     /// the serving state, adopt the catalog, bump the epoch.
     fn commit(&mut self, catalog: AppCatalog, net: Network, remap: &[Option<usize>], phi: Strategy) {
+        let _span = crate::obs_span!("control", "commit");
+        let t0 = std::time::Instant::now();
         self.server.optimizer.rebind(&net, &phi);
         if self.opts.boost > 1.0 {
             if self.boost_left == 0 {
@@ -384,6 +420,9 @@ impl ControlPlane {
         self.server.rebind_network(net, remap);
         self.catalog = catalog;
         self.epoch += 1;
+        self.stats.rebind_hist.observe(t0.elapsed().as_secs_f64());
+        crate::obs::set_control_epoch(self.epoch);
+        crate::obs::set_topo_epoch(self.topo.epoch());
     }
 
     // ---- topology churn ----------------------------------------------------
@@ -629,63 +668,164 @@ impl ControlPlane {
     }
 
     /// The `GET /metrics` document (Prometheus text exposition format,
-    /// rendered through [`crate::metrics`]).
+    /// rendered through [`crate::metrics`]): fleet/serving gauges, the
+    /// admission/rebind/per-phase latency histogram families, distributed-
+    /// runtime gauges (sharded optimizer only) and the HTTP registry.
     pub fn metrics_text(&self) -> String {
         let mut out = String::new();
-        out.push_str(&prometheus_line("scfo_epoch", "gauge", self.epoch as f64));
+        out.push_str(&prometheus_line(
+            "scfo_epoch",
+            "gauge",
+            "control-plane catalog epoch",
+            self.epoch as f64,
+        ));
+        out.push_str(&prometheus_line(
+            "scfo_topo_epoch",
+            "gauge",
+            "topology churn epoch",
+            self.topo.epoch() as f64,
+        ));
         out.push_str(&prometheus_line(
             "scfo_slots_served_total",
             "counter",
+            "serving slots completed",
             self.slots_served() as f64,
         ));
         out.push_str(&prometheus_line(
             "scfo_apps_total",
             "gauge",
+            "registered applications",
             self.catalog.len() as f64,
         ));
         out.push_str(&prometheus_line(
             "scfo_apps_active",
             "gauge",
+            "applications serving traffic",
             self.catalog
                 .iter()
                 .filter(|a| a.status == AppStatus::Active)
                 .count() as f64,
         ));
         if let Some(last) = &self.stats.last {
-            out.push_str(&prometheus_line("scfo_cost", "gauge", last.cost));
+            out.push_str(&prometheus_line(
+                "scfo_cost",
+                "gauge",
+                "aggregate delay cost at true rates",
+                last.cost,
+            ));
             out.push_str(&prometheus_line(
                 "scfo_expected_delay_seconds",
                 "gauge",
+                "expected per-packet delay (Little's law)",
                 last.expected_delay,
             ));
             out.push_str(&prometheus_line(
                 "scfo_optimizer_latency_seconds",
                 "gauge",
+                "optimizer wall time last slot",
                 last.optimizer_latency,
             ));
         }
         out.push_str(&prometheus_line(
             "scfo_admission_accepted_total",
             "counter",
+            "admission decisions accepted",
             self.stats.admission_accepted as f64,
         ));
         out.push_str(&prometheus_line(
             "scfo_admission_rejected_total",
             "counter",
+            "admission decisions rejected",
             self.stats.admission_rejected as f64,
         ));
         if self.stats.admission_latency.count() > 0 {
             out.push_str(&prometheus_line(
                 "scfo_admission_latency_seconds_mean",
                 "gauge",
+                "mean admission latency, recent window",
                 self.stats.admission_latency.mean(),
             ));
             out.push_str(&prometheus_line(
                 "scfo_admission_latency_seconds_p95",
                 "gauge",
+                "p95 admission latency, recent window",
                 self.stats.admission_latency.percentile(95.0),
             ));
         }
+        // bucketed latency families (always rendered so scrapers see the
+        // bucket layout from the first scrape)
+        out.push_str(&prometheus_histogram_family(
+            "scfo_admission_latency_seconds",
+            "admission evaluation wall time",
+            &[("", &self.stats.admission_hist)],
+        ));
+        out.push_str(&prometheus_histogram_family(
+            "scfo_rebind_latency_seconds",
+            "epoch-rebuild (rebind) wall time",
+            &[("", &self.stats.rebind_hist)],
+        ));
+        let phase_series: Vec<(String, &PromHistogram)> = SLOT_PHASES
+            .iter()
+            .zip(&self.stats.slot_phase)
+            .map(|(name, h)| (format!("phase=\"{name}\","), h))
+            .collect();
+        let phase_refs: Vec<(&str, &PromHistogram)> = phase_series
+            .iter()
+            .map(|(l, h)| (l.as_str(), *h))
+            .collect();
+        out.push_str(&prometheus_histogram_family(
+            "scfo_slot_phase_seconds",
+            "serving-slot wall time by phase",
+            &phase_refs,
+        ));
+        // distributed-runtime gauges (present when the optimizer is the
+        // async sharded runtime)
+        if let Some(rs) = self.server.optimizer.runtime_stats() {
+            out.push_str(&prometheus_line(
+                "scfo_dist_epochs",
+                "gauge",
+                "distributed broadcast epochs completed",
+                rs.epochs as f64,
+            ));
+            out.push_str(&prometheus_line(
+                "scfo_dist_messages_sent",
+                "gauge",
+                "transport messages sent",
+                rs.transport.sent as f64,
+            ));
+            out.push_str(&prometheus_line(
+                "scfo_dist_bytes_sent",
+                "gauge",
+                "transport payload bytes sent",
+                rs.transport.bytes_sent as f64,
+            ));
+            out.push_str(&prometheus_line(
+                "scfo_dist_queue_depth_max",
+                "gauge",
+                "deepest transport queue observed",
+                rs.transport.max_queue_depth as f64,
+            ));
+            out.push_str(&prometheus_line(
+                "scfo_dist_stale_reads",
+                "gauge",
+                "stale marginal reads tolerated",
+                rs.stale_reads as f64,
+            ));
+        }
+        // flight-recorder health (zeros while tracing is disabled)
+        let (_, spans_recorded, spans_dropped, _) = crate::obs::stats();
+        out.push_str(&prometheus_line(
+            "scfo_obs_spans_recorded_total",
+            "counter",
+            "spans recorded by the flight recorder",
+            spans_recorded as f64,
+        ));
+        out.push_str(&prometheus_line(
+            "scfo_obs_spans_dropped_total",
+            "counter",
+            "spans lost to flight-recorder ring overflow",
+            spans_dropped as f64,
+        ));
         out.push_str(&self.stats.http.prometheus_text());
         out
     }

@@ -542,6 +542,7 @@ impl AsyncRuntime {
     /// Advance one full measurement epoch; returns the cost measured at its
     /// boundary.
     pub fn run_epoch(&mut self) -> f64 {
+        let _span = crate::obs_span!("distributed", "epoch");
         for _ in 0..self.opts.epoch_ticks {
             self.tick();
         }

@@ -44,6 +44,7 @@ pub mod config;
 pub mod control;
 pub mod distributed;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod scenarios;
 pub mod serving;

@@ -25,7 +25,8 @@
 //! scfo serve    --checkpoint ckpt --restore        # resume bit-identically
 //! scfo bench --json --control [--slots 90]         # control plane → BENCH.json v5
 //! scfo bench --json --topo-churn [--slots 60]      # link flaps → BENCH.json v5
-//! scfo bench --json --massive [--apps 1000] [--sources 1000]  # 1M streams → v6
+//! scfo bench --json --massive [--apps 1000] [--sources 1000]  # 1M streams → v7
+//! scfo bench --json --massive --profile prof.json  # + Chrome trace (Perfetto)
 //! scfo trace record --topology abilene --workload mmpp --slots 120 --out t.json
 //! scfo trace replay t.json | stats t.json          # bit-identical trace replay
 //! scfo validate --topology abilene                 # DES vs analytic cost
@@ -669,13 +670,17 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     ms.arrivals_total.to_string(),
                     ms.detections.to_string(),
                     format!("{:.2}", ms.slot_wall_ms_mean),
+                    format!(
+                        "{:.2}/{:.2}/{:.2}",
+                        ms.phase_sample_ms_mean, ms.phase_estimate_ms_mean, ms.phase_detect_ms_mean
+                    ),
                     format!("{:.2}", ms.slot_wall_ms_max),
                     format!("{:.0}", ms.streams_per_sec),
                 ]
             })
             .collect();
         print_table(
-            "Million-stream workload bench (BENCH.json v6 columns)",
+            "Million-stream workload bench (BENCH.json v7 columns)",
             &[
                 "scenario",
                 "|V|/|E|",
@@ -684,6 +689,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 "arrivals",
                 "detections",
                 "slot ms mean",
+                "smp/est/det ms",
                 "slot ms max",
                 "streams/sec",
             ],
@@ -1239,7 +1245,13 @@ fn cmd_broadcast(args: &Args) -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     scfo::util::logging::init();
     let args = Args::from_env();
-    match args.command.as_deref() {
+    // `--profile FILE` turns the flight recorder on for any command and
+    // writes the Chrome trace-event snapshot on success (crate::obs)
+    let profile_out = args.flag("profile").map(std::path::PathBuf::from);
+    if profile_out.is_some() {
+        scfo::obs::enable(scfo::obs::DEFAULT_CAPACITY);
+    }
+    let outcome = match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("compare") => cmd_compare(&args),
         Some("table2") => cmd_table2(&args),
@@ -1262,9 +1274,20 @@ fn main() -> anyhow::Result<()> {
                  [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] \
                  [--tier large|dynamic|distributed|churn|topo-churn|massive] [--workload SPEC] [--shards N] \
                  [--faults SPEC] [--http ADDR] [--checkpoint DIR] [--restore] [--control] \
-                 [--topo-churn] [--xla]"
+                 [--topo-churn] [--profile FILE] [--xla]"
             );
             std::process::exit(2);
         }
+    };
+    if outcome.is_ok() {
+        if let Some(path) = &profile_out {
+            scfo::obs::write_profile(path)?;
+            let (retained, recorded, dropped, _) = scfo::obs::stats();
+            eprintln!(
+                "profile: wrote {retained} spans to {} ({recorded} recorded, {dropped} dropped)",
+                path.display()
+            );
+        }
     }
+    outcome
 }

@@ -1,5 +1,18 @@
-//! Lightweight metrics: counters + streaming histograms with percentile
-//! queries, used by the serving loop and the e2e driver.
+//! Lightweight metrics: counters, gauges, streaming reservoir histograms
+//! with percentile queries, and bucketed Prometheus histograms, used by the
+//! serving loop, the control plane's ops API and the e2e driver.
+//!
+//! Two histogram types coexist on purpose:
+//! * [`Histogram`] — a recency-window reservoir with percentile queries,
+//!   for in-process decisions and BENCH columns ("what has delay looked
+//!   like *lately*"). Checkpointable.
+//! * [`PromHistogram`] — fixed exponential buckets with cumulative counts
+//!   plus `_sum`/`_count`, for the `/metrics` exposition surface where
+//!   scrapers aggregate across processes. Process-lifetime only (not
+//!   checkpointed).
+//!
+//! Naming scheme (`scfo_<subsystem>_<name>_<unit>`), label rules and the
+//! exposition-format contract: `docs/OBSERVABILITY.md`.
 
 use crate::util::stats;
 use std::collections::BTreeMap;
@@ -23,6 +36,129 @@ impl Counter {
     }
     pub fn get(&self) -> u64 {
         self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Thread-safe f64 gauge (set/add/get) stored as atomic bits.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn add(&self, d: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + d).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Bucketed histogram in the Prometheus sense: fixed upper bounds decided
+/// at construction, per-bucket counts, running `_sum` and `_count`.
+/// `observe` takes `&self` (atomics) and never allocates, so hot paths can
+/// record into a shared reference.
+#[derive(Debug)]
+pub struct PromHistogram {
+    /// Ascending finite bucket upper bounds; an implicit `+Inf` bucket
+    /// follows the last.
+    bounds: Vec<f64>,
+    /// `counts[i]` = observations with `v <= bounds[i]` (non-cumulative
+    /// storage; rendering accumulates). `counts[bounds.len()]` is `+Inf`.
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl PromHistogram {
+    /// Build from explicit ascending upper bounds (finite; `+Inf` is
+    /// implicit).
+    pub fn new(bounds: Vec<f64>) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        PromHistogram {
+            bounds,
+            counts,
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// `n` exponential buckets: `start, start*factor, start*factor², …`.
+    /// The default shape for latency metrics (e.g. `1e-6 × 4ⁿ` spans µs
+    /// to tens of seconds in 12 buckets).
+    pub fn exponential(start: f64, factor: f64, n: usize) -> Self {
+        debug_assert!(start > 0.0 && factor > 1.0 && n >= 1);
+        let mut b = Vec::with_capacity(n);
+        let mut x = start;
+        for _ in 0..n {
+            b.push(x);
+            x *= factor;
+        }
+        PromHistogram::new(b)
+    }
+
+    /// Record one observation (allocation-free, `&self`).
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        if v.is_finite() {
+            let mut cur = self.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let new = (f64::from_bits(cur) + v).to_bits();
+                match self.sum_bits.compare_exchange_weak(
+                    cur,
+                    new,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// (upper bound, cumulative count) per finite bucket, ascending. The
+    /// `+Inf` cumulative count equals [`count`](PromHistogram::count).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        self.bounds
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                acc += self.counts[i].load(Ordering::Relaxed);
+                (b, acc)
+            })
+            .collect()
     }
 }
 
@@ -151,21 +287,100 @@ impl Histogram {
     }
 }
 
-/// One Prometheus text-exposition line with a `# TYPE` header.
-/// Non-finite values are skipped by emitting the header only (Prometheus
-/// has no NaN-safe ingestion contract worth fighting).
-pub fn prometheus_line(name: &str, kind: &str, value: f64) -> String {
-    if value.is_finite() {
-        format!("# TYPE {name} {kind}\n{name} {value}\n")
-    } else {
-        format!("# TYPE {name} {kind}\n")
+// ---- Prometheus text exposition --------------------------------------------
+
+/// Escape a label value per the exposition format: backslash, double quote
+/// and newline must be escaped inside the quotes.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
     }
+    out
 }
 
-/// Named metric registry for end-of-run reports.
+/// `name{k1="v1",k2="v2"}` with escaped values; just `name` for no labels.
+pub fn labeled(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+/// Metric family of a (possibly labeled) sample name: the part before `{`.
+pub fn family_of(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// One Prometheus text-exposition sample with `# HELP` and `# TYPE`
+/// headers on its family. `name` may carry labels (`x{app="a"}`); headers
+/// are emitted for the bare family name, as strict scrapers require.
+/// Non-finite values are skipped by emitting the headers only (Prometheus
+/// has no NaN-safe ingestion contract worth fighting).
+pub fn prometheus_line(name: &str, kind: &str, help: &str, value: f64) -> String {
+    let family = family_of(name);
+    let mut out = format!("# HELP {family} {help}\n# TYPE {family} {kind}\n");
+    if value.is_finite() {
+        out.push_str(&format!("{name} {value}\n"));
+    }
+    out
+}
+
+/// Render one bucketed histogram family: a single `# HELP`/`# TYPE`
+/// header, then per series (label prefix like `app="a",` or empty) the
+/// cumulative `_bucket{le=…}` lines including `+Inf`, `_sum` and `_count`.
+pub fn prometheus_histogram_family(
+    family: &str,
+    help: &str,
+    series: &[(&str, &PromHistogram)],
+) -> String {
+    let mut out = format!("# HELP {family} {help}\n# TYPE {family} histogram\n");
+    for (label_prefix, h) in series {
+        for (bound, cum) in h.cumulative_buckets() {
+            out.push_str(&format!(
+                "{family}_bucket{{{label_prefix}le=\"{bound}\"}} {cum}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "{family}_bucket{{{label_prefix}le=\"+Inf\"}} {}\n",
+            h.count()
+        ));
+        let sum = h.sum();
+        if sum.is_finite() {
+            if label_prefix.is_empty() {
+                out.push_str(&format!("{family}_sum {sum}\n"));
+            } else {
+                let trimmed = label_prefix.trim_end_matches(',');
+                out.push_str(&format!("{family}_sum{{{trimmed}}} {sum}\n"));
+            }
+        }
+        if label_prefix.is_empty() {
+            out.push_str(&format!("{family}_count {}\n", h.count()));
+        } else {
+            let trimmed = label_prefix.trim_end_matches(',');
+            out.push_str(&format!("{family}_count{{{trimmed}}} {}\n", h.count()));
+        }
+    }
+    out
+}
+
+/// Named metric registry for end-of-run reports and the `/metrics`
+/// endpoint. Counter and gauge names may carry labels; samples of one
+/// family are rendered under a single `# HELP`/`# TYPE` header pair.
 #[derive(Debug, Default)]
 pub struct Registry {
     counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    help: BTreeMap<String, String>,
 }
 
 impl Registry {
@@ -177,6 +392,13 @@ impl Registry {
             .entry(name.to_string())
             .or_insert_with(Counter::new)
     }
+    pub fn gauge(&mut self, name: &str) -> &Gauge {
+        self.gauges.entry(name.to_string()).or_insert_with(Gauge::new)
+    }
+    /// Attach a `# HELP` string to a metric family (bare name, no labels).
+    pub fn set_help(&mut self, family: &str, help: &str) {
+        self.help.insert(family.to_string(), help.to_string());
+    }
     pub fn report(&self) -> Vec<(String, u64)> {
         self.counters
             .iter()
@@ -184,12 +406,53 @@ impl Registry {
             .collect()
     }
 
-    /// Render every counter in Prometheus text exposition format (the
-    /// `GET /metrics` endpoint of the control plane's ops API).
+    fn help_for<'a>(&'a self, family: &str, fallback: &'a str) -> &'a str {
+        self.help.get(family).map(String::as_str).unwrap_or(fallback)
+    }
+
+    /// Render every counter and gauge in Prometheus text exposition format
+    /// (the `GET /metrics` endpoint of the control plane's ops API).
+    /// Samples are grouped per family: one `# HELP` + `# TYPE` header pair
+    /// each, as strict scrapers require — labeled series like `x{app="a"}`
+    /// and `x{app="b"}` share a header.
     pub fn prometheus_text(&self) -> String {
         let mut out = String::new();
-        for (name, value) in self.report() {
-            out.push_str(&prometheus_line(&name, "counter", value as f64));
+        let mut grouped: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+        for (name, c) in &self.counters {
+            grouped
+                .entry(family_of(name))
+                .or_default()
+                .push(format!("{name} {}\n", c.get()));
+        }
+        for (family, lines) in &grouped {
+            out.push_str(&format!(
+                "# HELP {family} {}\n# TYPE {family} counter\n",
+                self.help_for(family, "total events")
+            ));
+            for l in lines {
+                out.push_str(l);
+            }
+        }
+        grouped.clear();
+        for (name, g) in &self.gauges {
+            let v = g.get();
+            if v.is_finite() {
+                grouped
+                    .entry(family_of(name))
+                    .or_default()
+                    .push(format!("{name} {v}\n"));
+            } else {
+                grouped.entry(family_of(name)).or_default();
+            }
+        }
+        for (family, lines) in &grouped {
+            out.push_str(&format!(
+                "# HELP {family} {}\n# TYPE {family} gauge\n",
+                self.help_for(family, "current value")
+            ));
+            for l in lines {
+                out.push_str(l);
+            }
         }
         out
     }
@@ -205,6 +468,42 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_sets_and_adds() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(2.5);
+        g.add(1.25);
+        g.add(-0.75);
+        assert_eq!(g.get(), 3.0);
+    }
+
+    #[test]
+    fn prom_histogram_buckets_sum_count() {
+        let h = PromHistogram::new(vec![1.0, 10.0, 100.0]);
+        for v in [0.5, 5.0, 5.0, 50.0, 500.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 560.5);
+        assert_eq!(
+            h.cumulative_buckets(),
+            vec![(1.0, 1), (10.0, 3), (100.0, 4)]
+        );
+        // boundary values land in the bucket they bound (le semantics)
+        let b = PromHistogram::new(vec![1.0]);
+        b.observe(1.0);
+        assert_eq!(b.cumulative_buckets(), vec![(1.0, 1)]);
+    }
+
+    #[test]
+    fn exponential_buckets_cover_the_decades() {
+        let h = PromHistogram::exponential(1e-6, 10.0, 7);
+        assert_eq!(h.bounds.len(), 7);
+        assert!((h.bounds[0] - 1e-6).abs() < 1e-18);
+        assert!((h.bounds[6] - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -279,13 +578,83 @@ mod tests {
     }
 
     #[test]
+    fn labels_escape_and_render() {
+        assert_eq!(labeled("x", &[]), "x");
+        assert_eq!(
+            labeled("x", &[("app", "a\"b\\c\nd"), ("tier", "massive")]),
+            "x{app=\"a\\\"b\\\\c\\nd\",tier=\"massive\"}"
+        );
+        assert_eq!(family_of("x{app=\"a\"}"), "x");
+        assert_eq!(family_of("x"), "x");
+    }
+
+    #[test]
+    fn prometheus_line_emits_help_and_skips_nonfinite() {
+        let l = prometheus_line("x", "gauge", "an x", 2.0);
+        assert_eq!(l, "# HELP x an x\n# TYPE x gauge\nx 2\n");
+        // labeled sample: headers use the bare family
+        let l = prometheus_line("x{app=\"a\"}", "gauge", "an x", 2.0);
+        assert_eq!(l, "# HELP x an x\n# TYPE x gauge\nx{app=\"a\"} 2\n");
+        assert!(prometheus_line("x", "gauge", "an x", f64::NAN).ends_with("gauge\n"));
+    }
+
+    #[test]
     fn prometheus_text_renders_counters() {
         let mut r = Registry::new();
         r.counter("scfo_requests_total").add(7);
         let text = r.prometheus_text();
+        assert!(text.contains("# HELP scfo_requests_total"));
         assert!(text.contains("# TYPE scfo_requests_total counter"));
         assert!(text.contains("scfo_requests_total 7"));
-        assert!(prometheus_line("x", "gauge", f64::NAN).ends_with("gauge\n"));
+    }
+
+    #[test]
+    fn prometheus_text_groups_families_once() {
+        let mut r = Registry::new();
+        r.set_help("scfo_req_total", "requests per app");
+        r.counter(&labeled("scfo_req_total", &[("app", "a")])).inc();
+        r.counter(&labeled("scfo_req_total", &[("app", "b")])).add(2);
+        r.gauge(&labeled("scfo_load", &[("tier", "massive")])).set(0.5);
+        r.gauge(&labeled("scfo_load", &[("tier", "large")])).set(0.25);
+        let text = r.prometheus_text();
+        assert_eq!(text.matches("# TYPE scfo_req_total counter").count(), 1);
+        assert_eq!(text.matches("# TYPE scfo_load gauge").count(), 1);
+        assert_eq!(text.matches("# HELP scfo_req_total requests per app").count(), 1);
+        assert!(text.contains("scfo_req_total{app=\"a\"} 1\n"));
+        assert!(text.contains("scfo_req_total{app=\"b\"} 2\n"));
+        assert!(text.contains("scfo_load{tier=\"massive\"} 0.5\n"));
+        // headers precede their family's samples
+        let type_pos = text.find("# TYPE scfo_load gauge").unwrap();
+        let sample_pos = text.find("scfo_load{tier=\"large\"}").unwrap();
+        assert!(type_pos < sample_pos);
+    }
+
+    #[test]
+    fn histogram_family_renders_buckets_sum_count() {
+        let h = PromHistogram::new(vec![0.01, 0.1]);
+        // dyadic values keep the _sum display exact
+        h.observe(0.0078125);
+        h.observe(0.0625);
+        h.observe(5.0);
+        let text = prometheus_histogram_family("scfo_lat_seconds", "latency", &[("", &h)]);
+        assert_eq!(text.matches("# TYPE scfo_lat_seconds histogram").count(), 1);
+        assert!(text.contains("scfo_lat_seconds_bucket{le=\"0.01\"} 1\n"));
+        assert!(text.contains("scfo_lat_seconds_bucket{le=\"0.1\"} 2\n"));
+        assert!(text.contains("scfo_lat_seconds_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("scfo_lat_seconds_sum 5.0703125\n"));
+        assert!(text.contains("scfo_lat_seconds_count 3\n"));
+        // labeled series share the single header
+        let h2 = PromHistogram::new(vec![0.01, 0.1]);
+        h2.observe(0.2);
+        let text = prometheus_histogram_family(
+            "scfo_lat_seconds",
+            "latency",
+            &[("app=\"a\",", &h), ("app=\"b\",", &h2)],
+        );
+        assert_eq!(text.matches("# TYPE").count(), 1);
+        assert!(text.contains("scfo_lat_seconds_bucket{app=\"a\",le=\"+Inf\"} 3\n"));
+        assert!(text.contains("scfo_lat_seconds_bucket{app=\"b\",le=\"+Inf\"} 1\n"));
+        assert!(text.contains("scfo_lat_seconds_count{app=\"b\"} 1\n"));
     }
 
     #[test]

@@ -1,0 +1,540 @@
+//! Unified observability: span tracing with a preallocated flight recorder
+//! and Chrome trace-event export.
+//!
+//! The serving stack is an *online* system — when a massive-tier slot is
+//! slow, operators need to see whether the time went to SoA sampling, the
+//! GP projection, the marginal recursion or transport queues, live, without
+//! perturbing any determinism gate. This module provides that as a std-only
+//! layer:
+//!
+//! * **Span records** — fixed-size [`SpanRecord`] values carrying the
+//!   subsystem, a static span name, wall-clock nanoseconds (via
+//!   [`crate::util::timer::monotonic_ns`]) and the *virtual coordinates* of
+//!   the moment: serving slot, GP iteration, control epoch and topology
+//!   epoch. Virtual coordinates are what make traces comparable across
+//!   machines — wall time is volatile, the slot/epoch lattice is not.
+//! * **Flight recorder** — a preallocated fixed-capacity ring
+//!   ([`FlightRecorder`]) behind a process-wide mutex. When the ring is
+//!   full the oldest span is overwritten (`dropped` counts the losses), so
+//!   memory is bounded no matter how long the server runs.
+//! * **Zero cost when disabled** — the [`obs_span!`] macro expands to a
+//!   guard whose construction is one relaxed atomic load when the recorder
+//!   is off: no clock read, no lock, no allocation. The hot-path
+//!   allocation-freedom gate (`rust/tests/alloc_free.rs`) pins this.
+//!   When enabled, recording never allocates either: the ring's capacity
+//!   is reserved up front and records are plain `Copy` values.
+//! * **Chrome trace-event export** — [`chrome_trace_json`] renders the
+//!   retained spans as a JSON array of matched `B`/`E` events (with
+//!   `pid`/`tid`/`ts`/`name`/`cat` and the virtual coordinates as `args`)
+//!   that loads directly in `chrome://tracing` / [Perfetto]. The CLI's
+//!   `--profile out.json` flag and the ops API's `GET /profile` both go
+//!   through it.
+//!
+//! Span taxonomy, naming rules and the workflow: `docs/OBSERVABILITY.md`.
+//!
+//! [Perfetto]: https://ui.perfetto.dev
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::timer::monotonic_ns;
+
+/// Default flight-recorder capacity (spans). At ~80 bytes per record this
+/// is a few MiB — hours of slot-level spans, seconds of iteration-level
+/// ones. Override via [`enable`].
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// One completed span. Fixed-size and `Copy`: recording moves no heap data.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// Subsystem slug (`"gp"`, `"serving"`, `"workload"`, `"control"`,
+    /// `"distributed"`, `"bench"`).
+    pub subsystem: &'static str,
+    /// Span name within the subsystem (static — spans never format strings).
+    pub name: &'static str,
+    /// Start, nanoseconds since the process monotonic origin.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Recording thread (small dense id, not the OS tid).
+    pub tid: u64,
+    /// Virtual coordinates at record time (0 until the owning loop sets
+    /// them): serving slot, GP iteration, control epoch, topology epoch.
+    pub slot: u64,
+    pub gp_iter: u64,
+    pub control_epoch: u64,
+    pub topo_epoch: u64,
+}
+
+/// Preallocated ring of span records. All methods are allocation-free
+/// after construction; overflow overwrites the oldest record.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: Vec<SpanRecord>,
+    /// Next write position once the ring is full.
+    head: usize,
+    /// All-time recorded spans (retained + overwritten).
+    recorded: u64,
+    cap: usize,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let cap = capacity.max(1);
+        FlightRecorder {
+            ring: Vec::with_capacity(cap),
+            head: 0,
+            recorded: 0,
+            cap,
+        }
+    }
+
+    /// Append one record (O(1), never allocates: capacity is reserved).
+    pub fn push(&mut self, rec: SpanRecord) {
+        self.recorded += 1;
+        if self.ring.len() < self.cap {
+            self.ring.push(rec);
+        } else {
+            self.ring[self.head] = rec;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Retained spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::with_capacity(self.ring.len());
+        out.extend_from_slice(&self.ring[self.head..]);
+        out.extend_from_slice(&self.ring[..self.head]);
+        out
+    }
+
+    /// All-time recorded spans.
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Spans lost to ring overflow.
+    pub fn dropped(&self) -> u64 {
+        self.recorded - self.ring.len() as u64
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn clear(&mut self) {
+        self.ring.clear();
+        self.head = 0;
+        self.recorded = 0;
+    }
+}
+
+// ---- process-wide recorder state -------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: Mutex<Option<FlightRecorder>> = Mutex::new(None);
+
+// Virtual coordinates, set by the owning loops (serving slot, GP step,
+// control-plane commit, topology commit). Plain relaxed atomics: cheap
+// enough to keep current even while tracing is disabled, and never
+// allocating.
+static SLOT: AtomicU64 = AtomicU64::new(0);
+static GP_ITER: AtomicU64 = AtomicU64::new(0);
+static CONTROL_EPOCH: AtomicU64 = AtomicU64::new(0);
+static TOPO_EPOCH: AtomicU64 = AtomicU64::new(0);
+
+/// Dense per-thread id for trace export (`tid` in the Chrome events).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+fn lock_recorder() -> std::sync::MutexGuard<'static, Option<FlightRecorder>> {
+    RECORDER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Turn the flight recorder on, (re)allocating its ring to `capacity`.
+/// The one place the observability layer allocates.
+pub fn enable(capacity: usize) {
+    let mut g = lock_recorder();
+    *g = Some(FlightRecorder::new(capacity));
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop recording. Retained spans stay exportable until [`clear`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Drop the recorder and its spans entirely.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *lock_recorder() = None;
+}
+
+/// Is span recording on? One relaxed load — the whole cost of a disabled
+/// [`obs_span!`] site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set the current serving slot virtual coordinate.
+#[inline]
+pub fn set_slot(v: u64) {
+    SLOT.store(v, Ordering::Relaxed);
+}
+/// Set the current GP iteration virtual coordinate.
+#[inline]
+pub fn set_gp_iter(v: u64) {
+    GP_ITER.store(v, Ordering::Relaxed);
+}
+/// Set the current control-plane epoch virtual coordinate.
+#[inline]
+pub fn set_control_epoch(v: u64) {
+    CONTROL_EPOCH.store(v, Ordering::Relaxed);
+}
+/// Set the current topology epoch virtual coordinate.
+#[inline]
+pub fn set_topo_epoch(v: u64) {
+    TOPO_EPOCH.store(v, Ordering::Relaxed);
+}
+
+/// Record one completed span into the global recorder (no-op when off).
+pub fn record(subsystem: &'static str, name: &'static str, start_ns: u64, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let rec = SpanRecord {
+        subsystem,
+        name,
+        start_ns,
+        dur_ns,
+        tid: thread_tid(),
+        slot: SLOT.load(Ordering::Relaxed),
+        gp_iter: GP_ITER.load(Ordering::Relaxed),
+        control_epoch: CONTROL_EPOCH.load(Ordering::Relaxed),
+        topo_epoch: TOPO_EPOCH.load(Ordering::Relaxed),
+    };
+    if let Some(r) = lock_recorder().as_mut() {
+        r.push(rec);
+    }
+}
+
+/// RAII span: created by [`obs_span!`], records itself on drop. Inert (no
+/// clock read, no lock) while the recorder is disabled.
+pub struct SpanGuard {
+    subsystem: &'static str,
+    name: &'static str,
+    start_ns: u64,
+    active: bool,
+}
+
+impl SpanGuard {
+    #[inline]
+    pub fn begin(subsystem: &'static str, name: &'static str) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard {
+                subsystem,
+                name,
+                start_ns: 0,
+                active: false,
+            };
+        }
+        SpanGuard {
+            subsystem,
+            name,
+            start_ns: monotonic_ns(),
+            active: true,
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.active {
+            let end = monotonic_ns();
+            record(
+                self.subsystem,
+                self.name,
+                self.start_ns,
+                end.saturating_sub(self.start_ns),
+            );
+        }
+    }
+}
+
+/// Open a span that closes at end of scope:
+/// `let _span = obs_span!("gp", "flow-solve");`
+/// Both arguments must be `&'static str`. One relaxed atomic load when the
+/// recorder is disabled; never allocates either way.
+#[macro_export]
+macro_rules! obs_span {
+    ($subsystem:expr, $name:expr) => {
+        $crate::obs::SpanGuard::begin($subsystem, $name)
+    };
+}
+
+// ---- stats + export --------------------------------------------------------
+
+/// (retained, all-time recorded, dropped, capacity) of the global recorder;
+/// zeros when no recorder exists.
+pub fn stats() -> (usize, u64, u64, usize) {
+    match lock_recorder().as_ref() {
+        Some(r) => (r.snapshot().len(), r.recorded(), r.dropped(), r.capacity()),
+        None => (0, 0, 0, 0),
+    }
+}
+
+/// Retained spans of the global recorder, oldest first.
+pub fn snapshot() -> Vec<SpanRecord> {
+    lock_recorder().as_ref().map(FlightRecorder::snapshot).unwrap_or_default()
+}
+
+/// Trace-event phases: `E` (span end), `X` (complete, zero-duration here),
+/// `B` (span begin). The discriminant order is the equal-timestamp sort
+/// rank — closings drain, instants fire, then openings start.
+#[derive(Clone, Copy, PartialEq)]
+enum Phase {
+    End,
+    Complete,
+    Begin,
+}
+
+/// Render spans as a Chrome trace-event JSON array: one matched `B`/`E`
+/// pair per span (a zero-duration span becomes a single `X` complete
+/// event — a `B`/`E` pair at one timestamp cannot be ordered), sorted by
+/// timestamp (`ts` is microseconds since the process monotonic origin),
+/// `pid` 1, `tid` the dense recording-thread id. Loads directly in
+/// `chrome://tracing` and Perfetto.
+pub fn chrome_trace_events(spans: &[SpanRecord]) -> Json {
+    // (ts_ns, phase-rank, dur_ns, span). Ties sort E < X < B; among ties a
+    // longer parent opens before / closes after its children, so nesting
+    // survives equal timestamps.
+    let mut keyed: Vec<(u64, u8, i64, &SpanRecord, Phase)> = Vec::with_capacity(spans.len() * 2);
+    for s in spans {
+        if s.dur_ns == 0 {
+            keyed.push((s.start_ns, 1, 0, s, Phase::Complete));
+        } else {
+            keyed.push((s.start_ns, 2, -(s.dur_ns as i64), s, Phase::Begin));
+            keyed.push((s.start_ns + s.dur_ns, 0, s.dur_ns as i64, s, Phase::End));
+        }
+    }
+    keyed.sort_by(|a, b| (a.0, a.1, a.2, a.3.tid).cmp(&(b.0, b.1, b.2, b.3.tid)));
+    let events = keyed
+        .into_iter()
+        .map(|(ts_ns, _, _, s, phase)| {
+            let ph = match phase {
+                Phase::End => "E",
+                Phase::Complete => "X",
+                Phase::Begin => "B",
+            };
+            let mut pairs = vec![
+                ("ph", Json::Str(ph.into())),
+                ("ts", Json::Num(ts_ns as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(s.tid as f64)),
+                ("name", Json::Str(s.name.to_string())),
+                ("cat", Json::Str(s.subsystem.to_string())),
+            ];
+            if phase == Phase::Complete {
+                pairs.push(("dur", Json::Num(0.0)));
+            }
+            if phase != Phase::End {
+                pairs.push((
+                    "args",
+                    Json::obj(vec![
+                        ("slot", Json::Num(s.slot as f64)),
+                        ("gp_iter", Json::Num(s.gp_iter as f64)),
+                        ("control_epoch", Json::Num(s.control_epoch as f64)),
+                        ("topo_epoch", Json::Num(s.topo_epoch as f64)),
+                    ]),
+                ));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::Arr(events)
+}
+
+/// The global recorder's retained spans as a Chrome trace-event array
+/// (empty array when the recorder is off — still valid trace JSON).
+pub fn chrome_trace_json() -> Json {
+    chrome_trace_events(&snapshot())
+}
+
+/// Write the current flight-recorder snapshot to `path` as Chrome
+/// trace-event JSON (the `--profile out.json` CLI flag).
+pub fn write_profile(path: &std::path::Path) -> anyhow::Result<()> {
+    let doc = chrome_trace_json();
+    std::fs::write(path, doc.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("cannot write profile {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &'static str, start: u64, dur: u64) -> SpanRecord {
+        SpanRecord {
+            subsystem: "test",
+            name,
+            start_ns: start,
+            dur_ns: dur,
+            tid: 1,
+            slot: 3,
+            gp_iter: 7,
+            control_epoch: 2,
+            topo_epoch: 1,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = FlightRecorder::new(3);
+        for i in 0..5 {
+            r.push(rec("s", i * 10, 5));
+        }
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 2);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 3);
+        // oldest-first: spans 2, 3, 4 survive
+        assert_eq!(
+            snap.iter().map(|s| s.start_ns).collect::<Vec<_>>(),
+            vec![20, 30, 40]
+        );
+        r.clear();
+        assert_eq!(r.recorded(), 0);
+        assert!(r.snapshot().is_empty());
+    }
+
+    #[test]
+    fn chrome_export_emits_matched_sorted_be_pairs() {
+        // parent [0, 100], child [10, 40], sibling [50, 60]
+        let spans = [rec("parent", 0, 100), rec("child", 10, 30), rec("sib", 50, 10)];
+        let doc = chrome_trace_events(&spans);
+        let events = doc.as_arr().expect("array");
+        assert_eq!(events.len(), 6);
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut stack: Vec<String> = Vec::new();
+        for e in events {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts, "ts must be monotone");
+            last_ts = ts;
+            assert!(e.get("pid").is_some() && e.get("tid").is_some());
+            let name = e.get("name").unwrap().as_str().unwrap().to_string();
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => {
+                    assert_eq!(
+                        e.get("args").unwrap().get("gp_iter").unwrap().as_f64(),
+                        Some(7.0)
+                    );
+                    stack.push(name);
+                }
+                "E" => assert_eq!(stack.pop().as_deref(), Some(name.as_str())),
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert!(stack.is_empty(), "unmatched B events: {stack:?}");
+    }
+
+    #[test]
+    fn nesting_survives_equal_timestamps() {
+        // parent and child begin at the same ns; child ends where sibling
+        // begins — the tie-break must keep B(parent) < B(child) and
+        // E(child) <= B(sibling) < E(parent)
+        let spans = [rec("parent", 0, 100), rec("child", 0, 50), rec("sib", 50, 50)];
+        let doc = chrome_trace_events(&spans);
+        let seq: Vec<(String, String)> = doc
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| {
+                (
+                    e.get("ph").unwrap().as_str().unwrap().to_string(),
+                    e.get("name").unwrap().as_str().unwrap().to_string(),
+                )
+            })
+            .collect();
+        let mut stack: Vec<&str> = Vec::new();
+        for (ph, name) in &seq {
+            if ph == "B" {
+                stack.push(name);
+            } else {
+                assert_eq!(stack.pop(), Some(name.as_str()), "sequence {seq:?}");
+            }
+        }
+        assert!(stack.is_empty());
+    }
+
+    #[test]
+    fn zero_duration_spans_export_as_complete_events() {
+        // a 0 ns span would otherwise emit E before its own B at one ts
+        let spans = [rec("parent", 0, 100), rec("instant", 50, 0)];
+        let doc = chrome_trace_events(&spans);
+        let events = doc.as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        let phases: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("ph").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(phases, vec!["B", "X", "E"]);
+        let x = &events[1];
+        assert_eq!(x.get("dur").unwrap().as_f64(), Some(0.0));
+        assert_eq!(
+            x.get("args").unwrap().get("slot").unwrap().as_f64(),
+            Some(3.0)
+        );
+    }
+
+    /// The global-recorder lifecycle in ONE test: enable/record/export/
+    /// disable share process-wide state, so splitting this across parallel
+    /// test threads would race.
+    #[test]
+    fn global_recorder_lifecycle() {
+        assert!(!enabled());
+        {
+            // disabled spans are inert
+            let _g = obs_span!("test", "disabled-span");
+        }
+        enable(16);
+        assert!(enabled());
+        set_slot(11);
+        {
+            let _g = obs_span!("test", "global-span");
+        }
+        let spans = snapshot();
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.name == "global-span" && s.slot == 11),
+            "recorded span missing: {spans:?}"
+        );
+        let (retained, recorded, _dropped, cap) = stats();
+        assert!(retained >= 1 && recorded >= 1);
+        assert_eq!(cap, 16);
+        let doc = chrome_trace_json();
+        assert!(doc.as_arr().unwrap().len() >= 2);
+        clear();
+        assert!(!enabled());
+        assert!(snapshot().is_empty());
+        // a disabled /profile export is still a valid (empty) trace array
+        assert_eq!(chrome_trace_json(), Json::Arr(Vec::new()));
+    }
+}

@@ -128,6 +128,13 @@ pub struct MassiveSummary {
     /// Streams processed per second of hot-loop wall time
     /// (streams ÷ mean slot seconds).
     pub streams_per_sec: f64,
+    /// Per-phase breakdown of the mean slot wall time (milliseconds):
+    /// SoA sampling passes …
+    pub phase_sample_ms_mean: f64,
+    /// … estimator column scan …
+    pub phase_estimate_ms_mean: f64,
+    /// … detector scan. Volatile like the other wall-time columns.
+    pub phase_detect_ms_mean: f64,
 }
 
 impl MassiveSummary {
@@ -142,6 +149,12 @@ impl MassiveSummary {
             ("slot_wall_ms_mean", Json::Num(self.slot_wall_ms_mean)),
             ("slot_wall_ms_max", Json::Num(self.slot_wall_ms_max)),
             ("streams_per_sec", Json::Num(self.streams_per_sec)),
+            ("phase_sample_ms_mean", Json::Num(self.phase_sample_ms_mean)),
+            (
+                "phase_estimate_ms_mean",
+                Json::Num(self.phase_estimate_ms_mean),
+            ),
+            ("phase_detect_ms_mean", Json::Num(self.phase_detect_ms_mean)),
         ])
     }
 }
@@ -1305,16 +1318,30 @@ pub fn run_massive(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result
     let mut ctrl = AdaptationController::new(ControllerOptions::default());
     let mut arrivals_total = 0usize;
     let mut slot_ms = Vec::with_capacity(spec.slots);
-    for _ in 0..spec.slots {
+    let mut sample_ms = Vec::with_capacity(spec.slots);
+    let mut estimate_ms = Vec::with_capacity(spec.slots);
+    let mut detect_ms = Vec::with_capacity(spec.slots);
+    for slot in 0..spec.slots {
+        crate::obs::set_slot(slot as u64 + 1);
+        let _slot_span = crate::obs_span!("scenarios", "massive-slot");
         let w = Stopwatch::start();
         arrivals_total += workload.sample_slot();
+        sample_ms.push(w.elapsed_secs() * 1e3);
+        let wp = Stopwatch::start();
         let (obs, fast) = est.update(&workload);
+        estimate_ms.push(wp.elapsed_secs() * 1e3);
+        let wp = Stopwatch::start();
         let _ = ctrl.observe(obs, fast);
+        detect_ms.push(wp.elapsed_secs() * 1e3);
         slot_ms.push(w.elapsed_secs() * 1e3);
     }
     let detections = ctrl.events().len();
     let offered_load = workload.total_true_rate();
 
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let phase_sample_ms_mean = mean(&sample_ms);
+    let phase_estimate_ms_mean = mean(&estimate_ms);
+    let phase_detect_ms_mean = mean(&detect_ms);
     let slot_wall_ms_mean = slot_ms.iter().sum::<f64>() / slot_ms.len() as f64;
     let slot_wall_ms_max = slot_ms.iter().cloned().fold(0.0, f64::max);
     let streams_per_sec = if slot_wall_ms_mean > 0.0 {
@@ -1333,6 +1360,9 @@ pub fn run_massive(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result
         slot_wall_ms_mean,
         slot_wall_ms_max,
         streams_per_sec,
+        phase_sample_ms_mean,
+        phase_estimate_ms_mean,
+        phase_detect_ms_mean,
     };
 
     Ok(ScenarioReport {
@@ -1798,7 +1828,7 @@ mod tests {
         assert!(rep.phases.is_empty());
         assert!(rep.costs.is_empty());
         assert_eq!(rep.workload.as_deref(), Some("mmpp"));
-        // the JSON report exposes the acceptance-gated v6 columns
+        // the JSON report exposes the acceptance-gated v6/v7 columns
         let v = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
         let block = v.get("massive").expect("massive block serialized");
         for key in [
@@ -1806,6 +1836,9 @@ mod tests {
             "arrivals_total",
             "slot_wall_ms_mean",
             "streams_per_sec",
+            "phase_sample_ms_mean",
+            "phase_estimate_ms_mean",
+            "phase_detect_ms_mean",
         ] {
             assert!(block.get(key).is_some(), "missing column {key}");
         }

@@ -165,7 +165,15 @@ pub struct SlotMetrics {
     pub regret: Option<f64>,
     /// true iff the controller detected a change point this slot
     pub detection: bool,
+    /// wall-clock seconds per slot phase: sample, observe (estimation +
+    /// detection), optimize, measure (truth metrics + regret). Fixed-size
+    /// so the hot path stays allocation-free; fed to the control plane's
+    /// per-phase latency histograms and the trace spans.
+    pub phase_secs: [f64; 4],
 }
+
+/// Indices into [`SlotMetrics::phase_secs`], in slot execution order.
+pub const SLOT_PHASES: [&str; 4] = ["sample", "observe", "optimize", "measure"];
 
 /// The online server.
 pub struct OnlineServer<O: Optimizer> {
@@ -422,9 +430,17 @@ impl<O: Optimizer> OnlineServer<O> {
     /// estimates, run the controller + optimizer, report metrics.
     pub fn run_slot(&mut self) -> anyhow::Result<SlotMetrics> {
         self.slot_no += 1;
+        crate::obs::set_slot(self.slot_no as u64);
+        let _slot_span = crate::obs_span!("serving", "slot");
         // 1. arrivals this slot, per stream (batched SoA passes when the
         //    workload's stream table is active)
+        let t_phase = std::time::Instant::now();
+        let span = crate::obs_span!("serving", "sample");
         let arrivals = self.workload.sample_slot();
+        drop(span);
+        let phase_sample = t_phase.elapsed().as_secs_f64();
+        let t_phase = std::time::Instant::now();
+        let span = crate::obs_span!("serving", "observe");
         // 2. rate estimation (EWMA, initialized from the first observation
         //    instead of decaying up from zero). The per-stream columns are
         //    persistent and indexed by stream id — no per-slot allocation,
@@ -462,11 +478,17 @@ impl<O: Optimizer> OnlineServer<O> {
                 PolicyAction::ScaleStep(f) => self.optimizer.scale_step(f),
             }
         }
+        drop(span);
+        let phase_observe = t_phase.elapsed().as_secs_f64();
         // 5. optimizer slot (timed: this is the L3 hot path)
         let t0 = std::time::Instant::now();
+        let span = crate::obs_span!("serving", "optimize");
         let _opt_cost = self.optimizer.slot(&self.net)?;
+        drop(span);
         let optimizer_latency = t0.elapsed().as_secs_f64();
         // 6. metrics at the TRUE rates (what users experience)
+        let t_phase = std::time::Instant::now();
+        let span = crate::obs_span!("serving", "measure");
         let mut truth = self.net.clone();
         self.workload.apply_true_rates(&mut truth);
         let fs = FlowState::solve(&truth, self.optimizer.strategy())
@@ -486,6 +508,8 @@ impl<O: Optimizer> OnlineServer<O> {
             }
             None => (None, None),
         };
+        drop(span);
+        let phase_measure = t_phase.elapsed().as_secs_f64();
         Ok(SlotMetrics {
             slot: self.slot_no,
             arrivals,
@@ -495,6 +519,7 @@ impl<O: Optimizer> OnlineServer<O> {
             oracle_cost,
             regret,
             detection,
+            phase_secs: [phase_sample, phase_observe, optimizer_latency, phase_measure],
         })
     }
 

@@ -1,10 +1,12 @@
 //! Tiny std-only stderr logger with level filtering via `SCFO_LOG`
-//! (error|warn|info|debug|trace; default info). The `log`/`once_cell` crates
-//! are unavailable offline, so this module provides the whole facade: call
+//! (error|warn|info|debug|trace; default info) and an optional structured
+//! line format via `SCFO_LOG_JSON=1` (one JSON object per line: ts, level,
+//! target, msg) for log pipelines. The `log`/`once_cell` crates are
+//! unavailable offline, so this module provides the whole facade: call
 //! [`init`] once, then use the [`crate::log_info!`]-family macros (or
 //! [`log`] directly).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 
 /// Log severity, ordered from most to least severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -31,18 +33,43 @@ impl Level {
 
 /// Current max level; 0 = not yet initialized (treated as Info).
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
+/// Emit JSON lines instead of the human format (`SCFO_LOG_JSON=1`).
+static JSON_FORMAT: AtomicBool = AtomicBool::new(false);
+/// An unrecognized `SCFO_LOG` value is reported once, not per [`init`].
+static WARNED_BAD_LEVEL: AtomicBool = AtomicBool::new(false);
+
+/// Parse one `SCFO_LOG` value; `None` for unrecognized input.
+fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
 
 /// Install the logger (idempotent): reads `SCFO_LOG` once and stores the
-/// filter level. Safe to call repeatedly (tests do).
+/// filter level; an unrecognized value falls back to `info` with a
+/// once-only warning instead of a silent default. `SCFO_LOG_JSON=1`
+/// switches the line format to structured JSON.
 pub fn init() {
-    let level = match std::env::var("SCFO_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
+    let level = match std::env::var("SCFO_LOG") {
+        Ok(raw) => parse_level(&raw).unwrap_or_else(|| {
+            if !WARNED_BAD_LEVEL.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "[WARN  scfo::util::logging] unrecognized SCFO_LOG={raw:?} \
+                     (expected error|warn|info|debug|trace); using info"
+                );
+            }
+            Level::Info
+        }),
+        Err(_) => Level::Info,
     };
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+    let json = matches!(std::env::var("SCFO_LOG_JSON").as_deref(), Ok("1"));
+    JSON_FORMAT.store(json, Ordering::Relaxed);
 }
 
 /// Is a record at `level` currently enabled?
@@ -52,10 +79,31 @@ pub fn enabled(level: Level) -> bool {
     (level as u8) <= max
 }
 
+/// Render one structured record: `{"ts":…,"level":"…","target":"…","msg":"…"}`.
+/// `ts` is seconds since the Unix epoch (fractional).
+fn json_line(level: Level, target: &str, msg: &str) -> String {
+    use crate::util::json::Json;
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    Json::obj(vec![
+        ("ts", Json::Num(ts)),
+        ("level", Json::Str(level.name().to_string())),
+        ("target", Json::Str(target.to_string())),
+        ("msg", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
 /// Emit one record to stderr if enabled.
 pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
-        eprintln!("[{:<5} {}] {}", level.name(), target, args);
+        if JSON_FORMAT.load(Ordering::Relaxed) {
+            eprintln!("{}", json_line(level, target, &args.to_string()));
+        } else {
+            eprintln!("[{:<5} {}] {}", level.name(), target, args);
+        }
     }
 }
 
@@ -112,5 +160,30 @@ mod tests {
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Info) || !enabled(Level::Info)); // never panics
         assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn parse_level_accepts_all_names_and_rejects_junk() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level("INFO"), None); // levels are lowercase
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn json_line_is_parseable_and_escaped() {
+        let line = json_line(Level::Warn, "scfo::test", "msg with \"quotes\"\nand newline");
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert!(v.get("ts").and_then(|t| t.as_f64()).unwrap() > 0.0);
+        assert_eq!(v.get("level").and_then(|l| l.as_str()), Some("WARN"));
+        assert_eq!(v.get("target").and_then(|t| t.as_str()), Some("scfo::test"));
+        assert_eq!(
+            v.get("msg").and_then(|m| m.as_str()),
+            Some("msg with \"quotes\"\nand newline")
+        );
     }
 }

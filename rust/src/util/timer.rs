@@ -27,6 +27,15 @@ impl Stopwatch {
     }
 }
 
+/// Nanoseconds since a process-wide monotonic origin (the first call).
+/// Shared clock for span tracing ([`crate::obs`]): all spans in one process
+/// are on the same axis, so Chrome-trace timestamps nest correctly.
+/// Allocation-free after the first call.
+pub fn monotonic_ns() -> u64 {
+    static ORIGIN: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    ORIGIN.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
 /// Time a closure, returning (result, seconds).
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t = Instant::now();
@@ -56,6 +65,13 @@ mod tests {
         let (x, secs) = time_it(|| 21 * 2);
         assert_eq!(x, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn monotonic_ns_is_monotone() {
+        let a = monotonic_ns();
+        let b = monotonic_ns();
+        assert!(b >= a);
     }
 
     #[test]

@@ -234,6 +234,9 @@ impl StreamTable {
     pub(crate) fn sample_slot_into(&mut self, t0: f64, dt: f64, streams: &mut [Stream]) -> usize {
         debug_assert_eq!(streams.len(), self.len(), "table out of sync with streams");
         let mut total = 0usize;
+        // one trace span per monomorphic family pass (crate::obs); guards
+        // are dropped explicitly so the passes trace as siblings
+        let span = crate::obs_span!("workload", "poisson");
         for &sid in &self.poisson {
             let i = sid as usize;
             let s = &mut streams[i];
@@ -245,6 +248,8 @@ impl StreamTable {
             s.last_rate = r;
             total += s.last_offsets.len();
         }
+        drop(span);
+        let span = crate::obs_span!("workload", "diurnal");
         for (k, &sid) in self.diurnal.iter().enumerate() {
             let i = sid as usize;
             let s = &mut streams[i];
@@ -257,6 +262,8 @@ impl StreamTable {
             s.last_rate = r;
             total += s.last_offsets.len();
         }
+        drop(span);
+        let span = crate::obs_span!("workload", "mmpp");
         for (k, &sid) in self.mmpp.iter().enumerate() {
             let i = sid as usize;
             let s = &mut streams[i];
@@ -278,6 +285,8 @@ impl StreamTable {
             s.last_rate = r;
             total += s.last_offsets.len();
         }
+        drop(span);
+        let span = crate::obs_span!("workload", "flash-crowd");
         for (k, &sid) in self.flash.iter().enumerate() {
             let i = sid as usize;
             let s = &mut streams[i];
@@ -296,6 +305,8 @@ impl StreamTable {
             s.last_rate = r;
             total += s.last_offsets.len();
         }
+        drop(span);
+        let span = crate::obs_span!("workload", "drift");
         for (k, &sid) in self.drift.iter().enumerate() {
             let i = sid as usize;
             let s = &mut streams[i];
@@ -306,6 +317,7 @@ impl StreamTable {
             s.last_rate = r;
             total += s.last_offsets.len();
         }
+        drop(span);
         total
     }
 

@@ -1,6 +1,12 @@
 //! Allocation-free hot-path regression: after the first (warm-up) iteration,
 //! `GradientProjection::step` must not touch the heap — every per-iteration
-//! buffer lives in the preallocated `Workspace`.
+//! buffer lives in the preallocated `Workspace`. The same counted block
+//! pins the observability layer's zero-cost-when-disabled contract: `step`
+//! is instrumented with `obs_span!` sites (and the virtual-coordinate
+//! stores), so any hidden allocation in a disabled span would trip the
+//! counter; an explicit macro-layer block re-checks this directly, and an
+//! enabled-recorder block proves recording into the preallocated ring
+//! stays allocation-free too.
 //!
 //! This file holds exactly one test so the counting `#[global_allocator]`
 //! only ever observes the allocations of the code under test (integration
@@ -81,6 +87,10 @@ fn gp_step_is_allocation_free_after_warmup() {
     // warm-up: the first step may still fault in lazily-grown structures
     gp.step(&net);
 
+    // tracing is disabled (the default): the obs_span! sites inside step()
+    // must be inert, so the 0-allocation assertion below also pins the
+    // observability layer's disabled-path cost
+    assert!(!scfo::obs::enabled());
     ALLOCATIONS.store(0, Ordering::SeqCst);
     COUNTING.store(true, Ordering::SeqCst);
     let mut last_cost = f64::INFINITY;
@@ -99,4 +109,43 @@ fn gp_step_is_allocation_free_after_warmup() {
     // the optimizer still did real work under the counter
     gp.phi.validate(&net).unwrap();
     assert!(!gp.phi.has_loop());
+
+    // the macro layer itself, counted directly: disabled spans and
+    // coordinate stores never touch the heap
+    ALLOCATIONS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for i in 0..1000u64 {
+        scfo::obs::set_slot(i);
+        scfo::obs::set_gp_iter(i);
+        scfo::obs::set_control_epoch(i);
+        scfo::obs::set_topo_epoch(i);
+        let _g = std::hint::black_box(scfo::obs_span!("test", "disabled"));
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let count = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        count, 0,
+        "disabled obs_span!/coordinate stores allocated {count} times"
+    );
+
+    // enabled recording is allocation-free too: the ring's capacity is
+    // reserved up front and span records are Copy (the clock read and the
+    // mutex lock allocate nothing)
+    scfo::obs::enable(4096);
+    {
+        // warm the recording path (first lock/tid assignment)
+        let _g = scfo::obs_span!("test", "warm");
+    }
+    ALLOCATIONS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..1000 {
+        let _g = std::hint::black_box(scfo::obs_span!("test", "enabled"));
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let count = ALLOCATIONS.load(Ordering::SeqCst);
+    scfo::obs::clear();
+    assert_eq!(
+        count, 0,
+        "enabled span recording allocated {count} times across 1000 spans"
+    );
 }

@@ -22,7 +22,7 @@ use scfo::scenarios::{runner, DistributedSpec};
 use scfo::util::json::Json;
 
 /// Keys whose values are wall-clock / environment dependent.
-const VOLATILE_KEYS: [&str; 13] = [
+const VOLATILE_KEYS: [&str; 16] = [
     "solve_secs",
     "cache_hit",
     "build_secs",
@@ -36,6 +36,9 @@ const VOLATILE_KEYS: [&str; 13] = [
     "slot_wall_ms_mean",
     "slot_wall_ms_max",
     "streams_per_sec",
+    "phase_sample_ms_mean",
+    "phase_estimate_ms_mean",
+    "phase_detect_ms_mean",
 ];
 
 const REL_TOL: f64 = 1e-9;

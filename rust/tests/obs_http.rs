@@ -1,0 +1,351 @@
+//! Observability-surface acceptance tests: a short serve loop behind the
+//! HTTP ops API, with `/metrics` checked by an in-test Prometheus
+//! exposition-format validator (family grouping, `# HELP`/`# TYPE`
+//! headers, gauge + bucketed-histogram families) and `/profile` checked as
+//! well-formed Chrome trace-event JSON (monotone timestamps, matched `B`/`E`
+//! pairs per thread lane).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use scfo::control::{AppSpec, AppStatus, ControlOptions, ControlPlane, OpsServer};
+use scfo::scenarios::{Congestion, ScenarioSpec};
+use scfo::util::json::Json;
+
+fn light_plane() -> ControlPlane {
+    let spec = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+    ControlPlane::new(spec.effective_base(), ControlOptions::default()).unwrap()
+}
+
+/// Issue one HTTP request from a helper thread while the main thread polls
+/// the ops server (the production single-threaded poll loop).
+fn http_request(
+    srv: &OpsServer,
+    plane: &mut ControlPlane,
+    method: &str,
+    path: &str,
+) -> (u16, String) {
+    let addr = srv.local_addr();
+    let request =
+        format!("{method} {path} HTTP/1.1\r\nHost: scfo\r\nContent-Length: 0\r\n\r\n");
+    let handle = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("connect ops API");
+        stream.write_all(request.as_bytes()).unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        response
+    });
+    let response = loop {
+        srv.poll(plane, None::<&std::path::Path>);
+        if handle.is_finished() {
+            break handle.join().unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    };
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let body = response
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// Family of a sample line's metric name: strip labels, then the
+/// histogram-series suffixes.
+fn family_of_sample(name: &str) -> String {
+    let bare = name.split('{').next().unwrap_or(name);
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(stripped) = bare.strip_suffix(suffix) {
+            return stripped.to_string();
+        }
+    }
+    bare.to_string()
+}
+
+#[derive(Debug, Default)]
+struct Exposition {
+    /// family → declared kind (counter|gauge|histogram)
+    types: BTreeMap<String, String>,
+    /// family → number of `# TYPE` lines seen (strict scrapers want 1)
+    type_lines: BTreeMap<String, usize>,
+    /// families with a `# HELP` line
+    helps: BTreeMap<String, usize>,
+    /// sample name (with labels) → value
+    samples: Vec<(String, f64)>,
+}
+
+/// Parse a Prometheus text-exposition document, panicking on any
+/// malformed line; mirrors what a strict scraper would enforce.
+fn parse_exposition(text: &str) -> Exposition {
+    let mut e = Exposition::default();
+    let mut current_family: Option<String> = None;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let family = it.next().expect("TYPE family").to_string();
+            let kind = it.next().expect("TYPE kind").to_string();
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                "unknown kind in {line:?}"
+            );
+            if let Some(prev) = e.types.insert(family.clone(), kind.clone()) {
+                assert_eq!(prev, kind, "family {family} re-declared with a new kind");
+            }
+            *e.type_lines.entry(family.clone()).or_default() += 1;
+            current_family = Some(family);
+        } else if let Some(rest) = line.strip_prefix("# HELP ") {
+            let family = rest.split(' ').next().expect("HELP family").to_string();
+            assert!(
+                rest.len() > family.len() + 1,
+                "HELP without text: {line:?}"
+            );
+            *e.helps.entry(family).or_default() += 1;
+        } else if let Some(rest) = line.strip_prefix('#') {
+            panic!("unexpected comment line: #{rest}");
+        } else {
+            let (name, value) = line.rsplit_once(' ').expect("sample line");
+            let value: f64 = value.parse().unwrap_or_else(|_| {
+                panic!("unparseable sample value in {line:?}")
+            });
+            let family = family_of_sample(name);
+            assert_eq!(
+                current_family.as_deref(),
+                Some(family.as_str()),
+                "sample {name} not grouped under its family header \
+                 (current: {current_family:?})"
+            );
+            // label syntax sanity: balanced braces, quoted values
+            if let Some(idx) = name.find('{') {
+                assert!(name.ends_with('}'), "unterminated labels in {name}");
+                let body = &name[idx + 1..name.len() - 1];
+                for pair in body.split("\",") {
+                    let pair = pair.trim_end_matches('"');
+                    let (k, v) = pair.split_once("=\"").unwrap_or_else(|| {
+                        panic!("malformed label pair {pair:?} in {name}")
+                    });
+                    assert!(!k.is_empty() && !v.contains('\n'), "bad label {k}={v}");
+                }
+            }
+            e.samples.push((name.to_string(), value));
+        }
+    }
+    e
+}
+
+impl Exposition {
+    fn sample(&self, name: &str) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Validate one bucketed histogram family end to end: cumulative
+    /// monotone `_bucket` series ending at `+Inf`, with `_sum` and a
+    /// `_count` equal to the `+Inf` bucket. `label` selects one series
+    /// (e.g. `phase="sample",` or "" for unlabeled).
+    fn check_histogram(&self, family: &str, label: &str) {
+        assert_eq!(
+            self.types.get(family).map(String::as_str),
+            Some("histogram"),
+            "{family} must be declared a histogram"
+        );
+        let prefix = format!("{family}_bucket{{{label}le=\"");
+        let buckets: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|(n, _)| n.starts_with(&prefix))
+            .map(|(_, v)| *v)
+            .collect();
+        assert!(
+            buckets.len() >= 2,
+            "{family}{{{label}}} needs buckets, found {}",
+            buckets.len()
+        );
+        assert!(
+            buckets.windows(2).all(|w| w[0] <= w[1]),
+            "{family}{{{label}}} buckets are not cumulative: {buckets:?}"
+        );
+        let inf = self
+            .sample(&format!("{family}_bucket{{{label}le=\"+Inf\"}}"))
+            .expect("+Inf bucket");
+        let count_name = if label.is_empty() {
+            format!("{family}_count")
+        } else {
+            format!("{family}_count{{{}}}", label.trim_end_matches(','))
+        };
+        let sum_name = if label.is_empty() {
+            format!("{family}_sum")
+        } else {
+            format!("{family}_sum{{{}}}", label.trim_end_matches(','))
+        };
+        let count = self.sample(&count_name).expect("histogram _count");
+        assert_eq!(count, inf, "{family}: _count != +Inf bucket");
+        assert!(
+            self.sample(&sum_name).is_some(),
+            "{family}: missing {sum_name}"
+        );
+    }
+}
+
+#[test]
+fn metrics_surface_passes_exposition_validation() {
+    let mut plane = light_plane();
+    // a short serve loop + one admission so every surface has data
+    for _ in 0..5 {
+        plane.run_slot().unwrap();
+    }
+    let app = AppSpec {
+        id: "obs-app".into(),
+        dest: 4,
+        num_tasks: 2,
+        packet_sizes: vec![10.0, 5.0, 1.0],
+        rates: vec![(0, 0.2)],
+        status: AppStatus::Active,
+    };
+    assert!(plane.register(app).unwrap().accepted());
+    plane.run_slot().unwrap();
+
+    let srv = OpsServer::bind("127.0.0.1:0").unwrap();
+    let (code, body) = http_request(&srv, &mut plane, "GET", "/metrics");
+    assert_eq!(code, 200);
+    let e = parse_exposition(&body);
+
+    // strict grouping: exactly one TYPE header per family, HELP for each
+    for (family, n) in &e.type_lines {
+        assert_eq!(*n, 1, "family {family} re-emits its # TYPE header");
+        assert!(
+            e.helps.get(family).is_some(),
+            "family {family} has no # HELP line"
+        );
+    }
+
+    // ≥ 1 gauge family with a live sample
+    let gauges: Vec<&String> = e
+        .types
+        .iter()
+        .filter(|(_, k)| k.as_str() == "gauge")
+        .map(|(f, _)| f)
+        .collect();
+    assert!(!gauges.is_empty(), "no gauge families in:\n{body}");
+    assert_eq!(e.sample("scfo_epoch"), Some(1.0), "one admission commit");
+    assert_eq!(
+        e.sample("scfo_apps_total"),
+        Some(plane.catalog.len() as f64)
+    );
+
+    // ≥ 2 bucketed histogram families, each fully formed
+    let histograms: Vec<&String> = e
+        .types
+        .iter()
+        .filter(|(_, k)| k.as_str() == "histogram")
+        .map(|(f, _)| f)
+        .collect();
+    assert!(
+        histograms.len() >= 2,
+        "need >= 2 histogram families, got {histograms:?}"
+    );
+    e.check_histogram("scfo_admission_latency_seconds", "");
+    e.check_histogram("scfo_rebind_latency_seconds", "");
+    for phase in ["sample", "observe", "optimize", "measure"] {
+        e.check_histogram("scfo_slot_phase_seconds", &format!("phase=\"{phase}\","));
+    }
+    // the per-phase series carry the six served slots
+    assert_eq!(
+        e.sample("scfo_slot_phase_seconds_count{phase=\"optimize\"}"),
+        Some(6.0)
+    );
+    // counters that the control-smoke CI check greps for stay present
+    assert_eq!(e.sample("scfo_admission_accepted_total"), Some(1.0));
+    assert_eq!(e.sample("scfo_slots_served_total"), Some(6.0));
+}
+
+#[test]
+fn profile_endpoint_serves_wellformed_chrome_trace() {
+    // /profile with tracing disabled: valid, empty trace array
+    let mut plane = light_plane();
+    let srv = OpsServer::bind("127.0.0.1:0").unwrap();
+    let (code, body) = http_request(&srv, &mut plane, "GET", "/profile");
+    assert_eq!(code, 200);
+    assert!(Json::parse(&body).unwrap().as_arr().is_some());
+
+    // enabled: serve a few slots, then validate the snapshot. Capacity is
+    // large enough that no span is dropped mid-test even if another test
+    // thread in this binary records concurrently.
+    scfo::obs::enable(scfo::obs::DEFAULT_CAPACITY);
+    for _ in 0..3 {
+        plane.run_slot().unwrap();
+    }
+    let (code, body) = http_request(&srv, &mut plane, "GET", "/profile");
+    scfo::obs::clear();
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).unwrap();
+    let events = doc.as_arr().expect("trace document is a JSON array");
+    assert!(
+        events.len() >= 2,
+        "serving slots must have recorded spans, got {}",
+        events.len()
+    );
+
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut stacks: BTreeMap<(u64, u64), Vec<String>> = BTreeMap::new();
+    let mut names: Vec<String> = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("ph");
+        assert!(
+            ["B", "E", "X"].contains(&ph),
+            "unexpected event phase {ph:?}"
+        );
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+        assert!(ts >= last_ts, "timestamps must be monotone");
+        last_ts = ts;
+        let pid = ev.get("pid").and_then(Json::as_f64).expect("pid") as u64;
+        let tid = ev.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+        let name = ev.get("name").and_then(Json::as_str).expect("name").to_string();
+        match ph {
+            "B" => {
+                // virtual coordinates ride on every begin event
+                let args = ev.get("args").expect("B event args");
+                for coord in ["slot", "gp_iter", "control_epoch", "topo_epoch"] {
+                    assert!(
+                        args.get(coord).and_then(Json::as_f64).is_some(),
+                        "missing {coord} in args"
+                    );
+                }
+                stacks.entry((pid, tid)).or_default().push(name.clone());
+                names.push(name);
+            }
+            "E" => {
+                let top = stacks.entry((pid, tid)).or_default().pop();
+                assert_eq!(
+                    top.as_deref(),
+                    Some(name.as_str()),
+                    "E event does not match the innermost open B in lane ({pid},{tid})"
+                );
+            }
+            // complete (X) events are self-contained — no stack entry
+            _ => names.push(name),
+        }
+    }
+    for ((pid, tid), stack) in &stacks {
+        assert!(
+            stack.is_empty(),
+            "unmatched B events in lane ({pid},{tid}): {stack:?}"
+        );
+    }
+    // the serving instrumentation is present in the snapshot
+    for expected in ["slot", "sample", "optimize", "step", "flow-solve"] {
+        assert!(
+            names.iter().any(|n| n == expected),
+            "span {expected:?} missing from trace (got {names:?})"
+        );
+    }
+}
