@@ -232,6 +232,39 @@ pub struct MassiveBench {
     pub phase_detect_ms_mean: f64,
 }
 
+/// Replicated-control-plane measurements attached to a [`GpBenchResult`]
+/// when the bench drives a simulated replica group (`scfo bench --json
+/// --ha`). These are the BENCH.json v8 columns: election latency, commit
+/// throughput, and failover time to the first entry committed in the new
+/// leader's term. Tick columns are virtual (deterministic); the `*_secs`
+/// and `commands_per_sec` columns are wall-clock.
+#[derive(Clone, Debug)]
+pub struct HaBench {
+    /// Replica-group size.
+    pub replicas: usize,
+    /// Fault-preset name driving the simulated fabric.
+    pub faults: String,
+    /// Commands committed one-by-one in the throughput phase.
+    pub commands: usize,
+    /// Final commit index on the surviving leader.
+    pub committed: u64,
+    /// Committed-before-kill entries lost or rewritten after failover
+    /// (must be 0; asserted by the bench test below).
+    pub lost: usize,
+    /// Virtual ticks from cold start to the first elected leader.
+    pub election_ticks: u64,
+    /// Virtual ticks from the leader kill to the first new-term commit.
+    pub failover_ticks: u64,
+    /// Wall-clock seconds of the cold-start election.
+    pub election_secs: f64,
+    /// Wall-clock seconds from the kill to the first new-term commit.
+    pub failover_secs: f64,
+    /// Committed commands per wall-clock second of the throughput phase.
+    pub commands_per_sec: f64,
+    /// Fabric messages submitted across the whole run.
+    pub msgs_sent: u64,
+}
+
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
 /// trajectory and a peak-RSS proxy. Emitted into `BENCH.json` by
 /// `scfo bench --json`; schema documented in `docs/PERFORMANCE.md`.
@@ -272,6 +305,8 @@ pub struct GpBenchResult {
     /// Present when the bench drove the million-stream batched workload
     /// hot path (`iter_secs` is then the wall time per served slot).
     pub massive: Option<MassiveBench>,
+    /// Replicated-control-plane columns; `Some` only for `--ha` benches.
+    pub ha: Option<HaBench>,
 }
 
 /// Peak resident-set high-water mark of this process (Linux `VmHWM`);
@@ -339,6 +374,7 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
         control: None,
         topo_churn: None,
         massive: None,
+        ha: None,
     })
 }
 
@@ -436,6 +472,7 @@ pub fn bench_distributed_scenario(
         control: None,
         topo_churn: None,
         massive: None,
+        ha: None,
     })
 }
 
@@ -512,6 +549,7 @@ pub fn bench_serving_scenario(
         control: None,
         topo_churn: None,
         massive: None,
+        ha: None,
     })
 }
 
@@ -613,6 +651,7 @@ pub fn bench_control_scenario(family: &str, slots: usize) -> anyhow::Result<GpBe
         control: Some(control),
         topo_churn: None,
         massive: None,
+        ha: None,
     })
 }
 
@@ -721,6 +760,7 @@ pub fn bench_topo_churn_scenario(family: &str, slots: usize) -> anyhow::Result<G
         control: None,
         topo_churn: Some(topo),
         massive: None,
+        ha: None,
     })
 }
 
@@ -829,6 +869,167 @@ pub fn bench_massive_scenario(
             phase_sample_ms_mean,
             phase_estimate_ms_mean,
             phase_detect_ms_mean,
+        }),
+        ha: None,
+    })
+}
+
+/// Benchmark the replicated control plane on a simulated fabric: cold-start
+/// election latency, single-client commit throughput, then a leader kill and
+/// the failover time to the first entry committed in the new leader's term.
+/// The fabric runs the `clean` preset so wall-time columns measure the state
+/// machine, not injected delay; `cost_trajectory` records the commit index
+/// after each committed command.
+pub fn bench_ha_scenario(
+    family: &str,
+    replicas: usize,
+    commands: usize,
+) -> anyhow::Result<GpBenchResult> {
+    use crate::control::{ReplCommand, ReplGroup};
+    use crate::scenarios::{Congestion, ScenarioSpec};
+    use crate::distributed::FaultSpec;
+    use crate::util::rng::Rng;
+
+    anyhow::ensure!(replicas >= 3, "ha bench needs at least 3 replicas");
+    anyhow::ensure!(commands >= 1, "ha bench needs at least 1 command");
+    let spec = ScenarioSpec::named(family, Congestion::Light)?;
+    let sc = spec.effective_base();
+    let mut rng = Rng::new(sc.seed);
+    let t0 = Instant::now();
+    let net = sc.build(&mut rng)?;
+    let build_secs = t0.elapsed().as_secs_f64();
+
+    let faults = FaultSpec::clean(sc.seed);
+    let faults_name = faults.name.clone();
+    let mut g = ReplGroup::new(replicas, sc.seed, faults);
+
+    let t_elect = Instant::now();
+    let election_ticks = g
+        .run_until_leader(2000)
+        .ok_or_else(|| anyhow::anyhow!("ha bench: no leader within 2000 ticks"))?;
+    let election_secs = t_elect.elapsed().as_secs_f64();
+
+    // Throughput phase: commit `commands` drain no-ops one at a time so each
+    // sample is a full propose → replicate → commit round trip.
+    let mut iter_secs = Vec::with_capacity(commands);
+    let mut cost_trajectory = Vec::with_capacity(commands);
+    let t_commit = Instant::now();
+    for k in 0..commands {
+        let t = Instant::now();
+        let (_, index) = g
+            .propose(ReplCommand::Drain(format!("bench-{k}")))
+            .ok_or_else(|| anyhow::anyhow!("ha bench: proposal {k} rejected"))?;
+        g.run_until_committed(index, 2000)
+            .ok_or_else(|| anyhow::anyhow!("ha bench: command {k} never committed"))?;
+        iter_secs.push(t.elapsed().as_secs_f64());
+        cost_trajectory.push(index as f64);
+    }
+    let commit_wall = t_commit.elapsed().as_secs_f64();
+    let commands_per_sec = if commit_wall > 0.0 {
+        commands as f64 / commit_wall
+    } else {
+        0.0
+    };
+
+    // Failover phase: kill the leader, then drive the group until the new
+    // leader commits an entry of its own term (a raft leader only counts
+    // replication for entries of its own term, so a barrier no-op is
+    // proposed once a candidate wins).
+    let victim = g
+        .leader()
+        .ok_or_else(|| anyhow::anyhow!("ha bench: leader vanished before kill"))?;
+    let commit_at_kill = g
+        .replicas
+        .iter()
+        .enumerate()
+        .filter(|(id, _)| g.alive[*id])
+        .map(|(_, r)| r.commit_index())
+        .max()
+        .unwrap_or(0);
+    let pre_entries: Vec<_> = {
+        let richest = g
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(id, _)| g.alive[*id] && *id != victim)
+            .max_by_key(|(_, r)| r.log_len())
+            .map(|(id, _)| id)
+            .ok_or_else(|| anyhow::anyhow!("ha bench: no survivor"))?;
+        (1..=commit_at_kill)
+            .filter_map(|idx| g.replicas[richest].log_entry(idx).cloned())
+            .collect()
+    };
+    g.kill(victim);
+    let kill_tick = g.now();
+    let t_fail = Instant::now();
+    let mut failover_ticks = 0u64;
+    let mut barrier_posted = false;
+    for _ in 0..4000u64 {
+        g.step();
+        let Some(l) = g.leader() else { continue };
+        let term = g.replicas[l].term();
+        let has_own = (1..=g.replicas[l].log_len())
+            .any(|idx| g.replicas[l].log_entry(idx).map(|e| e.term) == Some(term));
+        if !has_own && !barrier_posted {
+            barrier_posted = g.propose(ReplCommand::SnapshotBarrier).is_some();
+        }
+        if g.replicas[l].commit_index() > commit_at_kill {
+            failover_ticks = g.now() - kill_tick;
+            break;
+        }
+    }
+    anyhow::ensure!(
+        failover_ticks > 0,
+        "ha bench: failover never committed past the kill point"
+    );
+    let failover_secs = t_fail.elapsed().as_secs_f64();
+
+    // No committed entry may be lost or rewritten by the failover.
+    let mut lost = 0usize;
+    for (id, r) in g.replicas.iter().enumerate() {
+        if !g.alive[id] {
+            continue;
+        }
+        for (off, pre) in pre_entries.iter().enumerate() {
+            let idx = off as u64 + 1;
+            if r.log_entry(idx).map(|e| e != pre).unwrap_or(true) {
+                lost += 1;
+            }
+        }
+    }
+    let committed = g
+        .leader()
+        .map(|l| g.replicas[l].commit_index())
+        .unwrap_or(commit_at_kill);
+    let msgs_sent = g.stats().sent;
+
+    Ok(GpBenchResult {
+        name: format!("{}-ha", spec.name()),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs,
+        cost_trajectory,
+        peak_rss_bytes: peak_rss_bytes(),
+        dynamics: None,
+        distributed: None,
+        control: None,
+        topo_churn: None,
+        massive: None,
+        ha: Some(HaBench {
+            replicas,
+            faults: faults_name,
+            commands,
+            committed,
+            lost,
+            election_ticks,
+            failover_ticks,
+            election_secs,
+            failover_secs,
+            commands_per_sec,
+            msgs_sent,
         }),
     })
 }
@@ -993,6 +1194,21 @@ impl GpBenchResult {
                 );
             }
         }
+        if let Some(h) = &self.ha {
+            if let Json::Obj(o) = &mut doc {
+                o.insert("ha_replicas".into(), Json::Num(h.replicas as f64));
+                o.insert("ha_faults".into(), Json::Str(h.faults.clone()));
+                o.insert("ha_commands".into(), Json::Num(h.commands as f64));
+                o.insert("repl_committed".into(), Json::Num(h.committed as f64));
+                o.insert("repl_lost".into(), Json::Num(h.lost as f64));
+                o.insert("election_ticks".into(), Json::Num(h.election_ticks as f64));
+                o.insert("failover_ticks".into(), Json::Num(h.failover_ticks as f64));
+                o.insert("election_secs".into(), Json::Num(h.election_secs));
+                o.insert("failover_secs".into(), Json::Num(h.failover_secs));
+                o.insert("commands_per_sec".into(), Json::Num(h.commands_per_sec));
+                o.insert("repl_msgs_sent".into(), Json::Num(h.msgs_sent as f64));
+            }
+        }
         if let Some(dyn_) = &self.dynamics {
             if let Json::Obj(o) = &mut doc {
                 o.insert("workload".into(), Json::Str(dyn_.workload.clone()));
@@ -1032,8 +1248,12 @@ impl GpBenchResult {
 /// `arrivals_total`, `detections`, `offered_load`, `slot_wall_ms_mean`,
 /// `slot_wall_ms_max`, `streams_per_sec`); 7 added the massive tier's
 /// per-phase slot wall-time breakdown (`phase_sample_ms_mean`,
-/// `phase_estimate_ms_mean`, `phase_detect_ms_mean`).
-pub const BENCH_JSON_VERSION: f64 = 7.0;
+/// `phase_estimate_ms_mean`, `phase_detect_ms_mean`); 8 added the optional
+/// replicated-control-plane columns (`ha_replicas`, `ha_faults`,
+/// `ha_commands`, `repl_committed`, `repl_lost`, `election_ticks`,
+/// `failover_ticks`, `election_secs`, `failover_secs`, `commands_per_sec`,
+/// `repl_msgs_sent`).
+pub const BENCH_JSON_VERSION: f64 = 8.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
@@ -1230,7 +1450,7 @@ mod tests {
         );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(7.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(8.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "topo_events",
@@ -1277,7 +1497,7 @@ mod tests {
         );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(7.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(8.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "streams",
@@ -1302,6 +1522,49 @@ mod tests {
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         assert!(sc.get("streams_per_sec").is_none());
+    }
+
+    #[test]
+    fn ha_bench_emits_v8_columns() {
+        let res = bench_ha_scenario("abilene", 3, 4).unwrap();
+        assert_eq!(res.iter_secs.len(), 4);
+        assert_eq!(res.cost_trajectory.len(), 4);
+        let h = res.ha.as_ref().expect("ha block present");
+        assert_eq!(h.replicas, 3);
+        assert_eq!(h.faults, "clean");
+        assert_eq!(h.commands, 4);
+        assert_eq!(h.lost, 0, "failover lost a committed entry");
+        assert!(h.committed >= 4, "commands not all committed");
+        assert!(h.election_ticks > 0);
+        assert!(h.failover_ticks > 0);
+        assert!(h.commands_per_sec > 0.0);
+        assert!(h.msgs_sent > 0);
+        let doc = gp_bench_json(&[res]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(8.0));
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "ha_replicas",
+            "ha_faults",
+            "ha_commands",
+            "repl_committed",
+            "repl_lost",
+            "election_ticks",
+            "failover_ticks",
+            "election_secs",
+            "failover_secs",
+            "commands_per_sec",
+            "repl_msgs_sent",
+        ] {
+            assert!(sc.get(key).is_some(), "missing v8 column {key}");
+        }
+        assert_eq!(sc.get("repl_lost").unwrap().as_usize(), Some(0));
+        // static benches carry no replication columns
+        let plain = bench_gp_scenario("abilene", 2).unwrap();
+        let doc = gp_bench_json(&[plain]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert!(sc.get("commands_per_sec").is_none());
     }
 
     #[test]

@@ -17,6 +17,17 @@
 //! |                    | admission-checked — 200 accept / 409 reject         |
 //! | `DELETE /apps/{id}`| drain an active app; a draining app is removed      |
 //! | `POST /checkpoint` | atomic snapshot into the configured directory       |
+//! | `GET /raftish`     | replica status (replicated deployments only)        |
+//! | `POST /raftish/msg`| consensus message exchange between replicas         |
+//!
+//! Replicated deployments (`scfo serve --replica I --peers A,B,C`) poll
+//! through [`OpsServer::poll_repl`]: mutating requests on the leader
+//! replicate through the command log before they apply (an HTTP 200 means
+//! the epoch is majority-committed), mutating requests on a follower
+//! answer `307 Temporary Redirect` with a `Location` pointing at the
+//! believed leader (`503` while no leader is known), and reads keep being
+//! served locally from replicated state — which is exactly what lets a
+//! follower keep answering `/status` after the leader dies.
 //!
 //! See `docs/CONTROL_PLANE.md` for the API reference with examples.
 
@@ -25,7 +36,8 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::time::Duration;
 
-use crate::control::{AppStatus, ControlPlane};
+use crate::control::replication::{LiveReplica, ReplCommand, ReplMsg};
+use crate::control::{snapshot, AppStatus, ControlPlane};
 use crate::util::json::Json;
 
 /// Upper bound on request head + body we are willing to buffer.
@@ -72,15 +84,36 @@ impl OpsServer {
         plane: &mut ControlPlane,
         checkpoint_dir: Option<&Path>,
     ) -> usize {
+        self.poll_repl(plane, checkpoint_dir, None)
+    }
+
+    /// [`OpsServer::poll`] for a replicated deployment: consensus routes
+    /// are live and mutating routes go through the command log (leader)
+    /// or redirect to it (follower). With `repl = None` this is exactly
+    /// `poll`.
+    pub fn poll_repl(
+        &self,
+        plane: &mut ControlPlane,
+        checkpoint_dir: Option<&Path>,
+        mut repl: Option<&mut LiveReplica>,
+    ) -> usize {
+        if let Some(r) = repl.as_deref_mut() {
+            plane.repl_gauges = Some((r.term(), r.commit_index()));
+        }
         let mut handled = 0;
         loop {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
                     handled += 1;
                     plane.stats.http.counter("scfo_http_requests_total").inc();
-                    if let Err(e) = handle_connection(stream, plane, checkpoint_dir) {
+                    if let Err(e) =
+                        handle_connection(stream, plane, checkpoint_dir, repl.as_deref_mut())
+                    {
                         plane.stats.http.counter("scfo_http_errors_total").inc();
                         crate::log_warn!("ops API connection error: {e}");
+                    }
+                    if let Some(r) = repl.as_deref_mut() {
+                        plane.repl_gauges = Some((r.term(), r.commit_index()));
                     }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
@@ -98,6 +131,7 @@ fn handle_connection(
     mut stream: TcpStream,
     plane: &mut ControlPlane,
     checkpoint_dir: Option<&Path>,
+    repl: Option<&mut LiveReplica>,
 ) -> anyhow::Result<()> {
     stream.set_nonblocking(false)?;
     stream.set_read_timeout(Some(IO_TIMEOUT))?;
@@ -106,12 +140,12 @@ fn handle_connection(
         Ok(r) => r,
         Err(e) => {
             let body = Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string();
-            let _ = respond(&mut stream, 400, "application/json", &body);
+            let _ = respond(&mut stream, 400, "application/json", &body, None);
             return Ok(());
         }
     };
-    let (code, content_type, body) = route(&req, plane, checkpoint_dir);
-    respond(&mut stream, code, content_type, &body)
+    let (code, content_type, body, location) = route(&req, plane, checkpoint_dir, repl);
+    respond(&mut stream, code, content_type, &body, location.as_deref())
 }
 
 /// Parse one HTTP/1.1 request off the stream: request line, headers (only
@@ -172,18 +206,20 @@ fn find_header_end(buf: &[u8]) -> Option<usize> {
 }
 
 /// Dispatch a request against the control plane. Returns
-/// (status, content type, body).
+/// (status, content type, body, optional Location header value).
 fn route(
     req: &Request,
     plane: &mut ControlPlane,
     checkpoint_dir: Option<&Path>,
-) -> (u16, &'static str, String) {
-    let json = |code: u16, v: Json| (code, "application/json", v.to_string_pretty());
+    mut repl: Option<&mut LiveReplica>,
+) -> (u16, &'static str, String, Option<String>) {
+    let json = |code: u16, v: Json| (code, "application/json", v.to_string_pretty(), None);
     let err = |code: u16, msg: String| {
         (
             code,
             "application/json",
             Json::obj(vec![("error", Json::Str(msg))]).to_string_pretty(),
+            None,
         )
     };
     match (req.method.as_str(), req.path.as_str()) {
@@ -197,14 +233,48 @@ fn route(
             ]),
         ),
         ("GET", "/status") => json(200, plane.status_json()),
-        ("GET", "/metrics") => (200, "text/plain; version=0.0.4", plane.metrics_text()),
+        ("GET", "/metrics") => (
+            200,
+            "text/plain; version=0.0.4",
+            plane.metrics_text(),
+            None,
+        ),
         // flight-recorder snapshot as Chrome trace-event JSON; an empty
         // array while tracing is disabled (still a valid trace document)
         ("GET", "/profile") => (
             200,
             "application/json",
             crate::obs::chrome_trace_json().to_string_pretty(),
+            None,
         ),
+        // replica status; 404 on an unreplicated plane so probes can tell
+        // the deployments apart
+        ("GET", "/raftish") => match repl {
+            Some(r) => json(200, r.status_json()),
+            None => err(404, "replication disabled (scfo serve --replica)".into()),
+        },
+        // consensus message exchange: feed the message into the state
+        // machine, apply anything that committed, return the reply (JSON
+        // null when the message produced none)
+        ("POST", "/raftish/msg") => match repl {
+            Some(r) => {
+                let msg = match Json::parse(&req.body)
+                    .map_err(|e| anyhow::anyhow!("{e}"))
+                    .and_then(|v| ReplMsg::from_json(&v))
+                {
+                    Ok(m) => m,
+                    Err(e) => return err(400, format!("bad consensus message: {e}")),
+                };
+                let (reply, committed) = r.handle_msg(msg);
+                for cmd in &committed {
+                    if let Err(e) = plane.apply_committed(cmd) {
+                        crate::log_warn!("applying committed {} failed: {e}", cmd.op());
+                    }
+                }
+                json(200, reply.map(|m| m.to_json()).unwrap_or(Json::Null))
+            }
+            None => err(404, "replication disabled (scfo serve --replica)".into()),
+        },
         ("POST", "/apps") => {
             let spec = match Json::parse(&req.body)
                 .map_err(|e| anyhow::anyhow!("{e}"))
@@ -213,6 +283,20 @@ fn route(
                 Ok(s) => s,
                 Err(e) => return err(400, format!("bad app spec: {e}")),
             };
+            // replicated: the command must majority-commit before it
+            // applies; followers redirect to the leader
+            if let Some(r) = repl.as_deref_mut() {
+                if !r.is_leader() {
+                    return redirect_to_leader(r, "/apps");
+                }
+                let exists = plane.catalog.get(&spec.id).is_some();
+                let (cmd, action) = if exists {
+                    (ReplCommand::Update(spec), "update")
+                } else {
+                    (ReplCommand::Register(spec), "register")
+                };
+                return apply_replicated(r, plane, cmd, action);
+            }
             let exists = plane.catalog.get(&spec.id).is_some();
             let outcome = if exists {
                 plane.update(spec)
@@ -237,18 +321,36 @@ fn route(
             }
         }
         ("POST", "/checkpoint") => match checkpoint_dir {
-            Some(dir) => match plane.checkpoint(dir) {
-                Ok(path) => json(
-                    200,
-                    Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("path", Json::Str(path.display().to_string())),
-                        ("epoch", Json::Num(plane.epoch() as f64)),
-                        ("slot", Json::Num(plane.slots_served() as f64)),
-                    ]),
-                ),
-                Err(e) => err(500, format!("checkpoint failed: {e}")),
-            },
+            Some(dir) => {
+                // a replica checkpoints into its own subdirectory and the
+                // document carries its persistent consensus state (v3)
+                let (dir, repl_state) = match repl.as_deref() {
+                    Some(r) => (snapshot::replica_dir(dir, r.id()), Some(r.persistent_json())),
+                    None => (dir.to_path_buf(), None),
+                };
+                let outcome = plane.snapshot_json().and_then(|doc| {
+                    let doc = match (doc, repl_state) {
+                        (Json::Obj(mut o), Some(rs)) => {
+                            o.insert("replication".into(), rs);
+                            Json::Obj(o)
+                        }
+                        (d, _) => d,
+                    };
+                    snapshot::write_atomic(&dir, &doc)
+                });
+                match outcome {
+                    Ok(path) => json(
+                        200,
+                        Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("path", Json::Str(path.display().to_string())),
+                            ("epoch", Json::Num(plane.epoch() as f64)),
+                            ("slot", Json::Num(plane.slots_served() as f64)),
+                        ]),
+                    ),
+                    Err(e) => err(500, format!("checkpoint failed: {e}")),
+                }
+            }
             None => err(
                 409,
                 "no checkpoint directory configured (scfo serve --checkpoint DIR)".into(),
@@ -256,6 +358,20 @@ fn route(
         },
         ("DELETE", path) if path.starts_with("/apps/") => {
             let id = &path["/apps/".len()..];
+            if let Some(r) = repl.as_deref_mut() {
+                if !r.is_leader() {
+                    return redirect_to_leader(r, path);
+                }
+                let Some(app) = plane.catalog.get(id) else {
+                    return err(404, format!("app '{id}' is not registered"));
+                };
+                let (cmd, action) = if app.status == AppStatus::Active {
+                    (ReplCommand::Drain(id.to_string()), "draining")
+                } else {
+                    (ReplCommand::Remove(id.to_string()), "removed")
+                };
+                return apply_replicated(r, plane, cmd, action);
+            }
             let Some(app) = plane.catalog.get(id) else {
                 return err(404, format!("app '{id}' is not registered"));
             };
@@ -283,22 +399,120 @@ fn route(
     }
 }
 
+/// Follower answer for a mutating request: `307` + `Location` at the
+/// believed leader, or `503` while no leader is known.
+fn redirect_to_leader(
+    r: &LiveReplica,
+    path: &str,
+) -> (u16, &'static str, String, Option<String>) {
+    match r.leader_addr() {
+        Some(addr) => (
+            307,
+            "application/json",
+            Json::obj(vec![
+                ("error", Json::Str("not the leader".into())),
+                ("leader", Json::Str(addr.to_string())),
+            ])
+            .to_string_pretty(),
+            Some(format!("http://{addr}{path}")),
+        ),
+        None => (
+            503,
+            "application/json",
+            Json::obj(vec![(
+                "error",
+                Json::Str("no known leader for this replica group".into()),
+            )])
+            .to_string_pretty(),
+            None,
+        ),
+    }
+}
+
+/// Leader side of a mutating request: replicate `cmd` through the log,
+/// apply everything that committed, and answer from the outcome of the
+/// last committed command (ours). `503` when no quorum acknowledges.
+fn apply_replicated(
+    r: &mut LiveReplica,
+    plane: &mut ControlPlane,
+    cmd: ReplCommand,
+    action: &str,
+) -> (u16, &'static str, String, Option<String>) {
+    let op = cmd.op();
+    match r.replicate(cmd) {
+        Ok(committed) => {
+            let mut outcome = Json::Null;
+            for c in &committed {
+                match plane.apply_committed(c) {
+                    Ok(doc) => outcome = doc,
+                    Err(e) => {
+                        return (
+                            500,
+                            "application/json",
+                            Json::obj(vec![(
+                                "error",
+                                Json::Str(format!("committed '{op}' failed to apply: {e}")),
+                            )])
+                            .to_string_pretty(),
+                            None,
+                        )
+                    }
+                }
+            }
+            let code = match outcome.get("accepted").and_then(Json::as_bool) {
+                Some(false) => 409,
+                _ => 200,
+            };
+            let mut doc = match outcome {
+                Json::Obj(o) => o,
+                _ => std::collections::BTreeMap::new(),
+            };
+            doc.insert("action".into(), Json::Str(action.to_string()));
+            doc.insert("term".into(), Json::from_u64(r.term()));
+            doc.insert("commit".into(), Json::from_u64(r.commit_index()));
+            (
+                code,
+                "application/json",
+                Json::Obj(doc).to_string_pretty(),
+                None,
+            )
+        }
+        Err(e) => (
+            503,
+            "application/json",
+            Json::obj(vec![(
+                "error",
+                Json::Str(format!("replication failed: {e}")),
+            )])
+            .to_string_pretty(),
+            None,
+        ),
+    }
+}
+
 fn respond(
     stream: &mut TcpStream,
     code: u16,
     content_type: &str,
     body: &str,
+    location: Option<&str>,
 ) -> anyhow::Result<()> {
     let reason = match code {
         200 => "OK",
+        307 => "Temporary Redirect",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     };
+    let location_header = match location {
+        Some(l) => format!("Location: {l}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{location_header}Connection: close\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;

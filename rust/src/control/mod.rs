@@ -52,11 +52,13 @@
 pub mod admission;
 pub mod catalog;
 pub mod http;
+pub mod replication;
 pub mod snapshot;
 
 pub use admission::{AdmissionController, AdmissionDecision, AdmissionOptions};
 pub use catalog::{AppCatalog, AppSpec, AppStatus};
 pub use http::OpsServer;
+pub use replication::{LiveReplica, ReplCommand, ReplGroup, ReplMsg, Replica};
 pub use snapshot::{SNAPSHOT_FILE, SNAPSHOT_VERSION};
 
 use std::path::{Path, PathBuf};
@@ -187,6 +189,9 @@ pub struct ControlPlane {
     epoch: u64,
     /// Slots until the rebuild boost is scaled back (0 = no boost active).
     boost_left: usize,
+    /// Latest replication (term, commit index) when this plane serves as a
+    /// replica (`scfo serve --replica`); surfaced as `scfo_repl_*` gauges.
+    pub repl_gauges: Option<(u64, u64)>,
     pub stats: ControlStats,
 }
 
@@ -253,6 +258,7 @@ impl ControlPlane {
             opts,
             epoch: 0,
             boost_left: 0,
+            repl_gauges: None,
             stats: ControlStats::default(),
         })
     }
@@ -489,6 +495,68 @@ impl ControlPlane {
         let remap: Vec<Option<usize>> = (0..catalog.len()).map(Some).collect();
         self.commit(catalog, net, &remap, phi);
         Ok(())
+    }
+
+    // ---- replication -------------------------------------------------------
+
+    /// Apply one *committed* replicated command ([`replication`]) to this
+    /// plane. The dispatch is tolerant, mirroring
+    /// [`replication::apply_to_catalog`]: a register of an existing id
+    /// degrades to an update, an update of a missing id to a register, a
+    /// drain/remove of a missing id is a no-op, and a snapshot barrier
+    /// changes nothing. Tolerance is what makes client re-proposals after
+    /// a failover safe — every replica applies the same committed
+    /// sequence, including any duplicates, and converges to the same
+    /// state. Admission runs inside the apply and is deterministic given
+    /// the plane state, so identical replicas reach identical decisions.
+    ///
+    /// Returns a small outcome document: `{op, applied, epoch}` plus
+    /// `accepted` for admission-checked commands.
+    pub fn apply_committed(&mut self, cmd: &ReplCommand) -> anyhow::Result<Json> {
+        let _span = crate::obs_span!("repl", "apply-committed");
+        let mut accepted = Json::Null;
+        let applied = match cmd {
+            ReplCommand::Register(spec) | ReplCommand::Update(spec) => {
+                let decision = if self.catalog.get(&spec.id).is_some() {
+                    self.update(spec.clone())?
+                } else {
+                    self.register(spec.clone())?
+                };
+                accepted = Json::Bool(decision.accepted());
+                decision.accepted()
+            }
+            ReplCommand::Drain(id) => {
+                if self.catalog.get(id).is_some() {
+                    self.drain(id)?;
+                    true
+                } else {
+                    false
+                }
+            }
+            ReplCommand::Remove(id) => {
+                if self.catalog.get(id).is_some() {
+                    self.remove(id)?;
+                    true
+                } else {
+                    false
+                }
+            }
+            ReplCommand::Topo(event) => {
+                // every replica derives the same pick-RNG from replicated
+                // state (scenario seed + the event's scripted slot), so
+                // the flap picks the same link pairs everywhere
+                let mut rng =
+                    Rng::new(self.scenario.seed ^ (event.at_slot as u64) ^ 0x4A50_C0DE);
+                !self.apply_topo_event(&event.action, &mut rng)?.is_empty()
+            }
+            ReplCommand::SnapshotBarrier => false,
+        };
+        Ok(Json::obj(vec![
+            ("op", Json::Str(cmd.op().to_string())),
+            ("applied", Json::Bool(applied)),
+            ("accepted", accepted),
+            ("epoch", Json::Num(self.epoch as f64)),
+        ]))
     }
 
     // ---- checkpoint / restore ---------------------------------------------
@@ -810,6 +878,21 @@ impl ControlPlane {
                 "gauge",
                 "stale marginal reads tolerated",
                 rs.stale_reads as f64,
+            ));
+        }
+        // replication health (absent on unreplicated planes)
+        if let Some((term, commit)) = self.repl_gauges {
+            out.push_str(&prometheus_line(
+                "scfo_repl_term",
+                "gauge",
+                "replication consensus term",
+                term as f64,
+            ));
+            out.push_str(&prometheus_line(
+                "scfo_repl_commit_index",
+                "gauge",
+                "replication commit index",
+                commit as f64,
             ));
         }
         // flight-recorder health (zeros while tracing is disabled)

@@ -1,0 +1,306 @@
+//! The live replication driver: [`ReplMsg`]s over the ops HTTP surface.
+//!
+//! [`LiveReplica`] wraps the sans-IO [`Replica`] for a real multi-process
+//! deployment: every replica runs `scfo serve --replica I --peers A,B,C`,
+//! consensus messages travel as JSON over `POST /raftish/msg` on the same
+//! [`crate::control::http::OpsServer`] that serves the ops API, and the
+//! leader replicates synchronously inside the `POST /apps` handler
+//! ([`LiveReplica::replicate`]): propose, push appends to every peer,
+//! feed their acks back into the state machine, and return once the
+//! command's index commits (majority) — so an HTTP 200 means the epoch
+//! survives any single-replica crash.
+//!
+//! Live deployments bootstrap replica 0 as the leader
+//! ([`Replica::bootstrap_leader`]) instead of running timeout-driven
+//! elections — the loopback drivers have no background ticker, and the
+//! election/failover machinery is exercised exhaustively (and
+//! deterministically) by the simulated layer (`fabric`, the `ha` tier,
+//! `rust/tests/repl_chaos.rs`). After a leader crash, followers keep
+//! serving reads (`GET /status`) from replicated state; CI's control-smoke
+//! job pins exactly that.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::replica::{ReplMsg, Replica, ReplicaConfig};
+use super::ReplCommand;
+
+/// Per-request socket timeout for peer calls; a dead peer costs at most
+/// this per round.
+const PEER_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Replication rounds before a propose is declared quorum-less.
+const MAX_ROUNDS: usize = 10;
+
+/// A replica embedded in a serving process, with its peers' ops
+/// addresses.
+pub struct LiveReplica {
+    replica: Replica,
+    /// Ops address per replica id (`peers[self.id()]` is this process).
+    peers: Vec<String>,
+    now: u64,
+}
+
+impl LiveReplica {
+    /// `peers` lists every replica's ops address in id order; `id` is this
+    /// process's slot. Replica 0 bootstraps as leader.
+    pub fn new(id: usize, peers: Vec<String>, seed: u64) -> anyhow::Result<LiveReplica> {
+        anyhow::ensure!(
+            id < peers.len(),
+            "replica id {id} out of range for {} peers",
+            peers.len()
+        );
+        anyhow::ensure!(peers.len() >= 2, "a replica group needs >= 2 peers");
+        let mut replica = Replica::new(ReplicaConfig::new(id, peers.len(), seed));
+        if id == 0 {
+            replica.bootstrap_leader();
+            // leadership is asserted lazily on the first replicate — peers
+            // may not be listening yet at construction time
+            replica.take_outbox();
+        }
+        Ok(LiveReplica {
+            replica,
+            peers,
+            now: 0,
+        })
+    }
+
+    pub fn id(&self) -> usize {
+        self.replica.id()
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.replica.is_leader()
+    }
+
+    /// Current term / commit index, for the obs gauges.
+    pub fn term(&self) -> u64 {
+        self.replica.term()
+    }
+
+    pub fn commit_index(&self) -> u64 {
+        self.replica.commit_index()
+    }
+
+    /// The believed leader's ops address (redirect target for followers).
+    pub fn leader_addr(&self) -> Option<&str> {
+        self.replica
+            .leader_hint()
+            .and_then(|l| self.peers.get(l))
+            .map(String::as_str)
+    }
+
+    /// `GET /raftish` document: replica status plus the peer table.
+    pub fn status_json(&self) -> Json {
+        let mut doc = match self.replica.status_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("replica status serializes to an object"),
+        };
+        doc.insert(
+            "peers".into(),
+            Json::Arr(self.peers.iter().map(|p| Json::Str(p.clone())).collect()),
+        );
+        doc.insert(
+            "leader_addr".into(),
+            match self.leader_addr() {
+                Some(a) => Json::Str(a.to_string()),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(doc)
+    }
+
+    /// Handle one inbound consensus message (`POST /raftish/msg`):
+    /// returns the reply to send back, plus any commands that just
+    /// committed here and must be applied to the local plane.
+    pub fn handle_msg(&mut self, msg: ReplMsg) -> (Option<ReplMsg>, Vec<ReplCommand>) {
+        self.now += 1;
+        let sender = msg.from();
+        self.replica.recv(self.now, msg);
+        let reply = self
+            .replica
+            .take_outbox()
+            .into_iter()
+            .find(|(to, _)| *to == sender)
+            .map(|(_, m)| m);
+        let committed = self
+            .replica
+            .take_committed()
+            .into_iter()
+            .map(|(_, c)| c)
+            .collect();
+        (reply, committed)
+    }
+
+    /// Commands committed here since the last call (leader side: commits
+    /// discovered while replicating a *different* client's command).
+    pub fn take_committed(&mut self) -> Vec<ReplCommand> {
+        self.replica
+            .take_committed()
+            .into_iter()
+            .map(|(_, c)| c)
+            .collect()
+    }
+
+    /// Leader-side synchronous replication: propose `cmd`, push appends
+    /// to every reachable peer and feed their acks back until the
+    /// command's index commits. Returns every newly committed command in
+    /// log order (ending with `cmd`); errors when no quorum acknowledges
+    /// within [`MAX_ROUNDS`].
+    pub fn replicate(&mut self, cmd: ReplCommand) -> anyhow::Result<Vec<ReplCommand>> {
+        let index = self
+            .replica
+            .propose(cmd)
+            .ok_or_else(|| anyhow::anyhow!("not the leader"))?;
+        for _round in 0..MAX_ROUNDS {
+            let outbound = self.replica.take_outbox();
+            for (to, msg) in outbound {
+                let addr = self.peers[to].clone();
+                match self.exchange(&addr, &msg) {
+                    Ok(Some(reply)) => {
+                        self.now += 1;
+                        let now = self.now;
+                        self.replica.recv(now, reply);
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        crate::log_warn!("replication peer {addr} unreachable: {e}");
+                    }
+                }
+            }
+            if self.replica.commit_index() >= index {
+                return Ok(self.take_committed());
+            }
+            // retrigger appends (heartbeat) for the next round
+            self.now += self.replica.config().heartbeat_every;
+            let now = self.now;
+            self.replica.tick(now);
+        }
+        anyhow::bail!(
+            "no quorum: entry {index} not committed after {MAX_ROUNDS} rounds \
+             (term {}, commit {})",
+            self.replica.term(),
+            self.replica.commit_index()
+        )
+    }
+
+    /// POST one consensus message to a peer and parse the reply (if the
+    /// peer returned one).
+    fn exchange(&self, addr: &str, msg: &ReplMsg) -> anyhow::Result<Option<ReplMsg>> {
+        let body = post_json(addr, "/raftish/msg", &msg.to_json().to_string())?;
+        let v = Json::parse(&body).map_err(|e| anyhow::anyhow!("bad peer reply: {e}"))?;
+        if v == Json::Null {
+            return Ok(None);
+        }
+        Ok(Some(ReplMsg::from_json(&v)?))
+    }
+
+    /// Persistent consensus state for snapshot v3.
+    pub fn persistent_json(&self) -> Json {
+        self.replica.persistent_json()
+    }
+
+    /// Restore persistent consensus state (resumes as follower; replica 0
+    /// re-bootstraps leadership via [`LiveReplica::rebootstrap`] once its
+    /// log is loaded).
+    pub fn load_persistent(&mut self, v: &Json) -> anyhow::Result<()> {
+        self.replica.load_persistent(v)
+    }
+
+    /// Re-assert bootstrap leadership after a restore (replica 0 only by
+    /// convention).
+    pub fn rebootstrap(&mut self) {
+        self.replica.bootstrap_leader();
+        self.replica.take_outbox();
+    }
+}
+
+/// Minimal blocking HTTP/1.1 POST returning the response body. Std-only,
+/// mirror image of the ops server's reader.
+pub fn post_json(addr: &str, path: &str, body: &str) -> anyhow::Result<String> {
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("bad peer address '{addr}': {e}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("peer address '{addr}' resolves to nothing"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, PEER_TIMEOUT)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    stream.set_read_timeout(Some(PEER_TIMEOUT))?;
+    stream.set_write_timeout(Some(PEER_TIMEOUT))?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut response = Vec::new();
+    stream.read_to_end(&mut response)?;
+    let text = String::from_utf8(response).map_err(|_| anyhow::anyhow!("non-UTF8 response"))?;
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed HTTP response from {addr}"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line from {addr}"))?;
+    anyhow::ensure!(status == 200, "peer {addr} returned {status}: {body}");
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_zero_bootstraps_leader() {
+        let peers = vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        let r0 = LiveReplica::new(0, peers.clone(), 7).unwrap();
+        assert!(r0.is_leader());
+        assert_eq!(r0.term(), 1);
+        let r1 = LiveReplica::new(1, peers, 7).unwrap();
+        assert!(!r1.is_leader());
+        assert_eq!(r1.leader_addr(), None, "follower learns the leader from appends");
+        assert!(LiveReplica::new(5, vec!["a".into()], 7).is_err());
+    }
+
+    #[test]
+    fn append_teaches_follower_the_leader_and_commits() {
+        let peers = vec![
+            "127.0.0.1:1".to_string(),
+            "127.0.0.1:2".to_string(),
+            "127.0.0.1:3".to_string(),
+        ];
+        let mut leader = LiveReplica::new(0, peers.clone(), 7).unwrap();
+        let mut follower = LiveReplica::new(1, peers, 7).unwrap();
+        // hand-carry the append instead of going through sockets
+        let _ = leader.replica.propose(ReplCommand::SnapshotBarrier).unwrap();
+        let outbound = leader.replica.take_outbox();
+        let (_, append) = outbound
+            .iter()
+            .find(|(to, _)| *to == 1)
+            .cloned()
+            .expect("append addressed to follower 1");
+        let (reply, committed) = follower.handle_msg(append);
+        assert!(committed.is_empty(), "commit needs the leader's ack round");
+        assert_eq!(follower.leader_addr(), Some("127.0.0.1:1"));
+        let ack = reply.expect("follower acks the append");
+        let now = leader.now + 1;
+        leader.now = now;
+        leader.replica.recv(now, ack);
+        assert_eq!(leader.commit_index(), 1, "one ack + self is a majority of 3");
+        assert_eq!(leader.take_committed(), vec![ReplCommand::SnapshotBarrier]);
+    }
+
+    #[test]
+    fn status_json_carries_peer_table() {
+        let peers = vec!["a:1".to_string(), "b:2".to_string(), "c:3".to_string()];
+        let s = LiveReplica::new(0, peers, 7).unwrap().status_json();
+        assert_eq!(s.get("role").and_then(Json::as_str), Some("leader"));
+        assert_eq!(s.get("peers").and_then(Json::as_arr).map(|a| a.len()), Some(3));
+        assert_eq!(s.get("leader_addr").and_then(Json::as_str), Some("a:1"));
+    }
+}

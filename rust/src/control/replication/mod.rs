@@ -1,0 +1,273 @@
+//! Replicated control plane: a sans-IO multipaxos (raft-flavored) log for
+//! catalog commands.
+//!
+//! The single-process control plane (`rust/src/control/`) adapts the data
+//! plane to churn, but its durability story was checkpoint files: a crash
+//! mid-churn loses every epoch since the last snapshot. This module makes
+//! the orchestration layer itself replicated — every catalog command
+//! (register / update / drain / remove, scripted topology events, snapshot
+//! barriers) flows through a majority-committed log *before* it is applied,
+//! so killing the leader loses no committed epoch and a follower resumes
+//! serving from replicated state.
+//!
+//! The design follows the deterministic actor runtime
+//! (`rust/src/distributed/`): each [`Replica`] is a pure state machine over
+//! virtual ticks with an inbox (`recv`) and an outbox — no wall clock, no
+//! sockets, no threads. Ballots are raft terms, phase-1 prepare is the vote
+//! round, phase-2 accept is the append round; election timeouts are
+//! randomized but drawn from a seeded [`crate::util::rng::Rng`], so a whole
+//! failover is a deterministic function of `(seed, fault spec)`. The
+//! simulated message fabric ([`fabric::SimFabric`]) applies the *same*
+//! declarative [`crate::distributed::FaultSpec`] fault model as
+//! `SimNetTransport` — partition check, then drop, then duplication, then
+//! per-copy delay jitter, delivery ordered by `(sent_at, from, seq)` — so
+//! the clean / lossy / partition presets drive replication unmodified.
+//!
+//! Three layers:
+//!
+//! * [`replica`] — the sans-IO consensus state machine ([`Replica`],
+//!   [`ReplMsg`], [`ReplicaConfig`]);
+//! * [`fabric`] — the deterministic simulated network + [`ReplGroup`]
+//!   harness (elect, propose, kill, step) used by the `ha` scenario tier,
+//!   `rust/tests/repl_chaos.rs` and the linearization property test;
+//! * [`live`] — [`LiveReplica`], a thin synchronous driver that carries
+//!   [`ReplMsg`]s over the ops HTTP surface (`POST /raftish/msg`) for the
+//!   real 3-process loopback deployment exercised by CI.
+//!
+//! Committed commands are applied through one shared, *tolerant* dispatch
+//! ([`apply_to_catalog`] at the catalog level,
+//! [`crate::control::ControlPlane::apply_committed`] for a full plane):
+//! registering an existing id degrades to an update, draining or removing a
+//! missing id is a no-op. Tolerance matters because a client may re-propose
+//! a command after a failover it cannot distinguish from a lost request;
+//! the committed log then holds the command twice and every replica must
+//! converge to the same state anyway.
+//!
+//! Snapshot v3 (`control/snapshot.rs`) carries the replica's persistent
+//! state — term, vote, commit index and the log tail — next to the plane
+//! snapshot, under per-replica subdirectories so co-located replicas never
+//! clobber each other's checkpoints. Format and failover semantics:
+//! `docs/CONTROL_PLANE.md`.
+
+pub mod fabric;
+pub mod live;
+pub mod replica;
+
+pub use fabric::{FabricStats, ReplGroup, SimFabric};
+pub use live::LiveReplica;
+pub use replica::{ReplMsg, Replica, ReplicaConfig, Role};
+
+use crate::control::catalog::{AppCatalog, AppSpec};
+use crate::topo::TopoEvent;
+use crate::util::json::Json;
+
+/// One command in the replicated catalog log. Everything that bumps the
+/// control-plane epoch is representable, so the log is a complete churn
+/// history.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplCommand {
+    /// Register a new application (degrades to update if the id exists).
+    Register(AppSpec),
+    /// Update a registered application (degrades to register if missing).
+    Update(AppSpec),
+    /// Stop an app's traffic, keeping its φ rows to drain in-flight work.
+    Drain(String),
+    /// Remove an app entirely.
+    Remove(String),
+    /// A scripted topology event (link flap / region outage).
+    Topo(TopoEvent),
+    /// A snapshot barrier: no state change, but its commit index marks a
+    /// consistent point every replica may checkpoint at.
+    SnapshotBarrier,
+}
+
+impl ReplCommand {
+    /// Stable operation tag (wire format, digests, reports).
+    pub fn op(&self) -> &'static str {
+        match self {
+            ReplCommand::Register(_) => "register",
+            ReplCommand::Update(_) => "update",
+            ReplCommand::Drain(_) => "drain",
+            ReplCommand::Remove(_) => "remove",
+            ReplCommand::Topo(_) => "topo",
+            ReplCommand::SnapshotBarrier => "barrier",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("op", Json::Str(self.op().to_string()))];
+        match self {
+            ReplCommand::Register(spec) | ReplCommand::Update(spec) => {
+                pairs.push(("spec", spec.to_json()));
+            }
+            ReplCommand::Drain(id) | ReplCommand::Remove(id) => {
+                pairs.push(("id", Json::Str(id.clone())));
+            }
+            ReplCommand::Topo(event) => pairs.push(("event", event.to_json())),
+            ReplCommand::SnapshotBarrier => {}
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ReplCommand> {
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("command has no 'op'"))?;
+        let spec = |v: &Json| -> anyhow::Result<AppSpec> {
+            AppSpec::from_json(
+                v.get("spec")
+                    .ok_or_else(|| anyhow::anyhow!("'{op}' command has no 'spec'"))?,
+            )
+        };
+        let id = |v: &Json| -> anyhow::Result<String> {
+            Ok(v.get("id")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("'{op}' command has no 'id'"))?
+                .to_string())
+        };
+        Ok(match op {
+            "register" => ReplCommand::Register(spec(v)?),
+            "update" => ReplCommand::Update(spec(v)?),
+            "drain" => ReplCommand::Drain(id(v)?),
+            "remove" => ReplCommand::Remove(id(v)?),
+            "topo" => ReplCommand::Topo(TopoEvent::from_json(
+                v.get("event")
+                    .ok_or_else(|| anyhow::anyhow!("'topo' command has no 'event'"))?,
+            )?),
+            "barrier" => ReplCommand::SnapshotBarrier,
+            other => anyhow::bail!("unknown command op '{other}'"),
+        })
+    }
+}
+
+/// One entry in the replicated log: the ballot (term) it was accepted
+/// under, plus the command.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogEntry {
+    pub term: u64,
+    pub cmd: ReplCommand,
+}
+
+impl LogEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("term", Json::from_u64(self.term)),
+            ("cmd", self.cmd.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<LogEntry> {
+        Ok(LogEntry {
+            term: v
+                .get("term")
+                .and_then(Json::as_u64_lossless)
+                .ok_or_else(|| anyhow::anyhow!("log entry has no 'term'"))?,
+            cmd: ReplCommand::from_json(
+                v.get("cmd")
+                    .ok_or_else(|| anyhow::anyhow!("log entry has no 'cmd'"))?,
+            )?,
+        })
+    }
+}
+
+/// Apply one committed command to a bare [`AppCatalog`], tolerantly: a
+/// register of an existing id becomes an update, an update of a missing id
+/// becomes a register, drain/remove of a missing id is a no-op, and
+/// topology events / barriers don't touch the catalog. This is the single
+/// place catalog-level apply semantics live — the linearization property
+/// test replays the committed order through it and compares against live
+/// replicas, so any divergence between replicas is a test failure, not a
+/// silent fork.
+pub fn apply_to_catalog(cat: &mut AppCatalog, cmd: &ReplCommand) -> anyhow::Result<()> {
+    match cmd {
+        ReplCommand::Register(spec) | ReplCommand::Update(spec) => {
+            if cat.get(&spec.id).is_some() {
+                cat.update(spec.clone())
+            } else {
+                cat.register(spec.clone())
+            }
+        }
+        ReplCommand::Drain(id) => {
+            if cat.get(id).is_some() {
+                cat.drain(id)
+            } else {
+                Ok(())
+            }
+        }
+        ReplCommand::Remove(id) => {
+            if cat.get(id).is_some() {
+                cat.remove(id)
+            } else {
+                Ok(())
+            }
+        }
+        ReplCommand::Topo(_) | ReplCommand::SnapshotBarrier => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::catalog::AppStatus;
+
+    fn app(id: &str) -> AppSpec {
+        AppSpec {
+            id: id.to_string(),
+            dest: 1,
+            num_tasks: 2,
+            packet_sizes: vec![10.0, 5.0, 1.0],
+            rates: vec![(0, 0.3)],
+            status: AppStatus::Active,
+        }
+    }
+
+    #[test]
+    fn commands_round_trip_json() {
+        let cmds = vec![
+            ReplCommand::Register(app("a")),
+            ReplCommand::Update(app("a")),
+            ReplCommand::Drain("a".to_string()),
+            ReplCommand::Remove("a".to_string()),
+            ReplCommand::SnapshotBarrier,
+        ];
+        for cmd in cmds {
+            let text = cmd.to_json().to_string_pretty();
+            let back = ReplCommand::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, cmd);
+        }
+        let entry = LogEntry {
+            term: 3,
+            cmd: ReplCommand::Drain("x".to_string()),
+        };
+        let back =
+            LogEntry::from_json(&Json::parse(&entry.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, entry);
+        assert!(ReplCommand::from_json(&Json::parse(r#"{"op": "warp"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn tolerant_apply_converges_on_duplicates() {
+        let mut a = AppCatalog::new();
+        let mut b = AppCatalog::new();
+        // b sees the register twice (client retry after failover)
+        let cmds_a = [
+            ReplCommand::Register(app("a")),
+            ReplCommand::Drain("a".to_string()),
+        ];
+        let cmds_b = [
+            ReplCommand::Register(app("a")),
+            ReplCommand::Register(app("a")),
+            ReplCommand::Drain("a".to_string()),
+            ReplCommand::Drain("a".to_string()),
+            ReplCommand::Remove("ghost".to_string()),
+        ];
+        for c in &cmds_a {
+            apply_to_catalog(&mut a, c).unwrap();
+        }
+        for c in &cmds_b {
+            apply_to_catalog(&mut b, c).unwrap();
+        }
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}

@@ -1,0 +1,934 @@
+//! The sans-IO consensus replica: a pure state machine over virtual ticks.
+//!
+//! Multipaxos in its raft-shaped presentation: a term is a ballot, the
+//! vote round is phase-1 prepare (the new leader's log is at least as
+//! up-to-date as any majority member's, so every committed entry survives),
+//! the append round is phase-2 accept, and the commit index advances once a
+//! majority has accepted an entry *from the current term*. Election
+//! timeouts are randomized to break ties but drawn from a seeded
+//! [`Rng`] forked per replica id, so elections — including split votes and
+//! re-elections under partitions — replay bit-identically for a given
+//! `(seed, fault spec)`.
+//!
+//! The replica never touches a clock or a socket: [`Replica::tick`]
+//! advances virtual time, [`Replica::recv`] consumes one inbound message,
+//! and everything outbound accumulates in the outbox until the driver
+//! (simulated [`super::fabric::SimFabric`] or live HTTP
+//! [`super::live::LiveReplica`]) drains it with [`Replica::take_outbox`].
+//! Committed-but-unapplied commands surface through
+//! [`Replica::take_committed`] in log order — exactly once per replica.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::{LogEntry, ReplCommand};
+
+/// Consensus role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Follower,
+    Candidate,
+    Leader,
+}
+
+impl Role {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Follower => "follower",
+            Role::Candidate => "candidate",
+            Role::Leader => "leader",
+        }
+    }
+}
+
+/// Static replica configuration. Timeouts are in virtual ticks; the
+/// defaults (election 10–20, heartbeat every 3) keep elections an order of
+/// magnitude slower than heartbeats so a live leader is never deposed by
+/// jitter alone, while the fault presets' delay ranges (1–4 ticks) still
+/// fit several retries inside one election window.
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// This replica's id in `0..n`.
+    pub id: usize,
+    /// Group size (3 or 5 in every shipped configuration).
+    pub n: usize,
+    /// Seeds the election-timeout RNG (forked per id, same scheme as the
+    /// transport's per-sender fault RNGs).
+    pub seed: u64,
+    /// Minimum election timeout in ticks.
+    pub election_min: u64,
+    /// Maximum election timeout in ticks (inclusive).
+    pub election_max: u64,
+    /// Leader heartbeat period in ticks.
+    pub heartbeat_every: u64,
+}
+
+impl ReplicaConfig {
+    pub fn new(id: usize, n: usize, seed: u64) -> ReplicaConfig {
+        ReplicaConfig {
+            id,
+            n,
+            seed,
+            election_min: 10,
+            election_max: 20,
+            heartbeat_every: 3,
+        }
+    }
+}
+
+/// A consensus message. `from` is always the sender's replica id; the
+/// fabric routes on an explicit `(to, msg)` pair, so the message itself
+/// never names its destination.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplMsg {
+    /// Phase-1 prepare: a candidate asks for a vote in `term`.
+    RequestVote {
+        term: u64,
+        from: usize,
+        last_log_index: u64,
+        last_log_term: u64,
+    },
+    /// Phase-1 promise (or refusal).
+    Vote { term: u64, from: usize, granted: bool },
+    /// Phase-2 accept: log entries after (`prev_index`, `prev_term`), plus
+    /// the leader's commit index. Empty `entries` is a heartbeat.
+    Append {
+        term: u64,
+        from: usize,
+        prev_index: u64,
+        prev_term: u64,
+        entries: Vec<LogEntry>,
+        leader_commit: u64,
+    },
+    /// Phase-2 accepted/rejected; `match_index` is the highest log index
+    /// known replicated on the sender when `ok`.
+    AppendAck {
+        term: u64,
+        from: usize,
+        ok: bool,
+        match_index: u64,
+    },
+}
+
+impl ReplMsg {
+    /// The message's term (every variant carries one).
+    pub fn term(&self) -> u64 {
+        match self {
+            ReplMsg::RequestVote { term, .. }
+            | ReplMsg::Vote { term, .. }
+            | ReplMsg::Append { term, .. }
+            | ReplMsg::AppendAck { term, .. } => *term,
+        }
+    }
+
+    /// The sender's replica id.
+    pub fn from(&self) -> usize {
+        match self {
+            ReplMsg::RequestVote { from, .. }
+            | ReplMsg::Vote { from, .. }
+            | ReplMsg::Append { from, .. }
+            | ReplMsg::AppendAck { from, .. } => *from,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ReplMsg::RequestVote { .. } => "request-vote",
+            ReplMsg::Vote { .. } => "vote",
+            ReplMsg::Append { .. } => "append",
+            ReplMsg::AppendAck { .. } => "append-ack",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ReplMsg::RequestVote {
+                term,
+                from,
+                last_log_index,
+                last_log_term,
+            } => Json::obj(vec![
+                ("kind", Json::Str("request-vote".into())),
+                ("term", Json::from_u64(*term)),
+                ("from", Json::Num(*from as f64)),
+                ("last_log_index", Json::from_u64(*last_log_index)),
+                ("last_log_term", Json::from_u64(*last_log_term)),
+            ]),
+            ReplMsg::Vote { term, from, granted } => Json::obj(vec![
+                ("kind", Json::Str("vote".into())),
+                ("term", Json::from_u64(*term)),
+                ("from", Json::Num(*from as f64)),
+                ("granted", Json::Bool(*granted)),
+            ]),
+            ReplMsg::Append {
+                term,
+                from,
+                prev_index,
+                prev_term,
+                entries,
+                leader_commit,
+            } => Json::obj(vec![
+                ("kind", Json::Str("append".into())),
+                ("term", Json::from_u64(*term)),
+                ("from", Json::Num(*from as f64)),
+                ("prev_index", Json::from_u64(*prev_index)),
+                ("prev_term", Json::from_u64(*prev_term)),
+                (
+                    "entries",
+                    Json::Arr(entries.iter().map(LogEntry::to_json).collect()),
+                ),
+                ("leader_commit", Json::from_u64(*leader_commit)),
+            ]),
+            ReplMsg::AppendAck {
+                term,
+                from,
+                ok,
+                match_index,
+            } => Json::obj(vec![
+                ("kind", Json::Str("append-ack".into())),
+                ("term", Json::from_u64(*term)),
+                ("from", Json::Num(*from as f64)),
+                ("ok", Json::Bool(*ok)),
+                ("match_index", Json::from_u64(*match_index)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ReplMsg> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("message has no 'kind'"))?;
+        let u64f = |key: &str| -> anyhow::Result<u64> {
+            v.get(key)
+                .and_then(Json::as_u64_lossless)
+                .ok_or_else(|| anyhow::anyhow!("'{kind}' message has no '{key}'"))
+        };
+        let term = u64f("term")?;
+        let from = u64f("from")? as usize;
+        Ok(match kind {
+            "request-vote" => ReplMsg::RequestVote {
+                term,
+                from,
+                last_log_index: u64f("last_log_index")?,
+                last_log_term: u64f("last_log_term")?,
+            },
+            "vote" => ReplMsg::Vote {
+                term,
+                from,
+                granted: v
+                    .get("granted")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow::anyhow!("'vote' message has no 'granted'"))?,
+            },
+            "append" => ReplMsg::Append {
+                term,
+                from,
+                prev_index: u64f("prev_index")?,
+                prev_term: u64f("prev_term")?,
+                entries: v
+                    .get("entries")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("'append' message has no 'entries'"))?
+                    .iter()
+                    .map(LogEntry::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                leader_commit: u64f("leader_commit")?,
+            },
+            "append-ack" => ReplMsg::AppendAck {
+                term,
+                from,
+                ok: v
+                    .get("ok")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow::anyhow!("'append-ack' message has no 'ok'"))?,
+                match_index: u64f("match_index")?,
+            },
+            other => anyhow::bail!("unknown message kind '{other}'"),
+        })
+    }
+}
+
+/// The sans-IO replica. Log indices are 1-based (`log[0]` holds index 1,
+/// index 0 means "before the log"); `commit` and `applied` are the highest
+/// committed / locally-applied indices.
+pub struct Replica {
+    cfg: ReplicaConfig,
+    role: Role,
+    term: u64,
+    voted_for: Option<usize>,
+    log: Vec<LogEntry>,
+    commit: u64,
+    applied: u64,
+    next_index: Vec<u64>,
+    match_index: Vec<u64>,
+    votes: Vec<bool>,
+    election_deadline: u64,
+    heartbeat_due: u64,
+    leader_hint: Option<usize>,
+    elections_started: u64,
+    outbox: Vec<(usize, ReplMsg)>,
+    rng: Rng,
+}
+
+impl Replica {
+    pub fn new(cfg: ReplicaConfig) -> Replica {
+        // same per-actor fork scheme as the transport's per-sender fault
+        // RNGs, so replica i's timeout stream is independent of n
+        let mut rng = Rng::new(cfg.seed ^ (cfg.id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let n = cfg.n;
+        let first_deadline = cfg.election_min
+            + rng.usize((cfg.election_max - cfg.election_min + 1) as usize) as u64;
+        Replica {
+            cfg,
+            role: Role::Follower,
+            term: 0,
+            voted_for: None,
+            log: Vec::new(),
+            commit: 0,
+            applied: 0,
+            next_index: vec![1; n],
+            match_index: vec![0; n],
+            votes: vec![false; n],
+            election_deadline: first_deadline,
+            heartbeat_due: 0,
+            leader_hint: None,
+            elections_started: 0,
+            outbox: Vec::new(),
+            rng,
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.cfg.id
+    }
+
+    pub fn config(&self) -> &ReplicaConfig {
+        &self.cfg
+    }
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.role == Role::Leader
+    }
+
+    pub fn term(&self) -> u64 {
+        self.term
+    }
+
+    pub fn commit_index(&self) -> u64 {
+        self.commit
+    }
+
+    pub fn applied_index(&self) -> u64 {
+        self.applied
+    }
+
+    pub fn log_len(&self) -> u64 {
+        self.log.len() as u64
+    }
+
+    /// The entry at 1-based `index`, if present.
+    pub fn log_entry(&self, index: u64) -> Option<&LogEntry> {
+        if index == 0 {
+            return None;
+        }
+        self.log.get(index as usize - 1)
+    }
+
+    /// Who this replica believes leads (itself when leader, else the last
+    /// leader it heard an append from).
+    pub fn leader_hint(&self) -> Option<usize> {
+        if self.role == Role::Leader {
+            Some(self.cfg.id)
+        } else {
+            self.leader_hint
+        }
+    }
+
+    /// Elections this replica has started (re-elections under faults show
+    /// up here; reported by the `ha` tier).
+    pub fn elections_started(&self) -> u64 {
+        self.elections_started
+    }
+
+    /// Drain the outbox: `(to, msg)` pairs in send order.
+    pub fn take_outbox(&mut self) -> Vec<(usize, ReplMsg)> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Advance `applied` to `commit`, returning the newly committed
+    /// `(index, command)` pairs in log order — each exactly once.
+    pub fn take_committed(&mut self) -> Vec<(u64, ReplCommand)> {
+        let mut out = Vec::new();
+        while self.applied < self.commit {
+            self.applied += 1;
+            out.push((self.applied, self.log[self.applied as usize - 1].cmd.clone()));
+        }
+        out
+    }
+
+    /// Force this replica to lead in term 1 without an election. Live
+    /// deployments bootstrap replica 0 this way (the loopback drivers run
+    /// no background ticker to elect with); the simulated layer never
+    /// needs it but tests use it for brevity.
+    pub fn bootstrap_leader(&mut self) {
+        self.term = 1;
+        self.become_leader(0);
+    }
+
+    // ---- time --------------------------------------------------------------
+
+    /// Advance virtual time: leaders heartbeat, everyone else counts down
+    /// to an election.
+    pub fn tick(&mut self, now: u64) {
+        if self.role == Role::Leader {
+            if now >= self.heartbeat_due {
+                self.heartbeat_due = now + self.cfg.heartbeat_every;
+                for peer in self.peers() {
+                    self.send_append(peer);
+                }
+            }
+        } else if now >= self.election_deadline {
+            self.start_election(now);
+        }
+    }
+
+    fn peers(&self) -> Vec<usize> {
+        (0..self.cfg.n).filter(|&p| p != self.cfg.id).collect()
+    }
+
+    fn reset_election_deadline(&mut self, now: u64) {
+        let span = (self.cfg.election_max - self.cfg.election_min + 1) as usize;
+        self.election_deadline = now + self.cfg.election_min + self.rng.usize(span) as u64;
+    }
+
+    fn last_log_term(&self) -> u64 {
+        self.log.last().map(|e| e.term).unwrap_or(0)
+    }
+
+    fn start_election(&mut self, now: u64) {
+        self.term += 1;
+        self.role = Role::Candidate;
+        self.voted_for = Some(self.cfg.id);
+        self.votes = vec![false; self.cfg.n];
+        self.votes[self.cfg.id] = true;
+        self.leader_hint = None;
+        self.elections_started += 1;
+        self.reset_election_deadline(now);
+        let msg = ReplMsg::RequestVote {
+            term: self.term,
+            from: self.cfg.id,
+            last_log_index: self.log_len(),
+            last_log_term: self.last_log_term(),
+        };
+        for peer in self.peers() {
+            self.outbox.push((peer, msg.clone()));
+        }
+        // single-replica groups elect themselves instantly
+        if self.majority(1) {
+            self.become_leader(now);
+        }
+    }
+
+    fn majority(&self, count: usize) -> bool {
+        count >= self.cfg.n / 2 + 1
+    }
+
+    fn become_leader(&mut self, now: u64) {
+        self.role = Role::Leader;
+        self.leader_hint = Some(self.cfg.id);
+        let next = self.log_len() + 1;
+        self.next_index = vec![next; self.cfg.n];
+        self.match_index = vec![0; self.cfg.n];
+        self.heartbeat_due = now + self.cfg.heartbeat_every;
+        // assert leadership immediately; also settles commit for n = 1
+        for peer in self.peers() {
+            self.send_append(peer);
+        }
+        self.advance_commit();
+    }
+
+    fn step_down(&mut self, term: u64) {
+        self.term = term;
+        self.role = Role::Follower;
+        self.voted_for = None;
+    }
+
+    fn send_append(&mut self, to: usize) {
+        let prev_index = self.next_index[to] - 1;
+        let prev_term = if prev_index == 0 {
+            0
+        } else {
+            self.log[prev_index as usize - 1].term
+        };
+        let entries = self.log[prev_index as usize..].to_vec();
+        self.outbox.push((
+            to,
+            ReplMsg::Append {
+                term: self.term,
+                from: self.cfg.id,
+                prev_index,
+                prev_term,
+                entries,
+                leader_commit: self.commit,
+            },
+        ));
+    }
+
+    // ---- client interface --------------------------------------------------
+
+    /// Append a command to the leader's log and ship it to every peer.
+    /// Returns the entry's log index, or `None` when this replica does not
+    /// lead (the caller should redirect via [`Replica::leader_hint`]).
+    pub fn propose(&mut self, cmd: ReplCommand) -> Option<u64> {
+        if self.role != Role::Leader {
+            return None;
+        }
+        self.log.push(LogEntry {
+            term: self.term,
+            cmd,
+        });
+        for peer in self.peers() {
+            self.send_append(peer);
+        }
+        self.advance_commit(); // n = 1 commits instantly
+        Some(self.log_len())
+    }
+
+    // ---- message handling --------------------------------------------------
+
+    /// Consume one inbound message; replies and follow-ups land in the
+    /// outbox.
+    pub fn recv(&mut self, now: u64, msg: ReplMsg) {
+        if msg.term() > self.term {
+            self.step_down(msg.term());
+        }
+        match msg {
+            ReplMsg::RequestVote {
+                term,
+                from,
+                last_log_index,
+                last_log_term,
+            } => {
+                let up_to_date = last_log_term > self.last_log_term()
+                    || (last_log_term == self.last_log_term()
+                        && last_log_index >= self.log_len());
+                let granted = term == self.term
+                    && self.role == Role::Follower
+                    && up_to_date
+                    && (self.voted_for.is_none() || self.voted_for == Some(from));
+                if granted {
+                    self.voted_for = Some(from);
+                    self.reset_election_deadline(now);
+                }
+                self.outbox.push((
+                    from,
+                    ReplMsg::Vote {
+                        term: self.term,
+                        from: self.cfg.id,
+                        granted,
+                    },
+                ));
+            }
+            ReplMsg::Vote { term, from, granted } => {
+                if self.role == Role::Candidate && term == self.term && granted {
+                    self.votes[from] = true;
+                    let count = self.votes.iter().filter(|&&v| v).count();
+                    if self.majority(count) {
+                        self.become_leader(now);
+                    }
+                }
+            }
+            ReplMsg::Append {
+                term,
+                from,
+                prev_index,
+                prev_term,
+                entries,
+                leader_commit,
+            } => {
+                if term < self.term {
+                    self.outbox.push((
+                        from,
+                        ReplMsg::AppendAck {
+                            term: self.term,
+                            from: self.cfg.id,
+                            ok: false,
+                            match_index: 0,
+                        },
+                    ));
+                    return;
+                }
+                // live leader in our term: follow it
+                self.role = Role::Follower;
+                self.leader_hint = Some(from);
+                self.reset_election_deadline(now);
+                let consistent = prev_index == 0
+                    || (prev_index <= self.log_len()
+                        && self.log[prev_index as usize - 1].term == prev_term);
+                if !consistent {
+                    self.outbox.push((
+                        from,
+                        ReplMsg::AppendAck {
+                            term: self.term,
+                            from: self.cfg.id,
+                            ok: false,
+                            match_index: 0,
+                        },
+                    ));
+                    return;
+                }
+                for (k, entry) in entries.iter().enumerate() {
+                    let index = prev_index + 1 + k as u64;
+                    if let Some(existing) = self.log_entry(index) {
+                        if existing.term != entry.term {
+                            // conflicting suffix: ours is uncommitted by
+                            // definition, drop it
+                            self.log.truncate(index as usize - 1);
+                        }
+                    }
+                    if index > self.log_len() {
+                        self.log.push(entry.clone());
+                    }
+                }
+                let match_index = prev_index + entries.len() as u64;
+                if leader_commit > self.commit {
+                    self.commit = leader_commit.min(self.log_len());
+                }
+                self.outbox.push((
+                    from,
+                    ReplMsg::AppendAck {
+                        term: self.term,
+                        from: self.cfg.id,
+                        ok: true,
+                        match_index,
+                    },
+                ));
+            }
+            ReplMsg::AppendAck {
+                term,
+                from,
+                ok,
+                match_index,
+            } => {
+                if self.role != Role::Leader || term != self.term {
+                    return;
+                }
+                if ok {
+                    if match_index > self.match_index[from] {
+                        self.match_index[from] = match_index;
+                    }
+                    self.next_index[from] = self.match_index[from] + 1;
+                    self.advance_commit();
+                } else {
+                    // walk prev_index back one entry and retry
+                    self.next_index[from] = self.next_index[from].saturating_sub(1).max(1);
+                    self.send_append(from);
+                }
+            }
+        }
+    }
+
+    /// Advance the leader's commit index to the highest log index a
+    /// majority holds — counting only entries from the current term (the
+    /// standard guard against resurrecting an old-term entry that a newer
+    /// leader may overwrite).
+    fn advance_commit(&mut self) {
+        for index in ((self.commit + 1)..=self.log_len()).rev() {
+            if self.log[index as usize - 1].term != self.term {
+                continue;
+            }
+            let count = 1 + self
+                .peers()
+                .iter()
+                .filter(|&&p| self.match_index[p] >= index)
+                .count();
+            if self.majority(count) {
+                self.commit = index;
+                return;
+            }
+        }
+    }
+
+    // ---- introspection / persistence ---------------------------------------
+
+    /// Replica status document (served by `GET /raftish`).
+    pub fn status_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.cfg.id as f64)),
+            ("n", Json::Num(self.cfg.n as f64)),
+            ("role", Json::Str(self.role.name().to_string())),
+            ("term", Json::from_u64(self.term)),
+            ("commit", Json::from_u64(self.commit)),
+            ("applied", Json::from_u64(self.applied)),
+            ("log_len", Json::from_u64(self.log_len())),
+            (
+                "leader_hint",
+                match self.leader_hint() {
+                    Some(l) => Json::Num(l as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Persistent consensus state for snapshot v3: term, vote, commit and
+    /// the log tail. Volatile leader state (next/match indices, outbox) is
+    /// rebuilt after restart.
+    pub fn persistent_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.cfg.id as f64)),
+            ("term", Json::from_u64(self.term)),
+            (
+                "voted_for",
+                match self.voted_for {
+                    Some(v) => Json::Num(v as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("commit", Json::from_u64(self.commit)),
+            ("applied", Json::from_u64(self.applied)),
+            (
+                "log",
+                Json::Arr(self.log.iter().map(LogEntry::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Restore persistent state written by [`Replica::persistent_json`].
+    /// The replica resumes as a follower; an election (or the live
+    /// bootstrap) re-establishes leadership.
+    pub fn load_persistent(&mut self, v: &Json) -> anyhow::Result<()> {
+        let u64f = |key: &str| -> anyhow::Result<u64> {
+            v.get(key)
+                .and_then(Json::as_u64_lossless)
+                .ok_or_else(|| anyhow::anyhow!("replication state has no '{key}'"))
+        };
+        self.term = u64f("term")?;
+        self.voted_for = match v.get("voted_for") {
+            Some(Json::Null) | None => None,
+            Some(x) => Some(
+                x.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad 'voted_for'"))?,
+            ),
+        };
+        self.commit = u64f("commit")?;
+        self.applied = u64f("applied")?;
+        self.log = v
+            .get("log")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("replication state has no 'log'"))?
+            .iter()
+            .map(LogEntry::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(
+            self.applied <= self.commit && self.commit <= self.log_len(),
+            "replication state is inconsistent: applied {} / commit {} / log {}",
+            self.applied,
+            self.commit,
+            self.log_len()
+        );
+        self.role = Role::Follower;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(id: &str) -> ReplCommand {
+        ReplCommand::Drain(id.to_string())
+    }
+
+    /// Deliver every outbound message instantly until quiescent — a
+    /// zero-fault, zero-delay fabric for unit-testing protocol logic.
+    fn settle(replicas: &mut [Replica], now: u64) {
+        loop {
+            let mut moved = false;
+            for i in 0..replicas.len() {
+                for (to, msg) in replicas[i].take_outbox() {
+                    replicas[to].recv(now, msg);
+                    moved = true;
+                }
+            }
+            if !moved {
+                return;
+            }
+        }
+    }
+
+    fn group(n: usize, seed: u64) -> Vec<Replica> {
+        (0..n)
+            .map(|id| Replica::new(ReplicaConfig::new(id, n, seed)))
+            .collect()
+    }
+
+    #[test]
+    fn first_timeout_wins_a_clean_election() {
+        let mut rs = group(3, 11);
+        let mut now = 0;
+        while !rs.iter().any(|r| r.is_leader()) {
+            now += 1;
+            assert!(now < 100, "no leader after 100 clean ticks");
+            for r in rs.iter_mut() {
+                r.tick(now);
+            }
+            settle(&mut rs, now);
+        }
+        assert_eq!(rs.iter().filter(|r| r.is_leader()).count(), 1);
+        let leader = rs.iter().position(|r| r.is_leader()).unwrap();
+        for r in &rs {
+            assert_eq!(r.leader_hint(), Some(leader));
+        }
+    }
+
+    #[test]
+    fn propose_commits_and_applies_on_every_replica() {
+        let mut rs = group(3, 12);
+        rs[0].bootstrap_leader();
+        settle(&mut rs, 0);
+        let idx = rs[0].propose(drain("a")).unwrap();
+        assert_eq!(idx, 1);
+        settle(&mut rs, 0);
+        for r in rs.iter_mut() {
+            assert_eq!(r.commit_index(), 1, "replica {}", r.id());
+            let applied = r.take_committed();
+            assert_eq!(applied, vec![(1, drain("a"))]);
+            assert!(r.take_committed().is_empty(), "exactly-once apply");
+        }
+        assert!(rs[1].propose(drain("b")).is_none(), "followers refuse");
+    }
+
+    #[test]
+    fn new_leader_preserves_committed_entries() {
+        let mut rs = group(3, 13);
+        rs[0].bootstrap_leader();
+        settle(&mut rs, 0);
+        for name in ["a", "b", "c"] {
+            rs[0].propose(drain(name));
+        }
+        settle(&mut rs, 0);
+        assert_eq!(rs[0].commit_index(), 3);
+        // kill the leader: drive only 1 and 2 until one of them leads
+        let mut now = 0;
+        while !rs[1..].iter().any(|r| r.is_leader()) {
+            now += 1;
+            assert!(now < 200, "no failover leader after 200 ticks");
+            for r in rs[1..].iter_mut() {
+                r.tick(now);
+            }
+            // settle between the survivors only
+            loop {
+                let mut moved = false;
+                for i in 1..3 {
+                    for (to, msg) in rs[i].take_outbox() {
+                        if to != 0 {
+                            rs[to].recv(now, msg);
+                            moved = true;
+                        }
+                    }
+                }
+                if !moved {
+                    break;
+                }
+            }
+        }
+        let new_leader = rs[1..].iter().position(|r| r.is_leader()).unwrap() + 1;
+        assert!(rs[new_leader].term() > 1);
+        // committed prefix survives on the new leader
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            assert_eq!(
+                rs[new_leader].log_entry(i as u64 + 1).unwrap().cmd,
+                drain(name)
+            );
+        }
+    }
+
+    #[test]
+    fn stale_candidate_with_short_log_is_refused() {
+        let mut rs = group(3, 14);
+        rs[0].bootstrap_leader();
+        settle(&mut rs, 0);
+        rs[0].propose(drain("a"));
+        settle(&mut rs, 0);
+        // replica 2 asks for a vote with an empty log at a higher term
+        let msg = ReplMsg::RequestVote {
+            term: 5,
+            from: 2,
+            last_log_index: 0,
+            last_log_term: 0,
+        };
+        rs[1].recv(0, msg);
+        let out = rs[1].take_outbox();
+        assert_eq!(out.len(), 1);
+        match &out[0].1 {
+            ReplMsg::Vote { granted, .. } => assert!(!granted, "stale log must not win"),
+            other => panic!("expected a vote, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn messages_round_trip_json() {
+        let msgs = vec![
+            ReplMsg::RequestVote {
+                term: 2,
+                from: 1,
+                last_log_index: 7,
+                last_log_term: 1,
+            },
+            ReplMsg::Vote {
+                term: 2,
+                from: 0,
+                granted: true,
+            },
+            ReplMsg::Append {
+                term: 2,
+                from: 1,
+                prev_index: 3,
+                prev_term: 1,
+                entries: vec![LogEntry {
+                    term: 2,
+                    cmd: drain("a"),
+                }],
+                leader_commit: 3,
+            },
+            ReplMsg::AppendAck {
+                term: 2,
+                from: 0,
+                ok: true,
+                match_index: 4,
+            },
+        ];
+        for msg in msgs {
+            let text = msg.to_json().to_string_pretty();
+            let back = ReplMsg::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn persistent_state_round_trips() {
+        let mut rs = group(3, 15);
+        rs[0].bootstrap_leader();
+        settle(&mut rs, 0);
+        rs[0].propose(drain("a"));
+        rs[0].propose(drain("b"));
+        settle(&mut rs, 0);
+        rs[1].take_committed();
+        let state = rs[1].persistent_json();
+        let mut fresh = Replica::new(ReplicaConfig::new(1, 3, 15));
+        fresh
+            .load_persistent(&Json::parse(&state.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(fresh.term(), rs[1].term());
+        assert_eq!(fresh.commit_index(), rs[1].commit_index());
+        assert_eq!(fresh.applied_index(), rs[1].applied_index());
+        assert_eq!(fresh.log_len(), rs[1].log_len());
+        assert_eq!(fresh.role(), Role::Follower);
+    }
+}

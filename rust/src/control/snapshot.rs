@@ -16,38 +16,64 @@
 //! * the link-churn state (version 2) — removed link pairs and the pending
 //!   repair schedule, so a run restored mid-flap rebuilds the same pruned
 //!   CSR arena and repairs on the same slot,
+//! * the replication state (version 3) — the replica's persistent
+//!   consensus state (term, vote, commit index, log tail; see
+//!   [`crate::control::replication`]), so a restarted replica rejoins the
+//!   group without re-fetching the whole log,
 //! * the control-plane epoch and admission counters.
 //!
-//! Writes are atomic: the document lands in `snapshot.json.tmp` and is
-//! renamed over `snapshot.json`, so a crash mid-write never corrupts the
-//! last good checkpoint. Readers accept exactly the versions they know
-//! ([`SNAPSHOT_VERSION`]) and reject anything newer — the same policy as
-//! the trace format (`docs/WORKLOADS.md`).
+//! Writes are atomic: the document lands in a uniquely named temp file
+//! (pid + process-wide counter, so co-located replicas checkpointing into
+//! the same directory never interleave halves of two documents) and is
+//! renamed over `snapshot.json` — a crash mid-write never corrupts the
+//! last good checkpoint. Replicated deployments go one step further and
+//! give each replica its own subdirectory ([`replica_dir`]), keeping the
+//! checkpoints themselves independent. Readers accept exactly the versions
+//! they know ([`SNAPSHOT_VERSION`]) and reject anything newer — the same
+//! policy as the trace format (`docs/WORKLOADS.md`).
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::json::Json;
 
 /// Current snapshot format version. Version 2 added the optional
-/// `topology` key (link-churn state); version-1 snapshots still load.
-pub const SNAPSHOT_VERSION: u64 = 2;
+/// `topology` key (link-churn state); version 3 the optional `replication`
+/// key (persistent consensus state). Older snapshots still load.
+pub const SNAPSHOT_VERSION: u64 = 3;
 
 /// File name of the live snapshot inside a checkpoint directory.
 pub const SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// Monotone process-wide suffix for temp files: two threads (or two
+/// replicas in one test process) writing into the same directory get
+/// distinct temp names.
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
 
 /// Path of the snapshot document inside `dir`.
 pub fn snapshot_path(dir: &Path) -> PathBuf {
     dir.join(SNAPSHOT_FILE)
 }
 
+/// Replica `id`'s private checkpoint directory under a shared
+/// `--checkpoint DIR`: `DIR/replica-<id>`. Co-located replicas must not
+/// share a snapshot file — their logs/terms genuinely differ.
+pub fn replica_dir(dir: &Path, id: usize) -> PathBuf {
+    dir.join(format!("replica-{id}"))
+}
+
 /// Atomically persist a snapshot document into `dir` (created if missing):
-/// write `snapshot.json.tmp`, fsync-free rename over `snapshot.json`.
-/// Returns the final path.
+/// write a uniquely named `snapshot.json.<pid>.<k>.tmp`, rename over
+/// `snapshot.json`. Returns the final path.
 pub fn write_atomic(dir: &Path, doc: &Json) -> anyhow::Result<PathBuf> {
     std::fs::create_dir_all(dir)
         .map_err(|e| anyhow::anyhow!("checkpoint dir {}: {e}", dir.display()))?;
     let final_path = snapshot_path(dir);
-    let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+    let k = TMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let tmp = dir.join(format!(
+        "{SNAPSHOT_FILE}.{}.{k}.tmp",
+        std::process::id()
+    ));
     std::fs::write(&tmp, doc.to_string_pretty())
         .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
     std::fs::rename(&tmp, &final_path)
@@ -55,8 +81,9 @@ pub fn write_atomic(dir: &Path, doc: &Json) -> anyhow::Result<PathBuf> {
     Ok(final_path)
 }
 
-/// Load and version-check the snapshot document from `dir`.
-pub fn load(dir: &Path) -> anyhow::Result<Json> {
+/// Load the snapshot document from `dir`, accepting versions up to
+/// `max_version`.
+pub fn load_with_limit(dir: &Path, max_version: u64) -> anyhow::Result<Json> {
     let path = snapshot_path(dir);
     let text = std::fs::read_to_string(&path)
         .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
@@ -66,11 +93,16 @@ pub fn load(dir: &Path) -> anyhow::Result<Json> {
         .and_then(Json::as_usize)
         .ok_or_else(|| anyhow::anyhow!("{}: missing 'version'", path.display()))? as u64;
     anyhow::ensure!(
-        version <= SNAPSHOT_VERSION,
-        "{}: snapshot version {version} is newer than this binary understands ({SNAPSHOT_VERSION})",
+        version <= max_version,
+        "{}: snapshot version {version} is newer than this binary understands ({max_version})",
         path.display()
     );
     Ok(doc)
+}
+
+/// Load and version-check the snapshot document from `dir`.
+pub fn load(dir: &Path) -> anyhow::Result<Json> {
+    load_with_limit(dir, SNAPSHOT_VERSION)
 }
 
 #[cfg(test)]
@@ -92,7 +124,12 @@ mod tests {
         ]);
         let path = write_atomic(&dir, &doc).unwrap();
         assert!(path.ends_with(SNAPSHOT_FILE));
-        assert!(!dir.join("snapshot.json.tmp").exists(), "tmp file renamed away");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp files renamed away: {leftovers:?}");
         let re = load(&dir).unwrap();
         assert_eq!(re.get("epoch").unwrap().as_usize(), Some(3));
         // overwrite in place (the periodic checkpoint path)
@@ -118,9 +155,85 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    /// A v2-era reader (max_version 2) must reject today's v3 documents —
+    /// the forward-compatibility contract the version bump relies on.
+    #[test]
+    fn v2_readers_reject_v3_snapshots() {
+        let dir = tmp_dir("v2-reject");
+        let doc = Json::obj(vec![
+            ("version", Json::Num(3.0)),
+            ("replication", Json::obj(vec![("term", Json::Num(1.0))])),
+        ]);
+        write_atomic(&dir, &doc).unwrap();
+        let err = load_with_limit(&dir, 2).unwrap_err().to_string();
+        assert!(err.contains("newer"), "{err}");
+        assert!(load_with_limit(&dir, 3).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     #[test]
     fn missing_snapshot_is_a_clean_error() {
         let dir = tmp_dir("missing");
         assert!(load(&dir).is_err());
+    }
+
+    /// Two writers hammering the same directory concurrently: every load
+    /// observes one complete, parseable document (never an interleaving of
+    /// two), and no temp files survive.
+    #[test]
+    fn concurrent_writers_never_clobber_each_other() {
+        let dir = tmp_dir("concurrent");
+        std::fs::create_dir_all(&dir).unwrap();
+        let payload = |writer: usize, k: usize| {
+            Json::obj(vec![
+                ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+                ("writer", Json::Num(writer as f64)),
+                ("k", Json::Num(k as f64)),
+                // bulk so a torn write would be visible as a parse error
+                ("bulk", Json::arr_f64(&vec![writer as f64; 512])),
+            ])
+        };
+        std::thread::scope(|s| {
+            for writer in 0..2 {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    for k in 0..40 {
+                        write_atomic(&dir, &payload(writer, k)).unwrap();
+                        let doc = load(&dir).unwrap();
+                        let w = doc.get("writer").unwrap().as_usize().unwrap();
+                        let bulk = doc.get("bulk").unwrap().as_arr().unwrap();
+                        assert_eq!(bulk.len(), 512);
+                        assert!(bulk.iter().all(|b| b.as_f64() == Some(w as f64)));
+                    }
+                });
+            }
+        });
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Per-replica subdirectories round-trip independently: replica 0's
+    /// checkpoint never shows through replica 1's.
+    #[test]
+    fn replica_dirs_round_trip_independently() {
+        let base = tmp_dir("replica-dirs");
+        for id in 0..3usize {
+            let doc = Json::obj(vec![
+                ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+                ("epoch", Json::Num(id as f64 + 10.0)),
+            ]);
+            write_atomic(&replica_dir(&base, id), &doc).unwrap();
+        }
+        for id in 0..3usize {
+            let doc = load(&replica_dir(&base, id)).unwrap();
+            assert_eq!(doc.get("epoch").unwrap().as_usize(), Some(id + 10));
+        }
+        assert_ne!(replica_dir(&base, 0), replica_dir(&base, 1));
+        let _ = std::fs::remove_dir_all(&base);
     }
 }

@@ -5,7 +5,7 @@
 //! scfo compare  --topology abilene [--iters 500]   # GP vs all baselines
 //! scfo table2                                      # print Table II inventory
 //! scfo fig5 | fig6 | fig7                          # regenerate paper figures
-//! scfo scenarios list [--tier large|dynamic|distributed]  # scenario matrices
+//! scfo scenarios list [--tier large|dynamic|distributed|ha]  # scenario matrices
 //! scfo scenarios run --all --jobs 8 [--out DIR]    # parallel batch + JSON reports
 //! scfo scenarios run --all --tier large            # 1000-node-class sparse tier
 //! scfo scenarios run --all --tier dynamic          # nonstationary serving tier
@@ -13,6 +13,7 @@
 //! scfo scenarios run --all --tier churn            # control-plane app churn tier
 //! scfo scenarios run --all --tier topo-churn       # link-flap epoch-rebind tier
 //! scfo scenarios run --tier massive                # million-stream SoA hot path
+//! scfo scenarios run --all --tier ha               # replicated-control failover tier
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
 //! scfo distributed run --shards 4 --faults lossy   # async sharded runtime
 //! scfo distributed run --faults spec.toml --json D.json  # custom fault spec
@@ -23,6 +24,8 @@
 //! scfo serve    --topology geant [--slots 200] [--workload diurnal] [--xla]
 //! scfo serve    --http 127.0.0.1:8080 --checkpoint ckpt [--slots 0]   # control plane
 //! scfo serve    --checkpoint ckpt --restore        # resume bit-identically
+//! scfo serve    --http 127.0.0.1:8080 --replica 0 --peers 127.0.0.1:8080,127.0.0.1:8081,127.0.0.1:8082
+//! scfo bench --json --ha [--replicas 3] [--commands 50]   # replication → BENCH.json v8
 //! scfo bench --json --control [--slots 90]         # control plane → BENCH.json v5
 //! scfo bench --json --topo-churn [--slots 60]      # link flaps → BENCH.json v5
 //! scfo bench --json --massive [--apps 1000] [--sources 1000]  # 1M streams → v7
@@ -253,7 +256,7 @@ fn drive_server<O: Optimizer>(mut srv: OnlineServer<O>, slots: usize) -> anyhow:
 /// serves slots, polls the ops API between slots, and checkpoints
 /// periodically. `--slots 0` serves until killed (the CI smoke mode).
 fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
-    use scfo::control::{ControlOptions, ControlPlane, OpsServer};
+    use scfo::control::{ControlOptions, ControlPlane, LiveReplica, OpsServer};
 
     anyhow::ensure!(
         !args.switch("xla"),
@@ -311,6 +314,37 @@ fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
         None => None,
     };
 
+    // `--replica I --peers a:p0,b:p1,c:p2` joins a replicated control
+    // plane: mutating ops routes go through the multipaxos command log and
+    // followers redirect writers to the leader (`GET /raftish` inspects).
+    let mut repl = match args.flag("replica") {
+        Some(_) => {
+            anyhow::ensure!(
+                ops.is_some(),
+                "--replica needs --http ADDR (replication runs over the ops API)"
+            );
+            let id = args.flag_usize("replica", 0)?;
+            let peers: Vec<String> = args
+                .flag("peers")
+                .ok_or_else(|| anyhow::anyhow!("--replica needs --peers a:p0,b:p1,..."))?
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            let group = peers.len();
+            let lr = LiveReplica::new(id, peers, plane.scenario.seed)?;
+            let role = if lr.is_leader() {
+                "bootstrap leader"
+            } else {
+                "follower"
+            };
+            println!("replica {id}/{group} ({role})");
+            Some(lr)
+        }
+        None => None,
+    };
+
     let mut served = 0usize;
     loop {
         if slots > 0 && served >= slots {
@@ -329,7 +363,7 @@ fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
                 let deadline =
                     std::time::Instant::now() + std::time::Duration::from_millis(pace_ms);
                 loop {
-                    srv.poll(&mut plane, checkpoint_dir.as_deref());
+                    srv.poll_repl(&mut plane, checkpoint_dir.as_deref(), repl.as_mut());
                     if std::time::Instant::now() >= deadline {
                         break;
                     }
@@ -337,7 +371,7 @@ fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
                 }
             }
             Some(srv) => {
-                srv.poll(&mut plane, checkpoint_dir.as_deref());
+                srv.poll_repl(&mut plane, checkpoint_dir.as_deref(), repl.as_mut());
             }
             None if pace_ms > 0 => {
                 std::thread::sleep(std::time::Duration::from_millis(pace_ms))
@@ -604,8 +638,17 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let control = args.switch("control");
     let topo_churn = args.switch("topo-churn");
     let massive = args.switch("massive");
+    let ha = args.switch("ha");
     let mut results = Vec::new();
-    if massive {
+    if ha {
+        let replicas = args.flag_usize("replicas", 3)?;
+        let commands = args.flag_usize("commands", 50)?;
+        for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            eprintln!("bench {name} (ha, {replicas} replicas, {commands} commands)...");
+            results.push(scfo::bench::bench_ha_scenario(name, replicas, commands)?);
+        }
+    }
+    if massive && !ha {
         // the massive tier has one fixed family (er-1000-4000); size the
         // stream table with --apps/--sources instead of --scenarios
         let apps = args.flag_usize("apps", 1000)?;
@@ -615,7 +658,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         results.push(scfo::bench::bench_massive_scenario(apps, sources, slots)?);
     }
     for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        if massive {
+        if massive || ha {
             break;
         }
         if topo_churn {
@@ -657,7 +700,42 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    if massive {
+    if ha {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .map(|r| {
+                let h = r.ha.as_ref().expect("ha bench has an ha block");
+                vec![
+                    r.name.clone(),
+                    h.replicas.to_string(),
+                    h.faults.clone(),
+                    h.commands.to_string(),
+                    h.committed.to_string(),
+                    h.lost.to_string(),
+                    format!("{}t/{:.2}ms", h.election_ticks, h.election_secs * 1e3),
+                    format!("{}t/{:.2}ms", h.failover_ticks, h.failover_secs * 1e3),
+                    format!("{:.0}", h.commands_per_sec),
+                    h.msgs_sent.to_string(),
+                ]
+            })
+            .collect();
+        print_table(
+            "Replicated control-plane bench (BENCH.json v8 columns)",
+            &[
+                "scenario",
+                "replicas",
+                "faults",
+                "commands",
+                "committed",
+                "lost",
+                "election",
+                "failover",
+                "cmds/sec",
+                "msgs",
+            ],
+            &rows,
+        );
+    } else if massive {
         let rows: Vec<Vec<String>> = results
             .iter()
             .map(|r| {
@@ -926,6 +1004,13 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             let slots = args.flag_usize("slots", 20)?;
             return Ok(ScenarioSpec::massive_matrix_sized(apps, sources, slots));
         }
+        if tier == "ha" {
+            // replicated control plane: elect, churn apps, kill the leader,
+            // assert no committed epoch is lost; --replicas sizes the group
+            let slots = args.flag_usize("slots", 80)?;
+            let replicas = args.flag_usize("replicas", 3)?;
+            return Ok(ScenarioSpec::ha_matrix_sized(slots, replicas));
+        }
         if tier == "dynamic" {
             let slots = args.flag_usize("slots", 200)?;
             let mut specs = ScenarioSpec::dynamic_matrix_sized(slots);
@@ -945,7 +1030,7 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             other => {
                 anyhow::bail!(
                     "unknown scenario tier '{other}' \
-                     (standard|large|dynamic|distributed|churn|topo-churn|massive)"
+                     (standard|large|dynamic|distributed|churn|topo-churn|massive|ha)"
                 )
             }
         };
@@ -983,7 +1068,9 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             let rows: Vec<Vec<String>> = tier_matrix(args)?
                 .iter()
                 .map(|s| {
-                    let dynamics = if let Some(tc) = &s.topo_churn {
+                    let dynamics = if let Some(h) = &s.ha {
+                        format!("ha:{} replicas faults:{}", h.replicas, h.faults.name)
+                    } else if let Some(tc) = &s.topo_churn {
                         format!("topo-churn:{} events x{}", tc.events.len(), s.slots)
                     } else if let Some(c) = &s.churn {
                         format!("churn:{} events x{}", c.events.len(), s.slots)

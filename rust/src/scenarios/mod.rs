@@ -61,8 +61,8 @@
 pub mod runner;
 
 pub use runner::{
-    run_batch, run_massive, ChurnSummary, DistributedSummary, MassiveSummary, RunnerOptions,
-    ScenarioCache, ScenarioReport, TopoChurnSummary,
+    run_batch, run_massive, ChurnSummary, DistributedSummary, HaSummary, MassiveSummary,
+    RunnerOptions, ScenarioCache, ScenarioReport, TopoChurnSummary,
 };
 
 use crate::config::Scenario;
@@ -112,6 +112,58 @@ impl DistributedSpec {
             shards,
             faults,
             max_epochs,
+        })
+    }
+}
+
+/// How a scenario runs the replicated control plane (the `ha` tier): a
+/// [`crate::control::replication::ReplGroup`] of sans-IO replicas elects a
+/// leader under the given fault model, commits a scripted register burst
+/// through the multipaxos log, loses the leader mid-churn, and fails over —
+/// the report's `ha` block pins that no committed catalog epoch is lost and
+/// carries election/failover latency and commit-throughput columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HaSpec {
+    /// Replica-group size (3 or 5 in the tier matrices).
+    pub replicas: usize,
+    /// Fault model for the simulated message fabric — the same
+    /// [`FaultSpec`] presets that drive the distributed tier's transport.
+    pub faults: FaultSpec,
+    /// Scripted app registrations proposed before (and re-proposed after)
+    /// the leader kill.
+    pub registers: usize,
+    /// Virtual-tick budget for each election/replication phase.
+    pub max_ticks: u64,
+}
+
+impl HaSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("faults", self.faults.to_json()),
+            ("registers", Json::Num(self.registers as f64)),
+            ("max_ticks", Json::Num(self.max_ticks as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<HaSpec> {
+        let replicas = v.get("replicas").and_then(Json::as_usize).unwrap_or(3);
+        anyhow::ensure!(replicas >= 2, "ha.replicas must be >= 2");
+        let faults = match v.get("faults") {
+            Some(f) => FaultSpec::from_json(f)?,
+            None => FaultSpec::clean(0),
+        };
+        let registers = v.get("registers").and_then(Json::as_usize).unwrap_or(3);
+        anyhow::ensure!(registers >= 1, "ha.registers must be >= 1");
+        let max_ticks = v
+            .get("max_ticks")
+            .and_then(Json::as_usize)
+            .unwrap_or(2000) as u64;
+        Ok(HaSpec {
+            replicas,
+            faults,
+            registers,
+            max_ticks,
         })
     }
 }
@@ -445,6 +497,13 @@ pub struct ScenarioSpec {
     /// `massive` block carries slot wall-time and streams/sec. Stream count
     /// is `base.num_apps × base.num_sources`.
     pub massive: bool,
+    /// Replicated-control-plane spec (the `ha` tier). When set, the
+    /// scenario drives a simulated replica group through election →
+    /// scripted register churn → leader kill → failover, asserts no
+    /// committed epoch is lost, then serves [`ScenarioSpec::slots`] slots
+    /// on the surviving fleet's plane and compares the final cost against
+    /// a single-node truth solve.
+    pub ha: Option<HaSpec>,
 }
 
 /// Topology families of the `large` scale tier
@@ -525,6 +584,7 @@ impl ScenarioSpec {
             churn: None,
             topo_churn: None,
             massive: false,
+            ha: None,
         })
     }
 
@@ -583,6 +643,46 @@ impl ScenarioSpec {
                 spec.iters = 300;
                 spec.slots = slots;
                 spec.churn = Some(ChurnSpec::default_schedule(slots));
+                spec
+            })
+            .collect()
+    }
+
+    /// Topology family of the `ha` tier: one small real network — the tier
+    /// pins control-plane replication behavior, not data-plane scale.
+    pub const HA_FAMILY: &'static str = "abilene";
+
+    /// Fault presets the `ha` tier crosses the replica group with (same
+    /// presets as the distributed tier's transport).
+    pub const HA_FAULTS: [&'static str; 3] = ["clean", "lossy", "partition"];
+
+    /// The `ha` scale tier: a 3-replica group on [`ScenarioSpec::HA_FAMILY`]
+    /// at light congestion (admission headroom for the scripted registers),
+    /// crossed with the clean/lossy/partition fault presets. Each cell
+    /// elects, commits a register burst, kills the leader mid-churn, and
+    /// fails over without losing a committed epoch.
+    pub fn ha_matrix() -> Vec<ScenarioSpec> {
+        Self::ha_matrix_sized(80, 3)
+    }
+
+    /// The `ha` tier with explicit serving-slot budget and replica count.
+    pub fn ha_matrix_sized(slots: usize, replicas: usize) -> Vec<ScenarioSpec> {
+        Self::HA_FAULTS
+            .iter()
+            .map(|fault| {
+                let mut spec = Self::named(Self::HA_FAMILY, Congestion::Light)
+                    .expect("ha family is valid");
+                spec.base.name = format!("{}-ha-{fault}", Self::HA_FAMILY);
+                spec.events.clear();
+                spec.iters = 300;
+                spec.slots = slots;
+                spec.ha = Some(HaSpec {
+                    replicas,
+                    faults: FaultSpec::preset(fault, spec.base.seed)
+                        .expect("ha presets are valid"),
+                    registers: 3,
+                    max_ticks: 2000,
+                });
                 spec
             })
             .collect()
@@ -793,7 +893,11 @@ impl ScenarioSpec {
         if let Some(w) = &self.workload {
             obj.insert("workload".to_string(), w.to_json());
         }
-        if self.workload.is_some() || self.churn.is_some() || self.topo_churn.is_some() {
+        if self.workload.is_some()
+            || self.churn.is_some()
+            || self.topo_churn.is_some()
+            || self.ha.is_some()
+        {
             obj.insert("slots".to_string(), Json::Num(self.slots as f64));
         }
         if let Some(d) = &self.distributed {
@@ -807,6 +911,9 @@ impl ScenarioSpec {
         }
         if self.massive {
             obj.insert("massive".to_string(), Json::Bool(true));
+        }
+        if let Some(h) = &self.ha {
+            obj.insert("ha".to_string(), h.to_json());
         }
         Json::Obj(obj)
     }
@@ -843,6 +950,10 @@ impl ScenarioSpec {
             None => None,
         };
         let massive = v.get("massive").and_then(Json::as_bool).unwrap_or(false);
+        let ha = match v.get("ha") {
+            Some(h) => Some(HaSpec::from_json(h)?),
+            None => None,
+        };
         Ok(ScenarioSpec {
             base,
             congestion,
@@ -854,6 +965,7 @@ impl ScenarioSpec {
             churn,
             topo_churn,
             massive,
+            ha,
         })
     }
 
@@ -1134,6 +1246,58 @@ mod tests {
         let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
         let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
         assert_eq!(re.topo_churn, None);
+    }
+
+    #[test]
+    fn ha_matrix_crosses_fault_presets() {
+        let m = ScenarioSpec::ha_matrix();
+        assert_eq!(m.len(), ScenarioSpec::HA_FAULTS.len());
+        let names: std::collections::BTreeSet<&str> = m.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), m.len(), "ha names must be unique");
+        for s in &m {
+            let h = s.ha.as_ref().expect("ha specs carry an HaSpec");
+            assert_eq!(h.replicas, 3);
+            assert!(h.registers >= 1);
+            assert!(h.max_ticks > 0);
+            assert_eq!(s.congestion, Congestion::Light);
+            assert_eq!(s.base.topology, ScenarioSpec::HA_FAMILY);
+            assert!(s.name().contains("-ha-"));
+            assert!(s.slots > 0);
+            assert!(s.events.is_empty());
+        }
+        // the three cells differ exactly in their fault model; one is clean
+        assert!(m.iter().any(|s| s.ha.as_ref().unwrap().faults.is_clean()));
+        assert!(m.iter().any(|s| !s.ha.as_ref().unwrap().faults.is_clean()));
+    }
+
+    #[test]
+    fn ha_spec_roundtrips_json_and_toml() {
+        for spec in &ScenarioSpec::ha_matrix() {
+            let re = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(re.ha, spec.ha);
+            assert_eq!(re.slots, spec.slots);
+            assert_eq!(re.name(), spec.name());
+        }
+        // a plain spec round-trips without one
+        let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
+        let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
+        assert_eq!(re.ha, None);
+
+        let toml_text = r#"
+            name = "my-ha"
+            topology = "abilene"
+            slots = 60
+            [ha]
+            replicas = 5
+            registers = 4
+        "#;
+        let v = crate::util::toml::parse(toml_text).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        let h = spec.ha.as_ref().unwrap();
+        assert_eq!(h.replicas, 5);
+        assert_eq!(h.registers, 4);
+        assert!(h.faults.is_clean(), "faults default to clean");
+        assert_eq!(h.max_ticks, 2000);
     }
 
     #[test]

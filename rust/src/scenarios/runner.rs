@@ -16,7 +16,10 @@ use std::sync::{Arc, Mutex};
 use crate::algo::gp::{GpOptions, GradientProjection};
 use crate::algo::Algorithm;
 use crate::app::Network;
-use crate::control::{AppSpec, AppStatus, ControlOptions, ControlPlane};
+use crate::control::replication::LogEntry;
+use crate::control::{
+    AppSpec, AppStatus, ControlOptions, ControlPlane, ReplCommand, ReplGroup, Replica,
+};
 use crate::distributed::{AsyncRuntime, DistributedOptimizer, RuntimeOptions};
 use crate::flow::FlowState;
 use crate::graph::{topologies, Graph};
@@ -100,6 +103,8 @@ pub struct ScenarioReport {
     pub topo_churn: Option<TopoChurnSummary>,
     /// Workload hot-path throughput metrics (massive scenarios only).
     pub massive: Option<MassiveSummary>,
+    /// Replicated-control-plane metrics (ha scenarios only).
+    pub ha: Option<HaSummary>,
 }
 
 /// Workload hot-path columns of a `massive` scenario report: stream count,
@@ -193,6 +198,80 @@ impl ChurnSummary {
                 "admission_latency_secs_mean",
                 Json::Num(self.admission_latency_secs_mean),
             ),
+        ])
+    }
+}
+
+/// Replicated-control-plane columns of an `ha` scenario report: one
+/// scripted election → register burst → leader kill → failover cycle on a
+/// simulated replica group ([`ReplGroup`]). `lost` counts
+/// committed-before-kill log entries missing or rewritten after the
+/// failover — the tier's core invariant is `lost == 0`, and [`run_ha`]
+/// additionally fails the run outright if it is violated. Tick columns are
+/// virtual time (bit-deterministic per seed + fault spec); the `*_secs`
+/// and `commands_per_sec` columns are wall-clock (volatile — the golden
+/// comparator skips them).
+#[derive(Clone, Debug)]
+pub struct HaSummary {
+    /// Replica-group size.
+    pub replicas: usize,
+    /// Fault-preset name driving the simulated message fabric.
+    pub faults: String,
+    /// Accepted proposals: scripted registers, failover no-op barriers,
+    /// and client-style retries after the kill.
+    pub proposed: usize,
+    /// Final commit index shared by every surviving replica.
+    pub committed: u64,
+    /// Highest commit index across the group at the moment of the kill.
+    pub commit_at_kill: u64,
+    /// Committed-before-kill entries lost or rewritten after failover.
+    pub lost: usize,
+    /// Election rounds started across the whole group.
+    pub elections: u64,
+    /// Term of the surviving leader after the run.
+    pub final_term: u64,
+    /// Virtual ticks from cold start to the first elected leader.
+    pub election_ticks: u64,
+    /// Virtual ticks from the leader kill to the first commit in the new
+    /// leader's term.
+    pub failover_ticks: u64,
+    /// Control-plane epoch of the survivor after applying the committed log.
+    pub epochs: u64,
+    /// Applications registered on the survivor's plane.
+    pub final_apps: usize,
+    /// Fabric messages submitted.
+    pub msgs_sent: u64,
+    /// Fabric messages dropped (faults + partitions + dead receivers).
+    pub msgs_dropped: u64,
+    /// Wall-clock seconds of the cold-start election (volatile).
+    pub election_secs: f64,
+    /// Wall-clock seconds from the kill to fleet reconvergence (volatile).
+    pub failover_secs: f64,
+    /// Committed log entries per wall-clock second of the replication
+    /// drive (volatile).
+    pub commands_per_sec: f64,
+}
+
+impl HaSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("faults", Json::Str(self.faults.clone())),
+            ("proposed", Json::Num(self.proposed as f64)),
+            ("committed", Json::Num(self.committed as f64)),
+            ("commit_at_kill", Json::Num(self.commit_at_kill as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("elections", Json::Num(self.elections as f64)),
+            ("final_term", Json::Num(self.final_term as f64)),
+            ("election_ticks", Json::Num(self.election_ticks as f64)),
+            ("failover_ticks", Json::Num(self.failover_ticks as f64)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("final_apps", Json::Num(self.final_apps as f64)),
+            ("msgs_sent", Json::Num(self.msgs_sent as f64)),
+            ("msgs_dropped", Json::Num(self.msgs_dropped as f64)),
+            ("election_secs", Json::Num(self.election_secs)),
+            ("failover_secs", Json::Num(self.failover_secs)),
+            ("commands_per_sec", Json::Num(self.commands_per_sec)),
         ])
     }
 }
@@ -379,7 +458,11 @@ impl ScenarioReport {
         if let Some(w) = &self.workload {
             pairs.push(("workload", Json::Str(w.clone())));
         }
-        if self.workload.is_some() || self.churn.is_some() || self.topo_churn.is_some() {
+        if self.workload.is_some()
+            || self.churn.is_some()
+            || self.topo_churn.is_some()
+            || self.ha.is_some()
+        {
             pairs.push(("slots", Json::Num(self.slots as f64)));
         }
         if let Some(a) = &self.adaptation {
@@ -396,6 +479,9 @@ impl ScenarioReport {
         }
         if let Some(ms) = &self.massive {
             pairs.push(("massive", ms.to_json()));
+        }
+        if let Some(h) = &self.ha {
+            pairs.push(("ha", h.to_json()));
         }
         Json::obj(pairs)
     }
@@ -570,6 +656,9 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
     if spec.massive {
         return run_massive(spec, cache);
     }
+    if spec.ha.is_some() {
+        return run_ha(spec);
+    }
     if spec.topo_churn.is_some() {
         return run_topo_churn(spec, cache);
     }
@@ -674,6 +763,7 @@ pub fn run_one(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result<Sce
         churn: None,
         topo_churn: None,
         massive: None,
+        ha: None,
     })
 }
 
@@ -767,6 +857,7 @@ pub fn run_distributed(
         churn: None,
         topo_churn: None,
         massive: None,
+        ha: None,
     })
 }
 
@@ -905,6 +996,7 @@ pub fn run_dynamic(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result
         churn: None,
         topo_churn: None,
         massive: None,
+        ha: None,
     })
 }
 
@@ -1087,6 +1179,299 @@ pub fn run_churn(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
         churn: Some(summary),
         topo_churn: None,
         massive: None,
+        ha: None,
+    })
+}
+
+/// Execute an `ha`-tier scenario: drive a simulated replica group
+/// ([`ReplGroup`]) through a cold-start election, a scripted register
+/// burst proposed all-in-flight, a leader kill mid-churn, and the
+/// failover, under the spec's declarative fault model. The run asserts the
+/// tier's core invariants inline — no committed-before-kill log entry is
+/// lost or rewritten, and every surviving replica's control plane, after
+/// applying its committed prefix, agrees on catalog and epoch — then
+/// serves `spec.slots` slots on the survivor's plane and compares the
+/// final GP strategy against the baselines re-solved on the final true
+/// rates, like the churn tier.
+///
+/// Failover is client-realistic: a retry loop re-proposes scripted
+/// commands missing from the new leader's log (it cannot distinguish a
+/// lost request from a lost leader), and the new leader commits a no-op
+/// barrier to assert its term — the raft idiom, since a leader may only
+/// count replicas toward commit for entries of its own term. The tolerant
+/// committed-apply ([`ControlPlane::apply_committed`]) makes any resulting
+/// duplicates converge.
+pub fn run_ha(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
+    let h = spec.ha.as_ref().expect("run_ha requires an ha spec").clone();
+    anyhow::ensure!(
+        spec.slots > 0,
+        "ha scenario '{}' needs slots >= 1",
+        spec.name()
+    );
+    anyhow::ensure!(
+        h.replicas >= 3,
+        "ha scenario '{}' needs >= 3 replicas to survive a leader kill",
+        spec.name()
+    );
+    let watch = Stopwatch::start();
+    let copts = ControlOptions {
+        workload: spec.workload.clone(),
+        ..ControlOptions::default()
+    };
+    // one plane per replica, built identically — they may only diverge if
+    // the committed logs diverge, which the run asserts they do not
+    let mut planes = Vec::with_capacity(h.replicas);
+    for _ in 0..h.replicas {
+        planes.push(ControlPlane::new(spec.effective_base(), copts.clone())?);
+    }
+    let n = planes[0].graph().n();
+    let sc = planes[0].scenario.clone();
+
+    // the scripted register burst, drawn like the churn tier's
+    // RegisterRandom (forked off the scenario seed, independent streams)
+    let mut script_rng = Rng::new(sc.seed ^ 0x4A50_C0DE);
+    let script: Vec<ReplCommand> = (0..h.registers)
+        .map(|k| {
+            let dest = script_rng.usize(n);
+            let sources = script_rng.choose_distinct(n, sc.num_sources.min(n));
+            let rates = sources
+                .into_iter()
+                .map(|i| {
+                    (i, script_rng.range(sc.rate_lo, sc.rate_hi) * sc.rate_scale * 0.25)
+                })
+                .collect();
+            ReplCommand::Register(AppSpec {
+                id: format!("ha-app-{k}"),
+                dest,
+                num_tasks: sc.num_tasks,
+                packet_sizes: (0..=sc.num_tasks).map(|t| sc.packet_size(t)).collect(),
+                rates,
+                status: AppStatus::Active,
+            })
+        })
+        .collect();
+    let contains = |r: &Replica, cmd: &ReplCommand| -> bool {
+        (1..=r.log_len()).any(|i| &r.log_entry(i).expect("index in range").cmd == cmd)
+    };
+
+    // phase 1: cold-start election
+    let e_watch = Stopwatch::start();
+    let mut g = ReplGroup::new(h.replicas, sc.seed, h.faults.clone());
+    let election_ticks = g.run_until_leader(h.max_ticks).ok_or_else(|| {
+        anyhow::anyhow!("ha '{}': no leader within {} ticks", spec.name(), h.max_ticks)
+    })?;
+    let election_secs = e_watch.elapsed_secs();
+    let initial_leader = g.leader().expect("run_until_leader returned Some");
+
+    // phase 2: propose the whole burst (in flight at once), give
+    // replication a few ticks — enough for the leader to commit, not
+    // enough for every follower to learn it — then kill the leader
+    let r_watch = Stopwatch::start();
+    let mut proposed = 0usize;
+    for cmd in &script {
+        if g.propose(cmd.clone()).is_some() {
+            proposed += 1;
+        }
+    }
+    for _ in 0..6 {
+        g.step();
+    }
+    let victim = g.leader().unwrap_or(initial_leader);
+    let commit_at_kill = g
+        .replicas
+        .iter()
+        .map(Replica::commit_index)
+        .max()
+        .unwrap_or(0);
+    let rich = (0..g.replicas.len())
+        .max_by_key(|&id| g.replicas[id].commit_index())
+        .expect("group is non-empty");
+    let pre_entries: Vec<LogEntry> = (1..=commit_at_kill)
+        .map(|i| {
+            g.replicas[rich]
+                .log_entry(i)
+                .expect("committed prefix present")
+                .clone()
+        })
+        .collect();
+    g.kill(victim);
+
+    // phase 3: failover and reconvergence
+    let kill_tick = g.now();
+    let f_watch = Stopwatch::start();
+    let mut failover_ticks: Option<u64> = None;
+    loop {
+        anyhow::ensure!(
+            g.now() - kill_tick < h.max_ticks,
+            "ha '{}': fleet did not reconverge within {} ticks of the kill",
+            spec.name(),
+            h.max_ticks
+        );
+        g.step();
+        let Some(l) = g.leader() else { continue };
+        // no-op barrier asserting the new term
+        let term = g.replicas[l].term();
+        let has_term_entry = (1..=g.replicas[l].log_len())
+            .any(|i| g.replicas[l].log_entry(i).expect("in range").term == term);
+        if !has_term_entry && g.propose(ReplCommand::SnapshotBarrier).is_some() {
+            proposed += 1;
+        }
+        // client retry of scripted commands the failover orphaned
+        for cmd in &script {
+            if !contains(&g.replicas[l], cmd) && g.propose(cmd.clone()).is_some() {
+                proposed += 1;
+            }
+        }
+        if failover_ticks.is_none() && g.replicas[l].commit_index() > commit_at_kill {
+            failover_ticks = Some(g.now() - kill_tick);
+        }
+        let target = g.replicas[l].log_len();
+        let all_committed = g
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(id, _)| g.alive[*id])
+            .all(|(_, r)| r.commit_index() >= target);
+        if all_committed
+            && failover_ticks.is_some()
+            && script.iter().all(|c| contains(&g.replicas[l], c))
+        {
+            break;
+        }
+    }
+    let failover_secs = f_watch.elapsed_secs();
+    let failover_ticks = failover_ticks.expect("loop breaks only once recorded");
+    let final_leader = g.leader().expect("loop ended with a leader");
+    let final_term = g.replicas[final_leader].term();
+    let committed = g.replicas[final_leader].commit_index();
+    let repl_secs = r_watch.elapsed_secs();
+    let commands_per_sec = if repl_secs > 0.0 {
+        committed as f64 / repl_secs
+    } else {
+        0.0
+    };
+
+    // the no-loss invariant: every entry committed before the kill is
+    // still at its index, bit-identical, on every surviving replica
+    let mut lost = 0usize;
+    for (id, r) in g.replicas.iter().enumerate() {
+        if !g.alive[id] {
+            continue;
+        }
+        for (i, pre) in pre_entries.iter().enumerate() {
+            let idx = i as u64 + 1;
+            if r.log_entry(idx).map(|e| e != pre).unwrap_or(true) {
+                lost += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        lost == 0,
+        "ha '{}': {lost} committed-before-kill entries lost or rewritten after failover",
+        spec.name()
+    );
+
+    // phase 4: apply each survivor's committed prefix to its own plane
+    // and check the fleet agrees on catalog + epoch
+    let mut survivor: Option<usize> = None;
+    for id in 0..h.replicas {
+        if !g.alive[id] {
+            continue;
+        }
+        let committed_cmds: Vec<ReplCommand> = g.replicas[id]
+            .take_committed()
+            .into_iter()
+            .map(|(_, c)| c)
+            .collect();
+        for cmd in &committed_cmds {
+            planes[id].apply_committed(cmd)?;
+        }
+        if let Some(s) = survivor {
+            anyhow::ensure!(
+                planes[id].epoch() == planes[s].epoch()
+                    && planes[id].catalog.to_json().to_string()
+                        == planes[s].catalog.to_json().to_string(),
+                "ha '{}': surviving replicas {s} and {id} diverged after applying the committed log",
+                spec.name()
+            );
+        } else {
+            survivor = Some(id);
+        }
+    }
+    let survivor = survivor.expect("at least one replica survives the kill");
+
+    let elections = g.replicas.iter().map(Replica::elections_started).sum();
+    let fs = g.stats();
+    let summary = HaSummary {
+        replicas: h.replicas,
+        faults: h.faults.name.clone(),
+        proposed,
+        committed,
+        commit_at_kill,
+        lost,
+        elections,
+        final_term,
+        election_ticks,
+        failover_ticks,
+        epochs: planes[survivor].epoch(),
+        final_apps: planes[survivor].catalog.len(),
+        msgs_sent: fs.sent,
+        msgs_dropped: fs.dropped_fault + fs.dropped_partition + fs.dropped_dead,
+        election_secs,
+        failover_secs,
+        commands_per_sec,
+    };
+
+    // phase 5: serve on the survivor's plane, then the final truth compare
+    let plane = &mut planes[survivor];
+    let mut costs = Vec::with_capacity(spec.slots);
+    for _ in 0..spec.slots {
+        costs.push(plane.run_slot()?.cost);
+    }
+    let mut truth = plane.server.net.clone();
+    plane.server.workload.apply_true_rates(&mut truth);
+    let gp_cost = costs.last().copied().unwrap_or(f64::NAN);
+    let mut cost_rows: Vec<(String, f64)> = vec![(Algorithm::Gp.name().to_string(), gp_cost)];
+    for alg in [Algorithm::Spoc, Algorithm::Lcof, Algorithm::LprSc] {
+        cost_rows.push((alg.name().to_string(), alg.solve(&truth, spec.iters)?));
+    }
+    let gp_within_baselines = cost_rows
+        .iter()
+        .skip(1)
+        .all(|(_, c)| gp_cost <= c * (1.0 + 1e-9) + 1e-12);
+
+    let phases = vec![
+        PhaseOutcome {
+            label: "serving-start".to_string(),
+            gp_cost: costs.first().copied().unwrap_or(f64::NAN),
+        },
+        PhaseOutcome {
+            label: "serving-end".to_string(),
+            gp_cost,
+        },
+    ];
+
+    Ok(ScenarioReport {
+        name: spec.name().to_string(),
+        topology: spec.base.topology.clone(),
+        congestion: spec.congestion.name().to_string(),
+        seed: spec.base.seed,
+        n: truth.n(),
+        m: truth.m(),
+        apps: truth.apps.len(),
+        phases,
+        costs: cost_rows,
+        gp_within_baselines,
+        solve_secs: watch.elapsed_secs(),
+        cache_hit: false,
+        workload: spec.workload.as_ref().map(|w| w.name().to_string()),
+        slots: spec.slots,
+        adaptation: None,
+        distributed: None,
+        churn: None,
+        topo_churn: None,
+        massive: None,
+        ha: Some(summary),
     })
 }
 
@@ -1279,6 +1664,7 @@ pub fn run_topo_churn(
         churn: None,
         topo_churn: Some(summary),
         massive: None,
+        ha: None,
     })
 }
 
@@ -1386,6 +1772,7 @@ pub fn run_massive(spec: &ScenarioSpec, cache: &ScenarioCache) -> anyhow::Result
         churn: None,
         topo_churn: None,
         massive: Some(summary),
+        ha: None,
     })
 }
 
@@ -1855,6 +2242,53 @@ mod tests {
         assert_eq!(ma.arrivals_total, mb.arrivals_total);
         assert_eq!(ma.detections, mb.detections);
         assert_eq!(ma.offered_load.to_bits(), mb.offered_load.to_bits());
+    }
+
+    fn quick_ha_spec(fault: &str, slots: usize) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::ha_matrix_sized(slots, 3)
+            .into_iter()
+            .find(|s| s.name().ends_with(fault))
+            .expect("fault preset is in the ha matrix");
+        spec.iters = 120;
+        spec
+    }
+
+    #[test]
+    fn ha_scenario_loses_no_committed_epoch() {
+        let rep = run_one(&quick_ha_spec("clean", 20), &ScenarioCache::new()).unwrap();
+        let h = rep.ha.as_ref().expect("ha report has an ha block");
+        assert_eq!(h.lost, 0);
+        assert_eq!(h.replicas, 3);
+        assert!(h.commit_at_kill >= 1, "burst must commit before the kill");
+        assert!(h.committed > h.commit_at_kill, "new term must commit");
+        assert!(h.final_term >= 2, "failover must raise the term");
+        assert!(h.election_ticks > 0 && h.failover_ticks > 0);
+        assert!(h.final_apps >= 1, "some scripted register must be admitted");
+        assert!(h.epochs >= h.final_apps as u64);
+        assert!(rep.gp_cost().is_finite() && rep.gp_cost() > 0.0);
+        // the JSON block is machine-readable and slot-gated
+        let v = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(
+            v.get("ha").unwrap().get("lost").unwrap().as_usize(),
+            Some(0)
+        );
+        assert_eq!(v.get("slots").unwrap().as_usize(), Some(20));
+    }
+
+    #[test]
+    fn ha_runs_are_deterministic_per_spec() {
+        let spec = quick_ha_spec("lossy", 12);
+        let a = run_one(&spec, &ScenarioCache::new()).unwrap();
+        let b = run_one(&spec, &ScenarioCache::new()).unwrap();
+        assert_eq!(a.gp_cost().to_bits(), b.gp_cost().to_bits());
+        let (ha_a, ha_b) = (a.ha.unwrap(), b.ha.unwrap());
+        assert_eq!(ha_a.committed, ha_b.committed);
+        assert_eq!(ha_a.commit_at_kill, ha_b.commit_at_kill);
+        assert_eq!(ha_a.election_ticks, ha_b.election_ticks);
+        assert_eq!(ha_a.failover_ticks, ha_b.failover_ticks);
+        assert_eq!(ha_a.msgs_sent, ha_b.msgs_sent);
+        assert_eq!(ha_a.msgs_dropped, ha_b.msgs_dropped);
+        assert_eq!(ha_a.final_term, ha_b.final_term);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Golden-file regression tests: fixed-seed scenario reports, one per tier
-//! (default, large, dynamic, distributed, churn, topo-churn), compared
+//! (default, large, dynamic, distributed, churn, topo-churn, massive, ha),
+//! compared
 //! against the committed files under `rust/tests/golden/` with a
 //! tolerance-aware JSON comparator.
 //!
@@ -22,7 +23,7 @@ use scfo::scenarios::{runner, DistributedSpec};
 use scfo::util::json::Json;
 
 /// Keys whose values are wall-clock / environment dependent.
-const VOLATILE_KEYS: [&str; 16] = [
+const VOLATILE_KEYS: [&str; 19] = [
     "solve_secs",
     "cache_hit",
     "build_secs",
@@ -39,6 +40,9 @@ const VOLATILE_KEYS: [&str; 16] = [
     "phase_sample_ms_mean",
     "phase_estimate_ms_mean",
     "phase_detect_ms_mean",
+    "election_secs",
+    "failover_secs",
+    "commands_per_sec",
 ];
 
 const REL_TOL: f64 = 1e-9;
@@ -256,6 +260,21 @@ fn golden_massive_tier_er_1000_4000() {
         .expect("massive matrix has one spec");
     let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
     check_golden("massive-er-1000-4000", &rep.to_json());
+}
+
+/// HA (replicated control plane) tier: the abilene clean-fabric cell —
+/// elect, register burst, leader kill, failover — pinning commit indices,
+/// tick counts, fabric counters and the survivor's catalog/epoch state;
+/// election/failover wall times and commands/sec are volatile and skipped.
+#[test]
+fn golden_ha_tier_abilene_clean() {
+    let mut spec = ScenarioSpec::ha_matrix_sized(20, 3)
+        .into_iter()
+        .find(|s| s.name().ends_with("clean"))
+        .expect("ha matrix covers the clean preset");
+    spec.iters = 120;
+    let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
+    check_golden("ha-abilene-clean", &rep.to_json());
 }
 
 // ---- comparator self-tests ------------------------------------------------

@@ -1,0 +1,373 @@
+//! Chaos + linearization suite for the replicated control plane.
+//!
+//! **Failover chaos**: the `ha` tier scenario (elect → register burst in
+//! flight → kill the leader → reconverge) must, under the `clean`, `lossy`
+//! and `partition` fault presets,
+//!
+//! 1. lose **no committed epoch**: every entry committed before the kill is
+//!    still at its index, bit-identical, on every survivor;
+//! 2. have a surviving follower serving within a bounded number of virtual
+//!    ticks of the kill; and
+//! 3. be **bit-reproducible**: a rerun with the same `(seed, fault-spec)`
+//!    yields identical commit indices, tick counts, fabric counters and
+//!    serving cost bits.
+//!
+//! The fault seed honors `SCFO_CHAOS_SEED` so CI can sweep seeds; every run
+//! prints one `repl-digest <scenario> <spec> <cost-bits> ...` line and the
+//! CI `chaos-and-golden` job runs the suite twice per seed, failing on any
+//! run-to-run output diff (the flakiness gate — see docs/TESTING.md).
+//!
+//! **Linearization**: the committed order IS the truth. For random command
+//! scripts (register/update/drain/remove over a small id pool), random
+//! fault knobs and a mid-script leader kill, every survivor's catalog after
+//! applying its own committed prefix must equal a single-node
+//! [`AppCatalog`] replaying the leader's committed log — same JSON, rate
+//! sums within 1e-9. Failures shrink to a minimal counterexample via the
+//! [`Shrink`] harness in `util/prop.rs`, at replica counts 3 and 5.
+
+use scfo::control::replication::{apply_to_catalog, ReplCommand, ReplGroup};
+use scfo::control::{AppCatalog, AppSpec, AppStatus};
+use scfo::distributed::FaultSpec;
+use scfo::scenarios::{runner, ScenarioCache, ScenarioSpec};
+use scfo::util::prop::{forall_cases, PropResult, Shrink};
+
+/// Fault seed: `SCFO_CHAOS_SEED` (CI sweeps it), default 7.
+fn chaos_seed() -> u64 {
+    std::env::var("SCFO_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7)
+}
+
+/// The `ha` tier cell for one fault preset, sized down for the test and
+/// re-seeded from the chaos seed (network seed stays fixed; the fault
+/// stream is what the CI sweep varies, like `tests/chaos.rs`).
+fn ha_spec(fault: &str, seed: u64) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::ha_matrix_sized(16, 3)
+        .into_iter()
+        .find(|s| s.name().ends_with(fault))
+        .expect("ha matrix covers every fault preset");
+    spec.iters = 120;
+    let h = spec.ha.as_mut().expect("ha cell carries an ha spec");
+    h.faults = FaultSpec::preset(fault, seed).expect("ha presets are valid");
+    spec
+}
+
+#[test]
+fn leader_kill_loses_no_committed_epoch_under_faults() {
+    let seed = chaos_seed();
+    let cache = ScenarioCache::new();
+    for fault in ["clean", "lossy", "partition"] {
+        let spec = ha_spec(fault, seed);
+        let rep = runner::run_one(&spec, &cache)
+            .unwrap_or_else(|e| panic!("ha scenario under '{fault}' failed: {e:#}"));
+        let h = rep.ha.as_ref().expect("ha report carries an ha summary");
+        assert_eq!(h.lost, 0, "'{fault}': lost a committed-before-kill entry");
+        assert!(
+            h.commit_at_kill >= 1,
+            "'{fault}': kill happened before anything committed"
+        );
+        assert!(
+            h.committed > h.commit_at_kill,
+            "'{fault}': new leader never committed past the kill point"
+        );
+        // a surviving follower serves within a bounded number of virtual
+        // ticks: under `partition` the survivors may have to wait out the
+        // cut (heals at tick {heal}), so the bound is the heal horizon
+        // plus an election + replication allowance
+        let bound = spec
+            .ha
+            .as_ref()
+            .expect("spec has ha")
+            .faults
+            .last_partition_end()
+            + 600;
+        assert!(
+            h.failover_ticks > 0 && h.failover_ticks <= bound,
+            "'{fault}': failover took {} ticks (bound {bound})",
+            h.failover_ticks
+        );
+        assert!(h.final_term >= 2, "'{fault}': no new term after the kill");
+        println!(
+            "repl-digest {} {fault} {:016x} committed={} kill={} lost={} election={} failover={} msgs={} dropped={}",
+            spec.name(),
+            rep.gp_cost().to_bits(),
+            h.committed,
+            h.commit_at_kill,
+            h.lost,
+            h.election_ticks,
+            h.failover_ticks,
+            h.msgs_sent,
+            h.msgs_dropped,
+        );
+    }
+}
+
+#[test]
+fn failover_runs_are_bit_identical_per_seed_and_spec() {
+    let seed = chaos_seed();
+    let cache = ScenarioCache::new();
+    for fault in ["clean", "lossy", "partition"] {
+        let spec = ha_spec(fault, seed);
+        let a = runner::run_one(&spec, &cache).expect("first run");
+        let b = runner::run_one(&spec, &cache).expect("second run");
+        let (ha, hb) = (a.ha.as_ref().unwrap(), b.ha.as_ref().unwrap());
+        assert_eq!(
+            a.gp_cost().to_bits(),
+            b.gp_cost().to_bits(),
+            "'{fault}': serving cost bits diverged across reruns"
+        );
+        for (name, va, vb) in [
+            ("committed", ha.committed, hb.committed),
+            ("commit_at_kill", ha.commit_at_kill, hb.commit_at_kill),
+            ("election_ticks", ha.election_ticks, hb.election_ticks),
+            ("failover_ticks", ha.failover_ticks, hb.failover_ticks),
+            ("msgs_sent", ha.msgs_sent, hb.msgs_sent),
+            ("msgs_dropped", ha.msgs_dropped, hb.msgs_dropped),
+            ("final_term", ha.final_term, hb.final_term),
+            ("elections", ha.elections, hb.elections),
+        ] {
+            assert_eq!(va, vb, "'{fault}': {name} diverged across reruns");
+        }
+        assert_eq!(ha.proposed, hb.proposed, "'{fault}': proposed diverged");
+        assert_eq!(ha.lost, hb.lost, "'{fault}': lost diverged");
+    }
+}
+
+// ---- linearization property -----------------------------------------------
+
+/// One step of a random command script over a small app-id pool. A compact
+/// op code keeps the case debug-printable and shrinkable.
+#[derive(Clone, Debug, PartialEq)]
+enum Op {
+    Register(usize),
+    Update(usize),
+    Drain(usize),
+    Remove(usize),
+}
+
+impl Op {
+    fn command(&self) -> ReplCommand {
+        // deterministic little specs: the id index fixes every field, so
+        // identical ops are identical commands on every shrink re-run
+        let spec = |k: usize| AppSpec {
+            id: format!("p-{k}"),
+            dest: k % 3,
+            num_tasks: 2,
+            packet_sizes: vec![8.0 + k as f64, 4.0, 1.0],
+            rates: vec![(k % 2, 0.2 + 0.1 * k as f64)],
+            status: AppStatus::Active,
+        };
+        match self {
+            Op::Register(k) => ReplCommand::Register(spec(*k)),
+            Op::Update(k) => {
+                let mut s = spec(*k);
+                s.rates = vec![(*k % 2, 0.05 + 0.01 * *k as f64)];
+                ReplCommand::Update(s)
+            }
+            Op::Drain(k) => ReplCommand::Drain(format!("p-{k}")),
+            Op::Remove(k) => ReplCommand::Remove(format!("p-{k}")),
+        }
+    }
+}
+
+/// A linearization case: a script, a fleet size, fault knobs and a kill
+/// point. Shrinking drops script ops, then calms the fault knobs, then
+/// moves the kill earlier — in that order, so minimal counterexamples are
+/// short clean scripts.
+#[derive(Clone, Debug)]
+struct ReplCase {
+    ops: Vec<Op>,
+    replicas: usize,
+    kill_after: usize,
+    drop: f64,
+    max_delay: u64,
+    seed: u64,
+}
+
+impl Shrink for ReplCase {
+    fn shrink(&self) -> Vec<ReplCase> {
+        let mut out = Vec::new();
+        for i in 0..self.ops.len() {
+            let mut c = self.clone();
+            c.ops.remove(i);
+            c.kill_after = c.kill_after.min(c.ops.len());
+            out.push(c);
+        }
+        if self.drop > 0.0 {
+            let mut c = self.clone();
+            c.drop = 0.0;
+            out.push(c);
+        }
+        if self.max_delay > 1 {
+            let mut c = self.clone();
+            c.max_delay = 1;
+            out.push(c);
+        }
+        if self.kill_after > 0 {
+            let mut c = self.clone();
+            c.kill_after = 0;
+            out.push(c);
+        }
+        if self.replicas > 3 {
+            let mut c = self.clone();
+            c.replicas = 3;
+            out.push(c);
+        }
+        out
+    }
+}
+
+/// Drive the case and judge it: every survivor's catalog after applying
+/// its own committed prefix must equal the single-node replay of the
+/// leader's committed log.
+fn check_linearization(case: &ReplCase) -> PropResult {
+    let faults = FaultSpec {
+        name: "case".to_string(),
+        seed: case.seed,
+        drop: case.drop,
+        dup: 0.0,
+        min_delay: 1,
+        max_delay: case.max_delay.max(1),
+        partitions: Vec::new(),
+    };
+    let mut g = ReplGroup::new(case.replicas, case.seed, faults);
+    if g.run_until_leader(2000).is_none() {
+        return PropResult::Discard; // fault knobs too hostile to elect
+    }
+    let script: Vec<ReplCommand> = case.ops.iter().map(Op::command).collect();
+    let mut killed = false;
+    for (i, cmd) in script.iter().enumerate() {
+        if i == case.kill_after && !killed && case.replicas >= 3 {
+            if let Some(victim) = g.leader() {
+                g.kill(victim);
+                killed = true;
+            }
+        }
+        // client-style retry: re-propose until the current leader carries
+        // the command (duplicates are fine — tolerant apply absorbs them)
+        let mut budget = 3000u64;
+        loop {
+            let Some(l) = g.leader() else {
+                if budget == 0 {
+                    return PropResult::Discard;
+                }
+                budget -= 1;
+                g.step();
+                continue;
+            };
+            let has = (1..=g.replicas[l].log_len())
+                .any(|idx| g.replicas[l].log_entry(idx).map(|e| &e.cmd) == Some(cmd));
+            if has {
+                break;
+            }
+            if budget == 0 {
+                return PropResult::Discard;
+            }
+            budget -= 1;
+            g.propose(cmd.clone());
+            g.step();
+        }
+    }
+    // drain: run until every survivor committed the full leader log
+    let mut budget = 4000u64;
+    loop {
+        let Some(l) = g.leader() else {
+            if budget == 0 {
+                return PropResult::Discard;
+            }
+            budget -= 1;
+            g.step();
+            continue;
+        };
+        let target = g.replicas[l].log_len();
+        let all = (0..case.replicas)
+            .filter(|&id| g.alive[id])
+            .all(|id| g.replicas[id].commit_index() >= target);
+        if all && target > 0 {
+            break;
+        }
+        if budget == 0 {
+            return PropResult::Discard;
+        }
+        budget -= 1;
+        g.step();
+    }
+
+    // reference: a single-node catalog replaying the leader's committed log
+    let leader = g.leader().expect("drain loop ended with a leader");
+    let commit = g.replicas[leader].commit_index();
+    let mut reference = AppCatalog::new();
+    for idx in 1..=commit {
+        let entry = g.replicas[leader].log_entry(idx).expect("committed entry");
+        if let Err(e) = apply_to_catalog(&mut reference, &entry.cmd) {
+            return PropResult::Fail(format!("reference apply failed at {idx}: {e:#}"));
+        }
+    }
+    let want = reference.to_json().to_string();
+    let want_rate: f64 = reference
+        .iter()
+        .flat_map(|a| a.rates.iter().map(|&(_, r)| r))
+        .sum();
+
+    for id in 0..case.replicas {
+        if !g.alive[id] {
+            continue;
+        }
+        let mut cat = AppCatalog::new();
+        for (_, cmd) in g.replicas[id].take_committed() {
+            if let Err(e) = apply_to_catalog(&mut cat, &cmd) {
+                return PropResult::Fail(format!("replica {id} apply failed: {e:#}"));
+            }
+        }
+        let got = cat.to_json().to_string();
+        if got != want {
+            return PropResult::Fail(format!(
+                "replica {id} catalog diverged from the committed-order replay\n got: {got}\nwant: {want}"
+            ));
+        }
+        let got_rate: f64 = cat
+            .iter()
+            .flat_map(|a| a.rates.iter().map(|&(_, r)| r))
+            .sum();
+        if (got_rate - want_rate).abs() > 1e-9 {
+            return PropResult::Fail(format!(
+                "replica {id} rate mass diverged: {got_rate} vs {want_rate}"
+            ));
+        }
+    }
+    PropResult::Pass
+}
+
+#[test]
+fn committed_order_is_a_linearization_with_shrinking() {
+    let sweep = chaos_seed();
+    forall_cases(
+        "repl committed order is a linearization",
+        24,
+        |g| {
+            let len = g.usize_in(1, 8);
+            let ops = (0..len)
+                .map(|_| {
+                    let k = g.usize_in(0, 3);
+                    match g.usize_in(0, 3) {
+                        0 => Op::Register(k),
+                        1 => Op::Update(k),
+                        2 => Op::Drain(k),
+                        _ => Op::Remove(k),
+                    }
+                })
+                .collect::<Vec<_>>();
+            let replicas = if g.bool(0.5) { 3 } else { 5 };
+            ReplCase {
+                kill_after: g.usize_in(0, ops.len()),
+                ops,
+                replicas,
+                drop: if g.bool(0.5) { 0.1 } else { 0.0 },
+                max_delay: g.usize_in(1, 4) as u64,
+                seed: sweep ^ g.rng().usize(1 << 30) as u64,
+            }
+        },
+        check_linearization,
+    );
+}
