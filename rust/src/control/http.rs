@@ -37,7 +37,7 @@ use std::path::Path;
 use std::time::Duration;
 
 use crate::control::replication::{LiveReplica, ReplCommand, ReplMsg};
-use crate::control::{snapshot, AppStatus, ControlPlane};
+use crate::control::{AppStatus, ControlPlane};
 use crate::util::json::Json;
 
 /// Upper bound on request head + body we are willing to buffer.
@@ -265,6 +265,19 @@ fn route(
                     Ok(m) => m,
                     Err(e) => return err(400, format!("bad consensus message: {e}")),
                 };
+                // a forged/corrupt sender id would index per-replica
+                // tables; reject it at the edge instead of relying on the
+                // state machine's own guard
+                if msg.from() >= r.group_size() {
+                    return err(
+                        400,
+                        format!(
+                            "bad consensus message: sender id {} out of range for {} replicas",
+                            msg.from(),
+                            r.group_size()
+                        ),
+                    );
+                }
                 let (reply, committed) = r.handle_msg(msg);
                 for cmd in &committed {
                     if let Err(e) = plane.apply_committed(cmd) {
@@ -324,20 +337,10 @@ fn route(
             Some(dir) => {
                 // a replica checkpoints into its own subdirectory and the
                 // document carries its persistent consensus state (v3)
-                let (dir, repl_state) = match repl.as_deref() {
-                    Some(r) => (snapshot::replica_dir(dir, r.id()), Some(r.persistent_json())),
-                    None => (dir.to_path_buf(), None),
+                let outcome = match repl.as_deref() {
+                    Some(r) => plane.checkpoint_replicated(dir, r),
+                    None => plane.checkpoint(dir),
                 };
-                let outcome = plane.snapshot_json().and_then(|doc| {
-                    let doc = match (doc, repl_state) {
-                        (Json::Obj(mut o), Some(rs)) => {
-                            o.insert("replication".into(), rs);
-                            Json::Obj(o)
-                        }
-                        (d, _) => d,
-                    };
-                    snapshot::write_atomic(&dir, &doc)
-                });
                 match outcome {
                     Ok(path) => json(
                         200,

@@ -600,6 +600,30 @@ impl ControlPlane {
         snapshot::write_atomic(dir, &self.snapshot_json()?)
     }
 
+    /// Replicated-mode checkpoint: writes into the replica's private
+    /// subdirectory of the shared `--checkpoint` `base_dir`
+    /// ([`snapshot::replica_dir`], so co-located replicas never clobber
+    /// each other's `snapshot.json`) and embeds the replica's persistent
+    /// consensus state under the snapshot-v3 `replication` key. Every
+    /// checkpoint a replicated deployment takes — periodic, final, and
+    /// `POST /checkpoint` — goes through here; the serve path restores
+    /// from the same per-replica directory.
+    pub fn checkpoint_replicated(
+        &self,
+        base_dir: &Path,
+        repl: &LiveReplica,
+    ) -> anyhow::Result<PathBuf> {
+        let mut doc = match self.snapshot_json()? {
+            Json::Obj(o) => o,
+            _ => unreachable!("snapshot serializes to an object"),
+        };
+        doc.insert("replication".into(), repl.persistent_json());
+        snapshot::write_atomic(
+            &snapshot::replica_dir(base_dir, repl.id()),
+            &Json::Obj(doc),
+        )
+    }
+
     /// Resume from the checkpoint in `dir`. The base topology rebuilds
     /// deterministically from the scenario seed and the checkpointed
     /// link-churn state (removed pairs + pending repair schedule) replays
@@ -608,7 +632,13 @@ impl ControlPlane {
     /// restore exactly, so the serving loop continues bit-identically with
     /// an uninterrupted run (pinned by `rust/tests/control.rs`).
     pub fn restore(dir: &Path, opts: ControlOptions) -> anyhow::Result<ControlPlane> {
-        let doc = snapshot::load(dir)?;
+        Self::restore_from_doc(&snapshot::load(dir)?, opts)
+    }
+
+    /// [`ControlPlane::restore`] on an already-loaded snapshot document.
+    /// The replicated serve path loads the document once and reuses it for
+    /// the `replication` key ([`LiveReplica::load_persistent`]).
+    pub fn restore_from_doc(doc: &Json, opts: ControlOptions) -> anyhow::Result<ControlPlane> {
         let scenario = Scenario::from_json(
             doc.get("scenario")
                 .ok_or_else(|| anyhow::anyhow!("snapshot: missing 'scenario'"))?,

@@ -18,6 +18,17 @@
 //! `rust/tests/repl_chaos.rs`). After a leader crash, followers keep
 //! serving reads (`GET /status`) from replicated state; CI's control-smoke
 //! job pins exactly that.
+//!
+//! A *restarted* replica does not start from scratch: the serve path
+//! loads the persistent consensus state (term, vote, commit, log tail)
+//! from its snapshot-v3 checkpoint ([`LiveReplica::load_persistent`]) and
+//! replica 0 then re-asserts leadership via [`LiveReplica::rebootstrap`],
+//! which re-leads in a term strictly above the restored one — so its
+//! appends truncate any suffix a follower accepted under the old term
+//! rather than silently coexisting with it. Entries committed after the
+//! last checkpoint are the restart's durability horizon: checkpoint
+//! often (`--checkpoint-every`, `POST /checkpoint`) in replicated
+//! deployments.
 
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -42,6 +53,11 @@ pub struct LiveReplica {
     /// Ops address per replica id (`peers[self.id()]` is this process).
     peers: Vec<String>,
     now: u64,
+    /// Outbound messages [`LiveReplica::handle_msg`] produced that were
+    /// not the direct reply to the sender (e.g. the append fan-out of a
+    /// leadership change). Delivered on the next [`LiveReplica::replicate`]
+    /// round instead of being dropped.
+    pending: Vec<(usize, ReplMsg)>,
 }
 
 impl LiveReplica {
@@ -65,11 +81,17 @@ impl LiveReplica {
             replica,
             peers,
             now: 0,
+            pending: Vec::new(),
         })
     }
 
     pub fn id(&self) -> usize {
         self.replica.id()
+    }
+
+    /// Number of replicas in the group (valid sender ids are `0..n`).
+    pub fn group_size(&self) -> usize {
+        self.peers.len()
     }
 
     pub fn is_leader(&self) -> bool {
@@ -120,12 +142,17 @@ impl LiveReplica {
         self.now += 1;
         let sender = msg.from();
         self.replica.recv(self.now, msg);
-        let reply = self
-            .replica
-            .take_outbox()
-            .into_iter()
-            .find(|(to, _)| *to == sender)
-            .map(|(_, m)| m);
+        // first message back to the sender rides the HTTP response; any
+        // other outbound traffic (a fan-out to third parties) is queued
+        // for the next replicate round rather than silently dropped
+        let mut reply = None;
+        for (to, m) in self.replica.take_outbox() {
+            if reply.is_none() && to == sender {
+                reply = Some(m);
+            } else {
+                self.pending.push((to, m));
+            }
+        }
         let committed = self
             .replica
             .take_committed()
@@ -156,7 +183,8 @@ impl LiveReplica {
             .propose(cmd)
             .ok_or_else(|| anyhow::anyhow!("not the leader"))?;
         for _round in 0..MAX_ROUNDS {
-            let outbound = self.replica.take_outbox();
+            let mut outbound = std::mem::take(&mut self.pending);
+            outbound.extend(self.replica.take_outbox());
             for (to, msg) in outbound {
                 let addr = self.peers[to].clone();
                 match self.exchange(&addr, &msg) {
@@ -211,7 +239,12 @@ impl LiveReplica {
     }
 
     /// Re-assert bootstrap leadership after a restore (replica 0 only by
-    /// convention).
+    /// convention). Leads in a term strictly above the restored one (see
+    /// [`Replica::bootstrap_leader`]), so stale same-term suffixes on
+    /// followers are truncated by the first append instead of silently
+    /// diverging. Leadership is asserted lazily — peers may not be
+    /// listening yet, so the bootstrap fan-out is discarded like
+    /// [`LiveReplica::new`]'s.
     pub fn rebootstrap(&mut self) {
         self.replica.bootstrap_leader();
         self.replica.take_outbox();
@@ -293,6 +326,61 @@ mod tests {
         leader.replica.recv(now, ack);
         assert_eq!(leader.commit_index(), 1, "one ack + self is a majority of 3");
         assert_eq!(leader.take_committed(), vec![ReplCommand::SnapshotBarrier]);
+    }
+
+    /// A recv that fans out beyond the direct reply (here: a granted vote
+    /// turning the replica into a leader, which pushes appends to every
+    /// peer) must queue the extra messages for the next replicate round,
+    /// not drop them.
+    #[test]
+    fn handle_msg_queues_non_reply_fanout() {
+        let peers = vec![
+            "127.0.0.1:1".to_string(),
+            "127.0.0.1:2".to_string(),
+            "127.0.0.1:3".to_string(),
+        ];
+        let mut r1 = LiveReplica::new(1, peers, 7).unwrap();
+        // force an election so a vote can arrive (live mode never does
+        // this on its own; the scenario is the future-proofing target)
+        r1.replica.tick(100);
+        assert_eq!(r1.replica.role(), super::super::Role::Candidate);
+        r1.replica.take_outbox(); // discard the vote requests
+        let (reply, committed) = r1.handle_msg(ReplMsg::Vote {
+            term: r1.term(),
+            from: 0,
+            granted: true,
+        });
+        assert!(r1.is_leader(), "majority of 3 is the candidate plus one vote");
+        assert!(committed.is_empty());
+        // the append to the voter rides the reply; the append to peer 2
+        // waits in the pending queue instead of vanishing
+        assert!(matches!(reply, Some(ReplMsg::Append { .. })));
+        assert_eq!(r1.pending.len(), 1);
+        assert_eq!(r1.pending[0].0, 2);
+        assert!(matches!(r1.pending[0].1, ReplMsg::Append { .. }));
+    }
+
+    #[test]
+    fn rebootstrap_after_restore_leads_in_a_fresh_term() {
+        let peers = vec![
+            "127.0.0.1:1".to_string(),
+            "127.0.0.1:2".to_string(),
+            "127.0.0.1:3".to_string(),
+        ];
+        let mut r0 = LiveReplica::new(0, peers.clone(), 7).unwrap();
+        let _ = r0.replica.propose(ReplCommand::SnapshotBarrier).unwrap();
+        let state = r0.persistent_json();
+        let mut restarted = LiveReplica::new(0, peers, 7).unwrap();
+        restarted
+            .load_persistent(&Json::parse(&state.to_string()).unwrap())
+            .unwrap();
+        restarted.rebootstrap();
+        assert!(restarted.is_leader());
+        assert_eq!(restarted.term(), 2, "restart must not reuse the old term");
+        // the restored entry survives, plus the new-term barrier that
+        // will carry the restored-but-uncommitted tail to commit
+        assert_eq!(restarted.replica.log_len(), 2);
+        assert_eq!(restarted.replica.log_entry(2).unwrap().term, 2);
     }
 
     #[test]

@@ -371,12 +371,20 @@ impl Replica {
         out
     }
 
-    /// Force this replica to lead in term 1 without an election. Live
-    /// deployments bootstrap replica 0 this way (the loopback drivers run
-    /// no background ticker to elect with); the simulated layer never
-    /// needs it but tests use it for brevity.
+    /// Force this replica to lead without an election. Live deployments
+    /// bootstrap replica 0 this way (the loopback drivers run no
+    /// background ticker to elect with); the simulated layer never needs
+    /// it but tests use it for brevity.
+    ///
+    /// The bootstrap term is strictly above anything this replica has
+    /// seen (`max(term, last log term) + 1`, so term 1 on a fresh
+    /// replica). A replica restarted from a persisted snapshot therefore
+    /// re-leads in a *new* term: its appends conflict with — and truncate
+    /// — any same-index suffix a follower accepted under the old term,
+    /// instead of silently coexisting with it at the same term.
     pub fn bootstrap_leader(&mut self) {
-        self.term = 1;
+        self.term = self.term.max(self.last_log_term()) + 1;
+        self.voted_for = Some(self.cfg.id);
         self.become_leader(0);
     }
 
@@ -444,6 +452,16 @@ impl Replica {
         let next = self.log_len() + 1;
         self.next_index = vec![next; self.cfg.n];
         self.match_index = vec![0; self.cfg.n];
+        // a leader only counts commits for entries of its own term, so a
+        // prior-term tail would sit uncommitted until the next client
+        // proposal; a no-op barrier in the new term carries it to commit
+        // promptly, no matter which driver runs the failover
+        if self.cfg.n > 1 && self.log_len() > self.commit {
+            self.log.push(LogEntry {
+                term: self.term,
+                cmd: ReplCommand::SnapshotBarrier,
+            });
+        }
         self.heartbeat_due = now + self.cfg.heartbeat_every;
         // assert leadership immediately; also settles commit for n = 1
         for peer in self.peers() {
@@ -503,7 +521,16 @@ impl Replica {
 
     /// Consume one inbound message; replies and follow-ups land in the
     /// outbox.
+    ///
+    /// Messages whose sender id is outside `0..n` (or equal to this
+    /// replica's own id) are ignored outright: `from` indexes the
+    /// vote/match tables, and in live mode it arrives over an open HTTP
+    /// port — a forged or corrupt id must degrade to a no-op, never an
+    /// out-of-bounds panic on the serving thread.
     pub fn recv(&mut self, now: u64, msg: ReplMsg) {
+        if msg.from() >= self.cfg.n || msg.from() == self.cfg.id {
+            return;
+        }
         if msg.term() > self.term {
             self.step_down(msg.term());
         }
@@ -869,6 +896,129 @@ mod tests {
         match &out[0].1 {
             ReplMsg::Vote { granted, .. } => assert!(!granted, "stale log must not win"),
             other => panic!("expected a vote, got {other:?}"),
+        }
+    }
+
+    /// A forged/corrupt sender id (here an append-ack with `from: 999`
+    /// aimed at a leader, which would index `match_index[999]`) must be a
+    /// no-op, not an index-out-of-bounds panic — in live mode this
+    /// message arrives over an open HTTP port.
+    #[test]
+    fn out_of_range_sender_is_ignored() {
+        let mut rs = group(3, 21);
+        rs[0].bootstrap_leader();
+        settle(&mut rs, 0);
+        rs[0].propose(drain("a"));
+        let before = rs[0].take_outbox().len(); // drain so the check below is exact
+        assert!(before > 0);
+        for msg in [
+            ReplMsg::AppendAck {
+                term: 1,
+                from: 999,
+                ok: true,
+                match_index: 1,
+            },
+            ReplMsg::RequestVote {
+                term: 9,
+                from: 3,
+                last_log_index: 0,
+                last_log_term: 0,
+            },
+            ReplMsg::Vote {
+                term: 1,
+                from: 0, // the replica's own id is equally bogus
+                granted: true,
+            },
+        ] {
+            rs[0].recv(0, msg);
+        }
+        assert!(rs[0].is_leader(), "bogus senders must not depose the leader");
+        assert_eq!(rs[0].term(), 1, "bogus high terms must not stick");
+        assert!(rs[0].take_outbox().is_empty(), "no replies to bogus senders");
+    }
+
+    /// The consensus core itself guarantees liveness across failover: a
+    /// new leader holding a committed-on-the-old-leader but
+    /// not-yet-propagated tail commits it via its own no-op barrier,
+    /// without waiting for a client proposal.
+    #[test]
+    fn new_leader_commits_prior_term_tail_without_client_proposals() {
+        let mut rs = group(3, 22);
+        rs[0].bootstrap_leader();
+        settle(&mut rs, 0);
+        rs[0].propose(drain("a"));
+        // deliver the appends to the followers but drop their acks: the
+        // entry is replicated everywhere yet committed nowhere
+        for (to, msg) in rs[0].take_outbox() {
+            rs[to].recv(0, msg);
+            rs[to].take_outbox();
+        }
+        assert!(rs.iter().all(|r| r.commit_index() == 0));
+        // kill the leader; drive the survivors (no further proposals)
+        let mut now = 0;
+        while rs[1..].iter().all(|r| r.commit_index() < 1) {
+            now += 1;
+            assert!(now < 500, "prior-term tail never committed after failover");
+            for r in rs[1..].iter_mut() {
+                r.tick(now);
+            }
+            loop {
+                let mut moved = false;
+                for i in 1..3 {
+                    for (to, msg) in rs[i].take_outbox() {
+                        if to != 0 {
+                            rs[to].recv(now, msg);
+                            moved = true;
+                        }
+                    }
+                }
+                if !moved {
+                    break;
+                }
+            }
+        }
+        let leader = rs[1..].iter().position(|r| r.is_leader()).unwrap() + 1;
+        assert_eq!(rs[leader].log_entry(1).unwrap().cmd, drain("a"));
+        // the barrier the new leader appended in its own term is what
+        // carried the tail to commit
+        let barrier = rs[leader].log_entry(2).expect("barrier appended");
+        assert_eq!(barrier.cmd, ReplCommand::SnapshotBarrier);
+        assert_eq!(barrier.term, rs[leader].term());
+        assert!(rs[leader].commit_index() >= 1);
+    }
+
+    /// A replica restarted from persisted state re-bootstraps in a term
+    /// strictly above the restored one, so its appends truncate a stale
+    /// same-index suffix on followers instead of leaving two diverged
+    /// logs that both believe they are term-1 (the silent-fork hazard).
+    #[test]
+    fn rebootstrap_after_restore_bumps_term_and_truncates_stale_suffixes() {
+        let mut rs = group(3, 23);
+        rs[0].bootstrap_leader();
+        settle(&mut rs, 0);
+        rs[0].propose(drain("a"));
+        settle(&mut rs, 0);
+        let state = rs[0].persistent_json();
+        rs[0].propose(drain("b")); // never persisted: lost by the restart
+        settle(&mut rs, 0);
+        assert_eq!(rs[1].log_len(), 2);
+        // restart replica 0 from the persisted (pre-"b") state
+        let mut restarted = Replica::new(ReplicaConfig::new(0, 3, 23));
+        restarted
+            .load_persistent(&Json::parse(&state.to_string()).unwrap())
+            .unwrap();
+        restarted.bootstrap_leader();
+        assert_eq!(restarted.term(), 2, "bootstrap must leave the restored term");
+        rs[0] = restarted;
+        // the restarted leader proposes in term 2; followers must drop
+        // the stale term-1 "b" at index 2 and converge on the new log
+        rs[0].propose(drain("c"));
+        settle(&mut rs, 0);
+        for r in &rs {
+            assert_eq!(r.log_entry(1).unwrap().cmd, drain("a"), "replica {}", r.id());
+            assert_eq!(r.log_entry(2).unwrap().cmd, drain("c"), "replica {}", r.id());
+            assert_eq!(r.log_entry(2).unwrap().term, 2, "replica {}", r.id());
+            assert_eq!(r.log_len(), 2, "replica {}", r.id());
         }
     }
 

@@ -255,6 +255,12 @@ fn drive_server<O: Optimizer>(mut srv: OnlineServer<O>, slots: usize) -> anyhow:
 /// [--restore]`. Builds (or restores) a [`scfo::control::ControlPlane`],
 /// serves slots, polls the ops API between slots, and checkpoints
 /// periodically. `--slots 0` serves until killed (the CI smoke mode).
+///
+/// With `--replica I --peers ...` the process checkpoints into its own
+/// `replica-I/` subdirectory of `--checkpoint DIR` (consensus state
+/// embedded) and auto-resumes from it on restart — even without
+/// `--restore` — so a crashed replica rejoins with the log it acked
+/// rather than forking the group from an empty one.
 fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
     use scfo::control::{ControlOptions, ControlPlane, LiveReplica, OpsServer};
 
@@ -280,47 +286,14 @@ fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
     copts.admission.max_cost_increase =
         args.flag_f64("admit-budget", copts.admission.max_cost_increase)?;
 
-    let mut plane = if args.switch("restore") {
-        let dir = checkpoint_dir
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("--restore needs --checkpoint DIR"))?;
-        let plane = ControlPlane::restore(&dir, copts)?;
-        println!(
-            "restored from {}: epoch {}, slot {}, {} apps",
-            dir.display(),
-            plane.epoch(),
-            plane.slots_served(),
-            plane.catalog.len()
-        );
-        plane
-    } else {
-        let sc = scenario_from(args)?;
-        let plane = ControlPlane::new(sc, copts)?;
-        println!(
-            "control plane on {}: {} apps, |V|={} |E|={}",
-            plane.scenario.name,
-            plane.catalog.len(),
-            plane.graph().n(),
-            plane.graph().m()
-        );
-        plane
-    };
-    let ops = match args.flag("http") {
-        Some(addr) => {
-            let srv = OpsServer::bind(addr)?;
-            println!("ops API listening on http://{}", srv.local_addr());
-            Some(srv)
-        }
-        None => None,
-    };
-
     // `--replica I --peers a:p0,b:p1,c:p2` joins a replicated control
-    // plane: mutating ops routes go through the multipaxos command log and
-    // followers redirect writers to the leader (`GET /raftish` inspects).
-    let mut repl = match args.flag("replica") {
+    // plane; parsed before the plane is built because a replica's
+    // checkpoints live in its private subdirectory of --checkpoint DIR
+    // ([`snapshot::replica_dir`]) and restore must resolve that path.
+    let repl_args: Option<(usize, Vec<String>)> = match args.flag("replica") {
         Some(_) => {
             anyhow::ensure!(
-                ops.is_some(),
+                args.flag("http").is_some(),
                 "--replica needs --http ADDR (replication runs over the ops API)"
             );
             let id = args.flag_usize("replica", 0)?;
@@ -332,8 +305,86 @@ fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
                 .filter(|s| !s.is_empty())
                 .map(str::to_string)
                 .collect();
+            Some((id, peers))
+        }
+        None => None,
+    };
+    // where THIS process checkpoints to and restores from
+    let plane_dir = checkpoint_dir.as_deref().map(|dir| match &repl_args {
+        Some((id, _)) => scfo::control::snapshot::replica_dir(dir, *id),
+        None => dir.to_path_buf(),
+    });
+    // a replica auto-resumes from its last checkpoint even without
+    // --restore: rejoining with a fresh term-1 log would ack same-term
+    // appends it never stored and silently fork committed epochs
+    let auto_resume = repl_args.is_some()
+        && plane_dir
+            .as_deref()
+            .is_some_and(|d| scfo::control::snapshot::snapshot_path(d).is_file());
+
+    let (mut plane, restored_doc) = if args.switch("restore") || auto_resume {
+        let dir = plane_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("--restore needs --checkpoint DIR"))?;
+        let doc = scfo::control::snapshot::load(&dir)?;
+        let plane = ControlPlane::restore_from_doc(&doc, copts)?;
+        println!(
+            "restored from {}: epoch {}, slot {}, {} apps",
+            dir.display(),
+            plane.epoch(),
+            plane.slots_served(),
+            plane.catalog.len()
+        );
+        (plane, Some(doc))
+    } else {
+        let sc = scenario_from(args)?;
+        let plane = ControlPlane::new(sc, copts)?;
+        println!(
+            "control plane on {}: {} apps, |V|={} |E|={}",
+            plane.scenario.name,
+            plane.catalog.len(),
+            plane.graph().n(),
+            plane.graph().m()
+        );
+        (plane, None)
+    };
+    let ops = match args.flag("http") {
+        Some(addr) => {
+            let srv = OpsServer::bind(addr)?;
+            println!("ops API listening on http://{}", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
+
+    // Mutating ops routes go through the multipaxos command log and
+    // followers redirect writers to the leader (`GET /raftish` inspects).
+    let mut repl = match repl_args {
+        Some((id, peers)) => {
             let group = peers.len();
-            let lr = LiveReplica::new(id, peers, plane.scenario.seed)?;
+            let mut lr = LiveReplica::new(id, peers, plane.scenario.seed)?;
+            // resume consensus state (term, vote, log) from the snapshot's
+            // `replication` key; replica 0 then re-asserts leadership in a
+            // term above the restored one, so its first appends truncate
+            // stale same-term suffixes on followers instead of silently
+            // acking over a diverged log
+            if let Some(rs) = restored_doc.as_ref().and_then(|d| d.get("replication")) {
+                lr.load_persistent(rs)?;
+                if id == 0 {
+                    lr.rebootstrap();
+                }
+                println!(
+                    "replication state resumed: term {}, commit {}",
+                    lr.term(),
+                    lr.commit_index()
+                );
+            }
+            if checkpoint_dir.is_none() {
+                println!(
+                    "warning: --replica without --checkpoint DIR; a restarted \
+                     replica rejoins with an empty log (no restart durability)"
+                );
+            }
             let role = if lr.is_leader() {
                 "bootstrap leader"
             } else {
@@ -354,7 +405,12 @@ fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
         served += 1;
         if let Some(dir) = &checkpoint_dir {
             if checkpoint_every > 0 && plane.slots_served() % checkpoint_every == 0 {
-                plane.checkpoint(dir)?;
+                // a replica checkpoints into its private subdirectory with
+                // its consensus state embedded, same as POST /checkpoint
+                match repl.as_ref() {
+                    Some(r) => plane.checkpoint_replicated(dir, r)?,
+                    None => plane.checkpoint(dir)?,
+                };
             }
         }
         match &ops {
@@ -380,7 +436,10 @@ fn cmd_serve_control(args: &Args) -> anyhow::Result<()> {
         }
     }
     if let Some(dir) = &checkpoint_dir {
-        let path = plane.checkpoint(dir)?;
+        let path = match repl.as_ref() {
+            Some(r) => plane.checkpoint_replicated(dir, r)?,
+            None => plane.checkpoint(dir)?,
+        };
         println!("final checkpoint: {}", path.display());
     }
     let last_cost = plane

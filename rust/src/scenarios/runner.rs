@@ -217,8 +217,10 @@ pub struct HaSummary {
     pub replicas: usize,
     /// Fault-preset name driving the simulated message fabric.
     pub faults: String,
-    /// Accepted proposals: scripted registers, failover no-op barriers,
-    /// and client-style retries after the kill.
+    /// Accepted proposals: scripted registers and client-style retries
+    /// after the kill. The failover leader's no-op barrier is appended by
+    /// the consensus core itself on election (`become_leader`), so it only
+    /// counts here on the fallback re-propose path.
     pub proposed: usize,
     /// Final commit index shared by every surviving replica.
     pub committed: u64,
@@ -1196,11 +1198,13 @@ pub fn run_churn(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
 ///
 /// Failover is client-realistic: a retry loop re-proposes scripted
 /// commands missing from the new leader's log (it cannot distinguish a
-/// lost request from a lost leader), and the new leader commits a no-op
-/// barrier to assert its term — the raft idiom, since a leader may only
-/// count replicas toward commit for entries of its own term. The tolerant
-/// committed-apply ([`ControlPlane::apply_committed`]) makes any resulting
-/// duplicates converge.
+/// lost request from a lost leader). The new leader asserts its term with
+/// a no-op barrier — the raft idiom, since a leader may only count
+/// replicas toward commit for entries of its own term; the consensus core
+/// appends it on election (`become_leader`), and the runner keeps a
+/// fallback re-propose in case a future election path skips it. The
+/// tolerant committed-apply ([`ControlPlane::apply_committed`]) makes any
+/// resulting duplicates converge.
 pub fn run_ha(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
     let h = spec.ha.as_ref().expect("run_ha requires an ha spec").clone();
     anyhow::ensure!(
@@ -1309,7 +1313,9 @@ pub fn run_ha(spec: &ScenarioSpec) -> anyhow::Result<ScenarioReport> {
         );
         g.step();
         let Some(l) = g.leader() else { continue };
-        // no-op barrier asserting the new term
+        // no-op barrier asserting the new term; become_leader appends one
+        // itself when an uncommitted tail exists, so this is a fallback
+        // for the tail-free case (commit == log_len at election)
         let term = g.replicas[l].term();
         let has_term_entry = (1..=g.replicas[l].log_len())
             .any(|i| g.replicas[l].log_entry(i).expect("in range").term == term);

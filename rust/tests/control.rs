@@ -1,15 +1,18 @@
 //! Control-plane acceptance tests: admission safety (property-based),
 //! checkpoint/restore bit-identical resume (including a checkpoint taken
 //! **mid-flap**, with a topology repair still pending), warm-vs-cold
-//! reconvergence after an app arrival, the end-to-end churn demo, and the
-//! HTTP ops API over a real loopback socket.
+//! reconvergence after an app arrival, the end-to-end churn demo, the
+//! HTTP ops API over a real loopback socket, and the replicated
+//! per-replica checkpoint/restore path (fresh-term rebootstrap, forged
+//! consensus-sender rejection).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
 
 use scfo::control::{
-    iters_to_reach, AppSpec, AppStatus, ControlOptions, ControlPlane, OpsServer,
+    iters_to_reach, snapshot, AppSpec, AppStatus, ControlOptions, ControlPlane, LiveReplica,
+    OpsServer,
 };
 use scfo::flow::FlowState;
 use scfo::prelude::*;
@@ -510,4 +513,113 @@ fn http_ops_api_end_to_end() {
     let (code, _) = http_request(&srv, &mut plane, Some(&dir), "GET", "/nope", "");
     assert_eq!(code, 404);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- replicated checkpoint / restore ----------------------------------------
+
+fn loopback_peers() -> Vec<String> {
+    ["127.0.0.1:1", "127.0.0.1:2", "127.0.0.1:3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// A replica checkpoints into its private `replica-I/` subdirectory of the
+/// shared dir with its consensus state embedded, and a restarted process
+/// resumes from that document: the plane restores exactly and the replica
+/// re-asserts leadership in a term strictly above the persisted one, so
+/// its first appends truncate stale same-term follower suffixes instead of
+/// silently diverging — the serve-path restart flow, via the public API.
+#[test]
+fn replicated_checkpoint_restore_resumes_in_fresh_term() {
+    let mut plane = light_plane(ControlOptions::default());
+    for _ in 0..3 {
+        plane.run_slot().unwrap();
+    }
+    let repl = LiveReplica::new(0, loopback_peers(), plane.scenario.seed).unwrap();
+    assert!(repl.is_leader());
+    assert_eq!(repl.term(), 1);
+
+    let dir = tmp_dir("repl-ckpt");
+    let path = plane.checkpoint_replicated(&dir, &repl).unwrap();
+    assert!(path.starts_with(snapshot::replica_dir(&dir, 0)));
+    // the shared base dir itself holds no snapshot.json: co-located
+    // replicas write to private subdirectories, never clobbering each other
+    assert!(!snapshot::snapshot_path(&dir).exists());
+
+    // "restart": load the per-replica document, rebuild plane + replica
+    let doc = snapshot::load(&snapshot::replica_dir(&dir, 0)).unwrap();
+    let restored = ControlPlane::restore_from_doc(&doc, ControlOptions::default()).unwrap();
+    assert_eq!(restored.slots_served(), plane.slots_served());
+    assert_eq!(restored.epoch(), plane.epoch());
+
+    let mut back = LiveReplica::new(0, loopback_peers(), restored.scenario.seed).unwrap();
+    back.load_persistent(doc.get("replication").unwrap()).unwrap();
+    back.rebootstrap();
+    assert!(back.is_leader());
+    assert_eq!(back.term(), 2, "restart must lead in a fresh term");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Replicated-mode variant of [`http_request`]: polls with the replica
+/// attached so the consensus routes are live.
+fn http_request_repl(
+    srv: &OpsServer,
+    plane: &mut ControlPlane,
+    repl: &mut LiveReplica,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, String) {
+    let addr = srv.local_addr();
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nHost: scfo\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let handle = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("connect ops API");
+        stream.write_all(request.as_bytes()).unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        response
+    });
+    let response = loop {
+        srv.poll_repl(plane, None, Some(&mut *repl));
+        if handle.is_finished() {
+            break handle.join().unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    };
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let body = response
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// A consensus message whose sender id is outside the replica group must
+/// be rejected with a 400 — not panic the single serving thread by
+/// indexing the per-replica vote/match tables (a trivial remote DoS).
+#[test]
+fn raftish_msg_rejects_out_of_range_sender() {
+    let mut plane = light_plane(ControlOptions::default());
+    let srv = OpsServer::bind("127.0.0.1:0").unwrap();
+    let mut repl = LiveReplica::new(0, loopback_peers(), plane.scenario.seed).unwrap();
+
+    let forged = r#"{"kind":"append-ack","term":1,"from":999,"ok":true,"match_index":1}"#;
+    let (code, body) =
+        http_request_repl(&srv, &mut plane, &mut repl, "POST", "/raftish/msg", forged);
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("out of range"), "{body}");
+
+    // the server survived and still answers consensus routes
+    let (code, body) = http_request_repl(&srv, &mut plane, &mut repl, "GET", "/raftish", "");
+    assert_eq!(code, 200, "{body}");
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("term").and_then(Json::as_usize), Some(1));
 }
