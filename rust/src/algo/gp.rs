@@ -394,6 +394,7 @@ fn build_candidate(
         let is_final = net.is_final_stage(s);
         let dest = net.apps[a].dest;
         let l = net.packet_size(s);
+        let u = net.stage_ret[s];
         for i in 0..n {
             if is_final && i == dest {
                 continue; // exit row
@@ -416,6 +417,11 @@ fn build_candidate(
                 for (idx, t) in (r.start..r.end - 1).enumerate() {
                     let e = layout.slot_edge(t);
                     curv[idx] = l * l * net.link_cost[e].deriv2(fs.link_flow[e]);
+                    if u > 0.0 {
+                        // result-return flow curves the mirror link too
+                        let rev = net.rev_edge[e].expect("mirror link");
+                        curv[idx] += u * u * net.link_cost[rev].deriv2(fs.link_flow[rev]);
+                    }
                 }
                 let w = net.comp_weight[s][i];
                 curv[width - 1] = w * w * net.comp_cost[i].deriv2(fs.workload[i]);

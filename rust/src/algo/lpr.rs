@@ -51,6 +51,15 @@ fn layered_shortest_path(
         }
     }
 
+    // per-layer packet multiplicity: one unit of input becomes mult[k]
+    // stage-k packets after the chain's conversion factors (identity chains:
+    // all 1.0, leaving the original LP weights bit-unchanged)
+    let mut mult = vec![1.0; layers];
+    for k in 1..layers {
+        let prev = net.stages.id(a, k - 1);
+        mult[k] = mult[k - 1] * net.stage_conv[prev];
+    }
+
     let mut dist = vec![f64::INFINITY; size];
     let mut prev: Vec<Option<(usize, bool)>> = vec![None; size]; // (layered idx, via compute arc)
     let start = idx(src, 0);
@@ -63,11 +72,18 @@ fn layered_shortest_path(
         }
         let (v, k) = (u % n, u / n);
         let s = net.stages.id(a, k);
-        // link arcs within layer k
+        // link arcs within layer k (forward packets plus the mirrored
+        // result-return flow, both linearized at zero load)
         let l = net.packet_size(s);
+        let ret = net.stage_ret[s];
         for &w in net.graph.out_neighbors(v) {
             let e = net.graph.edge_id(v, w).unwrap();
-            let nd = d + l * net.link_cost[e].deriv(0.0);
+            let mut arc = l * net.link_cost[e].deriv(0.0);
+            if ret > 0.0 {
+                let rev = net.rev_edge[e].expect("mirror link");
+                arc += ret * net.link_cost[rev].deriv(0.0);
+            }
+            let nd = d + mult[k] * arc;
             let t = idx(w, k);
             if nd < dist[t] {
                 dist[t] = nd;
@@ -77,7 +93,7 @@ fn layered_shortest_path(
         }
         // compute arc to layer k+1
         if k + 1 < layers {
-            let nd = d + net.comp_weight[s][v] * net.comp_cost[v].deriv(0.0);
+            let nd = d + mult[k] * net.comp_weight[s][v] * net.comp_cost[v].deriv(0.0);
             let t = idx(v, k + 1);
             if nd < dist[t] {
                 dist[t] = nd;
@@ -132,20 +148,23 @@ pub fn run(net: &Network) -> anyhow::Result<LprReport> {
 
     for (a, app) in net.apps.iter().enumerate() {
         for src in 0..n {
-            let rate = app.input_rates[src];
+            let mut rate = app.input_rates[src];
             if rate <= 0.0 {
                 continue;
             }
             let path = layered_shortest_path(net, a, src)
                 .ok_or_else(|| anyhow::anyhow!("no layered path from {src} for app {a}"))?;
-            // push `rate` along the path
+            // push `rate` along the path; each compute arc converts the
+            // packet rate by the stage's conversion factor
             for w in path.windows(2) {
                 let (u, ku, _) = w[0];
                 let (v, kv, via_compute) = w[1];
                 if via_compute {
                     debug_assert_eq!(u, v);
                     debug_assert_eq!(kv, ku + 1);
-                    cpu_pkt[net.stages.id(a, ku)][u] += rate;
+                    let su = net.stages.id(a, ku);
+                    cpu_pkt[su][u] += rate;
+                    rate *= net.stage_conv[su];
                 } else {
                     debug_assert_eq!(ku, kv);
                     let e = net
@@ -169,7 +188,8 @@ pub fn run(net: &Network) -> anyhow::Result<LprReport> {
                 t[i] = if k == 0 {
                     app.input_rates[i]
                 } else {
-                    cpu_pkt[net.stages.id(a, k - 1)][i]
+                    let prev = net.stages.id(a, k - 1);
+                    net.stage_conv[prev] * cpu_pkt[prev][i]
                 };
             }
             for e in 0..net.m() {
@@ -222,8 +242,13 @@ pub fn run(net: &Network) -> anyhow::Result<LprReport> {
         let mut workload = vec![0.0; n];
         for s in 0..ns {
             let l = net.packet_size(s);
+            let u = net.stage_ret[s];
             for e in 0..net.m() {
                 link_flow[e] += l * link_pkt[s][e];
+                if u > 0.0 {
+                    let rev = net.rev_edge[e].expect("mirror link");
+                    link_flow[rev] += u * link_pkt[s][e];
+                }
             }
             for i in 0..n {
                 workload[i] += net.comp_weight[s][i] * cpu_pkt[s][i];

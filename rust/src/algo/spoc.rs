@@ -19,10 +19,17 @@ pub fn spoc_setup(net: &Network) -> (SupportMask, Strategy) {
     for (s, (a, _k)) in net.stages.iter() {
         let dest = net.apps[a].dest;
         let l = net.packet_size(s);
-        // zero-load marginal weights for this stage's packet size
-        let (_dist, next) = net
-            .graph
-            .dijkstra_to(dest, |e| l * net.link_cost[e].deriv(0.0));
+        let u = net.stage_ret[s];
+        // zero-load marginal weights for this stage's packet size (plus the
+        // mirrored result-return bits when the chain has them)
+        let (_dist, next) = net.graph.dijkstra_to(dest, |e| {
+            let mut w = l * net.link_cost[e].deriv(0.0);
+            if u > 0.0 {
+                let rev = net.rev_edge[e].expect("mirror link");
+                w += u * net.link_cost[rev].deriv(0.0);
+            }
+            w
+        });
         let is_final = net.is_final_stage(s);
         for i in 0..n {
             if i == dest {

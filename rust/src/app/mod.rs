@@ -4,6 +4,7 @@
 //! into stages (a,k), k = 0..|𝒯_a|: stage 0 is raw input data, stage k the
 //! output of task k, stage |𝒯_a| the final results delivered to `dest`.
 
+use crate::chain::ChainProfile;
 use crate::cost::CostFn;
 use crate::graph::Graph;
 
@@ -91,16 +92,51 @@ pub struct Network {
     /// on one packet; indexed [stage id][node]. Rows for final stages are
     /// unused (no further task) and kept zero.
     pub comp_weight: Vec<Vec<f64>>,
+    /// Generalized chain profile per application (identity for networks
+    /// built via [`Network::new`] — the base paper model). See
+    /// [`crate::chain`].
+    pub chains: Vec<ChainProfile>,
+    /// conv(a,k) per stage id: stage-`k+1` packets produced per stage-`k`
+    /// packet processed (1.0 at final stages, which convert nothing).
+    pub stage_conv: Vec<f64>,
+    /// Return-flow weight per stage id: data volume crossing the *mirror*
+    /// link per forward packet of this stage
+    /// (`result_size · Π_{j≥k} conv[j]`; 0 when the chain has no return
+    /// flow).
+    pub stage_ret: Vec<f64>,
+    /// Mirror edge id per edge: `rev_edge[e]` is the id of `(j,i)` for
+    /// `e = (i,j)`, if present. All shipped topologies are bidirected, so it
+    /// is `Some` everywhere in practice; chains with a return flow require
+    /// it on every link ([`Network::with_chains`] validates this).
+    pub rev_edge: Vec<Option<usize>>,
 }
 
 impl Network {
-    /// Assemble and validate a network.
+    /// Assemble and validate a network with identity chain profiles (the
+    /// base paper model: no data scaling, no result-return flows).
     pub fn new(
         graph: Graph,
         apps: Vec<Application>,
         link_cost: Vec<CostFn>,
         comp_cost: Vec<CostFn>,
         comp_weight: Vec<Vec<f64>>,
+    ) -> anyhow::Result<Self> {
+        let chains = apps
+            .iter()
+            .map(|a| ChainProfile::identity(a.num_tasks))
+            .collect();
+        Self::with_chains(graph, apps, link_cost, comp_cost, comp_weight, chains)
+    }
+
+    /// Assemble and validate a network with explicit per-app chain profiles
+    /// (generalized model: per-stage data scaling + result-return flows).
+    pub fn with_chains(
+        graph: Graph,
+        apps: Vec<Application>,
+        link_cost: Vec<CostFn>,
+        comp_cost: Vec<CostFn>,
+        comp_weight: Vec<Vec<f64>>,
+        chains: Vec<ChainProfile>,
     ) -> anyhow::Result<Self> {
         let n = graph.n();
         anyhow::ensure!(link_cost.len() == graph.m(), "link_cost len != |E|");
@@ -137,6 +173,46 @@ impl Network {
             anyhow::ensure!(row.len() == n, "comp_weight row len != |V|");
             anyhow::ensure!(row.iter().all(|&w| w >= 0.0), "negative comp weight");
         }
+        anyhow::ensure!(
+            chains.len() == apps.len(),
+            "chains len {} != |A| {}",
+            chains.len(),
+            apps.len()
+        );
+        let mut stage_conv = vec![1.0; stages.len()];
+        let mut stage_ret = vec![0.0; stages.len()];
+        for (a, (app, chain)) in apps.iter().zip(&chains).enumerate() {
+            anyhow::ensure!(
+                chain.conv.len() == app.num_tasks && chain.local_frac.len() == app.num_tasks,
+                "app {a} chain profile is ragged ({} conv / {} local_frac entries for {} tasks)",
+                chain.conv.len(),
+                chain.local_frac.len(),
+                app.num_tasks
+            );
+            let rho = chain.suffix_products();
+            for k in 0..app.num_stages() {
+                let s = stages.id(a, k);
+                if k < app.num_tasks {
+                    stage_conv[s] = chain.conv[k];
+                }
+                stage_ret[s] = chain.result_size * rho[k];
+            }
+        }
+        let rev_edge: Vec<Option<usize>> = (0..graph.m())
+            .map(|e| {
+                let (i, j) = graph.edge(e);
+                graph.edge_id(j, i)
+            })
+            .collect();
+        if stage_ret.iter().any(|&u| u > 0.0) {
+            for (e, rev) in rev_edge.iter().enumerate() {
+                let (i, j) = graph.edge(e);
+                anyhow::ensure!(
+                    rev.is_some(),
+                    "chain has a result-return flow but link ({i},{j}) has no mirror link"
+                );
+            }
+        }
         Ok(Network {
             graph,
             apps,
@@ -144,6 +220,10 @@ impl Network {
             link_cost,
             comp_cost,
             comp_weight,
+            chains,
+            stage_conv,
+            stage_ret,
+            rev_edge,
         })
     }
 
@@ -238,6 +318,72 @@ mod tests {
         assert_eq!(net.packet_size(s00), 10.0);
         assert_eq!(net.exo_rate(s00, 0), 1.0);
         assert_eq!(net.exo_rate(net.stages.id(0, 1), 0), 0.0);
+    }
+
+    #[test]
+    fn new_defaults_to_identity_chains() {
+        let net = tiny_network();
+        assert_eq!(net.chains.len(), 2);
+        assert!(net.chains.iter().all(|c| c.is_identity()));
+        assert!(net.stage_conv.iter().all(|&c| c == 1.0));
+        assert!(net.stage_ret.iter().all(|&u| u == 0.0));
+        // abilene is bidirected: every link has a mirror
+        assert!(net.rev_edge.iter().all(|r| r.is_some()));
+        for (e, r) in net.rev_edge.iter().enumerate() {
+            let (i, j) = net.graph.edge(e);
+            assert_eq!(net.graph.edge(r.unwrap()), (j, i));
+        }
+    }
+
+    #[test]
+    fn with_chains_derives_stage_tables() {
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let apps = vec![tiny_app(n, 10, 0)];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; n]; stages.len()];
+        let chain = crate::chain::ChainProfile {
+            conv: vec![2.0, 0.5],
+            result_size: 0.4,
+            local_frac: vec![0.0, 0.0],
+        };
+        let net = Network::with_chains(
+            g,
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; m],
+            vec![CostFn::Linear { d: 1.0 }; n],
+            cw,
+            vec![chain],
+        )
+        .unwrap();
+        assert_eq!(net.stage_conv, vec![2.0, 0.5, 1.0]);
+        // rho = [1.0, 0.5, 1.0] suffix products -> ret = 0.4 * rho
+        assert_eq!(net.stage_ret, vec![0.4, 0.2, 0.4]);
+    }
+
+    #[test]
+    fn with_chains_rejects_ragged_profiles() {
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let apps = vec![tiny_app(n, 10, 0)];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; n]; stages.len()];
+        let chain = crate::chain::ChainProfile {
+            conv: vec![2.0], // app has 2 tasks
+            result_size: 0.0,
+            local_frac: vec![0.0],
+        };
+        assert!(Network::with_chains(
+            g,
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; m],
+            vec![CostFn::Linear { d: 1.0 }; n],
+            cw,
+            vec![chain],
+        )
+        .is_err());
     }
 
     #[test]

@@ -265,6 +265,41 @@ pub struct HaBench {
     pub msgs_sent: u64,
 }
 
+/// Generalized-chain tier measurements attached to a [`GpBenchResult`]
+/// when the bench runs the `dnn` scenario tier (`scfo bench --json --dnn`).
+/// These are the BENCH.json v9 columns: per-cell GP-vs-baseline cost gaps
+/// under DNN-split chains with data inflation and result-return flows.
+/// Gaps are cost ratios (baseline ÷ GP), so 1.0 means parity and >1.0 a GP
+/// win; all gap columns are bit-deterministic for a given tier sizing.
+#[derive(Clone, Debug)]
+pub struct DnnBench {
+    /// Tier cells executed (families × chain profiles × congestion).
+    pub cells: usize,
+    /// Heavy-congestion cells among them.
+    pub heavy_cells: usize,
+    /// Heavy cells where GP's cost is strictly below every baseline's.
+    pub heavy_strict_wins: usize,
+    /// True iff GP ≤ every baseline (within tolerance) on every cell.
+    pub gp_within_baselines_all: bool,
+    /// Mean baseline ÷ GP cost ratio per baseline, over all cells.
+    pub gap_means: Vec<(String, f64)>,
+    /// One row per tier cell, spec order.
+    pub rows: Vec<DnnCell>,
+}
+
+/// One `dnn`-tier cell inside a [`DnnBench`].
+#[derive(Clone, Debug)]
+pub struct DnnCell {
+    /// Cell name (`{family}-dnn-{profile}-{congestion}`).
+    pub name: String,
+    /// Chain preset driving the cell (`vgg16` / `resnet50`).
+    pub profile: String,
+    pub congestion: String,
+    pub gp_cost: f64,
+    /// Baseline ÷ GP cost ratio per baseline, report order.
+    pub gaps: Vec<(String, f64)>,
+}
+
 /// One scenario's GP hot-path measurement: per-iteration wall times, cost
 /// trajectory and a peak-RSS proxy. Emitted into `BENCH.json` by
 /// `scfo bench --json`; schema documented in `docs/PERFORMANCE.md`.
@@ -307,6 +342,9 @@ pub struct GpBenchResult {
     pub massive: Option<MassiveBench>,
     /// Replicated-control-plane columns; `Some` only for `--ha` benches.
     pub ha: Option<HaBench>,
+    /// Generalized-chain tier columns; `Some` only for `--dnn` benches
+    /// (`iter_secs` is then the wall time per tier cell).
+    pub dnn: Option<DnnBench>,
 }
 
 /// Peak resident-set high-water mark of this process (Linux `VmHWM`);
@@ -375,6 +413,7 @@ pub fn bench_gp_scenario(family: &str, iters: usize) -> anyhow::Result<GpBenchRe
         topo_churn: None,
         massive: None,
         ha: None,
+        dnn: None,
     })
 }
 
@@ -473,6 +512,7 @@ pub fn bench_distributed_scenario(
         topo_churn: None,
         massive: None,
         ha: None,
+        dnn: None,
     })
 }
 
@@ -550,6 +590,7 @@ pub fn bench_serving_scenario(
         topo_churn: None,
         massive: None,
         ha: None,
+        dnn: None,
     })
 }
 
@@ -652,6 +693,7 @@ pub fn bench_control_scenario(family: &str, slots: usize) -> anyhow::Result<GpBe
         topo_churn: None,
         massive: None,
         ha: None,
+        dnn: None,
     })
 }
 
@@ -761,6 +803,7 @@ pub fn bench_topo_churn_scenario(family: &str, slots: usize) -> anyhow::Result<G
         topo_churn: Some(topo),
         massive: None,
         ha: None,
+        dnn: None,
     })
 }
 
@@ -871,6 +914,7 @@ pub fn bench_massive_scenario(
             phase_detect_ms_mean,
         }),
         ha: None,
+        dnn: None,
     })
 }
 
@@ -1030,6 +1074,107 @@ pub fn bench_ha_scenario(
             failover_secs,
             commands_per_sec,
             msgs_sent,
+        }),
+        dnn: None,
+    })
+}
+
+/// Generalized-chain tier bench: run every `dnn`-tier cell (families ×
+/// chain profiles × congestion, sized by `slots`/`iters`) through the
+/// scenario engine and fold the per-cell GP-vs-baseline cost gaps into a
+/// [`DnnBench`] block. Every cell shares the same generalized cost —
+/// data-inflating per-stage scale factors plus the mirrored result-return
+/// flow — so the gap columns compare like with like. `iter_secs` records
+/// the wall time per tier cell and `cost_trajectory` GP's served cost per
+/// cell; the topology columns describe the first (abilene) cell.
+pub fn bench_dnn_scenario(slots: usize, iters: usize) -> anyhow::Result<GpBenchResult> {
+    use crate::scenarios::{run_batch, RunnerOptions, ScenarioSpec};
+    use crate::util::rng::Rng;
+
+    let specs = ScenarioSpec::dnn_matrix_sized(slots, iters);
+    let sc = specs[0].effective_base();
+    let mut rng = Rng::new(sc.seed);
+    let t0 = Instant::now();
+    let net = sc.build(&mut rng)?;
+    let build_secs = t0.elapsed().as_secs_f64();
+
+    let opts = RunnerOptions {
+        quiet: true,
+        ..RunnerOptions::default()
+    };
+    let reports = run_batch(&specs, &opts)?;
+
+    let mut rows = Vec::with_capacity(reports.len());
+    let mut gap_sums: Vec<(String, f64)> = Vec::new();
+    let mut heavy_cells = 0usize;
+    let mut heavy_strict_wins = 0usize;
+    let mut gp_within_baselines_all = true;
+    for rep in &reports {
+        let gp = rep.gp_cost();
+        // cell names are `{family}-dnn-{profile}-{congestion}`
+        let profile = rep
+            .name
+            .split("-dnn-")
+            .nth(1)
+            .and_then(|rest| rest.rsplit_once('-'))
+            .map(|(p, _)| p.to_string())
+            .unwrap_or_default();
+        let gaps: Vec<(String, f64)> = rep
+            .costs
+            .iter()
+            .skip(1)
+            .map(|(name, c)| (name.clone(), c / gp.max(1e-300)))
+            .collect();
+        gp_within_baselines_all &= rep.gp_within_baselines;
+        if rep.congestion == "heavy" {
+            heavy_cells += 1;
+            if !gaps.is_empty() && gaps.iter().all(|(_, g)| *g > 1.0) {
+                heavy_strict_wins += 1;
+            }
+        }
+        for (i, (name, g)) in gaps.iter().enumerate() {
+            if gap_sums.len() <= i {
+                gap_sums.push((name.clone(), 0.0));
+            }
+            gap_sums[i].1 += g;
+        }
+        rows.push(DnnCell {
+            name: rep.name.clone(),
+            profile,
+            congestion: rep.congestion.clone(),
+            gp_cost: gp,
+            gaps,
+        });
+    }
+    let cells = reports.len();
+    let gap_means = gap_sums
+        .into_iter()
+        .map(|(n, s)| (n, s / cells.max(1) as f64))
+        .collect();
+
+    Ok(GpBenchResult {
+        name: "dnn-tier".to_string(),
+        n: net.n(),
+        m: net.m(),
+        stages: net.num_stages(),
+        arena_slots: net.graph.layout().num_slots(),
+        build_secs,
+        iter_secs: reports.iter().map(|r| r.solve_secs).collect(),
+        cost_trajectory: reports.iter().map(|r| r.gp_cost()).collect(),
+        peak_rss_bytes: peak_rss_bytes(),
+        dynamics: None,
+        distributed: None,
+        control: None,
+        topo_churn: None,
+        massive: None,
+        ha: None,
+        dnn: Some(DnnBench {
+            cells,
+            heavy_cells,
+            heavy_strict_wins,
+            gp_within_baselines_all,
+            gap_means,
+            rows,
         }),
     })
 }
@@ -1209,6 +1354,50 @@ impl GpBenchResult {
                 o.insert("repl_msgs_sent".into(), Json::Num(h.msgs_sent as f64));
             }
         }
+        if let Some(d) = &self.dnn {
+            if let Json::Obj(o) = &mut doc {
+                o.insert("dnn_cells".into(), Json::Num(d.cells as f64));
+                o.insert("dnn_heavy_cells".into(), Json::Num(d.heavy_cells as f64));
+                o.insert(
+                    "dnn_heavy_strict_wins".into(),
+                    Json::Num(d.heavy_strict_wins as f64),
+                );
+                o.insert(
+                    "dnn_gp_within_baselines".into(),
+                    Json::Bool(d.gp_within_baselines_all),
+                );
+                // one flat column per baseline: SPOC → dnn_gap_spoc_mean, …
+                let slug = |name: &str| name.to_ascii_lowercase().replace('-', "_");
+                for (name, g) in &d.gap_means {
+                    o.insert(format!("dnn_gap_{}_mean", slug(name)), Json::Num(*g));
+                }
+                o.insert(
+                    "dnn_rows".into(),
+                    Json::Arr(
+                        d.rows
+                            .iter()
+                            .map(|r| {
+                                let mut row = std::collections::BTreeMap::new();
+                                row.insert("cell".to_string(), Json::Str(r.name.clone()));
+                                row.insert(
+                                    "profile".to_string(),
+                                    Json::Str(r.profile.clone()),
+                                );
+                                row.insert(
+                                    "congestion".to_string(),
+                                    Json::Str(r.congestion.clone()),
+                                );
+                                row.insert("gp_cost".to_string(), Json::Num(r.gp_cost));
+                                for (name, g) in &r.gaps {
+                                    row.insert(format!("gap_{}", slug(name)), Json::Num(*g));
+                                }
+                                Json::Obj(row)
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+        }
         if let Some(dyn_) = &self.dynamics {
             if let Json::Obj(o) = &mut doc {
                 o.insert("workload".into(), Json::Str(dyn_.workload.clone()));
@@ -1252,8 +1441,11 @@ impl GpBenchResult {
 /// replicated-control-plane columns (`ha_replicas`, `ha_faults`,
 /// `ha_commands`, `repl_committed`, `repl_lost`, `election_ticks`,
 /// `failover_ticks`, `election_secs`, `failover_secs`, `commands_per_sec`,
-/// `repl_msgs_sent`).
-pub const BENCH_JSON_VERSION: f64 = 8.0;
+/// `repl_msgs_sent`); 9 added the optional generalized-chain tier columns
+/// (`dnn_cells`, `dnn_heavy_cells`, `dnn_heavy_strict_wins`,
+/// `dnn_gp_within_baselines`, `dnn_gap_{spoc,lcof,lpr_sc}_mean`,
+/// `dnn_rows`).
+pub const BENCH_JSON_VERSION: f64 = 9.0;
 
 /// Assemble the top-level `BENCH.json` document (see `docs/PERFORMANCE.md`
 /// for how to read it).
@@ -1450,7 +1642,7 @@ mod tests {
         );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(8.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(9.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "topo_events",
@@ -1497,7 +1689,7 @@ mod tests {
         );
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(8.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(9.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "streams",
@@ -1541,7 +1733,7 @@ mod tests {
         assert!(h.msgs_sent > 0);
         let doc = gp_bench_json(&[res]);
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
-        assert_eq!(re.get("version").unwrap().as_f64(), Some(8.0));
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(9.0));
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         for key in [
             "ha_replicas",
@@ -1565,6 +1757,59 @@ mod tests {
         let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
         let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
         assert!(sc.get("commands_per_sec").is_none());
+    }
+
+    #[test]
+    fn dnn_bench_emits_v9_columns() {
+        // sized down: same cells (3 families × 2 profiles × 2 congestion),
+        // fewer serving slots and GP iterations so the test stays fast
+        let res = bench_dnn_scenario(12, 40).unwrap();
+        let d = res.dnn.as_ref().expect("dnn block present");
+        assert_eq!(d.cells, 12);
+        assert_eq!(d.heavy_cells, 6);
+        assert_eq!(d.rows.len(), 12);
+        assert_eq!(res.iter_secs.len(), 12);
+        assert_eq!(res.cost_trajectory.len(), 12);
+        assert!(res.cost_trajectory.iter().all(|c| c.is_finite() && *c > 0.0));
+        assert_eq!(d.gap_means.len(), 3, "one gap column per baseline");
+        for (name, g) in &d.gap_means {
+            assert!(g.is_finite() && *g > 0.0, "{name} gap mean {g}");
+        }
+        for row in &d.rows {
+            assert!(
+                row.profile == "vgg16" || row.profile == "resnet50",
+                "unparsed profile in '{}'",
+                row.name
+            );
+            assert!(row.congestion == "nominal" || row.congestion == "heavy");
+            assert_eq!(row.gaps.len(), 3);
+        }
+        let doc = gp_bench_json(&[res]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(re.get("version").unwrap().as_f64(), Some(9.0));
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "dnn_cells",
+            "dnn_heavy_cells",
+            "dnn_heavy_strict_wins",
+            "dnn_gp_within_baselines",
+            "dnn_gap_spoc_mean",
+            "dnn_gap_lcof_mean",
+            "dnn_gap_lpr_sc_mean",
+            "dnn_rows",
+        ] {
+            assert!(sc.get(key).is_some(), "missing v9 column {key}");
+        }
+        let rows = sc.get("dnn_rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 12);
+        assert!(rows[0].get("gap_spoc").unwrap().as_f64().is_some());
+        assert!(rows[0].get("gp_cost").unwrap().as_f64().is_some());
+        // static benches carry no dnn columns
+        let plain = bench_gp_scenario("abilene", 2).unwrap();
+        let doc = gp_bench_json(&[plain]);
+        let re = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        let sc = &re.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert!(sc.get("dnn_cells").is_none());
     }
 
     #[test]

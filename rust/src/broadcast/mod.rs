@@ -69,6 +69,8 @@ pub fn run_broadcast(net: &Network, phi: &Strategy, fs: &FlowState) -> Broadcast
         for k in (0..app.num_stages()).rev() {
             let s = net.stages.id(a, k);
             let l = net.packet_size(s);
+            let u = net.stage_ret[s];
+            let conv = net.stage_conv[s];
             let is_final = k == app.num_tasks;
 
             // per-node bookkeeping for this (a, k)
@@ -114,7 +116,14 @@ pub fn run_broadcast(net: &Network, phi: &Strategy, fs: &FlowState) -> Broadcast
                             let m = got[i][j]
                                 .as_ref()
                                 .expect("ready implies all downstream received");
-                            acc += p * (l * fs.link_marginal[e] + m.d_dt);
+                            let mut term = l * fs.link_marginal[e] + m.d_dt;
+                            if u > 0.0 {
+                                // return-flow marginal on the mirror link —
+                                // measured locally (it is an incident link)
+                                let rev = net.rev_edge[e].expect("mirror link");
+                                term += u * fs.link_marginal[rev];
+                            }
+                            acc += p * term;
                             // transitively dirty neighbor
                             if m.dirty {
                                 is_dirty = true;
@@ -124,7 +133,8 @@ pub fn run_broadcast(net: &Network, phi: &Strategy, fs: &FlowState) -> Broadcast
                     if !is_final && pc > PHI_EPS {
                         let next = net.stages.id(a, k + 1);
                         acc += pc
-                            * (net.comp_weight[s][i] * fs.comp_marginal[i] + d_dt[next][i]);
+                            * (net.comp_weight[s][i] * fs.comp_marginal[i]
+                                + conv * d_dt[next][i]);
                     }
                     d_dt[s][i] = acc;
                     // now that d_dt_i is known, finish the dirty test:

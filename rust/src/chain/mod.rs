@@ -1,0 +1,417 @@
+//! Generalized service-chain profiles: DNN-split data scaling, result-return
+//! flows and fractional offload splits.
+//!
+//! The paper's base model fixes two things the DNN-inference literature
+//! relaxes:
+//!
+//! * **Per-stage data scaling.** A vertical DNN split changes the data volume
+//!   between stages — early convolution blocks *inflate* activations well
+//!   beyond the input size, late blocks deflate them. A [`ChainProfile`]
+//!   carries a per-stage conversion factor `conv[k]`: one stage-`k` packet
+//!   processed yields `conv[k]` stage-`k+1` packets. The flow fixed point
+//!   ([`crate::flow`]) multiplies the downstream injection by it and the
+//!   eq. 4/7 marginal recursion ([`crate::marginals`]) scales the CPU term's
+//!   downstream component by the same factor.
+//! * **Result-return flows.** The final stage's output (a classification, a
+//!   rendered tile) travels *back* toward the requester. `result_size` is the
+//!   data volume returned per delivered final-stage packet; it retraces the
+//!   forward path in reverse, so each stage-`s` forward packet crossing link
+//!   `(i,j)` adds `ret(s) = result_size · Π_{j≥k} conv[j]` flow units on the
+//!   mirror link `(j,i)` (all shipped topologies are bidirected). The return
+//!   term shows up in link costs, in the marginal recursion, and in the
+//!   versioned marginal broadcasts of the async runtime.
+//! * **Fractional offload splits.** φ already routes fractionally;
+//!   `local_frac[k]` exposes per-stage compute-split semantics as a feasible
+//!   initializer ([`crate::strategy::Strategy::fractional_split`]): a source
+//!   processes `local_frac[k]` of stage `k` in place and forwards the
+//!   remainder toward the destination.
+//!
+//! With `conv ≡ 1`, `result_size = 0` and no fractional splits the
+//! generalized recursion reproduces the base model bit-for-bit (pinned by
+//! `rust/tests/chain_equiv.rs`). See `docs/CHAIN_MODEL.md` for the
+//! derivation.
+
+use crate::util::json::Json;
+
+/// Resolved per-application chain profile (lengths fixed to the app's task
+/// count). Built from a [`ChainSpec`] via [`ChainSpec::resolve`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChainProfile {
+    /// `conv[k]`: stage-`k+1` packets produced per stage-`k` packet
+    /// processed (`num_tasks` entries; the final stage has no conversion).
+    pub conv: Vec<f64>,
+    /// Data volume returned to the requester per delivered final-stage
+    /// packet (0 = no return flow).
+    pub result_size: f64,
+    /// Fraction of stage `k` a source prefers to process in place
+    /// (`num_tasks` entries, each in `[0, 1]`; used by the fractional-split
+    /// initializer, not a hard constraint on the optimizer).
+    pub local_frac: Vec<f64>,
+}
+
+impl ChainProfile {
+    /// The degenerate profile: no scaling, no return flow, no local splits —
+    /// exactly the paper's base model.
+    pub fn identity(num_tasks: usize) -> ChainProfile {
+        ChainProfile {
+            conv: vec![1.0; num_tasks],
+            result_size: 0.0,
+            local_frac: vec![0.0; num_tasks],
+        }
+    }
+
+    /// True iff this profile reduces to the base model (all conversion
+    /// factors exactly 1, zero result size).
+    pub fn is_identity(&self) -> bool {
+        self.result_size == 0.0 && self.conv.iter().all(|&c| c == 1.0)
+    }
+
+    /// Suffix products ρ_k = Π_{j=k}^{K-1} conv[j] (ρ_K = 1): the number of
+    /// final-stage packets descending from one stage-`k` packet. The
+    /// per-stage return-flow weight is `result_size · ρ_k`.
+    pub fn suffix_products(&self) -> Vec<f64> {
+        let k = self.conv.len();
+        let mut rho = vec![1.0; k + 1];
+        for j in (0..k).rev() {
+            rho[j] = self.conv[j] * rho[j + 1];
+        }
+        rho
+    }
+
+    /// Total stage packets one unit of exogenous input spawns across the
+    /// whole chain: Σ_k Π_{j<k} conv[j] (identity chains: `num_tasks + 1`).
+    /// The per-stream demand-amplification factor of the SoA workload
+    /// columns.
+    pub fn stage_multiplicity(&self) -> f64 {
+        let mut total = 0.0;
+        let mut mult = 1.0;
+        for &c in &self.conv {
+            total += mult;
+            mult *= c;
+        }
+        total + mult // the final stage
+    }
+
+    /// Result data returned to the requester per unit of exogenous input:
+    /// `result_size · Π_j conv[j]` (0 for chains without a return flow).
+    pub fn return_per_input(&self) -> f64 {
+        self.result_size * self.conv.iter().product::<f64>()
+    }
+}
+
+/// VGG-16 vertical-split activation profile: pooling-boundary splits of the
+/// 224×224×3 input. The first block inflates activations ~5.3× (64 channels
+/// at full resolution), then each pooling stage halves the volume until the
+/// classifier collapses it.
+const VGG16_CONV: [f64; 6] = [5.33, 0.5, 0.5, 0.5, 0.25, 0.16];
+const VGG16_LOCAL: [f64; 6] = [0.6, 0.45, 0.3, 0.2, 0.1, 0.05];
+
+/// ResNet-50 stage-boundary profile: conv1+pool grows the volume slightly,
+/// layer1's channel expansion inflates 4×, then each stage halves it and the
+/// global pool collapses to the embedding.
+const RESNET50_CONV: [f64; 6] = [1.33, 4.0, 0.5, 0.5, 0.5, 0.02];
+const RESNET50_LOCAL: [f64; 6] = [0.5, 0.35, 0.25, 0.15, 0.1, 0.05];
+
+/// Result payload per delivered final packet for the DNN presets (a logits
+/// vector — small next to the activations but not free on the return path).
+const DNN_RESULT_SIZE: f64 = 0.25;
+
+/// Nearest-index resampling of a canonical per-stage sequence onto a chain
+/// of `len` stages (preserves the inflate-then-deflate shape at any split
+/// count).
+fn resample(src: &[f64], len: usize) -> Vec<f64> {
+    (0..len).map(|i| src[i * src.len() / len]).collect()
+}
+
+/// Parsed (unresolved) chain description, as written in scenario specs:
+/// either a named preset or an explicit per-stage profile.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChainSpec {
+    /// `"identity"`, `"vgg16"` or `"resnet50"`.
+    Named(String),
+    /// Explicit per-stage arrays (`scale` must match the app's task count).
+    Explicit {
+        scale: Vec<f64>,
+        result_size: f64,
+        local_frac: Vec<f64>,
+    },
+}
+
+/// Preset names accepted by [`ChainSpec::named`].
+pub const CHAIN_NAMES: [&str; 3] = ["identity", "vgg16", "resnet50"];
+
+impl ChainSpec {
+    /// A named preset profile.
+    pub fn named(name: &str) -> anyhow::Result<ChainSpec> {
+        anyhow::ensure!(
+            CHAIN_NAMES.contains(&name),
+            "unknown chain profile '{name}' (expected one of {CHAIN_NAMES:?})"
+        );
+        Ok(ChainSpec::Named(name.to_string()))
+    }
+
+    /// Display name (`"custom"` for explicit profiles).
+    pub fn name(&self) -> &str {
+        match self {
+            ChainSpec::Named(n) => n,
+            ChainSpec::Explicit { .. } => "custom",
+        }
+    }
+
+    /// Resolve to a concrete per-app profile for a chain of `num_tasks`
+    /// compute stages. Rejects ragged, non-finite and out-of-range entries
+    /// with errors naming the offending field.
+    pub fn resolve(&self, num_tasks: usize) -> anyhow::Result<ChainProfile> {
+        let profile = match self {
+            ChainSpec::Named(name) => match name.as_str() {
+                "identity" => ChainProfile::identity(num_tasks),
+                "vgg16" => ChainProfile {
+                    conv: resample(&VGG16_CONV, num_tasks),
+                    result_size: DNN_RESULT_SIZE,
+                    local_frac: resample(&VGG16_LOCAL, num_tasks),
+                },
+                "resnet50" => ChainProfile {
+                    conv: resample(&RESNET50_CONV, num_tasks),
+                    result_size: DNN_RESULT_SIZE,
+                    local_frac: resample(&RESNET50_LOCAL, num_tasks),
+                },
+                other => anyhow::bail!(
+                    "unknown chain profile '{other}' (expected one of {CHAIN_NAMES:?})"
+                ),
+            },
+            ChainSpec::Explicit {
+                scale,
+                result_size,
+                local_frac,
+            } => {
+                anyhow::ensure!(
+                    scale.len() == num_tasks,
+                    "chain scale is ragged: {} entries for a chain of {num_tasks} tasks",
+                    scale.len()
+                );
+                let local_frac = if local_frac.is_empty() {
+                    vec![0.0; num_tasks]
+                } else {
+                    anyhow::ensure!(
+                        local_frac.len() == num_tasks,
+                        "chain local_frac is ragged: {} entries for a chain of {num_tasks} tasks",
+                        local_frac.len()
+                    );
+                    local_frac.clone()
+                };
+                ChainProfile {
+                    conv: scale.clone(),
+                    result_size: *result_size,
+                    local_frac,
+                }
+            }
+        };
+        for (k, &c) in profile.conv.iter().enumerate() {
+            anyhow::ensure!(c.is_finite(), "chain scale[{k}] is not finite");
+            anyhow::ensure!(c > 0.0, "chain scale[{k}] = {c} must be positive");
+        }
+        anyhow::ensure!(
+            profile.result_size.is_finite() && profile.result_size >= 0.0,
+            "chain result_size = {} must be finite and non-negative",
+            profile.result_size
+        );
+        for (k, &f) in profile.local_frac.iter().enumerate() {
+            anyhow::ensure!(
+                f.is_finite() && (0.0..=1.0).contains(&f),
+                "chain local_frac[{k}] = {f} must be in [0, 1]"
+            );
+        }
+        Ok(profile)
+    }
+
+    // ---- JSON round trip ---------------------------------------------------
+
+    /// Named profiles serialize as a bare string, explicit ones as an object
+    /// (`{"scale": [...], "result_size": x, "local_frac": [...]}`).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ChainSpec::Named(n) => Json::Str(n.clone()),
+            ChainSpec::Explicit {
+                scale,
+                result_size,
+                local_frac,
+            } => Json::obj(vec![
+                ("scale", Json::arr_f64(scale)),
+                ("result_size", Json::Num(*result_size)),
+                ("local_frac", Json::arr_f64(local_frac)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<ChainSpec> {
+        if let Some(name) = v.as_str() {
+            return ChainSpec::named(name);
+        }
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("chain: expected a preset name or an object"))?;
+        let floats = |key: &str| -> anyhow::Result<Vec<f64>> {
+            let Some(field) = obj.get(key) else {
+                return Ok(Vec::new());
+            };
+            let arr = field
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("chain.{key}: expected a float array"))?;
+            arr.iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("chain.{key}[{i}]: expected a number"))
+                })
+                .collect()
+        };
+        let scale = floats("scale")?;
+        anyhow::ensure!(!scale.is_empty(), "chain.scale: missing or empty");
+        Ok(ChainSpec::Explicit {
+            scale,
+            result_size: v.get("result_size").and_then(Json::as_f64).unwrap_or(0.0),
+            local_frac: floats("local_frac")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_profile_is_degenerate() {
+        let p = ChainProfile::identity(2);
+        assert!(p.is_identity());
+        assert_eq!(p.conv, vec![1.0, 1.0]);
+        assert_eq!(p.suffix_products(), vec![1.0, 1.0, 1.0]);
+        assert!(ChainSpec::named("identity").unwrap().resolve(2).unwrap().is_identity());
+    }
+
+    #[test]
+    fn presets_resolve_at_any_chain_length() {
+        for name in ["vgg16", "resnet50"] {
+            let spec = ChainSpec::named(name).unwrap();
+            for num_tasks in [1usize, 2, 4, 6, 9] {
+                let p = spec.resolve(num_tasks).unwrap();
+                assert_eq!(p.conv.len(), num_tasks, "{name}/{num_tasks}");
+                assert_eq!(p.local_frac.len(), num_tasks, "{name}/{num_tasks}");
+                assert!(p.conv.iter().all(|&c| c > 0.0));
+                assert!(p.result_size > 0.0);
+                assert!(!p.is_identity());
+            }
+            // full-length resolution reproduces the canonical sequence
+            let p = spec.resolve(6).unwrap();
+            let canon = if name == "vgg16" { VGG16_CONV } else { RESNET50_CONV };
+            assert_eq!(p.conv, canon.to_vec());
+        }
+    }
+
+    #[test]
+    fn vgg_inflates_then_deflates() {
+        let p = ChainSpec::named("vgg16").unwrap().resolve(6).unwrap();
+        assert!(p.conv[0] > 1.0, "first split must inflate");
+        assert!(p.conv[5] < 1.0, "last split must deflate");
+        let rho = p.suffix_products();
+        // one input packet yields fewer than one result packet end-to-end
+        assert!(rho[0] < 1.0, "rho_0 = {}", rho[0]);
+    }
+
+    #[test]
+    fn unknown_preset_is_rejected() {
+        assert!(ChainSpec::named("mobilenet").is_err());
+        let err = ChainSpec::Named("mobilenet".into()).resolve(2).unwrap_err();
+        assert!(err.to_string().contains("mobilenet"), "{err}");
+    }
+
+    #[test]
+    fn explicit_validation_catches_bad_profiles() {
+        let ok = ChainSpec::Explicit {
+            scale: vec![2.0, 0.5],
+            result_size: 0.1,
+            local_frac: vec![0.5, 0.0],
+        };
+        assert!(ok.resolve(2).is_ok());
+        // ragged scale
+        let err = ok.resolve(3).unwrap_err().to_string();
+        assert!(err.contains("ragged"), "{err}");
+        // NaN scale
+        let nan = ChainSpec::Explicit {
+            scale: vec![1.0, f64::NAN],
+            result_size: 0.0,
+            local_frac: Vec::new(),
+        };
+        let err = nan.resolve(2).unwrap_err().to_string();
+        assert!(err.contains("not finite"), "{err}");
+        // non-positive scale
+        let zero = ChainSpec::Explicit {
+            scale: vec![0.0, 1.0],
+            result_size: 0.0,
+            local_frac: Vec::new(),
+        };
+        assert!(zero.resolve(2).is_err());
+        // negative result size
+        let neg = ChainSpec::Explicit {
+            scale: vec![1.0, 1.0],
+            result_size: -1.0,
+            local_frac: Vec::new(),
+        };
+        assert!(neg.resolve(2).is_err());
+        // out-of-range local fraction
+        let frac = ChainSpec::Explicit {
+            scale: vec![1.0, 1.0],
+            result_size: 0.0,
+            local_frac: vec![0.5, 1.5],
+        };
+        assert!(frac.resolve(2).is_err());
+    }
+
+    #[test]
+    fn empty_local_frac_defaults_to_zero() {
+        let spec = ChainSpec::Explicit {
+            scale: vec![3.0, 0.25],
+            result_size: 0.0,
+            local_frac: Vec::new(),
+        };
+        let p = spec.resolve(2).unwrap();
+        assert_eq!(p.local_frac, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn suffix_products_follow_conv() {
+        let p = ChainSpec::Explicit {
+            scale: vec![2.0, 3.0],
+            result_size: 0.5,
+            local_frac: Vec::new(),
+        }
+        .resolve(2)
+        .unwrap();
+        assert_eq!(p.suffix_products(), vec![6.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_named_and_explicit() {
+        let named = ChainSpec::named("resnet50").unwrap();
+        let re = ChainSpec::from_json(&named.to_json()).unwrap();
+        assert_eq!(named, re);
+        let explicit = ChainSpec::Explicit {
+            scale: vec![1.0, 2.5, 0.3],
+            result_size: 0.75,
+            local_frac: vec![0.5, 0.25, 0.0],
+        };
+        let re = ChainSpec::from_json(&Json::parse(&explicit.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(explicit, re);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_chains() {
+        assert!(ChainSpec::from_json(&Json::parse("\"mobilenet\"").unwrap()).is_err());
+        assert!(ChainSpec::from_json(&Json::parse("42").unwrap()).is_err());
+        assert!(ChainSpec::from_json(&Json::parse("{}").unwrap()).is_err());
+        let err = ChainSpec::from_json(&Json::parse(r#"{"scale": [1.0, "x"]}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("scale[1]"), "{err}");
+    }
+}

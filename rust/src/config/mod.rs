@@ -7,6 +7,7 @@
 //! round-trips through JSON for config files (`scfo run --config x.json`).
 
 use crate::app::{Application, Network, StageRegistry};
+use crate::chain::ChainSpec;
 use crate::cost::CostKind;
 use crate::graph::topologies;
 use crate::util::json::Json;
@@ -43,6 +44,9 @@ pub struct Scenario {
     /// congestible (a data source running every task locally saturates its
     /// CPU), which is the regime the paper's Fig. 5/6 gaps live in.
     pub comp_weight: f64,
+    /// Generalized chain profile applied to every application (None = the
+    /// paper's identity chain: no data inflation, no result-return flow).
+    pub chain: Option<ChainSpec>,
     pub seed: u64,
 }
 
@@ -76,6 +80,7 @@ impl Scenario {
             packet_base: 10.0,
             packet_decay: 5.0,
             comp_weight: 0.25,
+            chain: None,
             seed: 2023,
         })
     }
@@ -143,13 +148,20 @@ impl Scenario {
         let comp_cost = (0..n)
             .map(|_| self.comp_kind.instantiate(self.comp_param))
             .collect();
-        Network::new(graph, apps, link_cost, comp_cost, comp_weight)
+        match &self.chain {
+            None => Network::new(graph, apps, link_cost, comp_cost, comp_weight),
+            Some(spec) => {
+                let profile = spec.resolve(self.num_tasks)?;
+                let chains = vec![profile; apps.len()];
+                Network::with_chains(graph, apps, link_cost, comp_cost, comp_weight, chains)
+            }
+        }
     }
 
     // ---- JSON round trip ---------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("topology", Json::Str(self.topology.clone())),
             ("num_apps", Json::Num(self.num_apps as f64)),
@@ -195,7 +207,12 @@ impl Scenario {
                     Json::from_u64(self.seed)
                 },
             ),
-        ])
+        ];
+        // identity chains are omitted entirely for config readability
+        if let Some(spec) = &self.chain {
+            fields.push(("chain", spec.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<Scenario> {
@@ -224,6 +241,10 @@ impl Scenario {
             packet_base: getf("packet_base", 10.0),
             packet_decay: getf("packet_decay", 5.0),
             comp_weight: getf("comp_weight", 1.0),
+            chain: match v.get("chain") {
+                None | Some(Json::Null) => None,
+                Some(c) => Some(ChainSpec::from_json(c)?),
+            },
             seed: v
                 .get("seed")
                 .and_then(Json::as_u64_lossless)
@@ -292,6 +313,45 @@ mod tests {
         let sc = Scenario::table2("geant").unwrap();
         let re = Scenario::from_json(&sc.to_json()).unwrap();
         assert_eq!(format!("{sc:?}"), format!("{re:?}"));
+    }
+
+    #[test]
+    fn chain_field_roundtrips_and_defaults_to_identity() {
+        // identity (None) stays absent from the emitted config
+        let sc = Scenario::table2("abilene").unwrap();
+        assert!(sc.to_json().get("chain").is_none());
+        // named profile round-trips exactly
+        let mut sc = Scenario::table2("abilene").unwrap();
+        sc.chain = Some(ChainSpec::named("vgg16").unwrap());
+        let re = Scenario::from_json(&sc.to_json()).unwrap();
+        assert_eq!(format!("{sc:?}"), format!("{re:?}"));
+        // explicit profile round-trips exactly
+        sc.chain = Some(ChainSpec::Explicit {
+            scale: vec![2.0, 0.5],
+            result_size: 0.25,
+            local_frac: vec![0.5, 0.25],
+        });
+        let re = Scenario::from_json(&sc.to_json()).unwrap();
+        assert_eq!(format!("{sc:?}"), format!("{re:?}"));
+    }
+
+    #[test]
+    fn chained_scenario_builds_generalized_network() {
+        let mut sc = Scenario::table2("abilene").unwrap();
+        sc.chain = Some(ChainSpec::named("resnet50").unwrap());
+        let net = sc.build(&mut Rng::new(sc.seed)).unwrap();
+        // every stage table is populated and at least one stage inflates or
+        // returns data
+        assert_eq!(net.stage_conv.len(), net.num_stages());
+        assert!(net.stage_ret.iter().any(|&u| u > 0.0));
+        assert!(net.chains.iter().all(|c| !c.is_identity()));
+        // a ragged explicit spec is rejected at build time
+        sc.chain = Some(ChainSpec::Explicit {
+            scale: vec![2.0],
+            result_size: 0.0,
+            local_frac: vec![],
+        });
+        assert!(sc.build(&mut Rng::new(sc.seed)).is_err());
     }
 
     #[test]

@@ -235,6 +235,8 @@ impl AsyncRuntime {
                     packet_size: app.packet_sizes[k],
                     comp_weight: net.comp_weight[s][id],
                     next: (k < app.num_tasks).then(|| net.stages.id(a, k + 1)),
+                    conv: net.stage_conv[s],
+                    ret_weight: net.stage_ret[s],
                 });
             }
             let deg = net.graph.out_neighbors(id).len();
@@ -477,8 +479,14 @@ impl AsyncRuntime {
         let ns = self.net.num_stages();
         for i in 0..self.net.n() {
             let mut link_marginal = Vec::with_capacity(self.net.graph.out_degree(i));
+            let mut rev_link_marginal = Vec::with_capacity(self.net.graph.out_degree(i));
             for (_j, e) in self.net.graph.out_links(i) {
                 link_marginal.push(fs.link_marginal[e]);
+                // an out-link's mirror is an incident in-link: locally
+                // measurable in a real deployment
+                rev_link_marginal.push(
+                    self.net.rev_edge[e].map(|r| fs.link_marginal[r]).unwrap_or(0.0),
+                );
             }
             let traffic = (0..ns).map(|s| fs.traffic[s][i]).collect();
             self.control_messages += 1;
@@ -486,6 +494,7 @@ impl AsyncRuntime {
                 epoch,
                 alpha: self.cur_alpha,
                 link_marginal,
+                rev_link_marginal,
                 comp_marginal: fs.comp_marginal[i],
                 traffic,
             }));

@@ -44,6 +44,11 @@ pub struct StageMeta {
     pub comp_weight: f64,
     /// Stage id of (a, k+1), if any.
     pub next: Option<usize>,
+    /// r_(a,k): packets of stage k+1 per stage-k packet processed.
+    pub conv: f64,
+    /// u_(a,k): result-return bits riding the mirror link per forwarded
+    /// packet (0 when the chain has no result-return flow).
+    pub ret_weight: f64,
 }
 
 /// Local measurements pushed to a node at each epoch boundary (what it would
@@ -55,6 +60,10 @@ pub struct MeasureMsg {
     pub alpha: f64,
     /// D'_ij(F_ij) per out-link slot (index-aligned with the sparse rows).
     pub link_marginal: Vec<f64>,
+    /// D'_ji(F_ji) of each out-link's mirror (index-aligned with
+    /// `link_marginal`; 0.0 where no mirror exists). A node measures these
+    /// locally too: the mirror of an out-link is an incident in-link.
+    pub rev_link_marginal: Vec<f64>,
     /// C'_i(G_i).
     pub comp_marginal: f64,
     /// Own traffic t_i(a,k) per stage.
@@ -332,7 +341,11 @@ impl AsyncNode {
                 if p > PHI_EPS {
                     match self.view[s][t] {
                         Some(v) => {
-                            acc += p * (m.packet_size * meas.link_marginal[t] + v.d_dt);
+                            let mut term = m.packet_size * meas.link_marginal[t] + v.d_dt;
+                            if m.ret_weight > 0.0 {
+                                term += m.ret_weight * meas.rev_link_marginal[t];
+                            }
+                            acc += p * term;
                             if v.dirty {
                                 dirty = true;
                             }
@@ -346,7 +359,8 @@ impl AsyncNode {
             }
             if computable && !m.is_final && row[deg] > PHI_EPS {
                 let next = m.next.expect("non-final stage has next");
-                acc += row[deg] * (m.comp_weight * meas.comp_marginal + self.own[next].1);
+                acc += row[deg]
+                    * (m.comp_weight * meas.comp_marginal + m.conv * self.own[next].1);
             }
             if computable {
                 if !dirty {
@@ -416,7 +430,11 @@ impl AsyncNode {
                         if v.epoch + 1 < epoch {
                             stale = true;
                         }
-                        m.packet_size * meas.link_marginal[t] + v.d_dt
+                        let mut term = m.packet_size * meas.link_marginal[t] + v.d_dt;
+                        if m.ret_weight > 0.0 {
+                            term += m.ret_weight * meas.rev_link_marginal[t];
+                        }
+                        term
                     }
                     None => INF_MARGINAL,
                 };
@@ -425,7 +443,7 @@ impl AsyncNode {
                 INF_MARGINAL
             } else {
                 let next = m.next.expect("non-final stage has next");
-                m.comp_weight * meas.comp_marginal + self.own[next].1
+                m.comp_weight * meas.comp_marginal + m.conv * self.own[next].1
             };
             let support = &self.cfg.support[s];
             let view = &self.view[s];
@@ -516,6 +534,8 @@ mod tests {
                 packet_size: 1.0,
                 comp_weight: 0.0,
                 next: None,
+                conv: 1.0,
+                ret_weight: 0.0,
             }],
             support: vec![vec![true, false]],
             phi_rows: vec![vec![1.0, 0.0]],
@@ -533,6 +553,7 @@ mod tests {
             epoch,
             alpha: 0.1,
             link_marginal: vec![0.5],
+            rev_link_marginal: vec![0.0],
             comp_marginal: 0.0,
             traffic: vec![1.0],
         })

@@ -9,7 +9,15 @@
 //! ```
 //!
 //! is solved exactly in one topological-order pass per stage, chaining stages
-//! of an application in order (CPU output of stage k injects into stage k+1).
+//! of an application in order (CPU output of stage k injects into stage k+1,
+//! scaled by the chain's per-stage conversion factor `conv[k]` — 1.0 in the
+//! base paper model; see [`crate::chain`]).
+//!
+//! Chains with a result-return flow additionally mirror each stage's forward
+//! link traffic: a stage-`s` packet crossing `(i,j)` implies
+//! `stage_ret[s] = result_size · Π_{j'≥k} conv[j']` data units returning
+//! over `(j,i)`, accumulated into `link_flow` (and hence link costs) without
+//! touching the forward packet accounting.
 //!
 //! The propagation walks each node's sparse CSR row (see
 //! [`crate::strategy::Strategy::row`]), so one solve is O(|𝒮|·(m+n)).
@@ -115,19 +123,22 @@ impl FlowState {
                 if !phi.topo_order_into(s, topo) {
                     return Err(FlowError::Loop { stage: s });
                 }
-                // injection: exogenous (k = 0) or previous stage's CPU output
-                // (1:1 packet conversion).
+                // injection: exogenous (k = 0) or previous stage's CPU
+                // output, scaled by the chain conversion factor (1.0 in the
+                // base model: one output packet per input packet).
                 if k == 0 {
                     out.traffic[s].copy_from_slice(&app.input_rates);
                 } else {
                     let prev = net.stages.id(a, k - 1);
+                    let conv = net.stage_conv[prev];
                     for i in 0..n {
-                        let v = out.cpu_pkt[prev][i];
+                        let v = conv * out.cpu_pkt[prev][i];
                         out.traffic[s][i] = v;
                     }
                 }
                 // propagate in topological order over the sparse rows
                 let l = net.packet_size(s);
+                let u = net.stage_ret[s];
                 for &i in &topo.order {
                     let ti = out.traffic[s][i];
                     if ti <= 0.0 {
@@ -141,6 +152,12 @@ impl FlowState {
                             out.traffic[s][j] += fpkt;
                             out.link_pkt[s][e] += fpkt;
                             out.link_flow[e] += l * fpkt;
+                            if u > 0.0 {
+                                // result-return flow retraces the hop in
+                                // reverse (mirror link validated to exist)
+                                let rev = net.rev_edge[e].expect("mirror link");
+                                out.link_flow[rev] += u * fpkt;
+                            }
                         }
                     }
                     let pc = row[row.len() - 1];
@@ -176,7 +193,8 @@ impl FlowState {
             for i in 0..n {
                 let mut inflow = net.exo_rate(s, i);
                 if k > 0 {
-                    inflow += self.cpu_pkt[net.stages.id(a, k - 1)][i];
+                    let prev = net.stages.id(a, k - 1);
+                    inflow += net.stage_conv[prev] * self.cpu_pkt[prev][i];
                 }
                 for &j in net.graph.in_neighbors(i) {
                     let e = net.graph.edge_id(j, i).unwrap();
@@ -206,7 +224,8 @@ impl FlowState {
         let inject: f64 = if k == 0 {
             net.apps[a].input_rates.iter().sum()
         } else {
-            self.cpu_pkt[net.stages.id(a, k - 1)].iter().sum()
+            let prev = net.stages.id(a, k - 1);
+            net.stage_conv[prev] * self.cpu_pkt[prev].iter().sum::<f64>()
         };
         if inject <= 0.0 {
             return 0.0;
@@ -288,6 +307,58 @@ mod tests {
         assert!((fs.workload[1] - 1.0).abs() < 1e-12);
         // D = F01 + F12 + G1 = 2 + 1 + 1 = 4
         assert!((fs.total_cost - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hand_computed_generalized_flows() {
+        // same path network, but with a data-inflating chain and a result
+        // return flow: conv = [3.0], result_size = 0.5
+        let g = Graph::new(3, &[(0, 1), (1, 2), (1, 0), (2, 1)]).unwrap();
+        let apps = vec![Application {
+            dest: 2,
+            num_tasks: 1,
+            packet_sizes: vec![2.0, 1.0],
+            input_rates: vec![1.0, 0.0, 0.0],
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; 3]; stages.len()];
+        let chain = crate::chain::ChainProfile {
+            conv: vec![3.0],
+            result_size: 0.5,
+            local_frac: vec![0.0],
+        };
+        let net = Network::with_chains(
+            g.clone(),
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; g.m()],
+            vec![CostFn::Linear { d: 1.0 }; 3],
+            cw,
+            vec![chain],
+        )
+        .unwrap();
+        // stage_ret = 0.5 * rho, rho = [3.0, 1.0]
+        assert_eq!(net.stage_ret, vec![1.5, 0.5]);
+        let phi = compute_at_middle(&net);
+        phi.validate(&net).unwrap();
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let s1 = net.stages.id(0, 1);
+        // stage-1 injection at node 1 is conv * cpu output = 3.0
+        assert!((fs.traffic[s1][1] - 3.0).abs() < 1e-12);
+        let e01 = net.graph.edge_id(0, 1).unwrap();
+        let e10 = net.graph.edge_id(1, 0).unwrap();
+        let e12 = net.graph.edge_id(1, 2).unwrap();
+        let e21 = net.graph.edge_id(2, 1).unwrap();
+        // forward: L0·1 on (0,1), L1·3 on (1,2); return: 1.5·1 on (1,0),
+        // 0.5·3 on (2,1)
+        assert!((fs.link_flow[e01] - 2.0).abs() < 1e-12);
+        assert!((fs.link_flow[e10] - 1.5).abs() < 1e-12);
+        assert!((fs.link_flow[e12] - 3.0).abs() < 1e-12);
+        assert!((fs.link_flow[e21] - 1.5).abs() < 1e-12);
+        // D = 2 + 1.5 + 3 + 1.5 + G1(=1) = 9
+        assert!((fs.total_cost - 9.0).abs() < 1e-12, "{}", fs.total_cost);
+        assert!(fs.conservation_residual(&net, &phi) < 1e-9);
+        // avg hops are per-stage and unchanged by the return mirror
+        assert!((fs.avg_hops(&net, s1) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod util;
 pub mod algo;
 pub mod bench;
 pub mod broadcast;
+pub mod chain;
 pub mod cli;
 pub mod config;
 pub mod control;
@@ -78,6 +79,7 @@ pub mod testutil;
 pub mod prelude {
     pub use crate::algo::gp::{GpOptions, GpReport, GradientProjection};
     pub use crate::app::{Application, Network, StageRegistry};
+    pub use crate::chain::{ChainProfile, ChainSpec};
     pub use crate::cost::{CostFn, CostKind};
     pub use crate::flow::FlowState;
     pub use crate::graph::{topologies, Graph};

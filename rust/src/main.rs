@@ -14,6 +14,7 @@
 //! scfo scenarios run --all --tier topo-churn       # link-flap epoch-rebind tier
 //! scfo scenarios run --tier massive                # million-stream SoA hot path
 //! scfo scenarios run --all --tier ha               # replicated-control failover tier
+//! scfo scenarios run --all --tier dnn              # DNN-split generalized-chain tier
 //! scfo scenarios run --spec my.toml                # one spec file (TOML or JSON)
 //! scfo distributed run --shards 4 --faults lossy   # async sharded runtime
 //! scfo distributed run --faults spec.toml --json D.json  # custom fault spec
@@ -29,6 +30,7 @@
 //! scfo bench --json --control [--slots 90]         # control plane → BENCH.json v5
 //! scfo bench --json --topo-churn [--slots 60]      # link flaps → BENCH.json v5
 //! scfo bench --json --massive [--apps 1000] [--sources 1000]  # 1M streams → v7
+//! scfo bench --json --dnn [--slots 40] [--iters 60]  # chain tier gaps → v9
 //! scfo bench --json --massive --profile prof.json  # + Chrome trace (Perfetto)
 //! scfo trace record --topology abilene --workload mmpp --slots 120 --out t.json
 //! scfo trace replay t.json | stats t.json          # bit-identical trace replay
@@ -687,7 +689,9 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
 /// the requested scenarios; `--json` writes the machine-readable BENCH.json
 /// perf baseline (schema: docs/PERFORMANCE.md). With `--workload NAME` the
 /// bench drives the online serving loop instead (iters = serving slots) and
-/// BENCH.json gains the regret / reconvergence-slots columns.
+/// BENCH.json gains the regret / reconvergence-slots columns. With `--dnn`
+/// the bench runs the generalized-chain tier and BENCH.json gains the v9
+/// per-cell GP-vs-baseline cost-gap columns.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     scfo::cli::guard_subcommand(args, "bench", &[])?;
     let scenarios = args.flag_or("scenarios", "abilene,geant,sw");
@@ -698,6 +702,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let topo_churn = args.switch("topo-churn");
     let massive = args.switch("massive");
     let ha = args.switch("ha");
+    let dnn = args.switch("dnn");
     let mut results = Vec::new();
     if ha {
         let replicas = args.flag_usize("replicas", 3)?;
@@ -716,8 +721,16 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         eprintln!("bench massive ({apps} x {sources} streams, {slots} slots)...");
         results.push(scfo::bench::bench_massive_scenario(apps, sources, slots)?);
     }
+    if dnn && !ha && !massive {
+        // the dnn tier crosses its own fixed families × chain profiles ×
+        // congestion; --slots sizes the serving horizon, --iters the
+        // baseline-comparison budget
+        let slots = args.flag_usize("slots", 40)?;
+        eprintln!("bench dnn tier ({slots} slots, {iters} iters per cell)...");
+        results.push(scfo::bench::bench_dnn_scenario(slots, iters)?);
+    }
     for name in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        if massive || ha {
+        if massive || ha || dnn {
             break;
         }
         if topo_churn {
@@ -829,6 +842,45 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 "smp/est/det ms",
                 "slot ms max",
                 "streams/sec",
+            ],
+            &rows,
+        );
+    } else if dnn {
+        let rows: Vec<Vec<String>> = results
+            .iter()
+            .flat_map(|r| {
+                let d = r.dnn.as_ref().expect("dnn bench has a dnn block");
+                d.rows
+                    .iter()
+                    .map(|row| {
+                        let mut cells = vec![
+                            row.name.clone(),
+                            row.profile.clone(),
+                            row.congestion.clone(),
+                            format!("{:.4}", row.gp_cost),
+                        ];
+                        for (name, g) in &row.gaps {
+                            cells.push(if *g > 50.0 {
+                                format!("sat({name})")
+                            } else {
+                                format!("{g:.2}x")
+                            });
+                        }
+                        cells
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        print_table(
+            "DNN-split chain tier bench (BENCH.json v9 columns)",
+            &[
+                "cell",
+                "profile",
+                "congestion",
+                "GP cost",
+                "SPOC",
+                "LCOF",
+                "LPR-SC",
             ],
             &rows,
         );
@@ -1083,13 +1135,21 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             }
             return Ok(specs);
         }
+        if tier == "dnn" {
+            // generalized DNN-split chains (data inflation, result-return
+            // flows) served online; --slots sizes the horizon, --iters the
+            // baseline-comparison budget
+            let slots = args.flag_usize("slots", 100)?;
+            let iters = args.flag_usize("iters", 150)?;
+            return Ok(ScenarioSpec::dnn_matrix_sized(slots, iters));
+        }
         let (def_iters, def_event) = match tier.as_str() {
             "standard" | "default" => (600, 300),
             "large" => (150, 60),
             other => {
                 anyhow::bail!(
                     "unknown scenario tier '{other}' \
-                     (standard|large|dynamic|distributed|churn|topo-churn|massive|ha)"
+                     (standard|large|dynamic|distributed|churn|topo-churn|massive|ha|dnn)"
                 )
             }
         };
@@ -1418,7 +1478,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: scfo <run|compare|table2|fig5|fig6|fig7|scenarios|bench|serve|trace|validate|distributed|broadcast> \
                  [--topology NAME] [--config FILE] [--iters N] [--alpha A] [--jobs N] \
-                 [--tier large|dynamic|distributed|churn|topo-churn|massive] [--workload SPEC] [--shards N] \
+                 [--tier large|dynamic|distributed|churn|topo-churn|massive|ha|dnn] [--workload SPEC] [--shards N] \
                  [--faults SPEC] [--http ADDR] [--checkpoint DIR] [--restore] [--control] \
                  [--topo-churn] [--profile FILE] [--xla]"
             );

@@ -10,6 +10,13 @@
 //! [`crate::broadcast`] module implements the same recursion with messages
 //! and must agree with this centralized reference (tested).
 //!
+//! The recursion is the *generalized* chain form (see [`crate::chain`]): the
+//! CPU term scales its downstream component by the stage's conversion factor
+//! (`w·C' + conv·∂D/∂t_(a,k+1)`), and chains with a result-return flow add
+//! the mirror link's marginal to every link term
+//! (`L·D'_ij + ret·D'_ji + ∂D/∂t_j`). With identity chains both extra terms
+//! vanish and the base eq. 4/7 recursion is reproduced bit-for-bit.
+//!
 //! δ is stored sparsely: one `f64` per CSR slot of the graph layout
 //! ([`crate::graph::CsrLayout`]) — `out_degree(i)` link slots plus one CPU
 //! slot per node, so a full δ evaluation is O(m + n) per stage instead of
@@ -104,6 +111,8 @@ impl Marginals {
             for k in (0..app.num_stages()).rev() {
                 let s = net.stages.id(a, k);
                 let l = net.packet_size(s);
+                let u = net.stage_ret[s];
+                let conv = net.stage_conv[s];
                 let is_final = k == app.num_tasks;
                 let acyclic = phi.topo_order_into(s, topo);
                 assert!(acyclic, "marginals require a loop-free strategy");
@@ -114,7 +123,13 @@ impl Marginals {
                     for (idx, (j, e)) in net.graph.out_links(i).enumerate() {
                         let p = row[idx];
                         if p > PHI_EPS {
-                            acc += p * (l * fs.link_marginal[e] + out.d_dt[s][j]);
+                            let mut term = l * fs.link_marginal[e] + out.d_dt[s][j];
+                            if u > 0.0 {
+                                // result-return flow on the mirror link
+                                let rev = net.rev_edge[e].expect("mirror link");
+                                term += u * fs.link_marginal[rev];
+                            }
+                            acc += p * term;
                         }
                     }
                     if !is_final {
@@ -123,7 +138,7 @@ impl Marginals {
                             let next = net.stages.id(a, k + 1);
                             acc += pc
                                 * (net.comp_weight[s][i] * fs.comp_marginal[i]
-                                    + out.d_dt[next][i]);
+                                    + conv * out.d_dt[next][i]);
                         }
                     }
                     out.d_dt[s][i] = acc;
@@ -138,11 +153,16 @@ impl Marginals {
                     for t in r.start..r.end - 1 {
                         let j = layout.slot_target(t);
                         let e = layout.slot_edge(t);
-                        drow_all[t] = l * fs.link_marginal[e] + out.d_dt[s][j];
+                        let mut v = l * fs.link_marginal[e] + out.d_dt[s][j];
+                        if u > 0.0 {
+                            let rev = net.rev_edge[e].expect("mirror link");
+                            v += u * fs.link_marginal[rev];
+                        }
+                        drow_all[t] = v;
                     }
                     if let Some(next) = next {
                         drow_all[r.end - 1] = net.comp_weight[s][i] * fs.comp_marginal[i]
-                            + out.d_dt[next][i];
+                            + conv * out.d_dt[next][i];
                     }
                 }
             }
@@ -321,6 +341,69 @@ mod tests {
                     continue;
                 }
                 for j in phi.positive_links(s, i).collect::<Vec<_>>() {
+                    let analytic = mg.d_dphi(&fs, s, i, j);
+                    let fd = Marginals::fd_check(&net, &phi, s, i, j, 1e-6).unwrap();
+                    assert!(
+                        (analytic - fd).abs() < 1e-3 * (1.0 + analytic.abs()),
+                        "s={s} i={i} j={j}: analytic={analytic} fd={fd}"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 5, "too few directions checked ({checked})");
+    }
+
+    #[test]
+    fn generalized_chain_d_dphi_matches_finite_difference() {
+        // data-inflating chain with a result-return flow: the analytic
+        // eq. (3) marginal must still match finite differences of the true
+        // (generalized) objective — this pins the conv term on the CPU slot
+        // and the mirror-link term on link slots
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let mut rng = Rng::new(33);
+        let mut r = vec![0.0; n];
+        r[0] = 0.6;
+        r[5] = 0.4;
+        let apps = vec![Application {
+            dest: 9,
+            num_tasks: 2,
+            packet_sizes: vec![3.0, 2.0, 1.0],
+            input_rates: r,
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.3; n]; stages.len()];
+        let chain = crate::chain::ChainProfile {
+            conv: vec![2.5, 0.4],
+            result_size: 0.8,
+            local_frac: vec![0.0, 0.0],
+        };
+        let net = Network::with_chains(
+            g,
+            apps,
+            vec![CostFn::Queue { cap: 25.0 }; m],
+            vec![CostFn::Queue { cap: 15.0 }; n],
+            cw,
+            vec![chain],
+        )
+        .unwrap();
+        let phi = Strategy::random_dag(&net, &mut rng);
+        let fs = FlowState::solve(&net, &phi).unwrap();
+        let mg = Marginals::compute(&net, &phi, &fs);
+        let mut checked = 0;
+        for s in 0..net.num_stages() {
+            for i in 0..n {
+                if fs.traffic[s][i] < 1e-6 {
+                    continue;
+                }
+                let cpu = net.n();
+                let mut dirs: Vec<usize> = phi.positive_links(s, i).collect();
+                if !net.is_final_stage(s) && phi.cpu_frac(s, i) > PHI_EPS {
+                    dirs.push(cpu);
+                }
+                for j in dirs {
                     let analytic = mg.d_dphi(&fs, s, i, j);
                     let fd = Marginals::fd_check(&net, &phi, s, i, j, 1e-6).unwrap();
                     assert!(

@@ -568,6 +568,7 @@ impl ScenarioSpec {
                     packet_base: 10.0,
                     packet_decay: 5.0,
                     comp_weight: 0.25,
+                    chain: None,
                     seed: 2023,
                 }
             }
@@ -724,6 +725,61 @@ impl ScenarioSpec {
                 spec
             })
             .collect()
+    }
+
+    /// Topology families of the `dnn` tier: one small real network plus two
+    /// scale rungs — generalized chains matter most where the inflated
+    /// inter-stage flows contend for shared cut links.
+    pub const DNN_FAMILIES: [&'static str; 3] = ["abilene", "er-200-800", "er-1000-4000"];
+
+    /// Chain profiles the `dnn` tier crosses the families with
+    /// (VGG/ResNet-style activation-size sequences, see [`crate::chain`]).
+    pub const DNN_PROFILES: [&'static str; 2] = ["vgg16", "resnet50"];
+
+    /// Congestion levels of the `dnn` tier: nominal plus the heavy regime
+    /// where GP's advantage over the congestion-blind baselines is pinned.
+    pub const DNN_CONGESTION: [Congestion; 2] = [Congestion::Nominal, Congestion::Heavy];
+
+    /// The `dnn` scale tier: DNN-split service chains (per-stage data
+    /// inflation, result-return flows, fractional offload splits) under a
+    /// flash-crowd workload — families × chain profiles × congestion
+    /// levels, each served online like the `dynamic` tier. Reports carry
+    /// the GP-vs-baseline cost comparison on the generalized cost.
+    pub fn dnn_matrix() -> Vec<ScenarioSpec> {
+        Self::dnn_matrix_sized(100, 150)
+    }
+
+    /// The `dnn` tier with explicit serving-slot and optimization budgets.
+    pub fn dnn_matrix_sized(slots: usize, iters: usize) -> Vec<ScenarioSpec> {
+        let mut out = Vec::with_capacity(
+            Self::DNN_FAMILIES.len() * Self::DNN_PROFILES.len() * Self::DNN_CONGESTION.len(),
+        );
+        for family in Self::DNN_FAMILIES {
+            for profile in Self::DNN_PROFILES {
+                for congestion in Self::DNN_CONGESTION {
+                    let mut spec =
+                        Self::named(family, congestion).expect("dnn families are valid");
+                    if family != "abilene" {
+                        spec.apply_scale_overrides();
+                    }
+                    spec.base.name =
+                        format!("{family}-dnn-{profile}-{}", congestion.name());
+                    spec.base.chain = Some(
+                        crate::chain::ChainSpec::named(profile)
+                            .expect("dnn profiles are valid"),
+                    );
+                    spec.events.clear();
+                    spec.iters = iters;
+                    spec.slots = slots;
+                    spec.workload = Some(
+                        WorkloadSpec::named("flash-crowd")
+                            .expect("flash-crowd is a valid workload"),
+                    );
+                    out.push(spec);
+                }
+            }
+        }
+        out
     }
 
     /// Topology families of the `dynamic` tier.
@@ -1324,6 +1380,60 @@ mod tests {
         let plain = ScenarioSpec::named("abilene", Congestion::Light).unwrap();
         let re = ScenarioSpec::from_json(&plain.to_json()).unwrap();
         assert!(!re.massive);
+    }
+
+    #[test]
+    fn dnn_matrix_crosses_families_profiles_and_congestion() {
+        let m = ScenarioSpec::dnn_matrix();
+        assert_eq!(
+            m.len(),
+            ScenarioSpec::DNN_FAMILIES.len()
+                * ScenarioSpec::DNN_PROFILES.len()
+                * ScenarioSpec::DNN_CONGESTION.len()
+        );
+        let names: std::collections::BTreeSet<&str> = m.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), m.len(), "dnn names must be unique");
+        for s in &m {
+            let chain = s.base.chain.as_ref().expect("dnn specs carry a chain");
+            assert!(ScenarioSpec::DNN_PROFILES.contains(&chain.name()));
+            let w = s.workload.as_ref().expect("dnn specs carry a workload");
+            assert_eq!(w.name(), "flash-crowd");
+            assert!(s.events.is_empty(), "dnn tier uses the serving loop");
+            assert!(s.slots > 0);
+            assert!(ScenarioSpec::DNN_CONGESTION.contains(&s.congestion));
+        }
+        // heavy-congestion cells exist for every family (the acceptance
+        // criterion's GP-vs-baseline gap is pinned there)
+        for family in ScenarioSpec::DNN_FAMILIES {
+            assert!(m.iter().any(|s| {
+                s.base.topology == family && s.congestion == Congestion::Heavy
+            }));
+        }
+    }
+
+    #[test]
+    fn dnn_spec_roundtrips_with_chain() {
+        let matrix = ScenarioSpec::dnn_matrix();
+        for spec in matrix.iter().take(4) {
+            let re = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(re.base.chain, spec.base.chain);
+            assert_eq!(re.workload, spec.workload);
+            assert_eq!(re.name(), spec.name());
+        }
+        // chain also parses from a TOML string form
+        let toml_text = r#"
+            name = "my-dnn"
+            topology = "abilene"
+            chain = "vgg16"
+            workload = "flash-crowd"
+            slots = 50
+        "#;
+        let v = crate::util::toml::parse(toml_text).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(
+            spec.base.chain,
+            Some(crate::chain::ChainSpec::named("vgg16").unwrap())
+        );
     }
 
     #[test]

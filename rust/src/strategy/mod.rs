@@ -338,6 +338,46 @@ impl Strategy {
         phi
     }
 
+    /// Fractional-offload initialization from the per-app chain profiles:
+    /// every non-final stage row splits `local_frac[k]` of its traffic onto
+    /// the local CPU and forwards the remainder along the min-hop path to
+    /// d_a (the DNN-split "compute this fraction of layer k here, ship the
+    /// rest onward" semantics); the destination offloads fully. Final stages
+    /// forward min-hop like [`Strategy::shortest_path_to_dest`].
+    ///
+    /// Identity chains have all-zero `local_frac`, so this degenerates to
+    /// exactly `shortest_path_to_dest`. Loop-freeness: the link portion of
+    /// every row follows a single next hop that strictly decreases hop
+    /// distance to d_a.
+    pub fn fractional_split(net: &Network) -> Self {
+        let n = net.n();
+        let mut phi = Strategy::zeros(&net.graph, net.num_stages());
+        for (s, (a, k)) in net.stages.iter() {
+            let dest = net.apps[a].dest;
+            let (_dist, next) = net.graph.dijkstra_to(dest, |_| 1.0);
+            let is_final = net.is_final_stage(s);
+            let frac = if is_final {
+                0.0
+            } else {
+                net.chains[a].local_frac[k].clamp(0.0, 1.0)
+            };
+            for i in 0..n {
+                if i == dest {
+                    if !is_final {
+                        phi.set(s, i, phi.cpu(), 1.0); // compute at destination
+                    }
+                    // final stage at dest: row stays zero (exit)
+                } else if frac > 0.0 {
+                    phi.set(s, i, phi.cpu(), frac);
+                    phi.set(s, i, next[i], 1.0 - frac);
+                } else {
+                    phi.set(s, i, next[i], 1.0);
+                }
+            }
+        }
+        phi
+    }
+
     /// Random feasible loop-free initialization: every node spreads its
     /// stage-(a,k) traffic across neighbors strictly closer (in hop count) to
     /// d_a with random weights, plus a random CPU fraction (if not final).
@@ -591,6 +631,55 @@ mod tests {
         let phi = Strategy::shortest_path_to_dest(&net);
         phi.validate(&net).unwrap();
         assert!(!phi.has_loop());
+    }
+
+    #[test]
+    fn fractional_split_degenerates_to_shortest_path_on_identity_chains() {
+        let net = net();
+        let sp = Strategy::shortest_path_to_dest(&net);
+        let fr = Strategy::fractional_split(&net);
+        assert_eq!(sp, fr);
+    }
+
+    #[test]
+    fn fractional_split_is_feasible_loop_free_and_splits_compute() {
+        let g = topologies::abilene();
+        let n = g.n();
+        let m = g.m();
+        let mut r = vec![0.0; n];
+        r[0] = 1.0;
+        let apps = vec![Application {
+            dest: 10,
+            num_tasks: 2,
+            packet_sizes: vec![10.0, 5.0, 1.0],
+            input_rates: r,
+        }];
+        let stages = StageRegistry::new(&apps);
+        let cw = vec![vec![1.0; n]; stages.len()];
+        let chain = crate::chain::ChainProfile {
+            conv: vec![2.0, 0.5],
+            result_size: 0.0,
+            local_frac: vec![0.7, 0.3],
+        };
+        let net = Network::with_chains(
+            g,
+            apps,
+            vec![CostFn::Linear { d: 1.0 }; m],
+            vec![CostFn::Linear { d: 1.0 }; n],
+            cw,
+            vec![chain],
+        )
+        .unwrap();
+        let phi = Strategy::fractional_split(&net);
+        phi.validate(&net).unwrap();
+        assert!(!phi.has_loop());
+        // stage 0 at a non-destination node: local_frac[0] on the CPU slot
+        assert!((phi.cpu_frac(0, 0) - 0.7).abs() < 1e-12);
+        assert!((phi.cpu_frac(1, 0) - 0.3).abs() < 1e-12);
+        // destination offloads fully on non-final stages
+        assert!((phi.cpu_frac(0, 10) - 1.0).abs() < 1e-12);
+        // final stage never computes
+        assert_eq!(phi.cpu_frac(2, 0), 0.0);
     }
 
     #[test]

@@ -202,9 +202,18 @@ fn parse_value(v: &str, lineno: usize) -> anyhow::Result<Json> {
         return Ok(Json::Arr(items));
     }
     let num = v.replace('_', "");
-    num.parse::<f64>()
-        .map(Json::Num)
-        .map_err(|_| anyhow::anyhow!("toml line {}: bad value '{v}'", lineno + 1))
+    let parsed = num
+        .parse::<f64>()
+        .map_err(|_| anyhow::anyhow!("toml line {}: bad value '{v}'", lineno + 1))?;
+    // Rust's f64 parser accepts "NaN"/"inf", which TOML does not — and a
+    // NaN smuggled into a per-stage scale array would poison every flow
+    // downstream. Reject non-finite numbers with the offending text.
+    anyhow::ensure!(
+        parsed.is_finite(),
+        "toml line {}: non-finite number '{v}'",
+        lineno + 1
+    );
+    Ok(Json::Num(parsed))
 }
 
 /// Split an array body on commas at bracket depth 0 (quote-aware), so
@@ -305,6 +314,59 @@ mod tests {
         let arr = v.get("xs").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].as_str(), Some("a,b"));
         assert_eq!(arr[1].as_str(), Some("c]d"));
+    }
+
+    #[test]
+    fn per_stage_float_arrays_parse() {
+        // the chain-spec shape: flat float lists with underscores and a
+        // trailing comma
+        let v = parse("scale = [5.33, 0.5, 0.25, 1_000.0,]").unwrap();
+        let arr = v.get("scale").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].as_f64(), Some(5.33));
+        assert_eq!(arr[3].as_f64(), Some(1000.0));
+        // nested per-stage lists (one row per app)
+        let v = parse("scales = [[2.0, 0.5], [1.0, 1.0, 1.0]]").unwrap();
+        let rows = v.get("scales").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].as_arr().unwrap().len(), 2);
+        assert_eq!(rows[1].as_arr().unwrap().len(), 3);
+        assert_eq!(rows[0].as_arr().unwrap()[0].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn ragged_rows_survive_parsing_for_the_resolver_to_reject() {
+        // raggedness is a semantic error: the parser hands the rows through
+        // and ChainSpec::resolve reports the length mismatch with context
+        let v = parse("scale = [2.0, 0.5, 0.25]").unwrap();
+        let spec = crate::chain::ChainSpec::Explicit {
+            scale: v
+                .get("scale")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect(),
+            result_size: 0.0,
+            local_frac: vec![],
+        };
+        let err = spec.resolve(2).unwrap_err().to_string();
+        assert!(err.contains("ragged"), "got: {err}");
+        assert!(err.contains("3 entries"), "got: {err}");
+    }
+
+    #[test]
+    fn non_finite_numbers_are_rejected_with_context() {
+        for bad in ["NaN", "nan", "inf", "-inf", "infinity"] {
+            let doc = format!("scale = [1.0, {bad}]");
+            let err = parse(&doc).unwrap_err().to_string();
+            assert!(
+                err.contains("non-finite") && err.contains(bad),
+                "{bad}: got '{err}'"
+            );
+        }
+        // scalar position too
+        assert!(parse("x = NaN").unwrap_err().to_string().contains("non-finite"));
     }
 
     #[test]

@@ -379,6 +379,16 @@ pub struct Stream {
     rng: Rng,
     /// Arrival offsets within the most recently sampled slot, ascending.
     pub last_offsets: Vec<f64>,
+    /// Stage packets one arrival spawns across the owning app's chain
+    /// (identity chains: `num_tasks + 1`). Derived from
+    /// [`crate::chain::ChainProfile::stage_multiplicity`] wherever a
+    /// [`Network`] is in hand (`from_spec`, `rebind`); streams built
+    /// without one (trace replay, checkpoint restore) keep the neutral 1.0.
+    pub chain_mult: f64,
+    /// Result data returned per arrival
+    /// ([`crate::chain::ChainProfile::return_per_input`]; 0 = no return
+    /// flow).
+    pub chain_ret: f64,
     /// Time-averaged true rate over the most recently sampled slot (before
     /// any slot is sampled: the model's rate at t = 0).
     pub last_rate: f64,
@@ -394,7 +404,16 @@ impl Stream {
             rng,
             last_offsets: Vec::new(),
             last_rate,
+            chain_mult: 1.0,
+            chain_ret: 0.0,
         }
+    }
+
+    /// Fill the derived chain columns from the owning app's profile.
+    fn bind_chain(&mut self, net: &Network) {
+        let profile = &net.chains[self.app];
+        self.chain_mult = profile.stage_multiplicity();
+        self.chain_ret = profile.return_per_input();
     }
 
     /// The stream's model kind tag.
@@ -494,7 +513,9 @@ impl Workload {
                     .map(|ov| &ov.model)
                     .unwrap_or(&spec.model);
                 let rng = master.fork();
-                streams.push(Stream::new(a, i, model_for(ms, a, i, r)?, rng));
+                let mut stream = Stream::new(a, i, model_for(ms, a, i, r)?, rng);
+                stream.bind_chain(net);
+                streams.push(stream);
             }
         }
         Ok(Workload {
@@ -633,14 +654,16 @@ impl Workload {
             let rate = net.apps[na].input_rates[s.node];
             s.model.set_base_rate(rate);
             s.last_rate = s.model.rate_at(self.time());
+            s.bind_chain(net);
             self.streams.push(s);
         }
         for (a, app) in net.apps.iter().enumerate() {
             for (i, &r) in app.input_rates.iter().enumerate() {
                 if r > 0.0 && !self.streams.iter().any(|s| s.app == a && s.node == i) {
                     let rng = self.spawn_rng.fork();
-                    self.streams
-                        .push(Stream::new(a, i, Box::new(Poisson::new(r)), rng));
+                    let mut stream = Stream::new(a, i, Box::new(Poisson::new(r)), rng);
+                    stream.bind_chain(net);
+                    self.streams.push(stream);
                 }
             }
         }

@@ -64,6 +64,11 @@ pub struct StreamTable {
     rng: Vec<Rng>,
     /// Time-averaged true rate over the most recently sampled slot.
     last_rate: Vec<f64>,
+    /// Stage packets one arrival spawns across the owning app's chain
+    /// (copied from [`Stream::chain_mult`]; identity chains: tasks + 1).
+    chain_mult: Vec<f64>,
+    /// Result data returned per arrival (copied from [`Stream::chain_ret`]).
+    chain_ret: Vec<f64>,
     // family index lists: stream ids in ascending order
     poisson: Vec<u32>,
     diurnal: Vec<u32>,
@@ -99,6 +104,8 @@ impl StreamTable {
             base: Vec::with_capacity(n),
             rng: Vec::with_capacity(n),
             last_rate: Vec::with_capacity(n),
+            chain_mult: Vec::with_capacity(n),
+            chain_ret: Vec::with_capacity(n),
             poisson: Vec::new(),
             diurnal: Vec::new(),
             mmpp: Vec::new(),
@@ -134,6 +141,8 @@ impl StreamTable {
             t.base.push(s.model.base_rate());
             t.rng.push(s.rng.clone());
             t.last_rate.push(s.last_rate);
+            t.chain_mult.push(s.chain_mult);
+            t.chain_ret.push(s.chain_ret);
             let id = i as u32;
             match spec {
                 ModelSpec::Poisson => {
@@ -223,6 +232,29 @@ impl StreamTable {
     /// Latest per-stream true rates (post-sample), indexed by stream id.
     pub fn last_rates(&self) -> &[f64] {
         &self.last_rate
+    }
+
+    /// Per-stream chain stage-packet multiplicities, indexed by stream id.
+    pub fn chain_mults(&self) -> &[f64] {
+        &self.chain_mult
+    }
+
+    /// Per-stream result-return weights, indexed by stream id.
+    pub fn chain_rets(&self) -> &[f64] {
+        &self.chain_ret
+    }
+
+    /// Chain-weighted offered load over the latest sampled slot:
+    /// `(Σ rate·chain_mult, Σ rate·chain_ret)` — the stage-packet demand
+    /// and return-data demand the current arrivals impose network-wide.
+    pub fn effective_load(&self) -> (f64, f64) {
+        let mut pkts = 0.0;
+        let mut ret = 0.0;
+        for i in 0..self.last_rate.len() {
+            pkts += self.last_rate[i] * self.chain_mult[i];
+            ret += self.last_rate[i] * self.chain_ret[i];
+        }
+        (pkts, ret)
     }
 
     /// Sample one slot with one pass per model family, writing each
@@ -401,6 +433,47 @@ mod tests {
         assert!(wl.enable_batching(), "plain poisson must be batchable");
         assert!(!replay.enable_batching(), "trace replay must stay boxed");
         assert!(!replay.batching());
+    }
+
+    #[test]
+    fn chain_columns_follow_the_owning_app_profile() {
+        // identity chains: multiplicity = tasks + 1, no return weight
+        let net = small_net(true); // 2-task app
+        let mut wl = Workload::from_spec(&mixed_spec(), &net, 1.0, 7).unwrap();
+        assert!(wl.enable_batching());
+        let t = wl.stream_table().expect("batched");
+        assert!(t.chain_mults().iter().all(|&m| (m - 3.0).abs() < 1e-12));
+        assert!(t.chain_rets().iter().all(|&u| u == 0.0));
+        let (pkts, ret) = t.effective_load();
+        let rates: f64 = t.last_rates().iter().sum();
+        assert!((pkts - 3.0 * rates).abs() < 1e-9);
+        assert_eq!(ret, 0.0);
+
+        // a generalized chain changes both columns
+        let base = small_net(true);
+        let chains = vec![
+            crate::chain::ChainProfile {
+                conv: vec![2.0, 0.5],
+                result_size: 0.4,
+                local_frac: vec![0.0, 0.0],
+            };
+            base.apps.len()
+        ];
+        let net = crate::app::Network::with_chains(
+            base.graph.clone(),
+            base.apps.clone(),
+            base.link_cost.clone(),
+            base.comp_cost.clone(),
+            base.comp_weight.clone(),
+            chains,
+        )
+        .unwrap();
+        let mut wl = Workload::from_spec(&mixed_spec(), &net, 1.0, 7).unwrap();
+        assert!(wl.enable_batching());
+        let t = wl.stream_table().expect("batched");
+        // 1 + 2 + 1 = 4 stage packets per arrival; 0.4 · (2·0.5) returned
+        assert!(t.chain_mults().iter().all(|&m| (m - 4.0).abs() < 1e-12));
+        assert!(t.chain_rets().iter().all(|&u| (u - 0.4).abs() < 1e-12));
     }
 
     #[test]

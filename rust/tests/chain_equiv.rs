@@ -1,0 +1,250 @@
+//! Degenerate-equivalence test layer for the generalized chain model.
+//!
+//! The `chain` subsystem (per-stage data scaling, result-return flows,
+//! fractional offload splits) rests on one invariant: a **degenerate**
+//! chain — every scale factor 1.0, result size 0.0, no fractional splits —
+//! reproduces the original service-chain model exactly. Every return-flow
+//! term is gated on `ret > 0` and every conversion factor multiplies by
+//! literal 1.0 (bit-exact in IEEE 754), so the degenerate path is not just
+//! "close": it is the legacy code path. This suite pins that three ways:
+//!
+//! 1. a shrinking property test (`util::prop`) over (family, congestion,
+//!    spelling, seed) tuples: the identity chain's GP run matches the plain
+//!    network's cost trajectory within 1e-9 **and** its φ trajectory
+//!    bit-for-bit, for both the `"identity"` named spelling and the
+//!    all-ones `Explicit` spelling,
+//! 2. the full scenario engine (initial solve, dynamic events, all three
+//!    baselines) is bit-identical between a plain spec and the same spec
+//!    with an identity chain, across the default-matrix families,
+//! 3. a non-degenerate guard: a real DNN profile must *change* the cost,
+//!    so a silently ignored chain config cannot pass as equivalence.
+//!
+//! The `chain_digest_is_stable` case prints one
+//! `chain-digest <family> <spec> <cost-bits>` line per (family, chain
+//! spec) cell under `SCFO_CHAIN_SEED`; the CI `chaos-and-golden` job runs
+//! the suite twice per seed and fails on any run-to-run diff (the
+//! flakiness gate — see docs/TESTING.md).
+
+use scfo::algo::gp::{GpOptions, GradientProjection};
+use scfo::chain::ChainSpec;
+use scfo::scenarios::{run_batch, Congestion, RunnerOptions, ScenarioCache, ScenarioSpec};
+use scfo::util::prop::{forall_cases, PropResult};
+use scfo::util::rng::Rng;
+
+/// The default-matrix topology families (mirrors `ScenarioSpec::matrix`).
+const FAMILIES: [&str; 5] = ["er-20-40", "grid-4x5", "fat-tree-4", "abilene", "geant"];
+
+fn chain_seed() -> u64 {
+    std::env::var("SCFO_CHAIN_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(11)
+}
+
+fn quiet() -> RunnerOptions {
+    RunnerOptions {
+        jobs: 2,
+        out_dir: None,
+        quiet: true,
+    }
+}
+
+/// The central property: for every (family, congestion, spelling, seed),
+/// a network built with a degenerate chain spec optimizes identically to
+/// one built with no chain at all — GP costs within 1e-9 at every
+/// iteration and bit-identical φ at every iteration. Failures shrink
+/// toward the minimal (family, variant, seed) triple; the message pins
+/// the first diverging iteration.
+#[test]
+fn identity_chain_reproduces_the_legacy_model() {
+    forall_cases(
+        "identity chain == legacy model",
+        20,
+        |g| {
+            (
+                (g.usize_in(0, FAMILIES.len() - 1), g.usize_in(0, 5)),
+                g.rng().next_u64(),
+            )
+        },
+        |&((fidx, variant), seed)| {
+            let Some(&family) = FAMILIES.get(fidx) else {
+                return PropResult::Discard;
+            };
+            if variant > 5 {
+                return PropResult::Discard;
+            }
+            let congestion = Congestion::ALL[variant % 3];
+            let explicit_spelling = variant >= 3;
+            let spec = ScenarioSpec::named(family, congestion).unwrap();
+            let mut plain = spec.effective_base();
+            plain.seed ^= seed;
+            let mut chained = plain.clone();
+            chained.chain = Some(if explicit_spelling {
+                ChainSpec::Explicit {
+                    scale: vec![1.0; chained.num_tasks],
+                    result_size: 0.0,
+                    local_frac: vec![0.0; chained.num_tasks],
+                }
+            } else {
+                ChainSpec::named("identity").unwrap()
+            });
+            let fail = |msg: String| {
+                PropResult::Fail(format!(
+                    "family {family} congestion {} spelling {} seed {seed}: {msg}",
+                    congestion.name(),
+                    if explicit_spelling { "explicit" } else { "named" },
+                ))
+            };
+
+            let net_a = plain.build(&mut Rng::new(plain.seed)).unwrap();
+            let net_b = chained.build(&mut Rng::new(chained.seed)).unwrap();
+            if net_b.stage_conv.iter().any(|&c| c != 1.0) {
+                return fail("identity chain must resolve to all-ones stage_conv".into());
+            }
+            if net_b.stage_ret.iter().any(|&u| u != 0.0) {
+                return fail("identity chain must resolve to all-zero stage_ret".into());
+            }
+
+            let mut gp_a = GradientProjection::new(&net_a, GpOptions::default());
+            let mut gp_b = GradientProjection::new(&net_b, GpOptions::default());
+            for it in 0..12 {
+                let sa = gp_a.step(&net_a);
+                let sb = gp_b.step(&net_b);
+                if (sa.cost - sb.cost).abs() > 1e-9 {
+                    return fail(format!(
+                        "iter {it}: plain cost {} vs degenerate-chain cost {}",
+                        sa.cost, sb.cost
+                    ));
+                }
+                if gp_a.phi != gp_b.phi {
+                    return fail(format!("iter {it}: φ trajectories diverged"));
+                }
+            }
+            PropResult::Pass
+        },
+    );
+}
+
+/// The scenario engine end to end: initial solve, the default dynamic-event
+/// schedule, and the GP/SPOC/LCOF/LPR-SC comparison are all bit-identical
+/// between a plain spec and the same spec with an identity chain — every
+/// baseline walks the generalized recursion through the same degenerate
+/// gates the optimizer does.
+#[test]
+fn identity_chain_is_bit_identical_through_the_scenario_engine() {
+    let cache = ScenarioCache::new();
+    for family in FAMILIES {
+        let mut spec = ScenarioSpec::named(family, Congestion::Nominal).unwrap();
+        spec.iters = 120;
+        let mut chained = spec.clone();
+        chained.base.chain = Some(ChainSpec::named("identity").unwrap());
+        let a = scfo::scenarios::runner::run_one(&spec, &cache).unwrap();
+        let b = scfo::scenarios::runner::run_one(&chained, &cache).unwrap();
+        assert_eq!(a.costs.len(), b.costs.len(), "{family}: algorithm sets differ");
+        for ((n1, c1), (n2, c2)) in a.costs.iter().zip(&b.costs) {
+            assert_eq!(n1, n2);
+            assert!(
+                c1.to_bits() == c2.to_bits(),
+                "{family}/{n1}: plain {c1} vs identity-chain {c2} must be bit-identical"
+            );
+        }
+        for (p1, p2) in a.phases.iter().zip(&b.phases) {
+            assert_eq!(p1.label, p2.label, "{family}: phase schedules differ");
+            assert!(
+                p1.gp_cost.to_bits() == p2.gp_cost.to_bits(),
+                "{family}/{}: plain {} vs identity-chain {}",
+                p1.label,
+                p1.gp_cost,
+                p2.gp_cost
+            );
+        }
+    }
+}
+
+/// Guard against a silently ignored chain config: a real DNN profile
+/// (data inflation + result return) must move the optimized cost away
+/// from the plain model's on every default-matrix family.
+#[test]
+fn dnn_profile_changes_the_optimized_cost() {
+    for family in FAMILIES {
+        let spec = ScenarioSpec::named(family, Congestion::Nominal).unwrap();
+        let plain = spec.effective_base();
+        let mut chained = plain.clone();
+        chained.chain = Some(ChainSpec::named("vgg16").unwrap());
+        let net_a = plain.build(&mut Rng::new(plain.seed)).unwrap();
+        let net_b = chained.build(&mut Rng::new(chained.seed)).unwrap();
+        let a = GradientProjection::new(&net_a, GpOptions::default())
+            .run(&net_a, 60)
+            .final_cost;
+        let b = GradientProjection::new(&net_b, GpOptions::default())
+            .run(&net_b, 60)
+            .final_cost;
+        assert!(a.is_finite() && b.is_finite(), "{family}: costs must be finite");
+        assert!(
+            (a - b).abs() > 1e-6,
+            "{family}: vgg16 chain left the cost unchanged ({a} vs {b}) — \
+             is the chain config being dropped?"
+        );
+    }
+}
+
+/// Every `dnn`-tier cell runs end to end and GP's generalized cost is at
+/// most every baseline's (same tolerance the runner itself pins), strictly
+/// below on the heavy-congestion cells where the congestion-blind
+/// baselines pay for ignoring inflated inter-stage flows.
+#[test]
+fn dnn_tier_gp_is_at_most_every_baseline_and_strictly_better_under_heavy_congestion() {
+    // sized down from (100, 150): same 12 cells, shorter serving horizon
+    let specs = ScenarioSpec::dnn_matrix_sized(8, 40);
+    assert_eq!(specs.len(), 12);
+    let reports = run_batch(&specs, &quiet()).unwrap();
+    for rep in &reports {
+        let gp = rep.gp_cost();
+        assert!(gp.is_finite() && gp > 0.0, "{}: GP cost {gp}", rep.name);
+        assert!(
+            rep.gp_within_baselines,
+            "{}: GP not within baselines: {:?}",
+            rep.name, rep.costs
+        );
+        for (name, cost) in rep.costs.iter().skip(1) {
+            assert!(
+                gp <= cost * (1.0 + 1e-6) + 1e-9,
+                "{}: GP {gp} vs {name} {cost}",
+                rep.name
+            );
+            if rep.congestion == "heavy" {
+                assert!(
+                    gp < *cost,
+                    "{}: heavy-congestion cell needs a strict GP win over {name} \
+                     (GP {gp} vs {cost})",
+                    rep.name
+                );
+            }
+        }
+    }
+}
+
+/// One `chain-digest` line per (family, chain spec) cell: the GP cost bits
+/// after a fixed budget on a seed-perturbed build. The CI flakiness gate
+/// replays this under several `SCFO_CHAIN_SEED` values, twice each, and
+/// diffs the output.
+#[test]
+fn chain_digest_is_stable() {
+    let seed = chain_seed();
+    for family in FAMILIES {
+        for chain in ["plain", "identity", "vgg16", "resnet50"] {
+            let spec = ScenarioSpec::named(family, Congestion::Nominal).unwrap();
+            let mut sc = spec.effective_base();
+            sc.seed ^= seed;
+            if chain != "plain" {
+                sc.chain = Some(ChainSpec::named(chain).unwrap());
+            }
+            let net = sc.build(&mut Rng::new(sc.seed)).unwrap();
+            let cost = GradientProjection::new(&net, GpOptions::default())
+                .run(&net, 40)
+                .final_cost;
+            assert!(cost.is_finite(), "{family}/{chain}: cost {cost}");
+            println!("chain-digest {family} {chain} {:016x}", cost.to_bits());
+        }
+    }
+}

@@ -1,6 +1,6 @@
 //! Golden-file regression tests: fixed-seed scenario reports, one per tier
-//! (default, large, dynamic, distributed, churn, topo-churn, massive, ha),
-//! compared
+//! (default, large, dynamic, distributed, churn, topo-churn, massive, ha,
+//! dnn), compared
 //! against the committed files under `rust/tests/golden/` with a
 //! tolerance-aware JSON comparator.
 //!
@@ -275,6 +275,21 @@ fn golden_ha_tier_abilene_clean() {
     spec.iters = 120;
     let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
     check_golden("ha-abilene-clean", &rep.to_json());
+}
+
+/// DNN (generalized chain) tier: the abilene/vgg16 heavy-congestion cell —
+/// per-stage data inflation plus the result-return flow served under a
+/// flash-crowd workload — pinning the served GP cost trajectory and the
+/// baseline comparison on the generalized cost (wall time is volatile and
+/// skipped).
+#[test]
+fn golden_dnn_tier_abilene_vgg16_heavy() {
+    let spec = ScenarioSpec::dnn_matrix_sized(20, 60)
+        .into_iter()
+        .find(|s| s.name() == "abilene-dnn-vgg16-heavy")
+        .expect("dnn matrix covers the abilene vgg16 heavy cell");
+    let rep = runner::run_one(&spec, &runner::ScenarioCache::new()).unwrap();
+    check_golden("dnn-abilene-vgg16-heavy", &rep.to_json());
 }
 
 // ---- comparator self-tests ------------------------------------------------
